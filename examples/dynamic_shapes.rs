@@ -1,0 +1,36 @@
+//! Dynamic shapes (paper §3.5): a model with a symbolic batch dimension is
+//! specialized for the common configurations, each variant compiles and
+//! validates, and the generated dispatch stub routes by runtime batch size.
+
+use xgenc::dynshape;
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::pipeline::{CompileOptions, CompileSession};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let g = prepare(model_zoo::mlp_dynamic(&[256, 128, 10], 32))?;
+    println!("symbolic dims: {:?}", dynshape::symbolic_dims(&g));
+    println!("input shape (ONNX view): {:?}", g.shape_of(g.inputs[0])?.onnx_dims());
+
+    let configs: Vec<Vec<(String, usize)>> = [1usize, 8, 32]
+        .iter()
+        .map(|&b| vec![("batch".to_string(), b)])
+        .collect();
+    let specs = dynshape::specialize_all(&g, &configs)?;
+    let mut entries = Vec::new();
+    let mut offset = 0x400u32; // after the dispatch stub
+    for s in &specs {
+        let mut session = CompileSession::new(CompileOptions::default());
+        let c = session.compile(&s.graph)?;
+        println!(
+            "specialization {:?}: {} instructions, {}",
+            s.bindings,
+            c.asm.len(),
+            c.validation.summary()
+        );
+        entries.push((vec![s.bindings[0].1 as u32], offset));
+        offset += (c.asm.len() * 4) as u32;
+    }
+    let stub = dynshape::dispatch_stub(0x40, &entries)?;
+    println!("dispatch stub: {} instructions, routes {} configurations", stub.len(), entries.len());
+    Ok(())
+}

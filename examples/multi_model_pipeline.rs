@@ -1,0 +1,31 @@
+//! Case study 1 (paper §5.1): compile a vision-language pipeline — vision
+//! encoder + text encoder + decoder — into one bundle with unified WMEM
+//! consolidation, and report instructions / memory / validation.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::pipeline::{multi_model, CompileOptions};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let graphs = vec![
+        prepare(model_zoo::vision_encoder(1))?,
+        prepare(model_zoo::text_encoder(1, 64))?,
+        prepare(model_zoo::decoder(1, 64))?,
+    ];
+    for g in &graphs {
+        println!(
+            "input model: {} ({} params, {:.0} MB FP32)",
+            g.name,
+            g.param_count(),
+            g.weight_bytes() as f64 / (1024.0 * 1024.0)
+        );
+    }
+    let bundle = multi_model::compile_pipeline(&graphs, &CompileOptions::default())?;
+    println!("\n{}", bundle.summary());
+    for m in &bundle.models {
+        println!("  {}", m.summary());
+    }
+    println!(
+        "\npaper case study 1: 49,832 instructions, 980 MB WMEM consolidated from 1.2 GB, 100% ISA validation"
+    );
+    Ok(())
+}

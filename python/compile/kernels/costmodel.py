@@ -1,0 +1,110 @@
+"""L1 Pallas kernels for the learned cost model (paper eqs. 1-2).
+
+Two kernels:
+
+* ``predict`` — batched linear cost prediction ``x @ w`` over a candidate
+  block.  This sits on the autotuner's innermost loop: every proposal step of
+  every search algorithm scores a batch of candidate configurations through
+  this kernel (via the AOT artifact, executed from rust over PJRT).
+
+* ``train_grad`` — fused residual + MSE gradient for one training batch.  The
+  momentum update (eqs. 2, 12) is a trivial vector op and stays in the L2 jax
+  wrapper so XLA fuses it with the kernel output.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the feature matrix
+block (B_BLK x F = 16 x 16 fp32 = 1 KiB) is VMEM-resident; the candidate batch
+streams through the grid.  ``x @ w`` is expressed as a 2-D contraction so the
+MXU path applies when compiled for real TPU; under ``interpret=True`` it runs
+as numpy and is used purely as the correctness/lowering vehicle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes (must match rust/src/runtime/artifacts.rs).
+NUM_FEATURES = 16
+BATCH = 64
+B_BLK = 16  # candidate rows per grid step
+
+
+def _predict_kernel(w_ref, x_ref, o_ref):
+    # One candidate block: o[b] = sum_f x[b, f] * w[f].
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.sum(x * w[None, :], axis=1)
+
+
+def predict(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1 batched over candidates: returns [B] predictions for x: [B, F]."""
+    b, f = x.shape
+    assert b % B_BLK == 0, f"batch {b} must be a multiple of {B_BLK}"
+    grid = (b // B_BLK,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((f,), lambda i: (0,)),          # w: resident
+            pl.BlockSpec((B_BLK, f), lambda i: (i, 0)),  # x: streamed blocks
+        ],
+        out_specs=pl.BlockSpec((B_BLK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(w, x)
+
+
+def _train_grad_kernel(w_ref, x_ref, y_ref, g_ref, sq_ref):
+    """Fused: residual r = x@w - y; partial grad = 2/B * x^T r; partial sum r^2.
+
+    Grid accumulates partials over candidate blocks into g_ref / sq_ref
+    (same output block every step -> initialize on first step).
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    y = y_ref[...]
+    r = jnp.sum(x * w[None, :], axis=1) - y
+    g_part = x.T @ r  # [F] — MXU-shaped contraction on real hardware
+    sq_part = jnp.sum(r * r)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    g_ref[...] += g_part
+    sq_ref[...] += sq_part[None]
+
+
+def train_grad(w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """Returns (grad [F], sum_sq_resid [1]) for L = mean((x@w - y)^2).
+
+    grad here is the *unscaled* x^T r; the L2 wrapper applies 2/B and the
+    momentum/step math (keeping the kernel shape-agnostic in B).
+    """
+    b, f = x.shape
+    assert b % B_BLK == 0
+    grid = (b // B_BLK,)
+    g, sq = pl.pallas_call(
+        _train_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((B_BLK, f), lambda i: (i, 0)),
+            pl.BlockSpec((B_BLK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(w, x, y)
+    return g, sq

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel for QAT fake quantization (paper eqs. 8-13, §3.3.2).
+
+One fused kernel computes, for a block of values:
+
+* the fake-quantized forward ``FakeQuant(x) = Dequantize(Quantize(x))``,
+* the straight-through input gradient (``g`` inside the clip range, 0 outside),
+* the partial reductions for the quantization-parameter gradients
+  ``dL/dscale = sum g_i (q_i - zp)`` and ``dL/dzp = sum g_i (-scale)``.
+
+The momentum updates (eqs. 12-13) are two scalar FMAs and live in the L2
+wrapper (``model.qat_step``) so XLA fuses them with the kernel epilogue.
+
+Layout: the block is viewed 2-D (ROWS x LANES = 32 x 128) so element ops are
+lane-parallel and the reductions tree up a VPU-friendly shape on real TPU.
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT block (must match rust/src/runtime/artifacts.rs).
+BLOCK = 4096
+ROWS, LANES = 32, 128
+assert ROWS * LANES == BLOCK
+
+
+def _fq_kernel(x_ref, g_ref, s_ref, z_ref, qlo_ref, qhi_ref,
+               xq_ref, dx_ref, ds_ref, dz_ref):
+    x = x_ref[...]
+    g = g_ref[...]
+    scale = s_ref[0]
+    zp = z_ref[0]
+    qlo = qlo_ref[0]
+    qhi = qhi_ref[0]
+
+    q_raw = jnp.round(x / scale + zp)
+    in_range = (q_raw >= qlo) & (q_raw <= qhi)
+    q = jnp.clip(q_raw, qlo, qhi)
+
+    xq_ref[...] = (q - zp) * scale
+    dx_ref[...] = jnp.where(in_range, g, 0.0)
+    ds_ref[...] = jnp.sum(jnp.where(in_range, g * (q - zp), 0.0))[None]
+    dz_ref[...] = jnp.sum(jnp.where(in_range, g * (-scale), 0.0))[None]
+
+
+def fakequant_block(x, g, scale, zp, qlo, qhi):
+    """Fused fake-quant fwd + STE bwd over one [ROWS, LANES] block.
+
+    Args:
+      x, g: [ROWS, LANES] values and upstream gradients.
+      scale, zp, qlo, qhi: [1] scalars (scale, zero point, clip range).
+
+    Returns:
+      (x_fq [R,L], dx [R,L], d_scale [1], d_zp [1]).
+    """
+    r, l = x.shape
+    return pl.pallas_call(
+        _fq_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l), x.dtype),
+            jax.ShapeDtypeStruct((r, l), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, g, scale, zp, qlo, qhi)

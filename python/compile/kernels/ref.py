@@ -1,0 +1,177 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+straight jax.numpy with no Pallas, no tiling, and no cleverness.  pytest
+(``python/tests/``) sweeps shapes and dtypes with hypothesis and asserts
+``allclose`` between kernel and oracle.  The oracles are also the executable
+specification for the rust fallback implementations in
+``rust/src/cost/learned.rs`` and ``rust/src/quant/`` — the rust unit tests pin
+the same closed-form values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Learned cost model (paper eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+
+def cost_predict(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1: T_hat = sum_i w_i * f_i(node, config), batched over candidates.
+
+    Args:
+      w: [F] model weights (last feature is a constant-1 bias column by
+         convention on the rust side).
+      x: [B, F] feature matrix, one row per candidate configuration.
+
+    Returns:
+      [B] predicted log-cycle costs.
+    """
+    return x @ w
+
+
+def cost_train_step(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    lr: jnp.ndarray,
+    beta: float = 0.9,
+):
+    """Eq. 2 with momentum: one MSE gradient step over a sample batch.
+
+    L = mean((x@w - y)^2);  g = 2/B * x^T (x@w - y)
+    v' = beta*v + (1-beta)*g;  w' = w - lr*v'
+
+    Returns (w', v', loss).
+    """
+    pred = x @ w
+    resid = pred - y
+    loss = jnp.mean(resid * resid)
+    grad = (2.0 / x.shape[0]) * (x.T @ resid)
+    v_new = beta * v + (1.0 - beta) * grad
+    w_new = w - lr * v_new
+    return w_new, v_new, loss
+
+
+# ---------------------------------------------------------------------------
+# KL-divergence calibration (paper eq. 5, TensorRT-style, 2048 bins)
+# ---------------------------------------------------------------------------
+
+NUM_BINS = 2048
+NUM_CANDIDATES = 100
+NUM_QUANT_LEVELS = 128  # int8 positive half, as in the classic algorithm
+_EPS = 1e-10
+
+
+def candidate_edges() -> jnp.ndarray:
+    """Threshold candidate bin counts: NUM_CANDIDATES values spanning
+    [NUM_QUANT_LEVELS, NUM_BINS]."""
+    return jnp.linspace(NUM_QUANT_LEVELS, NUM_BINS, NUM_CANDIDATES).astype(jnp.int32)
+
+
+def kl_for_candidate(hist: jnp.ndarray, edge: jnp.ndarray) -> jnp.ndarray:
+    """KL(P||Q) for one clipping candidate.
+
+    P: hist[:edge] with the tail mass (hist[edge:]) folded into bin edge-1.
+    Q: P re-binned into NUM_QUANT_LEVELS uniform buckets, then expanded back,
+       distributing each bucket's mass uniformly over its *nonzero* source
+       bins (zero source bins stay zero), exactly as in the TensorRT
+       calibration algorithm.
+
+    Implemented with fixed-size masked ops so it lowers to static-shape HLO.
+    """
+    n = hist.shape[0]
+    idx = jnp.arange(n)
+    inside = idx < edge
+    p = jnp.where(inside, hist, 0.0)
+    tail = jnp.sum(jnp.where(~inside, hist, 0.0))
+    p = p + jnp.where(idx == edge - 1, tail, 0.0)
+
+    # Bucket id of each source bin: floor(i * L / edge), clamped to [0, L-1].
+    bucket = jnp.clip((idx * NUM_QUANT_LEVELS) // jnp.maximum(edge, 1), 0,
+                      NUM_QUANT_LEVELS - 1)
+    bucket = jnp.where(inside, bucket, NUM_QUANT_LEVELS - 1)
+
+    # TensorRT semantics: Q's mass is the *unfolded* in-range histogram,
+    # the support mask is the *folded* P — the tail-spike bin stays in the
+    # comparison and penalizes tight clips that discard heavy tails.
+    nonzero = (p > 0.0) & inside
+    onehot = bucket[:, None] == jnp.arange(NUM_QUANT_LEVELS)[None, :]
+    q_mass = jnp.sum(jnp.where(onehot & inside[:, None], hist[:, None], 0.0), axis=0)
+    q_cnt = jnp.sum(jnp.where(onehot & nonzero[:, None], 1.0, 0.0), axis=0)
+    share = q_mass / jnp.maximum(q_cnt, 1.0)
+    q = jnp.where(nonzero, share[bucket], 0.0)
+
+    # Smooth over the full in-range support (TensorRT `_smooth_distribution`):
+    # proper distributions with common support -> KL >= 0.
+    smooth = 1e-4
+    m = jnp.sum(jnp.where(inside, 1.0, 0.0))
+    p_sum = jnp.sum(p) + smooth * m
+    q_sum = jnp.sum(q) + smooth * m
+    pn = jnp.where(inside, (p + smooth) / jnp.maximum(p_sum, _EPS), 0.0)
+    qn = jnp.where(inside, (q + smooth) / jnp.maximum(q_sum, _EPS), 1.0)
+    return jnp.sum(jnp.where(inside, pn * jnp.log(jnp.maximum(pn, _EPS) / jnp.maximum(qn, _EPS)), 0.0))
+
+
+def kl_calibrate(hist: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 sweep: KL divergence for each of the NUM_CANDIDATES thresholds.
+
+    Args:
+      hist: [NUM_BINS] activation histogram (float32 counts).
+
+    Returns:
+      [NUM_CANDIDATES] KL divergences; rust takes the argmin and converts the
+      winning edge back into a clip threshold.
+    """
+    return jax.vmap(lambda e: kl_for_candidate(hist, e))(candidate_edges())
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization / QAT (paper eqs. 8-13)
+# ---------------------------------------------------------------------------
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
+               qmin: float, qmax: float) -> jnp.ndarray:
+    """Eq. 8: Dequantize(Quantize(x)) with clamping."""
+    q = jnp.clip(jnp.round(x / scale + zp), qmin, qmax)
+    return (q - zp) * scale
+
+
+def qat_step(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    scale: jnp.ndarray,
+    zp: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    v_zp: jnp.ndarray,
+    lr: jnp.ndarray,
+    qmin: float = -128.0,
+    qmax: float = 127.0,
+    beta: float = 0.9,
+):
+    """Eqs. 9-13: STE backward + momentum update of (scale, zero_point).
+
+    dL/dx      = g                      (STE, inside the clip range; 0 outside)
+    dL/dscale  = sum_i g_i * (q_i - zp) (eq. 10, over in-range elements)
+    dL/dzp     = sum_i g_i * (-scale)   (eq. 11, over in-range elements)
+    v' = beta*v + (1-beta)*grad; param' = param - lr*v'   (eqs. 12-13)
+
+    Returns (x_fq, dx, scale', zp', v_scale', v_zp').
+    """
+    q_unclipped = jnp.round(x / scale + zp)
+    in_range = (q_unclipped >= qmin) & (q_unclipped <= qmax)
+    q = jnp.clip(q_unclipped, qmin, qmax)
+    x_fq = (q - zp) * scale
+
+    dx = jnp.where(in_range, g, 0.0)
+    d_scale = jnp.sum(jnp.where(in_range, g * (q - zp), 0.0))
+    d_zp = jnp.sum(jnp.where(in_range, g * (-scale), 0.0))
+
+    vs = beta * v_scale + (1.0 - beta) * d_scale
+    vz = beta * v_zp + (1.0 - beta) * d_zp
+    return x_fq, dx, scale - lr * vs, zp - lr * vz, vs, vz

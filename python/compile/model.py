@@ -1,0 +1,108 @@
+"""L2 — jax compute graphs for the compiler's learned/calibrated components.
+
+These are the functions that get AOT-lowered (``aot.py``) to HLO text and
+executed from the rust coordinator over PJRT.  Each one calls the L1 Pallas
+kernels from ``kernels/`` so the kernels lower into the same HLO module; the
+surrounding glue (momentum updates, scaling, argmin epilogues) is plain jnp
+that XLA fuses around the kernel.
+
+Python runs only at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import costmodel, fakequant, kl_calib, ref
+
+BETA = 0.9  # momentum coefficient (paper eq. 12)
+
+# ---------------------------------------------------------------------------
+# Learned cost model (eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+
+def cost_predict(w, x):
+    """Batched cost prediction for one candidate batch.  Returns ([B],)."""
+    return (costmodel.predict(w, x),)
+
+
+def cost_train(w, v, x, y, lr):
+    """One MSE + momentum training step (eqs. 2, 12-13 applied to w).
+
+    Returns (w', v', loss[1]).
+    """
+    g_unscaled, sq = costmodel.train_grad(w, x, y)
+    b = x.shape[0]
+    grad = (2.0 / b) * g_unscaled
+    loss = sq / b
+    v_new = BETA * v + (1.0 - BETA) * grad
+    w_new = w - lr[0] * v_new
+    return w_new, v_new, loss
+
+
+# ---------------------------------------------------------------------------
+# KL-divergence calibration (eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def kl_calibrate(hist):
+    """Full 2048-bin / 100-candidate sweep.
+
+    Returns (kls [100], best_idx [1] int32) — rust converts best_idx back
+    into a clip threshold via the shared candidate schedule.
+    """
+    kls = kl_calib.kl_calibrate(hist)
+    best = jnp.argmin(kls).astype(jnp.int32)
+    return kls, best[None]
+
+
+# ---------------------------------------------------------------------------
+# QAT step (eqs. 8-13)
+# ---------------------------------------------------------------------------
+
+
+def qat_step(x, g, scale, zp, v_scale, v_zp, lr, qlo, qhi):
+    """Fused fake-quant fwd/bwd + momentum update of (scale, zero_point).
+
+    x, g are [ROWS, LANES] blocks; everything else is [1].
+    Returns (x_fq, dx, scale', zp', v_scale', v_zp').
+    """
+    x_fq, dx, d_scale, d_zp = fakequant.fakequant_block(x, g, scale, zp, qlo, qhi)
+    vs = BETA * v_scale + (1.0 - BETA) * d_scale
+    vz = BETA * v_zp + (1.0 - BETA) * d_zp
+    return x_fq, dx, scale - lr * vs, zp - lr * vz, vs, vz
+
+
+# ---------------------------------------------------------------------------
+# AOT manifest
+# ---------------------------------------------------------------------------
+
+F = costmodel.NUM_FEATURES
+B = costmodel.BATCH
+R, L = fakequant.ROWS, fakequant.LANES
+H = kl_calib.NUM_BINS
+C = kl_calib.NUM_CANDIDATES
+
+_f32 = jnp.float32
+
+
+def _s(shape, dtype=_f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def aot_entries():
+    """name -> (fn, example_args).  Shapes are the fixed AOT interchange
+    shapes; rust/src/runtime/artifacts.rs mirrors this table."""
+    return {
+        "cost_predict": (cost_predict, (_s((F,)), _s((B, F)))),
+        "cost_train": (cost_train, (_s((F,)), _s((F,)), _s((B, F)), _s((B,)), _s((1,)))),
+        "kl_calib": (kl_calibrate, (_s((H,)),)),
+        "qat_step": (
+            qat_step,
+            (_s((R, L)), _s((R, L)), _s((1,)), _s((1,)), _s((1,)), _s((1,)),
+             _s((1,)), _s((1,)), _s((1,))),
+        ),
+    }

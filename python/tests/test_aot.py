@@ -1,0 +1,66 @@
+"""AOT artifact sanity: lowering produces parseable HLO text with the shapes
+the rust loader (rust/src/runtime/artifacts.rs) expects."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(out))
+    return out, manifest
+
+
+def test_all_entries_lowered(lowered):
+    out, manifest = lowered
+    assert set(manifest) == {"cost_predict", "cost_train", "kl_calib", "qat_step"}
+    for name, meta in manifest.items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.getsize(path) == meta["chars"]
+
+
+def test_hlo_is_text_with_entry(lowered):
+    out, manifest = lowered
+    for name, meta in manifest.items():
+        text = open(os.path.join(out, meta["file"])).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_shapes_match_model(lowered):
+    _, manifest = lowered
+    for name, (fn, example_args) in model.aot_entries().items():
+        want = [list(a.shape) for a in example_args]
+        got = [i["shape"] for i in manifest[name]["inputs"]]
+        assert want == got, name
+
+
+def test_no_mosaic_custom_calls(lowered):
+    """interpret=True must lower pallas to plain HLO ops the CPU PJRT client
+    can execute — a Mosaic custom-call here would break the rust runtime."""
+    out, manifest = lowered
+    for name, meta in manifest.items():
+        text = open(os.path.join(out, meta["file"])).read()
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name
+
+
+def test_repo_artifacts_up_to_date():
+    """If the checked-out artifacts/ exists, it must match a fresh lowering
+    (guards against stale artifacts after kernel edits)."""
+    repo_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(repo_dir, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts/ not built")
+    manifest = json.load(open(manifest_path))
+    for name, (fn, example_args) in model.aot_entries().items():
+        text = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+        assert manifest[name]["chars"] == len(text), (
+            f"{name}: artifacts stale — run `make artifacts`"
+        )

@@ -1,0 +1,196 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes/values of every Pallas kernel against the
+pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costmodel, fakequant, kl_calib, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def f32(a):
+    return jnp.asarray(np.asarray(a, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cost model kernels
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    b_blocks=st.integers(1, 6),
+    f=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cost_predict_matches_ref(b_blocks, f, seed):
+    rng = np.random.default_rng(seed)
+    b = b_blocks * costmodel.B_BLK
+    w = f32(rng.normal(size=f))
+    x = f32(rng.normal(size=(b, f)))
+    np.testing.assert_allclose(
+        costmodel.predict(w, x), ref.cost_predict(w, x), rtol=1e-5, atol=1e-5
+    )
+
+
+@SET
+@given(
+    b_blocks=st.integers(1, 4),
+    f=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cost_train_grad_matches_ref(b_blocks, f, seed):
+    rng = np.random.default_rng(seed)
+    b = b_blocks * costmodel.B_BLK
+    w = f32(rng.normal(size=f))
+    x = f32(rng.normal(size=(b, f)))
+    y = f32(rng.normal(size=b))
+    g, sq = costmodel.train_grad(w, x, y)
+    resid = np.asarray(x) @ np.asarray(w) - np.asarray(y)
+    np.testing.assert_allclose(g, np.asarray(x).T @ resid, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sq[0], np.sum(resid**2), rtol=1e-4, atol=1e-4)
+
+
+def test_cost_train_step_reduces_loss():
+    rng = np.random.default_rng(7)
+    true_w = rng.normal(size=16)
+    x = f32(rng.normal(size=(64, 16)))
+    y = f32(np.asarray(x) @ true_w)
+    w = jnp.zeros(16, jnp.float32)
+    v = jnp.zeros(16, jnp.float32)
+    losses = []
+    from compile import model
+
+    for _ in range(50):
+        w, v, loss = model.cost_train(w, v, x, y, jnp.array([0.02], jnp.float32))
+        losses.append(float(loss[0]))
+    assert losses[-1] < 0.05 * losses[0], losses[::10]
+
+
+# ---------------------------------------------------------------------------
+# KL calibration kernel
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), kind=st.sampled_from(["gauss", "heavy", "uniform"]))
+def test_kl_sweep_matches_ref(seed, kind):
+    rng = np.random.default_rng(seed)
+    if kind == "gauss":
+        samples = np.abs(rng.normal(size=20000))
+    elif kind == "heavy":
+        samples = np.abs(rng.standard_cauchy(size=20000))
+    else:
+        samples = rng.uniform(0, 1, size=20000)
+    hist, _ = np.histogram(samples, bins=ref.NUM_BINS,
+                           range=(0, np.percentile(samples, 99.99) + 1e-6))
+    hist = f32(hist)
+    np.testing.assert_allclose(
+        kl_calib.kl_calibrate(hist), ref.kl_calibrate(hist), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_kl_prefers_clipping_for_heavy_tail():
+    """A distribution with a tiny far outlier should clip below the max bin."""
+    rng = np.random.default_rng(3)
+    hist = np.zeros(ref.NUM_BINS, np.float32)
+    core = np.abs(rng.normal(size=50000))
+    idx = np.minimum((core / 4.0 * 256).astype(int), ref.NUM_BINS - 1)
+    np.add.at(hist, idx, 1.0)
+    hist[-1] += 3  # 3 extreme outliers at the top bin
+    kls = np.asarray(ref.kl_calibrate(f32(hist)))
+    best = int(np.argmin(kls))
+    edges = np.asarray(ref.candidate_edges())
+    assert edges[best] < ref.NUM_BINS, (best, edges[best])
+
+
+def test_kl_identity_when_distribution_fits_levels():
+    """Mass confined to the first 128 bins -> re-binning is lossless at the
+    smallest candidate; KL there should be ~0 and minimal."""
+    hist = np.zeros(ref.NUM_BINS, np.float32)
+    hist[:128] = np.random.default_rng(0).uniform(1, 2, size=128)
+    kls = np.asarray(ref.kl_calibrate(f32(hist)))
+    assert kls[0] <= kls.min() + 1e-6
+    assert kls[0] < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# fake-quant / QAT kernel
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1.0),
+    zp=st.floats(-10.0, 10.0),
+    signed=st.booleans(),
+)
+def test_fakequant_matches_ref(seed, scale, zp, signed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng.normal(size=(fakequant.ROWS, fakequant.LANES)) * 3)
+    g = f32(rng.normal(size=(fakequant.ROWS, fakequant.LANES)))
+    qlo, qhi = (-128.0, 127.0) if signed else (0.0, 255.0)
+    s1 = f32([scale])
+    z1 = f32([zp])
+    x_fq, dx, ds, dz = fakequant.fakequant_block(
+        x, g, s1, z1, f32([qlo]), f32([qhi])
+    )
+    np.testing.assert_allclose(
+        x_fq, ref.fake_quant(x, s1[0], z1[0], qlo, qhi), rtol=1e-4, atol=1e-5
+    )
+    q_raw = np.round(np.asarray(x) / scale + zp)
+    in_range = (q_raw >= qlo) & (q_raw <= qhi)
+    np.testing.assert_allclose(dx, np.where(in_range, np.asarray(g), 0.0), rtol=1e-5)
+    q = np.clip(q_raw, qlo, qhi)
+    np.testing.assert_allclose(
+        ds[0], np.sum(np.where(in_range, np.asarray(g) * (q - zp), 0.0)),
+        rtol=1e-3, atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        dz[0], np.sum(np.where(in_range, np.asarray(g) * -scale, 0.0)),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_fakequant_roundtrip_error_bound():
+    """|x - FakeQuant(x)| <= scale/2 for in-range x (quantization noise bound)."""
+    rng = np.random.default_rng(11)
+    x = f32(rng.uniform(-1, 1, size=(fakequant.ROWS, fakequant.LANES)))
+    scale = 2.0 / 255.0
+    out = ref.fake_quant(x, jnp.float32(scale), jnp.float32(0.0), -128, 127)
+    assert float(jnp.max(jnp.abs(out - x))) <= scale / 2 + 1e-6
+
+
+def test_qat_step_converges_scale():
+    """Driving QAT with the gradient of a reconstruction loss should move
+    scale toward reducing that loss."""
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    x = f32(rng.normal(size=(fakequant.ROWS, fakequant.LANES)))
+    scale = f32([0.2])  # too coarse for N(0,1) on int8
+    zp = f32([0.0])
+    vs = f32([0.0])
+    vz = f32([0.0])
+    lr = f32([1e-4])
+    qlo, qhi = f32([-128.0]), f32([127.0])
+
+    def recon_loss(s):
+        out = ref.fake_quant(x, s[0], zp[0], -128.0, 127.0)
+        return float(jnp.mean((out - x) ** 2))
+
+    loss0 = recon_loss(scale)
+    for _ in range(100):
+        x_fq = ref.fake_quant(x, scale[0], zp[0], -128.0, 127.0)
+        g = 2.0 * (x_fq - x) / x.size  # d recon / d x_fq
+        x_fq2, dx, scale, zp, vs, vz = model.qat_step(
+            x, g, scale, zp, vs, vz, lr, qlo, qhi
+        )
+    assert recon_loss(scale) < loss0, (loss0, recon_loss(scale))

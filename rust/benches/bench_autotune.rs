@@ -1,0 +1,56 @@
+//! Table 5 + Figure 5: auto-tuning convergence, learned vs analytical cost
+//! model, on the paper's three workloads (paper: 50-60% fewer trials).
+
+use xgenc::autotune::Tuner;
+use xgenc::cost::features::KernelSig;
+use xgenc::sim::MachineConfig;
+use xgenc::util::table::{f, Table};
+
+fn main() {
+    let tuner = Tuner::new(MachineConfig::xgen_asic());
+    let workloads: [(&str, KernelSig, usize); 3] = [
+        ("MatMul (128x256x512)", KernelSig::matmul(128, 256, 512), 200),
+        ("Conv2D (3x224x224)", KernelSig::conv2d(3, 224, 224, 16, 3, 1), 250),
+        ("Elementwise (1024x1024)", KernelSig::elementwise(1024 * 1024), 150),
+    ];
+    let mut t = Table::new(
+        "Table 5: Auto-tuning convergence (Learned vs Analytical cost model)",
+        &["Operation", "Analytical (trials)", "Learned (trials)", "Improvement"],
+    );
+    let mut curves = Vec::new();
+    for (name, sig, budget) in &workloads {
+        // Aggregate over seeds — convergence is a statistical property.
+        let (mut sa, mut sl) = (0.0f64, 0.0f64);
+        let seeds = [42u64, 43, 44];
+        let mut curve_pair = None;
+        for &seed in &seeds {
+            let (a, l) = tuner.convergence_experiment(sig, *budget, seed);
+            sa += a.converged_at.max(1) as f64;
+            sl += l.converged_at.max(1) as f64;
+            if curve_pair.is_none() {
+                curve_pair = Some((a.curve, l.curve));
+            }
+        }
+        let (ma, ml) = (sa / seeds.len() as f64, sl / seeds.len() as f64);
+        let imp = 100.0 * (1.0 - ml / ma);
+        t.row(&[name.to_string(), f(ma, 0), f(ml, 0), format!("{} faster", f(imp, 1) + "%")]);
+        curves.push((name.to_string(), curve_pair.unwrap()));
+    }
+    t.print();
+    println!("\npaper reference: 200->85 (57.5%), 250->110 (56.0%), 150->70 (53.3%)");
+
+    // Figure 5: convergence curves (best-so-far by trial), first seed.
+    println!("\n== Figure 5: convergence curves (log2 cycles best-so-far) ==");
+    for (name, (a, l)) in &curves {
+        println!("{name}:");
+        let sample = |c: &Vec<(usize, f64)>| -> String {
+            [1usize, 5, 10, 20, 40, 80]
+                .iter()
+                .filter_map(|&i| c.iter().find(|(t, _)| *t >= i).map(|(t, b)| format!("{t}:{b:.2}")))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("  analytical: {}", sample(a));
+        println!("  learned:    {}", sample(l));
+    }
+}

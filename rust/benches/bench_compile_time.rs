@@ -1,0 +1,47 @@
+//! Figure 7: compilation time scaling with model size (paper: 1-45 s,
+//! "scales linearly with model size").
+
+use std::time::Instant;
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::util::stats::linreg;
+use xgenc::util::table::{f, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Figure 7: Compilation time vs model size",
+        &["Model", "Weights (MB)", "Nodes", "Compile (s)"],
+    );
+    // MLP family sweep + the zoo models.
+    let mut sizes = Vec::new();
+    let mut times = Vec::new();
+    let mut cases: Vec<(String, xgenc::ir::Graph)> = vec![
+        ("mlp-1MB".into(), model_zoo::mlp(&[512, 512, 256], 1)),
+        ("mlp-8MB".into(), model_zoo::mlp(&[1024, 1024, 1024, 512], 1)),
+        ("mlp-64MB".into(), model_zoo::mlp(&[4096, 2048, 2048, 1024], 1)),
+    ];
+    for (name, g) in model_zoo::paper_models() {
+        cases.push((name.to_string(), g));
+    }
+    for (name, graph) in cases {
+        let g = prepare(graph).unwrap();
+        let mb = g.weight_bytes() as f64 / (1024.0 * 1024.0);
+        let t0 = Instant::now();
+        // INT8 like a real deployment compile: weight processing
+        // (materialize + calibrate + quantize) scales with model size.
+        let mut s = CompileSession::new(CompileOptions {
+            precision: xgenc::ir::DType::I8,
+            ..Default::default()
+        });
+        let c = s.compile(&g).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(c.validation.passed());
+        t.row(&[name, f(mb, 1), format!("{}", g.nodes.len()), f(secs, 2)]);
+        sizes.push(mb);
+        times.push(secs);
+    }
+    t.print();
+    let (slope, intercept, r2) = linreg(&sizes, &times);
+    println!("\nlinear fit: t = {slope:.4} * MB + {intercept:.2}  (r2 = {r2:.3})");
+    println!("paper reference: 1-3 s small, 3-8 s medium, 8-30 s large, linear scaling");
+}

@@ -1,0 +1,73 @@
+//! §Perf hot-path microbenchmarks + ablations: tuner inner-loop throughput,
+//! analytic timing-model cost, codegen emission rate, scheduler benefit,
+//! LMUL/unroll ablations (the design choices DESIGN.md calls out).
+
+use std::time::Instant;
+use xgenc::autotune::space::ParameterSpace;
+use xgenc::backend::sched;
+use xgenc::codegen::{kernels, KernelConfig};
+use xgenc::cost::features::{extract, KernelSig};
+use xgenc::cost::learned::{LinearBackend, RustBackend};
+use xgenc::cost::measure;
+use xgenc::ir::DType;
+use xgenc::sim::MachineConfig;
+use xgenc::util::rng::Rng;
+use xgenc::util::table::{f, Table};
+
+fn bench<R>(name: &str, iters: usize, t: &mut Table, mut body: impl FnMut() -> R) {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(body());
+    }
+    let us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    t.row(&[name.to_string(), format!("{iters}"), f(us, 2)]);
+}
+
+fn main() {
+    let mach = MachineConfig::xgen_asic();
+    let sig = KernelSig::matmul(128, 256, 512);
+    let space = ParameterSpace::kernel_default();
+    let mut rng = Rng::new(7);
+    let mut t = Table::new("Hot paths", &["path", "iters", "us/iter"]);
+
+    // Tuner inner loop: feature extraction + rust-backend batched predict.
+    let w = [0.01f64; 16];
+    let configs: Vec<KernelConfig> =
+        (0..64).map(|_| space.decode(&space.random(&mut rng))).collect();
+    bench("features64 + predict64", 2000, &mut t, || {
+        let x: Vec<[f64; 16]> = configs.iter().map(|&c| extract(&sig, c)).collect();
+        RustBackend.predict(&w, &x)
+    });
+
+    // "Hardware measurement" (kernel gen + analytic timing) — the tuning
+    // bottleneck the cost model screens away.
+    bench("measure(sig, config)", 200, &mut t, || {
+        measure(&mach, &sig, KernelConfig::default())
+    });
+
+    // Codegen emission rate.
+    bench("matmul codegen 64x64x64", 500, &mut t, || {
+        kernels::matmul(&mach, KernelConfig::default(), 64, 64, 64, 0x1000, 0x2000, 0x3000, DType::F32).unwrap()
+    });
+
+    // Scheduler.
+    let art = kernels::matmul(&mach, KernelConfig::default(), 32, 32, 32, 0, 0x1000, 0x2000, DType::F32).unwrap();
+    bench("schedule(matmul asm)", 500, &mut t, || sched::schedule(&art.asm));
+    t.print();
+
+    // Ablations: LMUL and unroll on measured cycles (eq. 14 / §3.4).
+    let mut ab = Table::new("Ablations (measured log2 cycles, matmul 128x256x512)", &["config", "log2 cycles"]);
+    for lmul in [1usize, 2, 4, 8] {
+        let c = KernelConfig { lmul, ..Default::default() };
+        ab.row(&[format!("lmul={lmul}"), f(measure(&mach, &sig, c), 3)]);
+    }
+    for unroll in [1usize, 2, 4, 8] {
+        let c = KernelConfig { unroll, ..Default::default() };
+        ab.row(&[format!("unroll={unroll}"), f(measure(&mach, &sig, c), 3)]);
+    }
+    let before = sched::estimate_stalls(&art.asm);
+    let after = sched::estimate_stalls(&sched::schedule(&art.asm));
+    ab.row(&["sched stalls before".into(), format!("{before}")]);
+    ab.row(&["sched stalls after".into(), format!("{after}")]);
+    ab.print();
+}

@@ -1,0 +1,44 @@
+//! Table 3 + Figures 2/3/4: PPA comparison — four models x three platforms
+//! (off-the-shelf CPU, hand-designed ASIC, XgenSilicon ASIC).
+//!
+//! Reproduces the paper's *relative structure*; absolute values carry a
+//! documented scale offset (EXPERIMENTS.md).
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::DType;
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::sim::MachineConfig;
+use xgenc::util::table::{f, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table 3: PPA comparison (XgenSilicon ASIC vs baselines)",
+        &["Model", "Platform", "Perf (ms/inf)", "Power (mW)", "Area (mm2)"],
+    );
+    let platforms: [(MachineConfig, DType); 3] = [
+        (MachineConfig::cpu_a78(), DType::F32),
+        (MachineConfig::hand_asic(), DType::F16),
+        (MachineConfig::xgen_asic(), DType::I8),
+    ];
+    for (name, graph) in model_zoo::paper_models() {
+        let g = prepare(graph).unwrap();
+        for (mach, prec) in &platforms {
+            let mut s = CompileSession::new(CompileOptions {
+                mach: mach.clone(),
+                precision: *prec,
+                ..Default::default()
+            });
+            let c = s.compile(&g).unwrap();
+            assert!(c.validation.passed());
+            t.row(&[
+                name.to_string(),
+                mach.name.clone(),
+                f(c.ppa.latency_ms, 1),
+                f(c.ppa.power_mw, 0),
+                c.ppa.area_mm2.map(|a| f(a, 1)).unwrap_or_else(|| "N/A".into()),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper reference: ResNet-50 45.2/18.5/7.2 ms, 3200/980/320 mW, N/A/12.5/5.1 mm2");
+}

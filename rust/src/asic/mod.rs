@@ -1,0 +1,13 @@
+//! PPA (power / performance / area) model — the "hardware loss" that
+//! validation-driven compilation feeds back into the cost model
+//! (contribution 3), and the generator of Table 3 / Figures 2-4.
+//!
+//! First-order and calibrated (constants in [`params`]): what must hold is
+//! the *mechanism* — quantization reduces switching energy and SRAM area,
+//! tuning reduces cycles, the scalar CPU baseline burns wide-issue overhead
+//! — not absolute silicon numbers (DESIGN.md §Substitutions).
+
+pub mod params;
+pub mod ppa;
+
+pub use ppa::{evaluate, PpaReport};

@@ -1,0 +1,435 @@
+//! The five search algorithms (paper §3.2.4). All implement [`Searcher`]:
+//! propose a batch of candidates, observe their (predicted or measured)
+//! costs, repeat.
+
+use crate::autotune::space::{Config, ParameterSpace};
+use crate::util::rng::Rng;
+use crate::util::stats::{normal_cdf, normal_pdf};
+
+/// Uniform search interface.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+    /// Propose up to `n` candidate configurations.
+    fn propose(&mut self, space: &ParameterSpace, n: usize, rng: &mut Rng) -> Vec<Config>;
+    /// Report observed costs (lower = better) for previously proposed configs.
+    fn observe(&mut self, results: &[(Config, f64)]);
+}
+
+// ---------------------------------------------------------------------------
+// Random search (paper: baseline + BO warm-up)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct RandomSearch;
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, space: &ParameterSpace, n: usize, rng: &mut Rng) -> Vec<Config> {
+        (0..n).map(|_| space.random(rng)).collect()
+    }
+
+    fn observe(&mut self, _results: &[(Config, f64)]) {}
+}
+
+// ---------------------------------------------------------------------------
+// Grid search (exhaustive, small spaces)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct GridSearch {
+    cursor: usize,
+}
+
+impl Searcher for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn propose(&mut self, space: &ParameterSpace, n: usize, _rng: &mut Rng) -> Vec<Config> {
+        let out: Vec<Config> = space.enumerate().skip(self.cursor).take(n).collect();
+        self.cursor += out.len();
+        out
+    }
+
+    fn observe(&mut self, _results: &[(Config, f64)]) {}
+}
+
+// ---------------------------------------------------------------------------
+// Simulated annealing (eq. 4)
+// ---------------------------------------------------------------------------
+
+pub struct SimulatedAnnealing {
+    pub temperature: f64,
+    pub cooling: f64,
+    current: Option<(Config, f64)>,
+    pending: Vec<Config>,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        SimulatedAnnealing { temperature: 2.0, cooling: 0.95, current: None, pending: Vec::new() }
+    }
+}
+
+impl Searcher for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "annealing"
+    }
+
+    fn propose(&mut self, space: &ParameterSpace, n: usize, rng: &mut Rng) -> Vec<Config> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cfg = match &self.current {
+                None => space.random(rng),
+                Some((c, _)) => space.neighbor(c, rng),
+            };
+            out.push(cfg);
+        }
+        self.pending = out.clone();
+        out
+    }
+
+    fn observe(&mut self, results: &[(Config, f64)]) {
+        // eq. 4: accept if better, else with prob exp(-dE/T).
+        let mut rng = Rng::new(0x5A ^ results.len() as u64 ^ (self.temperature.to_bits()));
+        for (cfg, cost) in results {
+            match &self.current {
+                None => self.current = Some((cfg.clone(), *cost)),
+                Some((_, cur)) => {
+                    let de = cost - cur;
+                    let accept = de < 0.0
+                        || rng.f64() < (-de / self.temperature.max(1e-9)).exp();
+                    if accept {
+                        self.current = Some((cfg.clone(), *cost));
+                    }
+                }
+            }
+            self.temperature *= self.cooling;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Genetic algorithm (tournament selection, crossover, mutation, elitism)
+// ---------------------------------------------------------------------------
+
+pub struct GeneticAlgorithm {
+    pub population_size: usize,
+    pub mutation_rate: f64,
+    pub elite_fraction: f64,
+    pub tournament: usize,
+    population: Vec<(Config, f64)>,
+}
+
+impl Default for GeneticAlgorithm {
+    fn default() -> Self {
+        GeneticAlgorithm {
+            population_size: 24,
+            mutation_rate: 0.3,
+            elite_fraction: 0.15,
+            tournament: 3,
+            population: Vec::new(),
+        }
+    }
+}
+
+impl GeneticAlgorithm {
+    fn tournament_pick<'a>(&'a self, rng: &mut Rng) -> &'a Config {
+        let mut best: Option<&(Config, f64)> = None;
+        for _ in 0..self.tournament {
+            let c = &self.population[rng.index(self.population.len())];
+            if best.map(|b| c.1 < b.1).unwrap_or(true) {
+                best = Some(c);
+            }
+        }
+        &best.unwrap().0
+    }
+}
+
+impl Searcher for GeneticAlgorithm {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn propose(&mut self, space: &ParameterSpace, n: usize, rng: &mut Rng) -> Vec<Config> {
+        if self.population.is_empty() {
+            return (0..n.max(self.population_size)).map(|_| space.random(rng)).collect();
+        }
+        // Elites survive unchanged; the rest are children.
+        let mut sorted = self.population.clone();
+        sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let n_elite = ((self.elite_fraction * n as f64) as usize).min(sorted.len());
+        let mut out: Vec<Config> = sorted[..n_elite].iter().map(|(c, _)| c.clone()).collect();
+        while out.len() < n {
+            let a = self.tournament_pick(rng).clone();
+            let b = self.tournament_pick(rng).clone();
+            let mut child = space.crossover(&a, &b, rng);
+            if rng.chance(self.mutation_rate) {
+                child = space.mutate(&child, rng);
+            }
+            out.push(child);
+        }
+        out
+    }
+
+    fn observe(&mut self, results: &[(Config, f64)]) {
+        self.population.extend(results.iter().cloned());
+        // Keep the fittest population_size individuals.
+        self.population
+            .sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        self.population.truncate(self.population_size);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bayesian optimization: distance-based surrogate + Expected Improvement
+// (eq. 3). The paper describes "RBF kernel-like behavior based on distance
+// to observed configurations, combined with empirical variance".
+// ---------------------------------------------------------------------------
+
+pub struct BayesianOpt {
+    pub warmup: usize,
+    /// Pool of random candidates scored by EI per proposal round.
+    pub candidate_pool: usize,
+    pub length_scale: f64,
+    observed: Vec<(Vec<f64>, f64)>, // (normalized coords, cost)
+    best: f64,
+}
+
+impl Default for BayesianOpt {
+    fn default() -> Self {
+        BayesianOpt {
+            warmup: 8,
+            candidate_pool: 256,
+            length_scale: 0.35,
+            observed: Vec::new(),
+            best: f64::INFINITY,
+        }
+    }
+}
+
+impl BayesianOpt {
+    /// Nadaraya-Watson style surrogate: RBF-weighted mean of observed costs,
+    /// with uncertainty growing with distance to the nearest observation.
+    fn surrogate(&self, x: &[f64]) -> (f64, f64) {
+        let mut wsum = 0.0;
+        let mut mean = 0.0;
+        let mut min_d2 = f64::INFINITY;
+        for (ox, oy) in &self.observed {
+            let d2: f64 = ox.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum();
+            let w = (-d2 / (2.0 * self.length_scale * self.length_scale)).exp();
+            wsum += w;
+            mean += w * oy;
+            min_d2 = min_d2.min(d2);
+        }
+        let ys: Vec<f64> = self.observed.iter().map(|(_, y)| *y).collect();
+        let emp_std = crate::util::stats::std(&ys).max(1e-6);
+        if wsum < 1e-12 {
+            return (crate::util::stats::mean(&ys), emp_std * 2.0);
+        }
+        let mu = mean / wsum;
+        // Distance-scaled uncertainty, floored for exploration.
+        let sigma = emp_std * (min_d2.sqrt() / self.length_scale).min(2.0).max(0.05);
+        (mu, sigma)
+    }
+
+    /// Expected Improvement (paper eq. 3).
+    fn ei(&self, mu: f64, sigma: f64) -> f64 {
+        if sigma <= 0.0 {
+            return 0.0;
+        }
+        let z = (self.best - mu) / sigma;
+        (self.best - mu) * normal_cdf(z) + sigma * normal_pdf(z)
+    }
+}
+
+impl Searcher for BayesianOpt {
+    fn name(&self) -> &'static str {
+        "bayesian"
+    }
+
+    fn propose(&mut self, space: &ParameterSpace, n: usize, rng: &mut Rng) -> Vec<Config> {
+        if self.observed.len() < self.warmup {
+            return (0..n).map(|_| space.random(rng)).collect();
+        }
+        // Score a random pool by EI, take the top n.
+        let mut scored: Vec<(f64, Config)> = (0..self.candidate_pool)
+            .map(|_| {
+                let cfg = space.random(rng);
+                let (mu, sigma) = self.surrogate(&space.normalized(&cfg));
+                (self.ei(mu, sigma), cfg)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(n);
+        scored.into_iter().map(|(_, c)| c).collect()
+    }
+
+    fn observe(&mut self, results: &[(Config, f64)]) {
+        for (cfg, cost) in results {
+            // Normalized coords computed against the canonical space shape
+            // is supplied at propose time; store raw indices scaled later is
+            // not possible here — instead the tuner passes normalized coords
+            // through `note_normalized`. For simplicity we re-normalize with
+            // the default space (all algorithms in this repo tune the kernel
+            // space).
+            let space = ParameterSpace::kernel_default();
+            let x = if space.contains(cfg) {
+                space.normalized(cfg)
+            } else {
+                cfg.iter().map(|&c| c as f64).collect()
+            };
+            self.observed.push((x, *cost));
+            self.best = self.best.min(*cost);
+        }
+    }
+}
+
+/// Construct a searcher by algorithm tag.
+pub fn make(alg: crate::autotune::Algorithm) -> Box<dyn Searcher> {
+    use crate::autotune::Algorithm::*;
+    match alg {
+        Bayesian => Box::new(BayesianOpt::default()),
+        Genetic => Box::new(GeneticAlgorithm::default()),
+        Annealing => Box::new(SimulatedAnnealing::default()),
+        Random => Box::new(RandomSearch),
+        Grid => Box::new(GridSearch::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::space::Param;
+    use crate::autotune::Algorithm;
+    use crate::util::proptest::forall;
+
+    /// Synthetic objective with a known optimum at all-zero indices.
+    fn objective(cfg: &Config) -> f64 {
+        cfg.iter().map(|&c| (c * c) as f64).sum::<f64>()
+    }
+
+    fn run(alg: Algorithm, budget: usize, seed: u64) -> f64 {
+        let space = ParameterSpace::kernel_default();
+        let mut s = make(alg);
+        let mut rng = Rng::new(seed);
+        let mut best = f64::INFINITY;
+        let mut spent = 0;
+        while spent < budget {
+            let batch = s.propose(&space, 8.min(budget - spent), &mut rng);
+            if batch.is_empty() {
+                break;
+            }
+            let results: Vec<(Config, f64)> =
+                batch.into_iter().map(|c| (c.clone(), objective(&c))).collect();
+            for (_, y) in &results {
+                best = best.min(*y);
+            }
+            spent += results.len();
+            s.observe(&results);
+        }
+        best
+    }
+
+    #[test]
+    fn all_algorithms_improve_over_single_sample() {
+        let space = ParameterSpace::kernel_default();
+        let mut rng = Rng::new(7);
+        let single = objective(&space.random(&mut rng));
+        for alg in [
+            Algorithm::Bayesian,
+            Algorithm::Genetic,
+            Algorithm::Annealing,
+            Algorithm::Random,
+            Algorithm::Grid,
+        ] {
+            let best = run(alg, 120, 42);
+            assert!(best <= single, "{}: {best} vs {single}", alg.name());
+        }
+    }
+
+    #[test]
+    fn informed_beats_random_on_structured_objective() {
+        // GA and BO should usually beat random at equal budget.
+        let mut wins_ga = 0;
+        let mut wins_bo = 0;
+        for seed in 0..5 {
+            let r = run(Algorithm::Random, 100, seed);
+            if run(Algorithm::Genetic, 100, seed) <= r {
+                wins_ga += 1;
+            }
+            if run(Algorithm::Bayesian, 100, seed) <= r {
+                wins_bo += 1;
+            }
+        }
+        assert!(wins_ga >= 3, "GA won {wins_ga}/5");
+        assert!(wins_bo >= 3, "BO won {wins_bo}/5");
+    }
+
+    #[test]
+    fn grid_is_exhaustive_and_terminates() {
+        let space = ParameterSpace {
+            params: vec![
+                Param { name: "tile_m", choices: vec![8, 16] },
+                Param { name: "unroll", choices: vec![1, 2, 4] },
+            ],
+        };
+        let mut g = GridSearch::default();
+        let mut rng = Rng::new(1);
+        let mut seen = Vec::new();
+        loop {
+            let b = g.propose(&space, 4, &mut rng);
+            if b.is_empty() {
+                break;
+            }
+            seen.extend(b);
+        }
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn property_proposals_always_in_space() {
+        forall("searcher proposals in bounds", 40, |rng| {
+            let space = ParameterSpace::kernel_default();
+            for alg in [
+                Algorithm::Bayesian,
+                Algorithm::Genetic,
+                Algorithm::Annealing,
+                Algorithm::Random,
+                Algorithm::Grid,
+            ] {
+                let mut s = make(alg);
+                for _ in 0..3 {
+                    let batch = s.propose(&space, 6, rng);
+                    for cfg in &batch {
+                        if !space.contains(cfg) {
+                            return Err(format!("{}: {cfg:?}", alg.name()));
+                        }
+                    }
+                    let results: Vec<(Config, f64)> = batch
+                        .into_iter()
+                        .map(|c| {
+                            let y = objective(&c);
+                            (c, y)
+                        })
+                        .collect();
+                    s.observe(&results);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn annealing_cools() {
+        let mut sa = SimulatedAnnealing::default();
+        let t0 = sa.temperature;
+        sa.observe(&[(vec![0, 0, 0, 0, 0], 1.0), (vec![1, 0, 0, 0, 0], 2.0)]);
+        assert!(sa.temperature < t0);
+    }
+
+    use crate::util::rng::Rng;
+}

@@ -1,0 +1,90 @@
+//! Multi-algorithm auto-tuning (paper §3.2.4, contribution 1): five search
+//! strategies — Bayesian optimization (GP-style surrogate + Expected
+//! Improvement), genetic algorithm, simulated annealing, random search,
+//! grid search — over a [`space::ParameterSpace`], with automatic algorithm
+//! selection and learned-cost-model acceleration.
+
+pub mod algos;
+pub mod space;
+pub mod tuner;
+
+pub use space::{Param, ParameterSpace};
+pub use tuner::{AutotuneResult, Tuner, TunerOptions};
+
+/// Which search algorithm to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Bayesian,
+    Genetic,
+    Annealing,
+    Random,
+    Grid,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Some(match s {
+            "bayes" | "bayesian" | "bo" => Algorithm::Bayesian,
+            "genetic" | "ga" => Algorithm::Genetic,
+            "anneal" | "annealing" | "sa" => Algorithm::Annealing,
+            "random" => Algorithm::Random,
+            "grid" => Algorithm::Grid,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Bayesian => "bayesian",
+            Algorithm::Genetic => "genetic",
+            Algorithm::Annealing => "annealing",
+            Algorithm::Random => "random",
+            Algorithm::Grid => "grid",
+        }
+    }
+
+    /// Automatic selection (paper: "based on parameter space size,
+    /// available time budget, and optimization history"):
+    /// * tiny spaces → exhaustive grid,
+    /// * generous budgets relative to the space → genetic (population
+    ///   diversity pays off),
+    /// * tight budgets → Bayesian (sample-efficient),
+    /// * degenerate budgets → random.
+    pub fn auto_select(space_size: usize, trial_budget: usize) -> Algorithm {
+        if space_size <= trial_budget {
+            Algorithm::Grid
+        } else if trial_budget < 16 {
+            Algorithm::Random
+        } else if (trial_budget as f64) >= 0.25 * space_size as f64 {
+            Algorithm::Genetic
+        } else {
+            Algorithm::Bayesian
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_selection_rules() {
+        assert_eq!(Algorithm::auto_select(50, 100), Algorithm::Grid);
+        assert_eq!(Algorithm::auto_select(10_000, 8), Algorithm::Random);
+        assert_eq!(Algorithm::auto_select(200, 80), Algorithm::Genetic);
+        assert_eq!(Algorithm::auto_select(100_000, 100), Algorithm::Bayesian);
+    }
+
+    #[test]
+    fn parse_names() {
+        for a in [
+            Algorithm::Bayesian,
+            Algorithm::Genetic,
+            Algorithm::Annealing,
+            Algorithm::Random,
+            Algorithm::Grid,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+    }
+}

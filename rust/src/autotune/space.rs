@@ -1,0 +1,172 @@
+//! The tuning parameter space: named discrete parameters (tile sizes,
+//! unroll factors, LMUL — paper §3.2.2) with bounds-checked choice
+//! selection ("ParameterSpace-aware bounds checking").
+
+use crate::codegen::KernelConfig;
+use crate::util::rng::Rng;
+
+/// One discrete parameter.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: &'static str,
+    pub choices: Vec<usize>,
+}
+
+/// A configuration is a choice index per parameter.
+pub type Config = Vec<usize>;
+
+/// The search space.
+#[derive(Debug, Clone)]
+pub struct ParameterSpace {
+    pub params: Vec<Param>,
+}
+
+impl ParameterSpace {
+    /// The default kernel-schedule space used for the paper's experiments:
+    /// tile_m/n/k ∈ {8..256}, unroll ∈ {1,2,4,8}, lmul ∈ {1,2,4,8}.
+    pub fn kernel_default() -> ParameterSpace {
+        ParameterSpace {
+            params: vec![
+                Param { name: "tile_m", choices: vec![8, 16, 32, 64, 128, 256] },
+                Param { name: "tile_n", choices: vec![8, 16, 32, 64, 128, 256] },
+                Param { name: "tile_k", choices: vec![8, 16, 32, 64, 128] },
+                Param { name: "unroll", choices: vec![1, 2, 4, 8] },
+                Param { name: "lmul", choices: vec![1, 2, 4, 8] },
+            ],
+        }
+    }
+
+    /// Total number of configurations.
+    pub fn size(&self) -> usize {
+        self.params.iter().map(|p| p.choices.len()).product()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Uniformly random configuration.
+    pub fn random(&self, rng: &mut Rng) -> Config {
+        self.params.iter().map(|p| rng.index(p.choices.len())).collect()
+    }
+
+    /// All configurations in lexicographic order (grid search).
+    pub fn enumerate(&self) -> impl Iterator<Item = Config> + '_ {
+        let dims: Vec<usize> = self.params.iter().map(|p| p.choices.len()).collect();
+        let total = self.size();
+        (0..total).map(move |mut i| {
+            let mut cfg = vec![0; dims.len()];
+            for d in (0..dims.len()).rev() {
+                cfg[d] = i % dims[d];
+                i /= dims[d];
+            }
+            cfg
+        })
+    }
+
+    /// Mutate one coordinate to a random in-bounds choice (GA / SA move).
+    pub fn mutate(&self, cfg: &Config, rng: &mut Rng) -> Config {
+        let mut out = cfg.clone();
+        let d = rng.index(self.params.len());
+        out[d] = rng.index(self.params[d].choices.len());
+        out
+    }
+
+    /// Single-point crossover (GA).
+    pub fn crossover(&self, a: &Config, b: &Config, rng: &mut Rng) -> Config {
+        let cut = rng.index(self.params.len());
+        a[..cut].iter().chain(b[cut..].iter()).copied().collect()
+    }
+
+    /// Neighbor: step one coordinate ±1 (SA move, bounds-clamped).
+    pub fn neighbor(&self, cfg: &Config, rng: &mut Rng) -> Config {
+        let mut out = cfg.clone();
+        let d = rng.index(self.params.len());
+        let n = self.params[d].choices.len();
+        let step = if rng.chance(0.5) { 1i64 } else { -1 };
+        out[d] = (out[d] as i64 + step).clamp(0, n as i64 - 1) as usize;
+        out
+    }
+
+    /// Validity check (bounds) — every algorithm's proposals must satisfy
+    /// this (property-tested).
+    pub fn contains(&self, cfg: &Config) -> bool {
+        cfg.len() == self.params.len()
+            && cfg
+                .iter()
+                .zip(&self.params)
+                .all(|(c, p)| *c < p.choices.len())
+    }
+
+    /// Decode into a KernelConfig (unknown params keep defaults).
+    pub fn decode(&self, cfg: &Config) -> KernelConfig {
+        let mut kc = KernelConfig::default();
+        for (p, &c) in self.params.iter().zip(cfg) {
+            let v = p.choices[c];
+            match p.name {
+                "tile_m" => kc.tile_m = v,
+                "tile_n" => kc.tile_n = v,
+                "tile_k" => kc.tile_k = v,
+                "unroll" => kc.unroll = v,
+                "lmul" => kc.lmul = v,
+                _ => {}
+            }
+        }
+        kc
+    }
+
+    /// Normalized coordinates in [0,1]^d (for the BO surrogate's distances).
+    pub fn normalized(&self, cfg: &Config) -> Vec<f64> {
+        cfg.iter()
+            .zip(&self.params)
+            .map(|(&c, p)| c as f64 / (p.choices.len() - 1).max(1) as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn size_and_enumeration_agree() {
+        let s = ParameterSpace::kernel_default();
+        assert_eq!(s.size(), 6 * 6 * 5 * 4 * 4);
+        assert_eq!(s.enumerate().count(), s.size());
+        // All enumerated configs valid + distinct.
+        let set: std::collections::BTreeSet<Config> = s.enumerate().collect();
+        assert_eq!(set.len(), s.size());
+    }
+
+    #[test]
+    fn property_moves_stay_in_bounds() {
+        let s = ParameterSpace::kernel_default();
+        forall("space moves in bounds", 300, |rng| {
+            let a = s.random(rng);
+            let b = s.random(rng);
+            for cfg in [
+                s.mutate(&a, rng),
+                s.crossover(&a, &b, rng),
+                s.neighbor(&a, rng),
+            ] {
+                if !s.contains(&cfg) {
+                    return Err(format!("{cfg:?} out of bounds"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_maps_choices() {
+        let s = ParameterSpace::kernel_default();
+        let cfg = vec![2, 5, 1, 3, 0];
+        let kc = s.decode(&cfg);
+        assert_eq!(kc.tile_m, 32);
+        assert_eq!(kc.tile_n, 256);
+        assert_eq!(kc.tile_k, 16);
+        assert_eq!(kc.unroll, 8);
+        assert_eq!(kc.lmul, 1);
+    }
+}

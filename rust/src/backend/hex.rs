@@ -1,0 +1,103 @@
+//! HEX file generation (a Table 1 feature row): Intel HEX records of the
+//! encoded program, suitable for loading into an instruction ROM model.
+
+use crate::isa::encode::encode_all;
+use crate::isa::Instr;
+use crate::util::error::Result;
+
+/// One Intel HEX data record (type 00) for up to 16 bytes.
+fn record(addr: u16, data: &[u8]) -> String {
+    let mut sum: u8 = data.len() as u8;
+    sum = sum
+        .wrapping_add((addr >> 8) as u8)
+        .wrapping_add(addr as u8);
+    let mut s = format!(":{:02X}{:04X}00", data.len(), addr);
+    for b in data {
+        s.push_str(&format!("{b:02X}"));
+        sum = sum.wrapping_add(*b);
+    }
+    s.push_str(&format!("{:02X}", (!sum).wrapping_add(1)));
+    s
+}
+
+/// Encode a program as Intel HEX text (with extended linear address records
+/// every 64 KiB).
+pub fn to_intel_hex(prog: &[Instr]) -> Result<String> {
+    let words = encode_all(prog)?;
+    let mut out = String::new();
+    let mut high: u32 = u32::MAX;
+    let mut addr: u32 = 0;
+    let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    for chunk in bytes.chunks(16) {
+        let h = addr >> 16;
+        if h != high {
+            high = h;
+            let mut sum: u8 = 2 + 4;
+            sum = sum.wrapping_add((h >> 8) as u8).wrapping_add(h as u8);
+            out.push_str(&format!(":02000004{:04X}{:02X}\n", h, (!sum).wrapping_add(1)));
+        }
+        out.push_str(&record(addr as u16, chunk));
+        out.push('\n');
+        addr += chunk.len() as u32;
+    }
+    out.push_str(":00000001FF\n"); // EOF
+    Ok(out)
+}
+
+/// Parse Intel HEX back to words — used for round-trip verification.
+pub fn from_intel_hex(text: &str) -> Result<Vec<u32>> {
+    let mut bytes = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if !line.starts_with(':') || line.len() < 11 {
+            continue;
+        }
+        let n = u8::from_str_radix(&line[1..3], 16).unwrap_or(0) as usize;
+        let rectype = &line[7..9];
+        if rectype != "00" {
+            continue;
+        }
+        for i in 0..n {
+            let off = 9 + i * 2;
+            bytes.push(u8::from_str_radix(&line[off..off + 2], 16).unwrap_or(0));
+        }
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instr, Op};
+
+    #[test]
+    fn roundtrip() {
+        let prog = vec![
+            Instr::i(Op::Addi, 5, 0, 42),
+            Instr::r(Op::Add, 6, 5, 5),
+            Instr::u(Op::Lui, 7, 0x12345),
+        ];
+        let hex = to_intel_hex(&prog).unwrap();
+        assert!(hex.starts_with(':'));
+        assert!(hex.ends_with(":00000001FF\n"));
+        let words = from_intel_hex(&hex).unwrap();
+        assert_eq!(words, crate::isa::encode::encode_all(&prog).unwrap());
+    }
+
+    #[test]
+    fn checksums_valid() {
+        let prog = vec![Instr::i(Op::Addi, 5, 0, 1); 40];
+        let hex = to_intel_hex(&prog).unwrap();
+        for line in hex.lines() {
+            let bytes: Vec<u8> = (1..line.len())
+                .step_by(2)
+                .map(|i| u8::from_str_radix(&line[i..i + 2], 16).unwrap())
+                .collect();
+            let sum: u8 = bytes.iter().fold(0u8, |a, b| a.wrapping_add(*b));
+            assert_eq!(sum, 0, "checksum line {line}");
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! Memory planner: DMEM (activations) and WMEM (weights) layout.
+//!
+//! * Activations get liveness-based **staggered allocation** (the paper's
+//!   §4.5 "optimized memory layout (staggered allocation)"): a best-fit
+//!   free-list keyed on last-use in topological order, so disjoint-lifetime
+//!   tensors share addresses and DMEM peak stays near the live-set maximum.
+//! * Pure view ops (Reshape/Flatten/Squeeze/Unsqueeze/Identity/Cast) alias
+//!   their input — no allocation, no copy kernel.
+//! * Weights are packed into WMEM with within-model content dedup (the
+//!   cross-model consolidation of §5.1 lives in `pipeline::multi_model`).
+//! * Composite kernels (Attention) receive per-node scratch regions.
+//!
+//! All addresses are 64-byte aligned (cache line), which `validate`
+//! re-checks independently.
+
+use std::collections::BTreeMap;
+
+use crate::ir::graph::{Graph, NodeId, TensorId};
+use crate::ir::ops::OpKind;
+use crate::sim::layout;
+use crate::util::error::{Error, Result};
+
+/// Alignment for every allocation (cache line).
+pub const ALIGN: u32 = 64;
+
+/// View ops that alias their input buffer.
+pub fn is_view_op(op: OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Reshape
+            | OpKind::Flatten
+            | OpKind::Squeeze
+            | OpKind::Unsqueeze
+            | OpKind::Identity
+            | OpKind::Cast
+            | OpKind::DequantizeLinear
+    )
+}
+
+/// One placed buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub addr: u32,
+    pub bytes: u32,
+}
+
+/// The plan: addresses for every tensor plus per-node scratch.
+#[derive(Debug, Clone, Default)]
+pub struct MemPlan {
+    /// Activation placements (DMEM address space).
+    pub dmem: BTreeMap<TensorId, Placement>,
+    /// Weight placements (WMEM address space).
+    pub wmem: BTreeMap<TensorId, Placement>,
+    /// Scratch region per node (DMEM).
+    pub scratch: BTreeMap<NodeId, Placement>,
+    /// Peak DMEM usage in bytes.
+    pub dmem_peak: u32,
+    /// Total WMEM bytes (after within-model dedup).
+    pub wmem_used: u32,
+    /// WMEM bytes before dedup (for the consolidation report).
+    pub wmem_raw: u32,
+}
+
+impl MemPlan {
+    /// Absolute address of a tensor (input, activation, or weight).
+    pub fn addr_of(&self, t: TensorId) -> Result<u32> {
+        if let Some(p) = self.dmem.get(&t) {
+            return Ok(layout::DMEM_BASE + p.addr);
+        }
+        if let Some(p) = self.wmem.get(&t) {
+            return Ok(layout::WMEM_BASE + p.addr);
+        }
+        Err(Error::Backend(format!("tensor {} not placed", t.0)))
+    }
+
+    pub fn scratch_of(&self, n: NodeId) -> Option<u32> {
+        self.scratch.get(&n).map(|p| layout::DMEM_BASE + p.addr)
+    }
+}
+
+fn align(x: u32) -> u32 {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Bytes a tensor occupies in DMEM (activations are stored at f32 width in
+/// the functional simulator; quantized storage width affects WMEM and the
+/// PPA model, not the simulation layout).
+fn act_bytes(g: &Graph, t: TensorId) -> Result<u32> {
+    let shape = g.shape_of(t)?;
+    Ok(align((shape.numel_upper() * 4) as u32).max(ALIGN))
+}
+
+/// Scratch bytes needed by a node's kernel (beyond inputs/outputs).
+fn scratch_bytes(g: &Graph, node_idx: usize) -> Result<u32> {
+    let node = &g.nodes[node_idx];
+    Ok(match node.op {
+        OpKind::Attention => {
+            // q, k, v projections [B*S, D] x3 + scores [S, S].
+            let x = g.shape_of(node.inputs[0])?;
+            let dims = x.dims();
+            let (b, s, d) = (dims[0], dims[1], dims[2]);
+            align((3 * b * s * d * 4 + s * s * 4) as u32)
+        }
+        _ => 0,
+    })
+}
+
+/// Free-list allocator with best-fit reuse.
+#[derive(Default)]
+struct FreeList {
+    /// (addr, bytes) free blocks, sorted by addr.
+    free: Vec<(u32, u32)>,
+    top: u32,
+    peak: u32,
+}
+
+impl FreeList {
+    fn alloc(&mut self, bytes: u32) -> u32 {
+        // Best fit.
+        let mut best: Option<usize> = None;
+        for (i, (_, sz)) in self.free.iter().enumerate() {
+            if *sz >= bytes && best.map(|b| self.free[b].1 > *sz).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            let (addr, sz) = self.free[i];
+            if sz == bytes {
+                self.free.remove(i);
+            } else {
+                self.free[i] = (addr + bytes, sz - bytes);
+            }
+            return addr;
+        }
+        let addr = self.top;
+        self.top += bytes;
+        self.peak = self.peak.max(self.top);
+        addr
+    }
+
+    fn release(&mut self, addr: u32, bytes: u32) {
+        // Insert and coalesce neighbours.
+        let pos = self.free.partition_point(|(a, _)| *a < addr);
+        self.free.insert(pos, (addr, bytes));
+        // Coalesce right then left.
+        if pos + 1 < self.free.len() {
+            let (a2, s2) = self.free[pos + 1];
+            if addr + bytes == a2 {
+                self.free[pos].1 += s2;
+                self.free.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (a0, s0) = self.free[pos - 1];
+            if a0 + s0 == addr {
+                self.free[pos - 1].1 += self.free[pos].1;
+                self.free.remove(pos);
+            }
+        }
+    }
+}
+
+/// Build the full memory plan for a graph.
+pub fn plan(g: &Graph, dmem_capacity: u32, wmem_capacity: u32) -> Result<MemPlan> {
+    let order = g.topo_order()?;
+    let mut plan = MemPlan::default();
+
+    // -- WMEM: pack weights with content dedup -----------------------------
+    let mut by_hash: BTreeMap<u64, Placement> = BTreeMap::new();
+    let mut wtop: u32 = 0;
+    for (tid, init) in &g.initializers {
+        let bytes = align(init.bytes().max(1) as u32);
+        plan.wmem_raw += bytes;
+        let h = init.content_hash();
+        let placement = *by_hash.entry(h).or_insert_with(|| {
+            let p = Placement { addr: wtop, bytes };
+            wtop += bytes;
+            p
+        });
+        plan.wmem.insert(*tid, placement);
+    }
+    plan.wmem_used = wtop;
+    if wtop > wmem_capacity {
+        return Err(Error::Backend(format!(
+            "WMEM overflow: need {} bytes, capacity {}",
+            wtop, wmem_capacity
+        )));
+    }
+
+    // -- DMEM: liveness + staggered reuse -----------------------------------
+    // last_use[tensor] = index in `order` of its final consumer.
+    let mut last_use: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for (pos, nid) in order.iter().enumerate() {
+        for t in &g.nodes[nid.0].inputs {
+            last_use.insert(*t, pos);
+        }
+    }
+    // Graph outputs and inputs live forever.
+    for t in g.outputs.iter().chain(&g.inputs) {
+        last_use.insert(*t, usize::MAX);
+    }
+
+    // Resolve view-op aliases to their root buffer.
+    let mut alias_root: BTreeMap<TensorId, TensorId> = BTreeMap::new();
+    let root_of = |alias_root: &BTreeMap<TensorId, TensorId>, mut t: TensorId| {
+        while let Some(r) = alias_root.get(&t) {
+            t = *r;
+        }
+        t
+    };
+    // Extend root lifetimes through their aliases.
+    for nid in &order {
+        let node = &g.nodes[nid.0];
+        if is_view_op(node.op) && !node.inputs.is_empty() {
+            alias_root.insert(node.outputs[0], node.inputs[0]);
+        }
+    }
+    let mut root_last_use: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for (t, pos) in &last_use {
+        let r = root_of(&alias_root, *t);
+        let e = root_last_use.entry(r).or_insert(0);
+        *e = (*e).max(*pos);
+    }
+
+    let mut fl = FreeList::default();
+    // Graph inputs first.
+    for t in &g.inputs {
+        let bytes = act_bytes(g, *t)?;
+        let addr = fl.alloc(bytes);
+        plan.dmem.insert(*t, Placement { addr, bytes });
+    }
+    // Walk nodes: allocate outputs + scratch, release dead tensors.
+    // expirations[pos] = roots whose last use is pos.
+    for (pos, nid) in order.iter().enumerate() {
+        let node = &g.nodes[nid.0];
+        if is_view_op(node.op) && !node.inputs.is_empty() {
+            // Alias: same placement as the (root) input.
+            let r = root_of(&alias_root, node.outputs[0]);
+            if let Some(p) = plan.dmem.get(&r).copied() {
+                plan.dmem.insert(node.outputs[0], p);
+            } else if let Some(p) = plan.wmem.get(&r).copied() {
+                plan.wmem.insert(node.outputs[0], p);
+            }
+        } else {
+            for t in &node.outputs {
+                let bytes = act_bytes(g, *t)?;
+                let addr = fl.alloc(bytes);
+                plan.dmem.insert(*t, Placement { addr, bytes });
+            }
+        }
+        let sb = scratch_bytes(g, nid.0)?;
+        if sb > 0 {
+            // Scratch is released immediately after the node.
+            let addr = fl.alloc(sb);
+            plan.scratch.insert(*nid, Placement { addr, bytes: sb });
+            fl.release(addr, sb);
+        }
+        // Release buffers whose root lifetime ends here.
+        for (t, p) in plan.dmem.clone() {
+            if alias_root.contains_key(&t) {
+                continue; // aliases don't own storage
+            }
+            if root_last_use.get(&t).copied().unwrap_or(0) == pos && !g.inputs.contains(&t) {
+                fl.release(p.addr, p.bytes);
+                // Keep the placement record (addresses remain valid in the
+                // generated code; the block is just reusable now).
+            }
+        }
+    }
+    plan.dmem_peak = fl.peak;
+    if plan.dmem_peak > dmem_capacity {
+        return Err(Error::Backend(format!(
+            "DMEM overflow: peak {} bytes, capacity {} — reduce batch or quantize activations",
+            plan.dmem_peak, dmem_capacity
+        )));
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::dtype::DType;
+    use crate::ir::ops::Attrs;
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Initializer;
+    use crate::util::proptest::forall;
+
+    fn planned(g: &Graph) -> MemPlan {
+        plan(g, 1 << 30, 2 << 30).unwrap()
+    }
+
+    #[test]
+    fn chain_reuses_memory() {
+        // x -> relu -> relu -> ... long chain: peak should be ~2 buffers,
+        // not N.
+        let mut g = Graph::new("chain");
+        let mut x = g.input("x", Shape::fixed(&[1, 1024]), DType::F32);
+        for i in 0..20 {
+            x = g.node(OpKind::Relu, &format!("r{i}"), &[x], Attrs::new());
+        }
+        g.outputs.push(x);
+        let g = prepare(g).unwrap();
+        let p = planned(&g);
+        let one = act_bytes(&g, g.inputs[0]).unwrap();
+        assert!(
+            p.dmem_peak <= 3 * one,
+            "peak {} vs buffer {}",
+            p.dmem_peak,
+            one
+        );
+    }
+
+    #[test]
+    fn view_ops_alias() {
+        let mut g = Graph::new("v");
+        let x = g.input("x", Shape::fixed(&[2, 8]), DType::F32);
+        let mut attrs = Attrs::new();
+        attrs.insert("shape".into(), crate::ir::ops::AttrValue::Ints(vec![16]));
+        let y = g.node(OpKind::Reshape, "rs", &[x], attrs);
+        let z = g.node(OpKind::Relu, "r", &[y], Attrs::new());
+        g.outputs.push(z);
+        let g = prepare(g).unwrap();
+        let p = planned(&g);
+        assert_eq!(p.dmem[&x], p.dmem[&y], "reshape must alias its input");
+        assert_ne!(p.dmem[&x], p.dmem[&z]);
+    }
+
+    #[test]
+    fn wmem_dedups_identical_content() {
+        let mut g = Graph::new("d");
+        let x = g.input("x", Shape::fixed(&[1, 8]), DType::F32);
+        let w1 = g.init(Initializer::lazy("w1", &[8, 8], 7, 0.1));
+        let w2 = g.init(Initializer::lazy("w2", &[8, 8], 7, 0.1)); // same recipe
+        let w3 = g.init(Initializer::lazy("w3", &[8, 8], 8, 0.1)); // different
+        let a = g.node(OpKind::MatMul, "m1", &[x, w1], Attrs::new());
+        let b = g.node(OpKind::MatMul, "m2", &[a, w2], Attrs::new());
+        let c = g.node(OpKind::MatMul, "m3", &[b, w3], Attrs::new());
+        g.outputs.push(c);
+        let g = prepare(g).unwrap();
+        let p = planned(&g);
+        assert_eq!(p.wmem[&w1], p.wmem[&w2]);
+        assert_ne!(p.wmem[&w1], p.wmem[&w3]);
+        assert!(p.wmem_used < p.wmem_raw);
+    }
+
+    #[test]
+    fn alignment_everywhere() {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let p = planned(&g);
+        for pl in p.dmem.values().chain(p.wmem.values()) {
+            assert_eq!(pl.addr % ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let g = prepare(model_zoo::mlp(&[4096, 4096, 4096], 8)).unwrap();
+        assert!(plan(&g, 1 << 10, 2 << 30).is_err(), "tiny DMEM must fail");
+        assert!(plan(&g, 1 << 30, 1 << 10).is_err(), "tiny WMEM must fail");
+    }
+
+    #[test]
+    fn attention_gets_scratch() {
+        let g = prepare(model_zoo::bert_tiny(1, 32)).unwrap();
+        let p = planned(&g);
+        let n_attn = g.nodes.iter().filter(|n| n.op == OpKind::Attention).count();
+        assert_eq!(p.scratch.len(), n_attn);
+        for (nid, pl) in &p.scratch {
+            let node = &g.nodes[nid.0];
+            assert_eq!(node.op, OpKind::Attention);
+            assert!(pl.bytes >= 32 * 32 * 4);
+        }
+    }
+
+    #[test]
+    fn property_live_buffers_never_overlap() {
+        // For random chains/diamonds: at every program point, placements of
+        // simultaneously-live (root) tensors must not overlap.
+        forall("no live overlap", 30, |rng| {
+            let mut g = Graph::new("p");
+            let mut live: Vec<TensorId> = vec![g.input("x", Shape::fixed(&[1, 64]), DType::F32)];
+            for i in 0..12 {
+                let a = *rng.choose(&live);
+                let op = [OpKind::Relu, OpKind::Sigmoid, OpKind::Add][rng.index(3)];
+                let t = if op == OpKind::Add {
+                    let b = *rng.choose(&live);
+                    g.node(OpKind::Add, &format!("n{i}"), &[a, b], Attrs::new())
+                } else {
+                    g.node(op, &format!("n{i}"), &[a], Attrs::new())
+                };
+                live.push(t);
+            }
+            let out = *live.last().unwrap();
+            g.outputs.push(out);
+            let g = prepare(g).map_err(|e| format!("{e}"))?;
+            let p = plan(&g, 1 << 30, 1 << 30).map_err(|e| format!("{e}"))?;
+            // Reconstruct liveness and check overlap at each step.
+            let order = g.topo_order().unwrap();
+            let mut last_use: BTreeMap<TensorId, usize> = BTreeMap::new();
+            for (pos, nid) in order.iter().enumerate() {
+                for t in &g.nodes[nid.0].inputs {
+                    last_use.insert(*t, pos);
+                }
+            }
+            for t in g.outputs.iter().chain(&g.inputs) {
+                last_use.insert(*t, usize::MAX);
+            }
+            for (pos, nid) in order.iter().enumerate() {
+                // live set: defined at or before pos, last use at or after pos
+                let mut live_now: Vec<TensorId> = Vec::new();
+                for t in g.inputs.iter().copied() {
+                    if last_use.get(&t).copied().unwrap_or(0) >= pos {
+                        live_now.push(t);
+                    }
+                }
+                for (dpos, dnid) in order.iter().enumerate() {
+                    if dpos > pos {
+                        break;
+                    }
+                    for t in &g.nodes[dnid.0].outputs {
+                        if last_use.get(t).copied().unwrap_or(0) >= pos {
+                            live_now.push(*t);
+                        }
+                    }
+                }
+                for (i, &a) in live_now.iter().enumerate() {
+                    for &b in &live_now[i + 1..] {
+                        let (pa, pb) = (p.dmem[&a], p.dmem[&b]);
+                        let overlap =
+                            pa.addr < pb.addr + pb.bytes && pb.addr < pa.addr + pa.bytes;
+                        if overlap && pa != pb {
+                            return Err(format!(
+                                "node {}: tensors {} and {} overlap: {pa:?} {pb:?}",
+                                nid.0, a.0, b.0
+                            ));
+                        }
+                    }
+                }
+                let _ = pos;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! Backend (paper §3.1 stage 4): memory planning, register allocation,
+//! instruction scheduling, and HEX emission.
+
+pub mod hex;
+pub mod memplan;
+pub mod regalloc;
+pub mod sched;

@@ -1,0 +1,241 @@
+//! Register allocation: linear-scan for virtual-register programs and a
+//! pressure analyzer used by validation.
+//!
+//! The kernel library emits statically-allocated code (fixed conventions in
+//! `isa::regs`), so the allocator's production role is *verification* — the
+//! validator proves no kernel exceeds the register files — plus remapping
+//! for programs authored with virtual registers (ids >= 32), which the
+//! scheduler's tests and future fused kernels use.
+
+use std::collections::BTreeMap;
+
+use crate::isa::encode::{format_of, Format};
+use crate::isa::{Instr, Op};
+use crate::util::error::{Error, Result};
+
+/// Whether an operand field of this op refers to the float register file.
+fn reads_float(op: Op) -> bool {
+    matches!(
+        op.class(),
+        crate::isa::OpClass::FAlu
+            | crate::isa::OpClass::FMul
+            | crate::isa::OpClass::FDiv
+            | crate::isa::OpClass::FMa
+            | crate::isa::OpClass::FCustom
+    )
+}
+
+/// Peak simultaneous register usage (distinct registers referenced), per
+/// file. Conservative: treats every referenced register as live for the
+/// whole program — an upper bound that the 61-op kernels stay well under.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Pressure {
+    pub int_regs: usize,
+    pub float_regs: usize,
+    pub vector_regs: usize,
+}
+
+pub fn analyze_pressure(prog: &[Instr]) -> Pressure {
+    let mut xs = std::collections::BTreeSet::new();
+    let mut fs = std::collections::BTreeSet::new();
+    let mut vs = std::collections::BTreeSet::new();
+    for i in prog {
+        match format_of(i.op) {
+            Format::VArith | Format::VMem => {
+                vs.insert(i.rd);
+                if i.op != Op::VfmvVF && i.op != Op::VfmaccVF {
+                    vs.insert(i.rs1);
+                }
+                vs.insert(i.rs2);
+                if matches!(i.op, Op::VfmaccVF | Op::VfmvVF) {
+                    fs.insert(i.rs1);
+                }
+                if format_of(i.op) == Format::VMem {
+                    xs.insert(i.rs1);
+                }
+            }
+            Format::VSetF => {
+                xs.insert(i.rd);
+                xs.insert(i.rs1);
+            }
+            _ if reads_float(i.op) => {
+                fs.insert(i.rd);
+                fs.insert(i.rs1);
+                fs.insert(i.rs2);
+                if format_of(i.op) == Format::R4 {
+                    fs.insert(i.rs3);
+                }
+                if matches!(i.op, Op::FcvtWS) {
+                    xs.insert(i.rd);
+                    fs.remove(&i.rd);
+                }
+                if matches!(i.op, Op::FcvtSW) {
+                    xs.insert(i.rs1);
+                    fs.remove(&i.rs1);
+                }
+            }
+            Format::S => {
+                xs.insert(i.rs1);
+                if i.op == Op::Fsw {
+                    fs.insert(i.rs2);
+                } else {
+                    xs.insert(i.rs2);
+                }
+            }
+            Format::I if i.op == Op::Flw => {
+                fs.insert(i.rd);
+                xs.insert(i.rs1);
+            }
+            _ => {
+                xs.insert(i.rd);
+                xs.insert(i.rs1);
+                xs.insert(i.rs2);
+            }
+        }
+    }
+    xs.remove(&0); // x0 is free
+    Pressure { int_regs: xs.len(), float_regs: fs.len(), vector_regs: vs.len() }
+}
+
+/// Linear-scan allocation for programs using virtual integer registers
+/// (ids >= 32). Physical t/s registers are assigned by live range; programs
+/// needing more simultaneous lives than available registers are rejected
+/// (the caller must spill — generated kernels never hit this by
+/// construction, and validation would refuse them).
+pub fn linear_scan(prog: &[Instr]) -> Result<Vec<Instr>> {
+    // Live ranges of virtual regs.
+    let mut first: BTreeMap<u8, usize> = BTreeMap::new();
+    let mut last: BTreeMap<u8, usize> = BTreeMap::new();
+    for (pos, i) in prog.iter().enumerate() {
+        for r in [i.rd, i.rs1, i.rs2, i.rs3] {
+            if r >= 32 {
+                first.entry(r).or_insert(pos);
+                last.insert(r, pos);
+            }
+        }
+    }
+    // Allocatable pool: t0-t6, s2-s11 (avoid args/sp/ra).
+    const POOL: [u8; 17] = [5, 6, 7, 28, 29, 30, 31, 18, 19, 20, 21, 22, 23, 24, 25, 26, 27];
+    let mut assignment: BTreeMap<u8, u8> = BTreeMap::new();
+    let mut in_use: BTreeMap<u8, u8> = BTreeMap::new(); // phys -> virt
+    let mut out = Vec::with_capacity(prog.len());
+    for (pos, i) in prog.iter().enumerate() {
+        // Expire.
+        let expired: Vec<u8> = in_use
+            .iter()
+            .filter(|(_, v)| last.get(v).copied().unwrap_or(0) < pos)
+            .map(|(p, _)| *p)
+            .collect();
+        for p in expired {
+            in_use.remove(&p);
+        }
+        // Allocate any new virtuals in this instruction.
+        for r in [i.rd, i.rs1, i.rs2, i.rs3] {
+            if r >= 32 && !assignment.contains_key(&r) {
+                let phys = POOL
+                    .iter()
+                    .find(|p| !in_use.contains_key(p))
+                    .copied()
+                    .ok_or_else(|| {
+                        Error::Backend(format!(
+                            "register pressure exceeds pool at instruction {pos} — spill required"
+                        ))
+                    })?;
+                assignment.insert(r, phys);
+                in_use.insert(phys, r);
+            }
+        }
+        let map = |r: u8| if r >= 32 { assignment[&r] } else { r };
+        out.push(Instr {
+            op: i.op,
+            rd: map(i.rd),
+            rs1: map(i.rs1),
+            rs2: map(i.rs2),
+            rs3: map(i.rs3),
+            imm: i.imm,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::sim::machine::Machine;
+    use crate::sim::MachineConfig;
+
+    #[test]
+    fn pressure_counts_distinct_registers() {
+        let prog = vec![
+            Instr::i(Op::Addi, 5, 0, 1),
+            Instr::i(Op::Addi, 6, 5, 1),
+            Instr::r(Op::Add, 7, 5, 6),
+            Instr::r(Op::FaddS, 1, 2, 3),
+        ];
+        let p = analyze_pressure(&prog);
+        assert_eq!(p.int_regs, 3);
+        assert_eq!(p.float_regs, 3);
+        assert_eq!(p.vector_regs, 0);
+    }
+
+    #[test]
+    fn linear_scan_remaps_and_preserves_semantics() {
+        // Virtual program: v32 = 3; v33 = 4; v34 = v32 + v33; store into x10.
+        let prog = vec![
+            Instr::i(Op::Addi, 32, 0, 3),
+            Instr::i(Op::Addi, 33, 0, 4),
+            Instr::r(Op::Add, 34, 32, 33),
+            Instr::r(Op::Add, 10, 34, 0),
+        ];
+        let alloc = linear_scan(&prog).unwrap();
+        assert!(alloc.iter().all(|i| i.rd < 32 && i.rs1 < 32 && i.rs2 < 32));
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.run(&encode_all(&alloc).unwrap()).unwrap();
+        assert_eq!(m.x[10], 7);
+    }
+
+    #[test]
+    fn linear_scan_reuses_dead_registers() {
+        // 40 sequential short-lived virtuals must fit the 17-register pool.
+        let mut prog = Vec::new();
+        for v in 0..40u8 {
+            let vr = 32 + (v % 60);
+            prog.push(Instr::i(Op::Addi, vr, 0, v as i32));
+            prog.push(Instr::r(Op::Add, 10, 10, vr)); // last use immediately
+        }
+        let alloc = linear_scan(&prog).unwrap();
+        let p = analyze_pressure(&alloc);
+        assert!(p.int_regs <= 18);
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.run(&encode_all(&alloc).unwrap()).unwrap();
+        assert_eq!(m.x[10], (0..40).sum::<i32>());
+    }
+
+    #[test]
+    fn over_pressure_rejected() {
+        // 20 simultaneously-live virtuals > 17-register pool.
+        let mut prog = Vec::new();
+        for v in 0..20u8 {
+            prog.push(Instr::i(Op::Addi, 32 + v, 0, v as i32));
+        }
+        // All still live here:
+        for v in 0..20u8 {
+            prog.push(Instr::r(Op::Add, 10, 10, 32 + v));
+        }
+        assert!(linear_scan(&prog).is_err());
+    }
+
+    #[test]
+    fn kernel_pressure_within_files() {
+        // Every generated kernel must fit the register files.
+        use crate::codegen::kernels;
+        use crate::codegen::KernelConfig;
+        let mach = MachineConfig::xgen_asic();
+        let art = kernels::matmul(&mach, KernelConfig::default(), 8, 8, 8, 0, 0x1000, 0x2000, crate::ir::DType::F32).unwrap();
+        let p = analyze_pressure(&art.asm);
+        assert!(p.int_regs <= 31, "{p:?}");
+        assert!(p.float_regs <= 32);
+        assert!(p.vector_regs <= 32);
+    }
+}

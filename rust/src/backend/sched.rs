@@ -1,0 +1,333 @@
+//! Instruction scheduler: list scheduling within basic blocks to separate
+//! producers from consumers (the paper's "efficient instruction scheduling
+//! (reduced pipeline stalls)", §4.4).
+//!
+//! Conservative dependence model: register RAW/WAR/WAW, all memory ops
+//! ordered among themselves, vector state (`vsetvli`) is a barrier, control
+//! flow ends a block. Correctness is re-checked by running scheduled kernels
+//! on the functional machine.
+
+use crate::isa::encode::{format_of, Format};
+use crate::isa::{Instr, Op, OpClass};
+
+/// Result latency (cycles until the destination is ready).
+fn latency(op: Op) -> u64 {
+    match op.class() {
+        OpClass::Mul => 3,
+        OpClass::Div => 20,
+        OpClass::Load => 3,
+        OpClass::FAlu => 2,
+        OpClass::FMul => 3,
+        OpClass::FDiv => 16,
+        OpClass::FMa => 4,
+        OpClass::FCustom => 8,
+        OpClass::VLoad => 4,
+        OpClass::VFma | OpClass::VMul => 3,
+        _ => 1,
+    }
+}
+
+/// Register sets (file, id) read/written by an instruction.
+/// File tag: 0 = int, 1 = float, 2 = vector.
+fn reads_writes(i: &Instr) -> (Vec<(u8, u8)>, Vec<(u8, u8)>) {
+    let mut r = Vec::new();
+    let mut w = Vec::new();
+    match format_of(i.op) {
+        Format::R => {
+            let float = matches!(
+                i.op.class(),
+                OpClass::FAlu | OpClass::FMul | OpClass::FDiv | OpClass::FCustom
+            );
+            match i.op {
+                Op::FcvtWS => {
+                    r.push((1, i.rs1));
+                    w.push((0, i.rd));
+                }
+                Op::FcvtSW => {
+                    r.push((0, i.rs1));
+                    w.push((1, i.rd));
+                }
+                _ if float => {
+                    r.push((1, i.rs1));
+                    r.push((1, i.rs2));
+                    w.push((1, i.rd));
+                }
+                _ => {
+                    r.push((0, i.rs1));
+                    r.push((0, i.rs2));
+                    w.push((0, i.rd));
+                }
+            }
+        }
+        Format::R4 => {
+            r.push((1, i.rs1));
+            r.push((1, i.rs2));
+            r.push((1, i.rs3));
+            w.push((1, i.rd));
+        }
+        Format::I => {
+            r.push((0, i.rs1));
+            if i.op == Op::Flw {
+                w.push((1, i.rd));
+            } else {
+                w.push((0, i.rd));
+            }
+        }
+        Format::S => {
+            r.push((0, i.rs1));
+            r.push((if i.op == Op::Fsw { 1 } else { 0 }, i.rs2));
+        }
+        Format::B => {
+            r.push((0, i.rs1));
+            r.push((0, i.rs2));
+        }
+        Format::U | Format::J => w.push((0, i.rd)),
+        Format::VSetF => {
+            r.push((0, i.rs1));
+            w.push((0, i.rd));
+        }
+        Format::VMem => {
+            r.push((0, i.rs1));
+            if matches!(i.op, Op::Vle32 | Op::Vle8) {
+                w.push((2, i.rd));
+            } else {
+                r.push((2, i.rd));
+            }
+        }
+        Format::VArith => {
+            match i.op {
+                Op::VfmaccVF | Op::VfmvVF => r.push((1, i.rs1)),
+                _ => r.push((2, i.rs1)),
+            }
+            r.push((2, i.rs2));
+            if matches!(i.op, Op::VmaccVV | Op::VfmaccVV | Op::VfmaccVF) {
+                r.push((2, i.rd)); // accumulator also read
+            }
+            w.push((2, i.rd));
+        }
+    }
+    // x0 writes are no-ops.
+    w.retain(|(f, id)| !(*f == 0 && *id == 0));
+    (r, w)
+}
+
+fn is_mem(op: Op) -> bool {
+    matches!(
+        op.class(),
+        OpClass::Load | OpClass::Store | OpClass::VLoad | OpClass::VStore
+    )
+}
+
+fn is_barrier(op: Op) -> bool {
+    matches!(
+        op.class(),
+        OpClass::Branch | OpClass::Jump | OpClass::VSet
+    )
+}
+
+/// Schedule one basic block: topological order by dependences, prioritizing
+/// the critical path (longest latency-weighted chain to any sink).
+fn schedule_block(block: &[Instr]) -> Vec<Instr> {
+    let n = block.len();
+    if n <= 2 {
+        return block.to_vec();
+    }
+    // Build dependence edges.
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n]; // deps[i] = predecessors
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let (ri, wi) = reads_writes(&block[i]);
+        for j in 0..i {
+            let (rj, wj) = reads_writes(&block[j]);
+            let raw = wj.iter().any(|x| ri.contains(x));
+            let war = rj.iter().any(|x| wi.contains(x));
+            let waw = wj.iter().any(|x| wi.contains(x));
+            let mem = is_mem(block[i].op) && is_mem(block[j].op);
+            if raw || war || waw || mem {
+                deps[i].push(j);
+                succs[j].push(i);
+            }
+        }
+    }
+    // Critical-path priority.
+    let mut prio = vec![0u64; n];
+    for i in (0..n).rev() {
+        let succ_max = succs[i].iter().map(|&s| prio[s]).max().unwrap_or(0);
+        prio[i] = latency(block[i].op) + succ_max;
+    }
+    // List schedule.
+    let mut indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    let mut emitted = vec![false; n];
+    while out.len() < n {
+        // Pick the ready instruction with the highest priority; stable on
+        // original order for determinism.
+        ready.sort_by_key(|&i| (std::cmp::Reverse(prio[i]), i));
+        let pick = ready.remove(0);
+        emitted[pick] = true;
+        out.push(block[pick]);
+        for &s in &succs[pick] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 && !emitted[s] {
+                ready.push(s);
+            }
+        }
+    }
+    out
+}
+
+/// Schedule a whole program. Block boundaries: any branch/jump/vsetvli ends
+/// a block (inclusive), and any *branch target* starts one. Since labels are
+/// resolved to offsets already, we conservatively only reorder *between*
+/// consecutive control instructions, which is safe for targets too (targets
+/// always follow a branch in our kernels' structured loops).
+pub fn schedule(prog: &[Instr]) -> Vec<Instr> {
+    let mut out = Vec::with_capacity(prog.len());
+    let mut block_start = 0;
+    // Mark branch-target offsets to avoid moving across them.
+    let mut is_target = vec![false; prog.len() + 1];
+    for (pos, i) in prog.iter().enumerate() {
+        if matches!(format_of(i.op), Format::B | Format::J) {
+            let t = pos as i64 + (i.imm as i64) / 4;
+            if t >= 0 && (t as usize) < is_target.len() {
+                is_target[t as usize] = true;
+            }
+        }
+    }
+    for pos in 0..prog.len() {
+        let ends = is_barrier(prog[pos].op);
+        let next_is_target = is_target.get(pos + 1).copied().unwrap_or(false);
+        if ends || next_is_target || pos + 1 == prog.len() {
+            let (body, ctl) = if ends {
+                (&prog[block_start..pos], Some(prog[pos]))
+            } else {
+                (&prog[block_start..=pos], None)
+            };
+            out.extend(schedule_block(body));
+            if let Some(c) = ctl {
+                out.push(c);
+            }
+            block_start = pos + 1;
+        }
+    }
+    debug_assert_eq!(out.len(), prog.len());
+    out
+}
+
+/// Estimated stall cycles of a straight-line block under a simple in-order
+/// model (used to quantify scheduling benefit in tests and benches).
+pub fn estimate_stalls(prog: &[Instr]) -> u64 {
+    let mut ready_at: std::collections::BTreeMap<(u8, u8), u64> = std::collections::BTreeMap::new();
+    let mut cycle = 0u64;
+    let mut stalls = 0u64;
+    for i in prog {
+        let (reads, writes) = reads_writes(i);
+        let avail = reads
+            .iter()
+            .map(|r| ready_at.get(r).copied().unwrap_or(0))
+            .max()
+            .unwrap_or(0);
+        if avail > cycle {
+            stalls += avail - cycle;
+            cycle = avail;
+        }
+        cycle += 1;
+        for w in writes {
+            ready_at.insert(w, cycle + latency(i.op) - 1);
+        }
+    }
+    stalls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{kernels, KernelConfig};
+    use crate::isa::encode::encode_all;
+    use crate::isa::regs;
+    use crate::sim::machine::Machine;
+    use crate::sim::MachineConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn separates_dependent_pairs() {
+        // load -> use, load -> use: scheduler should interleave the loads.
+        let prog = vec![
+            Instr::i(Op::Lw, 5, regs::SP, -4),
+            Instr::i(Op::Addi, 6, 5, 1),
+            Instr::i(Op::Lw, 7, regs::SP, -8),
+            Instr::i(Op::Addi, 28, 7, 1),
+        ];
+        let before = estimate_stalls(&prog);
+        let after = estimate_stalls(&schedule(&prog));
+        assert!(after <= before);
+    }
+
+    #[test]
+    fn preserves_dependences() {
+        let prog = vec![
+            Instr::i(Op::Addi, 5, 0, 10),
+            Instr::i(Op::Addi, 5, 5, 5), // WAW+RAW on x5
+            Instr::r(Op::Add, 6, 5, 5),
+        ];
+        let s = schedule(&prog);
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.run(&encode_all(&s).unwrap()).unwrap();
+        assert_eq!(m.x[6], 30);
+    }
+
+    #[test]
+    fn scheduled_matmul_still_correct() {
+        let mach = MachineConfig::xgen_asic();
+        let (mm, nn, kk) = (3, 9, 5);
+        let mut rng = Rng::new(31);
+        let a: Vec<f32> = (0..mm * kk).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..kk * nn).map(|_| rng.normal_f32()).collect();
+        let art = kernels::matmul(&mach, KernelConfig::default(), mm, nn, kk, 0x1000, 0x4000, 0x8000, crate::ir::DType::F32).unwrap();
+        let scheduled = schedule(&art.asm);
+        assert_eq!(scheduled.len(), art.asm.len());
+        let mut m = Machine::new(mach);
+        m.write_f32_slice(0x1000, &a).unwrap();
+        m.write_f32_slice(0x4000, &b).unwrap();
+        m.run(&encode_all(&scheduled).unwrap()).unwrap();
+        let got = m.read_f32_slice(0x8000, mm * nn).unwrap();
+        for i in 0..mm {
+            for j in 0..nn {
+                let want: f32 = (0..kk).map(|x| a[i * kk + x] * b[x * nn + j]).sum();
+                assert!((got[i * nn + j] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn property_schedule_is_permutation_per_block() {
+        use crate::util::proptest::forall;
+        forall("schedule permutes blocks", 50, |rng| {
+            // Random straight-line int program (no control flow).
+            let mut prog = Vec::new();
+            for _ in 0..20 {
+                let rd = rng.range(5, 16) as u8;
+                let rs1 = rng.range(0, 16) as u8;
+                match rng.index(3) {
+                    0 => prog.push(Instr::i(Op::Addi, rd, rs1, rng.range(-100, 100) as i32)),
+                    1 => prog.push(Instr::r(Op::Add, rd, rs1, rng.range(0, 16) as u8)),
+                    _ => prog.push(Instr::r(Op::Mul, rd, rs1, rng.range(0, 16) as u8)),
+                }
+            }
+            let s = schedule(&prog);
+            if s.len() != prog.len() {
+                return Err("length changed".into());
+            }
+            // Semantics: execute both and compare register files.
+            let mut m1 = Machine::new(MachineConfig::xgen_asic());
+            let mut m2 = Machine::new(MachineConfig::xgen_asic());
+            m1.run(&encode_all(&prog).unwrap()).map_err(|e| format!("{e}"))?;
+            m2.run(&encode_all(&s).unwrap()).map_err(|e| format!("{e}"))?;
+            if m1.x != m2.x {
+                return Err(format!("register state diverged: {:?} vs {:?}", m1.x, m2.x));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! Assembly emitter: an instruction buffer with labels, forward references,
+//! and convenience constructors. Branch/jump immediates are byte offsets
+//! resolved at `finish()`.
+
+use crate::isa::{regs, Instr, Op};
+use crate::util::error::{Error, Result};
+
+/// Label handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+enum Slot {
+    Instr(Instr),
+    /// Branch to a label (op, rs1, rs2).
+    Branch(Op, u8, u8, Label),
+    /// Jump-and-link to a label.
+    Jump(u8, Label),
+}
+
+/// The emitter.
+pub struct Emitter {
+    slots: Vec<Slot>,
+    /// label -> instruction index.
+    labels: Vec<Option<usize>>,
+}
+
+impl Default for Emitter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Emitter {
+    pub fn new() -> Emitter {
+        Emitter { slots: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Create an unbound label.
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind a label to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.slots.len());
+    }
+
+    /// Create and immediately bind.
+    pub fn here(&mut self) -> Label {
+        let l = self.label();
+        self.bind(l);
+        l
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.slots.push(Slot::Instr(i));
+    }
+
+    /// Conditional branch to a label.
+    pub fn branch(&mut self, op: Op, rs1: u8, rs2: u8, target: Label) {
+        self.slots.push(Slot::Branch(op, rs1, rs2, target));
+    }
+
+    /// Unconditional jump to a label (jal rd).
+    pub fn jump(&mut self, target: Label) {
+        self.slots.push(Slot::Jump(regs::ZERO, target));
+    }
+
+    // -- convenience --------------------------------------------------------
+
+    /// Load a 32-bit constant into `rd` (lui+addi as needed).
+    pub fn li(&mut self, rd: u8, val: i32) {
+        let lo = (val << 20) >> 20; // sign-extended low 12
+        let hi = (val.wrapping_sub(lo) as u32) >> 12;
+        if hi != 0 {
+            self.push(Instr::u(Op::Lui, rd, hi as i32));
+            if lo != 0 {
+                self.push(Instr::i(Op::Addi, rd, rd, lo));
+            }
+        } else {
+            self.push(Instr::i(Op::Addi, rd, regs::ZERO, lo));
+        }
+    }
+
+    /// rd = rs1 + constant (clobbers nothing else; uses addi chain or t6).
+    pub fn addi_big(&mut self, rd: u8, rs1: u8, val: i32) {
+        if (-2048..=2047).contains(&val) {
+            self.push(Instr::i(Op::Addi, rd, rs1, val));
+        } else {
+            self.li(regs::T6, val);
+            self.push(Instr::r(Op::Add, rd, rs1, regs::T6));
+        }
+    }
+
+    /// Resolve labels and return the final instruction stream.
+    pub fn finish(self) -> Result<Vec<Instr>> {
+        let resolve = |l: Label, at: usize| -> Result<i32> {
+            let target = self.labels[l.0]
+                .ok_or_else(|| Error::Codegen(format!("unbound label {}", l.0)))?;
+            Ok(((target as i64 - at as i64) * 4) as i32)
+        };
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(at, slot)| match slot {
+                Slot::Instr(i) => Ok(*i),
+                Slot::Branch(op, rs1, rs2, l) => {
+                    Ok(Instr::b(*op, *rs1, *rs2, resolve(*l, at)?))
+                }
+                Slot::Jump(rd, l) => Ok(Instr::u(Op::Jal, *rd, resolve(*l, at)?)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::sim::machine::Machine;
+    use crate::sim::MachineConfig;
+
+    #[test]
+    fn backward_branch_loop() {
+        let mut e = Emitter::new();
+        e.li(regs::T0, 5);
+        e.li(regs::T1, 0);
+        let loop_top = e.here();
+        e.push(Instr::r(Op::Add, regs::T1, regs::T1, regs::T0));
+        e.push(Instr::i(Op::Addi, regs::T0, regs::T0, -1));
+        e.branch(Op::Bne, regs::T0, regs::ZERO, loop_top);
+        let prog = e.finish().unwrap();
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.run(&encode_all(&prog).unwrap()).unwrap();
+        assert_eq!(m.x[regs::T1 as usize], 15);
+    }
+
+    #[test]
+    fn forward_jump_skips() {
+        let mut e = Emitter::new();
+        let skip = e.label();
+        e.li(regs::T0, 1);
+        e.jump(skip);
+        e.li(regs::T0, 99); // skipped
+        e.bind(skip);
+        e.li(regs::T1, 2);
+        let prog = e.finish().unwrap();
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.run(&encode_all(&prog).unwrap()).unwrap();
+        assert_eq!(m.x[regs::T0 as usize], 1);
+        assert_eq!(m.x[regs::T1 as usize], 2);
+    }
+
+    #[test]
+    fn li_large_constants() {
+        for val in [0, 1, -1, 2047, -2048, 2048, 0x1234_5678, -0x1234_5678, i32::MAX, i32::MIN] {
+            let mut e = Emitter::new();
+            e.li(regs::T0, val);
+            let prog = e.finish().unwrap();
+            let mut m = Machine::new(MachineConfig::xgen_asic());
+            m.run(&encode_all(&prog).unwrap()).unwrap();
+            assert_eq!(m.x[regs::T0 as usize], val, "li {val}");
+        }
+    }
+
+    #[test]
+    fn unbound_label_is_error() {
+        let mut e = Emitter::new();
+        let l = e.label();
+        e.jump(l);
+        assert!(e.finish().is_err());
+    }
+}

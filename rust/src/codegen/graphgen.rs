@@ -1,0 +1,553 @@
+//! Whole-graph code generation: walks the graph in topological order,
+//! selects a kernel per node, and stitches the per-node artifacts into one
+//! program over the memory plan's addresses.
+//!
+//! Weights live at their WMEM addresses, activations at their DMEM
+//! addresses (view ops are aliased by the planner and emit no code).
+
+use std::collections::BTreeMap;
+
+use crate::backend::memplan::{is_view_op, MemPlan};
+use crate::codegen::{auto_lmul, auto_unroll, kernels, kernels_attn, kernels_nn, KernelArtifact, KernelConfig};
+use crate::ir::dtype::DType;
+use crate::ir::graph::{Graph, Node, NodeId};
+use crate::ir::ops::{attr_int, attr_ints, OpKind};
+use crate::isa::Instr;
+use crate::sim::MachineConfig;
+use crate::util::error::{Error, Result};
+
+/// A fully lowered graph.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Per-node artifacts, in emission order.
+    pub kernels: Vec<(NodeId, KernelArtifact)>,
+    /// Concatenated executable stream.
+    pub asm: Vec<Instr>,
+    /// Total MAC-equivalent flops.
+    pub flops: u64,
+}
+
+impl Program {
+    pub fn instr_count(&self) -> usize {
+        self.asm.len()
+    }
+}
+
+/// Per-node schedule overrides (from the auto-tuner); nodes not present use
+/// the automatic heuristics.
+pub type Schedules = BTreeMap<NodeId, KernelConfig>;
+
+/// Lower the whole graph. `precision` is the datapath dtype the kernels are
+/// profiled at (quantized compiles pass their target precision; the
+/// functional-simulation storage stays f32 — DESIGN.md §Substitutions).
+pub fn lower_graph(
+    g: &Graph,
+    mach: &MachineConfig,
+    plan: &MemPlan,
+    schedules: &Schedules,
+    precision: DType,
+) -> Result<Program> {
+    let mut kernels_out = Vec::new();
+    let mut asm = Vec::new();
+    let mut flops = 0u64;
+    for nid in g.topo_order()? {
+        let node = &g.nodes[nid.0];
+        if is_view_op(node.op) {
+            continue; // aliased by the planner
+        }
+        let kc = schedules.get(&nid).copied().unwrap_or_else(|| auto_config(g, node, mach));
+        let arts = lower_node(g, mach, plan, nid, node, kc, precision)?;
+        for art in arts {
+            flops += art.flops;
+            asm.extend(art.asm.iter().copied());
+            kernels_out.push((nid, art));
+        }
+    }
+    Ok(Program { kernels: kernels_out, asm, flops })
+}
+
+/// Default schedule for a node (used when the tuner hasn't run).
+pub fn auto_config(g: &Graph, node: &Node, mach: &MachineConfig) -> KernelConfig {
+    let n = node
+        .outputs
+        .first()
+        .and_then(|t| g.tensors[t.0].shape.as_ref())
+        .map(|s| s.numel_upper())
+        .unwrap_or(64);
+    let dt = node
+        .inputs
+        .first()
+        .map(|t| g.info(*t).dtype)
+        .unwrap_or(DType::F32);
+    let lmul = auto_lmul(dt, node.op.category(), n, mach);
+    KernelConfig {
+        unroll: auto_unroll(16),
+        lmul,
+        ..Default::default()
+    }
+}
+
+fn dims_of(g: &Graph, t: crate::ir::graph::TensorId) -> Result<Vec<usize>> {
+    Ok(g.shape_of(t)?
+        .0
+        .iter()
+        .map(|d| d.upper_bound())
+        .collect())
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>().max(1)
+}
+
+/// Lower one node to one-or-more kernel artifacts.
+#[allow(clippy::too_many_arguments)]
+fn lower_node(
+    g: &Graph,
+    mach: &MachineConfig,
+    plan: &MemPlan,
+    nid: NodeId,
+    node: &Node,
+    kc: KernelConfig,
+    precision: DType,
+) -> Result<Vec<KernelArtifact>> {
+    let addr = |i: usize| plan.addr_of(node.inputs[i]);
+    let out_addr = plan.addr_of(node.outputs[0])?;
+    let in_dims = |i: usize| dims_of(g, node.inputs[i]);
+    let out_dims = dims_of(g, node.outputs[0])?;
+
+    Ok(match node.op {
+        OpKind::MatMul | OpKind::Gemm | OpKind::Linear | OpKind::QLinearMatMul | OpKind::MatMulInteger => {
+            let a = in_dims(0)?;
+            let b = in_dims(1)?;
+            let k = *a.last().unwrap();
+            let m = numel(&a) / k;
+            let n = *b.last().unwrap();
+            // Batched matmul where B is broadcast ([*, K, N] with matching
+            // batch): our kernel handles [M, K] x [K, N]; for batched B we
+            // flatten batch into M only when B is 2-D.
+            if b.len() != 2 {
+                return Err(Error::Codegen(format!(
+                    "node '{}': batched rhs matmul not supported by kernel (B rank {})",
+                    node.name,
+                    b.len()
+                )));
+            }
+            let bias = if node.inputs.len() > 2 { Some(addr(2)?) } else { None };
+            vec![kernels::matmul_bias(
+                mach, kc, m, n, k, addr(0)?, addr(1)?, bias, out_addr, precision,
+            )?]
+        }
+        OpKind::Conv | OpKind::DepthwiseConv | OpKind::ConvInteger | OpKind::QLinearConv => {
+            let x = in_dims(0)?;
+            let w = in_dims(1)?;
+            let strides = attr_ints(&node.attrs, "strides", &[1, 1]);
+            let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+            let groups = if node.op == OpKind::DepthwiseConv { x[1] } else { 1 };
+            let d = kernels_nn::Conv2dDesc {
+                n: x[0],
+                cin: x[1],
+                h: x[2],
+                w: x[3],
+                cout: w[0],
+                kh: w[2],
+                kw: w[3],
+                stride: strides[0] as usize,
+                pad: pads[0] as usize,
+                groups,
+            };
+            let bias = if node.inputs.len() > 2 { Some(addr(2)?) } else { None };
+            vec![kernels_nn::conv2d(mach, kc, d, addr(0)?, addr(1)?, bias, out_addr, precision)?]
+        }
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max
+        | OpKind::QLinearAdd => {
+            let a = in_dims(0)?;
+            let b = in_dims(1)?;
+            let len = numel(&out_dims);
+            if numel(&a) != len || numel(&b) != len {
+                // Broadcast add of a smaller operand (bias/positional): only
+                // the repeated-rhs pattern is supported.
+                if len % numel(&b) == 0 {
+                    return lower_broadcast_add(mach, kc, node, len, numel(&b), addr(0)?, addr(1)?, out_addr, precision);
+                }
+                return Err(Error::Codegen(format!(
+                    "node '{}': unsupported broadcast {:?} vs {:?}",
+                    node.name, a, b
+                )));
+            }
+            let kind = match node.op {
+                OpKind::Add | OpKind::QLinearAdd => kernels::BinKind::Add,
+                OpKind::Sub => kernels::BinKind::Sub,
+                OpKind::Mul => kernels::BinKind::Mul,
+                OpKind::Max => kernels::BinKind::Max,
+                OpKind::Min | OpKind::Div => {
+                    return Err(Error::Codegen(format!(
+                        "node '{}': {} lowers via reciprocal on this ISA (not yet emitted)",
+                        node.name,
+                        node.op.name()
+                    )))
+                }
+                _ => unreachable!(),
+            };
+            vec![kernels::elementwise_binary(mach, kc, kind, len, addr(0)?, addr(1)?, out_addr, precision)?]
+        }
+        OpKind::Relu => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Relu, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Relu6 => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Relu6, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Sigmoid => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Sigmoid, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Exp => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Exp, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Neg => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Neg, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Abs => vec![kernels::elementwise_unary(
+            mach, kc, kernels::UnaryKind::Abs, numel(&out_dims), addr(0)?, out_addr, precision,
+        )?],
+        OpKind::Gelu => vec![kernels_nn::gelu_or_tanh(mach, kc, true, numel(&out_dims), addr(0)?, out_addr)?],
+        OpKind::Tanh => vec![kernels_nn::gelu_or_tanh(mach, kc, false, numel(&out_dims), addr(0)?, out_addr)?],
+        OpKind::Softmax => {
+            let x = in_dims(0)?;
+            let n = *x.last().unwrap();
+            vec![kernels::softmax(mach, kc, numel(&x) / n, n, addr(0)?, out_addr)?]
+        }
+        OpKind::LayerNormalization => {
+            let x = in_dims(0)?;
+            let n = *x.last().unwrap();
+            let rows = numel(&x) / n;
+            vec![kernels::layernorm(mach, kc, rows, n, addr(0)?, addr(1)?, addr(2)?, out_addr)?]
+        }
+        OpKind::BatchNormalization => {
+            let x = in_dims(0)?;
+            let c = x[1];
+            let inner: usize = x[2..].iter().product::<usize>().max(1);
+            // N folded into per-channel rows via repeat: emit per-batch.
+            let mut arts = Vec::new();
+            let batch = x[0];
+            let plane = c * inner * 4;
+            for bi in 0..batch {
+                arts.push(kernels_nn::batchnorm(
+                    mach,
+                    kc,
+                    c,
+                    inner,
+                    addr(0)? + (bi * plane) as u32,
+                    addr(1)?,
+                    addr(2)?,
+                    addr(3)?,
+                    addr(4)?,
+                    out_addr + (bi * plane) as u32,
+                )?);
+            }
+            arts
+        }
+        OpKind::MaxPool | OpKind::AveragePool => {
+            let x = in_dims(0)?;
+            let k = attr_ints(&node.attrs, "kernel_shape", &[2, 2]);
+            let strides = attr_ints(&node.attrs, "strides", &k.clone());
+            let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+            let d = kernels_nn::Conv2dDesc {
+                n: x[0],
+                cin: x[1],
+                h: x[2],
+                w: x[3],
+                cout: x[1],
+                kh: k[0] as usize,
+                kw: k[1] as usize,
+                stride: strides[0] as usize,
+                pad: pads[0] as usize,
+                groups: 1,
+            };
+            vec![kernels_nn::pool2d(mach, kc, d, node.op == OpKind::MaxPool, addr(0)?, out_addr)?]
+        }
+        OpKind::GlobalAveragePool => {
+            let x = in_dims(0)?;
+            let rows = x[0] * x[1];
+            let cols: usize = x[2..].iter().product::<usize>().max(1);
+            vec![kernels_nn::rowwise_mean(mach, kc, rows, cols, addr(0)?, out_addr)?]
+        }
+        OpKind::ReduceMean => {
+            let x = in_dims(0)?;
+            let axes = attr_ints(&node.attrs, "axes", &[]);
+            if x.len() == 3 && axes == vec![1] {
+                vec![kernels_nn::reduce_mean_mid(mach, kc, x[0], x[1], x[2], addr(0)?, out_addr)?]
+            } else if axes.iter().map(|&a| a as usize).eq(x.len() - 1..x.len()) {
+                let n = *x.last().unwrap();
+                vec![kernels_nn::rowwise_mean(mach, kc, numel(&x) / n, n, addr(0)?, out_addr)?]
+            } else {
+                return Err(Error::Codegen(format!(
+                    "node '{}': ReduceMean over axes {:?} not lowered",
+                    node.name, axes
+                )));
+            }
+        }
+        OpKind::ReduceSum => {
+            let x = in_dims(0)?;
+            vec![kernels::reduce_sum(mach, kc, numel(&x), addr(0)?, out_addr, precision)?]
+        }
+        OpKind::Transpose => {
+            let x = in_dims(0)?;
+            let perm = attr_ints(&node.attrs, "perm", &[]);
+            if x.len() == 3 && perm == vec![0, 2, 1] {
+                vec![kernels_nn::transpose_mid(mach, kc, x[0], x[1], x[2], addr(0)?, out_addr)?]
+            } else if x.len() == 2 {
+                vec![kernels_nn::transpose_mid(mach, kc, 1, x[0], x[1], addr(0)?, out_addr)?]
+            } else {
+                return Err(Error::Codegen(format!(
+                    "node '{}': transpose perm {:?} not lowered",
+                    node.name, perm
+                )));
+            }
+        }
+        OpKind::Gather => {
+            let table = in_dims(0)?;
+            let idx = in_dims(1)?;
+            vec![kernels::gather_rows(
+                mach,
+                kc,
+                numel(&idx),
+                table[1..].iter().product::<usize>().max(1),
+                addr(0)?,
+                addr(1)?,
+                out_addr,
+            )?]
+        }
+        OpKind::Attention => {
+            // x, wq, wk, wv, wo. Projections into scratch q/k/v, core, out proj.
+            let x = in_dims(0)?;
+            let (b, s, d) = (x[0], x[1], x[2]);
+            let heads = attr_int(&node.attrs, "num_heads", 1) as usize;
+            let scratch = plan
+                .scratch_of(nid)
+                .ok_or_else(|| Error::Backend(format!("node '{}' missing scratch", node.name)))?;
+            let bsd = (b * s * d * 4) as u32;
+            let (q_addr, k_addr, v_addr) = (scratch, scratch + bsd, scratch + 2 * bsd);
+            let scores_addr = scratch + 3 * bsd;
+            let m = b * s;
+            let mut arts = vec![
+                kernels::matmul(mach, kc, m, d, d, addr(0)?, addr(1)?, q_addr, precision)?,
+                kernels::matmul(mach, kc, m, d, d, addr(0)?, addr(2)?, k_addr, precision)?,
+                kernels::matmul(mach, kc, m, d, d, addr(0)?, addr(3)?, v_addr, precision)?,
+            ];
+            // Core writes ctx back into q buffer (q is dead after scores).
+            // Separate ctx region would need more scratch; reuse v? ctx and v
+            // overlap in time — use the scores scratch ordering: ctx -> k
+            // buffer (dead after scores are computed row by row? No — k is
+            // read during the scores pass only, ctx written after; but our
+            // fused kernel interleaves per (b,h,i): scores for row i use k,
+            // then ctx row i is written... k still needed for next i. Use a
+            // dedicated ctx: reuse q buffer, since q row i is only read in
+            // the scores pass of row i... also interleaved. Safe choice: v is
+            // needed in ctx pass; q is read only in the scores pass of each
+            // row, ctx[i] written after scores[i] done; ctx[i] = out rows of
+            // q[i]? q[i] is not read again after row i's scores pass -> but
+            // rows i+1.. still read q rows i+1... ctx writes only to row i.
+            // Writing ctx row i into q row i is safe: q row i is never read
+            // again (scores pass of row i is complete before ctx row i is
+            // written, later rows read q rows > i).
+            arts.push(kernels_attn::attention_core(
+                mach, kc, b, s, d, heads, q_addr, k_addr, v_addr, scores_addr, q_addr,
+            )?);
+            // Out projection: out = ctx(q buffer) @ wo.
+            arts.push(kernels::matmul(mach, kc, m, d, d, q_addr, addr(4)?, out_addr, precision)?);
+            arts
+        }
+        OpKind::Concat => {
+            // Sequential copies (axis-0-contiguous only).
+            let mut arts = Vec::new();
+            let mut off = 0u32;
+            for (i, _) in node.inputs.iter().enumerate() {
+                let len = numel(&in_dims(i)?);
+                arts.push(kernels::copy(mach, kc, len, addr(i)?, out_addr + off)?);
+                off += (len * 4) as u32;
+            }
+            arts
+        }
+        OpKind::QuantizeLinear | OpKind::FakeQuant | OpKind::DynamicQuantizeLinear | OpKind::BinaryQuantize => {
+            // QDQ at the datapath is a scale+round; modeled as a scale pass.
+            let len = numel(&out_dims);
+            vec![kernels::elementwise_unary(
+                mach,
+                kc,
+                kernels::UnaryKind::Scale { mul_bits: 1.0f32.to_bits(), add_bits: 0 },
+                len,
+                addr(0)?,
+                out_addr,
+                precision,
+            )?]
+        }
+        other => {
+            return Err(Error::Codegen(format!(
+                "node '{}': no lowering for {} — {} ops lower today",
+                node.name,
+                other.name(),
+                "38"
+            )))
+        }
+    })
+}
+
+/// Broadcast add where the rhs tile repeats: out[i] = a[i] + b[i % blen].
+#[allow(clippy::too_many_arguments)]
+fn lower_broadcast_add(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    node: &Node,
+    len: usize,
+    blen: usize,
+    a_addr: u32,
+    b_addr: u32,
+    out_addr: u32,
+    precision: DType,
+) -> Result<Vec<KernelArtifact>> {
+    if node.op != OpKind::Add {
+        return Err(Error::Codegen(format!(
+            "node '{}': broadcast only lowered for Add",
+            node.name
+        )));
+    }
+    // Emit one elementwise-add per repeat block.
+    let mut arts = Vec::new();
+    for r in 0..(len / blen) {
+        let off = (r * blen * 4) as u32;
+        arts.push(kernels::elementwise_binary(
+            mach,
+            kc,
+            kernels::BinKind::Add,
+            blen,
+            a_addr + off,
+            b_addr,
+            out_addr + off,
+            precision,
+        )?);
+    }
+    Ok(arts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::memplan;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::exec::Executor;
+    use crate::ir::tensor::Tensor;
+    use crate::isa::encode::encode_all;
+    use crate::sim::machine::Machine;
+    use crate::sim::MachineConfig;
+
+    /// End-to-end: compile a graph, load weights+inputs into the machine,
+    /// run the generated binary, compare against the IR executor.
+    fn roundtrip(g: &Graph, inputs: &[Tensor], tol: f32) {
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(g, 1 << 30, 2 << 30).unwrap();
+        let prog = lower_graph(g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        let mut m = Machine::new(mach);
+        // Load weights.
+        for (tid, init) in &g.initializers {
+            let t = init.materialize();
+            m.write_f32_slice(plan.addr_of(*tid).unwrap(), &t.data).unwrap();
+        }
+        // Load inputs (I32 inputs — e.g. token ids — are stored as raw ints;
+        // the IR executor carries them as f32 values).
+        for (tid, t) in g.inputs.iter().zip(inputs) {
+            let base = plan.addr_of(*tid).unwrap();
+            if g.info(*tid).dtype == DType::I32 {
+                for (i, v) in t.data.iter().enumerate() {
+                    m.store_u32(base + (i * 4) as u32, *v as i32 as u32).unwrap();
+                }
+            } else {
+                m.write_f32_slice(base, &t.data).unwrap();
+            }
+        }
+        m.max_instret = 2_000_000_000;
+        m.run(&encode_all(&prog.asm).unwrap()).unwrap();
+        // Reference.
+        let want = Executor::new().run(g, inputs).unwrap();
+        for (out_t, want_t) in g.outputs.iter().zip(&want) {
+            let got = m
+                .read_f32_slice(plan.addr_of(*out_t).unwrap(), want_t.numel())
+                .unwrap();
+            for (i, (a, b)) in got.iter().zip(&want_t.data).enumerate() {
+                assert!(
+                    (a - b).abs() < tol * b.abs().max(1.0),
+                    "output {} elem {i}: {a} vs {b}",
+                    out_t.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_end_to_end() {
+        let g = prepare(model_zoo::mlp(&[16, 32, 8], 2)).unwrap();
+        let mut x = Tensor::zeros(&[2, 16]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 7) as f32 - 3.0) / 3.0;
+        }
+        roundtrip(&g, &[x], 1e-3);
+    }
+
+    #[test]
+    fn small_convnet_end_to_end() {
+        use crate::ir::ops::{AttrValue, Attrs};
+        use crate::ir::shape::Shape;
+        use crate::ir::tensor::Initializer;
+        let mut g = Graph::new("convnet");
+        let x = g.input("x", Shape::fixed(&[1, 2, 8, 8]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 2, 3, 3], 5, 0.2));
+        let mut attrs = Attrs::new();
+        attrs.insert("strides".into(), AttrValue::Ints(vec![1, 1]));
+        attrs.insert("pads".into(), AttrValue::Ints(vec![1, 1]));
+        let c = g.node(OpKind::Conv, "c", &[x, w], attrs);
+        let r = g.node(OpKind::Relu, "r", &[c], crate::ir::ops::Attrs::new());
+        let mut pattrs = crate::ir::ops::Attrs::new();
+        pattrs.insert("kernel_shape".into(), AttrValue::Ints(vec![2, 2]));
+        let p = g.node(OpKind::MaxPool, "p", &[r], pattrs);
+        g.outputs.push(p);
+        let g = prepare(g).unwrap();
+        let mut x = Tensor::zeros(&[1, 2, 8, 8]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 13 % 11) as f32 - 5.0) / 5.0;
+        }
+        roundtrip(&g, &[x], 1e-3);
+    }
+
+    #[test]
+    fn bert_tiny_end_to_end() {
+        let g = prepare(model_zoo::bert_tiny(1, 8)).unwrap();
+        let ids = Tensor::new(vec![1, 8], (0..8).map(|i| (i * 37 % 100) as f32).collect());
+        roundtrip(&g, &[ids], 5e-2);
+    }
+
+    #[test]
+    fn resnet_cifar_compiles_and_counts() {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let prog = lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        assert!(prog.instr_count() > 500, "{}", prog.instr_count());
+        assert!(prog.flops > 1_000_000);
+        // Every kernel's nest must be non-trivial.
+        for (_, k) in &prog.kernels {
+            assert!(k.nest.instr_count() > 0, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn zoo_models_all_lower() {
+        // Full-scale paper models must lower (no execution — just codegen).
+        let mach = MachineConfig::xgen_asic();
+        for (name, g) in model_zoo::paper_models() {
+            let g = prepare(g).unwrap();
+            let plan = memplan::plan(&g, 1 << 30, 2 << 30)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let prog = lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(prog.instr_count() > 1000, "{name}: {}", prog.instr_count());
+        }
+    }
+}

@@ -1,0 +1,1266 @@
+//! Kernel library: every operator category lowers through one of these
+//! emitters. Each kernel returns a [`KernelArtifact`] whose `asm` is real,
+//! executable RV32I+RVV code (validated on the functional machine against
+//! the IR executor) and whose `nest`/`mem` profiles drive the analytic
+//! timing model at zoo scale.
+//!
+//! Register conventions (see `isa::regs`): a0-a5 carry base addresses and
+//! extents (materialized with `li` by the caller or `graphgen`), t0-t6 and
+//! s2+ are loop counters/pointers, f0 holds 0.0, v8+ are accumulators,
+//! v16+ are streamed operands.
+
+use crate::codegen::emitter::Emitter;
+use crate::codegen::{KernelArtifact, KernelConfig};
+use crate::ir::dtype::DType;
+use crate::isa::{regs, Instr, Op, OpClass};
+use crate::sim::cache::{analytic_hit_rates, tiling_effectiveness};
+use crate::sim::timing::{InstrMix, LoopNest, MemProfile};
+use crate::sim::MachineConfig;
+use crate::util::error::Result;
+
+// Register roles.
+const A: u8 = regs::ARG0; // a0: first operand base
+const B: u8 = regs::ARG1; // a1: second operand base
+const C: u8 = regs::ARG2; // a2: output base
+const D: u8 = regs::ARG3; // a3: aux operand base
+const T0: u8 = regs::T0;
+const T1: u8 = regs::T1;
+const T2: u8 = regs::T2;
+const T3: u8 = regs::T3;
+const T4: u8 = regs::T4;
+const T5: u8 = regs::T5;
+const S2: u8 = 18;
+const S3: u8 = 19;
+const S4: u8 = 20;
+
+
+fn mem_profile(
+    mach: &MachineConfig,
+    load_bytes: u64,
+    store_bytes: u64,
+    working_set: usize,
+    sequential: bool,
+    tile_bytes: usize,
+) -> MemProfile {
+    let eff = tiling_effectiveness(&mach.caches, tile_bytes);
+    MemProfile {
+        load_bytes,
+        store_bytes,
+        level_hit_rates: analytic_hit_rates(&mach.caches, working_set, sequential, eff),
+    }
+}
+
+fn esize(dt: DType) -> u64 {
+    (dt.bits() as u64 / 8).max(1)
+}
+
+/// vsetvli helper.
+fn vsetvli(e: &mut Emitter, rd: u8, avl_reg: u8, lmul: usize) {
+    let mut i = Instr::new(Op::Vsetvli);
+    i.rd = rd;
+    i.rs1 = avl_reg;
+    i.rs3 = lmul.trailing_zeros() as u8;
+    e.push(i);
+}
+
+fn vle32(e: &mut Emitter, vd: u8, addr_reg: u8) {
+    let mut i = Instr::new(Op::Vle32);
+    i.rd = vd;
+    i.rs1 = addr_reg;
+    e.push(i);
+}
+
+fn vse32(e: &mut Emitter, vs: u8, addr_reg: u8) {
+    let mut i = Instr::new(Op::Vse32);
+    i.rd = vs;
+    i.rs1 = addr_reg;
+    e.push(i);
+}
+
+// ---------------------------------------------------------------------------
+// MatMul: C[M,N] += A[M,K] * B[K,N]  (row-major, f32 storage)
+// ---------------------------------------------------------------------------
+
+/// Vectorized matmul kernel. Expects a0=A, a1=B, a2=C (absolute addresses
+/// are loaded by the kernel itself via `li` when `addrs` is given).
+///
+/// Structure (vector path):
+/// ```text
+/// for i in 0..M:
+///   for j0 in 0..N step VL*LMUL:
+///     vl = vsetvli(N - j0)
+///     acc = vfmv 0
+///     aptr = A + i*K*4 ; bptr = B + j0*4
+///     for kk in 0..K (unrolled):
+///       f1 = flw aptr ; v16 = vle32 bptr
+///       vfmacc.vf acc, f1, v16
+///       aptr += 4 ; bptr += N*4
+///     vse32 acc -> C + (i*N + j0)*4
+/// ```
+pub fn matmul(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    a_addr: u32,
+    b_addr: u32,
+    c_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    matmul_bias(mach, kc, m, n, k, a_addr, b_addr, None, c_addr, dt)
+}
+
+/// MatMul with an optional fused per-column bias: C[i,j] = A·B + bias[j].
+/// Gemm/Linear lower here (the bias initializes the accumulator, saving a
+/// separate elementwise pass over C).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    a_addr: u32,
+    b_addr: u32,
+    bias_addr: Option<u32>,
+    c_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    let unroll = if k % kc.unroll == 0 { kc.unroll } else { 1 };
+    if mach.has_vector {
+        e.li(A, a_addr as i32);
+        e.li(B, b_addr as i32);
+        e.li(C, c_addr as i32);
+        // f0 must be 0.0 for the accumulator splat — never assume register
+        // state across kernels (attention_core clobbers f0).
+        e.push(Instr::r(Op::FcvtSW, 0, regs::ZERO, 0));
+        e.push(Instr::r(Op::Xor, S2, S2, S2)); // i = 0
+        let i_loop = e.here();
+        {
+            e.push(Instr::r(Op::Xor, S3, S3, S3)); // j0 = 0
+            let j_loop = e.here();
+            {
+                // avl = N - j0 ; vl = vsetvli(avl)
+                e.li(T0, n as i32);
+                e.push(Instr::r(Op::Sub, T0, T0, S3));
+                vsetvli(&mut e, T1, T0, kc.lmul);
+                // acc (v8 group) = bias[j0..] or 0
+                match bias_addr {
+                    Some(ba) => {
+                        e.li(T5, ba as i32);
+                        e.push(Instr::i(Op::Slli, T4, S3, 2));
+                        e.push(Instr::r(Op::Add, T5, T5, T4));
+                        vle32(&mut e, 8, T5);
+                    }
+                    None => e.push(Instr::r(Op::VfmvVF, 8, 0, 0)), // f0 == 0.0
+                }
+                // aptr = A + i*K*4
+                e.li(T2, (k * 4) as i32);
+                e.push(Instr::r(Op::Mul, T2, S2, T2));
+                e.push(Instr::r(Op::Add, T2, A, T2));
+                // bptr = B + j0*4
+                e.push(Instr::i(Op::Slli, T3, S3, 2));
+                e.push(Instr::r(Op::Add, T3, B, T3));
+                // k loop
+                e.push(Instr::r(Op::Xor, S4, S4, S4));
+                let k_loop = e.here();
+                for _ in 0..unroll {
+                    e.push(Instr::i(Op::Flw, 1, T2, 0));
+                    vle32(&mut e, 16, T3);
+                    e.push(Instr::r(Op::VfmaccVF, 8, 1, 16));
+                    e.push(Instr::i(Op::Addi, T2, T2, 4));
+                    e.addi_big(T3, T3, (n * 4) as i32);
+                }
+                e.push(Instr::i(Op::Addi, S4, S4, unroll as i32));
+                e.li(T4, k as i32);
+                e.branch(Op::Blt, S4, T4, k_loop);
+                // store: C + (i*N + j0)*4
+                e.li(T5, n as i32);
+                e.push(Instr::r(Op::Mul, T5, S2, T5));
+                e.push(Instr::r(Op::Add, T5, T5, S3));
+                e.push(Instr::i(Op::Slli, T5, T5, 2));
+                e.push(Instr::r(Op::Add, T5, C, T5));
+                vse32(&mut e, 8, T5);
+                // j0 += vl
+                e.push(Instr::r(Op::Add, S3, S3, T1));
+            }
+            e.li(T0, n as i32);
+            e.branch(Op::Blt, S3, T0, j_loop);
+            e.push(Instr::i(Op::Addi, S2, S2, 1));
+        }
+        e.li(T0, m as i32);
+        e.branch(Op::Blt, S2, T0, i_loop);
+    } else {
+        // Scalar path (CPU baseline): fmadd inner loop.
+        e.li(A, a_addr as i32);
+        e.li(B, b_addr as i32);
+        e.li(C, c_addr as i32);
+        e.push(Instr::r(Op::Xor, S2, S2, S2)); // i
+        let i_loop = e.here();
+        {
+            e.push(Instr::r(Op::Xor, S3, S3, S3)); // j
+            let j_loop = e.here();
+            {
+                // f2 = bias[j] or 0 accumulator
+                match bias_addr {
+                    Some(ba) => {
+                        e.li(T5, ba as i32);
+                        e.push(Instr::i(Op::Slli, T4, S3, 2));
+                        e.push(Instr::r(Op::Add, T5, T5, T4));
+                        e.push(Instr::i(Op::Flw, 2, T5, 0));
+                    }
+                    None => e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0)),
+                }
+                e.li(T2, (k * 4) as i32);
+                e.push(Instr::r(Op::Mul, T2, S2, T2));
+                e.push(Instr::r(Op::Add, T2, A, T2)); // aptr
+                e.push(Instr::i(Op::Slli, T3, S3, 2));
+                e.push(Instr::r(Op::Add, T3, B, T3)); // bptr
+                e.push(Instr::r(Op::Xor, S4, S4, S4));
+                let k_loop = e.here();
+                e.push(Instr::i(Op::Flw, 0, T2, 0));
+                e.push(Instr::i(Op::Flw, 1, T3, 0));
+                e.push(Instr::r4(Op::FmaddS, 2, 0, 1, 2));
+                e.push(Instr::i(Op::Addi, T2, T2, 4));
+                e.addi_big(T3, T3, (n * 4) as i32);
+                e.push(Instr::i(Op::Addi, S4, S4, 1));
+                e.li(T4, k as i32);
+                e.branch(Op::Blt, S4, T4, k_loop);
+                // store
+                e.li(T5, n as i32);
+                e.push(Instr::r(Op::Mul, T5, S2, T5));
+                e.push(Instr::r(Op::Add, T5, T5, S3));
+                e.push(Instr::i(Op::Slli, T5, T5, 2));
+                e.push(Instr::r(Op::Add, T5, C, T5));
+                e.push(Instr::s(Op::Fsw, T5, 2, 0));
+                e.push(Instr::i(Op::Addi, S3, S3, 1));
+            }
+            e.li(T0, n as i32);
+            e.branch(Op::Blt, S3, T0, j_loop);
+            e.push(Instr::i(Op::Addi, S2, S2, 1));
+        }
+        e.li(T0, m as i32);
+        e.branch(Op::Blt, S2, T0, i_loop);
+    }
+
+    // -- analytic profiles ---------------------------------------------------
+    let es = esize(dt);
+    // Narrow elements pack more lanes per vector register (256-bit VLEN =
+    // 8 f32 or 32 int8 lanes): quantized kernels amortize ALL per-group
+    // work over proportionally more elements.
+    let lanes = mach.lanes() * kc.lmul * (32 / (dt.bits() as usize).max(1)).max(1);
+    let tile_m = kc.tile_m.min(m.max(1));
+    let tile_n = kc.tile_n.min(n.max(1));
+    let tile_k = kc.tile_k.min(k.max(1));
+    // Tiled traffic: A re-read per N-tile, B re-read per M-tile, C once.
+    let n_tiles_n = n.div_ceil(tile_n) as u64;
+    let n_tiles_m = m.div_ceil(tile_m) as u64;
+    let load_bytes = (m * k) as u64 * es * n_tiles_n + (k * n) as u64 * es * n_tiles_m;
+    let store_bytes = (m * n) as u64 * es;
+    let tile_bytes = ((tile_m * tile_k + tile_k * tile_n + tile_m * tile_n) as u64 * es) as usize;
+    let working_set = ((m * k + k * n + m * n) as u64 * es) as usize;
+
+    let nest = if mach.has_vector {
+        let mut inner = InstrMix::default();
+        inner.add(OpClass::Load, 1); // flw a
+        inner.add(OpClass::VLoad, 1); // vle32 b
+        inner.add(OpClass::VFma, 1);
+        inner.add(OpClass::Alu, 2); // pointer bumps
+        let k_nest = LoopNest::leaf((k / unroll).max(1) as u64, {
+            let mut m2 = InstrMix::default();
+            for (c, n_) in inner.counts {
+                m2.add(c, n_ * unroll as u64);
+            }
+            m2
+        }, 3);
+        let mut j_mix = InstrMix::default();
+        j_mix.add(OpClass::VSet, 1);
+        j_mix.add(OpClass::VAlu, 1); // vfmv
+        j_mix.add(OpClass::VStore, 1);
+        j_mix.add(OpClass::Alu, 8);
+        j_mix.add(OpClass::Mul, 1);
+        let j_nest = LoopNest {
+            trip: n.div_ceil(lanes) as u64,
+            body: j_mix,
+            children: vec![k_nest],
+            overhead: 3,
+        };
+        LoopNest { trip: m as u64, body: InstrMix::default(), children: vec![j_nest], overhead: 3 }
+    } else {
+        let mut inner = InstrMix::default();
+        inner.add(OpClass::Load, 2);
+        inner.add(OpClass::FMa, 1);
+        inner.add(OpClass::Alu, 2);
+        let k_nest = LoopNest::leaf(k as u64, inner, 3);
+        let mut j_mix = InstrMix::default();
+        j_mix.add(OpClass::Store, 1);
+        j_mix.add(OpClass::Alu, 8);
+        j_mix.add(OpClass::Mul, 1);
+        let j_nest = LoopNest { trip: n as u64, body: j_mix, children: vec![k_nest], overhead: 3 };
+        LoopNest { trip: m as u64, body: InstrMix::default(), children: vec![j_nest], overhead: 3 }
+    };
+
+    Ok(KernelArtifact {
+        name: format!("matmul_{m}x{n}x{k}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(mach, load_bytes, store_bytes, working_set, true, tile_bytes),
+        flops: 2 * (m * n * k) as u64,
+        config: kc,
+        dtype: dt,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels
+// ---------------------------------------------------------------------------
+
+/// Binary elementwise kind supported by the vector path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinKind {
+    Add,
+    Sub,
+    Mul,
+    Max,
+}
+
+/// C[len] = A[len] (op) B[len], vectorized with the configured LMUL.
+pub fn elementwise_binary(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    kind: BinKind,
+    len: usize,
+    a_addr: u32,
+    b_addr: u32,
+    c_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    let vop = match kind {
+        BinKind::Add => Op::VfaddVV,
+        BinKind::Sub => Op::VfsubVV,
+        BinKind::Mul => Op::VfmulVV,
+        BinKind::Max => Op::VfmaxVV,
+    };
+    if mach.has_vector {
+        e.li(A, a_addr as i32);
+        e.li(B, b_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32); // remaining
+        let loop_top = e.here();
+        vsetvli(&mut e, T1, S2, kc.lmul);
+        vle32(&mut e, 16, A);
+        vle32(&mut e, 24, B);
+        e.push(Instr::r(vop, 8, 16, 24));
+        vse32(&mut e, 8, C);
+        // advance pointers by vl*4
+        e.push(Instr::i(Op::Slli, T2, T1, 2));
+        e.push(Instr::r(Op::Add, A, A, T2));
+        e.push(Instr::r(Op::Add, B, B, T2));
+        e.push(Instr::r(Op::Add, C, C, T2));
+        e.push(Instr::r(Op::Sub, S2, S2, T1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    } else {
+        let fop = match kind {
+            BinKind::Add => Op::FaddS,
+            BinKind::Sub => Op::FsubS,
+            BinKind::Mul => Op::FmulS,
+            BinKind::Max => Op::FmaxS,
+        };
+        e.li(A, a_addr as i32);
+        e.li(B, b_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32);
+        let loop_top = e.here();
+        e.push(Instr::i(Op::Flw, 0, A, 0));
+        e.push(Instr::i(Op::Flw, 1, B, 0));
+        e.push(Instr::r(fop, 2, 0, 1));
+        e.push(Instr::s(Op::Fsw, C, 2, 0));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, B, B, 4));
+        e.push(Instr::i(Op::Addi, C, C, 4));
+        e.push(Instr::i(Op::Addi, S2, S2, -1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    }
+
+    let es = esize(dt);
+    let lanes = mach.lanes() * kc.lmul * (32 / (dt.bits() as usize).max(1)).max(1);
+    let nest = {
+        let mut mix = InstrMix::default();
+        if mach.has_vector {
+            mix.add(OpClass::VSet, 1);
+            mix.add(OpClass::VLoad, 2);
+            mix.add(OpClass::VAlu, 1);
+            mix.add(OpClass::VStore, 1);
+            mix.add(OpClass::Alu, 5);
+            LoopNest::leaf(len.div_ceil(lanes) as u64, mix, 1)
+        } else {
+            mix.add(OpClass::Load, 2);
+            mix.add(OpClass::FAlu, 1);
+            mix.add(OpClass::Store, 1);
+            mix.add(OpClass::Alu, 4);
+            LoopNest::leaf(len as u64, mix, 1)
+        }
+    };
+    Ok(KernelArtifact {
+        name: format!("ew_{kind:?}_{len}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(mach, 2 * len as u64 * es, len as u64 * es, 3 * len * es as usize, true, 0),
+        flops: len as u64,
+        config: kc,
+        dtype: dt,
+    })
+}
+
+/// Scalar-activation kind (lowered with scalar float + custom instrs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryKind {
+    Relu,
+    Relu6,
+    Sigmoid,
+    Exp,
+    Rsqrt,
+    Neg,
+    Abs,
+    Scale { mul_bits: u32, add_bits: u32 },
+}
+
+/// C[len] = f(A[len]).
+pub fn elementwise_unary(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    kind: UnaryKind,
+    len: usize,
+    a_addr: u32,
+    c_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    // ReLU has a fully-vector path (vfmax with a zero group).
+    let vector_relu = matches!(kind, UnaryKind::Relu) && mach.has_vector;
+    if vector_relu {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.push(Instr::r(Op::FcvtSW, 0, regs::ZERO, 0)); // f0 = 0.0 for the zero splat
+        e.li(S2, len as i32);
+        let loop_top = e.here();
+        vsetvli(&mut e, T1, S2, kc.lmul);
+        e.push(Instr::r(Op::VfmvVF, 24, 0, 0)); // zeros
+        vle32(&mut e, 16, A);
+        e.push(Instr::r(Op::VfmaxVV, 8, 16, 24));
+        vse32(&mut e, 8, C);
+        e.push(Instr::i(Op::Slli, T2, T1, 2));
+        e.push(Instr::r(Op::Add, A, A, T2));
+        e.push(Instr::r(Op::Add, C, C, T2));
+        e.push(Instr::r(Op::Sub, S2, S2, T1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    } else {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32);
+        // constants
+        match kind {
+            UnaryKind::Relu6 => {
+                e.li(T3, 6f32.to_bits() as i32);
+                e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
+                e.push(Instr::i(Op::Flw, 3, regs::SP, -4)); // f3 = 6.0
+            }
+            UnaryKind::Sigmoid => {
+                e.li(T3, 1f32.to_bits() as i32);
+                e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
+                e.push(Instr::i(Op::Flw, 3, regs::SP, -4)); // f3 = 1.0
+            }
+            UnaryKind::Scale { mul_bits, add_bits } => {
+                e.li(T3, mul_bits as i32);
+                e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
+                e.push(Instr::i(Op::Flw, 3, regs::SP, -4)); // f3 = mul
+                e.li(T3, add_bits as i32);
+                e.push(Instr::s(Op::Sw, regs::SP, T3, -8));
+                e.push(Instr::i(Op::Flw, 4, regs::SP, -8)); // f4 = add
+            }
+            _ => {}
+        }
+        let loop_top = e.here();
+        e.push(Instr::i(Op::Flw, 1, A, 0));
+        match kind {
+            UnaryKind::Relu => {
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FmaxS, 2, 1, 2));
+            }
+            UnaryKind::Relu6 => {
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FmaxS, 2, 1, 2));
+                e.push(Instr::r(Op::FminS, 2, 2, 3));
+            }
+            UnaryKind::Sigmoid => {
+                // 1 / (1 + exp(-x))
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FsubS, 2, 2, 1)); // -x
+                e.push(Instr::r(Op::FexpS, 2, 2, 0));
+                e.push(Instr::r(Op::FaddS, 2, 2, 3)); // 1 + e
+                e.push(Instr::r(Op::FdivS, 2, 3, 2));
+            }
+            UnaryKind::Exp => e.push(Instr::r(Op::FexpS, 2, 1, 0)),
+            UnaryKind::Rsqrt => e.push(Instr::r(Op::FrsqrtS, 2, 1, 0)),
+            UnaryKind::Neg => {
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FsubS, 2, 2, 1));
+            }
+            UnaryKind::Abs => {
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FsubS, 2, 2, 1));
+                e.push(Instr::r(Op::FmaxS, 2, 2, 1));
+            }
+            UnaryKind::Scale { .. } => {
+                // x*mul + add (quant scale / BN fold)
+                e.push(Instr::r4(Op::FmaddS, 2, 1, 3, 4));
+            }
+        }
+        e.push(Instr::s(Op::Fsw, C, 2, 0));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, C, C, 4));
+        e.push(Instr::i(Op::Addi, S2, S2, -1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    }
+
+    let es = esize(dt);
+    let lanes = mach.lanes() * kc.lmul * (32 / (dt.bits() as usize).max(1)).max(1);
+    let mut mix = InstrMix::default();
+    let trip = if vector_relu {
+        mix.add(OpClass::VSet, 1);
+        mix.add(OpClass::VLoad, 1);
+        mix.add(OpClass::VAlu, 2);
+        mix.add(OpClass::VStore, 1);
+        mix.add(OpClass::Alu, 4);
+        len.div_ceil(lanes) as u64
+    } else {
+        mix.add(OpClass::Load, 1);
+        mix.add(OpClass::FAlu, 2);
+        if matches!(kind, UnaryKind::Sigmoid | UnaryKind::Exp | UnaryKind::Rsqrt) {
+            mix.add(OpClass::FCustom, 1);
+        }
+        mix.add(OpClass::Store, 1);
+        mix.add(OpClass::Alu, 3);
+        len as u64
+    };
+    Ok(KernelArtifact {
+        name: format!("un_{}_{len}", unary_name(kind)),
+        asm: e.finish()?,
+        nest: LoopNest::leaf(trip, mix, 1),
+        mem: mem_profile(mach, len as u64 * es, len as u64 * es, 2 * len * es as usize, true, 0),
+        flops: len as u64,
+        config: kc,
+        dtype: dt,
+    })
+}
+
+fn unary_name(k: UnaryKind) -> &'static str {
+    match k {
+        UnaryKind::Relu => "relu",
+        UnaryKind::Relu6 => "relu6",
+        UnaryKind::Sigmoid => "sigmoid",
+        UnaryKind::Exp => "exp",
+        UnaryKind::Rsqrt => "rsqrt",
+        UnaryKind::Neg => "neg",
+        UnaryKind::Abs => "abs",
+        UnaryKind::Scale { .. } => "scale",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduction: c[0] = sum(A[len])
+// ---------------------------------------------------------------------------
+
+pub fn reduce_sum(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    len: usize,
+    a_addr: u32,
+    c_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    if mach.has_vector {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.push(Instr::r(Op::FcvtSW, 0, regs::ZERO, 0)); // f0 = 0.0
+        e.li(S2, len as i32);
+        // v8[0] accumulates across blocks; init 0 via vfmv.
+        e.li(T0, 1);
+        vsetvli(&mut e, T1, T0, 1);
+        e.push(Instr::r(Op::VfmvVF, 8, 0, 0));
+        let loop_top = e.here();
+        vsetvli(&mut e, T1, S2, kc.lmul);
+        vle32(&mut e, 16, A);
+        e.push(Instr::r(Op::VfredsumVS, 8, 8, 16)); // v8[0] += sum(v16)
+        e.push(Instr::i(Op::Slli, T2, T1, 2));
+        e.push(Instr::r(Op::Add, A, A, T2));
+        e.push(Instr::r(Op::Sub, S2, S2, T1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+        // store scalar result
+        e.li(T0, 1);
+        vsetvli(&mut e, T1, T0, 1);
+        vse32(&mut e, 8, C);
+    } else {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32);
+        e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+        let loop_top = e.here();
+        e.push(Instr::i(Op::Flw, 1, A, 0));
+        e.push(Instr::r(Op::FaddS, 2, 2, 1));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, S2, S2, -1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+        e.push(Instr::s(Op::Fsw, C, 2, 0));
+    }
+    let es = esize(dt);
+    let lanes = mach.lanes() * kc.lmul * (32 / (dt.bits() as usize).max(1)).max(1);
+    let mut mix = InstrMix::default();
+    let trip = if mach.has_vector {
+        mix.add(OpClass::VSet, 1);
+        mix.add(OpClass::VLoad, 1);
+        mix.add(OpClass::VRed, 1);
+        mix.add(OpClass::Alu, 3);
+        len.div_ceil(lanes) as u64
+    } else {
+        mix.add(OpClass::Load, 1);
+        mix.add(OpClass::FAlu, 1);
+        mix.add(OpClass::Alu, 2);
+        len as u64
+    };
+    Ok(KernelArtifact {
+        name: format!("redsum_{len}"),
+        asm: e.finish()?,
+        nest: LoopNest::leaf(trip, mix, 1),
+        mem: mem_profile(mach, len as u64 * es, es, len * es as usize, true, 0),
+        flops: len as u64,
+        config: kc,
+        dtype: dt,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Softmax over rows: A[rows, n] -> C[rows, n] (scalar, uses fexp.s)
+// ---------------------------------------------------------------------------
+
+pub fn softmax(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    rows: usize,
+    n: usize,
+    a_addr: u32,
+    c_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, a_addr as i32);
+    e.li(C, c_addr as i32);
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // row
+    let row_loop = e.here();
+    {
+        // pass 1: rowmax -> f3
+        e.push(Instr::i(Op::Flw, 3, A, 0));
+        e.push(Instr::i(Op::Addi, T0, A, 0));
+        e.li(S3, n as i32);
+        let max_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T0, 0));
+        e.push(Instr::r(Op::FmaxS, 3, 3, 1));
+        e.push(Instr::i(Op::Addi, T0, T0, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, max_loop);
+        // pass 2: exp(x - max) -> C, accumulate sum in f4
+        e.push(Instr::r(Op::FcvtSW, 4, regs::ZERO, 0));
+        e.push(Instr::i(Op::Addi, T0, A, 0));
+        e.push(Instr::i(Op::Addi, T1, C, 0));
+        e.li(S3, n as i32);
+        let exp_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T0, 0));
+        e.push(Instr::r(Op::FsubS, 1, 1, 3));
+        e.push(Instr::r(Op::FexpS, 1, 1, 0));
+        e.push(Instr::r(Op::FaddS, 4, 4, 1));
+        e.push(Instr::s(Op::Fsw, T1, 1, 0));
+        e.push(Instr::i(Op::Addi, T0, T0, 4));
+        e.push(Instr::i(Op::Addi, T1, T1, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, exp_loop);
+        // pass 3: divide
+        e.push(Instr::i(Op::Addi, T1, C, 0));
+        e.li(S3, n as i32);
+        let div_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T1, 0));
+        e.push(Instr::r(Op::FdivS, 1, 1, 4));
+        e.push(Instr::s(Op::Fsw, T1, 1, 0));
+        e.push(Instr::i(Op::Addi, T1, T1, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, div_loop);
+        // next row
+        e.addi_big(A, A, (n * 4) as i32);
+        e.addi_big(C, C, (n * 4) as i32);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T0, rows as i32);
+    e.branch(Op::Blt, S2, T0, row_loop);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 3);
+    mix.add(OpClass::FAlu, 4);
+    mix.add(OpClass::FCustom, 1);
+    mix.add(OpClass::FDiv, 1);
+    mix.add(OpClass::Store, 2);
+    mix.add(OpClass::Alu, 8);
+    let inner = LoopNest::leaf(n as u64, mix, 2);
+    let nest = LoopNest { trip: rows as u64, body: InstrMix::default(), children: vec![inner], overhead: 6 };
+    Ok(KernelArtifact {
+        name: format!("softmax_{rows}x{n}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(
+            mach,
+            3 * (rows * n * 4) as u64,
+            2 * (rows * n * 4) as u64,
+            n * 4,
+            true,
+            0,
+        ),
+        flops: (rows * n * 6) as u64,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm over rows: C = (A - mean) / sqrt(var + eps) * gamma + beta
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    rows: usize,
+    n: usize,
+    a_addr: u32,
+    gamma_addr: u32,
+    beta_addr: u32,
+    c_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, a_addr as i32);
+    e.li(C, c_addr as i32);
+    e.li(D, gamma_addr as i32);
+    e.li(regs::ARG4, beta_addr as i32);
+    // f5 = 1/n, f6 = eps
+    e.li(T3, (1.0f32 / n as f32).to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
+    e.push(Instr::i(Op::Flw, 5, regs::SP, -4));
+    e.li(T3, 1e-5f32.to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T3, -8));
+    e.push(Instr::i(Op::Flw, 6, regs::SP, -8));
+    e.push(Instr::r(Op::Xor, S2, S2, S2));
+    let row_loop = e.here();
+    {
+        // mean -> f3
+        e.push(Instr::r(Op::FcvtSW, 3, regs::ZERO, 0));
+        e.push(Instr::i(Op::Addi, T0, A, 0));
+        e.li(S3, n as i32);
+        let sum_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T0, 0));
+        e.push(Instr::r(Op::FaddS, 3, 3, 1));
+        e.push(Instr::i(Op::Addi, T0, T0, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, sum_loop);
+        e.push(Instr::r(Op::FmulS, 3, 3, 5)); // mean
+        // var -> f4
+        e.push(Instr::r(Op::FcvtSW, 4, regs::ZERO, 0));
+        e.push(Instr::i(Op::Addi, T0, A, 0));
+        e.li(S3, n as i32);
+        let var_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T0, 0));
+        e.push(Instr::r(Op::FsubS, 1, 1, 3));
+        e.push(Instr::r4(Op::FmaddS, 4, 1, 1, 4)); // var += d*d
+        e.push(Instr::i(Op::Addi, T0, T0, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, var_loop);
+        e.push(Instr::r(Op::FmulS, 4, 4, 5)); // var/n
+        e.push(Instr::r(Op::FaddS, 4, 4, 6)); // + eps
+        e.push(Instr::r(Op::FrsqrtS, 4, 4, 0)); // rstd
+        // normalize
+        e.push(Instr::i(Op::Addi, T0, A, 0));
+        e.push(Instr::i(Op::Addi, T1, C, 0));
+        e.push(Instr::i(Op::Addi, T2, D, 0));
+        e.push(Instr::i(Op::Addi, T4, regs::ARG4, 0));
+        e.li(S3, n as i32);
+        let norm_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, T0, 0));
+        e.push(Instr::r(Op::FsubS, 1, 1, 3));
+        e.push(Instr::r(Op::FmulS, 1, 1, 4));
+        e.push(Instr::i(Op::Flw, 2, T2, 0)); // gamma
+        e.push(Instr::i(Op::Flw, 7, T4, 0)); // beta
+        e.push(Instr::r4(Op::FmaddS, 1, 1, 2, 7));
+        e.push(Instr::s(Op::Fsw, T1, 1, 0));
+        e.push(Instr::i(Op::Addi, T0, T0, 4));
+        e.push(Instr::i(Op::Addi, T1, T1, 4));
+        e.push(Instr::i(Op::Addi, T2, T2, 4));
+        e.push(Instr::i(Op::Addi, T4, T4, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, norm_loop);
+        e.addi_big(A, A, (n * 4) as i32);
+        e.addi_big(C, C, (n * 4) as i32);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T0, rows as i32);
+    e.branch(Op::Blt, S2, T0, row_loop);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 4);
+    mix.add(OpClass::FAlu, 4);
+    mix.add(OpClass::FMa, 2);
+    mix.add(OpClass::Store, 1);
+    mix.add(OpClass::Alu, 10);
+    let inner = LoopNest::leaf(n as u64, mix, 2);
+    let nest = LoopNest {
+        trip: rows as u64,
+        body: {
+            let mut m = InstrMix::default();
+            m.add(OpClass::FCustom, 1);
+            m.add(OpClass::FAlu, 4);
+            m
+        },
+        children: vec![inner],
+        overhead: 8,
+    };
+    Ok(KernelArtifact {
+        name: format!("layernorm_{rows}x{n}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(
+            mach,
+            (rows * n * 4 * 3 + rows * n * 8) as u64,
+            (rows * n * 4) as u64,
+            n * 16,
+            true,
+            0,
+        ),
+        flops: (rows * n * 8) as u64,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Plain copy (Reshape/Identity lowering) and strided gather
+// ---------------------------------------------------------------------------
+
+pub fn copy(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    len: usize,
+    a_addr: u32,
+    c_addr: u32,
+) -> Result<KernelArtifact> {
+    // Reuse the vector path of elementwise add-with-zero? Cheaper: vle/vse.
+    let mut e = Emitter::new();
+    if mach.has_vector {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32);
+        let loop_top = e.here();
+        vsetvli(&mut e, T1, S2, kc.lmul);
+        vle32(&mut e, 8, A);
+        vse32(&mut e, 8, C);
+        e.push(Instr::i(Op::Slli, T2, T1, 2));
+        e.push(Instr::r(Op::Add, A, A, T2));
+        e.push(Instr::r(Op::Add, C, C, T2));
+        e.push(Instr::r(Op::Sub, S2, S2, T1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    } else {
+        e.li(A, a_addr as i32);
+        e.li(C, c_addr as i32);
+        e.li(S2, len as i32);
+        let loop_top = e.here();
+        e.push(Instr::i(Op::Lw, T0, A, 0));
+        e.push(Instr::s(Op::Sw, C, T0, 0));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, C, C, 4));
+        e.push(Instr::i(Op::Addi, S2, S2, -1));
+        e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+    }
+    let lanes = mach.lanes() * kc.lmul;
+    let mut mix = InstrMix::default();
+    let trip = if mach.has_vector {
+        mix.add(OpClass::VSet, 1);
+        mix.add(OpClass::VLoad, 1);
+        mix.add(OpClass::VStore, 1);
+        mix.add(OpClass::Alu, 4);
+        len.div_ceil(lanes) as u64
+    } else {
+        mix.add(OpClass::Load, 1);
+        mix.add(OpClass::Store, 1);
+        mix.add(OpClass::Alu, 3);
+        len as u64
+    };
+    Ok(KernelArtifact {
+        name: format!("copy_{len}"),
+        asm: e.finish()?,
+        nest: LoopNest::leaf(trip, mix, 1),
+        mem: mem_profile(mach, (len * 4) as u64, (len * 4) as u64, len * 8, true, 0),
+        flops: 0,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// Row gather: for each of `n_idx` indices (i32 at idx_addr), copy a row of
+/// `row_len` f32 from table_addr to c_addr. Embedding lookups (random access
+/// pattern — exercises the 70% L1 base rate of the cache model).
+pub fn gather_rows(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    n_idx: usize,
+    row_len: usize,
+    table_addr: u32,
+    idx_addr: u32,
+    c_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, table_addr as i32);
+    e.li(B, idx_addr as i32);
+    e.li(C, c_addr as i32);
+    e.li(S2, n_idx as i32);
+    let outer = e.here();
+    e.push(Instr::i(Op::Lw, T0, B, 0)); // index
+    e.li(T1, (row_len * 4) as i32);
+    e.push(Instr::r(Op::Mul, T0, T0, T1));
+    e.push(Instr::r(Op::Add, T0, A, T0)); // src row
+    // inner copy of row_len words
+    e.li(S3, row_len as i32);
+    let inner = e.here();
+    e.push(Instr::i(Op::Lw, T2, T0, 0));
+    e.push(Instr::s(Op::Sw, C, T2, 0));
+    e.push(Instr::i(Op::Addi, T0, T0, 4));
+    e.push(Instr::i(Op::Addi, C, C, 4));
+    e.push(Instr::i(Op::Addi, S3, S3, -1));
+    e.branch(Op::Blt, regs::ZERO, S3, inner);
+    e.push(Instr::i(Op::Addi, B, B, 4));
+    e.push(Instr::i(Op::Addi, S2, S2, -1));
+    e.branch(Op::Blt, regs::ZERO, S2, outer);
+
+    let mut inner_mix = InstrMix::default();
+    inner_mix.add(OpClass::Load, 1);
+    inner_mix.add(OpClass::Store, 1);
+    inner_mix.add(OpClass::Alu, 3);
+    let inner_nest = LoopNest::leaf(row_len as u64, inner_mix, 2);
+    let mut outer_mix = InstrMix::default();
+    outer_mix.add(OpClass::Load, 1);
+    outer_mix.add(OpClass::Mul, 1);
+    outer_mix.add(OpClass::Alu, 4);
+    let nest = LoopNest { trip: n_idx as u64, body: outer_mix, children: vec![inner_nest], overhead: 2 };
+    Ok(KernelArtifact {
+        name: format!("gather_{n_idx}x{row_len}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(
+            mach,
+            (n_idx * (row_len + 1) * 4) as u64,
+            (n_idx * row_len * 4) as u64,
+            n_idx * row_len * 4,
+            false, // random access
+            0,
+        ),
+        flops: 0,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::sim::machine::Machine;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn xgen() -> MachineConfig {
+        MachineConfig::xgen_asic()
+    }
+
+    fn run_artifact(m: &mut Machine, art: &KernelArtifact) {
+        let words = encode_all(&art.asm).unwrap();
+        m.run(&words).unwrap();
+    }
+
+    #[test]
+    fn matmul_matches_reference_small() {
+        let mach = xgen();
+        let (mm, nn, kk) = (3, 10, 4);
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..mm * kk).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..kk * nn).map(|_| rng.normal_f32()).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &a).unwrap();
+        m.write_f32_slice(0x2000, &b).unwrap();
+        let art = matmul(&mach, KernelConfig::default(), mm, nn, kk, 0x1000, 0x2000, 0x3000, DType::F32).unwrap();
+        run_artifact(&mut m, &art);
+        let got = m.read_f32_slice(0x3000, mm * nn).unwrap();
+        for i in 0..mm {
+            for j in 0..nn {
+                let want: f32 = (0..kk).map(|x| a[i * kk + x] * b[x * nn + j]).sum();
+                assert!((got[i * nn + j] - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_scalar_path_matches() {
+        let mach = MachineConfig::cpu_a78();
+        let (mm, nn, kk) = (2, 3, 5);
+        let mut rng = Rng::new(2);
+        let a: Vec<f32> = (0..mm * kk).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..kk * nn).map(|_| rng.normal_f32()).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &a).unwrap();
+        m.write_f32_slice(0x2000, &b).unwrap();
+        let art = matmul(&mach, KernelConfig::default(), mm, nn, kk, 0x1000, 0x2000, 0x3000, DType::F32).unwrap();
+        run_artifact(&mut m, &art);
+        let got = m.read_f32_slice(0x3000, mm * nn).unwrap();
+        for i in 0..mm {
+            for j in 0..nn {
+                let want: f32 = (0..kk).map(|x| a[i * kk + x] * b[x * nn + j]).sum();
+                assert!((got[i * nn + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn property_matmul_random_shapes() {
+        forall("matmul kernel vs reference", 12, |rng| {
+            let mach = xgen();
+            let mm = rng.range(1, 5) as usize;
+            let nn = rng.range(1, 20) as usize;
+            let kk = rng.range(1, 9) as usize;
+            let lmul = [1usize, 2][rng.index(2)];
+            let unroll = [1usize, 2, 4][rng.index(3)];
+            let a: Vec<f32> = (0..mm * kk).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..kk * nn).map(|_| rng.normal_f32()).collect();
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &a).unwrap();
+            m.write_f32_slice(0x8000, &b).unwrap();
+            let kc = KernelConfig { lmul, unroll, ..Default::default() };
+            let art = matmul(&mach, kc, mm, nn, kk, 0x1000, 0x8000, 0x20000, DType::F32)
+                .map_err(|e| format!("{e}"))?;
+            let words = encode_all(&art.asm).map_err(|e| format!("{e}"))?;
+            let mut mc = Machine::new(mach);
+            mc.write_f32_slice(0x1000, &a).unwrap();
+            mc.write_f32_slice(0x8000, &b).unwrap();
+            mc.run(&words).map_err(|e| format!("{e}"))?;
+            let got = mc.read_f32_slice(0x20000, mm * nn).unwrap();
+            for i in 0..mm {
+                for j in 0..nn {
+                    let want: f32 = (0..kk).map(|x| a[i * kk + x] * b[x * nn + j]).sum();
+                    if (got[i * nn + j] - want).abs() > 1e-3 {
+                        return Err(format!(
+                            "m={mm} n={nn} k={kk} lmul={lmul} unroll={unroll} at ({i},{j}): {} vs {want}",
+                            got[i * nn + j]
+                        ));
+                    }
+                }
+            }
+            let _ = m;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn elementwise_kinds_match() {
+        let mach = xgen();
+        let len = 37; // non-multiple of lanes: exercises tail handling
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        for (kind, f) in [
+            (BinKind::Add, (|x: f32, y: f32| x + y) as fn(f32, f32) -> f32),
+            (BinKind::Sub, |x, y| x - y),
+            (BinKind::Mul, |x, y| x * y),
+            (BinKind::Max, |x, y| x.max(y)),
+        ] {
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &a).unwrap();
+            m.write_f32_slice(0x2000, &b).unwrap();
+            let art = elementwise_binary(
+                &mach,
+                KernelConfig { lmul: 2, ..Default::default() },
+                kind,
+                len,
+                0x1000,
+                0x2000,
+                0x3000,
+                DType::F32,
+            )
+            .unwrap();
+            run_artifact(&mut m, &art);
+            let got = m.read_f32_slice(0x3000, len).unwrap();
+            for i in 0..len {
+                assert!((got[i] - f(a[i], b[i])).abs() < 1e-5, "{kind:?} at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_sigmoid_match() {
+        let mach = xgen();
+        let len = 21;
+        let mut rng = Rng::new(4);
+        let a: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 3.0).collect();
+        for (kind, f) in [
+            (UnaryKind::Relu, (|x: f32| x.max(0.0)) as fn(f32) -> f32),
+            (UnaryKind::Relu6, |x| x.clamp(0.0, 6.0)),
+            (UnaryKind::Sigmoid, |x| 1.0 / (1.0 + (-x).exp())),
+            (UnaryKind::Exp, |x| x.exp()),
+        ] {
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &a).unwrap();
+            let art = elementwise_unary(&mach, KernelConfig::default(), kind, len, 0x1000, 0x3000, DType::F32).unwrap();
+            run_artifact(&mut m, &art);
+            let got = m.read_f32_slice(0x3000, len).unwrap();
+            for i in 0..len {
+                assert!(
+                    (got[i] - f(a[i])).abs() < 1e-4 * f(a[i]).abs().max(1.0),
+                    "{:?} at {i}: {} vs {}",
+                    kind,
+                    got[i],
+                    f(a[i])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_matches() {
+        let mach = xgen();
+        for len in [1usize, 7, 8, 64, 100] {
+            let mut rng = Rng::new(5);
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &a).unwrap();
+            let art = reduce_sum(&mach, KernelConfig { lmul: 2, ..Default::default() }, len, 0x1000, 0x3000, DType::F32).unwrap();
+            run_artifact(&mut m, &art);
+            let got = m.read_f32_slice(0x3000, 1).unwrap()[0];
+            let want: f32 = a.iter().sum();
+            assert!((got - want).abs() < 1e-3, "len={len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_match() {
+        let mach = xgen();
+        let (rows, n) = (3, 11);
+        let mut rng = Rng::new(6);
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32() * 2.0).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &a).unwrap();
+        let art = softmax(&mach, KernelConfig::default(), rows, n, 0x1000, 0x3000).unwrap();
+        run_artifact(&mut m, &art);
+        let got = m.read_f32_slice(0x3000, rows * n).unwrap();
+        for r in 0..rows {
+            let row = &a[r * n..(r + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+            let s: f32 = exps.iter().sum();
+            for i in 0..n {
+                assert!((got[r * n + i] - exps[i] / s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_matches() {
+        let mach = xgen();
+        let (rows, n) = (2, 16);
+        let mut rng = Rng::new(7);
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32() * 2.0 + 1.0).collect();
+        let gamma: Vec<f32> = (0..n).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect();
+        let beta: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal_f32()).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &a).unwrap();
+        m.write_f32_slice(0x2000, &gamma).unwrap();
+        m.write_f32_slice(0x2800, &beta).unwrap();
+        let art = layernorm(&mach, KernelConfig::default(), rows, n, 0x1000, 0x2000, 0x2800, 0x3000).unwrap();
+        run_artifact(&mut m, &art);
+        let got = m.read_f32_slice(0x3000, rows * n).unwrap();
+        for r in 0..rows {
+            let row = &a[r * n..(r + 1) * n];
+            let mean: f32 = row.iter().sum::<f32>() / n as f32;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+            for i in 0..n {
+                let want = (row[i] - mean) / (var + 1e-5).sqrt() * gamma[i] + beta[i];
+                assert!(
+                    (got[r * n + i] - want).abs() < 2e-3,
+                    "({r},{i}): {} vs {want}",
+                    got[r * n + i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_matches() {
+        let mach = xgen();
+        let (v, d) = (10, 6);
+        let table: Vec<f32> = (0..v * d).map(|i| i as f32).collect();
+        let idx = [3i32, 0, 7];
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &table).unwrap();
+        for (i, &ix) in idx.iter().enumerate() {
+            m.store_u32(0x4000 + (i * 4) as u32, ix as u32).unwrap();
+        }
+        let art = gather_rows(&mach, KernelConfig::default(), idx.len(), d, 0x1000, 0x4000, 0x5000).unwrap();
+        run_artifact(&mut m, &art);
+        let got = m.read_f32_slice(0x5000, idx.len() * d).unwrap();
+        for (i, &ix) in idx.iter().enumerate() {
+            for j in 0..d {
+                assert_eq!(got[i * d + j], table[ix as usize * d + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn copy_roundtrip() {
+        let mach = xgen();
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &a).unwrap();
+        let art = copy(&mach, KernelConfig { lmul: 4, ..Default::default() }, 100, 0x1000, 0x3000).unwrap();
+        run_artifact(&mut m, &art);
+        assert_eq!(m.read_f32_slice(0x3000, 100).unwrap(), a);
+    }
+
+    #[test]
+    fn analytic_nest_tracks_measured_instret() {
+        // The loop-nest instruction count should approximate the functional
+        // machine's retired-instruction count (within 2x — profiles are
+        // summaries, not disassembly).
+        let mach = xgen();
+        let (mm, nn, kk) = (4, 32, 8);
+        let art = matmul(&mach, KernelConfig::default(), mm, nn, kk, 0x1000, 0x4000, 0x8000, DType::F32).unwrap();
+        let mut m = Machine::new(mach);
+        let words = encode_all(&art.asm).unwrap();
+        let stats = m.run(&words).unwrap();
+        let est = art.nest.instr_count();
+        let ratio = est as f64 / stats.instret as f64;
+        assert!((0.5..2.0).contains(&ratio), "est {est} measured {}", stats.instret);
+    }
+
+    #[test]
+    fn tiling_shapes_memory_traffic() {
+        let mach = xgen();
+        let big_tile = KernelConfig { tile_m: 128, tile_n: 128, tile_k: 128, ..Default::default() };
+        let small_tile = KernelConfig { tile_m: 8, tile_n: 8, tile_k: 8, ..Default::default() };
+        let a = matmul(&mach, big_tile, 256, 256, 256, 0, 0, 0, DType::F32).unwrap();
+        let b = matmul(&mach, small_tile, 256, 256, 256, 0, 0, 0, DType::F32).unwrap();
+        // Smaller tiles -> more re-reads -> more traffic.
+        assert!(b.mem.load_bytes > a.mem.load_bytes);
+    }
+}

@@ -1,0 +1,1020 @@
+//! NN-specific kernels: direct convolution (vectorized across output width
+//! when stride is 1), pooling, inference BatchNorm, token/channel
+//! reductions, mid-axis transpose, and the scalar transcendental
+//! activations (GELU/Tanh via the custom `fexp.s`).
+//!
+//! Same contract as [`super::kernels`]: executable asm + analytic profiles.
+
+use crate::codegen::emitter::Emitter;
+use crate::codegen::{KernelArtifact, KernelConfig};
+use crate::ir::dtype::DType;
+use crate::isa::{regs, Instr, Op, OpClass};
+use crate::sim::cache::{analytic_hit_rates, tiling_effectiveness};
+use crate::sim::timing::{InstrMix, LoopNest, MemProfile};
+use crate::sim::MachineConfig;
+use crate::util::error::Result;
+
+const A: u8 = regs::ARG0;
+const B: u8 = regs::ARG1;
+const C: u8 = regs::ARG2;
+const D: u8 = regs::ARG3;
+const E4: u8 = regs::ARG4;
+const E5: u8 = regs::ARG5;
+const T0: u8 = regs::T0;
+const T1: u8 = regs::T1;
+const T2: u8 = regs::T2;
+const T3: u8 = regs::T3;
+const T4: u8 = regs::T4;
+const T5: u8 = regs::T5;
+const S2: u8 = 18;
+const S3: u8 = 19;
+const S4: u8 = 20;
+const S5: u8 = 21;
+const S6: u8 = 22;
+const S7: u8 = 23;
+const S8: u8 = 24;
+const S9: u8 = 25;
+
+fn mem_profile(
+    mach: &MachineConfig,
+    load_bytes: u64,
+    store_bytes: u64,
+    working_set: usize,
+    sequential: bool,
+    tile_bytes: usize,
+) -> MemProfile {
+    let eff = tiling_effectiveness(&mach.caches, tile_bytes);
+    MemProfile {
+        load_bytes,
+        store_bytes,
+        level_hit_rates: analytic_hit_rates(&mach.caches, working_set, sequential, eff),
+    }
+}
+
+/// Shape/stride/padding description for conv and pool kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct Conv2dDesc {
+    pub n: usize,
+    pub cin: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+}
+
+impl Conv2dDesc {
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+    pub fn flops(&self) -> u64 {
+        2 * (self.n * self.cout * self.oh() * self.ow() * (self.cin / self.groups) * self.kh * self.kw)
+            as u64
+    }
+}
+
+/// Direct convolution. x: [N, C, H, W] at a0, w: [F, C/g, kH, kW] at a1,
+/// bias (optional, [F]) at a3, out: [N, F, OH, OW] at a2.
+///
+/// Loop order: n, f, oy, ox / (c, ky, kx) with a scalar FMA accumulator.
+/// Padding handled with bounds checks; grouped/depthwise via `groups`.
+/// The analytic profile models the ASIC's *vectorized-over-OW* schedule
+/// (vfmacc.vf with input-row reuse) — the scalar asm is the numerics oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    d: Conv2dDesc,
+    x_addr: u32,
+    w_addr: u32,
+    bias_addr: Option<u32>,
+    out_addr: u32,
+    dt: DType,
+) -> Result<KernelArtifact> {
+    let (oh, ow) = (d.oh(), d.ow());
+    let cg = d.cin / d.groups; // channels per group
+    let fpg = d.cout / d.groups; // filters per group
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(B, w_addr as i32);
+    e.li(C, out_addr as i32);
+    if let Some(ba) = bias_addr {
+        e.li(D, ba as i32);
+    }
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // ni
+    let n_loop = e.here();
+    {
+        e.push(Instr::r(Op::Xor, S3, S3, S3)); // f
+        let f_loop = e.here();
+        {
+            e.push(Instr::r(Op::Xor, S4, S4, S4)); // oy
+            let oy_loop = e.here();
+            {
+                e.push(Instr::r(Op::Xor, S5, S5, S5)); // ox
+                let ox_loop = e.here();
+                {
+                    // acc f2 = bias[f] or 0
+                    match bias_addr {
+                        Some(_) => {
+                            e.push(Instr::i(Op::Slli, T0, S3, 2));
+                            e.push(Instr::r(Op::Add, T0, D, T0));
+                            e.push(Instr::i(Op::Flw, 2, T0, 0));
+                        }
+                        None => e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0)),
+                    }
+                    // group base channel: gi = f / fpg; c0 = gi * cg
+                    e.li(T0, fpg as i32);
+                    e.push(Instr::r(Op::Div, S6, S3, T0)); // gi
+                    e.li(T0, cg as i32);
+                    e.push(Instr::r(Op::Mul, S6, S6, T0)); // c0
+                    e.push(Instr::r(Op::Xor, S7, S7, S7)); // ci
+                    let c_loop = e.here();
+                    {
+                        e.push(Instr::r(Op::Xor, S8, S8, S8)); // ky
+                        let ky_loop = e.here();
+                        {
+                            // iy = oy*stride + ky - pad; skip if OOB
+                            e.li(T0, d.stride as i32);
+                            e.push(Instr::r(Op::Mul, T0, S4, T0));
+                            e.push(Instr::r(Op::Add, T0, T0, S8));
+                            e.push(Instr::i(Op::Addi, T0, T0, -(d.pad as i32))); // iy
+                            let skip_ky = e.label();
+                            e.branch(Op::Blt, T0, regs::ZERO, skip_ky);
+                            e.li(T1, d.h as i32);
+                            e.branch(Op::Bge, T0, T1, skip_ky);
+                            e.push(Instr::r(Op::Xor, S9, S9, S9)); // kx
+                            let kx_loop = e.here();
+                            {
+                                // ix = ox*stride + kx - pad
+                                e.li(T1, d.stride as i32);
+                                e.push(Instr::r(Op::Mul, T1, S5, T1));
+                                e.push(Instr::r(Op::Add, T1, T1, S9));
+                                e.push(Instr::i(Op::Addi, T1, T1, -(d.pad as i32))); // ix
+                                let skip_kx = e.label();
+                                e.branch(Op::Blt, T1, regs::ZERO, skip_kx);
+                                e.li(T2, d.w as i32);
+                                e.branch(Op::Bge, T1, T2, skip_kx);
+                                // x index: ((ni*C + c0+ci)*H + iy)*W + ix
+                                e.li(T2, d.cin as i32);
+                                e.push(Instr::r(Op::Mul, T2, S2, T2));
+                                e.push(Instr::r(Op::Add, T2, T2, S6));
+                                e.push(Instr::r(Op::Add, T2, T2, S7));
+                                e.li(T3, d.h as i32);
+                                e.push(Instr::r(Op::Mul, T2, T2, T3));
+                                e.push(Instr::r(Op::Add, T2, T2, T0));
+                                e.li(T3, d.w as i32);
+                                e.push(Instr::r(Op::Mul, T2, T2, T3));
+                                e.push(Instr::r(Op::Add, T2, T2, T1));
+                                e.push(Instr::i(Op::Slli, T2, T2, 2));
+                                e.push(Instr::r(Op::Add, T2, A, T2));
+                                e.push(Instr::i(Op::Flw, 0, T2, 0)); // x val
+                                // w index: ((f*cg + ci)*kH + ky)*kW + kx
+                                e.li(T3, cg as i32);
+                                e.push(Instr::r(Op::Mul, T3, S3, T3));
+                                e.push(Instr::r(Op::Add, T3, T3, S7));
+                                e.li(T4, d.kh as i32);
+                                e.push(Instr::r(Op::Mul, T3, T3, T4));
+                                e.push(Instr::r(Op::Add, T3, T3, S8));
+                                e.li(T4, d.kw as i32);
+                                e.push(Instr::r(Op::Mul, T3, T3, T4));
+                                e.push(Instr::r(Op::Add, T3, T3, S9));
+                                e.push(Instr::i(Op::Slli, T3, T3, 2));
+                                e.push(Instr::r(Op::Add, T3, B, T3));
+                                e.push(Instr::i(Op::Flw, 1, T3, 0)); // w val
+                                e.push(Instr::r4(Op::FmaddS, 2, 0, 1, 2));
+                                e.bind(skip_kx);
+                                e.push(Instr::i(Op::Addi, S9, S9, 1));
+                            }
+                            e.li(T1, d.kw as i32);
+                            e.branch(Op::Blt, S9, T1, kx_loop);
+                            e.bind(skip_ky);
+                            e.push(Instr::i(Op::Addi, S8, S8, 1));
+                        }
+                        e.li(T1, d.kh as i32);
+                        e.branch(Op::Blt, S8, T1, ky_loop);
+                        e.push(Instr::i(Op::Addi, S7, S7, 1));
+                    }
+                    e.li(T1, cg as i32);
+                    e.branch(Op::Blt, S7, T1, c_loop);
+                    // store: ((ni*F + f)*OH + oy)*OW + ox
+                    e.li(T1, d.cout as i32);
+                    e.push(Instr::r(Op::Mul, T1, S2, T1));
+                    e.push(Instr::r(Op::Add, T1, T1, S3));
+                    e.li(T2, oh as i32);
+                    e.push(Instr::r(Op::Mul, T1, T1, T2));
+                    e.push(Instr::r(Op::Add, T1, T1, S4));
+                    e.li(T2, ow as i32);
+                    e.push(Instr::r(Op::Mul, T1, T1, T2));
+                    e.push(Instr::r(Op::Add, T1, T1, S5));
+                    e.push(Instr::i(Op::Slli, T1, T1, 2));
+                    e.push(Instr::r(Op::Add, T1, C, T1));
+                    e.push(Instr::s(Op::Fsw, T1, 2, 0));
+                    e.push(Instr::i(Op::Addi, S5, S5, 1));
+                }
+                e.li(T1, ow as i32);
+                e.branch(Op::Blt, S5, T1, ox_loop);
+                e.push(Instr::i(Op::Addi, S4, S4, 1));
+            }
+            e.li(T1, oh as i32);
+            e.branch(Op::Blt, S4, T1, oy_loop);
+            e.push(Instr::i(Op::Addi, S3, S3, 1));
+        }
+        e.li(T1, d.cout as i32);
+        e.branch(Op::Blt, S3, T1, f_loop);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, d.n as i32);
+    e.branch(Op::Blt, S2, T1, n_loop);
+
+    // Analytic profile: ASIC schedule vectorizes across OW (vfmacc.vf, one
+    // input row load per (ky, kx), weight scalar resident), tiled by kc.
+    let es = (dt.bits() as u64 / 8).max(1);
+    let lanes = mach.lanes() * kc.lmul * (32 / (dt.bits() as usize).max(1)).max(1);
+    let macs_per_out = (cg * d.kh * d.kw) as u64;
+    let outputs = (d.n * d.cout * oh * ow) as u64;
+    let nest = if mach.has_vector {
+        // The ASIC schedule vectorizes over the output dimension with the
+        // best extent — OW for wide feature maps, channels (NHWC-tiled) for
+        // deep narrow layers — so lane utilization stays high across the
+        // whole network, not just early layers.
+        let mut inner = InstrMix::default();
+        inner.add(OpClass::VLoad, 1);
+        inner.add(OpClass::Load, 1);
+        inner.add(OpClass::VFma, 1);
+        inner.add(OpClass::Alu, 3);
+        let k_nest = LoopNest::leaf(macs_per_out, inner, 2);
+        let mut grp_mix = InstrMix::default();
+        grp_mix.add(OpClass::VSet, 1);
+        grp_mix.add(OpClass::VStore, 1);
+        grp_mix.add(OpClass::Alu, 6);
+        let vec_groups = outputs.div_ceil(lanes as u64).max(1);
+        LoopNest {
+            trip: vec_groups,
+            body: grp_mix,
+            children: vec![k_nest],
+            overhead: 3,
+        }
+    } else {
+        let mut inner = InstrMix::default();
+        inner.add(OpClass::Load, 2);
+        inner.add(OpClass::FMa, 1);
+        inner.add(OpClass::Alu, 6);
+        let k_nest = LoopNest::leaf(macs_per_out, inner, 2);
+        LoopNest {
+            trip: outputs,
+            body: {
+                let mut m = InstrMix::default();
+                m.add(OpClass::Store, 1);
+                m.add(OpClass::Alu, 10);
+                m.add(OpClass::Mul, 4);
+                m
+            },
+            children: vec![k_nest],
+            overhead: 3,
+        }
+    };
+    // Traffic: weights streamed once per output tile row; input rows reused
+    // across kw; outputs stored once.
+    let weight_bytes = (d.cout * cg * d.kh * d.kw) as u64 * es;
+    let tile_n = kc.tile_n.min(ow.max(1));
+    let reuse_factor = (oh * ow).div_ceil(tile_n * tile_n).max(1) as u64;
+    let load_bytes =
+        (d.n * d.cin * d.h * d.w) as u64 * es * (d.kh as u64) + weight_bytes * reuse_factor.min(16);
+    let store_bytes = outputs * es;
+    let working_set = ((d.cin * d.h * d.w + d.cout * cg * d.kh * d.kw) as u64 * es) as usize;
+    let tile_bytes = (kc.tile_m * kc.tile_k + kc.tile_k * tile_n) * es as usize;
+    Ok(KernelArtifact {
+        name: format!("conv_{}x{}x{}x{}_k{}s{}g{}", d.cout, d.cin, d.h, d.w, d.kh, d.stride, d.groups),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(mach, load_bytes, store_bytes, working_set, true, tile_bytes),
+        flops: d.flops(),
+        config: kc,
+        dtype: dt,
+    })
+}
+
+/// 2-D max/average pooling. x: [N, C, H, W] at a0, out at a2.
+#[allow(clippy::too_many_arguments)]
+pub fn pool2d(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    d: Conv2dDesc, // cout ignored; kh/kw = kernel, stride, pad used
+    is_max: bool,
+    x_addr: u32,
+    out_addr: u32,
+) -> Result<KernelArtifact> {
+    let (oh, ow) = (d.oh(), d.ow());
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(C, out_addr as i32);
+    // f5 = -inf (max) / count reciprocal handled at the end for avg
+    e.li(T0, f32::NEG_INFINITY.to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T0, -4));
+    e.push(Instr::i(Op::Flw, 5, regs::SP, -4));
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // nc = flattened n*c
+    let nc_loop = e.here();
+    {
+        e.push(Instr::r(Op::Xor, S4, S4, S4)); // oy
+        let oy_loop = e.here();
+        {
+            e.push(Instr::r(Op::Xor, S5, S5, S5)); // ox
+            let ox_loop = e.here();
+            {
+                if is_max {
+                    e.push(Instr::r(Op::FaddS, 2, 5, 5)); // acc = -inf
+                } else {
+                    e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0)); // acc = 0
+                    e.push(Instr::r(Op::Xor, S8, S8, S8)); // count = 0 (in S8)
+                }
+                e.push(Instr::r(Op::Xor, S6, S6, S6)); // ky
+                let ky_loop = e.here();
+                {
+                    e.li(T0, d.stride as i32);
+                    e.push(Instr::r(Op::Mul, T0, S4, T0));
+                    e.push(Instr::r(Op::Add, T0, T0, S6));
+                    e.push(Instr::i(Op::Addi, T0, T0, -(d.pad as i32))); // iy
+                    let skip_ky = e.label();
+                    e.branch(Op::Blt, T0, regs::ZERO, skip_ky);
+                    e.li(T1, d.h as i32);
+                    e.branch(Op::Bge, T0, T1, skip_ky);
+                    e.push(Instr::r(Op::Xor, S7, S7, S7)); // kx
+                    let kx_loop = e.here();
+                    {
+                        e.li(T1, d.stride as i32);
+                        e.push(Instr::r(Op::Mul, T1, S5, T1));
+                        e.push(Instr::r(Op::Add, T1, T1, S7));
+                        e.push(Instr::i(Op::Addi, T1, T1, -(d.pad as i32))); // ix
+                        let skip_kx = e.label();
+                        e.branch(Op::Blt, T1, regs::ZERO, skip_kx);
+                        e.li(T2, d.w as i32);
+                        e.branch(Op::Bge, T1, T2, skip_kx);
+                        // idx = (nc*H + iy)*W + ix
+                        e.li(T2, d.h as i32);
+                        e.push(Instr::r(Op::Mul, T2, S2, T2));
+                        e.push(Instr::r(Op::Add, T2, T2, T0));
+                        e.li(T3, d.w as i32);
+                        e.push(Instr::r(Op::Mul, T2, T2, T3));
+                        e.push(Instr::r(Op::Add, T2, T2, T1));
+                        e.push(Instr::i(Op::Slli, T2, T2, 2));
+                        e.push(Instr::r(Op::Add, T2, A, T2));
+                        e.push(Instr::i(Op::Flw, 0, T2, 0));
+                        if is_max {
+                            e.push(Instr::r(Op::FmaxS, 2, 2, 0));
+                        } else {
+                            e.push(Instr::r(Op::FaddS, 2, 2, 0));
+                            e.push(Instr::i(Op::Addi, S8, S8, 1));
+                        }
+                        e.bind(skip_kx);
+                        e.push(Instr::i(Op::Addi, S7, S7, 1));
+                    }
+                    e.li(T1, d.kw as i32);
+                    e.branch(Op::Blt, S7, T1, kx_loop);
+                    e.bind(skip_ky);
+                    e.push(Instr::i(Op::Addi, S6, S6, 1));
+                }
+                e.li(T1, d.kh as i32);
+                e.branch(Op::Blt, S6, T1, ky_loop);
+                if !is_max {
+                    // acc /= count
+                    e.push(Instr::r(Op::FcvtSW, 1, S8, 0));
+                    e.push(Instr::r(Op::FdivS, 2, 2, 1));
+                }
+                // out idx = (nc*OH + oy)*OW + ox
+                e.li(T1, oh as i32);
+                e.push(Instr::r(Op::Mul, T1, S2, T1));
+                e.push(Instr::r(Op::Add, T1, T1, S4));
+                e.li(T2, ow as i32);
+                e.push(Instr::r(Op::Mul, T1, T1, T2));
+                e.push(Instr::r(Op::Add, T1, T1, S5));
+                e.push(Instr::i(Op::Slli, T1, T1, 2));
+                e.push(Instr::r(Op::Add, T1, C, T1));
+                e.push(Instr::s(Op::Fsw, T1, 2, 0));
+                e.push(Instr::i(Op::Addi, S5, S5, 1));
+            }
+            e.li(T1, ow as i32);
+            e.branch(Op::Blt, S5, T1, ox_loop);
+            e.push(Instr::i(Op::Addi, S4, S4, 1));
+        }
+        e.li(T1, oh as i32);
+        e.branch(Op::Blt, S4, T1, oy_loop);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, (d.n * d.cin) as i32);
+    e.branch(Op::Blt, S2, T1, nc_loop);
+
+    let outputs = (d.n * d.cin * oh * ow) as u64;
+    let window = (d.kh * d.kw) as u64;
+    let mut inner = InstrMix::default();
+    inner.add(OpClass::Load, 1);
+    inner.add(OpClass::FAlu, 1);
+    inner.add(OpClass::Alu, 6);
+    let k_nest = LoopNest::leaf(window, inner, 2);
+    let nest = LoopNest {
+        trip: outputs,
+        body: {
+            let mut m = InstrMix::default();
+            m.add(OpClass::Store, 1);
+            m.add(OpClass::Alu, 8);
+            m
+        },
+        children: vec![k_nest],
+        overhead: 3,
+    };
+    Ok(KernelArtifact {
+        name: format!("pool_{}_{}x{}", if is_max { "max" } else { "avg" }, d.kh, d.stride),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(
+            mach,
+            (d.n * d.cin * d.h * d.w * 4) as u64,
+            outputs * 4,
+            (d.h * d.w * 4).min(1 << 20),
+            true,
+            0,
+        ),
+        flops: outputs * window,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// Inference BatchNorm: y[c, i] = gamma_c * (x - mean_c) / sqrt(var_c + eps)
+/// + beta_c, over x: [C rows, inner cols]. Per-channel constants are
+/// computed once per row with `frsqrt.s`, then the row is streamed.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    channels: usize,
+    inner: usize,
+    x_addr: u32,
+    gamma_addr: u32,
+    beta_addr: u32,
+    mean_addr: u32,
+    var_addr: u32,
+    out_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(C, out_addr as i32);
+    e.li(B, gamma_addr as i32);
+    e.li(D, beta_addr as i32);
+    e.li(E4, mean_addr as i32);
+    e.li(E5, var_addr as i32);
+    // f6 = eps
+    e.li(T0, 1e-5f32.to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T0, -4));
+    e.push(Instr::i(Op::Flw, 6, regs::SP, -4));
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // c
+    let c_loop = e.here();
+    {
+        // s = gamma * rsqrt(var + eps); b = beta - mean * s
+        e.push(Instr::i(Op::Slli, T0, S2, 2));
+        e.push(Instr::r(Op::Add, T1, E5, T0));
+        e.push(Instr::i(Op::Flw, 1, T1, 0)); // var
+        e.push(Instr::r(Op::FaddS, 1, 1, 6));
+        e.push(Instr::r(Op::FrsqrtS, 1, 1, 0)); // rstd
+        e.push(Instr::r(Op::Add, T1, B, T0));
+        e.push(Instr::i(Op::Flw, 2, T1, 0)); // gamma
+        e.push(Instr::r(Op::FmulS, 2, 2, 1)); // s
+        e.push(Instr::r(Op::Add, T1, E4, T0));
+        e.push(Instr::i(Op::Flw, 3, T1, 0)); // mean
+        e.push(Instr::r(Op::FmulS, 3, 3, 2)); // mean*s
+        e.push(Instr::r(Op::Add, T1, D, T0));
+        e.push(Instr::i(Op::Flw, 4, T1, 0)); // beta
+        e.push(Instr::r(Op::FsubS, 4, 4, 3)); // b
+        // stream the row: y = x*s + b
+        e.li(S3, inner as i32);
+        let row_loop = e.here();
+        e.push(Instr::i(Op::Flw, 0, A, 0));
+        e.push(Instr::r4(Op::FmaddS, 0, 0, 2, 4));
+        e.push(Instr::s(Op::Fsw, C, 0, 0));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, C, C, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, row_loop);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, channels as i32);
+    e.branch(Op::Blt, S2, T1, c_loop);
+
+    let total = (channels * inner) as u64;
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 1);
+    mix.add(OpClass::FMa, 1);
+    mix.add(OpClass::Store, 1);
+    mix.add(OpClass::Alu, 3);
+    let inner_nest = LoopNest::leaf(inner as u64, mix, 2);
+    let nest = LoopNest {
+        trip: channels as u64,
+        body: {
+            let mut m = InstrMix::default();
+            m.add(OpClass::Load, 4);
+            m.add(OpClass::FCustom, 1);
+            m.add(OpClass::FAlu, 4);
+            m
+        },
+        children: vec![inner_nest],
+        overhead: 4,
+    };
+    Ok(KernelArtifact {
+        name: format!("batchnorm_{channels}x{inner}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(mach, total * 4 + channels as u64 * 16, total * 4, inner * 4, true, 0),
+        flops: 2 * total,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// Row-wise mean: out[r] = mean(x[r, 0..cols]) — GlobalAveragePool and the
+/// sequence pooler lower here (rows = N*C or B*D).
+pub fn rowwise_mean(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    rows: usize,
+    cols: usize,
+    x_addr: u32,
+    out_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(C, out_addr as i32);
+    e.li(T0, (1.0f32 / cols as f32).to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T0, -4));
+    e.push(Instr::i(Op::Flw, 5, regs::SP, -4)); // 1/cols
+    e.push(Instr::r(Op::Xor, S2, S2, S2));
+    let row_loop = e.here();
+    {
+        e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+        e.li(S3, cols as i32);
+        let sum_loop = e.here();
+        e.push(Instr::i(Op::Flw, 1, A, 0));
+        e.push(Instr::r(Op::FaddS, 2, 2, 1));
+        e.push(Instr::i(Op::Addi, A, A, 4));
+        e.push(Instr::i(Op::Addi, S3, S3, -1));
+        e.branch(Op::Blt, regs::ZERO, S3, sum_loop);
+        e.push(Instr::r(Op::FmulS, 2, 2, 5));
+        e.push(Instr::s(Op::Fsw, C, 2, 0));
+        e.push(Instr::i(Op::Addi, C, C, 4));
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, rows as i32);
+    e.branch(Op::Blt, S2, T1, row_loop);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 1);
+    mix.add(OpClass::FAlu, 1);
+    mix.add(OpClass::Alu, 2);
+    let inner = LoopNest::leaf(cols as u64, mix, 2);
+    let nest = LoopNest {
+        trip: rows as u64,
+        body: {
+            let mut m = InstrMix::default();
+            m.add(OpClass::Store, 1);
+            m.add(OpClass::FMul, 1);
+            m.add(OpClass::Alu, 2);
+            m
+        },
+        children: vec![inner],
+        overhead: 3,
+    };
+    Ok(KernelArtifact {
+        name: format!("rowmean_{rows}x{cols}"),
+        asm: e.finish()?,
+        nest,
+        mem: mem_profile(mach, (rows * cols * 4) as u64, (rows * 4) as u64, cols * 4, true, 0),
+        flops: (rows * cols) as u64,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// Mid-axis mean: out[b, d] = mean_s x[b, s, d] (token pooling for
+/// transformers, ReduceMean axis=1).
+pub fn reduce_mean_mid(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    b: usize,
+    s: usize,
+    dmodel: usize,
+    x_addr: u32,
+    out_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(C, out_addr as i32);
+    e.li(T0, (1.0f32 / s as f32).to_bits() as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, T0, -4));
+    e.push(Instr::i(Op::Flw, 5, regs::SP, -4));
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // b
+    let b_loop = e.here();
+    {
+        e.push(Instr::r(Op::Xor, S3, S3, S3)); // d
+        let d_loop = e.here();
+        {
+            e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+            // ptr = A + ((b*S)*D + d)*4
+            e.li(T0, (s * dmodel) as i32);
+            e.push(Instr::r(Op::Mul, T0, S2, T0));
+            e.push(Instr::r(Op::Add, T0, T0, S3));
+            e.push(Instr::i(Op::Slli, T0, T0, 2));
+            e.push(Instr::r(Op::Add, T0, A, T0));
+            e.li(S4, s as i32);
+            let s_loop = e.here();
+            e.push(Instr::i(Op::Flw, 1, T0, 0));
+            e.push(Instr::r(Op::FaddS, 2, 2, 1));
+            e.addi_big(T0, T0, (dmodel * 4) as i32);
+            e.push(Instr::i(Op::Addi, S4, S4, -1));
+            e.branch(Op::Blt, regs::ZERO, S4, s_loop);
+            e.push(Instr::r(Op::FmulS, 2, 2, 5));
+            // out[b*D + d]
+            e.li(T1, dmodel as i32);
+            e.push(Instr::r(Op::Mul, T1, S2, T1));
+            e.push(Instr::r(Op::Add, T1, T1, S3));
+            e.push(Instr::i(Op::Slli, T1, T1, 2));
+            e.push(Instr::r(Op::Add, T1, C, T1));
+            e.push(Instr::s(Op::Fsw, T1, 2, 0));
+            e.push(Instr::i(Op::Addi, S3, S3, 1));
+        }
+        e.li(T1, dmodel as i32);
+        e.branch(Op::Blt, S3, T1, d_loop);
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, b as i32);
+    e.branch(Op::Blt, S2, T1, b_loop);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 1);
+    mix.add(OpClass::FAlu, 1);
+    mix.add(OpClass::Alu, 3);
+    let s_nest = LoopNest::leaf(s as u64, mix, 2);
+    let nest = LoopNest {
+        trip: (b * dmodel) as u64,
+        body: {
+            let mut m = InstrMix::default();
+            m.add(OpClass::Store, 1);
+            m.add(OpClass::Alu, 8);
+            m.add(OpClass::Mul, 2);
+            m
+        },
+        children: vec![s_nest],
+        overhead: 3,
+    };
+    Ok(KernelArtifact {
+        name: format!("redmid_{b}x{s}x{dmodel}"),
+        asm: e.finish()?,
+        nest,
+        // Stride-D column walk: random-ish pattern for the cache model.
+        mem: mem_profile(mach, (b * s * dmodel * 4) as u64, (b * dmodel * 4) as u64, s * dmodel * 4, false, 0),
+        flops: (b * s * dmodel) as u64,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// Transpose the last two axes: out[b, j, i] = x[b, i, j].
+pub fn transpose_mid(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    b: usize,
+    m: usize,
+    n: usize,
+    x_addr: u32,
+    out_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, x_addr as i32);
+    e.li(C, out_addr as i32);
+    e.push(Instr::r(Op::Xor, S2, S2, S2)); // flat index over b*m*n
+    let total = b * m * n;
+    let loop_top = e.here();
+    {
+        // decompose: bi = idx / (m*n); rem = idx % (m*n); i = rem / n; j = rem % n
+        e.li(T0, (m * n) as i32);
+        e.push(Instr::r(Op::Div, T1, S2, T0)); // bi
+        e.push(Instr::r(Op::Rem, T2, S2, T0)); // rem
+        e.li(T0, n as i32);
+        e.push(Instr::r(Op::Div, T3, T2, T0)); // i
+        e.push(Instr::r(Op::Rem, T4, T2, T0)); // j
+        // src = idx*4 ; dst = (bi*n*m + j*m + i)*4
+        e.push(Instr::i(Op::Slli, T0, S2, 2));
+        e.push(Instr::r(Op::Add, T0, A, T0));
+        e.push(Instr::i(Op::Lw, T5, T0, 0));
+        e.li(T0, (n * m) as i32);
+        e.push(Instr::r(Op::Mul, T1, T1, T0));
+        e.li(T0, m as i32);
+        e.push(Instr::r(Op::Mul, T4, T4, T0));
+        e.push(Instr::r(Op::Add, T1, T1, T4));
+        e.push(Instr::r(Op::Add, T1, T1, T3));
+        e.push(Instr::i(Op::Slli, T1, T1, 2));
+        e.push(Instr::r(Op::Add, T1, C, T1));
+        e.push(Instr::s(Op::Sw, T1, T5, 0));
+        e.push(Instr::i(Op::Addi, S2, S2, 1));
+    }
+    e.li(T1, total as i32);
+    e.branch(Op::Blt, S2, T1, loop_top);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 1);
+    mix.add(OpClass::Store, 1);
+    mix.add(OpClass::Div, 4);
+    mix.add(OpClass::Alu, 8);
+    Ok(KernelArtifact {
+        name: format!("transpose_{b}x{m}x{n}"),
+        asm: e.finish()?,
+        nest: LoopNest::leaf(total as u64, mix, 2),
+        mem: mem_profile(mach, (total * 4) as u64, (total * 4) as u64, total * 4, false, 0),
+        flops: 0,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+/// GELU (tanh approximation) and Tanh, scalar via `fexp.s`:
+/// tanh(z) = 1 - 2 / (exp(2z) + 1).
+pub fn gelu_or_tanh(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    is_gelu: bool,
+    len: usize,
+    a_addr: u32,
+    c_addr: u32,
+) -> Result<KernelArtifact> {
+    let mut e = Emitter::new();
+    e.li(A, a_addr as i32);
+    e.li(C, c_addr as i32);
+    e.li(S2, len as i32);
+    let fconst = |e: &mut Emitter, freg: u8, val: f32| {
+        e.li(T0, val.to_bits() as i32);
+        e.push(Instr::s(Op::Sw, regs::SP, T0, -4));
+        e.push(Instr::i(Op::Flw, freg, regs::SP, -4));
+    };
+    fconst(&mut e, 3, 1.0);
+    fconst(&mut e, 4, 2.0);
+    fconst(&mut e, 5, 0.5);
+    fconst(&mut e, 6, 0.044715);
+    fconst(&mut e, 7, (2.0f32 / std::f32::consts::PI).sqrt());
+    let loop_top = e.here();
+    e.push(Instr::i(Op::Flw, 1, A, 0)); // x
+    if is_gelu {
+        // z = c * (x + 0.044715 x^3)
+        e.push(Instr::r(Op::FmulS, 2, 1, 1)); // x^2
+        e.push(Instr::r(Op::FmulS, 2, 2, 1)); // x^3
+        e.push(Instr::r(Op::FmulS, 2, 2, 6));
+        e.push(Instr::r(Op::FaddS, 2, 2, 1));
+        e.push(Instr::r(Op::FmulS, 2, 2, 7)); // z
+    } else {
+        e.push(Instr::r(Op::FaddS, 2, 1, 1));
+        e.push(Instr::r(Op::FmulS, 2, 2, 5)); // z = x (copy via *1? use x)
+        e.push(Instr::r(Op::FmulS, 2, 1, 3)); // z = x
+    }
+    // t = tanh(z) = 1 - 2/(exp(2z)+1)
+    e.push(Instr::r(Op::FmulS, 8, 2, 4)); // 2z
+    e.push(Instr::r(Op::FexpS, 8, 8, 0)); // e^{2z}
+    e.push(Instr::r(Op::FaddS, 8, 8, 3)); // +1
+    e.push(Instr::r(Op::FdivS, 8, 4, 8)); // 2/(..)
+    e.push(Instr::r(Op::FsubS, 8, 3, 8)); // tanh
+    if is_gelu {
+        // y = 0.5 x (1 + t)
+        e.push(Instr::r(Op::FaddS, 8, 8, 3));
+        e.push(Instr::r(Op::FmulS, 8, 8, 1));
+        e.push(Instr::r(Op::FmulS, 8, 8, 5));
+    }
+    e.push(Instr::s(Op::Fsw, C, 8, 0));
+    e.push(Instr::i(Op::Addi, A, A, 4));
+    e.push(Instr::i(Op::Addi, C, C, 4));
+    e.push(Instr::i(Op::Addi, S2, S2, -1));
+    e.branch(Op::Blt, regs::ZERO, S2, loop_top);
+
+    let mut mix = InstrMix::default();
+    mix.add(OpClass::Load, 1);
+    mix.add(OpClass::FAlu, 6);
+    mix.add(OpClass::FCustom, 1);
+    mix.add(OpClass::FDiv, 1);
+    mix.add(OpClass::Store, 1);
+    mix.add(OpClass::Alu, 3);
+    Ok(KernelArtifact {
+        name: format!("{}_{len}", if is_gelu { "gelu" } else { "tanh" }),
+        asm: e.finish()?,
+        nest: LoopNest::leaf(len as u64, mix, 1),
+        mem: mem_profile(mach, (len * 4) as u64, (len * 4) as u64, 2 * len * 4, true, 0),
+        flops: (len * 10) as u64,
+        config: kc,
+        dtype: DType::F32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::sim::machine::Machine;
+    use crate::util::rng::Rng;
+
+    fn xgen() -> MachineConfig {
+        MachineConfig::xgen_asic()
+    }
+
+    fn run(mach: &MachineConfig, art: &KernelArtifact, m: &mut Machine) {
+        let _ = mach;
+        let words = encode_all(&art.asm).unwrap();
+        m.run(&words).unwrap();
+    }
+
+    #[test]
+    fn conv2d_matches_ir_executor() {
+        // Cross-check against ir::exec conv on a random case w/ padding+stride.
+        use crate::ir::exec::eval_node;
+        use crate::ir::graph::Node;
+        use crate::ir::ops::{AttrValue, Attrs, OpKind};
+        use crate::ir::tensor::Tensor;
+        let mach = xgen();
+        let d = Conv2dDesc { n: 1, cin: 3, h: 6, w: 6, cout: 4, kh: 3, kw: 3, stride: 2, pad: 1, groups: 1 };
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..d.n * d.cin * d.h * d.w).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..d.cout * d.cin * d.kh * d.kw).map(|_| rng.normal_f32()).collect();
+        let bias: Vec<f32> = (0..d.cout).map(|_| rng.normal_f32()).collect();
+
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        m.write_f32_slice(0x8000, &w).unwrap();
+        m.write_f32_slice(0xF000, &bias).unwrap();
+        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, Some(0xF000), 0x10000, DType::F32).unwrap();
+        run(&mach, &art, &mut m);
+        let got = m.read_f32_slice(0x10000, d.n * d.cout * d.oh() * d.ow()).unwrap();
+
+        let mut attrs = Attrs::new();
+        attrs.insert("strides".into(), AttrValue::Ints(vec![2, 2]));
+        attrs.insert("pads".into(), AttrValue::Ints(vec![1, 1]));
+        let node = Node {
+            name: "c".into(),
+            op: OpKind::Conv,
+            inputs: vec![],
+            outputs: vec![],
+            attrs,
+        };
+        let xt = Tensor::new(vec![d.n, d.cin, d.h, d.w], x);
+        let wt = Tensor::new(vec![d.cout, d.cin, d.kh, d.kw], w);
+        let bt = Tensor::new(vec![d.cout], bias);
+        let want = eval_node(&node, &[&xt, &wt, &bt]).unwrap();
+        for (g, w_) in got.iter().zip(&want[0].data) {
+            assert!((g - w_).abs() < 1e-3, "{g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn depthwise_conv_via_groups() {
+        use crate::ir::exec::eval_node;
+        use crate::ir::graph::Node;
+        use crate::ir::ops::{Attrs, OpKind};
+        use crate::ir::tensor::Tensor;
+        let mach = xgen();
+        let d = Conv2dDesc { n: 1, cin: 4, h: 5, w: 5, cout: 4, kh: 3, kw: 3, stride: 1, pad: 1, groups: 4 };
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..d.cin * d.h * d.w).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..d.cout * 1 * 9).map(|_| rng.normal_f32()).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        m.write_f32_slice(0x8000, &w).unwrap();
+        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, None, 0x10000, DType::F32).unwrap();
+        run(&mach, &art, &mut m);
+        let got = m.read_f32_slice(0x10000, d.cout * 25).unwrap();
+
+        let mut attrs = Attrs::new();
+        attrs.insert(
+            "pads".into(),
+            crate::ir::ops::AttrValue::Ints(vec![1, 1]),
+        );
+        let node = Node { name: "dw".into(), op: OpKind::DepthwiseConv, inputs: vec![], outputs: vec![], attrs };
+        let xt = Tensor::new(vec![1, 4, 5, 5], x);
+        let wt = Tensor::new(vec![4, 1, 3, 3], w);
+        let want = eval_node(&node, &[&xt, &wt]).unwrap();
+        for (g, w_) in got.iter().zip(&want[0].data) {
+            assert!((g - w_).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn maxpool_and_avgpool_match() {
+        let mach = xgen();
+        let d = Conv2dDesc { n: 1, cin: 2, h: 4, w: 4, cout: 2, kh: 2, kw: 2, stride: 2, pad: 0, groups: 1 };
+        let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        for is_max in [true, false] {
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &x).unwrap();
+            let art = pool2d(&mach, KernelConfig::default(), d, is_max, 0x1000, 0x4000).unwrap();
+            run(&mach, &art, &mut m);
+            let got = m.read_f32_slice(0x4000, 8).unwrap();
+            if is_max {
+                assert_eq!(got, vec![5.0, 7.0, 13.0, 15.0, 21.0, 23.0, 29.0, 31.0]);
+            } else {
+                assert_eq!(got, vec![2.5, 4.5, 10.5, 12.5, 18.5, 20.5, 26.5, 28.5]);
+            }
+        }
+    }
+
+    #[test]
+    fn batchnorm_matches_closed_form() {
+        let mach = xgen();
+        let (c, inner) = (3, 8);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..c * inner).map(|_| rng.normal_f32() * 2.0).collect();
+        let gamma = [1.0f32, 0.5, 2.0];
+        let beta = [0.0f32, 1.0, -1.0];
+        let mean = [0.1f32, -0.2, 0.3];
+        let var = [1.0f32, 0.5, 2.0];
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        m.write_f32_slice(0x2000, &gamma).unwrap();
+        m.write_f32_slice(0x2100, &beta).unwrap();
+        m.write_f32_slice(0x2200, &mean).unwrap();
+        m.write_f32_slice(0x2300, &var).unwrap();
+        let art = batchnorm(&mach, KernelConfig::default(), c, inner, 0x1000, 0x2000, 0x2100, 0x2200, 0x2300, 0x3000).unwrap();
+        run(&mach, &art, &mut m);
+        let got = m.read_f32_slice(0x3000, c * inner).unwrap();
+        for ci in 0..c {
+            for i in 0..inner {
+                let want = gamma[ci] * (x[ci * inner + i] - mean[ci]) / (var[ci] + 1e-5).sqrt() + beta[ci];
+                assert!((got[ci * inner + i] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn rowwise_mean_matches() {
+        let mach = xgen();
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        let art = rowwise_mean(&mach, KernelConfig::default(), 3, 4, 0x1000, 0x3000).unwrap();
+        run(&mach, &art, &mut m);
+        assert_eq!(m.read_f32_slice(0x3000, 3).unwrap(), vec![1.5, 5.5, 9.5]);
+    }
+
+    #[test]
+    fn reduce_mean_mid_matches() {
+        let mach = xgen();
+        // x[2, 3, 2]: mean over axis 1.
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        let art = reduce_mean_mid(&mach, KernelConfig::default(), 2, 3, 2, 0x1000, 0x3000).unwrap();
+        run(&mach, &art, &mut m);
+        let got = m.read_f32_slice(0x3000, 4).unwrap();
+        assert_eq!(got, vec![2.0, 3.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn transpose_mid_matches() {
+        let mach = xgen();
+        // x[1, 2, 3] -> out[1, 3, 2]
+        let x = [0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut m = Machine::new(mach.clone());
+        m.write_f32_slice(0x1000, &x).unwrap();
+        let art = transpose_mid(&mach, KernelConfig::default(), 1, 2, 3, 0x1000, 0x3000).unwrap();
+        run(&mach, &art, &mut m);
+        assert_eq!(
+            m.read_f32_slice(0x3000, 6).unwrap(),
+            vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn gelu_and_tanh_match_host() {
+        let mach = xgen();
+        let mut rng = Rng::new(12);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32() * 2.0).collect();
+        for is_gelu in [true, false] {
+            let mut m = Machine::new(mach.clone());
+            m.write_f32_slice(0x1000, &x).unwrap();
+            let art = gelu_or_tanh(&mach, KernelConfig::default(), is_gelu, 16, 0x1000, 0x3000).unwrap();
+            run(&mach, &art, &mut m);
+            let got = m.read_f32_slice(0x3000, 16).unwrap();
+            for i in 0..16 {
+                let want = if is_gelu {
+                    0.5 * x[i]
+                        * (1.0
+                            + ((2.0 / std::f32::consts::PI).sqrt()
+                                * (x[i] + 0.044715 * x[i] * x[i] * x[i]))
+                                .tanh())
+                } else {
+                    x[i].tanh()
+                };
+                assert!(
+                    (got[i] - want).abs() < 2e-3,
+                    "gelu={is_gelu} i={i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        }
+    }
+}

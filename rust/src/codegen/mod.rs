@@ -1,0 +1,140 @@
+//! Code generation (paper §3.1 stage 3 + §3.4): kernel selection and RISC-V
+//! Vector instruction emission.
+//!
+//! Every operator lowers through a kernel in [`kernels`] parameterized by a
+//! [`KernelConfig`] (register tiling, unrolling, LMUL — the auto-tuner's
+//! search space, §3.4). Kernels produce a [`KernelArtifact`]: *executable*
+//! assembly (the functional machine runs it and numerics are checked against
+//! the IR executor) plus the loop-nest/memory profile the analytic timing
+//! model consumes.
+//!
+//! [`graphgen`] stitches per-node kernels into one program over the memory
+//! plan's addresses.
+
+pub mod emitter;
+pub mod graphgen;
+
+pub mod kernels;
+pub mod kernels_attn;
+pub mod kernels_nn;
+
+use crate::ir::dtype::DType;
+use crate::ir::ops::OpCategory;
+use crate::isa::Instr;
+use crate::sim::timing::{LoopNest, MemProfile};
+use crate::sim::MachineConfig;
+
+/// Schedule parameters for one kernel — the auto-tuning search space
+/// (paper §3.2.2: "tile sizes, unroll factors, vector length").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    /// Register-tile extents for matmul-class kernels (eq. 15).
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub tile_k: usize,
+    /// Inner-loop unroll factor (§3.4.2).
+    pub unroll: usize,
+    /// RVV register-group multiplier (§3.4.1, eq. 14): 1, 2, 4, or 8.
+    pub lmul: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        // The case-study baseline schedule: 64/64/32, no unroll, LMUL=1.
+        KernelConfig { tile_m: 64, tile_n: 64, tile_k: 32, unroll: 1, lmul: 1 }
+    }
+}
+
+impl KernelConfig {
+    /// Elements processed per vector instruction (paper eq. 14):
+    /// `elements_processed = VL x LMUL`.
+    pub fn elements_per_vop(&self, cfg: &MachineConfig) -> usize {
+        cfg.lanes() * self.lmul
+    }
+}
+
+/// Automatic LMUL selection (§3.4.1): smaller element types and elementwise
+/// categories take larger register groups; matmul-class kernels hold more
+/// live vector registers so they stay at LMUL 1-2.
+pub fn auto_lmul(dtype: DType, category: OpCategory, n: usize, cfg: &MachineConfig) -> usize {
+    let lanes = cfg.lanes();
+    let max_useful = (n / lanes).max(1).min(8).next_power_of_two().min(8);
+    let by_dtype = match dtype.bits() {
+        0..=8 => 8,
+        9..=16 => 4,
+        _ => 2,
+    };
+    let by_cat = match category {
+        OpCategory::ElementwiseArith | OpCategory::Activation => 8,
+        OpCategory::Reduction | OpCategory::Normalization => 4,
+        _ => 2, // matmul/conv: register pressure from accumulators
+    };
+    by_dtype.min(by_cat).min(max_useful).max(1)
+}
+
+/// Automatic unroll selection (§3.4.2): full unroll for tiny trip counts,
+/// moderate unroll bounded by register pressure otherwise.
+pub fn auto_unroll(trip: usize) -> usize {
+    if trip == 0 {
+        return 1;
+    }
+    if trip <= 8 {
+        return trip; // full unrolling for small loops
+    }
+    // Largest divisor of `trip` that is <= 4 (keeps remainder-free bodies).
+    for u in [4usize, 2] {
+        if trip % u == 0 {
+            return u;
+        }
+    }
+    1
+}
+
+/// The product of lowering one node: executable code + analytic profiles.
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub name: String,
+    /// Executable instruction stream (branch offsets resolved).
+    pub asm: Vec<Instr>,
+    /// Loop-nest profile for the analytic timing model.
+    pub nest: LoopNest,
+    /// Memory profile (traffic + cache-aware hit rates).
+    pub mem: MemProfile,
+    /// MAC-equivalent floating point operations.
+    pub flops: u64,
+    /// Schedule this artifact was generated with.
+    pub config: KernelConfig,
+    /// Datapath precision of the kernel.
+    pub dtype: DType,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_lmul_rules() {
+        let cfg = MachineConfig::xgen_asic();
+        // Elementwise int8, long vectors -> max grouping.
+        assert_eq!(auto_lmul(DType::I8, OpCategory::ElementwiseArith, 4096, &cfg), 8);
+        // Matmul fp32 -> conservative.
+        assert!(auto_lmul(DType::F32, OpCategory::Linear, 4096, &cfg) <= 2);
+        // Tiny vectors never over-group.
+        assert_eq!(auto_lmul(DType::I8, OpCategory::ElementwiseArith, 8, &cfg), 1);
+    }
+
+    #[test]
+    fn auto_unroll_rules() {
+        assert_eq!(auto_unroll(6), 6); // full unroll small
+        assert_eq!(auto_unroll(64), 4);
+        assert_eq!(auto_unroll(30), 2);
+        assert_eq!(auto_unroll(31), 1); // prime-ish: no clean divisor
+    }
+
+    #[test]
+    fn elements_per_vop_eq14() {
+        let cfg = MachineConfig::xgen_asic(); // 8 lanes
+        let kc = KernelConfig { lmul: 4, ..Default::default() };
+        assert_eq!(kc.elements_per_vop(&cfg), 32);
+    }
+}

@@ -1,0 +1,100 @@
+//! Analytical cost model (paper §3.2.3 mode 1): a fast closed-form roofline
+//! with the cache-aware hit-rate model (§3.7, eq. 16) — no kernel
+//! generation, no learning. Deliberately *simpler* than the simulator's
+//! timing model (no overlap modeling, coarser overhead terms): the learned
+//! model's job is to close that gap from measurements, which is exactly the
+//! paper's premise.
+
+use crate::codegen::KernelConfig;
+use crate::cost::features::KernelSig;
+use crate::sim::cache::{analytic_hit_rates, tiling_effectiveness};
+use crate::sim::MachineConfig;
+
+pub struct AnalyticalModel {
+    pub mach: MachineConfig,
+}
+
+impl AnalyticalModel {
+    pub fn new(mach: MachineConfig) -> AnalyticalModel {
+        AnalyticalModel { mach }
+    }
+
+    /// Closed-form log2(cycles).
+    pub fn predict_one(&self, sig: &KernelSig, kc: KernelConfig) -> f64 {
+        let mach = &self.mach;
+        let flops = sig.flops() as f64;
+        let bytes = sig.bytes() as f64;
+        // Compute throughput: vector FMA does lanes*2 flops/cycle.
+        let flops_per_cycle = if mach.has_vector {
+            (mach.lanes() * 2) as f64
+        } else {
+            2.0 * mach.issue_width
+        };
+        let compute = flops / flops_per_cycle;
+        // Memory: average latency from the weighted hit-rate model (eq. 16).
+        let tile_bytes = 4 * (kc.tile_m * kc.tile_k + kc.tile_k * kc.tile_n);
+        let eff = tiling_effectiveness(&mach.caches, tile_bytes);
+        let rates = analytic_hit_rates(&mach.caches, bytes as usize, true, eff);
+        let line = mach.caches.first().map(|c| c.line).unwrap_or(64) as f64;
+        let mut remaining = 1.0;
+        let mut avg_lat = 0.0;
+        for (i, c) in mach.caches.iter().enumerate() {
+            let hr = rates.get(i).copied().unwrap_or(0.0);
+            avg_lat += remaining * hr * c.latency as f64;
+            remaining *= 1.0 - hr;
+        }
+        avg_lat += remaining * mach.mem_latency as f64;
+        let mem = bytes / line * avg_lat;
+        // Loop overhead: fewer iterations with more unrolling / grouping.
+        let iters = (flops / flops_per_cycle / kc.unroll.max(1) as f64).max(1.0);
+        let overhead = 2.0 * iters / kc.lmul.max(1) as f64 * 0.1;
+        (compute.max(mem) + overhead).max(1.0).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::measure;
+
+    #[test]
+    fn ranks_problem_sizes_correctly() {
+        let m = AnalyticalModel::new(MachineConfig::xgen_asic());
+        let c = KernelConfig::default();
+        let small = m.predict_one(&KernelSig::matmul(32, 32, 32), c);
+        let big = m.predict_one(&KernelSig::matmul(512, 512, 512), c);
+        assert!(big > small + 5.0);
+    }
+
+    #[test]
+    fn correlates_with_measurement() {
+        // Analytical predictions should correlate with "hardware"
+        // measurements across configs (that's what makes it useful for
+        // exploration), but not match exactly (that's the learned model's
+        // job).
+        let mach = MachineConfig::xgen_asic();
+        let model = AnalyticalModel::new(mach.clone());
+        let sig = KernelSig::matmul(128, 256, 512);
+        let mut pred = Vec::new();
+        let mut meas = Vec::new();
+        for lmul in [1usize, 2, 4] {
+            for unroll in [1usize, 4] {
+                let kc = KernelConfig { lmul, unroll, ..Default::default() };
+                pred.push(model.predict_one(&sig, kc));
+                meas.push(measure(&mach, &sig, kc));
+            }
+        }
+        let (slope, _, r2) = crate::util::stats::linreg(&pred, &meas);
+        assert!(slope > 0.0, "positive relation expected");
+        assert!(r2 > 0.2, "some signal expected, r2={r2}");
+    }
+
+    #[test]
+    fn cpu_slower_than_asic_for_vector_work() {
+        let asic = AnalyticalModel::new(MachineConfig::xgen_asic());
+        let cpu = AnalyticalModel::new(MachineConfig::cpu_a78());
+        let sig = KernelSig::matmul(256, 256, 256);
+        let c = KernelConfig::default();
+        assert!(cpu.predict_one(&sig, c) > asic.predict_one(&sig, c));
+    }
+}

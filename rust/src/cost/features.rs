@@ -1,0 +1,183 @@
+//! Feature extraction (paper §3.2.1): configuration parameters, operation
+//! characteristics, and tensor dimensions → F=16 features. The layout is
+//! frozen as the AOT interchange contract with the JAX cost-model kernels
+//! (`python/compile/kernels/costmodel.py`, NUM_FEATURES = 16).
+
+use crate::codegen::{kernels, kernels_nn, KernelArtifact, KernelConfig};
+use crate::ir::dtype::DType;
+use crate::sim::MachineConfig;
+
+/// Must match `costmodel.NUM_FEATURES` on the python side.
+pub const NUM_FEATURES: usize = 16;
+
+/// What kernel is being tuned (the tuning tasks of Table 5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelSig {
+    /// MatMul m x n x k.
+    MatMul { m: usize, n: usize, k: usize },
+    /// Conv2d on CHW with square kernel.
+    Conv2d { c: usize, h: usize, w: usize, f: usize, kh: usize, stride: usize },
+    /// Elementwise over `len` values.
+    Elementwise { len: usize },
+}
+
+impl KernelSig {
+    pub fn matmul(m: usize, n: usize, k: usize) -> KernelSig {
+        KernelSig::MatMul { m, n, k }
+    }
+
+    pub fn conv2d(c: usize, h: usize, w: usize, f: usize, kh: usize, stride: usize) -> KernelSig {
+        KernelSig::Conv2d { c, h, w, f, kh, stride }
+    }
+
+    pub fn elementwise(len: usize) -> KernelSig {
+        KernelSig::Elementwise { len }
+    }
+
+    pub fn flops(&self) -> u64 {
+        match *self {
+            KernelSig::MatMul { m, n, k } => 2 * (m * n * k) as u64,
+            KernelSig::Conv2d { c, h, w, f, kh, stride } => {
+                let oh = (h - kh) / stride + 1;
+                let ow = (w - kh) / stride + 1;
+                2 * (f * oh * ow * c * kh * kh) as u64
+            }
+            KernelSig::Elementwise { len } => len as u64,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match *self {
+            KernelSig::MatMul { m, n, k } => 4 * (m * k + k * n + m * n) as u64,
+            KernelSig::Conv2d { c, h, w, f, kh, stride } => {
+                let oh = (h - kh) / stride + 1;
+                let ow = (w - kh) / stride + 1;
+                4 * (c * h * w + f * c * kh * kh + f * oh * ow) as u64
+            }
+            KernelSig::Elementwise { len } => 12 * len as u64,
+        }
+    }
+
+    /// Generate the kernel artifact at a config (addresses are placeholders:
+    /// only the profiles matter for cost estimation).
+    pub fn generate(&self, mach: &MachineConfig, kc: KernelConfig) -> KernelArtifact {
+        match *self {
+            KernelSig::MatMul { m, n, k } => {
+                kernels::matmul(mach, kc, m, n, k, 0x1000, 0x100000, 0x200000, DType::F32)
+                    .expect("matmul generation")
+            }
+            KernelSig::Conv2d { c, h, w, f, kh, stride } => kernels_nn::conv2d(
+                mach,
+                kc,
+                kernels_nn::Conv2dDesc {
+                    n: 1,
+                    cin: c,
+                    h,
+                    w,
+                    cout: f,
+                    kh,
+                    kw: kh,
+                    stride,
+                    pad: kh / 2,
+                    groups: 1,
+                },
+                0x1000,
+                0x40000000,
+                None,
+                0x200000,
+                DType::F32,
+            )
+            .expect("conv generation"),
+            KernelSig::Elementwise { len } => kernels::elementwise_binary(
+                mach,
+                kc,
+                kernels::BinKind::Add,
+                len,
+                0x1000,
+                0x100000,
+                0x200000,
+                DType::F32,
+            )
+            .expect("elementwise generation"),
+        }
+    }
+}
+
+fn lg(x: f64) -> f64 {
+    (x.max(1.0)).log2()
+}
+
+/// Extract the frozen 16-feature vector (last = bias 1).
+pub fn extract(sig: &KernelSig, kc: KernelConfig) -> [f64; NUM_FEATURES] {
+    let (m, n, k) = match *sig {
+        KernelSig::MatMul { m, n, k } => (m, n, k),
+        KernelSig::Conv2d { c, h, w, f, kh, stride } => {
+            let oh = (h - kh) / stride + 1;
+            let ow = (w - kh) / stride + 1;
+            (f, oh * ow, c * kh * kh)
+        }
+        KernelSig::Elementwise { len } => (1, len, 1),
+    };
+    let flops = sig.flops() as f64;
+    let bytes = sig.bytes() as f64;
+    let tile_bytes = 4.0 * (kc.tile_m * kc.tile_k + kc.tile_k * kc.tile_n + kc.tile_m * kc.tile_n) as f64;
+    [
+        lg(m as f64),
+        lg(n as f64),
+        lg(k as f64),
+        lg(kc.tile_m as f64),
+        lg(kc.tile_n as f64),
+        lg(kc.tile_k as f64),
+        kc.unroll as f64,
+        kc.lmul as f64,
+        lg(flops),
+        lg(bytes),
+        flops / bytes.max(1.0),                       // arithmetic intensity
+        tile_bytes / (32.0 * 1024.0),                 // L1 pressure of the tile
+        (n % 8) as f64 / 8.0,                         // vector-tail waste
+        ((m.min(kc.tile_m) * n.min(kc.tile_n)) as f64).log2(), // tile area
+        lg((m * n) as f64),                           // output size
+        1.0,                                          // bias
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_vector_is_16_wide_and_finite() {
+        for sig in [
+            KernelSig::matmul(128, 256, 512),
+            KernelSig::conv2d(3, 224, 224, 64, 7, 2),
+            KernelSig::elementwise(1024 * 1024),
+        ] {
+            let f = extract(&sig, KernelConfig::default());
+            assert_eq!(f.len(), NUM_FEATURES);
+            assert!(f.iter().all(|v| v.is_finite()), "{sig:?}: {f:?}");
+            assert_eq!(f[NUM_FEATURES - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn configs_change_features() {
+        let sig = KernelSig::matmul(64, 64, 64);
+        let a = extract(&sig, KernelConfig::default());
+        let b = extract(&sig, KernelConfig { lmul: 4, unroll: 2, ..Default::default() });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn paper_table5_workloads_generate() {
+        let mach = MachineConfig::xgen_asic();
+        // The three Table 5 rows must all produce artifacts.
+        for sig in [
+            KernelSig::matmul(128, 256, 512),
+            KernelSig::conv2d(3, 224, 224, 16, 3, 1),
+            KernelSig::elementwise(1024 * 1024),
+        ] {
+            let art = sig.generate(&mach, KernelConfig::default());
+            assert!(art.nest.instr_count() > 0);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Frontend (paper §3.1 stage 1): model loading and IR construction.
+//!
+//! Models arrive either as ONNX-JSON files ([`onnx_json`]) or from the
+//! built-in [`model_zoo`] (the paper's four evaluation models at full scale,
+//! plus scaled variants for execution-heavy experiments). After loading,
+//! shape inference annotates every tensor and `Graph::check` enforces
+//! structural validity — nothing undefined proceeds to optimization.
+
+pub mod model_zoo;
+pub mod onnx_json;
+
+use crate::ir::{infer, Graph};
+use crate::util::error::Result;
+
+/// Load + validate + infer shapes: the complete frontend stage.
+pub fn prepare(mut g: Graph) -> Result<Graph> {
+    g.check()?;
+    infer::infer_shapes(&mut g)?;
+    Ok(g)
+}
+
+/// Resolve a model spec: `zoo:<name>` or a path to an ONNX-JSON file.
+pub fn load_model(spec: &str) -> Result<Graph> {
+    let g = if let Some(name) = spec.strip_prefix("zoo:") {
+        model_zoo::by_name(name)?
+    } else {
+        onnx_json::load_file(spec)?
+    };
+    prepare(g)
+}

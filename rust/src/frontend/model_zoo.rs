@@ -1,0 +1,643 @@
+//! The paper's evaluation models (§4.1), built programmatically at full
+//! scale with deterministic lazily-synthesized weights: ResNet-50,
+//! MobileNet-V2, BERT-base, ViT-Base — plus CIFAR-scale variants used by the
+//! execution-heavy experiments (quantization accuracy, codegen numerics) and
+//! the three-model vision-language pipeline of case study 1.
+
+use crate::ir::dtype::DType;
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::ops::{AttrValue, Attrs, OpKind};
+use crate::ir::shape::{Dim, Shape};
+use crate::ir::tensor::Initializer;
+use crate::util::error::{Error, Result};
+
+/// Look up a zoo model by name.
+pub fn by_name(name: &str) -> Result<Graph> {
+    Ok(match name {
+        "resnet50" => resnet50(1),
+        "mobilenet_v2" => mobilenet_v2(1),
+        "bert_base" => bert_base(1, 128),
+        "vit_base" => vit_base(1),
+        "resnet_cifar" => resnet_cifar(1),
+        "mobilenet_cifar" => mobilenet_cifar(1),
+        "bert_tiny" => bert_tiny(1, 32),
+        "vit_tiny" => vit_tiny(1),
+        "mlp" => mlp(&[256, 128, 64, 10], 1),
+        "vision_encoder" => vision_encoder(1),
+        "text_encoder" => text_encoder(1, 64),
+        "decoder" => decoder(1, 64),
+        other => {
+            return Err(Error::Frontend(format!(
+                "unknown zoo model '{other}' (try resnet50, mobilenet_v2, bert_base, vit_base, \
+                 resnet_cifar, mobilenet_cifar, bert_tiny, vit_tiny, mlp)"
+            )))
+        }
+    })
+}
+
+/// The paper's four evaluation models (Table 3 rows).
+pub fn paper_models() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("ResNet-50", resnet50(1)),
+        ("MobileNet-V2", mobilenet_v2(1)),
+        ("BERT-base", bert_base(1, 128)),
+        ("ViT-Base", vit_base(1)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// builder helpers
+// ---------------------------------------------------------------------------
+
+/// Weight-seed counter so every initializer in a model gets a distinct,
+/// deterministic seed.
+struct Seeder(u64);
+
+impl Seeder {
+    fn next(&mut self) -> u64 {
+        self.0 += 1;
+        self.0
+    }
+}
+
+fn attrs(kv: &[(&str, AttrValue)]) -> Attrs {
+    kv.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+fn ints(v: &[i64]) -> AttrValue {
+    AttrValue::Ints(v.to_vec())
+}
+
+/// Conv (+ optional BN folded as scale/bias conv channel params) + ReLU.
+#[allow(clippy::too_many_arguments)]
+fn conv_bn_act(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    act: Option<OpKind>,
+) -> TensorId {
+    let std = (2.0 / (cin * k * k) as f32).sqrt(); // He init
+    let w = g.init(Initializer::lazy(
+        &format!("{name}_w"),
+        &[cout, cin, k, k],
+        s.next(),
+        std,
+    ));
+    let b = g.init(Initializer::lazy(&format!("{name}_b"), &[cout], s.next(), 0.01));
+    let mut y = g.node(
+        OpKind::Conv,
+        name,
+        &[x, w, b],
+        attrs(&[
+            ("strides", ints(&[stride as i64, stride as i64])),
+            ("pads", ints(&[pad as i64, pad as i64])),
+        ]),
+    );
+    // BatchNorm (inference form). Folded params still exercise the real op.
+    let gamma = g.init(Initializer::lazy(&format!("{name}_bn_g"), &[cout], s.next(), 0.1));
+    let beta = g.init(Initializer::lazy(&format!("{name}_bn_b"), &[cout], s.next(), 0.01));
+    let mean = g.init(Initializer::lazy(&format!("{name}_bn_m"), &[cout], s.next(), 0.01));
+    let var = g.init(Initializer::eager(
+        &format!("{name}_bn_v"),
+        &[cout],
+        vec![1.0; cout],
+    ));
+    y = g.node(
+        OpKind::BatchNormalization,
+        &format!("{name}_bn"),
+        &[y, gamma, beta, mean, var],
+        Attrs::new(),
+    );
+    match act {
+        Some(op) => g.node(op, &format!("{name}_act"), &[y], Attrs::new()),
+        None => y,
+    }
+}
+
+fn depthwise_bn_act(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> TensorId {
+    let std = (2.0 / (k * k) as f32).sqrt();
+    let w = g.init(Initializer::lazy(&format!("{name}_w"), &[c, 1, k, k], s.next(), std));
+    let y = g.node(
+        OpKind::DepthwiseConv,
+        name,
+        &[x, w],
+        attrs(&[
+            ("strides", ints(&[stride as i64, stride as i64])),
+            ("pads", ints(&[pad as i64, pad as i64])),
+        ]),
+    );
+    g.node(OpKind::Relu6, &format!("{name}_act"), &[y], Attrs::new())
+}
+
+fn fc(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    din: usize,
+    dout: usize,
+) -> TensorId {
+    let std = (2.0 / din as f32).sqrt();
+    let w = g.init(Initializer::lazy(&format!("{name}_w"), &[din, dout], s.next(), std));
+    let b = g.init(Initializer::lazy(&format!("{name}_b"), &[dout], s.next(), 0.01));
+    g.node(OpKind::Gemm, name, &[x, w, b], Attrs::new())
+}
+
+// ---------------------------------------------------------------------------
+// MLP family (compile-time scaling experiments, quickstart)
+// ---------------------------------------------------------------------------
+
+/// Plain MLP: sizes[0] -> ... -> sizes[last], ReLU between layers.
+pub fn mlp(sizes: &[usize], batch: usize) -> Graph {
+    let mut g = Graph::new("mlp");
+    let mut s = Seeder(1000);
+    let mut x = g.input("x", Shape::fixed(&[batch, sizes[0]]), DType::F32);
+    for (i, w) in sizes.windows(2).enumerate() {
+        x = fc(&mut g, &mut s, &format!("fc{i}"), x, w[0], w[1]);
+        if i + 2 < sizes.len() {
+            x = g.node(OpKind::Relu, &format!("relu{i}"), &[x], Attrs::new());
+        }
+    }
+    g.outputs.push(x);
+    g
+}
+
+/// MLP with a symbolic batch dimension (dynamic-shape experiments, §3.5).
+pub fn mlp_dynamic(sizes: &[usize], max_batch: usize) -> Graph {
+    let mut g = Graph::new("mlp_dyn");
+    let mut s = Seeder(1000);
+    let mut x = g.input(
+        "x",
+        Shape(vec![Dim::sym("batch", 1, max_batch), Dim::Fixed(sizes[0])]),
+        DType::F32,
+    );
+    for (i, w) in sizes.windows(2).enumerate() {
+        x = fc(&mut g, &mut s, &format!("fc{i}"), x, w[0], w[1]);
+        if i + 2 < sizes.len() {
+            x = g.node(OpKind::Relu, &format!("relu{i}"), &[x], Attrs::new());
+        }
+    }
+    g.outputs.push(x);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// ResNet-50 (paper scale: 224x224, ~25.5M params)
+// ---------------------------------------------------------------------------
+
+fn bottleneck(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    cin: usize,
+    cmid: usize,
+    cout: usize,
+    stride: usize,
+) -> TensorId {
+    let a = conv_bn_act(g, s, &format!("{name}_c1"), x, cin, cmid, 1, 1, 0, Some(OpKind::Relu));
+    let b = conv_bn_act(g, s, &format!("{name}_c2"), a, cmid, cmid, 3, stride, 1, Some(OpKind::Relu));
+    let c = conv_bn_act(g, s, &format!("{name}_c3"), b, cmid, cout, 1, 1, 0, None);
+    let shortcut = if cin != cout || stride != 1 {
+        conv_bn_act(g, s, &format!("{name}_sc"), x, cin, cout, 1, stride, 0, None)
+    } else {
+        x
+    };
+    let sum = g.node(OpKind::Add, &format!("{name}_add"), &[c, shortcut], Attrs::new());
+    g.node(OpKind::Relu, &format!("{name}_out"), &[sum], Attrs::new())
+}
+
+fn resnet(name: &str, batch: usize, img: usize, blocks: [usize; 4], width: usize, classes: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let mut s = Seeder(2000);
+    let x = g.input("image", Shape::fixed(&[batch, 3, img, img]), DType::F32);
+    // Stem.
+    let mut y = conv_bn_act(&mut g, &mut s, "conv1", x, 3, width, 7, 2, 3, Some(OpKind::Relu));
+    y = g.node(
+        OpKind::MaxPool,
+        "pool1",
+        &[y],
+        attrs(&[
+            ("kernel_shape", ints(&[3, 3])),
+            ("strides", ints(&[2, 2])),
+            ("pads", ints(&[1, 1])),
+        ]),
+    );
+    // Stages.
+    let mut cin = width;
+    for (si, &n) in blocks.iter().enumerate() {
+        let cmid = width << si;
+        let cout = cmid * 4;
+        for bi in 0..n {
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            y = bottleneck(&mut g, &mut s, &format!("s{si}b{bi}"), y, cin, cmid, cout, stride);
+            cin = cout;
+        }
+    }
+    // Head.
+    y = g.node(OpKind::GlobalAveragePool, "gap", &[y], Attrs::new());
+    y = g.node(
+        OpKind::Flatten,
+        "flat",
+        &[y],
+        attrs(&[("axis", AttrValue::Int(1))]),
+    );
+    y = fc(&mut g, &mut s, "fc", y, cin, classes);
+    g.outputs.push(y);
+    g
+}
+
+/// Full ResNet-50 @ 224 (paper Table 3 row 1).
+pub fn resnet50(batch: usize) -> Graph {
+    resnet("resnet50", batch, 224, [3, 4, 6, 3], 64, 1000)
+}
+
+/// CIFAR-scale ResNet (32x32, narrow) — executable on the host oracle for
+/// the Table 6 accuracy-retention experiments.
+pub fn resnet_cifar(batch: usize) -> Graph {
+    resnet("resnet_cifar", batch, 32, [1, 1, 1, 1], 16, 10)
+}
+
+// ---------------------------------------------------------------------------
+// MobileNet-V2 (paper scale: ~3.5M params)
+// ---------------------------------------------------------------------------
+
+fn inverted_residual(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    expand: usize,
+) -> TensorId {
+    let cexp = cin * expand;
+    let mut y = x;
+    if expand != 1 {
+        y = conv_bn_act(g, s, &format!("{name}_exp"), y, cin, cexp, 1, 1, 0, Some(OpKind::Relu6));
+    }
+    y = depthwise_bn_act(g, s, &format!("{name}_dw"), y, cexp, 3, stride, 1);
+    y = conv_bn_act(g, s, &format!("{name}_proj"), y, cexp, cout, 1, 1, 0, None);
+    if stride == 1 && cin == cout {
+        y = g.node(OpKind::Add, &format!("{name}_res"), &[y, x], Attrs::new());
+    }
+    y
+}
+
+fn mobilenet(name: &str, batch: usize, img: usize, width_mult: f32, classes: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let mut s = Seeder(3000);
+    let scale = |c: usize| ((c as f32 * width_mult) as usize).max(8);
+    let x = g.input("image", Shape::fixed(&[batch, 3, img, img]), DType::F32);
+    let mut c = scale(32);
+    let mut y = conv_bn_act(&mut g, &mut s, "conv1", x, 3, c, 3, 2, 1, Some(OpKind::Relu6));
+    // (expand, channels, repeats, stride) — the MobileNet-V2 spec table.
+    let spec: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (bi, &(t, ch, n, st)) in spec.iter().enumerate() {
+        let cout = scale(ch);
+        for i in 0..n {
+            let stride = if i == 0 { st } else { 1 };
+            y = inverted_residual(&mut g, &mut s, &format!("ir{bi}_{i}"), y, c, cout, stride, t);
+            c = cout;
+        }
+    }
+    let clast = scale(1280);
+    y = conv_bn_act(&mut g, &mut s, "conv_last", y, c, clast, 1, 1, 0, Some(OpKind::Relu6));
+    y = g.node(OpKind::GlobalAveragePool, "gap", &[y], Attrs::new());
+    y = g.node(OpKind::Flatten, "flat", &[y], attrs(&[("axis", AttrValue::Int(1))]));
+    y = fc(&mut g, &mut s, "fc", y, clast, classes);
+    g.outputs.push(y);
+    g
+}
+
+/// Full MobileNet-V2 @ 224 (paper Table 3 row 2).
+pub fn mobilenet_v2(batch: usize) -> Graph {
+    mobilenet("mobilenet_v2", batch, 224, 1.0, 1000)
+}
+
+/// CIFAR-scale MobileNet (32x32, 0.5x width) for accuracy experiments.
+pub fn mobilenet_cifar(batch: usize) -> Graph {
+    mobilenet("mobilenet_cifar", batch, 32, 0.5, 10)
+}
+
+// ---------------------------------------------------------------------------
+// Transformers: BERT-base & ViT-Base (~110M / ~86M params)
+// ---------------------------------------------------------------------------
+
+fn transformer_layer(
+    g: &mut Graph,
+    s: &mut Seeder,
+    name: &str,
+    x: TensorId,
+    d: usize,
+    ffn: usize,
+    heads: usize,
+    seq: usize,
+    batch: usize,
+) -> TensorId {
+    let mk = |g: &mut Graph, s: &mut Seeder, n: String| {
+        let std = (1.0 / d as f32).sqrt();
+        g.init(Initializer::lazy(&n, &[d, d], s.next(), std))
+    };
+    let wq = mk(g, s, format!("{name}_wq"));
+    let wk = mk(g, s, format!("{name}_wk"));
+    let wv = mk(g, s, format!("{name}_wv"));
+    let wo = mk(g, s, format!("{name}_wo"));
+    let attn = g.node(
+        OpKind::Attention,
+        &format!("{name}_attn"),
+        &[x, wq, wk, wv, wo],
+        attrs(&[("num_heads", AttrValue::Int(heads as i64))]),
+    );
+    let res1 = g.node(OpKind::Add, &format!("{name}_res1"), &[x, attn], Attrs::new());
+    let ln_g = g.init(Initializer::eager(&format!("{name}_ln1_g"), &[d], vec![1.0; d]));
+    let ln_b = g.init(Initializer::eager(&format!("{name}_ln1_b"), &[d], vec![0.0; d]));
+    let ln1 = g.node(
+        OpKind::LayerNormalization,
+        &format!("{name}_ln1"),
+        &[res1, ln_g, ln_b],
+        Attrs::new(),
+    );
+    // FFN: reshape to 2-D for Gemm, then back.
+    let flat = g.node(
+        OpKind::Reshape,
+        &format!("{name}_flat"),
+        &[ln1],
+        attrs(&[("shape", ints(&[(batch * seq) as i64, d as i64]))]),
+    );
+    let h = fc(g, s, &format!("{name}_ffn1"), flat, d, ffn);
+    let h = g.node(OpKind::Gelu, &format!("{name}_gelu"), &[h], Attrs::new());
+    let h = fc(g, s, &format!("{name}_ffn2"), h, ffn, d);
+    let unflat = g.node(
+        OpKind::Reshape,
+        &format!("{name}_unflat"),
+        &[h],
+        attrs(&[("shape", ints(&[batch as i64, seq as i64, d as i64]))]),
+    );
+    let res2 = g.node(OpKind::Add, &format!("{name}_res2"), &[ln1, unflat], Attrs::new());
+    let ln2_g = g.init(Initializer::eager(&format!("{name}_ln2_g"), &[d], vec![1.0; d]));
+    let ln2_b = g.init(Initializer::eager(&format!("{name}_ln2_b"), &[d], vec![0.0; d]));
+    g.node(
+        OpKind::LayerNormalization,
+        &format!("{name}_ln2"),
+        &[res2, ln2_g, ln2_b],
+        Attrs::new(),
+    )
+}
+
+fn bert(name: &str, batch: usize, seq: usize, d: usize, layers: usize, heads: usize, vocab: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let mut s = Seeder(4000);
+    let emb = g.init(Initializer::lazy("tok_emb", &[vocab, d], s.next(), 0.02));
+    let ids = g.input("input_ids", Shape::fixed(&[batch, seq]), DType::I32);
+    let mut x = g.node(OpKind::Gather, "embed", &[emb, ids], Attrs::new());
+    let pos = g.init(Initializer::lazy("pos_emb", &[seq, d], s.next(), 0.02));
+    x = g.node(OpKind::Add, "pos_add", &[x, pos], Attrs::new());
+    for l in 0..layers {
+        x = transformer_layer(&mut g, &mut s, &format!("l{l}"), x, d, d * 4, heads, seq, batch);
+    }
+    // Pooler over [CLS]-equivalent: mean-pool then dense+tanh.
+    let pooled = g.node(
+        OpKind::ReduceMean,
+        "pool",
+        &[x],
+        attrs(&[("axes", ints(&[1])), ("keepdims", AttrValue::Int(0))]),
+    );
+    let y = fc(&mut g, &mut s, "pooler", pooled, d, d);
+    let y = g.node(OpKind::Tanh, "pooler_act", &[y], Attrs::new());
+    g.outputs.push(y);
+    g
+}
+
+/// Full BERT-base: 12 layers, d=768, 12 heads, vocab 30522 (Table 3 row 3).
+pub fn bert_base(batch: usize, seq: usize) -> Graph {
+    bert("bert_base", batch, seq, 768, 12, 12, 30522)
+}
+
+/// Tiny BERT for execution experiments: 2 layers, d=64.
+pub fn bert_tiny(batch: usize, seq: usize) -> Graph {
+    bert("bert_tiny", batch, seq, 64, 2, 4, 1000)
+}
+
+fn vit(name: &str, batch: usize, img: usize, patch: usize, d: usize, layers: usize, heads: usize, classes: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let mut s = Seeder(5000);
+    let x = g.input("image", Shape::fixed(&[batch, 3, img, img]), DType::F32);
+    // Patch embedding: conv patch x patch stride patch -> [B, D, P, P].
+    let std = (2.0 / (3 * patch * patch) as f32).sqrt();
+    let w = g.init(Initializer::lazy("patch_w", &[d, 3, patch, patch], s.next(), std));
+    let mut y = g.node(
+        OpKind::Conv,
+        "patch_embed",
+        &[x, w],
+        attrs(&[("strides", ints(&[patch as i64, patch as i64]))]),
+    );
+    let p = img / patch;
+    let seq = p * p;
+    // [B, D, P, P] -> [B, D, S] -> [B, S, D]
+    y = g.node(
+        OpKind::Reshape,
+        "tokens",
+        &[y],
+        attrs(&[("shape", ints(&[batch as i64, d as i64, seq as i64]))]),
+    );
+    y = g.node(
+        OpKind::Transpose,
+        "tokens_t",
+        &[y],
+        attrs(&[("perm", ints(&[0, 2, 1]))]),
+    );
+    let pos = g.init(Initializer::lazy("pos_emb", &[seq, d], s.next(), 0.02));
+    y = g.node(OpKind::Add, "pos_add", &[y, pos], Attrs::new());
+    for l in 0..layers {
+        y = transformer_layer(&mut g, &mut s, &format!("l{l}"), y, d, d * 4, heads, seq, batch);
+    }
+    let pooled = g.node(
+        OpKind::ReduceMean,
+        "pool",
+        &[y],
+        attrs(&[("axes", ints(&[1])), ("keepdims", AttrValue::Int(0))]),
+    );
+    let logits = fc(&mut g, &mut s, "head", pooled, d, classes);
+    g.outputs.push(logits);
+    g
+}
+
+/// Full ViT-Base/16 @ 224 (Table 3 row 4).
+pub fn vit_base(batch: usize) -> Graph {
+    vit("vit_base", batch, 224, 16, 768, 12, 12, 1000)
+}
+
+/// Tiny ViT for execution experiments.
+pub fn vit_tiny(batch: usize) -> Graph {
+    vit("vit_tiny", batch, 32, 8, 64, 2, 4, 10)
+}
+
+// ---------------------------------------------------------------------------
+// Case study 1: vision-language pipeline (vision enc + text enc + decoder)
+// ---------------------------------------------------------------------------
+
+/// Vision encoder: a ViT-Large-width tower. Together the three pipeline
+/// models carry ~1.25 GB of raw FP32 weights; WMEM consolidation (§5.1)
+/// dedups the text-encoder/decoder shared layers down to ~980 MB — the case
+/// study's numbers.
+pub fn vision_encoder(batch: usize) -> Graph {
+    vit("vision_encoder", batch, 224, 14, 1024, 12, 16, 1024)
+}
+
+/// Text encoder: BERT-like, 6 layers at d=768.
+pub fn text_encoder(batch: usize, seq: usize) -> Graph {
+    bert("text_encoder", batch, seq, 768, 6, 12, 30522)
+}
+
+/// Decoder: GPT-like, 10 layers at d=768. Initialized *from the text
+/// encoder* (common VLM practice), so its embedding table and first six
+/// layers are bit-identical to `text_encoder`'s — which is exactly what
+/// WMEM consolidation exploits (both builders share the same seed stream).
+pub fn decoder(batch: usize, seq: usize) -> Graph {
+    bert("decoder", batch, seq, 768, 10, 12, 30522)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::prepare;
+    use crate::ir::exec::Executor;
+    use crate::ir::tensor::Tensor;
+
+    #[test]
+    fn resnet50_paper_scale() {
+        let g = prepare(resnet50(1)).unwrap();
+        let params = g.param_count();
+        // Torch ResNet-50: 25.56M. Ours (conv+bn+fc) should land close.
+        assert!(
+            (23_000_000..28_000_000).contains(&params),
+            "resnet50 params {params}"
+        );
+        // Output logits [1, 1000].
+        assert_eq!(
+            g.shape_of(g.outputs[0]).unwrap().dims(),
+            vec![1, 1000]
+        );
+    }
+
+    #[test]
+    fn mobilenet_v2_paper_scale() {
+        let g = prepare(mobilenet_v2(1)).unwrap();
+        let params = g.param_count();
+        // Torch MobileNet-V2: 3.5M.
+        assert!(
+            (2_500_000..5_000_000).contains(&params),
+            "mobilenet params {params}"
+        );
+    }
+
+    #[test]
+    fn bert_base_paper_scale() {
+        let g = prepare(bert_base(1, 128)).unwrap();
+        let params = g.param_count();
+        // BERT-base: ~110M.
+        assert!(
+            (95_000_000..125_000_000).contains(&params),
+            "bert params {params}"
+        );
+        assert_eq!(g.shape_of(g.outputs[0]).unwrap().dims(), vec![1, 768]);
+    }
+
+    #[test]
+    fn vit_base_paper_scale() {
+        let g = prepare(vit_base(1)).unwrap();
+        let params = g.param_count();
+        // ViT-Base: ~86M.
+        assert!(
+            (75_000_000..95_000_000).contains(&params),
+            "vit params {params}"
+        );
+    }
+
+    #[test]
+    fn cifar_variants_execute() {
+        let g = prepare(resnet_cifar(1)).unwrap();
+        let out = Executor::new()
+            .run(&g, &[Tensor::zeros(&[1, 3, 32, 32])])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![1, 10]);
+
+        let g = prepare(mobilenet_cifar(1)).unwrap();
+        let out = Executor::new()
+            .run(&g, &[Tensor::zeros(&[1, 3, 32, 32])])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn bert_tiny_executes() {
+        let g = prepare(bert_tiny(1, 32)).unwrap();
+        let ids = Tensor::new(vec![1, 32], (0..32).map(|i| (i % 100) as f32).collect());
+        let out = Executor::new().run(&g, &[ids]).unwrap();
+        assert_eq!(out[0].shape, vec![1, 64]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn vit_tiny_executes() {
+        let g = prepare(vit_tiny(1)).unwrap();
+        let mut img = Tensor::zeros(&[1, 3, 32, 32]);
+        for (i, v) in img.data.iter_mut().enumerate() {
+            *v = ((i % 17) as f32 - 8.0) / 8.0;
+        }
+        let out = Executor::new().run(&g, &[img]).unwrap();
+        assert_eq!(out[0].shape, vec![1, 10]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pipeline_models_total_near_980mb() {
+        // Case study 1: 3 models, ~980MB of FP32 weights after consolidation.
+        let total: usize = [vision_encoder(1), text_encoder(1, 64), decoder(1, 64)]
+            .iter()
+            .map(|g| g.weight_bytes())
+            .sum();
+        let mb = total as f64 / (1024.0 * 1024.0);
+        assert!((700.0..1400.0).contains(&mb), "pipeline weights {mb:.0} MB");
+    }
+
+    #[test]
+    fn zoo_by_name_dispatch() {
+        assert!(by_name("resnet50").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn deterministic_weights() {
+        let a = resnet_cifar(1);
+        let b = resnet_cifar(1);
+        let ia = a.initializers.values().next().unwrap();
+        let ib = b.initializers.values().next().unwrap();
+        assert_eq!(ia.materialize(), ib.materialize());
+    }
+}

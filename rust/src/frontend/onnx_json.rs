@@ -1,0 +1,409 @@
+//! ONNX-JSON model format: a JSON projection of the ONNX GraphProto
+//! (protobuf is unavailable offline; the JSON carries the same fields).
+//!
+//! ```json
+//! {
+//!   "name": "model",
+//!   "inputs":  [{"name": "x", "shape": [1, 3, 224, 224], "dtype": "FP32"}],
+//!   "outputs": ["logits"],
+//!   "initializers": [
+//!     {"name": "w1", "shape": [64, 3, 7, 7], "data": [..]},          // eager
+//!     {"name": "w2", "shape": [64, 64, 3, 3], "seed": 7, "std": 0.02} // lazy
+//!   ],
+//!   "nodes": [
+//!     {"op": "Conv", "name": "conv1", "inputs": ["x", "w1"],
+//!      "outputs": ["a1"], "attrs": {"strides": [2, 2], "pads": [3, 3]}}
+//!   ]
+//! }
+//! ```
+//!
+//! Symbolic dims are written as objects: `{"sym": "batch", "min": 1, "max": 32}`
+//! or as `-1` (anonymous symbol, range 1..=64).
+
+use std::collections::BTreeMap;
+
+use crate::ir::dtype::DType;
+use crate::ir::graph::{Graph, Node, TensorId};
+use crate::ir::ops::{AttrValue, Attrs, OpKind};
+use crate::ir::shape::{Dim, Shape};
+use crate::ir::tensor::Initializer;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Load a model from an ONNX-JSON file.
+pub fn load_file(path: &str) -> Result<Graph> {
+    let text = std::fs::read_to_string(path)?;
+    load_str(&text)
+}
+
+/// Load a model from ONNX-JSON text.
+pub fn load_str(text: &str) -> Result<Graph> {
+    let doc = Json::parse(text)?;
+    let mut g = Graph::new(doc.get("name").as_str().unwrap_or("model"));
+    // name -> tensor id map, populated as tensors appear.
+    let mut by_name: BTreeMap<String, TensorId> = BTreeMap::new();
+
+    for inp in doc.req_arr("inputs")? {
+        let name = inp.req_str("name")?;
+        let shape = parse_shape(inp.get("shape"))?;
+        let dtype = inp
+            .get("dtype")
+            .as_str()
+            .and_then(DType::parse)
+            .unwrap_or(DType::F32);
+        let id = g.input(name, shape, dtype);
+        by_name.insert(name.to_string(), id);
+    }
+
+    if let Some(inits) = doc.get("initializers").as_arr() {
+        for init in inits {
+            let name = init.req_str("name")?;
+            let dims: Vec<usize> = init
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::Frontend("bad init dim".into())))
+                .collect::<Result<_>>()?;
+            let mut i = if let Some(data) = init.get("data").as_arr() {
+                let vals: Vec<f32> = data.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
+                if vals.len() != dims.iter().product::<usize>() {
+                    return Err(Error::Frontend(format!(
+                        "initializer '{name}': {} values for shape {dims:?}",
+                        vals.len()
+                    )));
+                }
+                Initializer::eager(name, &dims, vals)
+            } else {
+                Initializer::lazy(
+                    name,
+                    &dims,
+                    init.get("seed").as_i64().unwrap_or(0) as u64,
+                    init.get("std").as_f64().unwrap_or(0.02) as f32,
+                )
+            };
+            if let Some(dt) = init.get("dtype").as_str().and_then(DType::parse) {
+                i.dtype = dt;
+            }
+            let id = g.init(i);
+            by_name.insert(name.to_string(), id);
+        }
+    }
+
+    for node in doc.req_arr("nodes")? {
+        let op_name = node.req_str("op")?;
+        let op = OpKind::parse(op_name).ok_or_else(|| {
+            Error::Frontend(format!(
+                "unsupported operator '{op_name}' (not in the {}-op registry)",
+                OpKind::all().len()
+            ))
+        })?;
+        let name = node.get("name").as_str().unwrap_or(op_name).to_string();
+        let inputs: Vec<TensorId> = node
+            .req_arr("inputs")?
+            .iter()
+            .map(|i| {
+                let n = i
+                    .as_str()
+                    .ok_or_else(|| Error::Frontend("node input must be a name".into()))?;
+                by_name
+                    .get(n)
+                    .copied()
+                    .ok_or_else(|| Error::Frontend(format!("node '{name}' uses undefined tensor '{n}'")))
+            })
+            .collect::<Result<_>>()?;
+        let out_names: Vec<String> = node
+            .req_arr("outputs")?
+            .iter()
+            .map(|o| {
+                o.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::Frontend("node output must be a name".into()))
+            })
+            .collect::<Result<_>>()?;
+        let outputs: Vec<TensorId> = out_names
+            .iter()
+            .map(|n| {
+                let id = g.tensor(n, None, DType::F32);
+                by_name.insert(n.clone(), id);
+                id
+            })
+            .collect();
+        g.nodes.push(Node {
+            name,
+            op,
+            inputs,
+            outputs,
+            attrs: parse_attrs(node.get("attrs"))?,
+        });
+    }
+
+    for out in doc.req_arr("outputs")? {
+        let n = out
+            .as_str()
+            .ok_or_else(|| Error::Frontend("graph output must be a name".into()))?;
+        let id = by_name
+            .get(n)
+            .copied()
+            .ok_or_else(|| Error::Frontend(format!("undefined graph output '{n}'")))?;
+        g.outputs.push(id);
+    }
+    Ok(g)
+}
+
+/// Serialize a graph back to ONNX-JSON (used by `dynshape` clone tests and
+/// the CLI `export` command).
+pub fn save_str(g: &Graph) -> String {
+    let mut doc = BTreeMap::new();
+    doc.insert("name".to_string(), Json::str_(&g.name));
+    doc.insert(
+        "inputs".to_string(),
+        Json::Arr(
+            g.inputs
+                .iter()
+                .map(|&id| {
+                    let info = g.info(id);
+                    Json::obj(vec![
+                        ("name", Json::str_(&info.name)),
+                        ("shape", shape_to_json(info.shape.as_ref().unwrap())),
+                        ("dtype", Json::str_(info.dtype.name())),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "outputs".to_string(),
+        Json::Arr(
+            g.outputs
+                .iter()
+                .map(|&id| Json::str_(&g.info(id).name))
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "initializers".to_string(),
+        Json::Arr(
+            g.initializers
+                .iter()
+                .map(|(_, init)| {
+                    let mut fields = vec![
+                        ("name", Json::str_(&init.name)),
+                        (
+                            "shape",
+                            Json::Arr(
+                                init.shape
+                                    .dims()
+                                    .iter()
+                                    .map(|&d| Json::Num(d as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        ("dtype", Json::str_(init.dtype.name())),
+                    ];
+                    match &init.data {
+                        Some(t) => fields.push((
+                            "data",
+                            Json::Arr(t.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        )),
+                        None => {
+                            fields.push(("seed", Json::Num(init.seed as f64)));
+                            fields.push(("std", Json::Num(init.init_std as f64)));
+                        }
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "nodes".to_string(),
+        Json::Arr(
+            g.nodes
+                .iter()
+                .map(|n| {
+                    Json::obj(vec![
+                        ("op", Json::str_(n.op.name())),
+                        ("name", Json::str_(&n.name)),
+                        (
+                            "inputs",
+                            Json::Arr(
+                                n.inputs
+                                    .iter()
+                                    .map(|&t| Json::str_(&g.info(t).name))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "outputs",
+                            Json::Arr(
+                                n.outputs
+                                    .iter()
+                                    .map(|&t| Json::str_(&g.info(t).name))
+                                    .collect(),
+                            ),
+                        ),
+                        ("attrs", attrs_to_json(&n.attrs)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(doc).to_string_pretty()
+}
+
+fn parse_shape(j: &Json) -> Result<Shape> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Frontend("input shape must be an array".into()))?;
+    let mut dims = Vec::new();
+    for (i, d) in arr.iter().enumerate() {
+        dims.push(match d {
+            Json::Num(n) if *n == -1.0 => Dim::sym(&format!("dyn{i}"), 1, 64),
+            Json::Num(n) if *n >= 1.0 => Dim::Fixed(*n as usize),
+            Json::Obj(_) => {
+                let name = d.req_str("sym")?;
+                Dim::sym(
+                    name,
+                    d.get("min").as_usize().unwrap_or(1),
+                    d.get("max").as_usize().unwrap_or(64),
+                )
+            }
+            _ => return Err(Error::Frontend(format!("bad dim {d:?}"))),
+        });
+    }
+    Ok(Shape(dims))
+}
+
+fn shape_to_json(s: &Shape) -> Json {
+    Json::Arr(
+        s.0.iter()
+            .map(|d| match d {
+                Dim::Fixed(n) => Json::Num(*n as f64),
+                Dim::Sym { name, min, max } => Json::obj(vec![
+                    ("sym", Json::str_(name)),
+                    ("min", Json::Num(*min as f64)),
+                    ("max", Json::Num(*max as f64)),
+                ]),
+            })
+            .collect(),
+    )
+}
+
+fn parse_attrs(j: &Json) -> Result<Attrs> {
+    let mut attrs = Attrs::new();
+    if let Some(obj) = j.as_obj() {
+        for (k, v) in obj {
+            let av = match v {
+                Json::Num(n) if n.fract() == 0.0 => AttrValue::Int(*n as i64),
+                Json::Num(n) => AttrValue::Float(*n),
+                Json::Str(s) => AttrValue::Str(s.clone()),
+                Json::Arr(a) => AttrValue::Ints(
+                    a.iter()
+                        .map(|x| {
+                            x.as_i64()
+                                .ok_or_else(|| Error::Frontend(format!("attr '{k}' bad int list")))
+                        })
+                        .collect::<Result<_>>()?,
+                ),
+                _ => return Err(Error::Frontend(format!("attr '{k}' unsupported value"))),
+            };
+            attrs.insert(k.clone(), av);
+        }
+    }
+    Ok(attrs)
+}
+
+fn attrs_to_json(attrs: &Attrs) -> Json {
+    Json::Obj(
+        attrs
+            .iter()
+            .map(|(k, v)| {
+                let j = match v {
+                    AttrValue::Int(i) => Json::Num(*i as f64),
+                    AttrValue::Float(f) => Json::Num(*f),
+                    AttrValue::Str(s) => Json::str_(s),
+                    AttrValue::Ints(v) => {
+                        Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect())
+                    }
+                };
+                (k.clone(), j)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tensor::Tensor;
+    use crate::frontend::prepare;
+    use crate::ir::exec::Executor;
+
+    const TINY: &str = r#"{
+        "name": "tiny",
+        "inputs": [{"name": "x", "shape": [1, 4], "dtype": "FP32"}],
+        "outputs": ["y"],
+        "initializers": [
+            {"name": "w", "shape": [4, 2], "data": [1,0, 0,1, 1,0, 0,1]}
+        ],
+        "nodes": [
+            {"op": "MatMul", "name": "mm", "inputs": ["x", "w"], "outputs": ["h"]},
+            {"op": "Relu", "name": "act", "inputs": ["h"], "outputs": ["y"]}
+        ]
+    }"#;
+
+    #[test]
+    fn load_infer_execute() {
+        let g = prepare(load_str(TINY).unwrap()).unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        let out = Executor::new()
+            .run(&g, &[Tensor::new(vec![1, 4], vec![1.0, -2.0, 3.0, 4.0])])
+            .unwrap();
+        assert_eq!(out[0].data, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn roundtrip_through_save() {
+        let g = prepare(load_str(TINY).unwrap()).unwrap();
+        let text = save_str(&g);
+        let g2 = prepare(load_str(&text).unwrap()).unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        assert_eq!(g.param_count(), g2.param_count());
+        let out = Executor::new()
+            .run(&g2, &[Tensor::new(vec![1, 4], vec![1.0, -2.0, 3.0, 4.0])])
+            .unwrap();
+        assert_eq!(out[0].data, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn symbolic_dims_parse() {
+        let text = r#"{
+            "name": "dyn",
+            "inputs": [{"name": "x", "shape": [{"sym": "batch", "min": 1, "max": 32}, 8]}],
+            "outputs": ["y"],
+            "initializers": [{"name": "w", "shape": [8, 8], "seed": 1, "std": 0.1}],
+            "nodes": [{"op": "MatMul", "name": "mm", "inputs": ["x", "w"], "outputs": ["y"]}]
+        }"#;
+        let g = prepare(load_str(text).unwrap()).unwrap();
+        assert!(g.has_symbolic_dims());
+        assert_eq!(g.shape_of(g.outputs[0]).unwrap().onnx_dims(), vec![-1, 8]);
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let text = r#"{
+            "name": "bad", "inputs": [{"name": "x", "shape": [1]}], "outputs": ["y"],
+            "nodes": [{"op": "FrobnicateOp", "inputs": ["x"], "outputs": ["y"]}]
+        }"#;
+        let e = load_str(text).unwrap_err();
+        assert!(format!("{e}").contains("FrobnicateOp"));
+    }
+
+    #[test]
+    fn rejects_undefined_tensor() {
+        let text = r#"{
+            "name": "bad", "inputs": [{"name": "x", "shape": [1]}], "outputs": ["y"],
+            "nodes": [{"op": "Relu", "inputs": ["ghost"], "outputs": ["y"]}]
+        }"#;
+        assert!(load_str(text).is_err());
+    }
+}

@@ -1,0 +1,403 @@
+//! Numeric precisions (paper Table 2): FP32 down to Binary, with real
+//! bit-level conversion routines used by the quantizer and by codegen's
+//! memory-footprint accounting.
+
+/// Supported precisions and their storage characteristics (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    /// 32-bit IEEE-754 float — baseline, high accuracy.
+    F32,
+    /// 16-bit IEEE-754 half — balanced performance/accuracy.
+    F16,
+    /// bfloat16 — FP32 exponent range, training stability (paper §3.3.3).
+    BF16,
+    /// FP8 E4M3 — aggressive quantization.
+    FP8,
+    /// FP4 E2M1 — extreme compression.
+    FP4,
+    /// int8 affine quantization — standard.
+    I8,
+    /// int4 affine quantization — ultra-low bitwidth.
+    I4,
+    /// 1-bit binary (+1/-1) networks.
+    Binary,
+    /// 32-bit int (indices, shapes — not a quantization target).
+    I32,
+}
+
+impl DType {
+    /// Bits per element (Table 2 "Bits" column).
+    pub fn bits(self) -> u32 {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::F16 | DType::BF16 => 16,
+            DType::FP8 | DType::I8 => 8,
+            DType::FP4 | DType::I4 => 4,
+            DType::Binary => 1,
+        }
+    }
+
+    /// Bytes per element as f64 (FP4 = 0.5, Binary = 0.125, per Table 2).
+    pub fn bytes_f64(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    /// Compression ratio vs FP32 (Table 2 "Compression" column).
+    pub fn compression(self) -> f64 {
+        32.0 / self.bits() as f64
+    }
+
+    /// Whether this is an integer-quantized type (affine scale/zero-point).
+    pub fn is_int_quant(self) -> bool {
+        matches!(self, DType::I8 | DType::I4 | DType::Binary)
+    }
+
+    /// Whether this is a reduced float type.
+    pub fn is_low_float(self) -> bool {
+        matches!(self, DType::F16 | DType::BF16 | DType::FP8 | DType::FP4)
+    }
+
+    /// Quantization integer range (qmin, qmax) for int types.
+    pub fn int_range(self) -> Option<(i32, i32)> {
+        match self {
+            DType::I8 => Some((-128, 127)),
+            DType::I4 => Some((-8, 7)),
+            DType::Binary => Some((-1, 1)),
+            _ => None,
+        }
+    }
+
+    /// Table 2 "Use Case" string.
+    pub fn use_case(self) -> &'static str {
+        match self {
+            DType::F32 => "Baseline, high accuracy",
+            DType::F16 => "Balanced performance/accuracy",
+            DType::BF16 => "Training stability",
+            DType::FP8 => "Aggressive quantization",
+            DType::FP4 => "Extreme compression",
+            DType::I8 => "Standard quantization",
+            DType::I4 => "Ultra-low bitwidth",
+            DType::Binary => "Binary neural networks",
+            DType::I32 => "Index arithmetic",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "FP32",
+            DType::F16 => "FP16",
+            DType::BF16 => "BF16",
+            DType::FP8 => "FP8",
+            DType::FP4 => "FP4",
+            DType::I8 => "INT8",
+            DType::I4 => "INT4",
+            DType::Binary => "Binary",
+            DType::I32 => "INT32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "FP32" | "F32" | "FLOAT32" => DType::F32,
+            "FP16" | "F16" | "FLOAT16" => DType::F16,
+            "BF16" | "BFLOAT16" => DType::BF16,
+            "FP8" | "F8" | "E4M3" => DType::FP8,
+            "FP4" | "F4" | "E2M1" => DType::FP4,
+            "INT8" | "I8" => DType::I8,
+            "INT4" | "I4" => DType::I4,
+            "BINARY" | "BIN" | "B1" => DType::Binary,
+            "INT32" | "I32" => DType::I32,
+            _ => return None,
+        })
+    }
+
+    /// All quantization-target precisions, highest to lowest (Table 2 order).
+    pub fn quant_targets() -> &'static [DType] {
+        &[
+            DType::F32,
+            DType::F16,
+            DType::BF16,
+            DType::FP8,
+            DType::FP4,
+            DType::I8,
+            DType::I4,
+            DType::Binary,
+        ]
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-level float conversions. These implement the *storage* round-trip used
+// to model reduced-precision error: value -> low-precision bits -> f32.
+// ---------------------------------------------------------------------------
+
+/// f32 -> IEEE-754 binary16 bits (round-to-nearest-even), -> f32.
+pub fn f16_roundtrip(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32;
+    let mut man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN.
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    exp = exp - 127 + 15;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // Subnormal or underflow.
+        if exp < -10 {
+            return sign;
+        }
+        man |= 0x80_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal: round mantissa 23 -> 10 bits, nearest-even.
+    let half = 0x0FFF + ((man >> 13) & 1);
+    man += half;
+    if man & 0x80_0000 != 0 {
+        man = 0;
+        exp += 1;
+        if exp >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((exp as u16) << 10) | ((man >> 13) as u16)
+}
+
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 (truncate low 16 bits w/ round-to-nearest-even) -> f32.
+/// The paper (§3.3.3) describes truncation; we use RNE which is what real
+/// BF16 hardware does and differs only in the last ulp.
+pub fn bf16_roundtrip(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return x;
+    }
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    let b16 = ((bits + rounding_bias) >> 16) as u16;
+    f32::from_bits((b16 as u32) << 16)
+}
+
+/// f32 -> FP8 E4M3 (OCP-style: bias 7, max 448, no inf) -> f32.
+pub fn fp8_e4m3_roundtrip(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let sign = if x.is_sign_negative() { -1.0f32 } else { 1.0 };
+    let a = x.abs();
+    const MAX: f32 = 448.0;
+    if a > MAX {
+        return sign * MAX; // saturate (E4M3 has no inf)
+    }
+    if a == 0.0 {
+        return 0.0;
+    }
+    // Smallest subnormal 2^-9; quantize subnormals on the 2^-9 grid.
+    if a < 0.015_625 {
+        // below min normal 2^-6
+        let q = (a / 0.001_953_125).round() * 0.001_953_125; // 2^-9 grid
+        return sign * q;
+    }
+    let e = a.log2().floor();
+    let step = (2f32).powf(e - 3.0); // 3 mantissa bits
+    let q = (a / step).round() * step;
+    sign * q.min(MAX)
+}
+
+/// f32 -> FP4 E2M1 (bias 1; representable: 0, 0.5, 1, 1.5, 2, 3, 4, 6) -> f32.
+pub fn fp4_e2m1_roundtrip(x: f32) -> f32 {
+    const LEVELS: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let sign = if x.is_sign_negative() { -1.0f32 } else { 1.0 };
+    let a = x.abs().min(6.0);
+    let mut best = LEVELS[0];
+    let mut bd = f32::INFINITY;
+    for &l in &LEVELS {
+        let d = (a - l).abs();
+        // Ties round to even mantissa; close enough: first-hit keeps lower.
+        if d < bd {
+            bd = d;
+            best = l;
+        }
+    }
+    sign * best
+}
+
+/// Round-trip any reduced *float* dtype (int quantization lives in `quant`).
+pub fn float_roundtrip(dt: DType, x: f32) -> f32 {
+    match dt {
+        DType::F32 | DType::I32 => x,
+        DType::F16 => f16_roundtrip(x),
+        DType::BF16 => bf16_roundtrip(x),
+        DType::FP8 => fp8_e4m3_roundtrip(x),
+        DType::FP4 => fp4_e2m1_roundtrip(x),
+        // Int types need scale/zero-point context; identity here.
+        DType::I8 | DType::I4 | DType::Binary => x,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn table2_bits_and_compression() {
+        assert_eq!(DType::F32.bits(), 32);
+        assert_eq!(DType::FP4.bits(), 4);
+        assert_eq!(DType::Binary.bits(), 1);
+        assert_eq!(DType::Binary.compression(), 32.0);
+        assert_eq!(DType::I4.compression(), 8.0);
+        assert_eq!(DType::FP4.bytes_f64(), 0.5);
+        assert_eq!(DType::Binary.bytes_f64(), 0.125);
+    }
+
+    #[test]
+    fn parse_names() {
+        for dt in DType::quant_targets() {
+            assert_eq!(DType::parse(dt.name()), Some(*dt));
+        }
+        assert_eq!(DType::parse("bogus"), None);
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16(1e6), 0x7C00); // overflow -> inf
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_roundtrip_error_bound() {
+        forall("f16 relative error < 2^-11 for normal range", 500, |rng| {
+            let x = (rng.f32() - 0.5) * 100.0;
+            let y = f16_roundtrip(x);
+            let rel = ((y - x) / x.abs().max(1e-3)).abs();
+            if rel < 1.0 / 2048.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("x={x} y={y} rel={rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn f16_subnormals_roundtrip() {
+        let tiny = 6e-8_f32; // near f16 min subnormal ~5.96e-8
+        let y = f16_roundtrip(tiny);
+        assert!(y >= 0.0 && (y - tiny).abs() < 6e-8);
+    }
+
+    #[test]
+    fn bf16_preserves_exponent_range() {
+        // Values out of f16 range survive bf16.
+        let x = 3.0e38_f32;
+        let y = bf16_roundtrip(x);
+        assert!((y - x).abs() / x < 0.01);
+        // Relative error bounded by 2^-8.
+        forall("bf16 rel error < 2^-8", 500, |rng| {
+            let x = (rng.f32() - 0.5) * 1e10;
+            let y = bf16_roundtrip(x);
+            let rel = ((y - x) / x.abs().max(1e-10)).abs();
+            if rel < 1.0 / 256.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("x={x} y={y}"))
+            }
+        });
+    }
+
+    #[test]
+    fn fp8_saturates_and_quantizes() {
+        assert_eq!(fp8_e4m3_roundtrip(1000.0), 448.0);
+        assert_eq!(fp8_e4m3_roundtrip(-1000.0), -448.0);
+        assert_eq!(fp8_e4m3_roundtrip(0.0), 0.0);
+        // 3 mantissa bits: rel error <= 2^-4.
+        forall("fp8 rel err <= 1/16", 500, |rng| {
+            let x = (rng.f32() - 0.5) * 800.0;
+            let y = fp8_e4m3_roundtrip(x);
+            if x.abs() > 448.0 {
+                return Ok(());
+            }
+            let rel = ((y - x) / x.abs().max(1e-2)).abs();
+            if rel <= 1.0 / 16.0 + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("x={x} y={y} rel={rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn fp4_levels_are_fixed_points() {
+        for l in [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0] {
+            assert_eq!(fp4_e2m1_roundtrip(l), l);
+            assert_eq!(fp4_e2m1_roundtrip(-l), -l);
+        }
+        assert_eq!(fp4_e2m1_roundtrip(100.0), 6.0);
+        assert_eq!(fp4_e2m1_roundtrip(2.4), 2.0);
+        assert_eq!(fp4_e2m1_roundtrip(2.6), 3.0);
+    }
+
+    #[test]
+    fn float_roundtrip_monotone_precision() {
+        // More bits -> no worse max error, over a sample of values.
+        let mut errs = std::collections::BTreeMap::new();
+        for dt in [DType::F16, DType::BF16, DType::FP8, DType::FP4] {
+            let mut max_err = 0.0f32;
+            for i in 0..1000 {
+                let x = (i as f32 / 1000.0 - 0.5) * 8.0;
+                let e = (float_roundtrip(dt, x) - x).abs();
+                max_err = max_err.max(e);
+            }
+            errs.insert(dt, max_err);
+        }
+        assert!(errs[&DType::F16] <= errs[&DType::FP8]);
+        assert!(errs[&DType::FP8] <= errs[&DType::FP4]);
+    }
+}

@@ -1,0 +1,957 @@
+//! Reference graph executor — the numerical oracle.
+//!
+//! Executes a (static-shape) graph in f32 with straightforward loops. Used
+//! for: (a) validating generated RISC-V code against known-good numerics,
+//! (b) calibration data collection for PTQ (activation histograms), and
+//! (c) the quantization accuracy experiments (Table 6).
+//!
+//! Not a performance path — the ASIC runs the generated assembly; this runs
+//! on the host for verification only.
+
+use std::collections::BTreeMap;
+
+use crate::ir::graph::{Graph, Node, TensorId};
+use crate::ir::ops::{attr_f64, attr_int, attr_ints, OpKind};
+use crate::ir::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Executes graphs; caches materialized initializers across calls so
+/// repeated inference (calibration sweeps) doesn't re-synthesize weights.
+#[derive(Default)]
+pub struct Executor {
+    weight_cache: BTreeMap<TensorId, Tensor>,
+    /// Optional per-tensor activation observer (used by PTQ calibration).
+    pub observer: Option<Box<dyn FnMut(TensorId, &Tensor)>>,
+}
+
+impl Executor {
+    pub fn new() -> Executor {
+        Executor::default()
+    }
+
+    /// Run the graph on the given inputs; returns the graph outputs.
+    pub fn run(&mut self, g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != g.inputs.len() {
+            return Err(Error::Sim(format!(
+                "expected {} inputs, got {}",
+                g.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut env: BTreeMap<TensorId, Tensor> = BTreeMap::new();
+        for (tid, t) in g.inputs.iter().zip(inputs) {
+            env.insert(*tid, t.clone());
+        }
+        for (tid, init) in &g.initializers {
+            let t = self
+                .weight_cache
+                .entry(*tid)
+                .or_insert_with(|| init.materialize())
+                .clone();
+            env.insert(*tid, t);
+        }
+        for nid in g.topo_order()? {
+            let node = &g.nodes[nid.0];
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|t| {
+                    env.get(t).ok_or_else(|| {
+                        Error::Sim(format!("node '{}' input {} undefined", node.name, t.0))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let outs = eval_node(node, &ins)?;
+            for (tid, mut t) in node.outputs.iter().zip(outs) {
+                // Snap to the inferred static shape (Reshape/Flatten rely on
+                // this — eval_node only reinterprets the buffer).
+                if let Some(shape) = &g.tensors[tid.0].shape {
+                    if shape.is_static() && shape.numel() == Some(t.numel()) {
+                        t.shape = shape.dims();
+                    }
+                }
+                if let Some(obs) = &mut self.observer {
+                    obs(*tid, &t);
+                }
+                env.insert(*tid, t);
+            }
+        }
+        g.outputs
+            .iter()
+            .map(|t| {
+                env.get(t)
+                    .cloned()
+                    .ok_or_else(|| Error::Sim(format!("output {} undefined", t.0)))
+            })
+            .collect()
+    }
+
+    /// Drop cached weights (e.g. after the graph's initializers changed).
+    pub fn invalidate_weights(&mut self) {
+        self.weight_cache.clear();
+    }
+}
+
+/// Evaluate a single node on concrete tensors.
+pub fn eval_node(node: &Node, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let op = node.op;
+    let a = || -> Result<&Tensor> {
+        ins.first()
+            .copied()
+            .ok_or_else(|| Error::Sim(format!("'{}' missing input 0", node.name)))
+    };
+    let out = match op {
+        // -- Linear -----------------------------------------------------------
+        OpKind::MatMul => matmul(ins[0], ins[1])?,
+        OpKind::Gemm | OpKind::Linear => {
+            let trans_a = attr_int(&node.attrs, "transA", 0) != 0;
+            let trans_b = attr_int(&node.attrs, "transB", 0) != 0;
+            let a2 = if trans_a { transpose2(ins[0]) } else { ins[0].clone() };
+            let b2 = if trans_b { transpose2(ins[1]) } else { ins[1].clone() };
+            let mut y = matmul(&a2, &b2)?;
+            if let Some(bias) = ins.get(2) {
+                let n = *y.shape.last().unwrap();
+                for (i, v) in y.data.iter_mut().enumerate() {
+                    *v += bias.data[i % n];
+                }
+            }
+            y
+        }
+        OpKind::Attention => attention(node, ins)?,
+
+        // -- Convolution ---------------------------------------------------------
+        OpKind::Conv => conv2d(node, ins, 1)?,
+        OpKind::DepthwiseConv => {
+            let groups = ins[0].shape[1];
+            conv2d(node, ins, groups)?
+        }
+
+        // -- Elementwise / activations ---------------------------------------------
+        OpKind::Add => broadcast_binop(ins[0], ins[1], |x, y| x + y)?,
+        OpKind::Sub => broadcast_binop(ins[0], ins[1], |x, y| x - y)?,
+        OpKind::Mul => broadcast_binop(ins[0], ins[1], |x, y| x * y)?,
+        OpKind::Div => broadcast_binop(ins[0], ins[1], |x, y| x / y)?,
+        OpKind::Pow => broadcast_binop(ins[0], ins[1], |x, y| x.powf(y))?,
+        OpKind::Min => broadcast_binop(ins[0], ins[1], |x, y| x.min(y))?,
+        OpKind::Max => broadcast_binop(ins[0], ins[1], |x, y| x.max(y))?,
+        OpKind::Sqrt => unop(a()?, |x| x.sqrt()),
+        OpKind::Exp => unop(a()?, |x| x.exp()),
+        OpKind::Log => unop(a()?, |x| x.ln()),
+        OpKind::Abs => unop(a()?, |x| x.abs()),
+        OpKind::Neg => unop(a()?, |x| -x),
+        OpKind::Reciprocal => unop(a()?, |x| 1.0 / x),
+        OpKind::Floor => unop(a()?, |x| x.floor()),
+        OpKind::Ceil => unop(a()?, |x| x.ceil()),
+        OpKind::Round => unop(a()?, |x| x.round()),
+        OpKind::Relu => unop(a()?, |x| x.max(0.0)),
+        OpKind::Relu6 => unop(a()?, |x| x.clamp(0.0, 6.0)),
+        OpKind::LeakyRelu => {
+            let alpha = attr_f64(&node.attrs, "alpha", 0.01) as f32;
+            unop(a()?, |x| if x >= 0.0 { x } else { alpha * x })
+        }
+        OpKind::PRelu => {
+            let slope = ins[1].data[0];
+            unop(ins[0], |x| if x >= 0.0 { x } else { slope * x })
+        }
+        OpKind::Elu => {
+            let alpha = attr_f64(&node.attrs, "alpha", 1.0) as f32;
+            unop(a()?, |x| if x >= 0.0 { x } else { alpha * (x.exp() - 1.0) })
+        }
+        OpKind::Selu => {
+            const A: f32 = 1.673_263_2;
+            const S: f32 = 1.050_701;
+            unop(a()?, |x| if x >= 0.0 { S * x } else { S * A * (x.exp() - 1.0) })
+        }
+        OpKind::Gelu => unop(a()?, |x| {
+            // tanh approximation (matches common ONNX export).
+            0.5 * x
+                * (1.0
+                    + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x))
+                        .tanh())
+        }),
+        OpKind::Sigmoid => unop(a()?, |x| 1.0 / (1.0 + (-x).exp())),
+        OpKind::HardSigmoid => unop(a()?, |x| (x / 6.0 + 0.5).clamp(0.0, 1.0)),
+        OpKind::HardSwish => unop(a()?, |x| x * ((x + 3.0).clamp(0.0, 6.0) / 6.0)),
+        OpKind::Tanh => unop(a()?, |x| x.tanh()),
+        OpKind::Softplus => unop(a()?, |x| (1.0 + x.exp()).ln()),
+        OpKind::Softmax | OpKind::LogSoftmax => softmax(a()?, op == OpKind::LogSoftmax),
+
+        // -- Reductions -------------------------------------------------------------
+        OpKind::ReduceSum => reduce(node, a()?, 0.0, |acc, x| acc + x, |acc, _| acc)?,
+        OpKind::ReduceMean => reduce(node, a()?, 0.0, |acc, x| acc + x, |acc, n| acc / n as f32)?,
+        OpKind::ReduceMax => reduce(node, a()?, f32::NEG_INFINITY, |acc, x| acc.max(x), |acc, _| acc)?,
+        OpKind::ReduceMin => reduce(node, a()?, f32::INFINITY, |acc, x| acc.min(x), |acc, _| acc)?,
+        OpKind::ReduceProd => reduce(node, a()?, 1.0, |acc, x| acc * x, |acc, _| acc)?,
+        OpKind::ReduceL2 => reduce(node, a()?, 0.0, |acc, x| acc + x * x, |acc, _| acc.sqrt())?,
+        OpKind::ArgMax | OpKind::ArgMin => argreduce(node, a()?, op == OpKind::ArgMax)?,
+
+        // -- Normalization -------------------------------------------------------------
+        OpKind::BatchNormalization => batchnorm(node, ins)?,
+        OpKind::LayerNormalization | OpKind::RMSNormalization => layernorm(node, ins, op)?,
+
+        // -- Pooling ----------------------------------------------------------------------
+        OpKind::MaxPool => pool2d(node, a()?, true)?,
+        OpKind::AveragePool => pool2d(node, a()?, false)?,
+        OpKind::GlobalAveragePool => global_pool(a()?, false),
+        OpKind::GlobalMaxPool => global_pool(a()?, true),
+
+        // -- Shape manipulation --------------------------------------------------------------
+        OpKind::Reshape | OpKind::Flatten | OpKind::Squeeze | OpKind::Unsqueeze => {
+            // Executor trusts shape inference; reinterpret the buffer.
+            let x = a()?;
+            Tensor { shape: vec![x.numel()], data: x.data.clone() }
+        }
+        OpKind::Transpose => {
+            let x = a()?;
+            let perm: Vec<usize> = attr_ints(
+                &node.attrs,
+                "perm",
+                &(0..x.rank() as i64).rev().collect::<Vec<_>>(),
+            )
+            .iter()
+            .map(|&p| p as usize)
+            .collect();
+            transpose(x, &perm)
+        }
+        OpKind::Concat => {
+            let axis = attr_int(&node.attrs, "axis", 0) as usize;
+            concat(ins, axis)?
+        }
+        OpKind::Identity | OpKind::Cast => a()?.clone(),
+        OpKind::Gather => gather(ins[0], ins[1])?,
+        OpKind::Where => {
+            let c = ins[0];
+            let x = ins[1];
+            let y = ins[2];
+            let mut out = x.clone();
+            for i in 0..out.data.len() {
+                out.data[i] = if c.data[i % c.data.len()] != 0.0 {
+                    x.data[i]
+                } else {
+                    y.data[i % y.data.len()]
+                };
+            }
+            out
+        }
+        OpKind::Equal => broadcast_binop(ins[0], ins[1], |x, y| (x == y) as i32 as f32)?,
+        OpKind::Greater => broadcast_binop(ins[0], ins[1], |x, y| (x > y) as i32 as f32)?,
+        OpKind::Less => broadcast_binop(ins[0], ins[1], |x, y| (x < y) as i32 as f32)?,
+
+        // -- Quantization (QDQ simulation) ------------------------------------------------------
+        OpKind::QuantizeLinear | OpKind::FakeQuant => {
+            let scale = attr_f64(&node.attrs, "scale", 1.0) as f32;
+            let zp = attr_f64(&node.attrs, "zero_point", 0.0) as f32;
+            let bits = attr_int(&node.attrs, "bits", 8);
+            let (qmin, qmax) = match bits {
+                8 => (-128.0f32, 127.0f32),
+                4 => (-8.0, 7.0),
+                1 => (-1.0, 1.0),
+                _ => (-128.0, 127.0),
+            };
+            unop(a()?, |x| {
+                let q = (x / scale + zp).round().clamp(qmin, qmax);
+                (q - zp) * scale
+            })
+        }
+        OpKind::DequantizeLinear => a()?.clone(),
+        OpKind::BinaryQuantize => {
+            // sign(x) * mean(|x|) — XNOR-net style binarization.
+            let x = a()?;
+            let alpha =
+                x.data.iter().map(|v| v.abs()).sum::<f32>() / x.numel().max(1) as f32;
+            unop(x, move |v| if v >= 0.0 { alpha } else { -alpha })
+        }
+
+        other => {
+            return Err(Error::Sim(format!(
+                "executor: op {} not implemented",
+                other.name()
+            )))
+        }
+    };
+    Ok(vec![out])
+}
+
+// ---------------------------------------------------------------------------
+// kernels
+// ---------------------------------------------------------------------------
+
+fn unop(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor {
+        shape: x.shape.clone(),
+        data: x.data.iter().map(|&v| f(v)).collect(),
+    }
+}
+
+fn broadcast_binop(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+    // Fast path: same shape.
+    if a.shape == b.shape {
+        return Ok(Tensor {
+            shape: a.shape.clone(),
+            data: a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+        });
+    }
+    // General NumPy broadcast.
+    let rank = a.rank().max(b.rank());
+    let pad = |s: &[usize]| -> Vec<usize> {
+        let mut v = vec![1; rank - s.len()];
+        v.extend_from_slice(s);
+        v
+    };
+    let sa = pad(&a.shape);
+    let sb = pad(&b.shape);
+    let mut so = vec![0usize; rank];
+    for i in 0..rank {
+        so[i] = match (sa[i], sb[i]) {
+            (1, n) | (n, 1) => n,
+            (n, m) if n == m => n,
+            (n, m) => {
+                return Err(Error::Sim(format!("broadcast mismatch {n} vs {m}")));
+            }
+        };
+    }
+    let numel: usize = so.iter().product();
+    let stride = |s: &[usize]| -> Vec<usize> {
+        let mut st = vec![1usize; rank];
+        for i in (0..rank - 1).rev() {
+            st[i] = st[i + 1] * s[i + 1];
+        }
+        // Zero-stride broadcast dims.
+        (0..rank).map(|i| if s[i] == 1 { 0 } else { st[i] }).collect()
+    };
+    let sta = stride(&sa);
+    let stb = stride(&sb);
+    let mut out = Vec::with_capacity(numel);
+    let mut idx = vec![0usize; rank];
+    for _ in 0..numel {
+        let oa: usize = idx.iter().zip(&sta).map(|(i, s)| i * s).sum();
+        let ob: usize = idx.iter().zip(&stb).map(|(i, s)| i * s).sum();
+        out.push(f(a.data[oa], b.data[ob]));
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < so[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(Tensor { shape: so, data: out })
+}
+
+fn transpose2(t: &Tensor) -> Tensor {
+    assert_eq!(t.rank(), 2);
+    transpose(t, &[1, 0])
+}
+
+fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
+    let in_strides = x.strides();
+    let out_shape: Vec<usize> = perm.iter().map(|&p| x.shape[p]).collect();
+    let mut out = Tensor::zeros(&out_shape);
+    let numel = x.numel();
+    let mut idx = vec![0usize; out_shape.len()];
+    for o in 0..numel {
+        let src: usize = idx
+            .iter()
+            .enumerate()
+            .map(|(d, &i)| i * in_strides[perm[d]])
+            .sum();
+        out.data[o] = x.data[src];
+        for d in (0..out_shape.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    out
+}
+
+/// Batched matmul with broadcast over leading dims.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() < 2 || b.rank() < 2 {
+        return Err(Error::Sim("matmul rank".into()));
+    }
+    let m = a.shape[a.rank() - 2];
+    let k = a.shape[a.rank() - 1];
+    let k2 = b.shape[b.rank() - 2];
+    let n = b.shape[b.rank() - 1];
+    if k != k2 {
+        return Err(Error::Sim(format!("matmul K mismatch {k} vs {k2}")));
+    }
+    let batch_a: usize = a.shape[..a.rank() - 2].iter().product();
+    let batch_b: usize = b.shape[..b.rank() - 2].iter().product();
+    let batch = batch_a.max(batch_b);
+    let mut out_shape: Vec<usize> = if a.rank() >= b.rank() {
+        a.shape[..a.rank() - 2].to_vec()
+    } else {
+        b.shape[..b.rank() - 2].to_vec()
+    };
+    out_shape.push(m);
+    out_shape.push(n);
+    let mut out = Tensor::zeros(&out_shape);
+    for bi in 0..batch {
+        let ao = (bi % batch_a) * m * k;
+        let bo = (bi % batch_b) * k * n;
+        let oo = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[ao + i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = bo + kk * n;
+                let orow = oo + i * n;
+                for j in 0..n {
+                    out.data[orow + j] += av * b.data[brow + j];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn conv2d(node: &Node, ins: &[&Tensor], groups: usize) -> Result<Tensor> {
+    let x = ins[0]; // [N, C, H, W]
+    let w = ins[1]; // [F, C/g, kH, kW]
+    let bias = ins.get(2);
+    let strides = attr_ints(&node.attrs, "strides", &[1, 1]);
+    let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (f, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (sh, sw) = (strides[0] as usize, strides[1] as usize);
+    let (ph, pw) = (pads[0] as usize, pads[1] as usize);
+    if c / groups != cg {
+        return Err(Error::Sim(format!(
+            "conv group mismatch: C={c} groups={groups} wC={cg}"
+        )));
+    }
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (wd + 2 * pw - kw) / sw + 1;
+    let mut out = Tensor::zeros(&[n, f, oh, ow]);
+    let fpg = f / groups; // filters per group
+    for ni in 0..n {
+        for fi in 0..f {
+            let gi = fi / fpg;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias.map(|b| b.data[fi]).unwrap_or(0.0);
+                    for ci in 0..cg {
+                        let xc = gi * cg + ci;
+                        for ky in 0..kh {
+                            let iy = oy * sh + ky;
+                            if iy < ph || iy - ph >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox * sw + kx;
+                                if ix < pw || ix - pw >= wd {
+                                    continue;
+                                }
+                                let xv = x.data
+                                    [((ni * c + xc) * h + (iy - ph)) * wd + (ix - pw)];
+                                let wv = w.data[((fi * cg + ci) * kh + ky) * kw + kx];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out.data[((ni * f + fi) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn softmax(x: &Tensor, log: bool) -> Tensor {
+    // Over the last axis.
+    let n = *x.shape.last().unwrap_or(&1);
+    let rows = x.numel() / n;
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * n..(r + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+            if log {
+                *v = v.ln();
+            }
+        }
+    }
+    out
+}
+
+fn reduce(
+    node: &Node,
+    x: &Tensor,
+    init: f32,
+    acc_fn: impl Fn(f32, f32) -> f32,
+    finish: impl Fn(f32, usize) -> f32,
+) -> Result<Tensor> {
+    let axes: Vec<usize> = attr_ints(
+        &node.attrs,
+        "axes",
+        &(0..x.rank() as i64).collect::<Vec<_>>(),
+    )
+    .iter()
+    .map(|&a| a as usize)
+    .collect();
+    let keep = attr_int(&node.attrs, "keepdims", 1) != 0;
+    let mut out_shape = Vec::new();
+    for (i, &d) in x.shape.iter().enumerate() {
+        if axes.contains(&i) {
+            if keep {
+                out_shape.push(1);
+            }
+        } else {
+            out_shape.push(d);
+        }
+    }
+    let reduced_count: usize = axes.iter().map(|&a| x.shape[a]).product();
+    let mut out = Tensor {
+        shape: if out_shape.is_empty() { vec![] } else { out_shape },
+        data: Vec::new(),
+    };
+    let out_numel = out.shape.iter().product::<usize>().max(1);
+    out.data = vec![init; out_numel];
+    let in_strides = x.strides();
+    let mut idx = vec![0usize; x.rank()];
+    for flat in 0..x.numel() {
+        // Compute output flat index skipping reduced axes.
+        let mut o = 0usize;
+        let mut stride = 1usize;
+        for d in (0..x.rank()).rev() {
+            if !axes.contains(&d) {
+                o += idx[d] * stride;
+                stride *= x.shape[d];
+            }
+        }
+        out.data[o] = acc_fn(out.data[o], x.data[flat]);
+        let _ = &in_strides;
+        for d in (0..x.rank()).rev() {
+            idx[d] += 1;
+            if idx[d] < x.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    for v in out.data.iter_mut() {
+        *v = finish(*v, reduced_count);
+    }
+    Ok(out)
+}
+
+fn argreduce(node: &Node, x: &Tensor, is_max: bool) -> Result<Tensor> {
+    let axis = attr_int(&node.attrs, "axis", 0) as usize;
+    let keep = attr_int(&node.attrs, "keepdims", 1) != 0;
+    let extent = x.shape[axis];
+    let inner: usize = x.shape[axis + 1..].iter().product();
+    let outer: usize = x.shape[..axis].iter().product();
+    let mut out_shape = Vec::new();
+    for (i, &d) in x.shape.iter().enumerate() {
+        if i == axis {
+            if keep {
+                out_shape.push(1);
+            }
+        } else {
+            out_shape.push(d);
+        }
+    }
+    let mut out = Tensor {
+        shape: out_shape,
+        data: vec![0.0; (outer * inner).max(1)],
+    };
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut best = 0usize;
+            let mut best_v = x.data[o * extent * inner + i];
+            for e in 1..extent {
+                let v = x.data[(o * extent + e) * inner + i];
+                if (is_max && v > best_v) || (!is_max && v < best_v) {
+                    best_v = v;
+                    best = e;
+                }
+            }
+            out.data[o * inner + i] = best as f32;
+        }
+    }
+    Ok(out)
+}
+
+fn batchnorm(node: &Node, ins: &[&Tensor]) -> Result<Tensor> {
+    // x [N, C, ...], scale/bias/mean/var [C]
+    let x = ins[0];
+    let (scale, bias, mean, var) = (ins[1], ins[2], ins[3], ins[4]);
+    let eps = attr_f64(&node.attrs, "epsilon", 1e-5) as f32;
+    let c = x.shape[1];
+    let inner: usize = x.shape[2..].iter().product::<usize>().max(1);
+    let mut out = x.clone();
+    for (i, v) in out.data.iter_mut().enumerate() {
+        let ci = (i / inner) % c;
+        *v = scale.data[ci] * (*v - mean.data[ci]) / (var.data[ci] + eps).sqrt()
+            + bias.data[ci];
+    }
+    Ok(out)
+}
+
+fn layernorm(node: &Node, ins: &[&Tensor], op: OpKind) -> Result<Tensor> {
+    // Normalize over the last axis; scale/bias optional.
+    let x = ins[0];
+    let eps = attr_f64(&node.attrs, "epsilon", 1e-5) as f32;
+    let n = *x.shape.last().unwrap();
+    let rows = x.numel() / n;
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * n..(r + 1) * n];
+        let (mean, denom) = if op == OpKind::RMSNormalization {
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / n as f32;
+            (0.0, (ms + eps).sqrt())
+        } else {
+            let mean = row.iter().sum::<f32>() / n as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+            (mean, (var + eps).sqrt())
+        };
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) / denom;
+            if let Some(s) = ins.get(1) {
+                *v *= s.data[j];
+            }
+            if let Some(b) = ins.get(2) {
+                *v += b.data[j];
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn pool2d(node: &Node, x: &Tensor, is_max: bool) -> Result<Tensor> {
+    let k = attr_ints(&node.attrs, "kernel_shape", &[2, 2]);
+    let strides = attr_ints(&node.attrs, "strides", &k.clone());
+    let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw) = (k[0] as usize, k[1] as usize);
+    let (sh, sw) = (strides[0] as usize, strides[1] as usize);
+    let (ph, pw) = (pads[0] as usize, pads[1] as usize);
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                    let mut count = 0;
+                    for ky in 0..kh {
+                        let iy = oy * sh + ky;
+                        if iy < ph || iy - ph >= h {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = ox * sw + kx;
+                            if ix < pw || ix - pw >= w {
+                                continue;
+                            }
+                            let v = x.data[((ni * c + ci) * h + iy - ph) * w + ix - pw];
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                            count += 1;
+                        }
+                    }
+                    out.data[((ni * c + ci) * oh + oy) * ow + ox] =
+                        if is_max { acc } else { acc / count.max(1) as f32 };
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn global_pool(x: &Tensor, is_max: bool) -> Tensor {
+    let (n, c) = (x.shape[0], x.shape[1]);
+    let inner: usize = x.shape[2..].iter().product::<usize>().max(1);
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let s = &x.data[(ni * c + ci) * inner..(ni * c + ci + 1) * inner];
+            out.data[ni * c + ci] = if is_max {
+                s.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            } else {
+                s.iter().sum::<f32>() / inner as f32
+            };
+        }
+    }
+    out
+}
+
+fn concat(ins: &[&Tensor], axis: usize) -> Result<Tensor> {
+    let outer: usize = ins[0].shape[..axis].iter().product();
+    let mut out_shape = ins[0].shape.clone();
+    out_shape[axis] = ins.iter().map(|t| t.shape[axis]).sum();
+    let mut out = Tensor::zeros(&out_shape);
+    let mut off = 0usize;
+    let out_inner: usize = out_shape[axis..].iter().product();
+    for t in ins {
+        let t_inner: usize = t.shape[axis..].iter().product();
+        for o in 0..outer {
+            out.data[o * out_inner + off..o * out_inner + off + t_inner]
+                .copy_from_slice(&t.data[o * t_inner..(o + 1) * t_inner]);
+        }
+        off += t_inner;
+    }
+    Ok(out)
+}
+
+fn gather(data: &Tensor, idx: &Tensor) -> Result<Tensor> {
+    let v = data.shape[0];
+    let d: usize = data.shape[1..].iter().product();
+    let mut out_shape = idx.shape.clone();
+    out_shape.extend_from_slice(&data.shape[1..]);
+    let mut out = Tensor::zeros(&out_shape);
+    for (i, &ix) in idx.data.iter().enumerate() {
+        let ix = ix as usize;
+        if ix >= v {
+            return Err(Error::Sim(format!("gather index {ix} out of range {v}")));
+        }
+        out.data[i * d..(i + 1) * d].copy_from_slice(&data.data[ix * d..(ix + 1) * d]);
+    }
+    Ok(out)
+}
+
+fn attention(node: &Node, ins: &[&Tensor]) -> Result<Tensor> {
+    // Multi-head self-attention: x [B, S, D], wq/wk/wv/wo [D, D].
+    let x = ins[0];
+    let (wq, wk, wv, wo) = (ins[1], ins[2], ins[3], ins[4]);
+    let heads = attr_int(&node.attrs, "num_heads", 1) as usize;
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hd = d / heads;
+    let x2 = x.reshape(&[b * s, d]);
+    let q = matmul(&x2, wq)?;
+    let k = matmul(&x2, wk)?;
+    let v = matmul(&x2, wv)?;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[b * s, d]);
+    for bi in 0..b {
+        for h in 0..heads {
+            // scores [S, S]
+            let mut scores = Tensor::zeros(&[s, s]);
+            for i in 0..s {
+                for j in 0..s {
+                    let mut acc = 0.0;
+                    for e in 0..hd {
+                        acc += q.data[(bi * s + i) * d + h * hd + e]
+                            * k.data[(bi * s + j) * d + h * hd + e];
+                    }
+                    scores.data[i * s + j] = acc * scale;
+                }
+            }
+            let probs = softmax(&scores, false);
+            for i in 0..s {
+                for e in 0..hd {
+                    let mut acc = 0.0;
+                    for j in 0..s {
+                        acc += probs.data[i * s + j]
+                            * v.data[(bi * s + j) * d + h * hd + e];
+                    }
+                    ctx.data[(bi * s + i) * d + h * hd + e] = acc;
+                }
+            }
+        }
+    }
+    let out = matmul(&ctx, wo)?;
+    Ok(Tensor { shape: vec![b, s, d], data: out.data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::ir::ops::{AttrValue, Attrs};
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Initializer;
+
+    fn attrs(kv: &[(&str, AttrValue)]) -> Attrs {
+        kv.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let y = matmul(&a, &b).unwrap();
+        assert_eq!(y.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn batched_matmul_broadcast() {
+        let a = Tensor::new(vec![2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = matmul(&a, &b).unwrap();
+        assert_eq!(y.shape, vec![2, 1, 2]);
+        assert_eq!(y.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 1, 3, 3]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[1, 1, 1, 1], vec![2.0]));
+        let y = g.node(OpKind::Conv, "c", &[x, w], Attrs::new());
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        assert_eq!(out[0].data, (1..=9).map(|v| 2.0 * v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conv_with_padding_matches_manual() {
+        // 3x3 average-ish kernel on a 2x2 input with pad 1.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 1, 2, 2]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[1, 1, 3, 3], vec![1.0; 9]));
+        let y = g.node(
+            OpKind::Conv,
+            "c",
+            &[x, w],
+            attrs(&[("pads", AttrValue::Ints(vec![1, 1]))]),
+        );
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        // Every output = sum of all in-window values.
+        assert_eq!(out[0].data, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::new(vec![2, 4], vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0]);
+        let y = softmax(&x, false);
+        for r in 0..2 {
+            let s: f32 = y.data[r * 4..(r + 1) * 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(y.data[3] > y.data[2]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 8]), DType::F32);
+        let y = g.node(OpKind::LayerNormalization, "ln", &[x], Attrs::new());
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 8], (0..8).map(|v| v as f32).collect());
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        let mean: f32 = out[0].data.iter().sum::<f32>() / 8.0;
+        let var: f32 = out[0].data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 1, 4, 4]), DType::F32);
+        let y = g.node(
+            OpKind::MaxPool,
+            "p",
+            &[x],
+            attrs(&[("kernel_shape", AttrValue::Ints(vec![2, 2]))]),
+        );
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        assert_eq!(out[0].data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn depthwise_conv_groups() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 2, 2]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[2, 1, 1, 1], vec![2.0, 3.0]));
+        let y = g.node(OpKind::DepthwiseConv, "dw", &[x, w], Attrs::new());
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 2, 2, 2], vec![1.0; 8]);
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        assert_eq!(out[0].data[..4], [2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(out[0].data[4..], [3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn gather_embedding_rows() {
+        let data = Tensor::new(vec![3, 2], vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        let idx = Tensor::new(vec![2], vec![2.0, 0.0]);
+        let y = gather(&data, &idx).unwrap();
+        assert_eq!(y.shape, vec![2, 2]);
+        assert_eq!(y.data, vec![20.0, 21.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn attention_uniform_values() {
+        // With identity-ish inputs attention of constant V returns constant.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 3, 4]), DType::F32);
+        let eye = |n: usize| {
+            let mut v = vec![0.0; n * n];
+            for i in 0..n {
+                v[i * n + i] = 1.0;
+            }
+            v
+        };
+        let wq = g.init(Initializer::eager("wq", &[4, 4], eye(4)));
+        let wk = g.init(Initializer::eager("wk", &[4, 4], eye(4)));
+        let wv = g.init(Initializer::eager("wv", &[4, 4], eye(4)));
+        let wo = g.init(Initializer::eager("wo", &[4, 4], eye(4)));
+        let y = g.node(
+            OpKind::Attention,
+            "attn",
+            &[x, wq, wk, wv, wo],
+            attrs(&[("num_heads", AttrValue::Int(2))]),
+        );
+        g.outputs.push(y);
+        let input = Tensor::new(vec![1, 3, 4], vec![1.0; 12]);
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        for v in &out[0].data {
+            assert!((v - 1.0).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn reduce_mean_axes() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 3]), DType::F32);
+        let y = g.node(
+            OpKind::ReduceMean,
+            "rm",
+            &[x],
+            attrs(&[("axes", AttrValue::Ints(vec![1])), ("keepdims", AttrValue::Int(0))]),
+        );
+        g.outputs.push(y);
+        let input = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        assert_eq!(out[0].data, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn observer_sees_activations() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2]), DType::F32);
+        let y = g.node(OpKind::Relu, "r", &[x], Attrs::new());
+        g.outputs.push(y);
+        let mut exec = Executor::new();
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(0usize));
+        let seen2 = seen.clone();
+        exec.observer = Some(Box::new(move |_, t| {
+            *seen2.borrow_mut() += t.numel();
+        }));
+        exec.run(&g, &[Tensor::new(vec![1, 2], vec![-1.0, 2.0])]).unwrap();
+        assert_eq!(*seen.borrow(), 2);
+    }
+}

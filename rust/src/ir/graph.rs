@@ -1,0 +1,315 @@
+//! The computation graph: nodes (operator applications) over value slots
+//! (tensors), with initializers for weights and declared inputs/outputs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::ir::dtype::DType;
+use crate::ir::ops::{Attrs, OpKind};
+use crate::ir::shape::Shape;
+use crate::ir::tensor::Initializer;
+use crate::util::error::{Error, Result};
+
+/// Index of a value slot (tensor) in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// Index of a node in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Metadata of one value slot.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    /// Annotated by shape inference; `None` until inferred.
+    pub shape: Option<Shape>,
+    pub dtype: DType,
+}
+
+/// One operator application.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    pub attrs: Attrs,
+}
+
+/// A computation graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub tensors: Vec<TensorInfo>,
+    /// Graph inputs (activations fed at runtime).
+    pub inputs: Vec<TensorId>,
+    /// Graph outputs.
+    pub outputs: Vec<TensorId>,
+    /// Weights/constants: tensor id -> initializer.
+    pub initializers: BTreeMap<TensorId, Initializer>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Add a value slot.
+    pub fn tensor(&mut self, name: &str, shape: Option<Shape>, dtype: DType) -> TensorId {
+        let id = TensorId(self.tensors.len());
+        self.tensors.push(TensorInfo { name: name.to_string(), shape, dtype });
+        id
+    }
+
+    /// Add a graph input with a known shape.
+    pub fn input(&mut self, name: &str, shape: Shape, dtype: DType) -> TensorId {
+        let id = self.tensor(name, Some(shape), dtype);
+        self.inputs.push(id);
+        id
+    }
+
+    /// Attach an initializer; creates its value slot.
+    pub fn init(&mut self, init: Initializer) -> TensorId {
+        let id = self.tensor(&init.name.clone(), Some(init.shape.clone()), init.dtype);
+        self.initializers.insert(id, init);
+        id
+    }
+
+    /// Add a node producing one fresh output tensor; returns the output id.
+    pub fn node(
+        &mut self,
+        op: OpKind,
+        name: &str,
+        inputs: &[TensorId],
+        attrs: Attrs,
+    ) -> TensorId {
+        let out = self.tensor(&format!("{name}_out"), None, DType::F32);
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.to_vec(),
+            outputs: vec![out],
+            attrs,
+        });
+        out
+    }
+
+    /// Add a node with explicit outputs.
+    pub fn node_multi(
+        &mut self,
+        op: OpKind,
+        name: &str,
+        inputs: &[TensorId],
+        n_outputs: usize,
+        attrs: Attrs,
+    ) -> Vec<TensorId> {
+        let outs: Vec<TensorId> = (0..n_outputs)
+            .map(|i| self.tensor(&format!("{name}_out{i}"), None, DType::F32))
+            .collect();
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.to_vec(),
+            outputs: outs.clone(),
+            attrs,
+        });
+        outs
+    }
+
+    pub fn info(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0]
+    }
+
+    pub fn info_mut(&mut self, id: TensorId) -> &mut TensorInfo {
+        &mut self.tensors[id.0]
+    }
+
+    pub fn shape_of(&self, id: TensorId) -> Result<&Shape> {
+        self.tensors[id.0]
+            .shape
+            .as_ref()
+            .ok_or_else(|| Error::Shape(format!("tensor '{}' has no shape", self.tensors[id.0].name)))
+    }
+
+    pub fn is_initializer(&self, id: TensorId) -> bool {
+        self.initializers.contains_key(&id)
+    }
+
+    /// Producing node of a tensor, if any.
+    pub fn producer(&self, id: TensorId) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .position(|n| n.outputs.contains(&id))
+            .map(NodeId)
+    }
+
+    /// Consumers of a tensor.
+    pub fn consumers(&self, id: TensorId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.contains(&id))
+            .map(|(i, _)| NodeId(i))
+            .collect()
+    }
+
+    /// Topological order of nodes (inputs/initializers are roots).
+    /// Errors on cycles or use of undefined tensors.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let mut ready: BTreeSet<TensorId> = self.inputs.iter().copied().collect();
+        ready.extend(self.initializers.keys().copied());
+        let mut order = Vec::with_capacity(self.nodes.len());
+        let mut emitted = vec![false; self.nodes.len()];
+        loop {
+            let mut progressed = false;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if emitted[i] {
+                    continue;
+                }
+                if n.inputs.iter().all(|t| ready.contains(t)) {
+                    emitted[i] = true;
+                    order.push(NodeId(i));
+                    ready.extend(n.outputs.iter().copied());
+                    progressed = true;
+                }
+            }
+            if order.len() == self.nodes.len() {
+                return Ok(order);
+            }
+            if !progressed {
+                let stuck: Vec<&str> = self
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !emitted[*i])
+                    .map(|(_, n)| n.name.as_str())
+                    .collect();
+                return Err(Error::Shape(format!(
+                    "graph has a cycle or undefined inputs; stuck nodes: {stuck:?}"
+                )));
+            }
+        }
+    }
+
+    /// Structural sanity: all ids in range, outputs unique, graph outputs
+    /// defined. Called by the frontend after loading.
+    pub fn check(&self) -> Result<()> {
+        let n = self.tensors.len();
+        let mut produced: BTreeSet<TensorId> = BTreeSet::new();
+        for node in &self.nodes {
+            for t in node.inputs.iter().chain(&node.outputs) {
+                if t.0 >= n {
+                    return Err(Error::Shape(format!(
+                        "node '{}' references out-of-range tensor {}",
+                        node.name, t.0
+                    )));
+                }
+            }
+            for t in &node.outputs {
+                if !produced.insert(*t) {
+                    return Err(Error::Shape(format!(
+                        "tensor {} produced twice (node '{}')",
+                        t.0, node.name
+                    )));
+                }
+                if self.is_initializer(*t) || self.inputs.contains(t) {
+                    return Err(Error::Shape(format!(
+                        "node '{}' writes to an input/initializer",
+                        node.name
+                    )));
+                }
+            }
+        }
+        for out in &self.outputs {
+            let ok = produced.contains(out)
+                || self.inputs.contains(out)
+                || self.is_initializer(*out);
+            if !ok {
+                return Err(Error::Shape(format!("graph output {} never produced", out.0)));
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Total weight bytes at current initializer dtypes.
+    pub fn weight_bytes(&self) -> usize {
+        self.initializers.values().map(|i| i.bytes()).sum()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.initializers.values().map(|i| i.numel()).sum()
+    }
+
+    /// True if any tensor has a symbolic dimension.
+    pub fn has_symbolic_dims(&self) -> bool {
+        self.tensors
+            .iter()
+            .filter_map(|t| t.shape.as_ref())
+            .any(|s| !s.is_static())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ops::Attrs;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 4]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[4, 4], vec![0.0; 16]));
+        let y = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let z = g.node(OpKind::Relu, "act", &[y], Attrs::new());
+        g.outputs.push(z);
+        g
+    }
+
+    #[test]
+    fn build_and_check() {
+        let g = tiny_graph();
+        assert!(g.check().is_ok());
+        assert_eq!(g.topo_order().unwrap(), vec![NodeId(0), NodeId(1)]);
+        assert_eq!(g.param_count(), 16);
+        assert_eq!(g.weight_bytes(), 64);
+    }
+
+    #[test]
+    fn producer_consumer_links() {
+        let g = tiny_graph();
+        let mm_out = g.nodes[0].outputs[0];
+        assert_eq!(g.producer(mm_out), Some(NodeId(0)));
+        assert_eq!(g.consumers(mm_out), vec![NodeId(1)]);
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut g = Graph::new("cyc");
+        let a = g.tensor("a", None, DType::F32);
+        let b = g.tensor("b", None, DType::F32);
+        g.nodes.push(Node {
+            name: "n0".into(),
+            op: OpKind::Relu,
+            inputs: vec![a],
+            outputs: vec![b],
+            attrs: Attrs::new(),
+        });
+        g.nodes.push(Node {
+            name: "n1".into(),
+            op: OpKind::Relu,
+            inputs: vec![b],
+            outputs: vec![a],
+            attrs: Attrs::new(),
+        });
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn detects_undefined_output() {
+        let mut g = tiny_graph();
+        let phantom = g.tensor("ph", None, DType::F32);
+        g.outputs.push(phantom);
+        assert!(g.check().is_err());
+    }
+}

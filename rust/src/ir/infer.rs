@@ -1,0 +1,795 @@
+//! Shape inference (paper §3.1 stage 1: "ONNX model parsing and IR
+//! construction with shape inference").
+//!
+//! Propagates shapes (including symbolic dims) through every node in
+//! topological order. Unknown combinations are hard errors — consistent with
+//! validation-driven compilation, nothing undefined flows downstream.
+
+use crate::ir::dtype::DType;
+use crate::ir::graph::{Graph, Node};
+use crate::ir::ops::{attr_int, attr_ints, OpCategory, OpKind};
+use crate::ir::shape::{Dim, Shape};
+use crate::util::error::{Error, Result};
+
+/// Run shape inference over the whole graph, annotating every tensor.
+pub fn infer_shapes(g: &mut Graph) -> Result<()> {
+    let order = g.topo_order()?;
+    for nid in order {
+        let node = g.nodes[nid.0].clone();
+        let out_shapes = infer_node(g, &node)?;
+        if out_shapes.len() != node.outputs.len() {
+            return Err(Error::Shape(format!(
+                "node '{}' expected {} outputs, inferred {}",
+                node.name,
+                node.outputs.len(),
+                out_shapes.len()
+            )));
+        }
+        for (tid, (shape, dtype)) in node.outputs.iter().zip(out_shapes) {
+            let info = g.info_mut(*tid);
+            info.shape = Some(shape);
+            info.dtype = dtype;
+        }
+    }
+    Ok(())
+}
+
+fn dim_eq(a: &Dim, b: &Dim) -> bool {
+    match (a, b) {
+        (Dim::Fixed(x), Dim::Fixed(y)) => x == y,
+        (Dim::Sym { name: n1, .. }, Dim::Sym { name: n2, .. }) => n1 == n2,
+        _ => false,
+    }
+}
+
+/// NumPy-style broadcast of two shapes (symbolic dims broadcast with 1 and
+/// with an identically-named symbol).
+pub fn broadcast(a: &Shape, b: &Shape) -> Result<Shape> {
+    let rank = a.rank().max(b.rank());
+    let mut out = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let da = if i < rank - a.rank() { Dim::Fixed(1) } else { a.0[i - (rank - a.rank())].clone() };
+        let db = if i < rank - b.rank() { Dim::Fixed(1) } else { b.0[i - (rank - b.rank())].clone() };
+        let d = match (&da, &db) {
+            (Dim::Fixed(1), d) | (d, Dim::Fixed(1)) => d.clone(),
+            (x, y) if dim_eq(x, y) => x.clone(),
+            _ => {
+                return Err(Error::Shape(format!(
+                    "cannot broadcast {da} with {db}"
+                )))
+            }
+        };
+        out.push(d);
+    }
+    Ok(Shape(out))
+}
+
+type OutInfo = (Shape, DType);
+
+fn one(shape: Shape, dtype: DType) -> Result<Vec<OutInfo>> {
+    Ok(vec![(shape, dtype)])
+}
+
+fn in_shape(g: &Graph, node: &Node, i: usize) -> Result<Shape> {
+    let tid = *node.inputs.get(i).ok_or_else(|| {
+        Error::Shape(format!("node '{}' missing input {i}", node.name))
+    })?;
+    Ok(g.shape_of(tid)?.clone())
+}
+
+fn in_dtype(g: &Graph, node: &Node, i: usize) -> DType {
+    node.inputs
+        .get(i)
+        .map(|t| g.info(*t).dtype)
+        .unwrap_or(DType::F32)
+}
+
+/// Spatial output extent for conv/pool: floor((in + 2p - k) / s) + 1.
+fn conv_out(in_: usize, k: usize, pad: usize, stride: usize) -> usize {
+    (in_ + 2 * pad - k) / stride + 1
+}
+
+fn infer_node(g: &Graph, node: &Node) -> Result<Vec<OutInfo>> {
+    let dt = in_dtype(g, node, 0);
+    match node.op {
+        // -- Linear ---------------------------------------------------------
+        OpKind::MatMul | OpKind::MatMulInteger | OpKind::QLinearMatMul => {
+            let a = in_shape(g, node, 0)?;
+            let b = in_shape(g, node, 1)?;
+            matmul_shape(&a, &b).map(|s| vec![(s, dt)])
+        }
+        OpKind::Gemm | OpKind::Linear => {
+            // A [M, K] (optionally transposed), B [K, N] or [N, K] w/ transB.
+            let a = in_shape(g, node, 0)?;
+            let b = in_shape(g, node, 1)?;
+            let trans_a = attr_int(&node.attrs, "transA", 0) != 0;
+            let trans_b = attr_int(&node.attrs, "transB", 0) != 0;
+            if a.rank() != 2 || b.rank() != 2 {
+                return Err(Error::Shape(format!(
+                    "Gemm '{}' needs rank-2 inputs, got {a} x {b}",
+                    node.name
+                )));
+            }
+            let (m, ka) = if trans_a {
+                (a.0[1].clone(), a.0[0].clone())
+            } else {
+                (a.0[0].clone(), a.0[1].clone())
+            };
+            let (kb, n) = if trans_b {
+                (b.0[1].clone(), b.0[0].clone())
+            } else {
+                (b.0[0].clone(), b.0[1].clone())
+            };
+            if !dim_eq(&ka, &kb) {
+                return Err(Error::Shape(format!(
+                    "Gemm '{}' K mismatch: {ka} vs {kb}",
+                    node.name
+                )));
+            }
+            one(Shape(vec![m, n]), dt)
+        }
+        OpKind::Einsum => {
+            // Support the common "bij,bjk->bik" family only.
+            let a = in_shape(g, node, 0)?;
+            let b = in_shape(g, node, 1)?;
+            matmul_shape(&a, &b).map(|s| vec![(s, dt)])
+        }
+        OpKind::Attention => {
+            // (x [B, S, D], wq, wk, wv, wo [D, D]) -> [B, S, D]
+            let x = in_shape(g, node, 0)?;
+            one(x, dt)
+        }
+        OpKind::LSTMCell | OpKind::GRUCell => {
+            // (x [B, I], h [B, H], ...) -> h' [B, H]
+            let h = in_shape(g, node, 1)?;
+            one(h, dt)
+        }
+
+        // -- Convolution ------------------------------------------------------
+        OpKind::Conv | OpKind::DepthwiseConv | OpKind::ConvInteger | OpKind::QLinearConv => {
+            // x [N, C, H, W], w [F, C/groups, kH, kW] -> [N, F, H', W']
+            let x = in_shape(g, node, 0)?;
+            let w = in_shape(g, node, 1)?;
+            if x.rank() != 4 || w.rank() != 4 {
+                return Err(Error::Shape(format!(
+                    "Conv '{}' needs NCHW x FCHW, got {x} x {w}",
+                    node.name
+                )));
+            }
+            let strides = attr_ints(&node.attrs, "strides", &[1, 1]);
+            let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+            let kh = w.0[2].fixed().ok_or_else(|| sym_err(node, "kernel"))?;
+            let kw = w.0[3].fixed().ok_or_else(|| sym_err(node, "kernel"))?;
+            let f = w.0[0].clone();
+            let h = x.0[2].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let wdim = x.0[3].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let oh = conv_out(h, kh, pads[0] as usize, strides[0] as usize);
+            let ow = conv_out(wdim, kw, pads[1] as usize, strides[1] as usize);
+            one(
+                Shape(vec![x.0[0].clone(), f, Dim::Fixed(oh), Dim::Fixed(ow)]),
+                dt,
+            )
+        }
+        OpKind::ConvTranspose => {
+            let x = in_shape(g, node, 0)?;
+            let w = in_shape(g, node, 1)?;
+            let strides = attr_ints(&node.attrs, "strides", &[1, 1]);
+            let h = x.0[2].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let wd = x.0[3].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let kh = w.0[2].fixed().unwrap();
+            let kw = w.0[3].fixed().unwrap();
+            one(
+                Shape(vec![
+                    x.0[0].clone(),
+                    w.0[1].clone(),
+                    Dim::Fixed((h - 1) * strides[0] as usize + kh),
+                    Dim::Fixed((wd - 1) * strides[1] as usize + kw),
+                ]),
+                dt,
+            )
+        }
+        OpKind::Conv1d => {
+            let x = in_shape(g, node, 0)?; // [N, C, L]
+            let w = in_shape(g, node, 1)?; // [F, C, k]
+            let strides = attr_ints(&node.attrs, "strides", &[1]);
+            let pads = attr_ints(&node.attrs, "pads", &[0]);
+            let l = x.0[2].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let k = w.0[2].fixed().unwrap();
+            one(
+                Shape(vec![
+                    x.0[0].clone(),
+                    w.0[0].clone(),
+                    Dim::Fixed(conv_out(l, k, pads[0] as usize, strides[0] as usize)),
+                ]),
+                dt,
+            )
+        }
+        OpKind::Conv3d => {
+            let x = in_shape(g, node, 0)?;
+            let w = in_shape(g, node, 1)?;
+            let strides = attr_ints(&node.attrs, "strides", &[1, 1, 1]);
+            let pads = attr_ints(&node.attrs, "pads", &[0, 0, 0]);
+            let mut dims = vec![x.0[0].clone(), w.0[0].clone()];
+            for i in 0..3 {
+                let s = x.0[2 + i].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+                let k = w.0[2 + i].fixed().unwrap();
+                dims.push(Dim::Fixed(conv_out(
+                    s,
+                    k,
+                    pads[i] as usize,
+                    strides[i] as usize,
+                )));
+            }
+            one(Shape(dims), dt)
+        }
+
+        // -- Pooling ----------------------------------------------------------
+        OpKind::MaxPool | OpKind::AveragePool | OpKind::LpPool => {
+            let x = in_shape(g, node, 0)?;
+            let k = attr_ints(&node.attrs, "kernel_shape", &[2, 2]);
+            let strides = attr_ints(&node.attrs, "strides", &k.clone());
+            let pads = attr_ints(&node.attrs, "pads", &[0, 0]);
+            let h = x.0[2].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let w = x.0[3].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            one(
+                Shape(vec![
+                    x.0[0].clone(),
+                    x.0[1].clone(),
+                    Dim::Fixed(conv_out(h, k[0] as usize, pads[0] as usize, strides[0] as usize)),
+                    Dim::Fixed(conv_out(w, k[1] as usize, pads[1] as usize, strides[1] as usize)),
+                ]),
+                dt,
+            )
+        }
+        OpKind::GlobalMaxPool | OpKind::GlobalAveragePool | OpKind::AdaptiveAveragePool => {
+            let x = in_shape(g, node, 0)?;
+            let mut dims = vec![x.0[0].clone(), x.0[1].clone()];
+            for _ in 2..x.rank() {
+                dims.push(Dim::Fixed(1));
+            }
+            one(Shape(dims), dt)
+        }
+
+        // -- Shape manipulation -------------------------------------------------
+        OpKind::Reshape | OpKind::Flatten | OpKind::Squeeze | OpKind::Unsqueeze => {
+            reshape_like(g, node, dt)
+        }
+        OpKind::Transpose => {
+            let x = in_shape(g, node, 0)?;
+            let perm = attr_ints(
+                &node.attrs,
+                "perm",
+                &(0..x.rank() as i64).rev().collect::<Vec<_>>(),
+            );
+            if perm.len() != x.rank() {
+                return Err(Error::Shape(format!(
+                    "Transpose '{}' perm rank mismatch",
+                    node.name
+                )));
+            }
+            one(
+                Shape(perm.iter().map(|&p| x.0[p as usize].clone()).collect()),
+                dt,
+            )
+        }
+        OpKind::Concat => {
+            let axis = attr_int(&node.attrs, "axis", 0) as usize;
+            let mut out = in_shape(g, node, 0)?;
+            let mut total = out.0[axis]
+                .fixed()
+                .ok_or_else(|| sym_err(node, "concat axis"))?;
+            for i in 1..node.inputs.len() {
+                let s = in_shape(g, node, i)?;
+                total += s.0[axis].fixed().ok_or_else(|| sym_err(node, "concat axis"))?;
+            }
+            out.0[axis] = Dim::Fixed(total);
+            one(out, dt)
+        }
+        OpKind::Split => {
+            let axis = attr_int(&node.attrs, "axis", 0) as usize;
+            let x = in_shape(g, node, 0)?;
+            let n = node.outputs.len();
+            let total = x.0[axis].fixed().ok_or_else(|| sym_err(node, "split axis"))?;
+            if total % n != 0 {
+                return Err(Error::Shape(format!(
+                    "Split '{}': {total} not divisible by {n}",
+                    node.name
+                )));
+            }
+            let mut out = Vec::new();
+            for _ in 0..n {
+                let mut s = x.clone();
+                s.0[axis] = Dim::Fixed(total / n);
+                out.push((s, dt));
+            }
+            Ok(out)
+        }
+        OpKind::Slice => {
+            let x = in_shape(g, node, 0)?;
+            let starts = attr_ints(&node.attrs, "starts", &[]);
+            let ends = attr_ints(&node.attrs, "ends", &[]);
+            let axes = attr_ints(
+                &node.attrs,
+                "axes",
+                &(0..starts.len() as i64).collect::<Vec<_>>(),
+            );
+            let mut out = x.clone();
+            for ((&s, &e), &ax) in starts.iter().zip(&ends).zip(&axes) {
+                let extent = x.0[ax as usize]
+                    .fixed()
+                    .ok_or_else(|| sym_err(node, "slice axis"))? as i64;
+                let e = e.min(extent);
+                out.0[ax as usize] = Dim::Fixed((e - s).max(0) as usize);
+            }
+            one(out, dt)
+        }
+        OpKind::Pad => {
+            let x = in_shape(g, node, 0)?;
+            let pads = attr_ints(&node.attrs, "pads", &vec![0; x.rank() * 2]);
+            let mut out = Vec::new();
+            for (i, d) in x.0.iter().enumerate() {
+                let extra = (pads[i] + pads[i + x.rank()]) as usize;
+                out.push(match d {
+                    Dim::Fixed(n) => Dim::Fixed(n + extra),
+                    s => {
+                        if extra == 0 {
+                            s.clone()
+                        } else {
+                            return Err(sym_err(node, "pad axis"));
+                        }
+                    }
+                });
+            }
+            one(Shape(out), dt)
+        }
+        OpKind::Expand | OpKind::Tile => {
+            let x = in_shape(g, node, 0)?;
+            let reps = attr_ints(&node.attrs, "shape", &x.onnx_dims());
+            one(
+                Shape(
+                    reps.iter()
+                        .zip(&x.0)
+                        .map(|(&r, d)| {
+                            if node.op == OpKind::Tile {
+                                match d {
+                                    Dim::Fixed(n) => Dim::Fixed(n * r as usize),
+                                    s => s.clone(),
+                                }
+                            } else if r == -1 {
+                                d.clone()
+                            } else {
+                                Dim::Fixed(r as usize)
+                            }
+                        })
+                        .collect(),
+                ),
+                dt,
+            )
+        }
+        OpKind::SpaceToDepth => {
+            let x = in_shape(g, node, 0)?;
+            let bs = attr_int(&node.attrs, "blocksize", 2) as usize;
+            let c = x.0[1].fixed().unwrap();
+            let h = x.0[2].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            let w = x.0[3].fixed().ok_or_else(|| sym_err(node, "spatial"))?;
+            one(
+                Shape(vec![
+                    x.0[0].clone(),
+                    Dim::Fixed(c * bs * bs),
+                    Dim::Fixed(h / bs),
+                    Dim::Fixed(w / bs),
+                ]),
+                dt,
+            )
+        }
+
+        // -- Reductions -----------------------------------------------------------
+        OpKind::ReduceSum
+        | OpKind::ReduceMean
+        | OpKind::ReduceMax
+        | OpKind::ReduceMin
+        | OpKind::ReduceProd
+        | OpKind::ReduceL2 => {
+            let x = in_shape(g, node, 0)?;
+            let axes = attr_ints(
+                &node.attrs,
+                "axes",
+                &(0..x.rank() as i64).collect::<Vec<_>>(),
+            );
+            let keep = attr_int(&node.attrs, "keepdims", 1) != 0;
+            let mut out = Vec::new();
+            for (i, d) in x.0.iter().enumerate() {
+                if axes.contains(&(i as i64)) {
+                    if keep {
+                        out.push(Dim::Fixed(1));
+                    }
+                } else {
+                    out.push(d.clone());
+                }
+            }
+            one(Shape(out), dt)
+        }
+        OpKind::ArgMax | OpKind::ArgMin => {
+            let x = in_shape(g, node, 0)?;
+            let axis = attr_int(&node.attrs, "axis", 0) as usize;
+            let keep = attr_int(&node.attrs, "keepdims", 1) != 0;
+            let mut out = Vec::new();
+            for (i, d) in x.0.iter().enumerate() {
+                if i == axis {
+                    if keep {
+                        out.push(Dim::Fixed(1));
+                    }
+                } else {
+                    out.push(d.clone());
+                }
+            }
+            one(Shape(out), DType::I32)
+        }
+        OpKind::CumSum => one(in_shape(g, node, 0)?, dt),
+        OpKind::TopK => {
+            let x = in_shape(g, node, 0)?;
+            let k = attr_int(&node.attrs, "k", 1) as usize;
+            let axis = attr_int(&node.attrs, "axis", -1);
+            let axis = if axis < 0 {
+                (x.rank() as i64 + axis) as usize
+            } else {
+                axis as usize
+            };
+            let mut s = x.clone();
+            s.0[axis] = Dim::Fixed(k);
+            Ok(vec![(s.clone(), dt), (s, DType::I32)])
+        }
+
+        // -- Data movement -----------------------------------------------------------
+        OpKind::Gather => {
+            // data [V, D...], indices [I...] -> [I..., D...] (axis 0).
+            let data = in_shape(g, node, 0)?;
+            let idx = in_shape(g, node, 1)?;
+            let mut dims = idx.0.clone();
+            dims.extend(data.0[1..].iter().cloned());
+            one(Shape(dims), dt)
+        }
+        OpKind::GatherElements | OpKind::Scatter | OpKind::ScatterElements => {
+            one(in_shape(g, node, node.inputs.len().min(2) - 1)?, dt)
+        }
+        OpKind::OneHot => {
+            let idx = in_shape(g, node, 0)?;
+            let depth = attr_int(&node.attrs, "depth", 2) as usize;
+            let mut dims = idx.0.clone();
+            dims.push(Dim::Fixed(depth));
+            one(Shape(dims), dt)
+        }
+        OpKind::Shape => {
+            let x = in_shape(g, node, 0)?;
+            one(Shape::fixed(&[x.rank()]), DType::I32)
+        }
+        OpKind::Constant | OpKind::ConstantOfShape => {
+            let dims = attr_ints(&node.attrs, "shape", &[1]);
+            one(
+                Shape::fixed(&dims.iter().map(|&d| d as usize).collect::<Vec<_>>()),
+                dt,
+            )
+        }
+        OpKind::Identity | OpKind::Cast => one(in_shape(g, node, 0)?, dt),
+        OpKind::Range => {
+            let n = attr_int(&node.attrs, "length", 1) as usize;
+            one(Shape::fixed(&[n]), DType::I32)
+        }
+
+        // -- Logical -------------------------------------------------------------------
+        OpKind::Equal
+        | OpKind::Greater
+        | OpKind::GreaterOrEqual
+        | OpKind::Less
+        | OpKind::LessOrEqual
+        | OpKind::And
+        | OpKind::Or
+        | OpKind::Xor => {
+            let a = in_shape(g, node, 0)?;
+            let b = in_shape(g, node, 1)?;
+            one(broadcast(&a, &b)?, DType::I8)
+        }
+        OpKind::Not => one(in_shape(g, node, 0)?, DType::I8),
+        OpKind::Where => {
+            let c = in_shape(g, node, 0)?;
+            let a = in_shape(g, node, 1)?;
+            let b = in_shape(g, node, 2)?;
+            one(broadcast(&broadcast(&c, &a)?, &b)?, in_dtype(g, node, 1))
+        }
+
+        // -- Control ----------------------------------------------------------------------
+        OpKind::If | OpKind::Loop | OpKind::Scan => {
+            // Shape-preserving over the carried value (simplified semantics).
+            one(in_shape(g, node, node.inputs.len() - 1)?, dt)
+        }
+        OpKind::SequenceConstruct | OpKind::SequenceAt => one(in_shape(g, node, 0)?, dt),
+
+        // -- Category fallbacks (elementwise / activation / norm / quant) -------------------
+        _ => match node.op.category() {
+            OpCategory::ElementwiseArith => {
+                if node.inputs.len() >= 2 {
+                    let a = in_shape(g, node, 0)?;
+                    let b = in_shape(g, node, 1)?;
+                    one(broadcast(&a, &b)?, dt)
+                } else {
+                    one(in_shape(g, node, 0)?, dt)
+                }
+            }
+            OpCategory::Activation
+            | OpCategory::Normalization
+            | OpCategory::Quantization => one(in_shape(g, node, 0)?, dt),
+            other => Err(Error::Shape(format!(
+                "no shape rule for op {} (category {})",
+                node.op.name(),
+                other.name()
+            ))),
+        },
+    }
+}
+
+fn sym_err(node: &Node, what: &str) -> Error {
+    Error::Shape(format!(
+        "node '{}' ({}) does not support symbolic {what} dims — specialize first",
+        node.name,
+        node.op.name()
+    ))
+}
+
+fn matmul_shape(a: &Shape, b: &Shape) -> Result<Shape> {
+    if a.rank() < 2 || b.rank() < 2 {
+        return Err(Error::Shape(format!("matmul needs rank>=2: {a} x {b}")));
+    }
+    let (ka, m) = (a.0[a.rank() - 1].clone(), a.0[a.rank() - 2].clone());
+    let (n, kb) = (b.0[b.rank() - 1].clone(), b.0[b.rank() - 2].clone());
+    if !dim_eq(&ka, &kb) {
+        return Err(Error::Shape(format!("matmul K mismatch: {a} x {b}")));
+    }
+    // Broadcast batch dims.
+    let batch_a = Shape(a.0[..a.rank() - 2].to_vec());
+    let batch_b = Shape(b.0[..b.rank() - 2].to_vec());
+    let mut dims = broadcast(&batch_a, &batch_b)?.0;
+    dims.push(m);
+    dims.push(n);
+    Ok(Shape(dims))
+}
+
+fn reshape_like(g: &Graph, node: &Node, dt: DType) -> Result<Vec<OutInfo>> {
+    let x = in_shape(g, node, 0)?;
+    match node.op {
+        OpKind::Flatten => {
+            let axis = attr_int(&node.attrs, "axis", 1) as usize;
+            let lead: usize = x.0[..axis]
+                .iter()
+                .map(|d| d.fixed().unwrap_or(1))
+                .product();
+            let tail: usize = x.0[axis..]
+                .iter()
+                .map(|d| d.fixed().unwrap_or(1))
+                .product();
+            // Preserve a leading symbolic batch if present.
+            if let Some(Dim::Sym { .. }) = x.0.first() {
+                if axis == 1 {
+                    return one(Shape(vec![x.0[0].clone(), Dim::Fixed(tail)]), dt);
+                }
+            }
+            one(Shape::fixed(&[lead, tail]), dt)
+        }
+        OpKind::Squeeze => {
+            one(
+                Shape(
+                    x.0.iter()
+                        .filter(|d| !matches!(d, Dim::Fixed(1)))
+                        .cloned()
+                        .collect(),
+                ),
+                dt,
+            )
+        }
+        OpKind::Unsqueeze => {
+            let axes = attr_ints(&node.attrs, "axes", &[0]);
+            let mut dims = x.0.clone();
+            for &a in &axes {
+                dims.insert(a as usize, Dim::Fixed(1));
+            }
+            one(Shape(dims), dt)
+        }
+        _ => {
+            // Reshape: target in attrs "shape" with -1 wildcard; a leading
+            // symbolic batch dim is carried through a leading -1.
+            let target = attr_ints(&node.attrs, "shape", &[]);
+            if target.is_empty() {
+                return Err(Error::Shape(format!(
+                    "Reshape '{}' missing 'shape' attr",
+                    node.name
+                )));
+            }
+            let mut sym_carry: Option<Dim> = None;
+            if let Some(d @ Dim::Sym { .. }) = x.0.first() {
+                sym_carry = Some(d.clone());
+            }
+            let known: usize = x
+                .0
+                .iter()
+                .map(|d| d.fixed().unwrap_or(1))
+                .product();
+            let fixed_target: usize = target
+                .iter()
+                .filter(|&&t| t > 0)
+                .map(|&t| t as usize)
+                .product();
+            let dims: Vec<Dim> = target
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    if t == -1 {
+                        if i == 0 {
+                            if let Some(s) = &sym_carry {
+                                return s.clone();
+                            }
+                        }
+                        Dim::Fixed((known / fixed_target.max(1)).max(1))
+                    } else {
+                        Dim::Fixed(t as usize)
+                    }
+                })
+                .collect();
+            one(Shape(dims), dt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ops::{AttrValue, Attrs};
+    use crate::ir::tensor::Initializer;
+
+    fn attrs(kv: &[(&str, AttrValue)]) -> Attrs {
+        kv.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn matmul_and_gemm() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[8, 32]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[32, 16], 0, 0.1));
+        let y = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let w2 = g.init(Initializer::lazy("w2", &[10, 16], 0, 0.1));
+        let z = g.node(
+            OpKind::Gemm,
+            "gemm",
+            &[y, w2],
+            attrs(&[("transB", AttrValue::Int(1))]),
+        );
+        g.outputs.push(z);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[8, 16]));
+        assert_eq!(g.shape_of(z).unwrap(), &Shape::fixed(&[8, 10]));
+    }
+
+    #[test]
+    fn batched_matmul_broadcasts() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", Shape::fixed(&[4, 12, 64, 32]), DType::F32);
+        let b = g.input("b", Shape::fixed(&[4, 12, 32, 64]), DType::F32);
+        let y = g.node(OpKind::MatMul, "mm", &[a, b], Attrs::new());
+        g.outputs.push(y);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[4, 12, 64, 64]));
+    }
+
+    #[test]
+    fn conv_shape_nchw() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 3, 224, 224]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[64, 3, 7, 7], 0, 0.1));
+        let y = g.node(
+            OpKind::Conv,
+            "c",
+            &[x, w],
+            attrs(&[
+                ("strides", AttrValue::Ints(vec![2, 2])),
+                ("pads", AttrValue::Ints(vec![3, 3])),
+            ]),
+        );
+        g.outputs.push(y);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[1, 64, 112, 112]));
+    }
+
+    #[test]
+    fn pool_and_global_pool() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 64, 112, 112]), DType::F32);
+        let y = g.node(
+            OpKind::MaxPool,
+            "p",
+            &[x],
+            attrs(&[
+                ("kernel_shape", AttrValue::Ints(vec![3, 3])),
+                ("strides", AttrValue::Ints(vec![2, 2])),
+                ("pads", AttrValue::Ints(vec![1, 1])),
+            ]),
+        );
+        let z = g.node(OpKind::GlobalAveragePool, "gap", &[y], Attrs::new());
+        g.outputs.push(z);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[1, 64, 56, 56]));
+        assert_eq!(g.shape_of(z).unwrap(), &Shape::fixed(&[1, 64, 1, 1]));
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape::fixed(&[4, 1, 8]);
+        let b = Shape::fixed(&[3, 8]);
+        assert_eq!(broadcast(&a, &b).unwrap(), Shape::fixed(&[4, 3, 8]));
+        assert!(broadcast(&Shape::fixed(&[3]), &Shape::fixed(&[4])).is_err());
+    }
+
+    #[test]
+    fn symbolic_batch_flows_through() {
+        let mut g = Graph::new("t");
+        let x = g.input(
+            "x",
+            Shape(vec![Dim::sym("batch", 1, 32), Dim::Fixed(128)]),
+            DType::F32,
+        );
+        let w = g.init(Initializer::lazy("w", &[128, 64], 0, 0.1));
+        let y = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let z = g.node(OpKind::Relu, "r", &[y], Attrs::new());
+        g.outputs.push(z);
+        infer_shapes(&mut g).unwrap();
+        let s = g.shape_of(z).unwrap();
+        assert!(s.0[0].is_sym());
+        assert_eq!(s.0[1], Dim::Fixed(64));
+        assert_eq!(s.onnx_dims(), vec![-1, 64]);
+    }
+
+    #[test]
+    fn reduce_and_argmax() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 10]), DType::F32);
+        let y = g.node(
+            OpKind::ReduceMean,
+            "rm",
+            &[x],
+            attrs(&[
+                ("axes", AttrValue::Ints(vec![1])),
+                ("keepdims", AttrValue::Int(0)),
+            ]),
+        );
+        let a = g.node(
+            OpKind::ArgMax,
+            "am",
+            &[x],
+            attrs(&[("axis", AttrValue::Int(1)), ("keepdims", AttrValue::Int(0))]),
+        );
+        g.outputs.push(y);
+        g.outputs.push(a);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[2]));
+        assert_eq!(g.shape_of(a).unwrap(), &Shape::fixed(&[2]));
+        assert_eq!(g.info(a).dtype, DType::I32);
+    }
+
+    #[test]
+    fn gather_for_embeddings() {
+        let mut g = Graph::new("t");
+        let table = g.init(Initializer::lazy("emb", &[30522, 768], 0, 0.02));
+        let ids = g.input("ids", Shape::fixed(&[1, 128]), DType::I32);
+        let y = g.node(OpKind::Gather, "g", &[table, ids], Attrs::new());
+        g.outputs.push(y);
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shape_of(y).unwrap(), &Shape::fixed(&[1, 128, 768]));
+    }
+
+    #[test]
+    fn k_mismatch_is_error() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[8, 33]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[32, 16], 0, 0.1));
+        let y = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        g.outputs.push(y);
+        assert!(infer_shapes(&mut g).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Graph IR: data types, shapes (with symbolic dimensions), tensors, the
+//! operator registry (100+ ONNX-compatible ops in 12 categories), the graph
+//! structure, shape inference, and a reference executor.
+//!
+//! This is the paper's frontend IR (§3.1 stage 1): ONNX models load into
+//! [`graph::Graph`], shape inference annotates every tensor, and the
+//! reference executor provides the numerical oracle that code generation and
+//! quantization are validated against.
+
+pub mod dtype;
+pub mod exec;
+pub mod graph;
+pub mod infer;
+pub mod ops;
+pub mod shape;
+pub mod tensor;
+
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId, TensorId};
+pub use ops::{OpCategory, OpKind};
+pub use shape::{Dim, Shape};
+pub use tensor::Tensor;

@@ -1,0 +1,321 @@
+//! Operator registry: 100+ ONNX-compatible operators across 12 categories
+//! (the paper's headline operator-coverage claim).
+//!
+//! Each operator carries its category (which drives kernel selection,
+//! access-pattern classification for the cache model, and fusion rules) and
+//! an attribute map. The registry is the single source of truth — the
+//! frontend rejects anything not listed here, which is part of
+//! validation-driven compilation (contribution 3).
+
+use std::collections::BTreeMap;
+
+/// The 12 operator categories (paper abstract: "100+ ONNX operators across
+/// 12 categories").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpCategory {
+    /// Dense linear algebra: MatMul, Gemm, Einsum...
+    Linear,
+    /// Convolutions.
+    Convolution,
+    /// Elementwise arithmetic: Add, Mul, ...
+    ElementwiseArith,
+    /// Activations: Relu, Gelu, Sigmoid, ...
+    Activation,
+    /// Reductions: ReduceSum, ArgMax, ...
+    Reduction,
+    /// Normalization: BatchNorm, LayerNorm, ...
+    Normalization,
+    /// Pooling.
+    Pooling,
+    /// Shape / layout manipulation: Reshape, Transpose, ...
+    ShapeManip,
+    /// Tensor creation / data movement: Constant, Gather, ...
+    DataMovement,
+    /// Comparison & logical ops.
+    Logical,
+    /// Quantization ops: QuantizeLinear, ...
+    Quantization,
+    /// Control flow & sequence: If, Loop, ...
+    Control,
+}
+
+impl OpCategory {
+    pub fn all() -> &'static [OpCategory] {
+        use OpCategory::*;
+        &[
+            Linear, Convolution, ElementwiseArith, Activation, Reduction,
+            Normalization, Pooling, ShapeManip, DataMovement, Logical,
+            Quantization, Control,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCategory::Linear => "Linear",
+            OpCategory::Convolution => "Convolution",
+            OpCategory::ElementwiseArith => "ElementwiseArith",
+            OpCategory::Activation => "Activation",
+            OpCategory::Reduction => "Reduction",
+            OpCategory::Normalization => "Normalization",
+            OpCategory::Pooling => "Pooling",
+            OpCategory::ShapeManip => "ShapeManip",
+            OpCategory::DataMovement => "DataMovement",
+            OpCategory::Logical => "Logical",
+            OpCategory::Quantization => "Quantization",
+            OpCategory::Control => "Control",
+        }
+    }
+
+    /// Memory access pattern class for the cache-aware cost model (§3.7):
+    /// sequential ops get the 95% L1 base hit rate, random-access ops 70%.
+    pub fn is_sequential_access(self) -> bool {
+        !matches!(
+            self,
+            OpCategory::DataMovement | OpCategory::ShapeManip | OpCategory::Control
+        )
+    }
+}
+
+macro_rules! ops {
+    ($($variant:ident => ($name:literal, $cat:ident)),+ $(,)?) => {
+        /// Every supported operator (ONNX names).
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub enum OpKind { $($variant),+ }
+
+        impl OpKind {
+            pub fn name(self) -> &'static str {
+                match self { $(OpKind::$variant => $name),+ }
+            }
+
+            pub fn category(self) -> OpCategory {
+                match self { $(OpKind::$variant => OpCategory::$cat),+ }
+            }
+
+            pub fn parse(s: &str) -> Option<OpKind> {
+                match s { $($name => Some(OpKind::$variant)),+ , _ => None }
+            }
+
+            pub fn all() -> &'static [OpKind] {
+                &[ $(OpKind::$variant),+ ]
+            }
+        }
+    };
+}
+
+ops! {
+    // -- Linear (8) ---------------------------------------------------------
+    MatMul => ("MatMul", Linear),
+    Gemm => ("Gemm", Linear),
+    Einsum => ("Einsum", Linear),
+    MatMulInteger => ("MatMulInteger", Linear),
+    Linear => ("Linear", Linear),
+    Attention => ("Attention", Linear),
+    LSTMCell => ("LSTMCell", Linear),
+    GRUCell => ("GRUCell", Linear),
+    // -- Convolution (6) ------------------------------------------------------
+    Conv => ("Conv", Convolution),
+    ConvTranspose => ("ConvTranspose", Convolution),
+    DepthwiseConv => ("DepthwiseConv", Convolution),
+    ConvInteger => ("ConvInteger", Convolution),
+    Conv1d => ("Conv1d", Convolution),
+    Conv3d => ("Conv3d", Convolution),
+    // -- Elementwise arithmetic (16) -----------------------------------------
+    Add => ("Add", ElementwiseArith),
+    Sub => ("Sub", ElementwiseArith),
+    Mul => ("Mul", ElementwiseArith),
+    Div => ("Div", ElementwiseArith),
+    Pow => ("Pow", ElementwiseArith),
+    Sqrt => ("Sqrt", ElementwiseArith),
+    Exp => ("Exp", ElementwiseArith),
+    Log => ("Log", ElementwiseArith),
+    Abs => ("Abs", ElementwiseArith),
+    Neg => ("Neg", ElementwiseArith),
+    Reciprocal => ("Reciprocal", ElementwiseArith),
+    Floor => ("Floor", ElementwiseArith),
+    Ceil => ("Ceil", ElementwiseArith),
+    Round => ("Round", ElementwiseArith),
+    Min => ("Min", ElementwiseArith),
+    Max => ("Max", ElementwiseArith),
+    // -- Activations (14) ------------------------------------------------------
+    Relu => ("Relu", Activation),
+    Relu6 => ("Relu6", Activation),
+    LeakyRelu => ("LeakyRelu", Activation),
+    PRelu => ("PRelu", Activation),
+    Elu => ("Elu", Activation),
+    Selu => ("Selu", Activation),
+    Gelu => ("Gelu", Activation),
+    Sigmoid => ("Sigmoid", Activation),
+    HardSigmoid => ("HardSigmoid", Activation),
+    HardSwish => ("HardSwish", Activation),
+    Tanh => ("Tanh", Activation),
+    Softplus => ("Softplus", Activation),
+    Softmax => ("Softmax", Activation),
+    LogSoftmax => ("LogSoftmax", Activation),
+    // -- Reductions (10) -------------------------------------------------------
+    ReduceSum => ("ReduceSum", Reduction),
+    ReduceMean => ("ReduceMean", Reduction),
+    ReduceMax => ("ReduceMax", Reduction),
+    ReduceMin => ("ReduceMin", Reduction),
+    ReduceProd => ("ReduceProd", Reduction),
+    ReduceL2 => ("ReduceL2", Reduction),
+    ArgMax => ("ArgMax", Reduction),
+    ArgMin => ("ArgMin", Reduction),
+    CumSum => ("CumSum", Reduction),
+    TopK => ("TopK", Reduction),
+    // -- Normalization (6) -----------------------------------------------------
+    BatchNormalization => ("BatchNormalization", Normalization),
+    LayerNormalization => ("LayerNormalization", Normalization),
+    InstanceNormalization => ("InstanceNormalization", Normalization),
+    GroupNormalization => ("GroupNormalization", Normalization),
+    RMSNormalization => ("RMSNormalization", Normalization),
+    LpNormalization => ("LpNormalization", Normalization),
+    // -- Pooling (6) -----------------------------------------------------------
+    MaxPool => ("MaxPool", Pooling),
+    AveragePool => ("AveragePool", Pooling),
+    GlobalMaxPool => ("GlobalMaxPool", Pooling),
+    GlobalAveragePool => ("GlobalAveragePool", Pooling),
+    LpPool => ("LpPool", Pooling),
+    AdaptiveAveragePool => ("AdaptiveAveragePool", Pooling),
+    // -- Shape manipulation (12) -------------------------------------------------
+    Reshape => ("Reshape", ShapeManip),
+    Transpose => ("Transpose", ShapeManip),
+    Flatten => ("Flatten", ShapeManip),
+    Squeeze => ("Squeeze", ShapeManip),
+    Unsqueeze => ("Unsqueeze", ShapeManip),
+    Concat => ("Concat", ShapeManip),
+    Split => ("Split", ShapeManip),
+    Slice => ("Slice", ShapeManip),
+    Pad => ("Pad", ShapeManip),
+    Expand => ("Expand", ShapeManip),
+    Tile => ("Tile", ShapeManip),
+    SpaceToDepth => ("SpaceToDepth", ShapeManip),
+    // -- Data movement / creation (10) -------------------------------------------
+    Constant => ("Constant", DataMovement),
+    ConstantOfShape => ("ConstantOfShape", DataMovement),
+    Identity => ("Identity", DataMovement),
+    Cast => ("Cast", DataMovement),
+    Gather => ("Gather", DataMovement),
+    GatherElements => ("GatherElements", DataMovement),
+    Scatter => ("Scatter", DataMovement),
+    ScatterElements => ("ScatterElements", DataMovement),
+    OneHot => ("OneHot", DataMovement),
+    Shape => ("Shape", DataMovement),
+    // -- Comparison / logical (10) -----------------------------------------------
+    Equal => ("Equal", Logical),
+    Greater => ("Greater", Logical),
+    GreaterOrEqual => ("GreaterOrEqual", Logical),
+    Less => ("Less", Logical),
+    LessOrEqual => ("LessOrEqual", Logical),
+    And => ("And", Logical),
+    Or => ("Or", Logical),
+    Not => ("Not", Logical),
+    Xor => ("Xor", Logical),
+    Where => ("Where", Logical),
+    // -- Quantization (8) ----------------------------------------------------------
+    QuantizeLinear => ("QuantizeLinear", Quantization),
+    DequantizeLinear => ("DequantizeLinear", Quantization),
+    DynamicQuantizeLinear => ("DynamicQuantizeLinear", Quantization),
+    QLinearConv => ("QLinearConv", Quantization),
+    QLinearMatMul => ("QLinearMatMul", Quantization),
+    QLinearAdd => ("QLinearAdd", Quantization),
+    FakeQuant => ("FakeQuant", Quantization),
+    BinaryQuantize => ("BinaryQuantize", Quantization),
+    // -- Control flow / sequence (6) -------------------------------------------------
+    If => ("If", Control),
+    Loop => ("Loop", Control),
+    Scan => ("Scan", Control),
+    SequenceConstruct => ("SequenceConstruct", Control),
+    SequenceAt => ("SequenceAt", Control),
+    Range => ("Range", Control),
+}
+
+/// Attribute value for a node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f64),
+    Ints(Vec<i64>),
+    Str(String),
+}
+
+/// Attribute map (ONNX-style `name -> value`).
+pub type Attrs = BTreeMap<String, AttrValue>;
+
+impl AttrValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            AttrValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            AttrValue::Float(v) => Some(*v),
+            AttrValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_ints(&self) -> Option<&[i64]> {
+        match self {
+            AttrValue::Ints(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Attribute lookup helpers used throughout shape inference and codegen.
+pub fn attr_int(attrs: &Attrs, key: &str, default: i64) -> i64 {
+    attrs.get(key).and_then(|a| a.as_int()).unwrap_or(default)
+}
+
+pub fn attr_f64(attrs: &Attrs, key: &str, default: f64) -> f64 {
+    attrs.get(key).and_then(|a| a.as_f64()).unwrap_or(default)
+}
+
+pub fn attr_ints(attrs: &Attrs, key: &str, default: &[i64]) -> Vec<i64> {
+    attrs
+        .get(key)
+        .and_then(|a| a.as_ints().map(|v| v.to_vec()))
+        .unwrap_or_else(|| default.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_100_plus_ops_in_12_categories() {
+        // The paper's headline coverage claim.
+        assert!(OpKind::all().len() >= 100, "{} ops", OpKind::all().len());
+        let cats: std::collections::BTreeSet<_> =
+            OpKind::all().iter().map(|o| o.category()).collect();
+        assert_eq!(cats.len(), 12);
+        assert_eq!(OpCategory::all().len(), 12);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for op in OpKind::all() {
+            assert_eq!(OpKind::parse(op.name()), Some(*op), "{}", op.name());
+        }
+        assert_eq!(OpKind::parse("NotAnOp"), None);
+    }
+
+    #[test]
+    fn access_pattern_classes() {
+        assert!(OpCategory::Linear.is_sequential_access());
+        assert!(OpCategory::Convolution.is_sequential_access());
+        assert!(!OpCategory::DataMovement.is_sequential_access());
+    }
+
+    #[test]
+    fn attr_helpers() {
+        let mut a = Attrs::new();
+        a.insert("k".into(), AttrValue::Int(3));
+        a.insert("p".into(), AttrValue::Ints(vec![1, 1]));
+        assert_eq!(attr_int(&a, "k", 0), 3);
+        assert_eq!(attr_int(&a, "missing", 7), 7);
+        assert_eq!(attr_ints(&a, "p", &[]), vec![1, 1]);
+        assert_eq!(attr_f64(&a, "k", 0.0), 3.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tensor shapes with symbolic dimensions (paper §3.5, contribution 4).
+//!
+//! A dimension is either fixed or symbolic (`batch`, `seq_len`, ...) with an
+//! allowed range. ONNX marks symbolic dims as `-1`; we preserve the name and
+//! range so `dynshape::specialize` can stamp out per-configuration variants.
+
+use std::fmt;
+
+/// One tensor dimension.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Dim {
+    /// Compile-time constant extent.
+    Fixed(usize),
+    /// Symbolic extent with a name and inclusive range (paper: "batch size
+    /// 1-32, sequence length 128-512").
+    Sym { name: String, min: usize, max: usize },
+}
+
+impl Dim {
+    pub fn sym(name: &str, min: usize, max: usize) -> Dim {
+        assert!(min >= 1 && min <= max, "bad symbolic range {min}..={max}");
+        Dim::Sym { name: name.to_string(), min, max }
+    }
+
+    pub fn is_sym(&self) -> bool {
+        matches!(self, Dim::Sym { .. })
+    }
+
+    /// Fixed extent, or None for symbolic.
+    pub fn fixed(&self) -> Option<usize> {
+        match self {
+            Dim::Fixed(n) => Some(*n),
+            Dim::Sym { .. } => None,
+        }
+    }
+
+    /// Extent used for worst-case memory planning: max of the range.
+    pub fn upper_bound(&self) -> usize {
+        match self {
+            Dim::Fixed(n) => *n,
+            Dim::Sym { max, .. } => *max,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::Fixed(n) => write!(f, "{n}"),
+            Dim::Sym { name, min, max } => write!(f, "{name}[{min}..{max}]"),
+        }
+    }
+}
+
+/// A tensor shape (row-major / NCHW conventions throughout).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<Dim>);
+
+impl Shape {
+    /// All-fixed shape from extents.
+    pub fn fixed(dims: &[usize]) -> Shape {
+        Shape(dims.iter().map(|&d| Dim::Fixed(d)).collect())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True when every dimension is fixed.
+    pub fn is_static(&self) -> bool {
+        self.0.iter().all(|d| !d.is_sym())
+    }
+
+    /// Element count for a static shape; None if any dim is symbolic.
+    pub fn numel(&self) -> Option<usize> {
+        self.0
+            .iter()
+            .map(|d| d.fixed())
+            .try_fold(1usize, |acc, d| d.map(|d| acc * d))
+    }
+
+    /// Worst-case element count (symbolic dims at their max).
+    pub fn numel_upper(&self) -> usize {
+        self.0.iter().map(|d| d.upper_bound()).product::<usize>().max(1)
+    }
+
+    /// Static extents; panics on symbolic (used after specialization).
+    pub fn dims(&self) -> Vec<usize> {
+        self.0
+            .iter()
+            .map(|d| d.fixed().expect("symbolic dim in static context"))
+            .collect()
+    }
+
+    /// Names of the symbolic dimensions, in order of appearance.
+    pub fn symbolic_names(&self) -> Vec<String> {
+        self.0
+            .iter()
+            .filter_map(|d| match d {
+                Dim::Sym { name, .. } => Some(name.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Substitute symbolic dims by name; leaves unmatched symbols intact.
+    pub fn bind(&self, bindings: &[(String, usize)]) -> Shape {
+        Shape(
+            self.0
+                .iter()
+                .map(|d| match d {
+                    Dim::Sym { name, min, max } => {
+                        match bindings.iter().find(|(n, _)| n == name) {
+                            Some((_, v)) => {
+                                assert!(
+                                    v >= min && v <= max,
+                                    "binding {name}={v} outside [{min}, {max}]"
+                                );
+                                Dim::Fixed(*v)
+                            }
+                            None => d.clone(),
+                        }
+                    }
+                    Dim::Fixed(_) => d.clone(),
+                })
+                .collect(),
+        )
+    }
+
+    /// ONNX-style display: symbolic dims rendered as -1.
+    pub fn onnx_dims(&self) -> Vec<i64> {
+        self.0
+            .iter()
+            .map(|d| d.fixed().map(|n| n as i64).unwrap_or(-1))
+            .collect()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_static_vs_symbolic() {
+        let s = Shape::fixed(&[2, 3, 4]);
+        assert_eq!(s.numel(), Some(24));
+        assert!(s.is_static());
+
+        let d = Shape(vec![Dim::sym("batch", 1, 32), Dim::Fixed(128)]);
+        assert_eq!(d.numel(), None);
+        assert_eq!(d.numel_upper(), 32 * 128);
+        assert!(!d.is_static());
+    }
+
+    #[test]
+    fn bind_replaces_in_range() {
+        let d = Shape(vec![Dim::sym("batch", 1, 32), Dim::Fixed(128)]);
+        let b = d.bind(&[("batch".to_string(), 8)]);
+        assert_eq!(b, Shape::fixed(&[8, 128]));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn bind_rejects_out_of_range() {
+        let d = Shape(vec![Dim::sym("batch", 1, 32)]);
+        d.bind(&[("batch".to_string(), 64)]);
+    }
+
+    #[test]
+    fn onnx_dims_mark_symbolic_minus1() {
+        let d = Shape(vec![Dim::sym("seq", 128, 512), Dim::Fixed(768)]);
+        assert_eq!(d.onnx_dims(), vec![-1, 768]);
+    }
+
+    #[test]
+    fn display() {
+        let d = Shape(vec![Dim::sym("b", 1, 4), Dim::Fixed(10)]);
+        assert_eq!(format!("{d}"), "[b[1..4], 10]");
+    }
+}

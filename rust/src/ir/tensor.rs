@@ -1,0 +1,222 @@
+//! Dense tensors and lazily-materialized initializers.
+//!
+//! Activations and small weights hold `Vec<f32>` data. Large model-zoo
+//! weights are *lazy*: they record a PRNG seed and are synthesized on demand
+//! (BERT-base at FP32 is ~420 MB — materializing every zoo model for a PPA
+//! compile would be pure waste, since compilation needs shapes, not values).
+
+use crate::ir::dtype::DType;
+use crate::ir::shape::Shape;
+use crate::util::rng::Rng;
+
+/// A dense f32 tensor (storage dtype is tracked separately by the quantizer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Multi-index -> flat offset.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        idx.iter()
+            .zip(self.strides())
+            .map(|(i, s)| i * s)
+            .sum()
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+}
+
+/// A weight/constant attached to the graph. `data` is materialized either
+/// eagerly (small models, tests) or lazily from `seed` (zoo-scale weights).
+#[derive(Debug, Clone)]
+pub struct Initializer {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    /// Eager data, if present.
+    pub data: Option<Tensor>,
+    /// Lazy synthesis seed + He-style std; used when `data` is None.
+    pub seed: u64,
+    pub init_std: f32,
+}
+
+impl Initializer {
+    pub fn eager(name: &str, shape: &[usize], data: Vec<f32>) -> Initializer {
+        Initializer {
+            name: name.to_string(),
+            shape: Shape::fixed(shape),
+            dtype: DType::F32,
+            data: Some(Tensor::new(shape.to_vec(), data)),
+            seed: 0,
+            init_std: 0.0,
+        }
+    }
+
+    pub fn lazy(name: &str, shape: &[usize], seed: u64, init_std: f32) -> Initializer {
+        Initializer {
+            name: name.to_string(),
+            shape: Shape::fixed(shape),
+            dtype: DType::F32,
+            data: None,
+            seed,
+            init_std,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel_upper()
+    }
+
+    /// Storage bytes at this initializer's dtype.
+    pub fn bytes(&self) -> usize {
+        (self.numel() as f64 * self.dtype.bytes_f64()).ceil() as usize
+    }
+
+    /// Materialize values (synthesizing lazily if needed).
+    pub fn materialize(&self) -> Tensor {
+        if let Some(t) = &self.data {
+            return t.clone();
+        }
+        let dims = self.shape.dims();
+        let mut t = Tensor::zeros(&dims);
+        let mut rng = Rng::new(self.seed);
+        rng.fill_normal(&mut t.data, self.init_std);
+        t
+    }
+
+    /// Content hash for WMEM consolidation (identical weights dedup across a
+    /// multi-model pipeline, paper §5.1). Lazy initializers hash their
+    /// recipe; eager ones hash their bits.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for d in self.shape.onnx_dims() {
+            mix(d as u64);
+        }
+        mix(self.dtype.bits() as u64);
+        match &self.data {
+            Some(t) => {
+                for v in &t.data {
+                    mix(v.to_bits() as u64);
+                }
+            }
+            None => {
+                mix(self.seed);
+                mix(self.init_std.to_bits() as u64);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        t.set(&[1, 2, 3], 5.0);
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+        assert_eq!(t.data[23], 5.0);
+    }
+
+    #[test]
+    fn lazy_materialize_is_deterministic() {
+        let a = Initializer::lazy("w", &[16, 16], 42, 0.05);
+        let t1 = a.materialize();
+        let t2 = a.materialize();
+        assert_eq!(t1, t2);
+        assert!(t1.data.iter().any(|&v| v != 0.0));
+        // std roughly as configured
+        let var: f32 =
+            t1.data.iter().map(|v| v * v).sum::<f32>() / t1.numel() as f32;
+        assert!((var.sqrt() - 0.05).abs() < 0.01, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn content_hash_distinguishes() {
+        let a = Initializer::lazy("w", &[4, 4], 1, 0.1);
+        let b = Initializer::lazy("w", &[4, 4], 2, 0.1);
+        let c = Initializer::lazy("w2", &[4, 4], 1, 0.1); // same recipe
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), c.content_hash());
+    }
+
+    #[test]
+    fn initializer_bytes_respect_dtype() {
+        let mut a = Initializer::lazy("w", &[1000], 1, 0.1);
+        assert_eq!(a.bytes(), 4000);
+        a.dtype = DType::I4;
+        assert_eq!(a.bytes(), 500);
+        a.dtype = DType::Binary;
+        assert_eq!(a.bytes(), 125);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn tensor_shape_checked() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+}

@@ -1,0 +1,325 @@
+//! Binary instruction encoding — real RISC-V formats (R/I/S/B/U/J), the
+//! F-extension layouts, and the RVV encodings (OP-V major opcode, unit-stride
+//! vector loads/stores). `decode` inverts this exactly; the round-trip is
+//! property-tested and is part of ISA validation (contribution 3).
+
+use crate::isa::{Instr, Op};
+use crate::util::error::{Error, Result};
+
+/// Instruction formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    R,
+    R4,
+    I,
+    S,
+    B,
+    U,
+    J,
+    VSetF,
+    VMem,
+    VArith,
+}
+
+/// Format of each opcode.
+pub fn format_of(op: Op) -> Format {
+    use Op::*;
+    match op {
+        Lui | Auipc => Format::U,
+        Jal => Format::J,
+        Jalr | Lw | Flw | Addi | Slti | Andi | Ori | Xori | Slli | Srli | Srai => Format::I,
+        Beq | Bne | Blt | Bge => Format::B,
+        Sw | Fsw => Format::S,
+        FmaddS => Format::R4,
+        Vsetvli => Format::VSetF,
+        Vle32 | Vse32 | Vle8 | Vse8 => Format::VMem,
+        VaddVV | VsubVV | VmulVV | VmaccVV | VfaddVV | VfsubVV | VfmulVV | VfmaccVV
+        | VfmaccVF | VfredsumVS | VfmaxVV | VfmvVF => Format::VArith,
+        _ => Format::R,
+    }
+}
+
+// Major opcodes.
+const OP_LUI: u32 = 0b0110111;
+const OP_AUIPC: u32 = 0b0010111;
+const OP_JAL: u32 = 0b1101111;
+const OP_JALR: u32 = 0b1100111;
+const OP_BRANCH: u32 = 0b1100011;
+const OP_LOAD: u32 = 0b0000011;
+const OP_STORE: u32 = 0b0100011;
+const OP_IMM: u32 = 0b0010011;
+const OP_OP: u32 = 0b0110011;
+const OP_LOAD_FP: u32 = 0b0000111;
+const OP_STORE_FP: u32 = 0b0100111;
+const OP_FP: u32 = 0b1010011;
+const OP_FMADD: u32 = 0b1000011;
+const OP_V: u32 = 0b1010111;
+
+/// (funct3, funct7-or-imm-tag) per opcode where applicable.
+fn rfunct(op: Op) -> (u32, u32) {
+    use Op::*;
+    match op {
+        Add => (0b000, 0),
+        Sub => (0b000, 0b0100000),
+        Sll => (0b001, 0),
+        Slt => (0b010, 0),
+        Xor => (0b100, 0),
+        Srl => (0b101, 0),
+        Sra => (0b101, 0b0100000),
+        Or => (0b110, 0),
+        And => (0b111, 0),
+        Mul => (0b000, 1),
+        Mulh => (0b001, 1),
+        Div => (0b100, 1),
+        Rem => (0b110, 1),
+        // F ext (funct7 carries the operation).
+        FaddS => (0b000, 0b0000000),
+        FsubS => (0b000, 0b0000100),
+        FmulS => (0b000, 0b0001000),
+        FdivS => (0b000, 0b0001100),
+        FminS => (0b000, 0b0010100),
+        FmaxS => (0b001, 0b0010100),
+        FcvtWS => (0b000, 0b1100000),
+        FcvtSW => (0b000, 0b1101000),
+        // Custom-0 space for the two transcendental helpers.
+        FexpS => (0b000, 0b1111100),
+        FrsqrtS => (0b001, 0b1111100),
+        _ => (0, 0),
+    }
+}
+
+fn ifunct(op: Op) -> u32 {
+    use Op::*;
+    match op {
+        Addi => 0b000,
+        Slti => 0b010,
+        Xori => 0b100,
+        Ori => 0b110,
+        Andi => 0b111,
+        Slli => 0b001,
+        Srli | Srai => 0b101,
+        Jalr | Lw => 0b010,
+        Flw => 0b010,
+        _ => 0,
+    }
+}
+
+fn bfunct(op: Op) -> u32 {
+    use Op::*;
+    match op {
+        Beq => 0b000,
+        Bne => 0b001,
+        Blt => 0b100,
+        Bge => 0b101,
+        _ => unreachable!(),
+    }
+}
+
+/// funct6 codes for the RVV arithmetic subset (vm bit always 1 = unmasked).
+fn vfunct6(op: Op) -> (u32, u32) {
+    // (funct6, funct3): funct3 000=OPIVV, 001=OPFVV, 101=OPFVF, 010=OPMVV.
+    use Op::*;
+    match op {
+        VaddVV => (0b000000, 0b000),
+        VsubVV => (0b000010, 0b000),
+        VmulVV => (0b100101, 0b010),
+        VmaccVV => (0b101101, 0b010),
+        VfaddVV => (0b000000, 0b001),
+        VfsubVV => (0b000010, 0b001),
+        VfmulVV => (0b100100, 0b001),
+        VfmaccVV => (0b101100, 0b001),
+        VfmaccVF => (0b101100, 0b101),
+        VfredsumVS => (0b000001, 0b001),
+        VfmaxVV => (0b000110, 0b001),
+        VfmvVF => (0b010111, 0b101),
+        _ => unreachable!(),
+    }
+}
+
+/// Immediate range check per format. Part of ISA validation.
+pub fn check_imm(i: &Instr) -> Result<()> {
+    let ok = match format_of(i.op) {
+        Format::I => {
+            if matches!(i.op, Op::Slli | Op::Srli | Op::Srai) {
+                (0..32).contains(&i.imm)
+            } else {
+                (-2048..=2047).contains(&i.imm)
+            }
+        }
+        Format::S => (-2048..=2047).contains(&i.imm),
+        Format::B => (-4096..=4094).contains(&i.imm) && i.imm % 2 == 0,
+        Format::U => (0..=0xFFFFF).contains(&i.imm),
+        Format::J => (-(1 << 20)..(1 << 20)).contains(&i.imm) && i.imm % 2 == 0,
+        Format::VSetF => (0..=31).contains(&i.imm) && i.rs3 <= 3, // AVL imm unused; LMUL in rs3
+        _ => true,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Validation(format!(
+            "immediate {} out of range for {}",
+            i.imm,
+            i.op.mnemonic()
+        )))
+    }
+}
+
+fn check_regs(i: &Instr) -> Result<()> {
+    for (r, name) in [(i.rd, "rd"), (i.rs1, "rs1"), (i.rs2, "rs2"), (i.rs3, "rs3")] {
+        if r >= 32 && format_of(i.op) != Format::VSetF {
+            return Err(Error::Validation(format!(
+                "{name}={r} out of range for {}",
+                i.op.mnemonic()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Encode one instruction to its 32-bit word.
+pub fn encode(i: &Instr) -> Result<u32> {
+    check_regs(i)?;
+    check_imm(i)?;
+    let (rd, rs1, rs2, rs3) = (i.rd as u32, i.rs1 as u32, i.rs2 as u32, i.rs3 as u32);
+    let imm = i.imm;
+    use Op::*;
+    let word = match format_of(i.op) {
+        Format::U => {
+            let opc = if i.op == Lui { OP_LUI } else { OP_AUIPC };
+            ((imm as u32) << 12) | (rd << 7) | opc
+        }
+        Format::J => {
+            let v = imm as u32;
+            let imm20 = (v >> 20) & 1;
+            let imm10_1 = (v >> 1) & 0x3FF;
+            let imm11 = (v >> 11) & 1;
+            let imm19_12 = (v >> 12) & 0xFF;
+            (imm20 << 31)
+                | (imm10_1 << 21)
+                | (imm11 << 20)
+                | (imm19_12 << 12)
+                | (rd << 7)
+                | OP_JAL
+        }
+        Format::I => {
+            let opc = match i.op {
+                Jalr => OP_JALR,
+                Lw => OP_LOAD,
+                Flw => OP_LOAD_FP,
+                _ => OP_IMM,
+            };
+            let mut hi = (imm as u32) & 0xFFF;
+            if i.op == Srai {
+                hi |= 0b0100000 << 5;
+            }
+            (hi << 20) | (rs1 << 15) | (ifunct(i.op) << 12) | (rd << 7) | opc
+        }
+        Format::S => {
+            let opc = if i.op == Fsw { OP_STORE_FP } else { OP_STORE };
+            let v = imm as u32;
+            let funct3 = 0b010;
+            (((v >> 5) & 0x7F) << 25)
+                | (rs2 << 20)
+                | (rs1 << 15)
+                | (funct3 << 12)
+                | ((v & 0x1F) << 7)
+                | opc
+        }
+        Format::B => {
+            let v = imm as u32;
+            let imm12 = (v >> 12) & 1;
+            let imm10_5 = (v >> 5) & 0x3F;
+            let imm4_1 = (v >> 1) & 0xF;
+            let imm11 = (v >> 11) & 1;
+            (imm12 << 31)
+                | (imm10_5 << 25)
+                | (rs2 << 20)
+                | (rs1 << 15)
+                | (bfunct(i.op) << 12)
+                | (imm4_1 << 8)
+                | (imm11 << 7)
+                | OP_BRANCH
+        }
+        Format::R => {
+            let (f3, f7) = rfunct(i.op);
+            let opc = match i.op.class() {
+                crate::isa::OpClass::FAlu
+                | crate::isa::OpClass::FMul
+                | crate::isa::OpClass::FDiv
+                | crate::isa::OpClass::FCustom => OP_FP,
+                _ => OP_OP,
+            };
+            (f7 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | opc
+        }
+        Format::R4 => {
+            (rs3 << 27) | (rs2 << 20) | (rs1 << 15) | (rd << 7) | OP_FMADD
+        }
+        Format::VSetF => {
+            // vsetvli rd, rs1, e32,m<2^rs3>: zimm[10:0] = vtype.
+            let vtype = (0b010 << 3) | rs3; // sew=32 (code 010), lmul in low bits
+            (vtype << 20) | (rs1 << 15) | (0b111 << 12) | (rd << 7) | OP_V
+        }
+        Format::VMem => {
+            let opc = if matches!(i.op, Vle32 | Vle8) { OP_LOAD_FP } else { OP_STORE_FP };
+            let width = if matches!(i.op, Vle32 | Vse32) { 0b110 } else { 0b000 };
+            // mop=00 unit-stride, vm=1, lumop=0.
+            (1u32 << 25) | (rs1 << 15) | ((width as u32) << 12) | (rd << 7) | opc
+        }
+        Format::VArith => {
+            let (f6, f3) = vfunct6(i.op);
+            // vd | funct3 | vs1/rs1 | vs2 | vm=1 | funct6 | OP-V
+            (f6 << 26) | (1 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | OP_V
+        }
+    };
+    Ok(word)
+}
+
+/// Encode a full program.
+pub fn encode_all(prog: &[Instr]) -> Result<Vec<u32>> {
+    prog.iter().map(encode).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_rv32i_encodings() {
+        // addi t0, zero, 42 -> imm=42, rs1=0, f3=0, rd=5, 0010011
+        assert_eq!(
+            encode(&Instr::i(Op::Addi, 5, 0, 42)).unwrap(),
+            (42 << 20) | (5 << 7) | 0b0010011
+        );
+        // add a0, a1, a2
+        assert_eq!(
+            encode(&Instr::r(Op::Add, 10, 11, 12)).unwrap(),
+            (12 << 20) | (11 << 15) | (10 << 7) | 0b0110011
+        );
+        // lui t0, 0x12345
+        assert_eq!(
+            encode(&Instr::u(Op::Lui, 5, 0x12345)).unwrap(),
+            (0x12345 << 12) | (5 << 7) | 0b0110111
+        );
+    }
+
+    #[test]
+    fn imm_range_enforced() {
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, 2047)).is_ok());
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, 2048)).is_err());
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, -2048)).is_ok());
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, -2049)).is_err());
+        assert!(encode(&Instr::b(Op::Beq, 1, 2, 3)).is_err()); // odd branch target
+        assert!(encode(&Instr::b(Op::Beq, 1, 2, 4)).is_ok());
+    }
+
+    #[test]
+    fn distinct_words_for_distinct_ops() {
+        // Same operands, different opcodes must encode differently.
+        let mut seen = std::collections::BTreeSet::new();
+        for op in Op::all() {
+            let i = Instr { op: *op, rd: 1, rs1: 2, rs2: 3, rs3: 1, imm: 4 };
+            let w = encode(&i).unwrap();
+            assert!(seen.insert(w), "collision on {}", op.mnemonic());
+        }
+    }
+}

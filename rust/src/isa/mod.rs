@@ -1,0 +1,294 @@
+//! The accelerator's 61-instruction ISA (paper §3.6: "the target hardware's
+//! 61-instruction ISA").
+//!
+//! The paper never lists its ISA, so this is *our* definition (DESIGN.md
+//! §Known deviations): a RV32I integer subset + RV32M multiply + RV32F
+//! single-float subset + two custom scalar ops (FEXP.S for
+//! softmax/gelu-class kernels, FRSQRT.S for normalization) + an RVV vector
+//! subset sized for NN inference. Exactly 61 instructions — enforced by
+//! test.
+//!
+//! Submodules: [`encode`] (binary encoding), [`decode`] (the inverse),
+//! [`regs`] (register file naming).
+
+pub mod decode;
+pub mod encode;
+pub mod regs;
+
+/// Operation class for timing/energy models and scheduler latency lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    Alu,
+    Mul,
+    Div,
+    Branch,
+    Jump,
+    Load,
+    Store,
+    FAlu,
+    FMul,
+    FDiv,
+    FMa,
+    FCustom,
+    VSet,
+    VLoad,
+    VStore,
+    VAlu,
+    VMul,
+    VFma,
+    VRed,
+}
+
+macro_rules! isa {
+    ($($variant:ident => ($name:literal, $class:ident)),+ $(,)?) => {
+        /// The 61 opcodes.
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub enum Op { $($variant),+ }
+
+        impl Op {
+            pub fn mnemonic(self) -> &'static str {
+                match self { $(Op::$variant => $name),+ }
+            }
+            pub fn class(self) -> OpClass {
+                match self { $(Op::$variant => OpClass::$class),+ }
+            }
+            pub fn all() -> &'static [Op] {
+                &[ $(Op::$variant),+ ]
+            }
+        }
+    };
+}
+
+isa! {
+    // -- RV32I base (27) ----------------------------------------------------
+    Lui => ("lui", Alu),
+    Auipc => ("auipc", Alu),
+    Jal => ("jal", Jump),
+    Jalr => ("jalr", Jump),
+    Beq => ("beq", Branch),
+    Bne => ("bne", Branch),
+    Blt => ("blt", Branch),
+    Bge => ("bge", Branch),
+    Lw => ("lw", Load),
+    Sw => ("sw", Store),
+    Addi => ("addi", Alu),
+    Slti => ("slti", Alu),
+    Andi => ("andi", Alu),
+    Ori => ("ori", Alu),
+    Xori => ("xori", Alu),
+    Slli => ("slli", Alu),
+    Srli => ("srli", Alu),
+    Srai => ("srai", Alu),
+    Add => ("add", Alu),
+    Sub => ("sub", Alu),
+    Sll => ("sll", Alu),
+    Srl => ("srl", Alu),
+    Sra => ("sra", Alu),
+    And => ("and", Alu),
+    Or => ("or", Alu),
+    Xor => ("xor", Alu),
+    Slt => ("slt", Alu),
+    // -- RV32M (4) ------------------------------------------------------------
+    Mul => ("mul", Mul),
+    Mulh => ("mulh", Mul),
+    Div => ("div", Div),
+    Rem => ("rem", Div),
+    // -- RV32F subset (11) -------------------------------------------------------
+    Flw => ("flw", Load),
+    Fsw => ("fsw", Store),
+    FaddS => ("fadd.s", FAlu),
+    FsubS => ("fsub.s", FAlu),
+    FmulS => ("fmul.s", FMul),
+    FdivS => ("fdiv.s", FDiv),
+    FmaddS => ("fmadd.s", FMa),
+    FminS => ("fmin.s", FAlu),
+    FmaxS => ("fmax.s", FAlu),
+    FcvtWS => ("fcvt.w.s", FAlu),
+    FcvtSW => ("fcvt.s.w", FAlu),
+    // -- Custom scalar (2): transcendental support for softmax/gelu/norm ----------
+    FexpS => ("fexp.s", FCustom),
+    FrsqrtS => ("frsqrt.s", FCustom),
+    // -- RVV subset (17) --------------------------------------------------------
+    Vsetvli => ("vsetvli", VSet),
+    Vle32 => ("vle32.v", VLoad),
+    Vse32 => ("vse32.v", VStore),
+    Vle8 => ("vle8.v", VLoad),
+    Vse8 => ("vse8.v", VStore),
+    VaddVV => ("vadd.vv", VAlu),
+    VsubVV => ("vsub.vv", VAlu),
+    VmulVV => ("vmul.vv", VMul),
+    VmaccVV => ("vmacc.vv", VFma),
+    VfaddVV => ("vfadd.vv", VAlu),
+    VfsubVV => ("vfsub.vv", VAlu),
+    VfmulVV => ("vfmul.vv", VMul),
+    VfmaccVV => ("vfmacc.vv", VFma),
+    VfmaccVF => ("vfmacc.vf", VFma),
+    VfredsumVS => ("vfredsum.vs", VRed),
+    VfmaxVV => ("vfmax.vv", VAlu),
+    VfmvVF => ("vfmv.v.f", VAlu),
+}
+
+/// One instruction: opcode + operand fields. Field meaning depends on the
+/// format of `op` (see `encode`); unused fields are zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    /// Third source (fmadd) / LMUL field (vsetvli).
+    pub rs3: u8,
+    pub imm: i32,
+}
+
+impl Instr {
+    pub fn new(op: Op) -> Instr {
+        Instr { op, rd: 0, rs1: 0, rs2: 0, rs3: 0, imm: 0 }
+    }
+
+    pub fn r(op: Op, rd: u8, rs1: u8, rs2: u8) -> Instr {
+        Instr { op, rd, rs1, rs2, rs3: 0, imm: 0 }
+    }
+
+    pub fn i(op: Op, rd: u8, rs1: u8, imm: i32) -> Instr {
+        Instr { op, rd, rs1, rs2: 0, rs3: 0, imm }
+    }
+
+    pub fn s(op: Op, rs1: u8, rs2: u8, imm: i32) -> Instr {
+        Instr { op, rd: 0, rs1, rs2, rs3: 0, imm }
+    }
+
+    pub fn b(op: Op, rs1: u8, rs2: u8, imm: i32) -> Instr {
+        Instr { op, rd: 0, rs1, rs2, rs3: 0, imm }
+    }
+
+    pub fn u(op: Op, rd: u8, imm: i32) -> Instr {
+        Instr { op, rd, rs1: 0, rs2: 0, rs3: 0, imm }
+    }
+
+    pub fn r4(op: Op, rd: u8, rs1: u8, rs2: u8, rs3: u8) -> Instr {
+        Instr { op, rd, rs1, rs2, rs3, imm: 0 }
+    }
+
+    /// Assembly text rendering.
+    pub fn asm(&self) -> String {
+        use encode::Format::*;
+        let r = regs::xname;
+        let f = regs::fname;
+        let v = regs::vname;
+        match encode::format_of(self.op) {
+            R => {
+                let (a, b, c) = reg_names(self.op, self.rd, self.rs1, self.rs2);
+                format!("{} {a}, {b}, {c}", self.op.mnemonic())
+            }
+            R4 => format!(
+                "{} {}, {}, {}, {}",
+                self.op.mnemonic(),
+                f(self.rd),
+                f(self.rs1),
+                f(self.rs2),
+                f(self.rs3)
+            ),
+            I => match self.op {
+                Op::Jalr => format!("jalr {}, {}({})", r(self.rd), self.imm, r(self.rs1)),
+                Op::Lw => format!("lw {}, {}({})", r(self.rd), self.imm, r(self.rs1)),
+                Op::Flw => format!("flw {}, {}({})", f(self.rd), self.imm, r(self.rs1)),
+                _ => format!("{} {}, {}, {}", self.op.mnemonic(), r(self.rd), r(self.rs1), self.imm),
+            },
+            S => match self.op {
+                Op::Fsw => format!("fsw {}, {}({})", f(self.rs2), self.imm, r(self.rs1)),
+                _ => format!("sw {}, {}({})", r(self.rs2), self.imm, r(self.rs1)),
+            },
+            B => format!(
+                "{} {}, {}, {}",
+                self.op.mnemonic(),
+                r(self.rs1),
+                r(self.rs2),
+                self.imm
+            ),
+            U | J => format!("{} {}, {}", self.op.mnemonic(), r(self.rd), self.imm),
+            VSetF => format!(
+                "vsetvli {}, {}, e32, m{}",
+                r(self.rd),
+                r(self.rs1),
+                1 << self.rs3
+            ),
+            VMem => format!("{} {}, ({})", self.op.mnemonic(), v(self.rd), r(self.rs1)),
+            VArith => match self.op {
+                Op::VfmaccVF => format!(
+                    "vfmacc.vf {}, {}, {}",
+                    v(self.rd),
+                    f(self.rs1),
+                    v(self.rs2)
+                ),
+                Op::VfmvVF => format!("vfmv.v.f {}, {}", v(self.rd), f(self.rs1)),
+                _ => format!(
+                    "{} {}, {}, {}",
+                    self.op.mnemonic(),
+                    v(self.rd),
+                    v(self.rs1),
+                    v(self.rs2)
+                ),
+            },
+        }
+    }
+}
+
+fn reg_names(op: Op, rd: u8, rs1: u8, rs2: u8) -> (String, String, String) {
+    use OpClass::*;
+    match op.class() {
+        FAlu | FMul | FDiv | FCustom => {
+            // fcvt mixes files; keep it simple: fcvt.w.s rd=x, rs=f.
+            if op == Op::FcvtWS {
+                (regs::xname(rd), regs::fname(rs1), regs::fname(rs2))
+            } else if op == Op::FcvtSW {
+                (regs::fname(rd), regs::xname(rs1), regs::xname(rs2))
+            } else {
+                (regs::fname(rd), regs::fname(rs1), regs::fname(rs2))
+            }
+        }
+        _ => (regs::xname(rd), regs::xname(rs1), regs::xname(rs2)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_61_instructions() {
+        // The paper's "61-instruction ISA" — pinned.
+        assert_eq!(Op::all().len(), 61);
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let set: std::collections::BTreeSet<_> =
+            Op::all().iter().map(|o| o.mnemonic()).collect();
+        assert_eq!(set.len(), 61);
+    }
+
+    #[test]
+    fn asm_rendering_samples() {
+        assert_eq!(Instr::i(Op::Addi, 5, 0, 42).asm(), "addi t0, zero, 42");
+        assert_eq!(Instr::i(Op::Lw, 10, 2, 16).asm(), "lw a0, 16(sp)");
+        assert_eq!(
+            Instr::r(Op::FaddS, 1, 2, 3).asm(),
+            "fadd.s ft1, ft2, ft3"
+        );
+        assert_eq!(
+            Instr::r(Op::VfmaccVV, 2, 3, 4).asm(),
+            "vfmacc.vv v2, v3, v4"
+        );
+    }
+
+    #[test]
+    fn classes_cover_all_ops() {
+        for op in Op::all() {
+            let _ = op.class(); // no panic, exhaustive by construction
+        }
+        assert_eq!(Op::VfmaccVV.class(), OpClass::VFma);
+        assert_eq!(Op::Lw.class(), OpClass::Load);
+        assert_eq!(Op::FexpS.class(), OpClass::FCustom);
+    }
+}

@@ -1,0 +1,70 @@
+//! Register file model: 32 integer (x), 32 float (f), 32 vector (v)
+//! registers, with RISC-V ABI names for the scalar files.
+
+/// Number of registers in each file.
+pub const NUM_X: usize = 32;
+pub const NUM_F: usize = 32;
+pub const NUM_V: usize = 32;
+
+/// ABI names for integer registers.
+pub const X_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1",
+    "a2", "a3", "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7",
+    "s8", "s9", "s10", "s11", "t3", "t4", "t5", "t6",
+];
+
+pub fn xname(r: u8) -> String {
+    X_NAMES.get(r as usize).map(|s| s.to_string()).unwrap_or(format!("x?{r}"))
+}
+
+pub fn fname(r: u8) -> String {
+    format!("ft{r}")
+}
+
+pub fn vname(r: u8) -> String {
+    format!("v{r}")
+}
+
+// Conventional roles used by codegen (documented calling convention for
+// generated kernels; the register allocator respects these).
+/// Hard zero.
+pub const ZERO: u8 = 0;
+/// Stack pointer.
+pub const SP: u8 = 2;
+/// Kernel argument registers (base addresses, extents): a0-a7.
+pub const ARG0: u8 = 10;
+pub const ARG1: u8 = 11;
+pub const ARG2: u8 = 12;
+pub const ARG3: u8 = 13;
+pub const ARG4: u8 = 14;
+pub const ARG5: u8 = 15;
+/// Scratch (t0-t6 = x5..x7, x28..x31).
+pub const T0: u8 = 5;
+pub const T1: u8 = 6;
+pub const T2: u8 = 7;
+pub const T3: u8 = 28;
+pub const T4: u8 = 29;
+pub const T5: u8 = 30;
+pub const T6: u8 = 31;
+/// Callee-saved loop counters (s2-s11 = x18..x27).
+pub const S2: u8 = 18;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abi_names() {
+        assert_eq!(xname(0), "zero");
+        assert_eq!(xname(2), "sp");
+        assert_eq!(xname(10), "a0");
+        assert_eq!(xname(31), "t6");
+    }
+
+    #[test]
+    fn roles_are_valid_registers() {
+        for r in [ZERO, SP, ARG0, ARG5, T0, T6, S2] {
+            assert!((r as usize) < NUM_X);
+        }
+    }
+}

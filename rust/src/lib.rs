@@ -1,0 +1,63 @@
+//! # xgenc — XgenSilicon ML Compiler (reproduction)
+//!
+//! A hardware-aware neural-network compiler targeting a custom RISC-V
+//! (RV32I + RVV subset) ASIC accelerator, reproducing *"Hardware-Aware Neural
+//! Network Compilation with Learned Optimization: A RISC-V Accelerator
+//! Approach"* (Ganti & Xu, CS.AR 2025).
+//!
+//! The crate implements the paper's five-stage pipeline — Frontend →
+//! Optimization → Code Generation → Backend → Validation — plus every
+//! substrate the paper's evaluation depends on (the accelerator itself is
+//! simulated; see `sim` and DESIGN.md §Substitutions):
+//!
+//! * [`ir`] — graph IR: 100+ ONNX-compatible operators, shape inference with
+//!   symbolic dimensions, and a reference executor.
+//! * [`frontend`] — ONNX-JSON loader and the full-scale model zoo
+//!   (ResNet-50, MobileNet-V2, BERT-base, ViT-Base).
+//! * [`opt`] — graph-level passes: fusion, constant folding, DCE, CSE.
+//! * [`quant`] — FP32→Binary quantization with full KL-divergence,
+//!   percentile, and entropy calibration plus momentum QAT (paper §3.3).
+//! * [`isa`] — the accelerator's 61-instruction ISA: encoder, decoder,
+//!   register model (paper §3.6).
+//! * [`codegen`] — RISC-V Vector kernel emission with LMUL selection,
+//!   unrolling, and register tiling (paper §3.4).
+//! * [`backend`] — DMEM/WMEM memory planner, register allocator, instruction
+//!   scheduler, HEX emission.
+//! * [`validate`] — validation-driven compilation: ISA and memory checks
+//!   in-pipeline (paper §3.6, contribution 3).
+//! * [`sim`] — the simulated hardware: functional RV32I+RVV executor,
+//!   L1/L2/L3 cache simulator, cycle/energy accounting.
+//! * [`cost`] — analytical, cache-aware (paper §3.7), learned (paper §3.2),
+//!   and hybrid cost models; the learned model executes its AOT-compiled
+//!   JAX/Pallas kernels through [`runtime`].
+//! * [`autotune`] — the five search algorithms (Bayesian optimization,
+//!   genetic, simulated annealing, random, grid) with automatic selection.
+//! * [`asic`] — PPA (power/performance/area) models for the XgenSilicon
+//!   ASIC and both baselines.
+//! * [`dynshape`] — symbolic dimensions, graph cloning, multi-configuration
+//!   specialization (paper §3.5).
+//! * [`pipeline`] — the compile session driver and multi-model WMEM
+//!   consolidation (paper §5.1).
+//! * [`runtime`] — PJRT client (via the `xla` crate) that loads and runs the
+//!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
+//! * [`util`] — substrates: JSON, PRNG, CLI parsing, stats, tables, and a
+//!   minimal property-testing harness.
+
+pub mod autotune;
+pub mod backend;
+pub mod codegen;
+pub mod cost;
+pub mod dynshape;
+pub mod frontend;
+pub mod ir;
+pub mod isa;
+pub mod opt;
+pub mod asic;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod validate;
+pub mod util;
+
+pub use util::error::{Error, Result};

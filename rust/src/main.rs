@@ -1,0 +1,195 @@
+//! xgenc CLI — the fully automated pipeline from model to ASIC-ready
+//! output ("zero manual intervention").
+//!
+//! ```text
+//! xgenc compile --model zoo:resnet50 --precision INT8 --tune 40 --out out/
+//! xgenc tune    --sig matmul:128x256x512 --trials 85 --algorithm bayes
+//! xgenc ppa     --model zoo:mobilenet_v2 --precision INT8
+//! xgenc pipeline --models zoo:vision_encoder,zoo:text_encoder,zoo:decoder
+//! xgenc export  --model zoo:mlp --out model.json
+//! ```
+
+use xgenc::autotune::{Algorithm, Tuner, TunerOptions};
+use xgenc::cost::features::KernelSig;
+use xgenc::frontend;
+use xgenc::ir::dtype::DType;
+use xgenc::pipeline::{multi_model, CompileOptions, CompileSession};
+use xgenc::quant::calib::Method;
+use xgenc::sim::MachineConfig;
+use xgenc::util::cli::Args;
+
+const OPTION_KEYS: &[&str] = &[
+    "model", "models", "precision", "calib", "tune", "trials", "algorithm",
+    "sig", "out", "platform", "seed",
+];
+
+fn platform(args: &Args) -> MachineConfig {
+    match args.opt_or("platform", "xgen") {
+        "cpu" => MachineConfig::cpu_a78(),
+        "hand" => MachineConfig::hand_asic(),
+        _ => MachineConfig::xgen_asic(),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, OPTION_KEYS);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "compile" => cmd_compile(&args),
+        "tune" => cmd_tune(&args),
+        "ppa" => cmd_compile(&args), // same path; the summary carries PPA
+        "pipeline" => cmd_pipeline(&args),
+        "export" => cmd_export(&args),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_compile(args: &Args) -> i32 {
+    let spec = args.opt_or("model", "zoo:mlp");
+    let graph = match frontend::load_model(spec) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let opts = CompileOptions {
+        mach: platform(args),
+        precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
+        calib_method: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
+        tune_trials: args.opt_usize("tune", 0),
+        seed: args.opt_u64("seed", 42),
+        ..Default::default()
+    };
+    let mut session = CompileSession::new(opts);
+    match session.compile(&graph) {
+        Ok(c) => {
+            println!("{}", c.summary());
+            if let Some(dir) = args.opt("out") {
+                let _ = std::fs::create_dir_all(dir);
+                let asm_text: String = c
+                    .asm
+                    .iter()
+                    .map(|i| format!("{}\n", i.asm()))
+                    .collect();
+                let _ = std::fs::write(format!("{dir}/{}.s", graph.name), asm_text);
+                let _ = std::fs::write(format!("{dir}/{}.hex", graph.name), &c.hex);
+                println!("wrote {dir}/{}.s and .hex", graph.name);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let sig_spec = args.opt_or("sig", "matmul:128x256x512");
+    let sig = match parse_sig(sig_spec) {
+        Some(s) => s,
+        None => {
+            eprintln!("error: bad --sig '{sig_spec}' (matmul:MxNxK | conv:CxHxWxFxKxS | ew:LEN)");
+            return 1;
+        }
+    };
+    let tuner = Tuner::new(platform(args));
+    let opts = TunerOptions {
+        algorithm: args.opt("algorithm").and_then(Algorithm::parse),
+        trials: args.opt_usize("trials", 200),
+        seed: args.opt_u64("seed", 42),
+        ..Default::default()
+    };
+    let mut model = xgenc::cost::HybridModel::new(tuner.mach.clone());
+    let r = tuner.tune(&sig, &opts, Some(&mut model));
+    println!(
+        "algorithm={} trials={} converged_at={} best=2^{:.2} cycles config={:?}",
+        r.algorithm, r.trials_used, r.converged_at, r.best_log_cycles, r.best_config
+    );
+    0
+}
+
+fn cmd_pipeline(args: &Args) -> i32 {
+    let specs = args.opt_or("models", "zoo:vision_encoder,zoo:text_encoder,zoo:decoder");
+    let mut graphs = Vec::new();
+    for spec in specs.split(',') {
+        match frontend::load_model(spec.trim()) {
+            Ok(g) => graphs.push(g),
+            Err(e) => {
+                eprintln!("error loading '{spec}': {e}");
+                return 1;
+            }
+        }
+    }
+    match multi_model::compile_pipeline(&graphs, &CompileOptions::default()) {
+        Ok(bundle) => {
+            println!("{}", bundle.summary());
+            for m in &bundle.models {
+                println!("  {}", m.summary());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let spec = args.opt_or("model", "zoo:mlp");
+    match frontend::load_model(spec) {
+        Ok(g) => {
+            let text = xgenc::frontend::onnx_json::save_str(&g);
+            match args.opt("out") {
+                Some(path) => {
+                    if let Err(e) = std::fs::write(path, text) {
+                        eprintln!("error: {e}");
+                        return 1;
+                    }
+                    println!("wrote {path}");
+                }
+                None => println!("{text}"),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn parse_sig(spec: &str) -> Option<KernelSig> {
+    let (kind, dims) = spec.split_once(':')?;
+    let nums: Vec<usize> = dims.split('x').filter_map(|d| d.parse().ok()).collect();
+    match (kind, nums.as_slice()) {
+        ("matmul", [m, n, k]) => Some(KernelSig::matmul(*m, *n, *k)),
+        ("conv", [c, h, w, f, k, s]) => Some(KernelSig::conv2d(*c, *h, *w, *f, *k, *s)),
+        ("ew", [len]) => Some(KernelSig::elementwise(*len)),
+        _ => None,
+    }
+}
+
+const HELP: &str = "\
+xgenc — XgenSilicon ML Compiler (reproduction)
+
+USAGE:
+  xgenc compile  --model zoo:<name>|file.json [--precision FP32|FP16|INT8|INT4|FP4|Binary]
+                 [--calib kl|percentile|entropy|minmax] [--tune N] [--platform xgen|hand|cpu]
+                 [--out DIR]
+  xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
+                 [--algorithm bayes|ga|sa|random|grid]
+  xgenc pipeline --models spec1,spec2,...
+  xgenc export   --model zoo:<name> [--out file.json]
+
+Zoo models: resnet50 mobilenet_v2 bert_base vit_base resnet_cifar
+            mobilenet_cifar bert_tiny vit_tiny mlp vision_encoder
+            text_encoder decoder
+";

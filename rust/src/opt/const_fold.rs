@@ -1,0 +1,106 @@
+//! Constant folding / propagation: nodes whose inputs are all initializers
+//! are evaluated at compile time and replaced by a new initializer.
+
+use crate::ir::graph::Graph;
+use crate::ir::ops::OpCategory;
+use crate::ir::tensor::Initializer;
+use crate::opt::Pass;
+use crate::util::error::Result;
+
+/// Don't fold nodes whose outputs would be enormous (blow up WMEM for no
+/// gain — e.g. ConstantOfShape of a huge activation).
+const MAX_FOLD_ELEMS: usize = 4 << 20;
+
+pub struct ConstFold;
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const_fold"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        let mut changed = false;
+        // One folding wave per run (pass manager iterates to fixed point).
+        let candidates: Vec<usize> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                !n.inputs.is_empty()
+                    && n.inputs.iter().all(|t| g.is_initializer(*t))
+                    && n.outputs.len() == 1
+                    && n.op.category() != OpCategory::Control
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut folded = Vec::new();
+        for i in candidates {
+            let node = g.nodes[i].clone();
+            let ins: Vec<_> = node
+                .inputs
+                .iter()
+                .map(|t| g.initializers[t].materialize())
+                .collect();
+            let in_refs: Vec<&_> = ins.iter().collect();
+            let out = match crate::ir::exec::eval_node(&node, &in_refs) {
+                Ok(mut o) => o.remove(0),
+                Err(_) => continue, // op not evaluable at compile time: skip
+            };
+            if out.numel() > MAX_FOLD_ELEMS {
+                continue;
+            }
+            // Replace: the node's output tensor becomes an initializer.
+            let out_id = node.outputs[0];
+            let name = format!("{}_folded", node.name);
+            g.initializers.insert(
+                out_id,
+                Initializer::eager(&name, &out.shape.clone(), out.data),
+            );
+            folded.push(i);
+            changed = true;
+        }
+        if changed {
+            crate::opt::remove_nodes(g, &folded);
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::ir::exec::Executor;
+    use crate::ir::ops::{Attrs, OpKind};
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Tensor;
+
+    #[test]
+    fn folds_weight_only_subgraph() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 2]), DType::F32);
+        let w1 = g.init(Initializer::eager("w1", &[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        let w2 = g.init(Initializer::eager("w2", &[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        // w3 = w1 @ w2 is constant; y = x + w3.
+        let w3 = g.node(OpKind::MatMul, "wmm", &[w1, w2], Attrs::new());
+        let y = g.node(OpKind::Add, "add", &[x, w3], Attrs::new());
+        g.outputs.push(y);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        assert!(ConstFold.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1, "matmul folded away");
+        assert!(g.is_initializer(w3));
+        let out = Executor::new()
+            .run(&g, &[Tensor::new(vec![2, 2], vec![0.0; 4])])
+            .unwrap();
+        assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn does_not_fold_activation_dependent() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2]), DType::F32);
+        let y = g.node(OpKind::Relu, "r", &[x], Attrs::new());
+        g.outputs.push(y);
+        assert!(!ConstFold.run(&mut g).unwrap());
+    }
+}

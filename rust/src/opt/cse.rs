@@ -1,0 +1,117 @@
+//! Common-subexpression elimination: nodes with identical (op, inputs,
+//! attrs) are merged, rewriting consumers to the surviving node's outputs.
+
+use std::collections::BTreeMap;
+
+use crate::ir::graph::Graph;
+use crate::ir::ops::AttrValue;
+use crate::opt::Pass;
+use crate::util::error::Result;
+
+fn attr_key(v: &AttrValue) -> String {
+    match v {
+        AttrValue::Int(i) => format!("i{i}"),
+        AttrValue::Float(f) => format!("f{f}"),
+        AttrValue::Ints(v) => format!("v{v:?}"),
+        AttrValue::Str(s) => format!("s{s}"),
+    }
+}
+
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+        let mut replace: BTreeMap<usize, usize> = BTreeMap::new(); // dup node -> canonical
+        for (i, n) in g.nodes.iter().enumerate() {
+            let key = format!(
+                "{}|{:?}|{}",
+                n.op.name(),
+                n.inputs,
+                n.attrs
+                    .iter()
+                    .map(|(k, v)| format!("{k}={}", attr_key(v)))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            match seen.get(&key) {
+                Some(&canon) => {
+                    replace.insert(i, canon);
+                }
+                None => {
+                    seen.insert(key, i);
+                }
+            }
+        }
+        if replace.is_empty() {
+            return Ok(false);
+        }
+        // Rewrite consumers of duplicate outputs.
+        let mut tensor_map: BTreeMap<_, _> = BTreeMap::new();
+        for (&dup, &canon) in &replace {
+            let canon_outs = g.nodes[canon].outputs.clone();
+            for (o, c) in g.nodes[dup].outputs.clone().into_iter().zip(canon_outs) {
+                tensor_map.insert(o, c);
+            }
+        }
+        for n in g.nodes.iter_mut() {
+            for t in n.inputs.iter_mut() {
+                if let Some(c) = tensor_map.get(t) {
+                    *t = *c;
+                }
+            }
+        }
+        for t in g.outputs.iter_mut() {
+            if let Some(c) = tensor_map.get(t) {
+                *t = *c;
+            }
+        }
+        let dead: Vec<usize> = replace.keys().copied().collect();
+        crate::opt::remove_nodes(g, &dead);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::ir::ops::{Attrs, OpKind};
+    use crate::ir::shape::Shape;
+
+    #[test]
+    fn merges_identical_relu() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[4]), DType::F32);
+        let a = g.node(OpKind::Relu, "a", &[x], Attrs::new());
+        let b = g.node(OpKind::Relu, "b", &[x], Attrs::new());
+        let c = g.node(OpKind::Add, "c", &[a, b], Attrs::new());
+        g.outputs.push(c);
+        assert!(Cse.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2);
+        // Add now reads the same tensor twice.
+        let add = g.nodes.iter().find(|n| n.op == OpKind::Add).unwrap();
+        assert_eq!(add.inputs[0], add.inputs[1]);
+    }
+
+    #[test]
+    fn different_attrs_not_merged() {
+        use crate::ir::ops::AttrValue;
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[4]), DType::F32);
+        let mut a1 = Attrs::new();
+        a1.insert("alpha".into(), AttrValue::Float(0.1));
+        let mut a2 = Attrs::new();
+        a2.insert("alpha".into(), AttrValue::Float(0.2));
+        let a = g.node(OpKind::LeakyRelu, "a", &[x], a1);
+        let b = g.node(OpKind::LeakyRelu, "b", &[x], a2);
+        let c = g.node(OpKind::Add, "c", &[a, b], Attrs::new());
+        g.outputs.push(c);
+        assert!(!Cse.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 3);
+    }
+}

@@ -1,0 +1,88 @@
+//! Dead-code elimination: drop nodes whose outputs reach no graph output.
+
+use std::collections::BTreeSet;
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::opt::Pass;
+use crate::util::error::Result;
+
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        // Backward reachability from graph outputs.
+        let mut needed: BTreeSet<TensorId> = g.outputs.iter().copied().collect();
+        let mut live_nodes: BTreeSet<usize> = BTreeSet::new();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (i, n) in g.nodes.iter().enumerate() {
+                if live_nodes.contains(&i) {
+                    continue;
+                }
+                if n.outputs.iter().any(|t| needed.contains(t)) {
+                    live_nodes.insert(i);
+                    for t in &n.inputs {
+                        needed.insert(*t);
+                    }
+                    changed = true;
+                }
+            }
+        }
+        let dead: Vec<usize> = (0..g.nodes.len())
+            .filter(|i| !live_nodes.contains(i))
+            .collect();
+        if dead.is_empty() {
+            return Ok(false);
+        }
+        crate::opt::remove_nodes(g, &dead);
+        // Drop unreferenced initializers too.
+        let referenced: BTreeSet<TensorId> = g
+            .nodes
+            .iter()
+            .flat_map(|n| n.inputs.iter().copied())
+            .chain(g.outputs.iter().copied())
+            .collect();
+        g.initializers.retain(|t, _| referenced.contains(t));
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::ir::ops::{Attrs, OpKind};
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Initializer;
+
+    #[test]
+    fn removes_unreachable_branch() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[4]), DType::F32);
+        let live = g.node(OpKind::Relu, "live", &[x], Attrs::new());
+        let w = g.init(Initializer::lazy("w_dead", &[4, 4], 1, 0.1));
+        let _dead = g.node(OpKind::MatMul, "dead", &[x, w], Attrs::new());
+        g.outputs.push(live);
+        assert!(Dce.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].name, "live");
+        assert!(g.initializers.is_empty(), "dead weight must be dropped");
+        assert!(!Dce.run(&mut g).unwrap(), "second run is a no-op");
+    }
+
+    #[test]
+    fn keeps_transitive_chains() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[4]), DType::F32);
+        let a = g.node(OpKind::Relu, "a", &[x], Attrs::new());
+        let b = g.node(OpKind::Sigmoid, "b", &[a], Attrs::new());
+        g.outputs.push(b);
+        assert!(!Dce.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2);
+    }
+}

@@ -1,0 +1,212 @@
+//! Operator fusion (paper §3.1 stage 2 "operator fusion"):
+//!
+//! * `FuseConvBn` — folds inference BatchNorm into the preceding Conv's
+//!   weights/bias (the classic deploy-time rewrite): w' = w·s_c,
+//!   b' = (b - mean_c)·s_c + beta_c with s_c = gamma_c/√(var_c+ε).
+//! * `FuseBiasAdd` — MatMul followed by a broadcast Add of a [N] initializer
+//!   becomes a Gemm with fused bias (codegen initializes accumulators from
+//!   the bias, removing a whole pass over the output).
+
+use crate::ir::graph::Graph;
+use crate::ir::ops::{attr_f64, OpKind};
+use crate::ir::tensor::Initializer;
+use crate::opt::Pass;
+use crate::util::error::Result;
+
+pub struct FuseConvBn;
+
+impl Pass for FuseConvBn {
+    fn name(&self) -> &'static str {
+        "fuse_conv_bn"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        // Find BN nodes whose input is produced by a Conv with single use.
+        let mut rewrites = Vec::new();
+        for (bi, bn) in g.nodes.iter().enumerate() {
+            if bn.op != OpKind::BatchNormalization {
+                continue;
+            }
+            let conv_out = bn.inputs[0];
+            let Some(ci) = g.producer(conv_out) else { continue };
+            let conv = &g.nodes[ci.0];
+            if !matches!(conv.op, OpKind::Conv | OpKind::DepthwiseConv) {
+                continue;
+            }
+            if g.consumers(conv_out).len() != 1 {
+                continue; // conv output used elsewhere: cannot rewrite weights
+            }
+            // BN params must be initializers.
+            if !bn.inputs[1..].iter().all(|t| g.is_initializer(*t)) {
+                continue;
+            }
+            if !g.is_initializer(conv.inputs[1]) {
+                continue;
+            }
+            rewrites.push((ci.0, bi));
+        }
+        if rewrites.is_empty() {
+            return Ok(false);
+        }
+        let mut dead = Vec::new();
+        for (ci, bi) in rewrites {
+            let bn = g.nodes[bi].clone();
+            let conv = g.nodes[ci].clone();
+            let eps = attr_f64(&bn.attrs, "epsilon", 1e-5) as f32;
+            let gamma = g.initializers[&bn.inputs[1]].materialize();
+            let beta = g.initializers[&bn.inputs[2]].materialize();
+            let mean = g.initializers[&bn.inputs[3]].materialize();
+            let var = g.initializers[&bn.inputs[4]].materialize();
+            let mut w = g.initializers[&conv.inputs[1]].materialize();
+            let cout = w.shape[0];
+            let per_filter: usize = w.shape[1..].iter().product();
+            let mut bias = match conv.inputs.get(2) {
+                Some(b) => g.initializers[b].materialize().data,
+                None => vec![0.0; cout],
+            };
+            for f in 0..cout {
+                let s = gamma.data[f] / (var.data[f] + eps).sqrt();
+                for e in 0..per_filter {
+                    w.data[f * per_filter + e] *= s;
+                }
+                bias[f] = (bias[f] - mean.data[f]) * s + beta.data[f];
+            }
+            // Install new weight + bias initializers.
+            let wname = format!("{}_bnfold_w", conv.name);
+            let w_shape = w.shape.clone();
+            g.initializers.insert(
+                conv.inputs[1],
+                Initializer::eager(&wname, &w_shape, w.data),
+            );
+            let bias_id = g.init(Initializer::eager(
+                &format!("{}_bnfold_b", conv.name),
+                &[cout],
+                bias,
+            ));
+            // Conv now writes directly to BN's output tensor with the bias.
+            let node = &mut g.nodes[ci];
+            if node.inputs.len() > 2 {
+                node.inputs[2] = bias_id;
+            } else {
+                node.inputs.push(bias_id);
+            }
+            node.outputs = bn.outputs.clone();
+            dead.push(bi);
+        }
+        crate::opt::remove_nodes(g, &dead);
+        Ok(true)
+    }
+}
+
+pub struct FuseBiasAdd;
+
+impl Pass for FuseBiasAdd {
+    fn name(&self) -> &'static str {
+        "fuse_bias_add"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        let mut rewrites = Vec::new();
+        for (ai, add) in g.nodes.iter().enumerate() {
+            if add.op != OpKind::Add {
+                continue;
+            }
+            // One side a single-use MatMul output, the other a [N] initializer.
+            for (mm_in, bias_in) in [(add.inputs[0], add.inputs[1]), (add.inputs[1], add.inputs[0])] {
+                let Some(mi) = g.producer(mm_in) else { continue };
+                if g.nodes[mi.0].op != OpKind::MatMul {
+                    continue;
+                }
+                if g.consumers(mm_in).len() != 1 {
+                    continue;
+                }
+                let Some(init) = g.initializers.get(&bias_in) else { continue };
+                if init.shape.rank() != 1 {
+                    continue;
+                }
+                rewrites.push((mi.0, ai, bias_in));
+                break;
+            }
+        }
+        if rewrites.is_empty() {
+            return Ok(false);
+        }
+        let mut dead = Vec::new();
+        for (mi, ai, bias) in rewrites {
+            let add_outputs = g.nodes[ai].outputs.clone();
+            let node = &mut g.nodes[mi];
+            node.op = OpKind::Gemm;
+            node.inputs.push(bias);
+            node.outputs = add_outputs;
+            dead.push(ai);
+        }
+        crate::opt::remove_nodes(g, &dead);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::ir::exec::Executor;
+    use crate::ir::ops::Attrs;
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Tensor;
+
+    #[test]
+    fn conv_bn_fold_preserves_numerics() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 4, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[3, 2, 3, 3], 3, 0.2));
+        let c = g.node(OpKind::Conv, "c", &[x, w], {
+            let mut a = Attrs::new();
+            a.insert("pads".into(), crate::ir::ops::AttrValue::Ints(vec![1, 1]));
+            a
+        });
+        let gm = g.init(Initializer::eager("g", &[3], vec![1.0, 0.5, 2.0]));
+        let bt = g.init(Initializer::eager("b", &[3], vec![0.1, -0.1, 0.0]));
+        let mn = g.init(Initializer::eager("m", &[3], vec![0.2, 0.0, -0.3]));
+        let vr = g.init(Initializer::eager("v", &[3], vec![1.0, 2.0, 0.5]));
+        let bn = g.node(OpKind::BatchNormalization, "bn", &[c, gm, bt, mn, vr], Attrs::new());
+        g.outputs.push(bn);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+
+        let mut x_t = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x_t.data.iter_mut().enumerate() {
+            *v = (i as f32 - 16.0) / 16.0;
+        }
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        let g0_nodes = g.nodes.len();
+        assert!(FuseConvBn.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), g0_nodes - 1);
+        assert!(g.nodes.iter().all(|n| n.op != OpKind::BatchNormalization));
+        let mut exec = Executor::new();
+        exec.invalidate_weights();
+        let after = exec.run(&g, &[x_t]).unwrap();
+        for (a, b) in before[0].data.iter().zip(&after[0].data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bias_add_becomes_gemm() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 3], 5, 0.3));
+        let b = g.init(Initializer::eager("b", &[3], vec![1.0, 2.0, 3.0]));
+        let mm = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let y = g.node(OpKind::Add, "badd", &[mm, b], Attrs::new());
+        g.outputs.push(y);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        let x_t = Tensor::new(vec![2, 4], (0..8).map(|i| i as f32 / 4.0).collect());
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(FuseBiasAdd.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].op, OpKind::Gemm);
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        for (a, b) in before[0].data.iter().zip(&after[0].data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Graph-level optimization (paper §3.1 stage 2): operator fusion, constant
+//! propagation, dead-code and common-subexpression elimination, run by a
+//! pass manager with fixed-point iteration.
+
+pub mod const_fold;
+pub mod cse;
+pub mod dce;
+pub mod fusion;
+
+use crate::ir::Graph;
+use crate::util::error::Result;
+
+/// A graph transformation. Returns true if it changed the graph.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &mut Graph) -> Result<bool>;
+}
+
+/// The default pipeline, in the order the paper's figure lists them.
+pub fn default_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(const_fold::ConstFold),
+        Box::new(fusion::FuseConvBn),
+        Box::new(fusion::FuseBiasAdd),
+        Box::new(cse::Cse),
+        Box::new(dce::Dce),
+    ]
+}
+
+/// Run passes to a fixed point (bounded iterations).
+pub fn optimize(g: &mut Graph) -> Result<Vec<&'static str>> {
+    let passes = default_passes();
+    let mut applied = Vec::new();
+    for _ in 0..8 {
+        let mut changed = false;
+        for p in &passes {
+            if p.run(g)? {
+                applied.push(p.name());
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Re-infer shapes for any rewritten tensors.
+    crate::ir::infer::infer_shapes(g)?;
+    Ok(applied)
+}
+
+/// Remove a set of nodes by index (helper shared by passes).
+pub(crate) fn remove_nodes(g: &mut Graph, dead: &[usize]) {
+    let mut keep = Vec::with_capacity(g.nodes.len());
+    for (i, n) in g.nodes.drain(..).enumerate() {
+        if !dead.contains(&i) {
+            keep.push(n);
+        }
+    }
+    g.nodes = keep;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::exec::Executor;
+    use crate::ir::tensor::Tensor;
+
+    #[test]
+    fn optimize_preserves_semantics_resnet_cifar() {
+        let g0 = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mut g1 = g0.clone();
+        let applied = optimize(&mut g1).unwrap();
+        assert!(!applied.is_empty(), "expected at least one pass to fire");
+        assert!(g1.nodes.len() < g0.nodes.len(), "fusion should shrink the graph");
+        let mut x = Tensor::zeros(&[1, 3, 32, 32]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 23) as f32 - 11.0) / 11.0;
+        }
+        let a = Executor::new().run(&g0, &[x.clone()]).unwrap();
+        let b = Executor::new().run(&g1, &[x]).unwrap();
+        for (ta, tb) in a.iter().zip(&b) {
+            for (va, vb) in ta.data.iter().zip(&tb.data) {
+                assert!((va - vb).abs() < 1e-3 * va.abs().max(1.0), "{va} vs {vb}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_preserves_semantics_mlp() {
+        let g0 = prepare(model_zoo::mlp(&[8, 16, 4], 2)).unwrap();
+        let mut g1 = g0.clone();
+        optimize(&mut g1).unwrap();
+        let x = Tensor::new(vec![2, 8], (0..16).map(|i| i as f32 / 8.0).collect());
+        let a = Executor::new().run(&g0, &[x.clone()]).unwrap();
+        let b = Executor::new().run(&g1, &[x]).unwrap();
+        assert_eq!(a[0].shape, b[0].shape);
+        for (va, vb) in a[0].data.iter().zip(&b[0].data) {
+            assert!((va - vb).abs() < 1e-4);
+        }
+    }
+}

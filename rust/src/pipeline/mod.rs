@@ -1,0 +1,7 @@
+//! The five-stage compile session (paper §3.1) and the multi-model pipeline
+//! with WMEM consolidation (§5.1).
+
+pub mod multi_model;
+pub mod session;
+
+pub use session::{CompileOptions, CompileSession, CompiledModel};

@@ -1,0 +1,112 @@
+//! Multi-model pipeline compilation with unified WMEM consolidation
+//! (paper §5.1, case study 1): several models compile into one deployment
+//! bundle whose weight memory dedups identical tensors *across* models
+//! (e.g. a decoder initialized from the text encoder shares its embedding
+//! table and early layers).
+
+use crate::ir::Graph;
+use crate::pipeline::session::{CompileOptions, CompileSession, CompiledModel};
+use crate::util::error::Result;
+
+/// Consolidation + compile report for a model bundle.
+pub struct PipelineBundle {
+    pub models: Vec<CompiledModel>,
+    /// Total raw weight bytes across models (before consolidation).
+    pub wmem_raw: u64,
+    /// Consolidated WMEM bytes (content-hash dedup across all models).
+    pub wmem_consolidated: u64,
+    pub total_instructions: usize,
+    pub compile_seconds: f64,
+}
+
+impl PipelineBundle {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} models: {} instructions, WMEM {:.0} MB (consolidated from {:.0} MB), compiled in {:.1}s",
+            self.models.len(),
+            self.total_instructions,
+            self.wmem_consolidated as f64 / (1024.0 * 1024.0),
+            self.wmem_raw as f64 / (1024.0 * 1024.0),
+            self.compile_seconds,
+        )
+    }
+}
+
+/// Compile a bundle of prepared graphs with cross-model WMEM consolidation.
+pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<PipelineBundle> {
+    let t0 = std::time::Instant::now();
+    // Cross-model dedup: content hash -> assigned bytes.
+    let mut seen = std::collections::BTreeMap::new();
+    let mut raw = 0u64;
+    let mut consolidated = 0u64;
+    for g in graphs {
+        for init in g.initializers.values() {
+            let bytes = init.bytes() as u64;
+            raw += bytes;
+            seen.entry(init.content_hash()).or_insert_with(|| {
+                consolidated += bytes;
+                bytes
+            });
+        }
+    }
+    // Compile each model (each model's plan dedups internally; the bundle
+    // numbers above are the unified-WMEM accounting the paper reports).
+    let mut models = Vec::new();
+    let mut total_instructions = 0;
+    for g in graphs {
+        let mut session = CompileSession::new(opts.clone());
+        let c = session.compile(g)?;
+        total_instructions += c.asm.len();
+        models.push(c);
+    }
+    Ok(PipelineBundle {
+        models,
+        wmem_raw: raw,
+        wmem_consolidated: consolidated,
+        total_instructions,
+        compile_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+
+    #[test]
+    fn consolidation_dedups_shared_weights() {
+        // text_encoder (6 layers) and decoder (10 layers, initialized from
+        // the text encoder) share embeddings + 6 layers.
+        let graphs = vec![
+            prepare(model_zoo::bert_tiny(1, 16)).unwrap(),
+            prepare(model_zoo::bert_tiny(1, 16)).unwrap(), // identical twin
+        ];
+        let bundle = compile_pipeline(&graphs, &CompileOptions::default()).unwrap();
+        // Identical models: consolidated = half of raw.
+        assert!(
+            (bundle.wmem_consolidated as f64) < 0.55 * bundle.wmem_raw as f64,
+            "{} vs {}",
+            bundle.wmem_consolidated,
+            bundle.wmem_raw
+        );
+        assert!(bundle.models.iter().all(|m| m.validation.passed()));
+    }
+
+    #[test]
+    fn mostly_distinct_models_dedup_little() {
+        // Different architectures share only small constants (LayerNorm
+        // ones/zeros vectors); the bulk must NOT consolidate.
+        let graphs = vec![
+            prepare(model_zoo::mlp(&[16, 32, 4], 1)).unwrap(),
+            prepare(model_zoo::vit_tiny(1)).unwrap(),
+        ];
+        let bundle = compile_pipeline(&graphs, &CompileOptions::default()).unwrap();
+        assert!(bundle.wmem_consolidated <= bundle.wmem_raw);
+        assert!(
+            bundle.wmem_consolidated as f64 > 0.9 * bundle.wmem_raw as f64,
+            "{} vs {}",
+            bundle.wmem_consolidated,
+            bundle.wmem_raw
+        );
+    }
+}

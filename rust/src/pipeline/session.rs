@@ -1,0 +1,253 @@
+//! The compile session: Frontend → Optimization → (Quantization) →
+//! Code Generation → Backend → Validation, fully automated (the paper's
+//! "zero manual intervention from model input to ASIC-ready output").
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::asic::{self, PpaReport};
+use crate::autotune::{Tuner, TunerOptions};
+use crate::backend::{hex, memplan, sched};
+use crate::codegen::graphgen::{self, Program, Schedules};
+use crate::cost::features::KernelSig;
+use crate::ir::dtype::DType;
+use crate::ir::ops::{attr_ints, OpKind};
+use crate::ir::tensor::Tensor;
+use crate::ir::Graph;
+use crate::quant::calib::Method;
+use crate::quant::ptq;
+use crate::sim::MachineConfig;
+use crate::util::error::Result;
+use crate::validate;
+
+/// Session options (CLI flags map 1:1 onto these).
+#[derive(Clone)]
+pub struct CompileOptions {
+    pub mach: MachineConfig,
+    /// Target precision (PTQ applied when not FP32).
+    pub precision: DType,
+    pub calib_method: Method,
+    /// Calibration batches for activation quantization.
+    pub calib_inputs: Vec<Vec<Tensor>>,
+    /// Auto-tuning trials per distinct kernel signature (0 = heuristics).
+    pub tune_trials: usize,
+    /// Run the instruction scheduler.
+    pub schedule: bool,
+    pub seed: u64,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            mach: MachineConfig::xgen_asic(),
+            precision: DType::F32,
+            calib_method: Method::Kl,
+            calib_inputs: Vec::new(),
+            tune_trials: 0,
+            schedule: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Everything the pipeline produces for one model.
+pub struct CompiledModel {
+    pub graph: Graph,
+    pub program: Program,
+    pub plan: memplan::MemPlan,
+    pub asm: Vec<crate::isa::Instr>,
+    pub hex: String,
+    pub validation: validate::Report,
+    pub ppa: PpaReport,
+    pub quant: Option<ptq::QuantPlan>,
+    pub passes_applied: Vec<&'static str>,
+    pub compile_seconds: f64,
+    /// Tuned schedules per signature (reused across identical layers).
+    pub tuned: BTreeMap<String, crate::codegen::KernelConfig>,
+}
+
+impl CompiledModel {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} instructions, {:.1} MB WMEM, {} | {:.2} ms, {:.0} mW{} | compiled in {:.1}s",
+            self.graph.name,
+            self.asm.len(),
+            self.plan.wmem_used as f64 * self.quant.as_ref().map(|q| 1.0 / q.memory_reduction()).unwrap_or(1.0)
+                / (1024.0 * 1024.0),
+            self.validation.summary(),
+            self.ppa.latency_ms,
+            self.ppa.power_mw,
+            self.ppa
+                .area_mm2
+                .map(|a| format!(", {a:.1} mm2"))
+                .unwrap_or_default(),
+            self.compile_seconds,
+        )
+    }
+}
+
+pub struct CompileSession {
+    pub opts: CompileOptions,
+}
+
+impl CompileSession {
+    pub fn new(opts: CompileOptions) -> CompileSession {
+        CompileSession { opts }
+    }
+
+    /// Extract the tuning signature of a node (dedup: identical layers share
+    /// one tuning run).
+    fn signature(g: &Graph, node: &crate::ir::graph::Node) -> Option<KernelSig> {
+        let dims = |t: crate::ir::graph::TensorId| -> Option<Vec<usize>> {
+            g.tensors[t.0]
+                .shape
+                .as_ref()
+                .map(|s| s.0.iter().map(|d| d.upper_bound()).collect())
+        };
+        match node.op {
+            OpKind::MatMul | OpKind::Gemm | OpKind::Linear => {
+                let a = dims(node.inputs[0])?;
+                let b = dims(node.inputs[1])?;
+                let k = *a.last()?;
+                Some(KernelSig::matmul(a.iter().product::<usize>() / k, *b.last()?, k))
+            }
+            OpKind::Conv | OpKind::DepthwiseConv => {
+                let x = dims(node.inputs[0])?;
+                let w = dims(node.inputs[1])?;
+                let strides = attr_ints(&node.attrs, "strides", &[1, 1]);
+                Some(KernelSig::conv2d(x[1], x[2], x[3], w[0], w[2], strides[0] as usize))
+            }
+            _ => None,
+        }
+    }
+
+    /// Run the full pipeline on a prepared (shape-inferred) graph.
+    pub fn compile(&mut self, graph: &Graph) -> Result<CompiledModel> {
+        let t0 = Instant::now();
+        let opts = &self.opts;
+        let mut g = graph.clone();
+
+        // Stage 2: optimization.
+        let passes_applied = crate::opt::optimize(&mut g)?;
+
+        // Stage 2.5: quantization (PTQ).
+        let quant = if opts.precision != DType::F32 {
+            Some(ptq::quantize_graph(
+                &mut g,
+                opts.precision,
+                opts.calib_method,
+                &opts.calib_inputs,
+            )?)
+        } else {
+            None
+        };
+
+        // Auto-tuning per distinct signature.
+        let mut tuned: BTreeMap<String, crate::codegen::KernelConfig> = BTreeMap::new();
+        let mut schedules = Schedules::new();
+        if opts.tune_trials > 0 {
+            let tuner = Tuner::new(opts.mach.clone());
+            for nid in g.topo_order()? {
+                let node = &g.nodes[nid.0];
+                if let Some(sig) = Self::signature(&g, node) {
+                    let key = format!("{sig:?}");
+                    let kc = *tuned.entry(key).or_insert_with(|| {
+                        let mut model = crate::cost::HybridModel::new(opts.mach.clone());
+                        let topts = TunerOptions {
+                            trials: opts.tune_trials,
+                            screen: 4,
+                            seed: opts.seed,
+                            ..Default::default()
+                        };
+                        tuner.tune(&sig, &topts, Some(&mut model)).best_config
+                    });
+                    schedules.insert(nid, kc);
+                }
+            }
+        }
+
+        // Stage 4a: memory planning (before codegen: addresses).
+        let plan = memplan::plan(&g, opts.mach.dmem_bytes as u32, opts.mach.wmem_bytes as u32)?;
+
+        // Stage 3: code generation.
+        let program = graphgen::lower_graph(&g, &opts.mach, &plan, &schedules, opts.precision)?;
+
+        // Stage 4b: instruction scheduling.
+        let asm = if opts.schedule {
+            sched::schedule(&program.asm)
+        } else {
+            program.asm.clone()
+        };
+
+        // Stage 5: validation (hard gate).
+        let validation = validate::validate_all(&g, &asm, &plan, &opts.mach).into_result()?;
+
+        // ASIC-ready output.
+        let hex_text = hex::to_intel_hex(&asm)?;
+        let ppa = asic::evaluate(&opts.mach, &program, &plan, opts.precision);
+
+        Ok(CompiledModel {
+            graph: g,
+            program,
+            plan,
+            asm,
+            hex: hex_text,
+            validation,
+            ppa,
+            quant,
+            passes_applied,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+            tuned,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+
+    #[test]
+    fn five_stage_pipeline_end_to_end() {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mut s = CompileSession::new(CompileOptions::default());
+        let c = s.compile(&g).unwrap();
+        assert!(c.validation.passed());
+        assert!(!c.passes_applied.is_empty());
+        assert!(c.asm.len() > 500);
+        assert!(c.hex.starts_with(':'));
+        assert!(c.ppa.latency_ms > 0.0);
+        assert!(c.summary().contains("100% ISA validation passed"));
+    }
+
+    #[test]
+    fn quantized_pipeline_shrinks_wmem() {
+        let g = prepare(model_zoo::mlp(&[64, 128, 10], 1)).unwrap();
+        let mut s8 = CompileSession::new(CompileOptions {
+            precision: DType::I8,
+            ..Default::default()
+        });
+        let c8 = s8.compile(&g).unwrap();
+        let q = c8.quant.as_ref().unwrap();
+        assert!((q.memory_reduction() - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn tuned_compile_no_slower_than_default() {
+        let g = prepare(model_zoo::mlp(&[128, 256, 64], 4)).unwrap();
+        let mut plain = CompileSession::new(CompileOptions::default());
+        let c0 = plain.compile(&g).unwrap();
+        let mut tuned = CompileSession::new(CompileOptions {
+            tune_trials: 40,
+            ..Default::default()
+        });
+        let c1 = tuned.compile(&g).unwrap();
+        assert!(
+            c1.ppa.cycles <= c0.ppa.cycles * 1.05,
+            "tuned {} vs default {}",
+            c1.ppa.cycles,
+            c0.ppa.cycles
+        );
+        assert!(!c1.tuned.is_empty());
+    }
+}

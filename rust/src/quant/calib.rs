@@ -1,0 +1,262 @@
+//! Calibration methods (paper §3.3.1): full KL-divergence (eq. 5),
+//! percentile (eq. 6), entropy (eq. 7), and min-max baseline.
+//!
+//! The KL sweep mirrors `python/compile/kernels/ref.py` bin-for-bin: 2048
+//! bins, 100 threshold candidates, TensorRT-style re-binning to 128 levels.
+//! In production the sweep executes through the AOT-compiled Pallas kernel
+//! (`runtime::artifacts::Artifacts::kl_calibrate`); this rust fallback keeps
+//! the compiler usable without artifacts and pins the semantics the pytest
+//! oracle checks.
+
+use crate::ir::dtype::DType;
+use crate::quant::histogram::{Histogram, NUM_BINS};
+use crate::quant::QParams;
+
+/// Paper constants.
+pub const NUM_CANDIDATES: usize = 100;
+pub const NUM_QUANT_LEVELS: usize = 128;
+const EPS: f64 = 1e-10;
+
+/// Calibration method selector (CLI: --calib kl|percentile|entropy|minmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Full KL divergence sweep (default, highest accuracy).
+    Kl,
+    /// p-th percentile clipping (default 99.9).
+    Percentile,
+    /// Entropy-preserving threshold (eq. 7).
+    Entropy,
+    /// Plain min-max.
+    MinMax,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "kl" => Method::Kl,
+            "percentile" => Method::Percentile,
+            "entropy" => Method::Entropy,
+            "minmax" => Method::MinMax,
+            _ => return None,
+        })
+    }
+}
+
+/// Candidate clip edges (bin counts), matching `ref.candidate_edges()`:
+/// NUM_CANDIDATES values linearly spanning [128, 2048].
+pub fn candidate_edges() -> Vec<usize> {
+    (0..NUM_CANDIDATES)
+        .map(|i| {
+            let t = i as f64 / (NUM_CANDIDATES - 1) as f64;
+            (NUM_QUANT_LEVELS as f64 + t * (NUM_BINS - NUM_QUANT_LEVELS) as f64) as usize
+        })
+        .collect()
+}
+
+/// KL(P||Q) for one clip candidate — bit-compatible with
+/// `ref.kl_for_candidate` (f64 accumulation; the jnp oracle uses f32 but
+/// stays within 1e-4 of this).
+pub fn kl_for_candidate(hist: &[f32], edge: usize) -> f64 {
+    let n = hist.len();
+    // P: clipped histogram, tail mass folded into bin edge-1. The fold is
+    // the outlier penalty: Q is built from the *unfolded* in-range histogram
+    // (TensorRT semantics), so a large clipped tail makes P spiky at the
+    // edge where Q cannot follow — KL rises, discouraging tight clips.
+    let mut p: Vec<f64> = (0..n)
+        .map(|i| if i < edge { hist[i] as f64 } else { 0.0 })
+        .collect();
+    let tail: f64 = hist[edge.min(n)..].iter().map(|&v| v as f64).sum();
+    p[edge - 1] += tail;
+
+    // Bucket id per bin: floor(i * L / edge).
+    let bucket = |i: usize| -> usize {
+        ((i * NUM_QUANT_LEVELS) / edge.max(1)).min(NUM_QUANT_LEVELS - 1)
+    };
+    // TensorRT semantics: Q's mass comes from the *unfolded* in-range
+    // histogram, but the nonzero support mask comes from the *folded* P —
+    // so the tail-spike bin stays in the comparison and penalizes tight
+    // clips that discard heavy tails.
+    let mut q_mass = [0.0f64; NUM_QUANT_LEVELS];
+    let mut q_cnt = [0.0f64; NUM_QUANT_LEVELS];
+    for i in 0..edge.min(n) {
+        let b = bucket(i);
+        q_mass[b] += hist[i] as f64; // unfolded mass
+        if p[i] > 0.0 {
+            q_cnt[b] += 1.0; // folded support
+        }
+    }
+    let mut q = vec![0.0f64; n];
+    for i in 0..edge.min(n) {
+        if p[i] > 0.0 {
+            let b = bucket(i);
+            q[i] = q_mass[b] / q_cnt[b].max(1.0);
+        }
+    }
+    // Smooth both distributions over the full in-range support (TensorRT's
+    // `_smooth_distribution`): a small epsilon on every in-range bin makes
+    // P and Q proper distributions with common support, so KL >= 0 and the
+    // folded tail spike is always compared against Q.
+    const SMOOTH: f64 = 1e-4;
+    let m = edge.min(n);
+    let p_sum: f64 = p.iter().sum::<f64>() + SMOOTH * m as f64;
+    let q_sum: f64 = q.iter().sum::<f64>() + SMOOTH * m as f64;
+    let mut kl = 0.0;
+    for i in 0..m {
+        let pn = (p[i] + SMOOTH) / p_sum.max(EPS);
+        let qn = (q[i] + SMOOTH) / q_sum.max(EPS);
+        kl += pn * (pn / qn).ln();
+    }
+    kl
+}
+
+/// Full KL sweep: returns (per-candidate KLs, best candidate index).
+pub fn kl_sweep(hist: &[f32]) -> (Vec<f64>, usize) {
+    let edges = candidate_edges();
+    let kls: Vec<f64> = edges.iter().map(|&e| kl_for_candidate(hist, e)).collect();
+    let best = kls
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    (kls, best)
+}
+
+/// Shannon entropy of a (normalized) histogram prefix (eq. 7).
+fn prefix_entropy(hist: &[f32], edge: usize) -> f64 {
+    let total: f64 = hist[..edge].iter().map(|&v| v as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &v in &hist[..edge] {
+        if v > 0.0 {
+            let p = v as f64 / total;
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+/// Run the chosen method over a histogram, returning the clip threshold.
+pub fn calibrate_threshold(h: &Histogram, method: Method, percentile_p: f64) -> f32 {
+    match method {
+        Method::MinMax => h.max_abs,
+        Method::Percentile => h.percentile(percentile_p),
+        Method::Kl => {
+            let (_, best) = kl_sweep(&h.bins);
+            h.bin_edge(candidate_edges()[best] - 1)
+        }
+        Method::Entropy => {
+            // Pick the smallest clip that preserves >= 99.5% of the full
+            // distribution's entropy (information-preservation criterion).
+            let full = prefix_entropy(&h.bins, NUM_BINS);
+            for &edge in &candidate_edges() {
+                if prefix_entropy(&h.bins, edge) >= 0.995 * full {
+                    return h.bin_edge(edge - 1);
+                }
+            }
+            h.max_abs
+        }
+    }
+}
+
+/// Calibrate full QParams for a dtype (symmetric for weights and
+/// KL/entropy activations, asymmetric for min-max signed activations).
+pub fn calibrate(h: &Histogram, method: Method, dt: DType, percentile_p: f64) -> QParams {
+    let clip = calibrate_threshold(h, method, percentile_p).max(1e-12);
+    QParams::symmetric(clip, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gauss_hist(seed: u64, n: usize) -> Histogram {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        h.observe(&xs);
+        h
+    }
+
+    #[test]
+    fn candidate_schedule_matches_paper() {
+        let e = candidate_edges();
+        assert_eq!(e.len(), NUM_CANDIDATES);
+        assert_eq!(e[0], NUM_QUANT_LEVELS);
+        assert_eq!(*e.last().unwrap(), NUM_BINS);
+    }
+
+    #[test]
+    fn kl_zero_when_distribution_fits_levels() {
+        // Mass in the first 128 bins -> candidate 0 re-bins losslessly.
+        let mut hist = vec![0.0f32; NUM_BINS];
+        let mut rng = Rng::new(0);
+        for b in hist.iter_mut().take(128) {
+            *b = 1.0 + rng.f32();
+        }
+        let (kls, best) = kl_sweep(&hist);
+        assert_eq!(best, 0);
+        assert!(kls[0] < 1e-9, "{}", kls[0]);
+    }
+
+    #[test]
+    fn kl_prefers_clipping_outliers() {
+        // Gaussian core + a few extreme outliers: best clip < max bin.
+        let mut h = gauss_hist(3, 50_000);
+        // Implant outliers at the top of the range.
+        h.bins[NUM_BINS - 1] += 3.0;
+        let (_, best) = kl_sweep(&h.bins);
+        assert!(
+            candidate_edges()[best] < NUM_BINS,
+            "expected clipping, got full range"
+        );
+    }
+
+    #[test]
+    fn percentile_below_max_for_heavy_tail() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..20_000)
+            .map(|_| {
+                let v = rng.normal_f32();
+                v * v * v // heavy-ish tail
+            })
+            .collect();
+        h.observe(&xs);
+        let t = calibrate_threshold(&h, Method::Percentile, 99.9);
+        assert!(t < h.max_abs);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn entropy_threshold_preserves_information() {
+        let h = gauss_hist(7, 30_000);
+        let t = calibrate_threshold(&h, Method::Entropy, 99.9);
+        assert!(t <= h.max_abs * 1.001);
+        assert!(t >= h.percentile(90.0), "entropy clip too aggressive");
+    }
+
+    #[test]
+    fn methods_produce_valid_qparams() {
+        let h = gauss_hist(9, 10_000);
+        for m in [Method::Kl, Method::Percentile, Method::Entropy, Method::MinMax] {
+            let p = calibrate(&h, m, DType::I8, 99.9);
+            assert!(p.scale > 0.0, "{m:?}");
+            assert_eq!(p.zero_point, 0.0);
+        }
+    }
+
+    #[test]
+    fn kl_matches_python_oracle_shape() {
+        // Structural check mirrored by the pytest suite: KL is finite,
+        // non-negative, and not monotone-trivial across candidates.
+        let h = gauss_hist(11, 40_000);
+        let (kls, _) = kl_sweep(&h.bins);
+        assert!(kls.iter().all(|k| k.is_finite() && *k >= -1e-12));
+        let increasing = kls.windows(2).filter(|w| w[1] > w[0]).count();
+        assert!(increasing > 0 && increasing < kls.len() - 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Streaming activation histograms — 2048 bins (the paper's calibration
+//! resolution), magnitude-based, built incrementally over calibration
+//! batches without storing activations.
+
+/// Number of bins (paper: "2048-bin histogram optimization").
+pub const NUM_BINS: usize = 2048;
+
+/// A magnitude histogram over [0, max_abs].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bins: Vec<f32>,
+    pub max_abs: f32,
+    pub count: u64,
+    /// Min/max of the raw (signed) values, for asymmetric schemes.
+    pub min_val: f32,
+    pub max_val: f32,
+    /// Retained sample reservoir for percentile calibration.
+    reservoir: Vec<f32>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            bins: vec![0.0; NUM_BINS],
+            max_abs: 0.0,
+            count: 0,
+            min_val: f32::INFINITY,
+            max_val: f32::NEG_INFINITY,
+            reservoir: Vec::new(),
+        }
+    }
+
+    /// Observe a batch of values. The first batch fixes the range; later
+    /// values beyond it clamp into the top bin (standard practice — the
+    /// range is refined by observing the largest batch first or by a
+    /// two-pass build; `rebin` supports explicit range growth).
+    pub fn observe(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        let batch_max = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        if self.max_abs == 0.0 {
+            self.max_abs = batch_max.max(1e-12);
+        } else if batch_max > self.max_abs * 1.5 {
+            self.rebin(batch_max);
+        }
+        for &v in xs {
+            self.min_val = self.min_val.min(v);
+            self.max_val = self.max_val.max(v);
+            let idx = ((v.abs() / self.max_abs) * NUM_BINS as f32) as usize;
+            self.bins[idx.min(NUM_BINS - 1)] += 1.0;
+            self.count += 1;
+            // Reservoir sampling (k = 4096) for percentile calibration.
+            if self.reservoir.len() < 4096 {
+                self.reservoir.push(v.abs());
+            } else {
+                let j = (self.count as usize * 2654435761) % self.count as usize;
+                if j < 4096 {
+                    self.reservoir[j] = v.abs();
+                }
+            }
+        }
+    }
+
+    /// Grow the range, redistributing existing mass.
+    fn rebin(&mut self, new_max: f32) {
+        let mut nb = vec![0.0f32; NUM_BINS];
+        for (i, &m) in self.bins.iter().enumerate() {
+            if m == 0.0 {
+                continue;
+            }
+            let center = (i as f32 + 0.5) / NUM_BINS as f32 * self.max_abs;
+            let ni = ((center / new_max) * NUM_BINS as f32) as usize;
+            nb[ni.min(NUM_BINS - 1)] += m;
+        }
+        self.bins = nb;
+        self.max_abs = new_max;
+    }
+
+    /// Value at the upper edge of bin `i`.
+    pub fn bin_edge(&self, i: usize) -> f32 {
+        (i + 1) as f32 / NUM_BINS as f32 * self.max_abs
+    }
+
+    /// Approximate magnitude percentile from the reservoir.
+    pub fn percentile(&self, p: f64) -> f32 {
+        if self.reservoir.is_empty() {
+            return self.max_abs;
+        }
+        let mut s: Vec<f32> = self.reservoir.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mass_is_conserved() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(1);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.normal_f32()).collect();
+        h.observe(&xs);
+        assert_eq!(h.count, 10_000);
+        assert!((h.bins.iter().sum::<f32>() - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn rebin_preserves_mass() {
+        let mut h = Histogram::new();
+        h.observe(&[0.1, 0.2, 0.3]);
+        h.observe(&[5.0]); // forces range growth
+        assert!((h.bins.iter().sum::<f32>() - 4.0).abs() < 1e-3);
+        assert!(h.max_abs >= 5.0);
+    }
+
+    #[test]
+    fn percentile_tracks_distribution() {
+        let mut h = Histogram::new();
+        let xs: Vec<f32> = (0..2000).map(|i| i as f32 / 2000.0).collect();
+        h.observe(&xs);
+        let p999 = h.percentile(99.9);
+        assert!((0.97..=1.0).contains(&p999), "{p999}");
+        let p50 = h.percentile(50.0);
+        assert!((0.4..=0.6).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn signed_range_tracked() {
+        let mut h = Histogram::new();
+        h.observe(&[-3.0, 1.0, 2.0]);
+        assert_eq!(h.min_val, -3.0);
+        assert_eq!(h.max_val, 2.0);
+    }
+}

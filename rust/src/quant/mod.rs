@@ -1,0 +1,147 @@
+//! Quantization framework (paper §3.3, contribution 2): FP32 → Binary, with
+//! full calibration algorithms (KL divergence over 2048-bin histograms,
+//! percentile, entropy) and momentum-based QAT.
+//!
+//! * [`histogram`] — streaming 2048-bin activation histograms.
+//! * [`calib`] — the calibration methods; the KL sweep has a pure-rust
+//!   implementation that mirrors `python/compile/kernels/ref.py` exactly and
+//!   an AOT/PJRT path (`runtime::artifacts`) used in production.
+//! * [`ptq`] — post-training quantization of a graph (weights + activations)
+//!   and the quantized-inference evaluation used by Table 6.
+//! * [`qat`] — quantization-aware training updates (eqs. 8-13).
+
+pub mod calib;
+pub mod histogram;
+pub mod ptq;
+pub mod qat;
+
+use crate::ir::dtype::DType;
+
+/// Affine quantization parameters for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub dtype: DType,
+}
+
+impl QParams {
+    /// Symmetric parameters from a clip threshold.
+    pub fn symmetric(clip: f32, dtype: DType) -> QParams {
+        let (qmin, qmax) = dtype.int_range().unwrap_or((-128, 127));
+        let half_range = qmax.max(-qmin) as f32;
+        QParams {
+            scale: (clip / half_range).max(f32::MIN_POSITIVE),
+            zero_point: 0.0,
+            dtype,
+        }
+    }
+
+    /// Asymmetric parameters from a [lo, hi] range.
+    pub fn asymmetric(lo: f32, hi: f32, dtype: DType) -> QParams {
+        let (qmin, qmax) = dtype.int_range().unwrap_or((-128, 127));
+        let span = (hi - lo).max(f32::MIN_POSITIVE);
+        let scale = span / (qmax - qmin) as f32;
+        let zp = (qmin as f32 - lo / scale).round();
+        QParams { scale, zero_point: zp, dtype }
+    }
+
+    pub fn qrange(&self) -> (f32, f32) {
+        let (lo, hi) = self.dtype.int_range().unwrap_or((-128, 127));
+        (lo as f32, hi as f32)
+    }
+
+    /// Quantize one value to its integer code.
+    pub fn quantize(&self, x: f32) -> f32 {
+        let (qmin, qmax) = self.qrange();
+        (x / self.scale + self.zero_point).round().clamp(qmin, qmax)
+    }
+
+    /// Dequantize an integer code back to real.
+    pub fn dequantize(&self, q: f32) -> f32 {
+        (q - self.zero_point) * self.scale
+    }
+
+    /// Fake-quant round trip (eq. 8).
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Apply a precision's storage round-trip to a slice (int types via params,
+/// reduced floats via bit-level conversion).
+pub fn quantize_slice(dt: DType, params: Option<QParams>, xs: &mut [f32]) {
+    match dt {
+        DType::F32 | DType::I32 => {}
+        DType::F16 | DType::BF16 | DType::FP8 | DType::FP4 => {
+            for v in xs.iter_mut() {
+                *v = crate::ir::dtype::float_roundtrip(dt, *v);
+            }
+        }
+        DType::I8 | DType::I4 => {
+            let p = params.expect("int quantization needs QParams");
+            for v in xs.iter_mut() {
+                *v = p.fake_quant(*v);
+            }
+        }
+        DType::Binary => {
+            // XNOR-net style: sign(x) * mean(|x|).
+            let alpha = xs.iter().map(|v| v.abs()).sum::<f32>() / xs.len().max(1) as f32;
+            for v in xs.iter_mut() {
+                *v = if *v >= 0.0 { alpha } else { -alpha };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn symmetric_int8_roundtrip_error_bound() {
+        let p = QParams::symmetric(4.0, DType::I8);
+        forall("int8 |x - fq(x)| <= scale/2 in range", 300, |rng| {
+            let x = (rng.f32() - 0.5) * 8.0;
+            let err = (p.fake_quant(x) - x).abs();
+            if err <= p.scale / 2.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("x={x} err={err} scale={}", p.scale))
+            }
+        });
+    }
+
+    #[test]
+    fn asymmetric_covers_range_ends() {
+        let p = QParams::asymmetric(-1.0, 3.0, DType::I8);
+        assert!((p.fake_quant(-1.0) + 1.0).abs() < p.scale);
+        assert!((p.fake_quant(3.0) - 3.0).abs() < p.scale);
+        // Clamps beyond.
+        assert!(p.fake_quant(10.0) <= 3.0 + p.scale);
+    }
+
+    #[test]
+    fn int4_is_coarser_than_int8() {
+        let p8 = QParams::symmetric(1.0, DType::I8);
+        let p4 = QParams::symmetric(1.0, DType::I4);
+        assert!(p4.scale > p8.scale * 10.0);
+        let mut worst8 = 0.0f32;
+        let mut worst4 = 0.0f32;
+        for i in 0..100 {
+            let x = i as f32 / 100.0;
+            worst8 = worst8.max((p8.fake_quant(x) - x).abs());
+            worst4 = worst4.max((p4.fake_quant(x) - x).abs());
+        }
+        assert!(worst4 > worst8);
+    }
+
+    #[test]
+    fn binary_preserves_sign_and_magnitude() {
+        let mut xs = vec![0.5, -0.25, 1.0, -1.25];
+        quantize_slice(DType::Binary, None, &mut xs);
+        let alpha = (0.5 + 0.25 + 1.0 + 1.25) / 4.0;
+        assert_eq!(xs, vec![alpha, -alpha, alpha, -alpha]);
+    }
+}

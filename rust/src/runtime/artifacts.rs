@@ -1,0 +1,251 @@
+//! Typed wrappers over the four AOT artifacts. Shapes here mirror
+//! `python/compile/model.py::aot_entries()` — the frozen interchange
+//! contract (checked against `artifacts/manifest.json` at load).
+
+use crate::cost::features::NUM_FEATURES;
+use crate::cost::learned::{LinearBackend, BATCH};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Fixed AOT shapes (must match python/compile/model.py).
+pub const F: usize = NUM_FEATURES; // 16
+pub const B: usize = BATCH; // 64
+pub const HIST: usize = 2048;
+pub const CAND: usize = 100;
+pub const QAT_ROWS: usize = 32;
+pub const QAT_LANES: usize = 128;
+
+/// Loaded + compiled artifacts.
+pub struct Artifacts {
+    client: xla::PjRtClient,
+    cost_predict: xla::PjRtLoadedExecutable,
+    cost_train: xla::PjRtLoadedExecutable,
+    kl_calib: xla::PjRtLoadedExecutable,
+    qat_step: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &std::path::Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+    )
+    .map_err(|e| Error::Runtime(format!("{name}: parse failed: {e:?}")))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| Error::Runtime(format!("{name}: compile failed: {e:?}")))
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("literal reshape: {e:?}")))
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: $XGENC_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("XGENC_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+    }
+
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+
+    /// Load and compile all four artifacts on the PJRT CPU client.
+    pub fn load() -> Result<Artifacts> {
+        Self::load_from(&Self::default_dir())
+    }
+
+    pub fn load_from(dir: &std::path::Path) -> Result<Artifacts> {
+        // Manifest check: catches stale artifacts after kernel edits.
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::Runtime(format!("artifacts manifest missing ({e}); run `make artifacts`")))?;
+        let manifest = Json::parse(&manifest_text)?;
+        for name in ["cost_predict", "cost_train", "kl_calib", "qat_step"] {
+            if manifest.get(name).as_obj().is_none() {
+                return Err(Error::Runtime(format!("manifest missing entry '{name}'")));
+            }
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT client: {e:?}")))?;
+        Ok(Artifacts {
+            cost_predict: load_exe(&client, dir, "cost_predict")?,
+            cost_train: load_exe(&client, dir, "cost_train")?,
+            kl_calib: load_exe(&client, dir, "kl_calib")?,
+            qat_step: load_exe(&client, dir, "qat_step")?,
+            client,
+        })
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute: {e:?}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch: {e:?}")))?;
+        lit.to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple: {e:?}")))
+    }
+
+    /// Batched cost prediction: y[B] = X[B,F] · w[F] (paper eq. 1).
+    pub fn cost_predict(&self, w: &[f32; F], x: &[[f32; F]; B]) -> Result<Vec<f32>> {
+        let wl = lit_f32(w, &[F as i64])?;
+        let flat: Vec<f32> = x.iter().flatten().copied().collect();
+        let xl = lit_f32(&flat, &[B as i64, F as i64])?;
+        let outs = Self::run(&self.cost_predict, &[wl, xl])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("{e:?}")))
+    }
+
+    /// One training step (paper eq. 2 + momentum): returns (w', v', loss).
+    pub fn cost_train(
+        &self,
+        w: &[f32; F],
+        v: &[f32; F],
+        x: &[[f32; F]; B],
+        y: &[f32; B],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let wl = lit_f32(w, &[F as i64])?;
+        let vl = lit_f32(v, &[F as i64])?;
+        let flat: Vec<f32> = x.iter().flatten().copied().collect();
+        let xl = lit_f32(&flat, &[B as i64, F as i64])?;
+        let yl = lit_f32(y, &[B as i64])?;
+        let lrl = lit_f32(&[lr], &[1])?;
+        let outs = Self::run(&self.cost_train, &[wl, vl, xl, yl, lrl])?;
+        let w2 = outs[0].to_vec::<f32>().map_err(|e| Error::Runtime(format!("{e:?}")))?;
+        let v2 = outs[1].to_vec::<f32>().map_err(|e| Error::Runtime(format!("{e:?}")))?;
+        let loss = outs[2].to_vec::<f32>().map_err(|e| Error::Runtime(format!("{e:?}")))?[0];
+        Ok((w2, v2, loss))
+    }
+
+    /// Full KL calibration sweep (paper eq. 5): returns (per-candidate KL,
+    /// argmin index).
+    pub fn kl_calibrate(&self, hist: &[f32]) -> Result<(Vec<f32>, usize)> {
+        if hist.len() != HIST {
+            return Err(Error::Runtime(format!("histogram must be {HIST} bins")));
+        }
+        let hl = lit_f32(hist, &[HIST as i64])?;
+        let outs = Self::run(&self.kl_calib, &[hl])?;
+        let kls = outs[0].to_vec::<f32>().map_err(|e| Error::Runtime(format!("{e:?}")))?;
+        let best = outs[1].to_vec::<i32>().map_err(|e| Error::Runtime(format!("{e:?}")))?[0];
+        Ok((kls, best as usize))
+    }
+
+    /// One QAT block step (paper eqs. 8-13): returns
+    /// (x_fq, dx, scale', zp', v_scale', v_zp').
+    #[allow(clippy::too_many_arguments)]
+    pub fn qat_step(
+        &self,
+        x: &[f32],
+        g: &[f32],
+        scale: f32,
+        zp: f32,
+        v_scale: f32,
+        v_zp: f32,
+        lr: f32,
+        qlo: f32,
+        qhi: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, f32, f32, f32)> {
+        let n = QAT_ROWS * QAT_LANES;
+        if x.len() != n || g.len() != n {
+            return Err(Error::Runtime(format!("QAT block must be {n} values")));
+        }
+        let dims = [QAT_ROWS as i64, QAT_LANES as i64];
+        let outs = Self::run(
+            &self.qat_step,
+            &[
+                lit_f32(x, &dims)?,
+                lit_f32(g, &dims)?,
+                lit_f32(&[scale], &[1])?,
+                lit_f32(&[zp], &[1])?,
+                lit_f32(&[v_scale], &[1])?,
+                lit_f32(&[v_zp], &[1])?,
+                lit_f32(&[lr], &[1])?,
+                lit_f32(&[qlo], &[1])?,
+                lit_f32(&[qhi], &[1])?,
+            ],
+        )?;
+        let take = |i: usize| -> Result<Vec<f32>> {
+            outs[i].to_vec::<f32>().map_err(|e| Error::Runtime(format!("{e:?}")))
+        };
+        Ok((
+            take(0)?,
+            take(1)?,
+            take(2)?[0],
+            take(3)?[0],
+            take(4)?[0],
+            take(5)?[0],
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// PJRT-backed linear backend for the learned cost model — the production
+/// configuration (the f64 rust fallback differs only by f32 rounding).
+pub struct PjrtBackend {
+    pub artifacts: std::sync::Arc<Artifacts>,
+}
+
+impl LinearBackend for PjrtBackend {
+    fn predict(&mut self, w: &[f64; F], x: &[[f64; F]]) -> Vec<f64> {
+        let wf: [f32; F] = std::array::from_fn(|i| w[i] as f32);
+        let mut out = Vec::with_capacity(x.len());
+        for chunk in x.chunks(B) {
+            let mut xb = [[0f32; F]; B];
+            for (i, row) in chunk.iter().enumerate() {
+                for j in 0..F {
+                    xb[i][j] = row[j] as f32;
+                }
+            }
+            let ys = self.artifacts.cost_predict(&wf, &xb).expect("pjrt predict");
+            out.extend(ys[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        out
+    }
+
+    fn train_step(
+        &mut self,
+        w: &[f64; F],
+        v: &[f64; F],
+        x: &[[f64; F]],
+        y: &[f64],
+        lr: f64,
+    ) -> ([f64; F], [f64; F], f64) {
+        let wf: [f32; F] = std::array::from_fn(|i| w[i] as f32);
+        let vf: [f32; F] = std::array::from_fn(|i| v[i] as f32);
+        let mut xb = [[0f32; F]; B];
+        let mut yb = [0f32; B];
+        for i in 0..B {
+            let src = i % x.len();
+            for j in 0..F {
+                xb[i][j] = x[src][j] as f32;
+            }
+            yb[i] = y[src] as f32;
+        }
+        let (w2, v2, loss) = self
+            .artifacts
+            .cost_train(&wf, &vf, &xb, &yb, lr as f32)
+            .expect("pjrt train");
+        (
+            std::array::from_fn(|i| w2[i] as f64),
+            std::array::from_fn(|i| v2[i] as f64),
+            loss as f64,
+        )
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes them
+//! from the compiler's hot paths. Python never runs here — the HLO text is
+//! compiled by the `xla` crate's PJRT CPU client at startup and called like
+//! a function.
+
+pub mod artifacts;
+
+pub use artifacts::Artifacts;

@@ -1,0 +1,660 @@
+//! Functional RV32I+RVV machine: fetch → decode → execute over *encoded*
+//! binaries, with cycle and cache accounting.
+//!
+//! This is the hardware-in-the-loop stand-in: generated kernels actually run
+//! here, numerics are compared against the IR executor, and the cycle
+//! counts are the "measurements" the learned cost model trains on (small
+//! kernels; the analytic `timing` model extrapolates for big ones and is
+//! cross-validated against this machine).
+
+use std::collections::BTreeMap;
+
+use crate::isa::{decode, regs, Op, OpClass};
+use crate::sim::cache::Hierarchy;
+use crate::sim::{layout, MachineConfig};
+use crate::util::error::{Error, Result};
+
+/// Execution summary.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub cycles: u64,
+    pub instret: u64,
+    pub class_counts: BTreeMap<&'static str, u64>,
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: MachineConfig,
+    pub x: [i32; 32],
+    pub f: [f32; 32],
+    /// Vector register file: 32 regs x lanes f32.
+    pub v: Vec<Vec<f32>>,
+    /// Active vector length (elements) and register-group multiplier.
+    pub vl: usize,
+    pub lmul: usize,
+    dmem: Vec<u8>,
+    wmem: Vec<u8>,
+    pub cycles: u64,
+    pub instret: u64,
+    pub hier: Hierarchy,
+    class_counts: BTreeMap<OpClass, u64>,
+    /// Instruction budget guard against runaway programs.
+    pub max_instret: u64,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Machine {
+        let lanes = cfg.lanes();
+        let hier = Hierarchy::new(&cfg.caches, cfg.mem_latency);
+        // Cap host allocation: the address map allows huge DMEM/WMEM but the
+        // tests only touch the low megabytes.
+        let dmem = vec![0u8; cfg.dmem_bytes.min(64 << 20)];
+        let wmem = vec![0u8; cfg.wmem_bytes.min(64 << 20)];
+        let mut x = [0; 32];
+        // ABI: stack pointer starts at DMEM top (grows down).
+        x[regs::SP as usize] = dmem.len() as i32;
+        Machine {
+            cfg,
+            x,
+            f: [0.0; 32],
+            v: vec![vec![0.0; lanes]; 32],
+            vl: lanes,
+            lmul: 1,
+            dmem,
+            wmem,
+            cycles: 0,
+            instret: 0,
+            hier,
+            class_counts: BTreeMap::new(),
+            max_instret: 500_000_000,
+        }
+    }
+
+    // -- memory ------------------------------------------------------------
+
+    fn mem(&mut self, addr: u32) -> Result<(&mut Vec<u8>, usize)> {
+        if addr >= layout::WMEM_BASE {
+            let off = (addr - layout::WMEM_BASE) as usize;
+            if off >= self.wmem.len() {
+                return Err(Error::Sim(format!("WMEM OOB access at {addr:#010x}")));
+            }
+            Ok((&mut self.wmem, off))
+        } else {
+            let off = addr as usize;
+            if off >= self.dmem.len() {
+                return Err(Error::Sim(format!("DMEM OOB access at {addr:#010x}")));
+            }
+            Ok((&mut self.dmem, off))
+        }
+    }
+
+    pub fn load_u32(&mut self, addr: u32) -> Result<u32> {
+        let (m, o) = self.mem(addr)?;
+        if o + 4 > m.len() {
+            return Err(Error::Sim(format!("OOB word load at {addr:#010x}")));
+        }
+        Ok(u32::from_le_bytes([m[o], m[o + 1], m[o + 2], m[o + 3]]))
+    }
+
+    pub fn store_u32(&mut self, addr: u32, val: u32) -> Result<()> {
+        let (m, o) = self.mem(addr)?;
+        if o + 4 > m.len() {
+            return Err(Error::Sim(format!("OOB word store at {addr:#010x}")));
+        }
+        m[o..o + 4].copy_from_slice(&val.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn load_f32(&mut self, addr: u32) -> Result<f32> {
+        Ok(f32::from_bits(self.load_u32(addr)?))
+    }
+
+    pub fn store_f32(&mut self, addr: u32, val: f32) -> Result<()> {
+        self.store_u32(addr, val.to_bits())
+    }
+
+    /// Bulk helpers for the test/bench harnesses.
+    pub fn write_f32_slice(&mut self, addr: u32, vals: &[f32]) -> Result<()> {
+        for (i, &v) in vals.iter().enumerate() {
+            self.store_f32(addr + (i * 4) as u32, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_f32_slice(&mut self, addr: u32, n: usize) -> Result<Vec<f32>> {
+        (0..n).map(|i| self.load_f32(addr + (i * 4) as u32)).collect()
+    }
+
+    pub fn write_i8_slice(&mut self, addr: u32, vals: &[i8]) -> Result<()> {
+        for (i, &v) in vals.iter().enumerate() {
+            let (m, o) = self.mem(addr + i as u32)?;
+            m[o] = v as u8;
+        }
+        Ok(())
+    }
+
+    // -- execution ----------------------------------------------------------
+
+    fn bump(&mut self, class: OpClass, cycles: u64) {
+        *self.class_counts.entry(class).or_insert(0) += 1;
+        // Superscalar baselines retire multiple scalar ops per cycle.
+        let scaled = if matches!(class, OpClass::Alu | OpClass::Branch | OpClass::Jump) {
+            ((cycles as f64) / self.cfg.issue_width).ceil() as u64
+        } else {
+            cycles
+        };
+        self.cycles += scaled.max(1);
+    }
+
+    fn vreg(&self, base: u8, elem: usize) -> f32 {
+        let lanes = self.cfg.lanes();
+        self.v[base as usize + elem / lanes][elem % lanes]
+    }
+
+    fn vreg_set(&mut self, base: u8, elem: usize, val: f32) {
+        let lanes = self.cfg.lanes();
+        self.v[base as usize + elem / lanes][elem % lanes] = val;
+    }
+
+    /// Execute an encoded program until it falls off the end.
+    /// Returns run statistics; machine state persists for inspection.
+    pub fn run(&mut self, prog: &[u32]) -> Result<RunStats> {
+        let start_instret = self.instret;
+        let start_cycles = self.cycles;
+        let end = (prog.len() * 4) as u32;
+        let mut pc: u32 = 0;
+        while pc < end {
+            if self.instret - start_instret > self.max_instret {
+                return Err(Error::Sim(format!(
+                    "instruction budget exceeded ({})",
+                    self.max_instret
+                )));
+            }
+            let word = prog[(pc / 4) as usize];
+            let i = decode::decode(word)?;
+            self.instret += 1;
+            let mut next = pc.wrapping_add(4);
+            use Op::*;
+            match i.op {
+                // -- scalar integer ------------------------------------------
+                Lui => {
+                    self.wx(i.rd, (i.imm as u32) << 12);
+                    self.bump(OpClass::Alu, 1);
+                }
+                Auipc => {
+                    self.wx(i.rd, pc.wrapping_add((i.imm as u32) << 12));
+                    self.bump(OpClass::Alu, 1);
+                }
+                Jal => {
+                    self.wx(i.rd, next);
+                    next = pc.wrapping_add(i.imm as u32);
+                    self.bump(OpClass::Jump, 1);
+                }
+                Jalr => {
+                    let t = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32) & !1;
+                    self.wx(i.rd, next);
+                    next = t;
+                    self.bump(OpClass::Jump, 1);
+                }
+                Beq | Bne | Blt | Bge => {
+                    let a = self.x[i.rs1 as usize];
+                    let b = self.x[i.rs2 as usize];
+                    let taken = match i.op {
+                        Beq => a == b,
+                        Bne => a != b,
+                        Blt => a < b,
+                        _ => a >= b,
+                    };
+                    if taken {
+                        next = pc.wrapping_add(i.imm as u32);
+                        self.bump(OpClass::Branch, 2); // taken-branch penalty
+                    } else {
+                        self.bump(OpClass::Branch, 1);
+                    }
+                }
+                Lw => {
+                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let lat = self.hier.access(addr as u64);
+                    let val = self.load_u32(addr)?;
+                    self.wx(i.rd, val);
+                    self.bump(OpClass::Load, lat);
+                }
+                Sw => {
+                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let lat = self.hier.access(addr as u64);
+                    self.store_u32(addr, self.x[i.rs2 as usize] as u32)?;
+                    self.bump(OpClass::Store, lat.min(2)); // store buffer hides latency
+                }
+                Addi => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_add(i.imm)); self.bump(OpClass::Alu, 1); }
+                Slti => { self.wxi(i.rd, (self.x[i.rs1 as usize] < i.imm) as i32); self.bump(OpClass::Alu, 1); }
+                Andi => { self.wxi(i.rd, self.x[i.rs1 as usize] & i.imm); self.bump(OpClass::Alu, 1); }
+                Ori => { self.wxi(i.rd, self.x[i.rs1 as usize] | i.imm); self.bump(OpClass::Alu, 1); }
+                Xori => { self.wxi(i.rd, self.x[i.rs1 as usize] ^ i.imm); self.bump(OpClass::Alu, 1); }
+                Slli => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) << i.imm) as i32); self.bump(OpClass::Alu, 1); }
+                Srli => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) >> i.imm) as i32); self.bump(OpClass::Alu, 1); }
+                Srai => { self.wxi(i.rd, self.x[i.rs1 as usize] >> i.imm); self.bump(OpClass::Alu, 1); }
+                Add => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_add(self.x[i.rs2 as usize])); self.bump(OpClass::Alu, 1); }
+                Sub => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_sub(self.x[i.rs2 as usize])); self.bump(OpClass::Alu, 1); }
+                Sll => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) << (self.x[i.rs2 as usize] & 31)) as i32); self.bump(OpClass::Alu, 1); }
+                Srl => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) >> (self.x[i.rs2 as usize] & 31)) as i32); self.bump(OpClass::Alu, 1); }
+                Sra => { self.wxi(i.rd, self.x[i.rs1 as usize] >> (self.x[i.rs2 as usize] & 31)); self.bump(OpClass::Alu, 1); }
+                And => { self.wxi(i.rd, self.x[i.rs1 as usize] & self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
+                Or => { self.wxi(i.rd, self.x[i.rs1 as usize] | self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
+                Xor => { self.wxi(i.rd, self.x[i.rs1 as usize] ^ self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
+                Slt => { self.wxi(i.rd, (self.x[i.rs1 as usize] < self.x[i.rs2 as usize]) as i32); self.bump(OpClass::Alu, 1); }
+                Mul => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_mul(self.x[i.rs2 as usize])); self.bump(OpClass::Mul, 3); }
+                Mulh => {
+                    let p = (self.x[i.rs1 as usize] as i64) * (self.x[i.rs2 as usize] as i64);
+                    self.wxi(i.rd, (p >> 32) as i32);
+                    self.bump(OpClass::Mul, 3);
+                }
+                Div => {
+                    let d = self.x[i.rs2 as usize];
+                    self.wxi(i.rd, if d == 0 { -1 } else { self.x[i.rs1 as usize].wrapping_div(d) });
+                    self.bump(OpClass::Div, 20);
+                }
+                Rem => {
+                    let d = self.x[i.rs2 as usize];
+                    self.wxi(i.rd, if d == 0 { self.x[i.rs1 as usize] } else { self.x[i.rs1 as usize].wrapping_rem(d) });
+                    self.bump(OpClass::Div, 20);
+                }
+
+                // -- scalar float --------------------------------------------
+                Flw => {
+                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let lat = self.hier.access(addr as u64);
+                    self.f[i.rd as usize] = self.load_f32(addr)?;
+                    self.bump(OpClass::Load, lat);
+                }
+                Fsw => {
+                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let lat = self.hier.access(addr as u64);
+                    self.store_f32(addr, self.f[i.rs2 as usize])?;
+                    self.bump(OpClass::Store, lat.min(2));
+                }
+                FaddS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] + self.f[i.rs2 as usize]; self.bump(OpClass::FAlu, 2); }
+                FsubS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] - self.f[i.rs2 as usize]; self.bump(OpClass::FAlu, 2); }
+                FmulS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] * self.f[i.rs2 as usize]; self.bump(OpClass::FMul, 3); }
+                FdivS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] / self.f[i.rs2 as usize]; self.bump(OpClass::FDiv, 16); }
+                FmaddS => {
+                    self.f[i.rd as usize] =
+                        self.f[i.rs1 as usize] * self.f[i.rs2 as usize] + self.f[i.rs3 as usize];
+                    self.bump(OpClass::FMa, 4);
+                }
+                FminS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].min(self.f[i.rs2 as usize]); self.bump(OpClass::FAlu, 2); }
+                FmaxS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].max(self.f[i.rs2 as usize]); self.bump(OpClass::FAlu, 2); }
+                FcvtWS => { self.wxi(i.rd, self.f[i.rs1 as usize] as i32); self.bump(OpClass::FAlu, 2); }
+                FcvtSW => { self.f[i.rd as usize] = self.x[i.rs1 as usize] as f32; self.bump(OpClass::FAlu, 2); }
+                FexpS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].exp(); self.bump(OpClass::FCustom, 8); }
+                FrsqrtS => { self.f[i.rd as usize] = 1.0 / self.f[i.rs1 as usize].sqrt(); self.bump(OpClass::FCustom, 8); }
+
+                // -- vector ---------------------------------------------------
+                Vsetvli => {
+                    if !self.cfg.has_vector {
+                        return Err(Error::Sim("vector instruction on scalar-only platform".into()));
+                    }
+                    self.lmul = 1 << i.rs3;
+                    let vlmax = self.cfg.lanes() * self.lmul;
+                    let avl = self.x[i.rs1 as usize].max(0) as usize;
+                    self.vl = avl.min(vlmax);
+                    self.wxi(i.rd, self.vl as i32);
+                    self.bump(OpClass::VSet, 1);
+                }
+                Vle32 | Vle8 | Vse32 | Vse8 => {
+                    if !self.cfg.has_vector {
+                        return Err(Error::Sim("vector instruction on scalar-only platform".into()));
+                    }
+                    let base = self.x[i.rs1 as usize] as u32;
+                    let esz = if matches!(i.op, Vle32 | Vse32) { 4 } else { 1 };
+                    // One cache access per line touched.
+                    let bytes = self.vl * esz;
+                    let mut lat = 0;
+                    let mut a = base as u64;
+                    while a < (base as u64) + bytes as u64 {
+                        lat = lat.max(self.hier.access(a));
+                        a += 64;
+                    }
+                    for e in 0..self.vl {
+                        let addr = base + (e * esz) as u32;
+                        match i.op {
+                            Vle32 => {
+                                let v = self.load_f32(addr)?;
+                                self.vreg_set(i.rd, e, v);
+                            }
+                            Vse32 => {
+                                let v = self.vreg(i.rd, e);
+                                self.store_f32(addr, v)?;
+                            }
+                            Vle8 => {
+                                let (m, o) = self.mem(addr)?;
+                                let v = m[o] as i8 as f32;
+                                self.vreg_set(i.rd, e, v);
+                            }
+                            _ => {
+                                let v = self.vreg(i.rd, e);
+                                let (m, o) = self.mem(addr)?;
+                                m[o] = (v as i32).clamp(-128, 127) as u8 as u8;
+                            }
+                        }
+                    }
+                    let class = if matches!(i.op, Vle32 | Vle8) { OpClass::VLoad } else { OpClass::VStore };
+                    // Throughput: lanes per cycle per port + miss latency.
+                    self.bump(class, (self.vl as u64 / 4).max(1) + lat);
+                }
+                VaddVV | VfaddVV => self.vbin(&i, |a, b| a + b),
+                VsubVV | VfsubVV => self.vbin(&i, |a, b| a - b),
+                VmulVV | VfmulVV => self.vmul(&i),
+                VmaccVV | VfmaccVV => self.vfma(&i),
+                VfmaccVF => {
+                    let s = self.f[i.rs1 as usize];
+                    for e in 0..self.vl {
+                        let acc = self.vreg(i.rd, e) + s * self.vreg(i.rs2, e);
+                        self.vreg_set(i.rd, e, acc);
+                    }
+                    self.bump(OpClass::VFma, (2 * self.lmul) as u64);
+                }
+                VfredsumVS => {
+                    let mut acc = self.vreg(i.rs1, 0);
+                    for e in 0..self.vl {
+                        acc += self.vreg(i.rs2, e);
+                    }
+                    self.vreg_set(i.rd, 0, acc);
+                    self.bump(OpClass::VRed, 4 + self.lmul as u64);
+                }
+                VfmaxVV => self.vbin(&i, |a, b| a.max(b)),
+                VfmvVF => {
+                    let s = self.f[i.rs1 as usize];
+                    for e in 0..self.vl {
+                        self.vreg_set(i.rd, e, s);
+                    }
+                    self.bump(OpClass::VAlu, self.lmul as u64);
+                }
+            }
+            pc = next;
+        }
+        Ok(RunStats {
+            cycles: self.cycles - start_cycles,
+            instret: self.instret - start_instret,
+            class_counts: self
+                .class_counts
+                .iter()
+                .map(|(k, v)| (class_name(*k), *v))
+                .collect(),
+        })
+    }
+
+    fn vbin(&mut self, i: &crate::isa::Instr, f: impl Fn(f32, f32) -> f32) {
+        for e in 0..self.vl {
+            let r = f(self.vreg(i.rs1, e), self.vreg(i.rs2, e));
+            self.vreg_set(i.rd, e, r);
+        }
+        self.bump(OpClass::VAlu, self.lmul as u64);
+    }
+
+    fn vmul(&mut self, i: &crate::isa::Instr) {
+        for e in 0..self.vl {
+            let r = self.vreg(i.rs1, e) * self.vreg(i.rs2, e);
+            self.vreg_set(i.rd, e, r);
+        }
+        self.bump(OpClass::VMul, (2 * self.lmul) as u64);
+    }
+
+    fn vfma(&mut self, i: &crate::isa::Instr) {
+        // vmacc vd, vs1, vs2: vd += vs1 * vs2
+        for e in 0..self.vl {
+            let acc = self.vreg(i.rd, e) + self.vreg(i.rs1, e) * self.vreg(i.rs2, e);
+            self.vreg_set(i.rd, e, acc);
+        }
+        self.bump(OpClass::VFma, (2 * self.lmul) as u64);
+    }
+
+    fn wx(&mut self, rd: u8, val: u32) {
+        if rd != regs::ZERO {
+            self.x[rd as usize] = val as i32;
+        }
+    }
+
+    fn wxi(&mut self, rd: u8, val: i32) {
+        if rd != regs::ZERO {
+            self.x[rd as usize] = val;
+        }
+    }
+
+    /// Class-count snapshot (for the energy model).
+    pub fn class_counts(&self) -> &BTreeMap<OpClass, u64> {
+        &self.class_counts
+    }
+}
+
+fn class_name(c: OpClass) -> &'static str {
+    match c {
+        OpClass::Alu => "alu",
+        OpClass::Mul => "mul",
+        OpClass::Div => "div",
+        OpClass::Branch => "branch",
+        OpClass::Jump => "jump",
+        OpClass::Load => "load",
+        OpClass::Store => "store",
+        OpClass::FAlu => "falu",
+        OpClass::FMul => "fmul",
+        OpClass::FDiv => "fdiv",
+        OpClass::FMa => "fma",
+        OpClass::FCustom => "fcustom",
+        OpClass::VSet => "vset",
+        OpClass::VLoad => "vload",
+        OpClass::VStore => "vstore",
+        OpClass::VAlu => "valu",
+        OpClass::VMul => "vmul",
+        OpClass::VFma => "vfma",
+        OpClass::VRed => "vred",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::isa::{Instr, Op};
+
+    fn run(prog: &[Instr]) -> Machine {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let words = encode_all(prog).unwrap();
+        m.run(&words).unwrap();
+        m
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let m = run(&[
+            Instr::i(Op::Addi, 5, 0, 10),
+            Instr::i(Op::Addi, 6, 0, 32),
+            Instr::r(Op::Add, 7, 5, 6),
+            Instr::r(Op::Mul, 28, 5, 6),
+            Instr::r(Op::Sub, 29, 6, 5),
+        ]);
+        assert_eq!(m.x[7], 42);
+        assert_eq!(m.x[28], 320);
+        assert_eq!(m.x[29], 22);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let m = run(&[Instr::i(Op::Addi, 0, 0, 99)]);
+        assert_eq!(m.x[0], 0);
+    }
+
+    #[test]
+    fn loads_and_stores() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.write_f32_slice(0x100, &[1.5, 2.5]).unwrap();
+        let prog = encode_all(&[
+            Instr::i(Op::Addi, 5, 0, 0x100),
+            Instr::i(Op::Flw, 1, 5, 0),
+            Instr::i(Op::Flw, 2, 5, 4),
+            Instr::r(Op::FaddS, 3, 1, 2),
+            Instr::s(Op::Fsw, 5, 3, 8),
+        ])
+        .unwrap();
+        m.run(&prog).unwrap();
+        assert_eq!(m.load_f32(0x108).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn branch_loop_sums() {
+        // for (i = 10; i != 0; i--) acc += i;  => 55
+        let prog = vec![
+            Instr::i(Op::Addi, 5, 0, 10),  // i = 10
+            Instr::i(Op::Addi, 6, 0, 0),   // acc = 0
+            Instr::r(Op::Add, 6, 6, 5),    // loop: acc += i
+            Instr::i(Op::Addi, 5, 5, -1),  // i--
+            Instr::b(Op::Bne, 5, 0, -8),   // if i != 0 goto loop
+        ];
+        let m = run(&prog);
+        assert_eq!(m.x[6], 55);
+    }
+
+    #[test]
+    fn vector_add_and_reduce() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let xs: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let ys: Vec<f32> = (0..8).map(|i| (i * 10) as f32).collect();
+        m.write_f32_slice(0x000, &xs).unwrap();
+        m.write_f32_slice(0x100, &ys).unwrap();
+        let prog = encode_all(&[
+            Instr::i(Op::Addi, 5, 0, 8),   // avl = 8
+            {
+                let mut i = Instr::new(Op::Vsetvli);
+                i.rd = 6;
+                i.rs1 = 5;
+                i.rs3 = 0; // lmul=1
+                i
+            },
+            Instr::i(Op::Addi, 7, 0, 0x000),
+            {
+                let mut i = Instr::new(Op::Vle32);
+                i.rd = 1;
+                i.rs1 = 7;
+                i
+            },
+            Instr::i(Op::Addi, 7, 0, 0x100),
+            {
+                let mut i = Instr::new(Op::Vle32);
+                i.rd = 2;
+                i.rs1 = 7;
+                i
+            },
+            Instr::r(Op::VfaddVV, 3, 1, 2),
+            Instr::i(Op::Addi, 7, 0, 0x200),
+            {
+                let mut i = Instr::new(Op::Vse32);
+                i.rd = 3;
+                i.rs1 = 7;
+                i
+            },
+        ])
+        .unwrap();
+        m.run(&prog).unwrap();
+        let out = m.read_f32_slice(0x200, 8).unwrap();
+        let want: Vec<f32> = (0..8).map(|i| (i + i * 10) as f32).collect();
+        assert_eq!(out, want);
+        assert_eq!(m.vl, 8);
+    }
+
+    #[test]
+    fn vsetvli_clamps_to_vlmax() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let prog = encode_all(&[Instr::i(Op::Addi, 5, 0, 100), {
+            let mut i = Instr::new(Op::Vsetvli);
+            i.rd = 6;
+            i.rs1 = 5;
+            i.rs3 = 1; // lmul=2 -> vlmax = 16
+            i
+        }])
+        .unwrap();
+        m.run(&prog).unwrap();
+        assert_eq!(m.x[6], 16);
+        assert_eq!(m.vl, 16);
+        assert_eq!(m.lmul, 2);
+    }
+
+    #[test]
+    fn lmul_register_grouping() {
+        // With lmul=2 a vector op spans v[rd] and v[rd+1].
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let xs: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        m.write_f32_slice(0x0, &xs).unwrap();
+        let prog = encode_all(&[
+            Instr::i(Op::Addi, 5, 0, 16),
+            {
+                let mut i = Instr::new(Op::Vsetvli);
+                i.rd = 6;
+                i.rs1 = 5;
+                i.rs3 = 1;
+                i
+            },
+            Instr::i(Op::Addi, 7, 0, 0),
+            {
+                let mut i = Instr::new(Op::Vle32);
+                i.rd = 2;
+                i.rs1 = 7;
+                i
+            },
+            Instr::r(Op::VfaddVV, 4, 2, 2), // v4..v5 = 2*x
+            Instr::i(Op::Addi, 7, 0, 0x100),
+            {
+                let mut i = Instr::new(Op::Vse32);
+                i.rd = 4;
+                i.rs1 = 7;
+                i
+            },
+        ])
+        .unwrap();
+        m.run(&prog).unwrap();
+        let out = m.read_f32_slice(0x100, 16).unwrap();
+        assert_eq!(out, (0..16).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fexp_custom_instruction() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.f[1] = 1.0;
+        let prog = encode_all(&[Instr::r(Op::FexpS, 2, 1, 0)]).unwrap();
+        m.run(&prog).unwrap();
+        assert!((m.f[2] - std::f32::consts::E).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scalar_only_platform_rejects_vector() {
+        let mut m = Machine::new(MachineConfig::cpu_a78());
+        let prog = encode_all(&[{
+            let mut i = Instr::new(Op::Vsetvli);
+            i.rd = 6;
+            i.rs1 = 5;
+            i
+        }])
+        .unwrap();
+        assert!(m.run(&prog).is_err());
+    }
+
+    #[test]
+    fn oob_access_is_error_not_panic() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let prog = encode_all(&[
+            Instr::u(Op::Lui, 5, 0x3FFFF), // near DMEM top (beyond allocation)
+            Instr::i(Op::Lw, 6, 5, 0),
+        ])
+        .unwrap();
+        assert!(m.run(&prog).is_err());
+    }
+
+    #[test]
+    fn cycle_accounting_monotone() {
+        let m1 = run(&[Instr::i(Op::Addi, 5, 0, 1)]);
+        let m2 = run(&[
+            Instr::i(Op::Addi, 5, 0, 1),
+            Instr::r(Op::Div, 6, 5, 5),
+            Instr::r(Op::Div, 7, 5, 5),
+        ]);
+        assert!(m2.cycles > m1.cycles + 20, "{} vs {}", m2.cycles, m1.cycles);
+    }
+}

@@ -1,0 +1,154 @@
+//! The simulated accelerator (DESIGN.md §Substitutions: the paper evaluates
+//! on proprietary silicon; we build the closest measurable equivalent).
+//!
+//! * [`machine`] — functional RV32I+RVV executor: runs *encoded* binaries
+//!   (fetch → decode → execute), with DMEM/WMEM, three register files, and
+//!   per-instruction cycle + cache accounting. This is the correctness
+//!   oracle for generated code and the "hardware measurement" the learned
+//!   cost model trains against.
+//! * [`cache`] — set-associative L1/L2/L3 cache simulator (LRU).
+//! * [`timing`] — analytic kernel timing: estimates cycles from a loop-nest
+//!   profile without instruction-by-instruction replay. This is what the
+//!   auto-tuner calls thousands of times; the functional machine
+//!   cross-validates it on small kernels.
+//! * [`power`] — energy accounting (per-op-class + memory-hierarchy energy)
+//!   feeding the PPA model in [`crate::asic`].
+
+pub mod cache;
+pub mod machine;
+pub mod power;
+pub mod timing;
+
+use crate::ir::dtype::DType;
+
+/// Machine configuration: the accelerator (or baseline platform) being
+/// simulated. All PPA-relevant constants live here and in
+/// `asic::params`.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub name: String,
+    /// Vector register width in bits (VLEN). 256 = 8 f32 lanes.
+    pub vlen_bits: usize,
+    /// Whether the RVV subset is available (the CPU baseline is scalar-only
+    /// in vector terms — it models a generic OoO core).
+    pub has_vector: bool,
+    /// Activation memory size in bytes.
+    pub dmem_bytes: usize,
+    /// Weight memory size in bytes.
+    pub wmem_bytes: usize,
+    /// Clock frequency in MHz.
+    pub freq_mhz: f64,
+    /// Scalar instructions issued per cycle (models superscalar baselines).
+    pub issue_width: f64,
+    /// Parallel vector pipelines (the ASIC's MAC-array width beyond one
+    /// VLEN lane group; the paper never discloses its array size — this is
+    /// the knob DESIGN.md §Substitutions calibrates).
+    pub vector_pipes: f64,
+    /// Cache hierarchy (L1, L2, L3) — empty entries allowed.
+    pub caches: Vec<cache::CacheParams>,
+    /// DRAM / backing-store access latency in cycles.
+    pub mem_latency: u64,
+    /// Datapath precision the MAC arrays are built for (area/energy scale).
+    pub native_dtype: DType,
+}
+
+impl MachineConfig {
+    /// Vector lanes for f32 elements.
+    pub fn lanes(&self) -> usize {
+        self.vlen_bits / 32
+    }
+
+    /// The XgenSilicon accelerator configuration (our ASIC target):
+    /// VLEN=256 RVV, 1 MiB DMEM, 16 MiB WMEM default, 800 MHz, small L1+L2.
+    pub fn xgen_asic() -> MachineConfig {
+        MachineConfig {
+            name: "XgenSilicon ASIC".into(),
+            vlen_bits: 256,
+            has_vector: true,
+            dmem_bytes: 32 << 20,
+            wmem_bytes: 1 << 30,
+            freq_mhz: 1200.0,
+            issue_width: 1.0,
+            vector_pipes: 8.0,
+            caches: vec![
+                cache::CacheParams { name: "L1", size: 32 << 10, line: 64, assoc: 4, latency: 2, energy_pj: 5.0 },
+                cache::CacheParams { name: "L2", size: 512 << 10, line: 64, assoc: 8, latency: 12, energy_pj: 25.0 },
+            ],
+            // DMEM/WMEM are on-chip SRAM (the case study's 30 MB DMEM):
+            // the backing store behind L2 is scratchpad, not DRAM.
+            mem_latency: 25,
+            native_dtype: DType::I8,
+        }
+    }
+
+    /// The hand-designed ASIC baseline: same process, FP16 datapath, less
+    /// memory tuning (bigger, slower SRAMs; no L2 partitioning).
+    pub fn hand_asic() -> MachineConfig {
+        MachineConfig {
+            name: "Hand-designed ASIC".into(),
+            vlen_bits: 256,
+            has_vector: true,
+            dmem_bytes: 32 << 20,
+            wmem_bytes: 1 << 30,
+            freq_mhz: 600.0,
+            issue_width: 1.0,
+            vector_pipes: 4.0,
+            caches: vec![
+                // Conservatively-oversized SRAMs (no cross-stack cost model
+                // to size them tightly): more leakage, more pJ per access.
+                cache::CacheParams { name: "L1", size: 64 << 10, line: 64, assoc: 2, latency: 3, energy_pj: 9.0 },
+                cache::CacheParams { name: "L2", size: 1 << 20, line: 64, assoc: 4, latency: 16, energy_pj: 40.0 },
+            ],
+            mem_latency: 50,
+            native_dtype: DType::F16,
+        }
+    }
+
+    /// Off-the-shelf CPU baseline (Cortex-A78-like): wide OoO scalar core,
+    /// big caches, high clock, FP32 datapath, no custom vector NN path.
+    pub fn cpu_a78() -> MachineConfig {
+        MachineConfig {
+            name: "Off-the-shelf CPU".into(),
+            vlen_bits: 128,
+            has_vector: false,
+            dmem_bytes: 1 << 30,
+            wmem_bytes: 1 << 30,
+            freq_mhz: 2800.0,
+            issue_width: 3.0,
+            vector_pipes: 1.0,
+            caches: vec![
+                cache::CacheParams { name: "L1", size: 64 << 10, line: 64, assoc: 4, latency: 4, energy_pj: 12.0 },
+                cache::CacheParams { name: "L2", size: 512 << 10, line: 64, assoc: 8, latency: 14, energy_pj: 40.0 },
+                cache::CacheParams { name: "L3", size: 4 << 20, line: 64, assoc: 16, latency: 40, energy_pj: 120.0 },
+            ],
+            mem_latency: 200,
+            native_dtype: DType::F32,
+        }
+    }
+}
+
+/// Address-space layout of the accelerator.
+pub mod layout {
+    /// DMEM (activations) base address.
+    pub const DMEM_BASE: u32 = 0x0000_0000;
+    /// WMEM (weights) base address.
+    pub const WMEM_BASE: u32 = 0x4000_0000;
+    /// Stack top (grows down inside DMEM).
+    pub const STACK_TOP: u32 = 0x3FFF_FF00;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_configs_sane() {
+        let x = MachineConfig::xgen_asic();
+        assert_eq!(x.lanes(), 8);
+        assert!(x.has_vector);
+        let c = MachineConfig::cpu_a78();
+        assert!(!c.has_vector);
+        assert!(c.issue_width > 1.0);
+        assert_eq!(c.caches.len(), 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! Energy accounting: per-op-class switching energy (scaled by datapath
+//! precision) + memory-hierarchy energy + static leakage. Feeds the PPA
+//! model (`asic::ppa`) that reproduces the paper's power columns.
+//!
+//! First-order, constants documented inline; DESIGN.md §Substitutions
+//! explains why relative (not absolute) fidelity is the goal.
+
+use crate::ir::dtype::DType;
+use crate::isa::OpClass;
+use crate::sim::MachineConfig;
+
+/// Base dynamic energy per operation in picojoules for a 32-bit datapath at
+/// a mature planar node (ballpark: Horowitz ISSCC'14 scaled).
+pub fn base_energy_pj(class: OpClass) -> f64 {
+    match class {
+        OpClass::Alu => 0.5,
+        OpClass::Mul => 3.0,
+        OpClass::Div => 12.0,
+        OpClass::Branch | OpClass::Jump => 0.4,
+        OpClass::Load | OpClass::Store => 1.0, // port energy; array energy in cache model
+        OpClass::FAlu => 1.2,
+        OpClass::FMul => 3.5,
+        OpClass::FDiv => 14.0,
+        OpClass::FMa => 4.2,
+        OpClass::FCustom => 6.0,
+        OpClass::VSet => 0.3,
+        OpClass::VLoad | OpClass::VStore => 4.0, // 8 lanes moving
+        OpClass::VAlu => 2.8,   // 8 lanes x ~0.35
+        OpClass::VMul => 9.0,
+        OpClass::VFma => 12.0,  // 8 FMA lanes
+        OpClass::VRed => 4.0,
+    }
+}
+
+/// Switching-energy scale factor vs the 32-bit datapath for a precision:
+/// multiplier energy scales ~quadratically with operand width, adders and
+/// wires ~linearly; we use an intermediate exponent of 1.6 (empirically
+/// between the two) and clamp Binary to the XNOR-popcount floor.
+pub fn precision_energy_scale(dt: DType) -> f64 {
+    let bits = dt.bits() as f64;
+    ((bits / 32.0).powf(1.6)).max(0.01)
+}
+
+/// Dynamic energy of an instruction mix at a given datapath precision.
+pub fn dynamic_energy_pj(counts: &[(OpClass, u64)], dt: DType) -> f64 {
+    let scale = precision_energy_scale(dt);
+    counts
+        .iter()
+        .map(|(c, n)| {
+            let arith = matches!(
+                c,
+                OpClass::Mul
+                    | OpClass::FMul
+                    | OpClass::FMa
+                    | OpClass::VMul
+                    | OpClass::VFma
+                    | OpClass::VAlu
+                    | OpClass::FAlu
+            );
+            let s = if arith { scale } else { 1.0 };
+            *n as f64 * base_energy_pj(*c) * s
+        })
+        .sum()
+}
+
+/// Static (leakage) power in milliwatts — proportional to on-die SRAM and
+/// datapath width.
+pub fn static_power_mw(cfg: &MachineConfig) -> f64 {
+    let sram_kb = cfg.caches.iter().map(|c| c.size).sum::<usize>() as f64 / 1024.0;
+    // ~12 µW/KB SRAM leakage + 10 mW core floor (scaled up for wide OoO).
+    0.012 * sram_kb + 10.0 * cfg.issue_width
+}
+
+/// Average power given total dynamic energy (pJ) over a runtime (seconds).
+pub fn average_power_mw(cfg: &MachineConfig, dynamic_pj: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return static_power_mw(cfg);
+    }
+    dynamic_pj * 1e-12 / seconds * 1e3 + static_power_mw(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_scaling_monotone() {
+        let e32 = precision_energy_scale(DType::F32);
+        let e8 = precision_energy_scale(DType::I8);
+        let e1 = precision_energy_scale(DType::Binary);
+        assert!((e32 - 1.0).abs() < 1e-12);
+        assert!(e8 < e32 / 4.0, "int8 should save >4x on arith energy");
+        assert!(e1 < e8);
+        assert!(e1 >= 0.01);
+    }
+
+    #[test]
+    fn quantized_mix_cheaper() {
+        let mix = vec![(OpClass::VFma, 1_000_000u64), (OpClass::VLoad, 100_000u64)];
+        let fp32 = dynamic_energy_pj(&mix, DType::F32);
+        let int8 = dynamic_energy_pj(&mix, DType::I8);
+        assert!(int8 < fp32 * 0.35, "{int8} vs {fp32}");
+    }
+
+    #[test]
+    fn average_power_reasonable_range() {
+        let cfg = MachineConfig::xgen_asic();
+        // 10 ms inference burning 3 mJ -> 300 mW dynamic + leakage.
+        let p = average_power_mw(&cfg, 3e9, 0.01);
+        assert!((300.0..400.0).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn cpu_leaks_more_than_asic() {
+        assert!(
+            static_power_mw(&MachineConfig::cpu_a78())
+                > static_power_mw(&MachineConfig::xgen_asic())
+        );
+    }
+}

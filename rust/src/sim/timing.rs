@@ -1,0 +1,194 @@
+//! Analytic kernel timing: estimates execution cycles from a loop-nest
+//! profile instead of instruction-by-instruction replay.
+//!
+//! Zoo-scale models execute billions of MACs per inference — replaying them
+//! through the functional machine during auto-tuning would dominate compile
+//! time. The timing model walks the loop-nest structure that codegen emits,
+//! charging per-class issue costs plus memory latencies from the analytic
+//! cache-hit-rate model (paper §3.7, implemented in `cost::cache_model` and
+//! shared here). The functional machine cross-validates this estimator on
+//! small kernels (see `rust/tests/`).
+
+use crate::isa::OpClass;
+use crate::sim::MachineConfig;
+
+/// Per-iteration instruction mix of one loop body (leaf work).
+#[derive(Debug, Clone, Default)]
+pub struct InstrMix {
+    pub counts: Vec<(OpClass, u64)>,
+}
+
+impl InstrMix {
+    pub fn add(&mut self, class: OpClass, n: u64) {
+        for (c, cnt) in self.counts.iter_mut() {
+            if *c == class {
+                *cnt += n;
+                return;
+            }
+        }
+        self.counts.push((class, n));
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|(_, n)| n).sum()
+    }
+}
+
+/// A loop nest: `trip` iterations of (body instruction mix + child loops).
+#[derive(Debug, Clone, Default)]
+pub struct LoopNest {
+    pub trip: u64,
+    pub body: InstrMix,
+    pub children: Vec<LoopNest>,
+    /// Loop-control overhead instructions per iteration (index bump, branch,
+    /// address updates). Codegen sets this from the emitted structure;
+    /// unrolling divides it.
+    pub overhead: u64,
+}
+
+impl LoopNest {
+    pub fn leaf(trip: u64, body: InstrMix, overhead: u64) -> LoopNest {
+        LoopNest { trip, body, children: Vec::new(), overhead }
+    }
+
+    /// Total dynamic instruction count.
+    pub fn instr_count(&self) -> u64 {
+        let inner: u64 = self.children.iter().map(|c| c.instr_count()).sum();
+        self.trip * (self.body.total() + self.overhead + inner)
+    }
+}
+
+/// Memory-behavior summary of a kernel at a given schedule, produced by
+/// codegen from tile sizes and tensor shapes. Hit rates come from the
+/// cache-aware model (paper eq. 16).
+#[derive(Debug, Clone)]
+pub struct MemProfile {
+    /// Total bytes loaded (after tiling reuse).
+    pub load_bytes: u64,
+    /// Total bytes stored.
+    pub store_bytes: u64,
+    /// Estimated hit rate per cache level (weighted model, eq. 16).
+    pub level_hit_rates: Vec<f64>,
+}
+
+/// Issue cost (cycles at issue) per op class for the ASIC pipeline.
+pub fn issue_cycles(cfg: &MachineConfig, class: OpClass, lmul: usize) -> f64 {
+    let l = lmul.max(1) as f64;
+    match class {
+        OpClass::Alu => 1.0 / cfg.issue_width,
+        OpClass::Branch | OpClass::Jump => 1.0 / cfg.issue_width,
+        OpClass::Mul => 1.0,
+        OpClass::Div => 20.0,
+        OpClass::Load | OpClass::Store => 1.0, // latency added via MemProfile
+        OpClass::FAlu => 1.0,
+        OpClass::FMul => 1.0,
+        OpClass::FDiv => 16.0,
+        OpClass::FMa => 1.0,
+        OpClass::FCustom => 8.0,
+        OpClass::VSet => 1.0,
+        // One beat per register in the group, spread over parallel pipes.
+        OpClass::VLoad | OpClass::VStore => l / cfg.vector_pipes.max(1.0),
+        OpClass::VAlu => l / cfg.vector_pipes.max(1.0),
+        OpClass::VMul => l / cfg.vector_pipes.max(1.0),
+        OpClass::VFma => l / cfg.vector_pipes.max(1.0),
+        OpClass::VRed => 4.0 + l / cfg.vector_pipes.max(1.0),
+    }
+}
+
+/// Estimate total cycles for a kernel: compute cycles from the loop nest +
+/// memory stall cycles from the profile.
+pub fn estimate_cycles(cfg: &MachineConfig, nest: &LoopNest, mem: &MemProfile, lmul: usize) -> f64 {
+    let compute = nest_cycles(cfg, nest, lmul);
+    let stalls = memory_stall_cycles(cfg, mem);
+    // Simple overlap model: the in-order pipeline hides a fraction of memory
+    // latency under compute (deep-enough load queue); the rest stalls.
+    const OVERLAP: f64 = 0.6;
+    compute + stalls * (1.0 - OVERLAP)
+}
+
+fn nest_cycles(cfg: &MachineConfig, nest: &LoopNest, lmul: usize) -> f64 {
+    let body: f64 = nest
+        .body
+        .counts
+        .iter()
+        .map(|(c, n)| *n as f64 * issue_cycles(cfg, *c, lmul))
+        .sum();
+    let inner: f64 = nest.children.iter().map(|c| nest_cycles(cfg, c, lmul)).sum();
+    nest.trip as f64 * (body + nest.overhead as f64 / cfg.issue_width + inner)
+}
+
+/// Average memory access latency given weighted level hit rates (eq. 16) and
+/// the resulting stall cycles for the kernel's traffic.
+pub fn memory_stall_cycles(cfg: &MachineConfig, mem: &MemProfile) -> f64 {
+    let line = cfg.caches.first().map(|c| c.line).unwrap_or(64) as f64;
+    let accesses = (mem.load_bytes + mem.store_bytes) as f64 / line;
+    let mut remaining = 1.0;
+    let mut avg_latency = 0.0;
+    for (i, cache) in cfg.caches.iter().enumerate() {
+        let hr = mem.level_hit_rates.get(i).copied().unwrap_or(0.0);
+        avg_latency += remaining * hr * cache.latency as f64;
+        remaining *= 1.0 - hr;
+    }
+    avg_latency += remaining * cfg.mem_latency as f64;
+    accesses * avg_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::xgen_asic()
+    }
+
+    fn fma_body(n: u64) -> InstrMix {
+        let mut m = InstrMix::default();
+        m.add(OpClass::VFma, n);
+        m
+    }
+
+    #[test]
+    fn instr_count_nested() {
+        let inner = LoopNest::leaf(10, fma_body(2), 2);
+        let outer = LoopNest { trip: 5, body: InstrMix::default(), children: vec![inner], overhead: 3 };
+        // 5 * (3 + 10*(2+2)) = 215
+        assert_eq!(outer.instr_count(), 215);
+    }
+
+    #[test]
+    fn more_work_more_cycles() {
+        let mem = MemProfile { load_bytes: 0, store_bytes: 0, level_hit_rates: vec![1.0, 0.0] };
+        let small = estimate_cycles(&cfg(), &LoopNest::leaf(10, fma_body(1), 2), &mem, 1);
+        let big = estimate_cycles(&cfg(), &LoopNest::leaf(100, fma_body(1), 2), &mem, 1);
+        assert!(big > 9.0 * small);
+    }
+
+    #[test]
+    fn unrolling_reduces_overhead_cycles() {
+        let mem = MemProfile { load_bytes: 0, store_bytes: 0, level_hit_rates: vec![1.0] };
+        // Same work, unrolled x4: quarter the trips, 4x body, same overhead/iter.
+        let rolled = LoopNest::leaf(100, fma_body(1), 3);
+        let unrolled = LoopNest::leaf(25, fma_body(4), 3);
+        let c1 = estimate_cycles(&cfg(), &rolled, &mem, 1);
+        let c2 = estimate_cycles(&cfg(), &unrolled, &mem, 1);
+        assert!(c2 < c1, "{c2} vs {c1}");
+    }
+
+    #[test]
+    fn better_hit_rate_fewer_stalls() {
+        let hot = MemProfile { load_bytes: 1 << 20, store_bytes: 0, level_hit_rates: vec![0.95, 0.8] };
+        let cold = MemProfile { load_bytes: 1 << 20, store_bytes: 0, level_hit_rates: vec![0.5, 0.5] };
+        assert!(
+            memory_stall_cycles(&cfg(), &hot) < memory_stall_cycles(&cfg(), &cold)
+        );
+    }
+
+    #[test]
+    fn lmul_scales_vector_issue() {
+        // Beats scale with the register group and spread over the pipes.
+        let pipes = cfg().vector_pipes;
+        assert_eq!(issue_cycles(&cfg(), OpClass::VFma, 4), 4.0 / pipes);
+        assert_eq!(issue_cycles(&cfg(), OpClass::VFma, 1), 1.0 / pipes);
+        assert!(issue_cycles(&cfg(), OpClass::VFma, 4) > issue_cycles(&cfg(), OpClass::VFma, 1));
+    }
+}

@@ -1,0 +1,98 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program name).
+    /// `option_keys` lists keys that consume a following value.
+    pub fn parse(argv: &[String], option_keys: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if option_keys.contains(&rest) && i + 1 < argv.len() {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            &sv(&["compile", "--model", "zoo:resnet50", "--trials=40", "--verbose", "out"]),
+            &["model", "trials"],
+        );
+        assert_eq!(a.positional, vec!["compile", "out"]);
+        assert_eq!(a.opt("model"), Some("zoo:resnet50"));
+        assert_eq!(a.opt_usize("trials", 0), 40);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_key_without_value_is_flag() {
+        let a = Args::parse(&sv(&["--fast", "x"]), &["model"]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]);
+        assert_eq!(a.opt_or("model", "zoo:mlp"), "zoo:mlp");
+        assert_eq!(a.opt_f64("lr", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for all compiler stages.
+#[derive(Debug)]
+pub enum Error {
+    /// Model loading / JSON / manifest problems.
+    Frontend(String),
+    /// Shape inference or graph-consistency failures.
+    Shape(String),
+    /// Optimization-pass failures.
+    Opt(String),
+    /// Quantization / calibration failures.
+    Quant(String),
+    /// Code-generation failures.
+    Codegen(String),
+    /// Memory planning / register allocation failures.
+    Backend(String),
+    /// Validation-stage rejections (ISA or memory). Contribution 3: these are
+    /// compile-time errors, never runtime surprises.
+    Validation(String),
+    /// Simulator faults (illegal instruction, OOB access, ...).
+    Sim(String),
+    /// Auto-tuning failures.
+    Tune(String),
+    /// PJRT runtime / artifact problems.
+    Runtime(String),
+    /// I/O wrapper.
+    Io(std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Frontend(m) => write!(f, "frontend: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Opt(m) => write!(f, "opt: {m}"),
+            Error::Quant(m) => write!(f, "quant: {m}"),
+            Error::Codegen(m) => write!(f, "codegen: {m}"),
+            Error::Backend(m) => write!(f, "backend: {m}"),
+            Error::Validation(m) => write!(f, "validation: {m}"),
+            Error::Sim(m) => write!(f, "sim: {m}"),
+            Error::Tune(m) => write!(f, "tune: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

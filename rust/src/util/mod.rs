@@ -1,0 +1,11 @@
+//! Substrates the offline build environment lacks: error type, JSON,
+//! deterministic PRNG, CLI argument parsing, statistics, ASCII tables, and a
+//! minimal property-testing harness used across the test suite.
+
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,75 @@
+//! Minimal property-testing harness (no `proptest` crate offline).
+//!
+//! Runs a property over `n` seeded random cases; on failure reports the
+//! first failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use xgenc::util::proptest::forall;
+//! forall("sum is commutative", 100, |rng| {
+//!     let (a, b) = (rng.range(-100, 100), rng.range(-100, 100));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded RNGs; panics (test failure) with the seed
+/// and message of the first counterexample.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Fixed stream of case seeds -> reproducible across runs and platforms.
+    let mut meta = Rng::new(0xC0FFEE ^ hash_name(name));
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("x*0==0", 50, |rng| {
+            let x = rng.range(-1000, 1000);
+            if x * 0 == 0 { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_counterexample() {
+        forall("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_case_seeds() {
+        let mut seen1 = Vec::new();
+        forall("collect", 5, |rng| {
+            seen1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        forall("collect", 5, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

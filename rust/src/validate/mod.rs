@@ -1,0 +1,266 @@
+//! Validation-driven compilation (paper §3.6, contribution 3): ISA
+//! compliance and memory-constraint checks run *inside* the pipeline, before
+//! anything is emitted — validation failures are compile errors, never
+//! runtime surprises on silicon.
+
+use std::collections::BTreeSet;
+
+use crate::backend::memplan::{MemPlan, ALIGN};
+use crate::backend::regalloc;
+use crate::ir::Graph;
+use crate::isa::encode::{self, format_of, Format};
+use crate::isa::{decode, Instr, Op};
+use crate::sim::MachineConfig;
+use crate::util::error::{Error, Result};
+
+/// A validation report: every check with its outcome.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub checks: Vec<(String, bool, String)>,
+    pub instructions_checked: usize,
+}
+
+impl Report {
+    fn check(&mut self, name: &str, ok: bool, detail: String) {
+        self.checks.push((name.to_string(), ok, detail));
+    }
+
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|(_, ok, _)| *ok)
+    }
+
+    /// "100% ISA validation passed" line for reports (case study 1).
+    pub fn summary(&self) -> String {
+        let failed: Vec<&(String, bool, String)> =
+            self.checks.iter().filter(|(_, ok, _)| !ok).collect();
+        if failed.is_empty() {
+            format!(
+                "{} instructions, 100% ISA validation passed ({} checks)",
+                self.instructions_checked,
+                self.checks.len()
+            )
+        } else {
+            format!(
+                "VALIDATION FAILED: {}",
+                failed
+                    .iter()
+                    .map(|(n, _, d)| format!("{n}: {d}"))
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            )
+        }
+    }
+
+    pub fn into_result(self) -> Result<Report> {
+        if self.passed() {
+            Ok(self)
+        } else {
+            Err(Error::Validation(self.summary()))
+        }
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.summary())
+    }
+}
+
+/// ISA validation (paper: encoding correctness, register usage, immediate
+/// ranges, instruction legality).
+pub fn validate_isa(prog: &[Instr], mach: &MachineConfig) -> Report {
+    let mut r = Report { instructions_checked: prog.len(), ..Default::default() };
+    let legal: BTreeSet<Op> = Op::all().iter().copied().collect();
+
+    // 1. Every opcode is one of the 61 legal instructions.
+    let illegal: Vec<&Instr> = prog.iter().filter(|i| !legal.contains(&i.op)).collect();
+    r.check("isa.legality", illegal.is_empty(), format!("{} illegal ops", illegal.len()));
+
+    // 2. Vector instructions only on vector-capable targets.
+    let uses_vector = prog.iter().any(|i| {
+        matches!(format_of(i.op), Format::VArith | Format::VMem | Format::VSetF)
+    });
+    r.check(
+        "isa.vector_capability",
+        !uses_vector || mach.has_vector,
+        format!("vector code on '{}' (has_vector={})", mach.name, mach.has_vector),
+    );
+
+    // 3. Immediate ranges + register ids via the encoder's checks.
+    let mut bad_imm = 0usize;
+    for i in prog {
+        if encode::check_imm(i).is_err() {
+            bad_imm += 1;
+        }
+    }
+    r.check("isa.imm_ranges", bad_imm == 0, format!("{bad_imm} out-of-range immediates"));
+
+    // 4. Encoding correctness: encode∘decode round-trips every instruction.
+    let mut bad_rt = 0usize;
+    for i in prog {
+        match encode::encode(i) {
+            Ok(w) => match decode::decode(w) {
+                Ok(d) => {
+                    if d.op != i.op {
+                        bad_rt += 1;
+                    }
+                }
+                Err(_) => bad_rt += 1,
+            },
+            Err(_) => bad_rt += 1,
+        }
+    }
+    r.check("isa.encoding_roundtrip", bad_rt == 0, format!("{bad_rt} round-trip failures"));
+
+    // 5. Register pressure within the three files (no spills possible).
+    let p = regalloc::analyze_pressure(prog);
+    r.check(
+        "isa.register_pressure",
+        p.int_regs <= 31 && p.float_regs <= 32 && p.vector_regs <= 32,
+        format!("{p:?}"),
+    );
+
+    // 6. Branch targets land inside the program, on instruction boundaries.
+    let mut bad_branch = 0usize;
+    for (pos, i) in prog.iter().enumerate() {
+        if matches!(format_of(i.op), Format::B | Format::J) {
+            let target = pos as i64 + i.imm as i64 / 4;
+            if i.imm % 4 != 0 || target < 0 || target > prog.len() as i64 {
+                bad_branch += 1;
+            }
+        }
+    }
+    r.check("isa.branch_targets", bad_branch == 0, format!("{bad_branch} wild branches"));
+    r
+}
+
+/// Memory validation (paper: DMEM/WMEM size limits, alignment, OOB).
+pub fn validate_memory(g: &Graph, plan: &MemPlan, mach: &MachineConfig) -> Report {
+    let mut r = Report::default();
+
+    // 1. DMEM capacity.
+    r.check(
+        "mem.dmem_capacity",
+        (plan.dmem_peak as usize) <= mach.dmem_bytes,
+        format!("peak {} / {} bytes", plan.dmem_peak, mach.dmem_bytes),
+    );
+
+    // 2. WMEM capacity.
+    r.check(
+        "mem.wmem_capacity",
+        (plan.wmem_used as usize) <= mach.wmem_bytes,
+        format!("used {} / {} bytes", plan.wmem_used, mach.wmem_bytes),
+    );
+
+    // 3. Alignment of every placement.
+    let misaligned = plan
+        .dmem
+        .values()
+        .chain(plan.wmem.values())
+        .filter(|p| p.addr % ALIGN != 0)
+        .count();
+    r.check("mem.alignment", misaligned == 0, format!("{misaligned} misaligned buffers"));
+
+    // 4. Every graph tensor is placed (no dangling addresses -> no OOB from
+    //    unplaced access).
+    let mut unplaced = 0usize;
+    for n in &g.nodes {
+        for t in n.inputs.iter().chain(&n.outputs) {
+            if plan.addr_of(*t).is_err() {
+                unplaced += 1;
+            }
+        }
+    }
+    r.check("mem.all_placed", unplaced == 0, format!("{unplaced} unplaced tensors"));
+
+    // 5. Placements stay within their regions (no buffer extends past
+    //    capacity).
+    let dmem_oob = plan
+        .dmem
+        .values()
+        .filter(|p| (p.addr + p.bytes) as usize > mach.dmem_bytes)
+        .count();
+    let wmem_oob = plan
+        .wmem
+        .values()
+        .filter(|p| (p.addr + p.bytes) as usize > mach.wmem_bytes)
+        .count();
+    r.check(
+        "mem.bounds",
+        dmem_oob == 0 && wmem_oob == 0,
+        format!("{dmem_oob} DMEM / {wmem_oob} WMEM out-of-bounds buffers"),
+    );
+    r
+}
+
+/// Full validation stage: ISA + memory, merged report.
+pub fn validate_all(g: &Graph, prog: &[Instr], plan: &MemPlan, mach: &MachineConfig) -> Report {
+    let mut r = validate_isa(prog, mach);
+    let m = validate_memory(g, plan, mach);
+    r.checks.extend(m.checks);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::memplan;
+    use crate::codegen::graphgen::{self, Schedules};
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::DType;
+    use crate::isa::Instr;
+
+    #[test]
+    fn clean_program_passes_all_checks() {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let prog = graphgen::lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        let r = validate_all(&g, &prog.asm, &plan, &mach);
+        assert!(r.passed(), "{}", r.summary());
+        assert!(r.summary().contains("100% ISA validation passed"));
+    }
+
+    #[test]
+    fn rejects_vector_code_on_scalar_target() {
+        let mut i = Instr::new(Op::Vsetvli);
+        i.rd = 5;
+        i.rs1 = 6;
+        let r = validate_isa(&[i], &MachineConfig::cpu_a78());
+        assert!(!r.passed());
+        assert!(r.summary().contains("vector"));
+    }
+
+    #[test]
+    fn rejects_bad_immediates() {
+        let bad = Instr::i(Op::Addi, 1, 0, 40_000);
+        let r = validate_isa(&[bad], &MachineConfig::xgen_asic());
+        assert!(!r.passed());
+    }
+
+    #[test]
+    fn rejects_wild_branches() {
+        let bad = Instr::b(Op::Beq, 1, 2, -4096); // way before program start
+        let r = validate_isa(&[bad], &MachineConfig::xgen_asic());
+        assert!(!r.passed());
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "isa.branch_targets" && !ok));
+    }
+
+    #[test]
+    fn memory_overflow_reported() {
+        let g = prepare(model_zoo::mlp(&[512, 512, 512], 4)).unwrap();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let mut tiny = MachineConfig::xgen_asic();
+        tiny.dmem_bytes = 1 << 10;
+        let r = validate_memory(&g, &plan, &tiny);
+        assert!(!r.passed());
+        assert!(r.summary().contains("dmem_capacity"));
+    }
+
+    #[test]
+    fn into_result_errors_on_failure() {
+        let bad = Instr::i(Op::Addi, 1, 0, 99_999);
+        let r = validate_isa(&[bad], &MachineConfig::xgen_asic());
+        assert!(r.into_result().is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Cross-module integration: the full compile -> simulate -> verify loop on
+//! zoo models, plus end-to-end pipeline invariants.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::exec::Executor;
+use xgenc::ir::tensor::Tensor;
+use xgenc::isa::encode::encode_all;
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::sim::machine::Machine;
+use xgenc::ir::DType;
+
+/// Compile + simulate + compare against reference for a model.
+fn verify_model(graph: xgenc::ir::Graph, inputs: Vec<Tensor>, tol: f32) {
+    let mut session = CompileSession::new(CompileOptions::default());
+    let c = session.compile(&graph).unwrap();
+    assert!(c.validation.passed(), "{}", c.validation.summary());
+    let mut m = Machine::new(session.opts.mach.clone());
+    for (tid, init) in &c.graph.initializers {
+        m.write_f32_slice(c.plan.addr_of(*tid).unwrap(), &init.materialize().data)
+            .unwrap();
+    }
+    for (tid, t) in c.graph.inputs.iter().zip(&inputs) {
+        let base = c.plan.addr_of(*tid).unwrap();
+        if c.graph.info(*tid).dtype == DType::I32 {
+            for (i, v) in t.data.iter().enumerate() {
+                m.store_u32(base + (i * 4) as u32, *v as i32 as u32).unwrap();
+            }
+        } else {
+            m.write_f32_slice(base, &t.data).unwrap();
+        }
+    }
+    m.max_instret = 4_000_000_000;
+    m.run(&encode_all(&c.asm).unwrap()).unwrap();
+    let want = Executor::new().run(&c.graph, &inputs).unwrap();
+    for (out, w) in c.graph.outputs.iter().zip(&want) {
+        let got = m
+            .read_f32_slice(c.plan.addr_of(*out).unwrap(), w.numel())
+            .unwrap();
+        for (i, (a, b)) in got.iter().zip(&w.data).enumerate() {
+            assert!(
+                (a - b).abs() < tol * b.abs().max(1.0),
+                "elem {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resnet_cifar_full_pipeline_numerics() {
+    let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+    let mut x = Tensor::zeros(&[1, 3, 32, 32]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i * 7 % 19) as f32 - 9.0) / 9.0;
+    }
+    verify_model(g, vec![x], 2e-2);
+}
+
+#[test]
+fn vit_tiny_full_pipeline_numerics() {
+    let g = prepare(model_zoo::vit_tiny(1)).unwrap();
+    let mut x = Tensor::zeros(&[1, 3, 32, 32]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i * 11 % 23) as f32 - 11.0) / 11.0;
+    }
+    verify_model(g, vec![x], 5e-2);
+}
+
+#[test]
+fn bert_tiny_full_pipeline_numerics() {
+    let g = prepare(model_zoo::bert_tiny(1, 8)).unwrap();
+    let ids = Tensor::new(vec![1, 8], (0..8).map(|i| (i * 31 % 100) as f32).collect());
+    verify_model(g, vec![ids], 5e-2);
+}
+
+#[test]
+fn paper_models_compile_validate_and_report_ppa() {
+    // The four Table 3 models at full scale: compile + validate + PPA.
+    for (name, g) in model_zoo::paper_models() {
+        let g = prepare(g).unwrap();
+        let mut session = CompileSession::new(CompileOptions {
+            precision: DType::I8,
+            ..Default::default()
+        });
+        let c = session.compile(&g).unwrap();
+        assert!(c.validation.passed(), "{name}");
+        // Absolute scale differs from the paper's silicon (our vector
+        // engine is far narrower than their undisclosed MAC array; the
+        // relative structure is what the benches check).
+        assert!(c.ppa.latency_ms > 0.0 && c.ppa.latency_ms < 5000.0, "{name}: {}", c.ppa.latency_ms);
+        assert!(c.asm.len() > 1000, "{name}");
+    }
+}
+
+#[test]
+fn autotuned_compile_beats_default_on_measured_cycles() {
+    use xgenc::autotune::{Tuner, TunerOptions};
+    use xgenc::cost::features::KernelSig;
+    use xgenc::cost::measure;
+    use xgenc::codegen::KernelConfig;
+    use xgenc::sim::MachineConfig;
+    let mach = MachineConfig::xgen_asic();
+    let tuner = Tuner::new(mach.clone());
+    let sig = KernelSig::matmul(128, 256, 512);
+    let r = tuner.tune(&sig, &TunerOptions { trials: 80, ..Default::default() }, None);
+    let default_cost = measure(&mach, &sig, KernelConfig::default());
+    assert!(r.best_log_cycles <= default_cost, "{} vs {default_cost}", r.best_log_cycles);
+}

@@ -1,0 +1,149 @@
+//! Integration: the PJRT-executed AOT artifacts (JAX/Pallas, python-built)
+//! must agree with the pure-rust reference implementations. This is the
+//! cross-language contract at the heart of the three-layer architecture.
+//!
+//! Requires `make artifacts`; tests skip gracefully when absent.
+
+use xgenc::cost::learned::{LinearBackend, RustBackend};
+use xgenc::quant::calib;
+use xgenc::quant::qat::{QatState, BETA};
+use xgenc::quant::QParams;
+use xgenc::runtime::artifacts::{Artifacts, B, F, QAT_LANES, QAT_ROWS};
+use xgenc::util::rng::Rng;
+
+fn artifacts() -> Option<Artifacts> {
+    if !Artifacts::available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Artifacts::load().expect("artifact load"))
+}
+
+#[test]
+fn cost_predict_parity() {
+    let Some(a) = artifacts() else { return };
+    let mut rng = Rng::new(1);
+    let w: [f32; F] = std::array::from_fn(|_| rng.normal_f32());
+    let mut x = [[0f32; F]; B];
+    for row in x.iter_mut() {
+        for v in row.iter_mut() {
+            *v = rng.normal_f32();
+        }
+    }
+    let got = a.cost_predict(&w, &x).unwrap();
+    // Rust reference (f64).
+    let wd: [f64; F] = std::array::from_fn(|i| w[i] as f64);
+    let xd: Vec<[f64; F]> = x.iter().map(|r| std::array::from_fn(|i| r[i] as f64)).collect();
+    let want = RustBackend.predict(&wd, &xd);
+    for (g, w_) in got.iter().zip(&want) {
+        assert!((*g as f64 - w_).abs() < 1e-4, "{g} vs {w_}");
+    }
+}
+
+#[test]
+fn cost_train_parity() {
+    let Some(a) = artifacts() else { return };
+    let mut rng = Rng::new(2);
+    let w: [f32; F] = std::array::from_fn(|_| rng.normal_f32() * 0.1);
+    let v: [f32; F] = [0.0; F];
+    let mut x = [[0f32; F]; B];
+    let mut y = [0f32; B];
+    for (i, row) in x.iter_mut().enumerate() {
+        for val in row.iter_mut() {
+            *val = rng.normal_f32();
+        }
+        y[i] = rng.normal_f32();
+    }
+    let (w2, v2, loss) = a.cost_train(&w, &v, &x, &y, 0.01).unwrap();
+    let wd: [f64; F] = std::array::from_fn(|i| w[i] as f64);
+    let vd = [0f64; F];
+    let xd: Vec<[f64; F]> = x.iter().map(|r| std::array::from_fn(|i| r[i] as f64)).collect();
+    let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let (w2r, v2r, loss_r) = RustBackend.train_step(&wd, &vd, &xd, &yd, 0.01);
+    assert!((loss as f64 - loss_r).abs() < 1e-3 * loss_r.max(1.0), "{loss} vs {loss_r}");
+    for i in 0..F {
+        assert!((w2[i] as f64 - w2r[i]).abs() < 1e-4, "w[{i}]: {} vs {}", w2[i], w2r[i]);
+        assert!((v2[i] as f64 - v2r[i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn kl_calibration_parity() {
+    let Some(a) = artifacts() else { return };
+    let mut rng = Rng::new(3);
+    let mut hist = vec![0f32; 2048];
+    for _ in 0..30_000 {
+        let v = rng.normal_f32().abs() / 4.0;
+        let idx = ((v * 2048.0) as usize).min(2047);
+        hist[idx] += 1.0;
+    }
+    let (kls, best) = a.kl_calibrate(&hist).unwrap();
+    let (kls_r, best_r) = calib::kl_sweep(&hist);
+    assert_eq!(kls.len(), kls_r.len());
+    for (i, (g, w)) in kls.iter().zip(&kls_r).enumerate() {
+        assert!(
+            (*g as f64 - w).abs() < 1e-3 * w.abs().max(1e-3),
+            "kl[{i}]: {g} vs {w}"
+        );
+    }
+    assert_eq!(best, best_r, "argmin disagrees");
+}
+
+#[test]
+fn qat_step_parity() {
+    let Some(a) = artifacts() else { return };
+    let n = QAT_ROWS * QAT_LANES;
+    let mut rng = Rng::new(4);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+    let (scale, zp, lr) = (0.05f32, 2.0f32, 1e-3f32);
+    let (x_fq, dx, s2, z2, vs2, vz2) = a
+        .qat_step(&x, &g, scale, zp, 0.0, 0.0, lr, -128.0, 127.0)
+        .unwrap();
+    // Rust reference.
+    let mut st = QatState::new(QParams {
+        scale,
+        zero_point: zp,
+        dtype: xgenc::ir::DType::I8,
+    });
+    let (x_fq_r, dx_r) = st.step(&x, &g, lr);
+    for i in 0..n {
+        assert!((x_fq[i] - x_fq_r[i]).abs() < 1e-4, "x_fq[{i}]");
+        assert!((dx[i] - dx_r[i]).abs() < 1e-6, "dx[{i}]");
+    }
+    assert!((s2 - st.params.scale).abs() < 1e-4, "{s2} vs {}", st.params.scale);
+    assert!((z2 - st.params.zero_point).abs() < 1e-4);
+    assert!((vs2 - st.v_scale).abs() < 1e-3 * st.v_scale.abs().max(1.0));
+    assert!((vz2 - st.v_zp).abs() < 1e-3);
+    let _ = BETA;
+}
+
+#[test]
+fn pjrt_backend_trains_learned_model() {
+    let Some(a) = artifacts() else { return };
+    use xgenc::codegen::KernelConfig;
+    use xgenc::cost::features::KernelSig;
+    use xgenc::cost::learned::LearnedModel;
+    use xgenc::cost::{measure, CostModel};
+    use xgenc::runtime::artifacts::PjrtBackend;
+    use xgenc::sim::MachineConfig;
+
+    let mach = MachineConfig::xgen_asic();
+    let sig = KernelSig::matmul(128, 256, 512);
+    let backend = PjrtBackend { artifacts: std::sync::Arc::new(a) };
+    let mut m = LearnedModel::with_backend(Box::new(backend));
+    m.epochs_per_batch = 30;
+    for lmul in [1usize, 2, 4] {
+        for unroll in [1usize, 2, 4] {
+            for tn in [32usize, 128] {
+                let c = KernelConfig { lmul, unroll, tile_n: tn, ..Default::default() };
+                m.observe(&sig, c, measure(&mach, &sig, c));
+            }
+        }
+    }
+    // Predictions through the PJRT path should track measurements.
+    let c = KernelConfig::default();
+    let y = measure(&mach, &sig, c);
+    let p = m.predict(&sig, &[c])[0];
+    assert!((p - y).abs() < 2.0, "pjrt-trained prediction {p} vs measured {y}");
+}
