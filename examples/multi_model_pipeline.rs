@@ -1,7 +1,14 @@
 //! Case study 1 (paper §5.1): compile a vision-language pipeline — vision
 //! encoder + text encoder + decoder — into one bundle with unified WMEM
 //! consolidation, and report instructions / memory / validation.
+//!
+//! The bundle compiles with the parallel, cache-backed pipeline: kernel
+//! signatures are deduplicated across all three models and tuned once, and
+//! a second (warm) compile of the same bundle performs zero tuner searches.
 
+use std::sync::Arc;
+
+use xgenc::autotune::TuneCache;
 use xgenc::frontend::{model_zoo, prepare};
 use xgenc::pipeline::{multi_model, CompileOptions};
 
@@ -19,11 +26,36 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             g.weight_bytes() as f64 / (1024.0 * 1024.0)
         );
     }
-    let bundle = multi_model::compile_pipeline(&graphs, &CompileOptions::default())?;
+    let cache = Arc::new(TuneCache::new());
+    let opts = CompileOptions {
+        tune_trials: 8,
+        cache: Some(cache.clone()),
+        ..Default::default()
+    };
+    let bundle = multi_model::compile_pipeline(&graphs, &opts)?;
     println!("\n{}", bundle.summary());
     for m in &bundle.models {
         println!("  {}", m.summary());
     }
+
+    // Recompile the whole bundle against the warm cache: every signature
+    // hits, so the tuner never runs again.
+    let before = cache.stats();
+    let warm = multi_model::compile_pipeline(&graphs, &opts)?;
+    let delta = cache.stats().delta_since(&before);
+    println!("\nwarm recompile: {}", warm.summary());
+    for m in &warm.models {
+        println!("  {}", m.summary());
+    }
+    assert_eq!(delta.misses, 0, "warm-cache compile must not invoke the tuner");
+    assert!(
+        warm.models.iter().all(|m| m.validation.passed()),
+        "warm-cache compile must still pass validation"
+    );
+    println!(
+        "warm-cache check OK: 0 tuner searches, {} cache hits, {:.1}s search saved",
+        delta.hits, delta.tune_seconds_saved
+    );
     println!(
         "\npaper case study 1: 49,832 instructions, 980 MB WMEM consolidated from 1.2 GB, 100% ISA validation"
     );

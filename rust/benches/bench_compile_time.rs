@@ -1,9 +1,16 @@
 //! Figure 7: compilation time scaling with model size (paper: 1-45 s,
-//! "scales linearly with model size").
+//! "scales linearly with model size") — plus the tuning-cache trajectory
+//! metric: cold vs warm-cache compile wall time, emitted to
+//! `BENCH_compile_time.json` so future PRs can track the speedup.
 
+use std::sync::Arc;
 use std::time::Instant;
+
+use xgenc::autotune::TuneCache;
 use xgenc::frontend::{model_zoo, prepare};
 use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::runtime::store;
+use xgenc::util::json::Json;
 use xgenc::util::stats::linreg;
 use xgenc::util::table::{f, Table};
 
@@ -15,6 +22,7 @@ fn main() {
     // MLP family sweep + the zoo models.
     let mut sizes = Vec::new();
     let mut times = Vec::new();
+    let mut sweep_rows = Vec::new();
     let mut cases: Vec<(String, xgenc::ir::Graph)> = vec![
         ("mlp-1MB".into(), model_zoo::mlp(&[512, 512, 256], 1)),
         ("mlp-8MB".into(), model_zoo::mlp(&[1024, 1024, 1024, 512], 1)),
@@ -36,7 +44,13 @@ fn main() {
         let c = s.compile(&g).unwrap();
         let secs = t0.elapsed().as_secs_f64();
         assert!(c.validation.passed());
-        t.row(&[name, f(mb, 1), format!("{}", g.nodes.len()), f(secs, 2)]);
+        t.row(&[name.clone(), f(mb, 1), format!("{}", g.nodes.len()), f(secs, 2)]);
+        sweep_rows.push(Json::obj(vec![
+            ("model", Json::str_(&name)),
+            ("weights_mb", Json::Num(mb)),
+            ("nodes", Json::Num(g.nodes.len() as f64)),
+            ("compile_s", Json::Num(secs)),
+        ]));
         sizes.push(mb);
         times.push(secs);
     }
@@ -44,4 +58,64 @@ fn main() {
     let (slope, intercept, r2) = linreg(&sizes, &times);
     println!("\nlinear fit: t = {slope:.4} * MB + {intercept:.2}  (r2 = {r2:.3})");
     println!("paper reference: 1-3 s small, 3-8 s medium, 8-30 s large, linear scaling");
+
+    // -- Cold vs warm tuning cache (the compile-service trajectory metric) --
+    let cache = Arc::new(TuneCache::new());
+    let opts = CompileOptions {
+        tune_trials: 24,
+        cache: Some(cache.clone()),
+        ..Default::default()
+    };
+    let graphs = vec![
+        prepare(model_zoo::resnet_cifar(1)).unwrap(),
+        prepare(model_zoo::bert_tiny(1, 16)).unwrap(),
+    ];
+    let compile_all = || {
+        let t0 = Instant::now();
+        for g in &graphs {
+            let mut s = CompileSession::new(opts.clone());
+            let c = s.compile(g).unwrap();
+            assert!(c.validation.passed());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let cold_s = compile_all();
+    let after_cold = cache.stats();
+    let warm_s = compile_all();
+    let stats = cache.stats();
+    let warm_delta = stats.delta_since(&after_cold);
+    assert_eq!(warm_delta.misses, 0, "warm pass must not invoke the tuner");
+    println!(
+        "\ntuning cache: cold {cold_s:.2}s -> warm {warm_s:.2}s ({:.1}x), {}",
+        cold_s / warm_s.max(1e-9),
+        stats.summary()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str_("compile_time")),
+        ("sweep", Json::Arr(sweep_rows)),
+        (
+            "linear_fit",
+            Json::obj(vec![
+                ("slope_s_per_mb", Json::Num(slope)),
+                ("intercept_s", Json::Num(intercept)),
+                ("r2", Json::Num(r2)),
+            ]),
+        ),
+        (
+            "tune_cache",
+            Json::obj(vec![
+                ("tune_trials", Json::Num(opts.tune_trials as f64)),
+                ("cold_s", Json::Num(cold_s)),
+                ("warm_s", Json::Num(warm_s)),
+                ("speedup", Json::Num(cold_s / warm_s.max(1e-9))),
+                ("hits", Json::Num(stats.hits as f64)),
+                ("misses", Json::Num(stats.misses as f64)),
+                ("tune_seconds_saved", Json::Num(stats.tune_seconds_saved)),
+            ]),
+        ),
+    ]);
+    let out = std::path::Path::new("BENCH_compile_time.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
 }

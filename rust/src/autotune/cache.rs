@@ -1,0 +1,326 @@
+//! The tuning cache (compile-service tentpole): memoizes auto-tuning
+//! results keyed by `(machine fingerprint, precision, kernel signature)` so
+//! repeated compiles — and multi-model batches that share layers — never
+//! re-run the search for a signature that has already been tuned.
+//!
+//! The cache is thread-safe (one `Mutex` around the map + counters; tuning
+//! itself runs outside the lock) and persists as a JSON artifact through
+//! [`crate::runtime::store`], so a compile service can ship warm caches
+//! between machines of the *same* fingerprint. A corrupted or
+//! version-skewed cache file loads as empty: the pipeline falls back to
+//! cold tuning instead of failing the compile.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::codegen::KernelConfig;
+use crate::cost::features::KernelSig;
+use crate::ir::dtype::DType;
+use crate::runtime::store;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Bump when the on-disk layout changes; older files load as empty.
+pub const CACHE_FORMAT_VERSION: u64 = 1;
+
+/// Hit/miss accounting for one compile (or a whole session — callers
+/// snapshot and diff).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups served from the cache (tuner search skipped entirely).
+    pub hits: u64,
+    /// Lookups that fell through to a cold tuner run.
+    pub misses: u64,
+    /// Wall-clock seconds of search the hits avoided (sum of the original
+    /// tuning times of every hit entry).
+    pub tune_seconds_saved: f64,
+}
+
+impl CacheStats {
+    /// Stats accumulated since an earlier snapshot.
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            tune_seconds_saved: (self.tune_seconds_saved - earlier.tune_seconds_saved).max(0.0),
+        }
+    }
+
+    /// Fold another accounting block into this one (bundle aggregation).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.tune_seconds_saved += other.tune_seconds_saved;
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses, {:.1}s search saved",
+            self.hits, self.misses, self.tune_seconds_saved
+        )
+    }
+}
+
+/// One memoized tuning result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheEntry {
+    pub config: KernelConfig,
+    /// Best measured log2(cycles) at `config`.
+    pub log_cycles: f64,
+    /// Real measurements the original search performed.
+    pub trials_used: usize,
+    /// Wall-clock seconds the original search took (what a hit saves).
+    pub tune_seconds: f64,
+}
+
+/// Canonical cache key. Machine fingerprint first: entries tuned for one
+/// machine must never leak to another.
+pub fn cache_key(mach_fp: &str, precision: DType, sig: &KernelSig) -> String {
+    format!("{mach_fp}|{}|{}", precision.name(), sig.key())
+}
+
+#[derive(Default)]
+struct Inner {
+    map: BTreeMap<String, CacheEntry>,
+    stats: CacheStats,
+}
+
+/// Thread-safe tuning cache; share one per process via `Arc`.
+#[derive(Default)]
+pub struct TuneCache {
+    inner: Mutex<Inner>,
+}
+
+impl TuneCache {
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("tune cache lock").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a signature; records a hit (crediting the saved search time)
+    /// or a miss in the process-wide counters, and returns the full entry so
+    /// callers can also account locally (per-compile stats must not absorb a
+    /// concurrent compile's traffic). A miss is normally followed by one
+    /// cold tuner run — the parallel fan-out re-checks with [`Self::peek`]
+    /// right before searching, so a result a concurrent compile finished in
+    /// the meantime is not searched again.
+    pub fn lookup(&self, mach_fp: &str, precision: DType, sig: &KernelSig) -> Option<CacheEntry> {
+        let key = cache_key(mach_fp, precision, sig);
+        let mut inner = self.inner.lock().expect("tune cache lock");
+        match inner.map.get(&key).copied() {
+            Some(e) => {
+                inner.stats.hits += 1;
+                inner.stats.tune_seconds_saved += e.tune_seconds;
+                Some(e)
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching the hit/miss counters (used by tests and the
+    /// CLI report).
+    pub fn peek(&self, mach_fp: &str, precision: DType, sig: &KernelSig) -> Option<CacheEntry> {
+        let key = cache_key(mach_fp, precision, sig);
+        self.inner.lock().expect("tune cache lock").map.get(&key).copied()
+    }
+
+    pub fn insert(&self, mach_fp: &str, precision: DType, sig: &KernelSig, entry: CacheEntry) {
+        let key = cache_key(mach_fp, precision, sig);
+        self.inner.lock().expect("tune cache lock").map.insert(key, entry);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("tune cache lock").stats
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    fn to_json(&self) -> Json {
+        let inner = self.inner.lock().expect("tune cache lock");
+        let entries: Vec<Json> = inner
+            .map
+            .iter()
+            .map(|(key, e)| {
+                Json::obj(vec![
+                    ("key", Json::str_(key)),
+                    ("tile_m", Json::Num(e.config.tile_m as f64)),
+                    ("tile_n", Json::Num(e.config.tile_n as f64)),
+                    ("tile_k", Json::Num(e.config.tile_k as f64)),
+                    ("unroll", Json::Num(e.config.unroll as f64)),
+                    ("lmul", Json::Num(e.config.lmul as f64)),
+                    ("log_cycles", Json::Num(e.log_cycles)),
+                    ("trials_used", Json::Num(e.trials_used as f64)),
+                    ("tune_seconds", Json::Num(e.tune_seconds)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(CACHE_FORMAT_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> Result<TuneCache> {
+        if doc.get("version").as_i64() != Some(CACHE_FORMAT_VERSION as i64) {
+            return Err(Error::Tune(format!(
+                "tune cache version mismatch (want {CACHE_FORMAT_VERSION})"
+            )));
+        }
+        let mut map = BTreeMap::new();
+        for e in doc.req_arr("entries")? {
+            let field = |name: &str| -> Result<f64> {
+                e.get(name)
+                    .as_f64()
+                    .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
+            };
+            let usize_field = |name: &str| -> Result<usize> {
+                e.get(name)
+                    .as_usize()
+                    .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
+            };
+            let key = e
+                .get("key")
+                .as_str()
+                .ok_or_else(|| Error::Tune("tune cache entry missing 'key'".into()))?;
+            let entry = CacheEntry {
+                config: KernelConfig {
+                    tile_m: usize_field("tile_m")?,
+                    tile_n: usize_field("tile_n")?,
+                    tile_k: usize_field("tile_k")?,
+                    unroll: usize_field("unroll")?,
+                    lmul: usize_field("lmul")?,
+                },
+                log_cycles: field("log_cycles")?,
+                trials_used: usize_field("trials_used")?,
+                tune_seconds: field("tune_seconds")?,
+            };
+            map.insert(key.to_string(), entry);
+        }
+        Ok(TuneCache {
+            inner: Mutex::new(Inner { map, stats: CacheStats::default() }),
+        })
+    }
+
+    /// Persist every entry as a JSON artifact (atomic write).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        store::save_json(path, &self.to_json())
+    }
+
+    /// Strict load: errors on missing files, bad JSON, or version skew.
+    pub fn load(path: &Path) -> Result<TuneCache> {
+        Self::from_json(&store::load_json(path)?)
+    }
+
+    /// Forgiving load for the compile path: a missing, corrupted, or
+    /// version-skewed cache file degrades to cold tuning, never to a
+    /// failed compile.
+    pub fn load_or_empty(path: &Path) -> TuneCache {
+        match Self::load(path) {
+            Ok(c) => c,
+            Err(e) => {
+                if path.exists() {
+                    eprintln!("warning: ignoring unusable tune cache {}: {e}", path.display());
+                }
+                TuneCache::new()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MachineConfig;
+
+    fn fp() -> String {
+        MachineConfig::xgen_asic().fingerprint()
+    }
+
+    fn entry(tile_m: usize) -> CacheEntry {
+        CacheEntry {
+            config: KernelConfig { tile_m, ..Default::default() },
+            log_cycles: 12.5,
+            trials_used: 40,
+            tune_seconds: 1.25,
+        }
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let c = TuneCache::new();
+        let sig = KernelSig::matmul(64, 64, 64);
+        assert!(c.lookup(&fp(), DType::F32, &sig).is_none());
+        c.insert(&fp(), DType::F32, &sig, entry(16));
+        assert_eq!(
+            c.lookup(&fp(), DType::F32, &sig).map(|e| e.config),
+            Some(KernelConfig { tile_m: 16, ..Default::default() })
+        );
+        // Same signature at a different precision or machine is a miss.
+        assert!(c.lookup(&fp(), DType::I8, &sig).is_none());
+        assert!(c.lookup("other-machine", DType::F32, &sig).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 3));
+        assert!((s.tune_seconds_saved - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let c = TuneCache::new();
+        let sigs = [
+            KernelSig::matmul(128, 256, 512),
+            KernelSig::conv2d(3, 32, 32, 16, 3, 1),
+            KernelSig::elementwise(4096),
+        ];
+        for (i, sig) in sigs.iter().enumerate() {
+            c.insert(&fp(), DType::F32, sig, entry(8 << i));
+        }
+        let path = std::env::temp_dir()
+            .join(format!("xgenc_cache_rt_{}.json", std::process::id()));
+        c.save(&path).unwrap();
+        let loaded = TuneCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for sig in &sigs {
+            assert_eq!(
+                loaded.peek(&fp(), DType::F32, sig),
+                c.peek(&fp(), DType::F32, sig)
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_file_loads_as_empty() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        for (name, text) in [
+            ("garbage", "{not json at all"),
+            ("wrong_version", r#"{"version": 999, "entries": []}"#),
+            ("bad_entry", r#"{"version": 1, "entries": [{"key": "x"}]}"#),
+        ] {
+            let path = dir.join(format!("xgenc_cache_bad_{pid}_{name}.json"));
+            std::fs::write(&path, text).unwrap();
+            assert!(TuneCache::load(&path).is_err(), "{name} should fail strict load");
+            let c = TuneCache::load_or_empty(&path);
+            assert!(c.is_empty(), "{name} should fall back to empty");
+            let _ = std::fs::remove_file(&path);
+        }
+        // Missing file: also empty, no warning path.
+        let c = TuneCache::load_or_empty(&dir.join(format!("xgenc_cache_missing_{pid}.json")));
+        assert!(c.is_empty());
+    }
+}

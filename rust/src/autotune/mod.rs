@@ -2,12 +2,16 @@
 //! strategies — Bayesian optimization (GP-style surrogate + Expected
 //! Improvement), genetic algorithm, simulated annealing, random search,
 //! grid search — over a [`space::ParameterSpace`], with automatic algorithm
-//! selection and learned-cost-model acceleration.
+//! selection and learned-cost-model acceleration. [`cache`] memoizes tuning
+//! results across compiles (and persists them to disk) so identical layers,
+//! repeated compiles, and multi-model batches never search twice.
 
 pub mod algos;
+pub mod cache;
 pub mod space;
 pub mod tuner;
 
+pub use cache::{CacheEntry, CacheStats, TuneCache};
 pub use space::{Param, ParameterSpace};
 pub use tuner::{AutotuneResult, Tuner, TunerOptions};
 

@@ -34,6 +34,31 @@ impl KernelSig {
         KernelSig::Elementwise { len }
     }
 
+    /// Canonical text key (`matmul:MxNxK` | `conv:CxHxWxFxKxS` | `ew:LEN`) —
+    /// the CLI `--sig` syntax and the tuning-cache key contract
+    /// ([`crate::autotune::cache`]). Round-trips through [`Self::parse_key`].
+    pub fn key(&self) -> String {
+        match *self {
+            KernelSig::MatMul { m, n, k } => format!("matmul:{m}x{n}x{k}"),
+            KernelSig::Conv2d { c, h, w, f, kh, stride } => {
+                format!("conv:{c}x{h}x{w}x{f}x{kh}x{stride}")
+            }
+            KernelSig::Elementwise { len } => format!("ew:{len}"),
+        }
+    }
+
+    /// Parse the canonical text key back into a signature.
+    pub fn parse_key(spec: &str) -> Option<KernelSig> {
+        let (kind, dims) = spec.split_once(':')?;
+        let nums: Vec<usize> = dims.split('x').map(|d| d.parse().ok()).collect::<Option<_>>()?;
+        match (kind, nums.as_slice()) {
+            ("matmul", [m, n, k]) => Some(KernelSig::matmul(*m, *n, *k)),
+            ("conv", [c, h, w, f, k, s]) => Some(KernelSig::conv2d(*c, *h, *w, *f, *k, *s)),
+            ("ew", [len]) => Some(KernelSig::elementwise(*len)),
+            _ => None,
+        }
+    }
+
     pub fn flops(&self) -> u64 {
         match *self {
             KernelSig::MatMul { m, n, k } => 2 * (m * n * k) as u64,
@@ -157,6 +182,20 @@ mod tests {
             assert!(f.iter().all(|v| v.is_finite()), "{sig:?}: {f:?}");
             assert_eq!(f[NUM_FEATURES - 1], 1.0);
         }
+    }
+
+    #[test]
+    fn sig_key_round_trips() {
+        for sig in [
+            KernelSig::matmul(128, 256, 512),
+            KernelSig::conv2d(3, 224, 224, 64, 7, 2),
+            KernelSig::elementwise(1 << 20),
+        ] {
+            assert_eq!(KernelSig::parse_key(&sig.key()), Some(sig));
+        }
+        assert_eq!(KernelSig::parse_key("matmul:1x2"), None);
+        assert_eq!(KernelSig::parse_key("bogus:1x2x3"), None);
+        assert_eq!(KernelSig::parse_key("matmul:1x2xhuge"), None);
     }
 
     #[test]

@@ -31,7 +31,9 @@
 //!   and hybrid cost models; the learned model executes its AOT-compiled
 //!   JAX/Pallas kernels through [`runtime`].
 //! * [`autotune`] — the five search algorithms (Bayesian optimization,
-//!   genetic, simulated annealing, random, grid) with automatic selection.
+//!   genetic, simulated annealing, random, grid) with automatic selection,
+//!   plus the persistent tuning cache that memoizes results across compiles
+//!   and multi-model batches.
 //! * [`asic`] — PPA (power/performance/area) models for the XgenSilicon
 //!   ASIC and both baselines.
 //! * [`dynshape`] — symbolic dimensions, graph cloning, multi-configuration
@@ -42,6 +44,16 @@
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
 //! * [`util`] — substrates: JSON, PRNG, CLI parsing, stats, tables, and a
 //!   minimal property-testing harness.
+
+// Style lints relaxed crate-wide: the numeric kernels favor explicit index
+// arithmetic that mirrors the paper's equations.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::new_without_default
+)]
 
 pub mod autotune;
 pub mod backend;

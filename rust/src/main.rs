@@ -9,7 +9,9 @@
 //! xgenc export  --model zoo:mlp --out model.json
 //! ```
 
-use xgenc::autotune::{Algorithm, Tuner, TunerOptions};
+use std::sync::Arc;
+
+use xgenc::autotune::{Algorithm, TuneCache, Tuner, TunerOptions};
 use xgenc::cost::features::KernelSig;
 use xgenc::frontend;
 use xgenc::ir::dtype::DType;
@@ -20,7 +22,7 @@ use xgenc::util::cli::Args;
 
 const OPTION_KEYS: &[&str] = &[
     "model", "models", "precision", "calib", "tune", "trials", "algorithm",
-    "sig", "out", "platform", "seed",
+    "sig", "out", "platform", "seed", "cache", "workers",
 ];
 
 fn platform(args: &Args) -> MachineConfig {
@@ -49,6 +51,27 @@ fn main() {
     std::process::exit(code);
 }
 
+/// `--cache FILE`: load a persistent tune cache (corrupted/missing files
+/// degrade to cold tuning). Returns the cache and the path to save back to.
+fn cache_from_args(args: &Args) -> Option<(Arc<TuneCache>, String)> {
+    args.opt("cache").map(|path| {
+        (Arc::new(TuneCache::load_or_empty(std::path::Path::new(path))), path.to_string())
+    })
+}
+
+fn save_cache(cache: &Option<(Arc<TuneCache>, String)>) {
+    if let Some((cache, path)) = cache {
+        match cache.save(std::path::Path::new(path)) {
+            Ok(()) => println!(
+                "tune cache: {} entries -> {path} ({})",
+                cache.len(),
+                cache.stats().summary()
+            ),
+            Err(e) => eprintln!("warning: could not save tune cache {path}: {e}"),
+        }
+    }
+}
+
 fn cmd_compile(args: &Args) -> i32 {
     let spec = args.opt_or("model", "zoo:mlp");
     let graph = match frontend::load_model(spec) {
@@ -58,16 +81,21 @@ fn cmd_compile(args: &Args) -> i32 {
             return 1;
         }
     };
+    let cache = cache_from_args(args);
     let opts = CompileOptions {
         mach: platform(args),
         precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
         calib_method: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
         tune_trials: args.opt_usize("tune", 0),
+        tune_workers: args.opt_usize("workers", 0),
+        cache: cache.as_ref().map(|(c, _)| c.clone()),
         seed: args.opt_u64("seed", 42),
         ..Default::default()
     };
     let mut session = CompileSession::new(opts);
-    match session.compile(&graph) {
+    let result = session.compile(&graph);
+    save_cache(&cache);
+    match result {
         Ok(c) => {
             println!("{}", c.summary());
             if let Some(dir) = args.opt("out") {
@@ -127,7 +155,19 @@ fn cmd_pipeline(args: &Args) -> i32 {
             }
         }
     }
-    match multi_model::compile_pipeline(&graphs, &CompileOptions::default()) {
+    let cache = cache_from_args(args);
+    let opts = CompileOptions {
+        mach: platform(args),
+        precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
+        tune_trials: args.opt_usize("tune", 0),
+        tune_workers: args.opt_usize("workers", 0),
+        cache: cache.as_ref().map(|(c, _)| c.clone()),
+        seed: args.opt_u64("seed", 42),
+        ..Default::default()
+    };
+    let result = multi_model::compile_pipeline(&graphs, &opts);
+    save_cache(&cache);
+    match result {
         Ok(bundle) => {
             println!("{}", bundle.summary());
             for m in &bundle.models {
@@ -167,14 +207,7 @@ fn cmd_export(args: &Args) -> i32 {
 }
 
 fn parse_sig(spec: &str) -> Option<KernelSig> {
-    let (kind, dims) = spec.split_once(':')?;
-    let nums: Vec<usize> = dims.split('x').filter_map(|d| d.parse().ok()).collect();
-    match (kind, nums.as_slice()) {
-        ("matmul", [m, n, k]) => Some(KernelSig::matmul(*m, *n, *k)),
-        ("conv", [c, h, w, f, k, s]) => Some(KernelSig::conv2d(*c, *h, *w, *f, *k, *s)),
-        ("ew", [len]) => Some(KernelSig::elementwise(*len)),
-        _ => None,
-    }
+    KernelSig::parse_key(spec)
 }
 
 const HELP: &str = "\
@@ -183,11 +216,15 @@ xgenc — XgenSilicon ML Compiler (reproduction)
 USAGE:
   xgenc compile  --model zoo:<name>|file.json [--precision FP32|FP16|INT8|INT4|FP4|Binary]
                  [--calib kl|percentile|entropy|minmax] [--tune N] [--platform xgen|hand|cpu]
-                 [--out DIR]
+                 [--cache FILE] [--workers N] [--out DIR]
   xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
                  [--algorithm bayes|ga|sa|random|grid]
-  xgenc pipeline --models spec1,spec2,...
+  xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
   xgenc export   --model zoo:<name> [--out file.json]
+
+  --cache FILE persists tuning results between runs: warm entries skip the
+  search entirely (corrupted or stale files fall back to cold tuning).
+  --workers N caps the parallel tuning fan-out (0 = one per core).
 
 Zoo models: resnet50 mobilenet_v2 bert_base vit_base resnet_cifar
             mobilenet_cifar bert_tiny vit_tiny mlp vision_encoder

@@ -1,7 +1,10 @@
 //! The five-stage compile session (paper §3.1) and the multi-model pipeline
-//! with WMEM consolidation (§5.1).
+//! with WMEM consolidation (§5.1) — both parallel and tuning-cache-backed.
 
 pub mod multi_model;
 pub mod session;
 
-pub use session::{CompileOptions, CompileSession, CompiledModel};
+pub use session::{
+    kernel_signatures, tune_signatures, CompileOptions, CompileSession, CompiledModel,
+    TuneOutcome,
+};

@@ -3,9 +3,17 @@
 //! bundle whose weight memory dedups identical tensors *across* models
 //! (e.g. a decoder initialized from the text encoder shares its embedding
 //! table and early layers).
+//!
+//! Compilation is parallel and cache-backed: kernel signatures are
+//! deduplicated across *all* models and tuned once (shared [`TuneCache`]),
+//! then every graph lowers on its own worker thread against the warm cache.
 
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::autotune::cache::{CacheStats, TuneCache};
 use crate::ir::Graph;
-use crate::pipeline::session::{CompileOptions, CompileSession, CompiledModel};
+use crate::pipeline::session::{self, CompileOptions, CompileSession, CompiledModel};
 use crate::util::error::Result;
 
 /// Consolidation + compile report for a model bundle.
@@ -17,22 +25,39 @@ pub struct PipelineBundle {
     pub wmem_consolidated: u64,
     pub total_instructions: usize,
     pub compile_seconds: f64,
+    /// Tuning-cache accounting across the whole bundle (pre-tuning pass +
+    /// every per-model lookup).
+    pub cache: CacheStats,
+    /// Distinct kernel signatures across all models (what the pre-tuning
+    /// pass deduplicated down to).
+    pub unique_signatures: usize,
 }
 
 impl PipelineBundle {
     pub fn summary(&self) -> String {
+        let cache_part = if self.cache.lookups() > 0 {
+            format!(
+                " | {} unique signatures, tune cache: {}",
+                self.unique_signatures,
+                self.cache.summary()
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{} models: {} instructions, WMEM {:.0} MB (consolidated from {:.0} MB), compiled in {:.1}s",
+            "{} models: {} instructions, WMEM {:.0} MB (consolidated from {:.0} MB), compiled in {:.1}s{}",
             self.models.len(),
             self.total_instructions,
             self.wmem_consolidated as f64 / (1024.0 * 1024.0),
             self.wmem_raw as f64 / (1024.0 * 1024.0),
             self.compile_seconds,
+            cache_part,
         )
     }
 }
 
-/// Compile a bundle of prepared graphs with cross-model WMEM consolidation.
+/// Compile a bundle of prepared graphs with cross-model WMEM consolidation,
+/// cross-model tuning dedup, and parallel per-model lowering.
 pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<PipelineBundle> {
     let t0 = std::time::Instant::now();
     // Cross-model dedup: content hash -> assigned bytes.
@@ -49,14 +74,70 @@ pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<Pipel
             });
         }
     }
-    // Compile each model (each model's plan dedups internally; the bundle
-    // numbers above are the unified-WMEM accounting the paper reports).
-    let mut models = Vec::new();
+
+    // Phase 1: dedup kernel signatures across *all* models and tune each
+    // unique signature exactly once (parallel fan-out, shared cache).
+    let cache = opts.cache.clone().unwrap_or_else(|| Arc::new(TuneCache::new()));
+    let mut opts = CompileOptions { cache: Some(cache.clone()), ..opts.clone() };
+    let mut unique_signatures = 0;
+    let mut bundle_stats = CacheStats::default();
+    if opts.tune_trials > 0 {
+        let mut sigs = Vec::new();
+        let mut sig_keys = BTreeSet::new();
+        for g in graphs {
+            for sig in session::kernel_signatures(g)? {
+                if sig_keys.insert(sig.key()) {
+                    sigs.push(sig);
+                }
+            }
+        }
+        unique_signatures = sigs.len();
+        bundle_stats = session::tune_signatures(&sigs, &opts, &cache).stats;
+        // The per-model compiles below run against a warm cache; any
+        // residual miss (a signature only visible post-optimization) tunes
+        // inline — keep that single-threaded since the models themselves
+        // fan out across workers next.
+        opts.tune_workers = 1;
+    }
+
+    // Phase 2: lower all graphs in parallel (index-striped workers; results
+    // re-assembled in input order, so the bundle is deterministic).
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(graphs.len())
+        .max(1);
+    let mut done: Vec<(usize, Result<CompiledModel>)> = Vec::with_capacity(graphs.len());
+    std::thread::scope(|scope| {
+        let opts = &opts;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < graphs.len() {
+                        let mut session = CompileSession::new(opts.clone());
+                        out.push((i, session.compile(&graphs[i])));
+                        i += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            done.extend(h.join().expect("compile worker panicked"));
+        }
+    });
+    done.sort_by_key(|(i, _)| *i);
+    let mut models = Vec::with_capacity(graphs.len());
     let mut total_instructions = 0;
-    for g in graphs {
-        let mut session = CompileSession::new(opts.clone());
-        let c = session.compile(g)?;
+    for (_, r) in done {
+        let c = r?;
         total_instructions += c.asm.len();
+        // Bundle accounting = pre-tuning pass + every model's own lookups
+        // (each tracked locally, so nothing double-counts or bleeds across
+        // concurrent compiles).
+        bundle_stats.absorb(&c.cache);
         models.push(c);
     }
     Ok(PipelineBundle {
@@ -65,6 +146,8 @@ pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<Pipel
         wmem_consolidated: consolidated,
         total_instructions,
         compile_seconds: t0.elapsed().as_secs_f64(),
+        cache: bundle_stats,
+        unique_signatures,
     })
 }
 
@@ -108,5 +191,27 @@ mod tests {
             bundle.wmem_consolidated,
             bundle.wmem_raw
         );
+    }
+
+    #[test]
+    fn identical_models_tune_once_across_bundle() {
+        // Two identical models: the pre-tuning pass dedups their signatures,
+        // so the bundle performs each search exactly once.
+        let graphs = vec![
+            prepare(model_zoo::mlp(&[48, 96, 10], 1)).unwrap(),
+            prepare(model_zoo::mlp(&[48, 96, 10], 1)).unwrap(),
+        ];
+        let bundle = compile_pipeline(
+            &graphs,
+            &CompileOptions { tune_trials: 10, ..Default::default() },
+        )
+        .unwrap();
+        assert!(bundle.unique_signatures > 0);
+        // Cold misses = unique signatures (one search each); both models'
+        // per-compile lookups then hit.
+        assert_eq!(bundle.cache.misses as usize, bundle.unique_signatures);
+        assert!(bundle.cache.hits > 0, "per-model lookups should hit the warm cache");
+        // Both models got identical tuned schedules.
+        assert_eq!(bundle.models[0].tuned, bundle.models[1].tuned);
     }
 }

@@ -1,11 +1,21 @@
 //! The compile session: Frontend → Optimization → (Quantization) →
 //! Code Generation → Backend → Validation, fully automated (the paper's
 //! "zero manual intervention from model input to ASIC-ready output").
+//!
+//! Auto-tuning is cache-backed and parallel: distinct kernel signatures are
+//! deduplicated first, looked up in a [`TuneCache`] (shared across compiles
+//! when [`CompileOptions::cache`] is set), and only the misses are tuned —
+//! fanned out over `std::thread::scope` workers. Each signature tunes with
+//! its own fresh RNG and cost model seeded from `CompileOptions::seed`, so
+//! the result map is byte-identical to the serial path regardless of worker
+//! count or completion order.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::asic::{self, PpaReport};
+use crate::autotune::cache::{CacheEntry, CacheStats, TuneCache};
 use crate::autotune::{Tuner, TunerOptions};
 use crate::backend::{hex, memplan, sched};
 use crate::codegen::graphgen::{self, Program, Schedules};
@@ -31,6 +41,12 @@ pub struct CompileOptions {
     pub calib_inputs: Vec<Vec<Tensor>>,
     /// Auto-tuning trials per distinct kernel signature (0 = heuristics).
     pub tune_trials: usize,
+    /// Worker threads for the per-signature tuning fan-out
+    /// (0 = one per available core).
+    pub tune_workers: usize,
+    /// Shared tuning cache: hits skip the search entirely. `None` gives each
+    /// compile a private cache (identical layers still tune only once).
+    pub cache: Option<Arc<TuneCache>>,
     /// Run the instruction scheduler.
     pub schedule: bool,
     pub seed: u64,
@@ -44,6 +60,8 @@ impl Default for CompileOptions {
             calib_method: Method::Kl,
             calib_inputs: Vec::new(),
             tune_trials: 0,
+            tune_workers: 0,
+            cache: None,
             schedule: true,
             seed: 42,
         }
@@ -62,14 +80,24 @@ pub struct CompiledModel {
     pub quant: Option<ptq::QuantPlan>,
     pub passes_applied: Vec<&'static str>,
     pub compile_seconds: f64,
-    /// Tuned schedules per signature (reused across identical layers).
+    /// Tuned schedules per signature (reused across identical layers),
+    /// keyed by [`KernelSig::key`].
     pub tuned: BTreeMap<String, crate::codegen::KernelConfig>,
+    /// Tuning-cache accounting for this compile (all zeros when tuning off).
+    pub cache: CacheStats,
+    /// Worker threads the cold tuning fan-out used (0 = everything hit).
+    pub tune_workers_used: usize,
 }
 
 impl CompiledModel {
     pub fn summary(&self) -> String {
+        let cache_part = if self.cache.lookups() > 0 {
+            format!(" | tune cache: {}", self.cache.summary())
+        } else {
+            String::new()
+        };
         format!(
-            "{}: {} instructions, {:.1} MB WMEM, {} | {:.2} ms, {:.0} mW{} | compiled in {:.1}s",
+            "{}: {} instructions, {:.1} MB WMEM, {} | {:.2} ms, {:.0} mW{} | compiled in {:.1}s{}",
             self.graph.name,
             self.asm.len(),
             self.plan.wmem_used as f64 * self.quant.as_ref().map(|q| 1.0 / q.memory_reduction()).unwrap_or(1.0)
@@ -82,8 +110,142 @@ impl CompiledModel {
                 .map(|a| format!(", {a:.1} mm2"))
                 .unwrap_or_default(),
             self.compile_seconds,
+            cache_part,
         )
     }
+}
+
+/// Outcome of the parallel per-signature tuning fan-out.
+pub struct TuneOutcome {
+    /// Best config per signature key (cache hits + fresh tunes).
+    pub configs: BTreeMap<String, crate::codegen::KernelConfig>,
+    /// Worker threads used for the cold misses (0 when everything hit).
+    pub workers: usize,
+    /// Cold tuner searches actually performed.
+    pub tuner_calls: usize,
+    /// This fan-out's own hit/miss accounting — tracked locally, so a
+    /// concurrent compile sharing the cache never skews these numbers.
+    pub stats: CacheStats,
+}
+
+/// Tune every distinct signature once: cache lookups first, then the misses
+/// fan out across `std::thread::scope` workers (index-striped so the merge
+/// order — and therefore the result — is independent of scheduling).
+/// Deterministic: each signature gets a fresh `Rng`/cost model seeded from
+/// `opts.seed`, so worker count never changes any config.
+pub fn tune_signatures(
+    sigs: &[KernelSig],
+    opts: &CompileOptions,
+    cache: &TuneCache,
+) -> TuneOutcome {
+    let fp = opts.mach.fingerprint();
+    let mut stats = CacheStats::default();
+    let mut configs = BTreeMap::new();
+    let mut misses: Vec<KernelSig> = Vec::new();
+    let mut seen = BTreeSet::new();
+    for sig in sigs {
+        if !seen.insert(sig.key()) {
+            continue;
+        }
+        match cache.lookup(&fp, opts.precision, sig) {
+            Some(e) => {
+                stats.hits += 1;
+                stats.tune_seconds_saved += e.tune_seconds;
+                configs.insert(sig.key(), e.config);
+            }
+            None => misses.push(sig.clone()),
+        }
+    }
+    if misses.is_empty() {
+        return TuneOutcome { configs, workers: 0, tuner_calls: 0, stats };
+    }
+    let workers = if opts.tune_workers > 0 {
+        opts.tune_workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+    .min(misses.len())
+    .max(1);
+    // (index, sig, entry, searched): searched is false when a concurrent
+    // compile finished the same signature between our lookup and now.
+    let mut tuned: Vec<(usize, KernelSig, CacheEntry, bool)> = Vec::with_capacity(misses.len());
+    std::thread::scope(|scope| {
+        let misses = &misses;
+        let fp = &fp;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let tuner = Tuner::new(opts.mach.clone());
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < misses.len() {
+                        let sig = &misses[i];
+                        // Re-check: another compile sharing this cache may
+                        // have tuned the signature since our lookup.
+                        if let Some(e) = cache.peek(fp, opts.precision, sig) {
+                            out.push((i, sig.clone(), e, false));
+                            i += workers;
+                            continue;
+                        }
+                        let t0 = Instant::now();
+                        let mut model = crate::cost::HybridModel::new(opts.mach.clone());
+                        let topts = TunerOptions {
+                            trials: opts.tune_trials,
+                            screen: 4,
+                            seed: opts.seed,
+                            ..Default::default()
+                        };
+                        let r = tuner.tune(sig, &topts, Some(&mut model));
+                        out.push((
+                            i,
+                            sig.clone(),
+                            CacheEntry {
+                                config: r.best_config,
+                                log_cycles: r.best_log_cycles,
+                                trials_used: r.trials_used,
+                                tune_seconds: t0.elapsed().as_secs_f64(),
+                            },
+                            true,
+                        ));
+                        i += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            tuned.extend(h.join().expect("tuner worker panicked"));
+        }
+    });
+    tuned.sort_by_key(|(i, _, _, _)| *i);
+    let mut tuner_calls = 0;
+    for (_, sig, entry, searched) in tuned {
+        if searched {
+            tuner_calls += 1;
+            stats.misses += 1;
+            cache.insert(&fp, opts.precision, &sig, entry);
+        } else {
+            stats.hits += 1;
+            stats.tune_seconds_saved += entry.tune_seconds;
+        }
+        configs.insert(sig.key(), entry.config);
+    }
+    TuneOutcome { configs, workers, tuner_calls, stats }
+}
+
+/// Distinct tunable signatures of a graph, in topological order (the
+/// multi-model pipeline dedups these across a whole bundle before tuning).
+pub fn kernel_signatures(g: &Graph) -> Result<Vec<KernelSig>> {
+    let mut seen = BTreeSet::new();
+    let mut out = Vec::new();
+    for nid in g.topo_order()? {
+        if let Some(sig) = CompileSession::signature(g, &g.nodes[nid.0]) {
+            if seen.insert(sig.key()) {
+                out.push(sig);
+            }
+        }
+    }
+    Ok(out)
 }
 
 pub struct CompileSession {
@@ -142,26 +304,36 @@ impl CompileSession {
             None
         };
 
-        // Auto-tuning per distinct signature.
+        // Auto-tuning: dedup signatures, hit the cache, tune misses in
+        // parallel, then assign the winning schedule to every node that
+        // shares the signature.
         let mut tuned: BTreeMap<String, crate::codegen::KernelConfig> = BTreeMap::new();
         let mut schedules = Schedules::new();
+        let mut cache_stats = CacheStats::default();
+        let mut tune_workers_used = 0;
         if opts.tune_trials > 0 {
-            let tuner = Tuner::new(opts.mach.clone());
+            let mut sig_nodes: Vec<(KernelSig, Vec<crate::ir::graph::NodeId>)> = Vec::new();
+            let mut slot_of: BTreeMap<String, usize> = BTreeMap::new();
             for nid in g.topo_order()? {
                 let node = &g.nodes[nid.0];
                 if let Some(sig) = Self::signature(&g, node) {
-                    let key = format!("{sig:?}");
-                    let kc = *tuned.entry(key).or_insert_with(|| {
-                        let mut model = crate::cost::HybridModel::new(opts.mach.clone());
-                        let topts = TunerOptions {
-                            trials: opts.tune_trials,
-                            screen: 4,
-                            seed: opts.seed,
-                            ..Default::default()
-                        };
-                        tuner.tune(&sig, &topts, Some(&mut model)).best_config
+                    let slot = *slot_of.entry(sig.key()).or_insert_with(|| {
+                        sig_nodes.push((sig, Vec::new()));
+                        sig_nodes.len() - 1
                     });
-                    schedules.insert(nid, kc);
+                    sig_nodes[slot].1.push(nid);
+                }
+            }
+            let cache = opts.cache.clone().unwrap_or_else(|| Arc::new(TuneCache::new()));
+            let sigs: Vec<KernelSig> = sig_nodes.iter().map(|(s, _)| s.clone()).collect();
+            let outcome = tune_signatures(&sigs, opts, &cache);
+            tune_workers_used = outcome.workers;
+            cache_stats = outcome.stats;
+            for (sig, nids) in &sig_nodes {
+                let kc = outcome.configs[&sig.key()];
+                tuned.insert(sig.key(), kc);
+                for nid in nids {
+                    schedules.insert(*nid, kc);
                 }
             }
         }
@@ -198,6 +370,8 @@ impl CompileSession {
             passes_applied,
             compile_seconds: t0.elapsed().as_secs_f64(),
             tuned,
+            cache: cache_stats,
+            tune_workers_used,
         })
     }
 }
@@ -218,6 +392,8 @@ mod tests {
         assert!(c.hex.starts_with(':'));
         assert!(c.ppa.latency_ms > 0.0);
         assert!(c.summary().contains("100% ISA validation passed"));
+        // Tuning off: no cache traffic reported.
+        assert_eq!(c.cache, CacheStats::default());
     }
 
     #[test]
@@ -249,5 +425,17 @@ mod tests {
             c0.ppa.cycles
         );
         assert!(!c1.tuned.is_empty());
+        // Private cache: every distinct signature missed exactly once.
+        assert_eq!(c1.cache.misses as usize, c1.tuned.len());
+    }
+
+    #[test]
+    fn signatures_dedup_identical_layers() {
+        // Two identical hidden layers -> their matmuls share one signature.
+        let g = prepare(model_zoo::mlp(&[64, 64, 64, 10], 1)).unwrap();
+        let sigs = kernel_signatures(&g).unwrap();
+        let keys: BTreeSet<String> = sigs.iter().map(|s| s.key()).collect();
+        assert_eq!(keys.len(), sigs.len(), "kernel_signatures must dedup");
+        assert!(!sigs.is_empty());
     }
 }

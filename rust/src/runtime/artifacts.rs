@@ -1,10 +1,16 @@
 //! Typed wrappers over the four AOT artifacts. Shapes here mirror
 //! `python/compile/model.py::aot_entries()` — the frozen interchange
 //! contract (checked against `artifacts/manifest.json` at load).
+//!
+//! Built without the `pjrt` feature (the default — the `xla` crate needs a
+//! vendored XLA toolchain), the same API compiles to a stub that reports
+//! artifacts unavailable; callers skip gracefully onto the pure-rust
+//! backends, exactly like a machine where `make artifacts` never ran.
 
 use crate::cost::features::NUM_FEATURES;
 use crate::cost::learned::{LinearBackend, BATCH};
 use crate::util::error::{Error, Result};
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
 
 /// Fixed AOT shapes (must match python/compile/model.py).
@@ -15,7 +21,15 @@ pub const CAND: usize = 100;
 pub const QAT_ROWS: usize = 32;
 pub const QAT_LANES: usize = 128;
 
+/// Locate the artifacts directory: $XGENC_ARTIFACTS or ./artifacts.
+fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("XGENC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
 /// Loaded + compiled artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Artifacts {
     client: xla::PjRtClient,
     cost_predict: xla::PjRtLoadedExecutable,
@@ -24,6 +38,7 @@ pub struct Artifacts {
     qat_step: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 fn load_exe(
     client: &xla::PjRtClient,
     dir: &std::path::Path,
@@ -40,18 +55,18 @@ fn load_exe(
         .map_err(|e| Error::Runtime(format!("{name}: compile failed: {e:?}")))
 }
 
+#[cfg(feature = "pjrt")]
 fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(dims)
         .map_err(|e| Error::Runtime(format!("literal reshape: {e:?}")))
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifacts {
     /// Locate the artifacts directory: $XGENC_ARTIFACTS or ./artifacts.
     pub fn default_dir() -> std::path::PathBuf {
-        std::env::var("XGENC_ARTIFACTS")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+        artifacts_dir()
     }
 
     pub fn available() -> bool {
@@ -202,6 +217,7 @@ pub struct PjrtBackend {
     pub artifacts: std::sync::Arc<Artifacts>,
 }
 
+#[cfg(feature = "pjrt")]
 impl LinearBackend for PjrtBackend {
     fn predict(&mut self, w: &[f64; F], x: &[[f64; F]]) -> Vec<f64> {
         let wf: [f32; F] = std::array::from_fn(|i| w[i] as f32);
@@ -247,5 +263,101 @@ impl LinearBackend for PjrtBackend {
             std::array::from_fn(|i| v2[i] as f64),
             loss as f64,
         )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stub build (default): same surface, artifacts never available.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT runtime not built (compile with `--features pjrt` and a vendored `xla` crate)"
+            .into(),
+    )
+}
+
+/// Stub artifacts handle: [`Artifacts::available`] is always `false`, so
+/// parity tests and the learned-model production path skip onto the
+/// pure-rust backends.
+#[cfg(not(feature = "pjrt"))]
+pub struct Artifacts {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Artifacts {
+    pub fn default_dir() -> std::path::PathBuf {
+        artifacts_dir()
+    }
+
+    pub fn available() -> bool {
+        false
+    }
+
+    pub fn load() -> Result<Artifacts> {
+        Err(unavailable())
+    }
+
+    pub fn load_from(_dir: &std::path::Path) -> Result<Artifacts> {
+        Err(unavailable())
+    }
+
+    pub fn cost_predict(&self, _w: &[f32; F], _x: &[[f32; F]; B]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn cost_train(
+        &self,
+        _w: &[f32; F],
+        _v: &[f32; F],
+        _x: &[[f32; F]; B],
+        _y: &[f32; B],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        Err(unavailable())
+    }
+
+    pub fn kl_calibrate(&self, _hist: &[f32]) -> Result<(Vec<f32>, usize)> {
+        Err(unavailable())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn qat_step(
+        &self,
+        _x: &[f32],
+        _g: &[f32],
+        _scale: f32,
+        _zp: f32,
+        _v_scale: f32,
+        _v_zp: f32,
+        _lr: f32,
+        _qlo: f32,
+        _qhi: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, f32, f32, f32)> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the 'pjrt' feature)".into()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LinearBackend for PjrtBackend {
+    fn predict(&mut self, _w: &[f64; F], _x: &[[f64; F]]) -> Vec<f64> {
+        unreachable!("PJRT runtime not built; Artifacts::available() is false")
+    }
+
+    fn train_step(
+        &mut self,
+        _w: &[f64; F],
+        _v: &[f64; F],
+        _x: &[[f64; F]],
+        _y: &[f64],
+        _lr: f64,
+    ) -> ([f64; F], [f64; F], f64) {
+        unreachable!("PJRT runtime not built; Artifacts::available() is false")
     }
 }

@@ -3,7 +3,16 @@
 //! from the compiler's hot paths. Python never runs here — the HLO text is
 //! compiled by the `xla` crate's PJRT CPU client at startup and called like
 //! a function.
+//!
+//! The PJRT path is gated behind the `pjrt` cargo feature (the `xla` crate
+//! cannot be built offline); the default build exposes the same API surface
+//! with artifacts reported unavailable, so every caller falls back to the
+//! bit-matching pure-rust backends.
+//!
+//! [`store`] is the always-available half of the runtime: persistent JSON
+//! artifacts (tuning caches, bench reports) written atomically to disk.
 
 pub mod artifacts;
+pub mod store;
 
 pub use artifacts::Artifacts;

@@ -1,0 +1,70 @@
+//! On-disk JSON artifact store: small typed documents the compiler persists
+//! between runs (tuning caches, bench reports). Writes are atomic
+//! (temp-file + rename) so a crashed compile never leaves a truncated
+//! artifact for the next run to choke on.
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Atomically write a JSON document (pretty-printed, trailing newline).
+/// The temp name is unique per process + call, so concurrent writers of the
+/// same artifact cannot interleave inside one temp file: last rename wins
+/// with intact content either way.
+pub fn save_json(path: &Path, doc: &Json) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(
+        ".tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    let tmp = std::path::PathBuf::from(tmp);
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load and parse a JSON document.
+pub fn load_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Runtime(format!("{}: {e}", path.display())))?;
+    Json::parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("xgenc_store_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn json_round_trips_through_disk() {
+        let path = tmp_path("rt.json");
+        let doc = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("items", Json::num_arr(&[1.0, 2.5, -3.0])),
+        ]);
+        save_json(&path, &doc).unwrap();
+        assert_eq!(load_json(&path).unwrap(), doc);
+        // Overwrite is atomic and idempotent.
+        save_json(&path, &doc).unwrap();
+        assert_eq!(load_json(&path).unwrap(), doc);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(load_json(&tmp_path("nonexistent.json")).is_err());
+    }
+}

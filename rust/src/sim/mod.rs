@@ -58,6 +58,31 @@ impl MachineConfig {
         self.vlen_bits / 32
     }
 
+    /// Stable identity string for tuning-cache keys: results tuned on one
+    /// machine must never be served for another. Covers every knob the
+    /// timing model reads, including each cache level's full geometry.
+    pub fn fingerprint(&self) -> String {
+        let caches: String = self
+            .caches
+            .iter()
+            .map(|c| format!("{}:{}:{}:{};", c.size, c.line, c.assoc, c.latency))
+            .collect();
+        format!(
+            "{}/vlen{}/v{}/pipes{}/iw{}/{}MHz/d{}w{}/[{}]lat{}/{}",
+            self.name,
+            self.vlen_bits,
+            self.has_vector as u8,
+            self.vector_pipes,
+            self.issue_width,
+            self.freq_mhz,
+            self.dmem_bytes,
+            self.wmem_bytes,
+            caches,
+            self.mem_latency,
+            self.native_dtype.name(),
+        )
+    }
+
     /// The XgenSilicon accelerator configuration (our ASIC target):
     /// VLEN=256 RVV, 1 MiB DMEM, 16 MiB WMEM default, 800 MHz, small L1+L2.
     pub fn xgen_asic() -> MachineConfig {

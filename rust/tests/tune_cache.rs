@@ -1,0 +1,130 @@
+//! Tuning-cache + parallel-pipeline contract tests (the PR's acceptance
+//! criteria): warm caches skip the tuner entirely with identical results,
+//! the parallel fan-out is byte-identical to the serial path, cache files
+//! round-trip through disk, and corruption degrades to cold tuning.
+
+use std::sync::Arc;
+
+use xgenc::autotune::TuneCache;
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::Graph;
+use xgenc::pipeline::{multi_model, CompileOptions, CompileSession};
+
+/// A model with several distinct matmul signatures (distinct layer widths)
+/// so the cold fan-out has real work to spread across workers.
+fn model() -> Graph {
+    prepare(model_zoo::mlp(&[96, 64, 48, 32, 10], 1)).unwrap()
+}
+
+fn opts(cache: &Arc<TuneCache>, workers: usize) -> CompileOptions {
+    CompileOptions {
+        tune_trials: 12,
+        tune_workers: workers,
+        cache: Some(cache.clone()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn warm_cache_skips_tuner_with_identical_results() {
+    let g = model();
+    let cache = Arc::new(TuneCache::new());
+
+    let cold = CompileSession::new(opts(&cache, 0)).compile(&g).unwrap();
+    assert!(cold.cache.misses > 0, "cold compile must tune");
+    assert_eq!(cold.cache.hits, 0);
+    let cold_tuner_calls = cold.cache.misses;
+
+    let warm = CompileSession::new(opts(&cache, 0)).compile(&g).unwrap();
+    // Zero tuner searches for already-seen signatures.
+    assert_eq!(warm.cache.misses, 0, "warm compile must not invoke the tuner");
+    assert_eq!(warm.cache.hits, cold_tuner_calls);
+    // Strictly fewer tuner invocations than the cold compile.
+    assert!(warm.cache.misses < cold.cache.misses);
+    // Identical KernelConfig map and identical generated binary.
+    assert_eq!(warm.tuned, cold.tuned);
+    assert_eq!(warm.hex, cold.hex);
+    assert!(warm.validation.passed());
+}
+
+#[test]
+fn parallel_tuning_matches_serial_byte_identical() {
+    let g = model();
+    let serial_cache = Arc::new(TuneCache::new());
+    let parallel_cache = Arc::new(TuneCache::new());
+
+    let serial = CompileSession::new(opts(&serial_cache, 1)).compile(&g).unwrap();
+    let parallel = CompileSession::new(opts(&parallel_cache, 4)).compile(&g).unwrap();
+
+    assert_eq!(serial.tune_workers_used, 1);
+    assert!(
+        parallel.tune_workers_used >= 2,
+        "cold tuning must fan out across >= 2 workers (got {})",
+        parallel.tune_workers_used
+    );
+    // Byte-identical results under the same seed regardless of worker count.
+    assert_eq!(parallel.tuned, serial.tuned);
+    assert_eq!(parallel.hex, serial.hex);
+    assert_eq!(parallel.cache.misses, serial.cache.misses);
+}
+
+#[test]
+fn cache_file_round_trips_through_compile() {
+    let g = model();
+    let cache = Arc::new(TuneCache::new());
+    let cold = CompileSession::new(opts(&cache, 0)).compile(&g).unwrap();
+
+    let path = std::env::temp_dir()
+        .join(format!("xgenc_tune_cache_it_{}.json", std::process::id()));
+    cache.save(&path).unwrap();
+    let reloaded = Arc::new(TuneCache::load(&path).unwrap());
+    assert_eq!(reloaded.len(), cache.len());
+
+    // A compile against the reloaded cache is fully warm and identical.
+    let warm = CompileSession::new(opts(&reloaded, 0)).compile(&g).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.tuned, cold.tuned);
+    assert_eq!(warm.hex, cold.hex);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupted_cache_file_degrades_to_cold_tuning() {
+    let path = std::env::temp_dir()
+        .join(format!("xgenc_tune_cache_corrupt_{}.json", std::process::id()));
+    std::fs::write(&path, "{\"version\": 1, \"entries\": [{\"key\": 17}]}").unwrap();
+    // Forgiving load: no error, just an empty cache...
+    let cache = Arc::new(TuneCache::load_or_empty(&path));
+    assert!(cache.is_empty());
+    // ...and the compile proceeds as a plain cold compile.
+    let c = CompileSession::new(opts(&cache, 0)).compile(&model()).unwrap();
+    assert!(c.cache.misses > 0);
+    assert!(c.validation.passed());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn warm_multi_model_bundle_performs_zero_tuner_searches() {
+    // Two models sharing layer shapes + one distinct model.
+    let graphs = vec![
+        prepare(model_zoo::mlp(&[64, 48, 10], 1)).unwrap(),
+        prepare(model_zoo::mlp(&[64, 48, 10], 1)).unwrap(),
+        prepare(model_zoo::mlp(&[40, 24, 8], 1)).unwrap(),
+    ];
+    let cache = Arc::new(TuneCache::new());
+    let o = opts(&cache, 0);
+
+    let cold = multi_model::compile_pipeline(&graphs, &o).unwrap();
+    assert!(cold.unique_signatures > 0);
+    // Cross-model dedup: one search per unique signature, even though the
+    // first two models are identical.
+    assert_eq!(cold.cache.misses as usize, cold.unique_signatures);
+
+    let warm = multi_model::compile_pipeline(&graphs, &o).unwrap();
+    assert_eq!(warm.cache.misses, 0, "warm bundle must not invoke the tuner");
+    assert!(warm.cache.hits > 0);
+    for (a, b) in cold.models.iter().zip(&warm.models) {
+        assert_eq!(a.tuned, b.tuned);
+        assert_eq!(a.hex, b.hex);
+    }
+}
