@@ -1,14 +1,12 @@
 //! Quickstart: compile a small MLP through the full five-stage pipeline,
-//! run the generated RISC-V binary on the simulated accelerator, and check
-//! the numerics against the IR reference executor.
+//! then let the session's verify step run the generated RISC-V binary on the
+//! simulated accelerator and check the numerics against the IR reference
+//! executor — reporting measured cycles next to the analytic prediction.
 
 use xgenc::frontend::{model_zoo, prepare};
-use xgenc::ir::exec::Executor;
 use xgenc::ir::tensor::Tensor;
 use xgenc::ir::DType;
-use xgenc::isa::encode::encode_all;
 use xgenc::pipeline::{CompileOptions, CompileSession};
-use xgenc::sim::machine::Machine;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. A model (any ONNX-JSON file or zoo builder works the same way).
@@ -21,33 +19,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("{}", compiled.summary());
     println!("passes: {:?}", compiled.passes_applied);
 
-    // 3. Execute the ASIC binary on the functional simulator.
-    let mut m = Machine::new(session.opts.mach.clone());
-    for (tid, init) in &compiled.graph.initializers {
-        m.write_f32_slice(compiled.plan.addr_of(*tid)?, &init.materialize().data)?;
-    }
+    // 3. Execute the ASIC binary on the functional simulator and compare
+    //    against the host reference — one call; the artifact's ABI symbol
+    //    table carries every address the runtime needs.
     let mut x = Tensor::zeros(&[1, 256]);
     for (i, v) in x.data.iter_mut().enumerate() {
         *v = ((i % 13) as f32 - 6.0) / 6.0;
     }
-    m.write_f32_slice(compiled.plan.addr_of(compiled.graph.inputs[0])?, &x.data)?;
-    m.max_instret = 2_000_000_000;
-    let stats = m.run(&encode_all(&compiled.asm)?)?;
-    println!("simulated: {} instructions, {} cycles", stats.instret, stats.cycles);
-
-    // 4. Compare against the host reference.
-    let want = Executor::new().run(&compiled.graph, &[x])?;
-    let got = m.read_f32_slice(
-        compiled.plan.addr_of(compiled.graph.outputs[0])?,
-        want[0].numel(),
-    )?;
-    let max_err = got
-        .iter()
-        .zip(&want[0].data)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!("max |asic - reference| = {max_err:.2e}");
-    assert!(max_err < 1e-2, "numerics diverged");
+    let report = session.verify(&compiled, &[x])?;
+    println!("{}", report.summary());
+    assert!(report.passed(), "numerics diverged");
     println!("quickstart OK ({:?} datapath)", DType::F32);
     Ok(())
 }

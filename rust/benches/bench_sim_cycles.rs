@@ -1,0 +1,70 @@
+//! Whole-model conformance + cycle-accuracy artifact: every executable-scale
+//! zoo model compiles, runs end-to-end on the functional machine, matches
+//! the reference executor, and its machine-measured cycles are reported next
+//! to the analytic cost-model prediction — emitted to `BENCH_sim_cycles.json`
+//! so CI can track the unified cost model's whole-model calibration drift.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::DType;
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::runtime::store;
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+
+fn main() {
+    let cases: Vec<(&str, xgenc::ir::Graph, DType)> = vec![
+        ("mlp", model_zoo::mlp(&[256, 128, 64, 10], 1), DType::F32),
+        ("resnet_cifar", model_zoo::resnet_cifar(1), DType::F32),
+        ("mobilenet_cifar", model_zoo::mobilenet_cifar(1), DType::F32),
+        ("bert_tiny", model_zoo::bert_tiny(1, 8), DType::F32),
+        ("vit_tiny", model_zoo::vit_tiny(1), DType::F32),
+        ("resnet_cifar-int8", model_zoo::resnet_cifar(1), DType::I8),
+    ];
+    let mut t = Table::new(
+        "Simulator conformance: measured vs predicted cycles",
+        &["Model", "Precision", "Max rel err", "Tol", "Measured", "Predicted", "Ratio"],
+    );
+    let mut rows = Vec::new();
+    for (name, graph, precision) in cases {
+        let g = prepare(graph).unwrap();
+        let mut session = CompileSession::new(CompileOptions {
+            precision,
+            ..Default::default()
+        });
+        let c = session.compile(&g).unwrap();
+        let r = session.verify_auto(&c).unwrap();
+        assert!(r.passed(), "{name}: {}", r.summary());
+        let predicted = r.predicted_cycles.unwrap();
+        let ratio = r.cycle_ratio().unwrap();
+        t.row(&[
+            name.to_string(),
+            precision.name().to_string(),
+            format!("{:.2e}", r.max_rel_err),
+            format!("{:.0e}", r.tol),
+            format!("{}", r.measured_cycles),
+            format!("{predicted:.0}"),
+            f(ratio, 2),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str_(name)),
+            ("precision", Json::str_(precision.name())),
+            ("max_rel_err", Json::Num(r.max_rel_err as f64)),
+            ("tolerance", Json::Num(r.tol as f64)),
+            ("measured_cycles", Json::Num(r.measured_cycles as f64)),
+            ("predicted_cycles", Json::Num(predicted)),
+            ("measured_over_predicted", Json::Num(ratio)),
+            ("instret", Json::Num(r.measured_instret as f64)),
+            ("output_elems", Json::Num(r.elems as f64)),
+        ]));
+    }
+    t.print();
+    let n = rows.len();
+    let report = Json::obj(vec![
+        ("bench", Json::str_("sim_cycles")),
+        ("models", Json::Arr(rows)),
+    ]);
+    let out = std::path::Path::new("BENCH_sim_cycles.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
+    println!("sim conformance OK: {n} models verified on the functional machine");
+}

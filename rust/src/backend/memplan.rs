@@ -15,10 +15,12 @@
 
 use std::collections::BTreeMap;
 
+use crate::ir::dtype::DType;
 use crate::ir::graph::{Graph, NodeId, TensorId};
 use crate::ir::ops::OpKind;
 use crate::sim::layout;
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 
 /// Alignment for every allocation (cache line).
 pub const ALIGN: u32 = 64;
@@ -75,6 +77,152 @@ impl MemPlan {
 
     pub fn scratch_of(&self, n: NodeId) -> Option<u32> {
         self.scratch.get(&n).map(|p| layout::DMEM_BASE + p.addr)
+    }
+
+    /// Export the plan's calling convention as a symbol table (see
+    /// [`ModelAbi`]).
+    pub fn abi(&self, g: &Graph) -> Result<ModelAbi> {
+        ModelAbi::build(g, self)
+    }
+}
+
+/// Role of a symbol in the compiled model's calling convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymKind {
+    Input,
+    Output,
+    Weight,
+}
+
+impl SymKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SymKind::Input => "input",
+            SymKind::Output => "output",
+            SymKind::Weight => "weight",
+        }
+    }
+}
+
+/// One named, addressed buffer of the compiled model's interface.
+#[derive(Debug, Clone)]
+pub struct AbiSymbol {
+    pub name: String,
+    pub tensor: TensorId,
+    pub kind: SymKind,
+    /// Absolute address (DMEM or WMEM space, base included).
+    pub addr: u32,
+    /// Staged extent in bytes (f32 functional-simulation storage).
+    pub bytes: u32,
+    /// Worst-case extents (equal to the static shape for static graphs).
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl AbiSymbol {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// The artifact's symbol table: everything a runtime needs to stage inputs
+/// and weights into DMEM/WMEM and read outputs back, without the graph or
+/// plan in hand. Exported by codegen into [`crate::codegen::graphgen::Program`]
+/// and consumed by `runtime::simrun`.
+#[derive(Debug, Clone, Default)]
+pub struct ModelAbi {
+    pub symbols: Vec<AbiSymbol>,
+}
+
+impl ModelAbi {
+    /// Build the symbol table: graph inputs, then outputs, then weights.
+    pub fn build(g: &Graph, plan: &MemPlan) -> Result<ModelAbi> {
+        let mut symbols = Vec::new();
+        let mut push = |t: TensorId, kind: SymKind| -> Result<()> {
+            let info = &g.tensors[t.0];
+            let dims: Vec<usize> = match &info.shape {
+                Some(s) => s.0.iter().map(|d| d.upper_bound()).collect(),
+                None => {
+                    return Err(Error::Backend(format!(
+                        "abi: tensor '{}' has no inferred shape",
+                        info.name
+                    )))
+                }
+            };
+            let (placement, base) = match (plan.dmem.get(&t), plan.wmem.get(&t)) {
+                (Some(p), _) => (*p, layout::DMEM_BASE),
+                (None, Some(p)) => (*p, layout::WMEM_BASE),
+                (None, None) => {
+                    return Err(Error::Backend(format!(
+                        "abi: tensor '{}' not placed",
+                        info.name
+                    )))
+                }
+            };
+            symbols.push(AbiSymbol {
+                name: info.name.clone(),
+                tensor: t,
+                kind,
+                addr: base + placement.addr,
+                bytes: placement.bytes,
+                dims,
+                dtype: info.dtype,
+            });
+            Ok(())
+        };
+        for t in &g.inputs {
+            push(*t, SymKind::Input)?;
+        }
+        for t in &g.outputs {
+            push(*t, SymKind::Output)?;
+        }
+        for t in g.initializers.keys() {
+            push(*t, SymKind::Weight)?;
+        }
+        Ok(ModelAbi { symbols })
+    }
+
+    pub fn inputs(&self) -> impl Iterator<Item = &AbiSymbol> {
+        self.symbols.iter().filter(|s| s.kind == SymKind::Input)
+    }
+
+    pub fn outputs(&self) -> impl Iterator<Item = &AbiSymbol> {
+        self.symbols.iter().filter(|s| s.kind == SymKind::Output)
+    }
+
+    pub fn weights(&self) -> impl Iterator<Item = &AbiSymbol> {
+        self.symbols.iter().filter(|s| s.kind == SymKind::Weight)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&AbiSymbol> {
+        self.symbols.iter().find(|s| s.name == name)
+    }
+
+    /// JSON rendering (written next to `.s`/`.hex` by `xgenc compile --out`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "symbols",
+            Json::Arr(
+                self.symbols
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str_(&s.name)),
+                            ("kind", Json::str_(s.kind.name())),
+                            ("addr", Json::Num(s.addr as f64)),
+                            ("bytes", Json::Num(s.bytes as f64)),
+                            (
+                                "dims",
+                                Json::num_arr(
+                                    &s.dims.iter().map(|&d| d as f64).collect::<Vec<f64>>(),
+                                ),
+                            ),
+                            ("dtype", Json::str_(s.dtype.name())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
     }
 }
 
@@ -169,7 +317,13 @@ pub fn plan(g: &Graph, dmem_capacity: u32, wmem_capacity: u32) -> Result<MemPlan
     let mut by_hash: BTreeMap<u64, Placement> = BTreeMap::new();
     let mut wtop: u32 = 0;
     for (tid, init) in &g.initializers {
-        let bytes = align(init.bytes().max(1) as u32);
+        // Like `act_bytes`: the functional simulator stores every value at
+        // f32 width, and generated kernels stride weights at 4 bytes per
+        // element — quantized *deployed* width is accounted in `QuantPlan`
+        // and the PPA model, never in the simulation layout. (Placing
+        // quantized weights at their narrow width would make the emitted
+        // addresses overlap at runtime.)
+        let bytes = align(((init.numel() * 4).max(1)) as u32);
         plan.wmem_raw += bytes;
         let h = init.content_hash();
         let placement = *by_hash.entry(h).or_insert_with(|| {
@@ -371,6 +525,48 @@ mod tests {
             let node = &g.nodes[nid.0];
             assert_eq!(node.op, OpKind::Attention);
             assert!(pl.bytes >= 32 * 32 * 4);
+        }
+    }
+
+    #[test]
+    fn abi_symbols_cover_io_and_weights() {
+        let g = prepare(model_zoo::mlp(&[16, 8, 4], 2)).unwrap();
+        let p = planned(&g);
+        let abi = p.abi(&g).unwrap();
+        assert_eq!(abi.inputs().count(), g.inputs.len());
+        assert_eq!(abi.outputs().count(), g.outputs.len());
+        assert_eq!(abi.weights().count(), g.initializers.len());
+        let x = abi.find("x").unwrap();
+        assert_eq!(x.kind, SymKind::Input);
+        assert_eq!(x.dims, vec![2, 16]);
+        assert_eq!(x.addr, p.addr_of(g.inputs[0]).unwrap());
+        assert!(x.bytes >= (x.numel() * 4) as u32);
+        for w in abi.weights() {
+            assert!(w.addr >= crate::sim::layout::WMEM_BASE, "{}", w.name);
+        }
+        let text = abi.to_json().to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn quantized_weights_keep_f32_simulation_extents() {
+        // The functional machine stores f32 and kernels stride weights at 4
+        // bytes/element, so quantized compiles must not shrink placements.
+        let mut g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        crate::quant::ptq::quantize_graph(
+            &mut g,
+            DType::I8,
+            crate::quant::calib::Method::MinMax,
+            &[],
+        )
+        .unwrap();
+        let p = planned(&g);
+        for (tid, init) in &g.initializers {
+            assert!(
+                p.wmem[tid].bytes >= (init.numel() * 4) as u32,
+                "{} placed at quantized width",
+                init.name
+            );
         }
     }
 

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::backend::memplan::{is_view_op, MemPlan};
+use crate::backend::memplan::{is_view_op, MemPlan, ModelAbi};
 use crate::codegen::{auto_lmul, auto_unroll, kernels, kernels_attn, kernels_nn, KernelArtifact, KernelConfig};
 use crate::ir::dtype::DType;
 use crate::ir::graph::{Graph, Node, NodeId};
@@ -25,6 +25,9 @@ pub struct Program {
     pub asm: Vec<Instr>,
     /// Total MAC-equivalent flops.
     pub flops: u64,
+    /// Symbol table: input/output/weight addresses and extents — the
+    /// artifact's calling convention for any runtime (`runtime::simrun`).
+    pub abi: ModelAbi,
 }
 
 impl Program {
@@ -63,7 +66,7 @@ pub fn lower_graph(
             kernels_out.push((nid, art));
         }
     }
-    Ok(Program { kernels: kernels_out, asm, flops })
+    Ok(Program { kernels: kernels_out, asm, flops, abi: ModelAbi::build(g, plan)? })
 }
 
 /// Default schedule for a node (used when the tuner hasn't run).
@@ -433,52 +436,18 @@ mod tests {
     use super::*;
     use crate::backend::memplan;
     use crate::frontend::{model_zoo, prepare};
-    use crate::ir::exec::Executor;
     use crate::ir::tensor::Tensor;
-    use crate::isa::encode::encode_all;
-    use crate::sim::machine::Machine;
+    use crate::runtime::simrun;
     use crate::sim::MachineConfig;
 
-    /// End-to-end: compile a graph, load weights+inputs into the machine,
-    /// run the generated binary, compare against the IR executor.
+    /// End-to-end: compile a graph, run the generated binary on the machine
+    /// through the exported ABI, compare against the IR executor.
     fn roundtrip(g: &Graph, inputs: &[Tensor], tol: f32) {
         let mach = MachineConfig::xgen_asic();
         let plan = memplan::plan(g, 1 << 30, 2 << 30).unwrap();
         let prog = lower_graph(g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
-        let mut m = Machine::new(mach);
-        // Load weights.
-        for (tid, init) in &g.initializers {
-            let t = init.materialize();
-            m.write_f32_slice(plan.addr_of(*tid).unwrap(), &t.data).unwrap();
-        }
-        // Load inputs (I32 inputs — e.g. token ids — are stored as raw ints;
-        // the IR executor carries them as f32 values).
-        for (tid, t) in g.inputs.iter().zip(inputs) {
-            let base = plan.addr_of(*tid).unwrap();
-            if g.info(*tid).dtype == DType::I32 {
-                for (i, v) in t.data.iter().enumerate() {
-                    m.store_u32(base + (i * 4) as u32, *v as i32 as u32).unwrap();
-                }
-            } else {
-                m.write_f32_slice(base, &t.data).unwrap();
-            }
-        }
-        m.max_instret = 2_000_000_000;
-        m.run(&encode_all(&prog.asm).unwrap()).unwrap();
-        // Reference.
-        let want = Executor::new().run(g, inputs).unwrap();
-        for (out_t, want_t) in g.outputs.iter().zip(&want) {
-            let got = m
-                .read_f32_slice(plan.addr_of(*out_t).unwrap(), want_t.numel())
-                .unwrap();
-            for (i, (a, b)) in got.iter().zip(&want_t.data).enumerate() {
-                assert!(
-                    (a - b).abs() < tol * b.abs().max(1.0),
-                    "output {} elem {i}: {a} vs {b}",
-                    out_t.0
-                );
-            }
-        }
+        let r = simrun::verify(&mach, g, &prog.abi, &prog.asm, inputs, DType::F32, None).unwrap();
+        assert!(r.max_rel_err < tol, "{}", r.summary());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::codegen::emitter::Emitter;
 use crate::ir::graph::Graph;
 use crate::ir::infer;
 use crate::ir::shape::Dim;
+use crate::isa::encode::encode_all;
 use crate::isa::{regs, Instr, Op};
 use crate::util::error::{Error, Result};
 
@@ -125,6 +126,66 @@ pub fn dispatch_stub(dims_addr: u32, entries: &[(Vec<u32>, u32)]) -> Result<Vec<
     e.finish()
 }
 
+/// A runnable multi-configuration image: the dispatch stub followed by one
+/// code region per specialization, each terminated by a jump past the image
+/// end (so a selected variant runs to completion and halts instead of
+/// falling through into its neighbour).
+pub struct DispatchImage {
+    /// Encoded words, loadable at pc 0.
+    pub words: Vec<u32>,
+    /// Byte offset of each specialization's entry point, in variant order.
+    pub entries: Vec<u32>,
+    /// Dim-extent configuration of each specialization, in variant order
+    /// (lets a runtime reject unknown shapes without spinning the trap loop).
+    pub configs: Vec<Vec<u32>>,
+    /// DMEM slot the runtime writes the actual dim extents to.
+    pub dims_addr: u32,
+}
+
+/// Assemble stub + specializations into one image. The stub's length
+/// depends on its `li` constants, which depend on the entry offsets, which
+/// depend on the stub length — iterate the layout to a fixed point.
+pub fn dispatch_image(dims_addr: u32, variants: &[(Vec<u32>, Vec<Instr>)]) -> Result<DispatchImage> {
+    let entry_offsets = |stub_len: usize| -> Vec<u32> {
+        let mut off = stub_len;
+        let mut out = Vec::new();
+        for (_, code) in variants {
+            out.push((off * 4) as u32);
+            off += code.len() + 1; // +1: the end-jump after the variant
+        }
+        out
+    };
+    let mut stub_len = 0usize;
+    for _ in 0..8 {
+        let entries = entry_offsets(stub_len);
+        let table: Vec<(Vec<u32>, u32)> = variants
+            .iter()
+            .zip(&entries)
+            .map(|((dims, _), off)| (dims.clone(), *off))
+            .collect();
+        let stub = dispatch_stub(dims_addr, &table)?;
+        if stub.len() != stub_len {
+            stub_len = stub.len();
+            continue;
+        }
+        // Layout stable: assemble the final instruction stream.
+        let total = stub_len + variants.iter().map(|(_, c)| c.len() + 1).sum::<usize>();
+        let mut prog = stub;
+        for (_, code) in variants {
+            prog.extend(code.iter().copied());
+            let at = prog.len();
+            prog.push(Instr::u(Op::Jal, regs::ZERO, ((total - at) * 4) as i32));
+        }
+        return Ok(DispatchImage {
+            words: encode_all(&prog)?,
+            entries,
+            configs: variants.iter().map(|(dims, _)| dims.clone()).collect(),
+            dims_addr,
+        });
+    }
+    Err(Error::Codegen("dispatch image layout did not converge".into()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +259,57 @@ mod tests {
         m.store_u32(0x40, 8).unwrap();
         m.run(&image).unwrap();
         assert_eq!(m.x[regs::T3 as usize], 2, "batch=8 entry must run");
+    }
+
+    #[test]
+    fn dispatch_image_runs_matching_specialization_end_to_end() {
+        use crate::ir::exec::Executor;
+        use crate::runtime::simrun;
+        use crate::sim::MachineConfig;
+        let g = prepare(model_zoo::mlp_dynamic(&[16, 8, 4], 8)).unwrap();
+        let mut compiled = Vec::new();
+        for batch in [1usize, 4, 8] {
+            let s = specialize(&g, &[("batch".into(), batch)]).unwrap();
+            let mut session = CompileSession::new(CompileOptions::default());
+            compiled.push((batch, session.compile(&s).unwrap()));
+        }
+        // The dims slot must not collide with any specialization's buffers.
+        let peak = compiled.iter().map(|(_, c)| c.plan.dmem_peak).max().unwrap();
+        let dims_addr = peak.div_ceil(64) * 64 + 64;
+        let variants: Vec<(Vec<u32>, Vec<Instr>)> = compiled
+            .iter()
+            .map(|(batch, c)| (vec![*batch as u32], c.asm.clone()))
+            .collect();
+        let image = dispatch_image(dims_addr, &variants).unwrap();
+        assert_eq!(image.entries.len(), 3);
+        // Run with actual batch 4: the stub must select the middle variant
+        // and its outputs must match the reference executor.
+        let (batch, c) = &compiled[1];
+        let inputs = simrun::synth_inputs(&c.graph, 5);
+        // Unknown dims fail fast — no trap-loop spin through the budget.
+        assert!(simrun::run_dispatch(
+            &MachineConfig::xgen_asic(),
+            &image,
+            &[2],
+            &c.graph,
+            c.abi(),
+            &inputs,
+        )
+        .is_err());
+        let run = simrun::run_dispatch(
+            &MachineConfig::xgen_asic(),
+            &image,
+            &[*batch as u32],
+            &c.graph,
+            c.abi(),
+            &inputs,
+        )
+        .unwrap();
+        let want = Executor::new().run(&c.graph, &inputs).unwrap();
+        assert_eq!(run.outputs[0].numel(), want[0].numel());
+        for (a, b) in run.outputs[0].data.iter().zip(&want[0].data) {
+            assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
     }
 
     #[test]

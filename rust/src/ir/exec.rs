@@ -254,6 +254,23 @@ pub fn eval_node(node: &Node, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
             })
         }
         OpKind::DequantizeLinear => a()?.clone(),
+        // Integer/QLinear compute ops: the functional datapath stores f32
+        // (quantization lives in the weights and the QDQ boundaries), so the
+        // oracle evaluates them as their float counterparts — mirroring
+        // exactly what codegen lowers them to.
+        OpKind::QLinearMatMul | OpKind::MatMulInteger => {
+            let mut y = matmul(ins[0], ins[1])?;
+            if let Some(bias) = ins.get(2) {
+                let n = *y.shape.last().unwrap();
+                for (i, v) in y.data.iter_mut().enumerate() {
+                    *v += bias.data[i % n];
+                }
+            }
+            y
+        }
+        OpKind::QLinearConv | OpKind::ConvInteger => conv2d(node, ins, 1)?,
+        OpKind::QLinearAdd => broadcast_binop(ins[0], ins[1], |x, y| x + y)?,
+        OpKind::DynamicQuantizeLinear => a()?.clone(),
         OpKind::BinaryQuantize => {
             // sign(x) * mean(|x|) — XNOR-net style binarization.
             let x = a()?;
@@ -937,6 +954,20 @@ mod tests {
         let input = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let out = Executor::new().run(&g, &[input]).unwrap();
         assert_eq!(out[0].data, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn qlinear_ops_evaluate_as_float() {
+        // Everything codegen can lower must have an oracle evaluation.
+        let mut g = Graph::new("q");
+        let x = g.input("x", Shape::fixed(&[2, 2]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        let y = g.node(OpKind::QLinearMatMul, "qm", &[x, w], Attrs::new());
+        let z = g.node(OpKind::QLinearAdd, "qa", &[y, y], Attrs::new());
+        g.outputs.push(z);
+        let input = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = Executor::new().run(&g, &[input]).unwrap();
+        assert_eq!(out[0].data, vec![2.0, 4.0, 6.0, 8.0]);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use xgenc::frontend;
 use xgenc::ir::dtype::DType;
 use xgenc::pipeline::{multi_model, CompileOptions, CompileSession};
 use xgenc::quant::calib::Method;
+use xgenc::runtime::simrun;
 use xgenc::sim::MachineConfig;
 use xgenc::util::cli::Args;
 
@@ -105,9 +106,47 @@ fn cmd_compile(args: &Args) -> i32 {
                     .iter()
                     .map(|i| format!("{}\n", i.asm()))
                     .collect();
-                let _ = std::fs::write(format!("{dir}/{}.s", graph.name), asm_text);
-                let _ = std::fs::write(format!("{dir}/{}.hex", graph.name), &c.hex);
-                println!("wrote {dir}/{}.s and .hex", graph.name);
+                let abi_json = c.abi().to_json().to_string_pretty();
+                let artifacts = [
+                    (format!("{dir}/{}.s", graph.name), asm_text.as_str()),
+                    (format!("{dir}/{}.hex", graph.name), c.hex.as_str()),
+                    (format!("{dir}/{}.abi.json", graph.name), abi_json.as_str()),
+                ];
+                for (path, data) in &artifacts {
+                    if let Err(e) = std::fs::write(path, data) {
+                        eprintln!("error: could not write {path}: {e}");
+                        return 1;
+                    }
+                }
+                println!("wrote {dir}/{}.s, .hex and .abi.json", graph.name);
+            }
+            if args.has_flag("verify") {
+                // Differential run: functional machine vs reference executor,
+                // measured cycles vs the analytic prediction.
+                match session.verify_auto(&c) {
+                    Ok(r) => {
+                        println!("{}", r.summary());
+                        if !r.passed() {
+                            return 1;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("verification error: {e}");
+                        return 1;
+                    }
+                }
+            } else if args.has_flag("run") {
+                let inputs = simrun::synth_inputs(&c.graph, session.opts.seed);
+                match simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &inputs) {
+                    Ok(run) => println!(
+                        "simulated: {} instructions, {} cycles measured vs {:.0} predicted",
+                        run.stats.instret, run.stats.cycles, c.ppa.cycles
+                    ),
+                    Err(e) => {
+                        eprintln!("simulation error: {e}");
+                        return 1;
+                    }
+                }
             }
             0
         }
@@ -216,7 +255,7 @@ xgenc — XgenSilicon ML Compiler (reproduction)
 USAGE:
   xgenc compile  --model zoo:<name>|file.json [--precision FP32|FP16|INT8|INT4|FP4|Binary]
                  [--calib kl|percentile|entropy|minmax] [--tune N] [--platform xgen|hand|cpu]
-                 [--cache FILE] [--workers N] [--out DIR]
+                 [--cache FILE] [--workers N] [--out DIR] [--run] [--verify]
   xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
                  [--algorithm bayes|ga|sa|random|grid]
   xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
@@ -225,6 +264,10 @@ USAGE:
   --cache FILE persists tuning results between runs: warm entries skip the
   search entirely (corrupted or stale files fall back to cold tuning).
   --workers N caps the parallel tuning fan-out (0 = one per core).
+  --run executes the compiled binary on the functional simulator with
+  synthesized inputs and reports measured vs predicted cycles.
+  --verify additionally checks the outputs against the reference executor
+  under the per-precision tolerance (exit 1 on divergence).
 
 Zoo models: resnet50 mobilenet_v2 bert_base vit_base resnet_cifar
             mobilenet_cifar bert_tiny vit_tiny mlp vision_encoder

@@ -26,6 +26,7 @@ use crate::ir::tensor::Tensor;
 use crate::ir::Graph;
 use crate::quant::calib::Method;
 use crate::quant::ptq;
+use crate::runtime::simrun;
 use crate::sim::MachineConfig;
 use crate::util::error::Result;
 use crate::validate;
@@ -73,6 +74,9 @@ pub struct CompiledModel {
     pub graph: Graph,
     pub program: Program,
     pub plan: memplan::MemPlan,
+    /// The machine this binary was compiled for (verification must simulate
+    /// this one, whatever session later holds the model).
+    pub mach: MachineConfig,
     pub asm: Vec<crate::isa::Instr>,
     pub hex: String,
     pub validation: validate::Report,
@@ -90,6 +94,18 @@ pub struct CompiledModel {
 }
 
 impl CompiledModel {
+    /// The artifact's symbol table (input/output/weight addresses and
+    /// extents) — what `runtime::simrun` stages by.
+    pub fn abi(&self) -> &memplan::ModelAbi {
+        &self.program.abi
+    }
+
+    /// The datapath precision this model was compiled at (drives the
+    /// differential-verification tolerance).
+    pub fn precision(&self) -> DType {
+        self.quant.as_ref().map(|q| q.dtype).unwrap_or(DType::F32)
+    }
+
     pub fn summary(&self) -> String {
         let cache_part = if self.cache.lookups() > 0 {
             format!(" | tune cache: {}", self.cache.summary())
@@ -283,6 +299,33 @@ impl CompileSession {
         }
     }
 
+    /// Stage 6 (opt-in): differential verification. Runs the compiled
+    /// binary end-to-end on the functional machine via the artifact ABI and
+    /// compares the outputs against the reference executor under the
+    /// per-precision tolerance; the report also carries machine-measured
+    /// cycles next to the analytic cost-model prediction, giving the
+    /// "unified cost model" whole-model ground truth. Machine and precision
+    /// come from the *model* (what it was compiled for), never from
+    /// whichever session happens to hold it.
+    pub fn verify(&self, c: &CompiledModel, inputs: &[Tensor]) -> Result<simrun::VerifyReport> {
+        simrun::verify(
+            &c.mach,
+            &c.graph,
+            c.abi(),
+            &c.asm,
+            inputs,
+            c.precision(),
+            Some(c.ppa.cycles),
+        )
+    }
+
+    /// [`Self::verify`] with deterministic synthesized inputs (seeded from
+    /// the session options) — what `xgenc --verify` runs.
+    pub fn verify_auto(&self, c: &CompiledModel) -> Result<simrun::VerifyReport> {
+        let inputs = simrun::synth_inputs(&c.graph, self.opts.seed);
+        self.verify(c, &inputs)
+    }
+
     /// Run the full pipeline on a prepared (shape-inferred) graph.
     pub fn compile(&mut self, graph: &Graph) -> Result<CompiledModel> {
         let t0 = Instant::now();
@@ -351,8 +394,12 @@ impl CompileSession {
             program.asm.clone()
         };
 
-        // Stage 5: validation (hard gate).
-        let validation = validate::validate_all(&g, &asm, &plan, &opts.mach).into_result()?;
+        // Stage 5: validation (hard gate) — ISA + memory + ABI coverage.
+        let mut validation = validate::validate_all(&g, &asm, &plan, &opts.mach);
+        validation
+            .checks
+            .extend(validate::validate_abi(&program.abi, &g, &opts.mach).checks);
+        let validation = validation.into_result()?;
 
         // ASIC-ready output.
         let hex_text = hex::to_intel_hex(&asm)?;
@@ -362,6 +409,7 @@ impl CompileSession {
             graph: g,
             program,
             plan,
+            mach: opts.mach.clone(),
             asm,
             hex: hex_text,
             validation,
@@ -427,6 +475,19 @@ mod tests {
         assert!(!c1.tuned.is_empty());
         // Private cache: every distinct signature missed exactly once.
         assert_eq!(c1.cache.misses as usize, c1.tuned.len());
+    }
+
+    #[test]
+    fn verify_runs_compiled_mlp_against_the_oracle() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        let mut s = CompileSession::new(CompileOptions::default());
+        let c = s.compile(&g).unwrap();
+        assert!(!c.abi().symbols.is_empty());
+        let r = s.verify_auto(&c).unwrap();
+        assert!(r.passed(), "{}", r.summary());
+        assert!(r.measured_cycles > 0);
+        assert!(r.predicted_cycles.unwrap() > 0.0);
+        assert!(r.cycle_ratio().unwrap() > 0.0);
     }
 
     #[test]

@@ -11,8 +11,15 @@
 //!
 //! [`store`] is the always-available half of the runtime: persistent JSON
 //! artifacts (tuning caches, bench reports) written atomically to disk.
+//!
+//! [`simrun`] is the whole-model simulation runtime: it stages a compiled
+//! model into the functional machine through the artifact's ABI symbol
+//! table, executes the encoded binary, and differentially verifies the
+//! outputs against the reference executor (`CompileSession::verify`,
+//! `xgenc --run`/`--verify`).
 
 pub mod artifacts;
+pub mod simrun;
 pub mod store;
 
 pub use artifacts::Artifacts;

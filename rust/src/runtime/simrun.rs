@@ -1,0 +1,382 @@
+//! Whole-model simulation runtime: stage a compiled model's weights and
+//! inputs into the functional machine via the artifact's [`ModelAbi`],
+//! execute the *encoded* binary, read outputs back, and differentially
+//! verify them against the [`crate::ir::exec::Executor`] numerical oracle.
+//!
+//! This closes the loop the per-kernel unit tests leave open: every address
+//! the code generator emitted, every encoded instruction, and the whole
+//! memory plan are exercised together, and the machine's measured cycles
+//! land next to the analytic cost-model prediction — per model, not per
+//! kernel. `CompileSession::verify` and the `xgenc --run`/`--verify` CLI
+//! flags are thin wrappers over this module; `rust/tests/e2e_sim.rs` is the
+//! conformance suite built on it.
+
+use crate::backend::memplan::ModelAbi;
+use crate::ir::dtype::DType;
+use crate::ir::exec::Executor;
+use crate::ir::graph::Graph;
+use crate::ir::ops::OpKind;
+use crate::ir::tensor::Tensor;
+use crate::isa::encode::encode_all;
+use crate::isa::Instr;
+use crate::sim::machine::{Machine, RunStats};
+use crate::sim::MachineConfig;
+use crate::util::error::{Error, Result};
+
+/// Instruction budget for whole-model runs (zoo-scale CIFAR models retire
+/// tens of millions of instructions; runaway programs still trip this).
+pub const MAX_INSTRET: u64 = 4_000_000_000;
+
+/// One finished simulation: outputs plus the machine's measurements.
+pub struct SimRun {
+    pub outputs: Vec<Tensor>,
+    pub stats: RunStats,
+}
+
+/// Per-precision differential tolerance (relative to `max(|ref|, 1)`).
+/// FP32 storage is exact on both sides, so only accumulation-order and
+/// reciprocal-vs-divide rounding separate machine from oracle; quantized
+/// datapaths sit on a coarser value grid that amplifies that reorder noise.
+pub fn tolerance(dt: DType) -> f32 {
+    match dt {
+        DType::F32 => 1e-4,
+        DType::I8 => 1e-3,
+        DType::I4 => 5e-3,
+        _ => 1e-2,
+    }
+}
+
+/// Write every weight at its ABI address (WMEM).
+pub fn stage_weights(m: &mut Machine, g: &Graph, abi: &ModelAbi) -> Result<()> {
+    for sym in abi.weights() {
+        let init = g.initializers.get(&sym.tensor).ok_or_else(|| {
+            Error::Runtime(format!("abi weight '{}' has no initializer", sym.name))
+        })?;
+        m.write_f32_slice(sym.addr, &init.materialize().data)?;
+    }
+    Ok(())
+}
+
+/// Write the model inputs at their ABI addresses (DMEM). I32 inputs (token
+/// ids) are stored as raw integers — the IR carries them as f32 values.
+pub fn stage_inputs(m: &mut Machine, abi: &ModelAbi, inputs: &[Tensor]) -> Result<()> {
+    let syms: Vec<_> = abi.inputs().collect();
+    if syms.len() != inputs.len() {
+        return Err(Error::Runtime(format!(
+            "expected {} inputs, got {}",
+            syms.len(),
+            inputs.len()
+        )));
+    }
+    for (sym, t) in syms.iter().zip(inputs) {
+        if t.numel() > sym.numel() {
+            return Err(Error::Runtime(format!(
+                "input '{}': {} elements exceed the planned extent {}",
+                sym.name,
+                t.numel(),
+                sym.numel()
+            )));
+        }
+        if sym.dtype == DType::I32 {
+            for (i, v) in t.data.iter().enumerate() {
+                m.store_u32(sym.addr + (i * 4) as u32, *v as i32 as u32)?;
+            }
+        } else {
+            m.write_f32_slice(sym.addr, &t.data)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read every model output back from its ABI address.
+pub fn read_outputs(m: &mut Machine, abi: &ModelAbi) -> Result<Vec<Tensor>> {
+    let mut out = Vec::new();
+    for sym in abi.outputs() {
+        let data = m.read_f32_slice(sym.addr, sym.numel())?;
+        out.push(Tensor::new(sym.dims.clone(), data));
+    }
+    Ok(out)
+}
+
+/// Execute a compiled model end-to-end on a fresh functional machine:
+/// stage weights + inputs, run the encoded binary, read outputs.
+pub fn run_model(
+    cfg: &MachineConfig,
+    g: &Graph,
+    abi: &ModelAbi,
+    asm: &[Instr],
+    inputs: &[Tensor],
+) -> Result<SimRun> {
+    let words = encode_all(asm)?;
+    let mut m = Machine::new(cfg.clone());
+    m.max_instret = MAX_INSTRET;
+    stage_weights(&mut m, g, abi)?;
+    stage_inputs(&mut m, abi, inputs)?;
+    let stats = m.run(&words)?;
+    let outputs = read_outputs(&mut m, abi)?;
+    Ok(SimRun { outputs, stats })
+}
+
+/// Execute a multi-specialization image (dispatch stub + variants, see
+/// `dynshape::dispatch_image`): the runtime writes the actual extents of the
+/// symbolic dims at the image's dims slot, the stub selects and jumps to the
+/// matching specialization. `g`/`abi` belong to the specialization the dims
+/// select. Dims matching no known configuration fail fast here — never by
+/// spinning the stub's trap loop through the instruction budget.
+pub fn run_dispatch(
+    cfg: &MachineConfig,
+    image: &crate::dynshape::DispatchImage,
+    dims: &[u32],
+    g: &Graph,
+    abi: &ModelAbi,
+    inputs: &[Tensor],
+) -> Result<SimRun> {
+    if !image.configs.iter().any(|c| c.as_slice() == dims) {
+        return Err(Error::Runtime(format!(
+            "shape validation failed: dims {dims:?} match none of {} specializations",
+            image.configs.len()
+        )));
+    }
+    // The dims slot must not overlap any staged DMEM buffer — overlap would
+    // silently corrupt inputs/activations, not fail.
+    let dims_end = image.dims_addr as u64 + 4 * dims.len() as u64;
+    for sym in &abi.symbols {
+        let apart =
+            sym.addr as u64 + sym.bytes as u64 <= image.dims_addr as u64 || dims_end <= sym.addr as u64;
+        if !apart {
+            return Err(Error::Runtime(format!(
+                "dims slot {:#x} overlaps abi symbol '{}'",
+                image.dims_addr, sym.name
+            )));
+        }
+    }
+    let mut m = Machine::new(cfg.clone());
+    m.max_instret = MAX_INSTRET;
+    stage_weights(&mut m, g, abi)?;
+    stage_inputs(&mut m, abi, inputs)?;
+    for (i, v) in dims.iter().enumerate() {
+        m.store_u32(image.dims_addr + (i * 4) as u32, *v)?;
+    }
+    let stats = m.run(&image.words)?;
+    let outputs = read_outputs(&mut m, abi)?;
+    Ok(SimRun { outputs, stats })
+}
+
+/// Deterministic pseudo-inputs for a graph: a bounded wave in `[-1, 1]` for
+/// float inputs; for I32 inputs, indices kept below the smallest gather
+/// table the input feeds (so synthesized token ids never go out of range).
+pub fn synth_inputs(g: &Graph, seed: u64) -> Vec<Tensor> {
+    g.inputs
+        .iter()
+        .map(|t| {
+            let info = &g.tensors[t.0];
+            let dims: Vec<usize> = match &info.shape {
+                Some(s) => s.0.iter().map(|d| d.upper_bound()).collect(),
+                None => vec![1],
+            };
+            let n: usize = dims.iter().product::<usize>().max(1);
+            let data: Vec<f32> = if info.dtype == DType::I32 {
+                let bound = gather_bound(g, *t).unwrap_or(97).max(1);
+                (0..n)
+                    .map(|i| {
+                        let k = (i as u64).wrapping_mul(37).wrapping_add(seed.wrapping_mul(13));
+                        (k % bound as u64) as f32
+                    })
+                    .collect()
+            } else {
+                (0..n)
+                    .map(|i| {
+                        let k = (i as u64).wrapping_mul(13).wrapping_add(seed) % 17;
+                        (k as f32 - 8.0) / 8.0
+                    })
+                    .collect()
+            };
+            Tensor::new(dims, data)
+        })
+        .collect()
+}
+
+/// Smallest table extent among Gather nodes indexed by tensor `t`.
+fn gather_bound(g: &Graph, t: crate::ir::graph::TensorId) -> Option<usize> {
+    g.nodes
+        .iter()
+        .filter(|n| n.op == OpKind::Gather && n.inputs.len() >= 2 && n.inputs[1] == t)
+        .filter_map(|n| {
+            g.tensors[n.inputs[0].0]
+                .shape
+                .as_ref()
+                .and_then(|s| s.0.first().map(|d| d.upper_bound()))
+        })
+        .min()
+}
+
+/// Outcome of one differential verification run.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub model: String,
+    pub precision: DType,
+    /// Output elements compared.
+    pub elems: usize,
+    /// Worst error relative to `max(|reference|, 1)`.
+    pub max_rel_err: f32,
+    /// Bound applied (see [`tolerance`]).
+    pub tol: f32,
+    /// Machine-measured execution.
+    pub measured_cycles: u64,
+    pub measured_instret: u64,
+    /// Analytic cost-model prediction for the same program, when available.
+    pub predicted_cycles: Option<f64>,
+}
+
+impl VerifyReport {
+    pub fn passed(&self) -> bool {
+        self.max_rel_err <= self.tol
+    }
+
+    /// measured / predicted (the cost model's whole-model calibration error).
+    pub fn cycle_ratio(&self) -> Option<f64> {
+        self.predicted_cycles
+            .filter(|p| *p > 0.0)
+            .map(|p| self.measured_cycles as f64 / p)
+    }
+
+    pub fn summary(&self) -> String {
+        let cycles_part = match self.predicted_cycles {
+            Some(p) => format!(
+                "{} cycles measured vs {:.0} predicted ({:.2}x)",
+                self.measured_cycles,
+                p,
+                self.cycle_ratio().unwrap_or(0.0)
+            ),
+            None => format!("{} cycles measured", self.measured_cycles),
+        };
+        format!(
+            "{} [{}]: {} output elems, max rel err {:.2e} (tol {:.0e}) — {} | {} instructions, {}",
+            self.model,
+            self.precision.name(),
+            self.elems,
+            self.max_rel_err,
+            self.tol,
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.measured_instret,
+            cycles_part,
+        )
+    }
+
+    pub fn into_result(self) -> Result<VerifyReport> {
+        if self.passed() {
+            Ok(self)
+        } else {
+            Err(Error::Sim(self.summary()))
+        }
+    }
+}
+
+/// Differential verification: run the binary on the functional machine and
+/// the graph on the reference executor, compare outputs under the
+/// per-precision tolerance, and report measured vs predicted cycles.
+pub fn verify(
+    cfg: &MachineConfig,
+    g: &Graph,
+    abi: &ModelAbi,
+    asm: &[Instr],
+    inputs: &[Tensor],
+    precision: DType,
+    predicted_cycles: Option<f64>,
+) -> Result<VerifyReport> {
+    let run = run_model(cfg, g, abi, asm, inputs)?;
+    let want = Executor::new().run(g, inputs)?;
+    if want.len() != run.outputs.len() {
+        return Err(Error::Sim(format!(
+            "output arity mismatch: machine {} vs reference {}",
+            run.outputs.len(),
+            want.len()
+        )));
+    }
+    let mut max_rel_err = 0.0f32;
+    let mut elems = 0usize;
+    for (got, want_t) in run.outputs.iter().zip(&want) {
+        if got.numel() < want_t.numel() {
+            return Err(Error::Sim(format!(
+                "output size mismatch: machine {} vs reference {}",
+                got.numel(),
+                want_t.numel()
+            )));
+        }
+        for (a, b) in got.data.iter().zip(&want_t.data) {
+            if !a.is_finite() || !b.is_finite() {
+                return Err(Error::Sim(format!("non-finite output: {a} vs {b}")));
+            }
+            max_rel_err = max_rel_err.max((a - b).abs() / b.abs().max(1.0));
+            elems += 1;
+        }
+    }
+    Ok(VerifyReport {
+        model: g.name.clone(),
+        precision,
+        elems,
+        max_rel_err,
+        tol: tolerance(precision),
+        measured_cycles: run.stats.cycles,
+        measured_instret: run.stats.instret,
+        predicted_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::memplan;
+    use crate::codegen::graphgen::{self, Schedules};
+    use crate::frontend::{model_zoo, prepare};
+
+    fn lowered(g: &Graph) -> (MachineConfig, memplan::MemPlan, graphgen::Program) {
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(g, 1 << 30, 2 << 30).unwrap();
+        let prog = graphgen::lower_graph(g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        (mach, plan, prog)
+    }
+
+    #[test]
+    fn mlp_runs_and_verifies_through_the_abi() {
+        let g = prepare(model_zoo::mlp(&[16, 32, 8], 2)).unwrap();
+        let (mach, _plan, prog) = lowered(&g);
+        let inputs = synth_inputs(&g, 42);
+        let r = verify(&mach, &g, &prog.abi, &prog.asm, &inputs, DType::F32, None)
+            .unwrap()
+            .into_result()
+            .unwrap();
+        assert!(r.max_rel_err <= 1e-4, "{}", r.summary());
+        assert!(r.measured_cycles > 0 && r.measured_instret > 0);
+        assert_eq!(r.elems, 2 * 8);
+    }
+
+    #[test]
+    fn run_model_reports_stats_and_outputs() {
+        let g = prepare(model_zoo::mlp(&[8, 4], 1)).unwrap();
+        let (mach, _plan, prog) = lowered(&g);
+        let inputs = synth_inputs(&g, 1);
+        let run = run_model(&mach, &g, &prog.abi, &prog.asm, &inputs).unwrap();
+        assert_eq!(run.outputs.len(), 1);
+        assert_eq!(run.outputs[0].shape, vec![1, 4]);
+        assert!(run.stats.instret > 0);
+    }
+
+    #[test]
+    fn synth_inputs_respect_gather_bounds() {
+        let g = prepare(model_zoo::bert_tiny(1, 8)).unwrap();
+        let inputs = synth_inputs(&g, 7);
+        assert_eq!(inputs.len(), 1);
+        // bert_tiny's vocab is 1000: every synthesized id must index it.
+        for v in &inputs[0].data {
+            assert!(*v >= 0.0 && *v < 1000.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn wrong_input_arity_is_an_error() {
+        let g = prepare(model_zoo::mlp(&[8, 4], 1)).unwrap();
+        let (mach, _plan, prog) = lowered(&g);
+        assert!(run_model(&mach, &g, &prog.abi, &prog.asm, &[]).is_err());
+    }
+}

@@ -5,12 +5,12 @@
 
 use std::collections::BTreeSet;
 
-use crate::backend::memplan::{MemPlan, ALIGN};
+use crate::backend::memplan::{MemPlan, ModelAbi, ALIGN};
 use crate::backend::regalloc;
 use crate::ir::Graph;
 use crate::isa::encode::{self, format_of, Format};
 use crate::isa::{decode, Instr, Op};
-use crate::sim::MachineConfig;
+use crate::sim::{layout, MachineConfig};
 use crate::util::error::{Error, Result};
 
 /// A validation report: every check with its outcome.
@@ -193,6 +193,57 @@ pub fn validate_memory(g: &Graph, plan: &MemPlan, mach: &MachineConfig) -> Repor
     r
 }
 
+/// ABI validation: the exported symbol table must cover the whole model
+/// interface and describe addressable, non-overlapping buffers — a runtime
+/// staging by it can never write outside the planned regions.
+pub fn validate_abi(abi: &ModelAbi, g: &Graph, mach: &MachineConfig) -> Report {
+    let mut r = Report::default();
+
+    // 1. Coverage: every graph input and output has a symbol.
+    let missing_in = g.inputs.len().saturating_sub(abi.inputs().count());
+    let missing_out = g.outputs.len().saturating_sub(abi.outputs().count());
+    r.check(
+        "abi.io_coverage",
+        missing_in == 0 && missing_out == 0,
+        format!("{missing_in} inputs / {missing_out} outputs without symbols"),
+    );
+
+    // 2. Word alignment: every symbol is f32-addressable.
+    let misaligned = abi.symbols.iter().filter(|s| s.addr % 4 != 0).count();
+    r.check("abi.alignment", misaligned == 0, format!("{misaligned} misaligned symbols"));
+
+    // 3. Region bounds: [addr, addr+bytes) stays inside DMEM resp. WMEM.
+    let oob = abi
+        .symbols
+        .iter()
+        .filter(|s| {
+            let end = s.addr as u64 + s.bytes as u64;
+            if s.addr >= layout::WMEM_BASE {
+                end > layout::WMEM_BASE as u64 + mach.wmem_bytes as u64
+            } else {
+                end > layout::DMEM_BASE as u64 + mach.dmem_bytes as u64
+            }
+        })
+        .count();
+    r.check("abi.bounds", oob == 0, format!("{oob} symbols out of region bounds"));
+
+    // 4. Distinct inputs never share storage (staging one must not clobber
+    //    another).
+    let ins: Vec<_> = abi.inputs().collect();
+    let mut overlaps = 0usize;
+    for (i, a) in ins.iter().enumerate() {
+        for b in &ins[i + 1..] {
+            let apart = a.addr as u64 + a.bytes as u64 <= b.addr as u64
+                || b.addr as u64 + b.bytes as u64 <= a.addr as u64;
+            if !apart {
+                overlaps += 1;
+            }
+        }
+    }
+    r.check("abi.input_overlap", overlaps == 0, format!("{overlaps} overlapping input pairs"));
+    r
+}
+
 /// Full validation stage: ISA + memory, merged report.
 pub fn validate_all(g: &Graph, prog: &[Instr], plan: &MemPlan, mach: &MachineConfig) -> Report {
     let mut r = validate_isa(prog, mach);
@@ -244,6 +295,30 @@ mod tests {
         let r = validate_isa(&[bad], &MachineConfig::xgen_asic());
         assert!(!r.passed());
         assert!(r.checks.iter().any(|(n, ok, _)| n == "isa.branch_targets" && !ok));
+    }
+
+    #[test]
+    fn abi_of_clean_compile_passes() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 2)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let abi = plan.abi(&g).unwrap();
+        let r = validate_abi(&abi, &g, &mach);
+        assert!(r.passed(), "{}", r.summary());
+    }
+
+    #[test]
+    fn abi_out_of_bounds_symbol_rejected() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let mut abi = plan.abi(&g).unwrap();
+        abi.symbols[0].addr = 1; // misaligned
+        let mut tiny = MachineConfig::xgen_asic();
+        tiny.dmem_bytes = 16;
+        let r = validate_abi(&abi, &g, &tiny);
+        assert!(!r.passed());
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.alignment" && !ok));
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.bounds" && !ok));
     }
 
     #[test]

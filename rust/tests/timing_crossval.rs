@@ -1,0 +1,118 @@
+//! Cross-validation of the analytic timing model (`sim::timing`) against
+//! machine-measured cycles (`sim::machine`) on small kernels — the bound the
+//! auto-tuner's cost signal rests on, asserted so the two can't silently
+//! diverge.
+//!
+//! Stated factors:
+//! * absolute: measured/predicted stays within 16x either way. The window is
+//!   wide because the analytic model spreads vector beats over the ASIC's 8
+//!   parallel pipes while the functional machine retires them serially — a
+//!   deliberate, documented modeling split (see `MachineConfig::vector_pipes`).
+//! * relative: across sizes of the *same* kernel family the ratio drifts by
+//!   less than 4x, so the tuner's ranking signal scales with the measurement
+//!   (cold-miss fractions differ with size, hence the headroom).
+
+use xgenc::codegen::{kernels, KernelArtifact, KernelConfig};
+use xgenc::ir::DType;
+use xgenc::isa::encode::encode_all;
+use xgenc::sim::machine::Machine;
+use xgenc::sim::{timing, MachineConfig};
+
+/// Run one kernel artifact on a fresh machine and return measured cycles.
+/// Operand regions read zero-initialized memory — timing is value-blind.
+fn measured_cycles(mach: &MachineConfig, art: &KernelArtifact) -> u64 {
+    let mut m = Machine::new(mach.clone());
+    let stats = m.run(&encode_all(&art.asm).unwrap()).unwrap();
+    stats.cycles
+}
+
+fn ratio(mach: &MachineConfig, art: &KernelArtifact) -> f64 {
+    let measured = measured_cycles(mach, art) as f64;
+    let predicted = timing::estimate_cycles(mach, &art.nest, &art.mem, art.config.lmul);
+    assert!(predicted > 0.0, "{}: zero prediction", art.name);
+    measured / predicted
+}
+
+const ABS_FACTOR: f64 = 16.0;
+const REL_FACTOR: f64 = 4.0;
+
+fn assert_within(ratios: &[(String, f64)]) {
+    for (name, r) in ratios {
+        assert!(
+            (1.0 / ABS_FACTOR..=ABS_FACTOR).contains(r),
+            "{name}: measured/predicted {r:.2} outside the stated {ABS_FACTOR}x window"
+        );
+    }
+    let max = ratios.iter().map(|(_, r)| *r).fold(f64::MIN, f64::max);
+    let min = ratios.iter().map(|(_, r)| *r).fold(f64::MAX, f64::min);
+    assert!(
+        max / min < REL_FACTOR,
+        "calibration drifts across sizes: ratios {ratios:?}"
+    );
+}
+
+#[test]
+fn vector_matmul_cycles_track_the_analytic_model() {
+    let mach = MachineConfig::xgen_asic();
+    let mut ratios = Vec::new();
+    for size in [16usize, 32, 64] {
+        let art = kernels::matmul(
+            &mach,
+            KernelConfig::default(),
+            size,
+            size,
+            size,
+            0x0000,
+            0x10000,
+            0x20000,
+            DType::F32,
+        )
+        .unwrap();
+        ratios.push((art.name.clone(), ratio(&mach, &art)));
+    }
+    assert_within(&ratios);
+}
+
+#[test]
+fn vector_elementwise_cycles_track_the_analytic_model() {
+    let mach = MachineConfig::xgen_asic();
+    let mut ratios = Vec::new();
+    for len in [256usize, 1024, 4096] {
+        let art = kernels::elementwise_unary(
+            &mach,
+            KernelConfig::default(),
+            kernels::UnaryKind::Relu,
+            len,
+            0x0000,
+            0x20000,
+            DType::F32,
+        )
+        .unwrap();
+        ratios.push((art.name.clone(), ratio(&mach, &art)));
+    }
+    assert_within(&ratios);
+}
+
+#[test]
+fn scalar_matmul_cycles_track_the_analytic_model() {
+    // The CPU baseline has no vector engine, so here the two models share
+    // the same serial execution shape — the window still holds.
+    let mach = MachineConfig::cpu_a78();
+    let mut ratios = Vec::new();
+    for size in [16usize, 32] {
+        let art = kernels::matmul(
+            &mach,
+            KernelConfig::default(),
+            size,
+            size,
+            size,
+            0x0000,
+            0x10000,
+            0x20000,
+            DType::F32,
+        )
+        .unwrap();
+        ratios.push((art.name.clone(), ratio(&mach, &art)));
+    }
+    assert_within(&ratios);
+}
