@@ -1,0 +1,126 @@
+//! Host wall-clock benchmark of the simulator itself: the pre-decoded fast
+//! path (`Machine::run`) vs the naive decode-per-step reference loop
+//! (`Machine::run_reference`) over the executable zoo — emitted to
+//! `BENCH_sim_wallclock.json` so the speedup is a tracked artifact like
+//! `BENCH_sim_cycles.json`.
+//!
+//! Doubles as a perf smoke: exits nonzero if the fast path is not
+//! measurably faster than the reference loop on any model, or if the two
+//! paths disagree on stats or output bits (the equivalence suite's
+//! invariant, re-checked on the exact binaries being timed).
+
+use std::time::Instant;
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::DType;
+use xgenc::isa::encode::encode_all;
+use xgenc::pipeline::{CompileOptions, CompileSession, CompiledModel};
+use xgenc::runtime::{simrun, store};
+use xgenc::sim::machine::{Machine, RunStats};
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+
+/// Fast path must beat the reference loop by at least this factor on every
+/// model (CI perf smoke). The observed margin is ~an order of magnitude;
+/// 1.5x is the "something regressed" tripwire, not the target.
+const MIN_SPEEDUP: f64 = 1.5;
+
+fn staged(c: &CompiledModel, inputs: &[xgenc::ir::tensor::Tensor]) -> Machine {
+    let mut m = Machine::new(c.mach.clone());
+    m.max_instret = simrun::MAX_INSTRET;
+    simrun::stage_weights(&mut m, &c.graph, c.abi()).unwrap();
+    simrun::stage_inputs(&mut m, c.abi(), inputs).unwrap();
+    m
+}
+
+fn out_bits(m: &mut Machine, c: &CompiledModel) -> Vec<Vec<u32>> {
+    simrun::read_outputs(m, c.abi())
+        .unwrap()
+        .iter()
+        .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn main() {
+    let cases: Vec<(&str, xgenc::ir::Graph, DType)> = vec![
+        ("mlp", model_zoo::mlp(&[256, 128, 64, 10], 1), DType::F32),
+        ("resnet_cifar", model_zoo::resnet_cifar(1), DType::F32),
+        ("mobilenet_cifar", model_zoo::mobilenet_cifar(1), DType::F32),
+        ("bert_tiny", model_zoo::bert_tiny(1, 8), DType::F32),
+        ("vit_tiny", model_zoo::vit_tiny(1), DType::F32),
+        ("resnet_cifar-int8", model_zoo::resnet_cifar(1), DType::I8),
+    ];
+    let mut t = Table::new(
+        "Simulator wall-clock: pre-decoded fast path vs decode-per-step reference",
+        &["Model", "Instret", "Fast ms", "Fast MIPS", "Ref ms", "Ref MIPS", "Speedup"],
+    );
+    let mut rows = Vec::new();
+    let mut min_speedup = f64::MAX;
+    for (name, graph, precision) in cases {
+        let g = prepare(graph).unwrap();
+        let mut session = CompileSession::new(CompileOptions {
+            precision,
+            ..Default::default()
+        });
+        let c = session.compile(&g).unwrap();
+        let words = encode_all(&c.asm).unwrap();
+        let inputs = simrun::synth_inputs(&c.graph, 42);
+
+        let mut fast_m = staged(&c, &inputs);
+        let t0 = Instant::now();
+        let fast: RunStats = fast_m.run(&words).unwrap();
+        let fast_s = t0.elapsed().as_secs_f64();
+        let fast_out = out_bits(&mut fast_m, &c);
+
+        let mut ref_m = staged(&c, &inputs);
+        let t1 = Instant::now();
+        let reference: RunStats = ref_m.run_reference(&words).unwrap();
+        let ref_s = t1.elapsed().as_secs_f64();
+        let ref_out = out_bits(&mut ref_m, &c);
+
+        assert_eq!(fast, reference, "{name}: paths disagree on RunStats");
+        assert_eq!(fast_out, ref_out, "{name}: paths disagree on output bits");
+
+        let instret = fast.instret as f64;
+        let fast_mips = instret / fast_s / 1e6;
+        let ref_mips = instret / ref_s / 1e6;
+        let speedup = ref_s / fast_s;
+        min_speedup = min_speedup.min(speedup);
+        t.row(&[
+            name.to_string(),
+            format!("{}", fast.instret),
+            f(fast_s * 1e3, 1),
+            f(fast_mips, 1),
+            f(ref_s * 1e3, 1),
+            f(ref_mips, 1),
+            f(speedup, 1),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str_(name)),
+            ("precision", Json::str_(precision.name())),
+            ("instret", Json::Num(instret)),
+            ("fast_ms", Json::Num(fast_s * 1e3)),
+            ("fast_mips", Json::Num(fast_mips)),
+            ("reference_ms", Json::Num(ref_s * 1e3)),
+            ("reference_mips", Json::Num(ref_mips)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    t.print();
+    let n = rows.len();
+    let report = Json::obj(vec![
+        ("bench", Json::str_("sim_wallclock")),
+        ("min_speedup", Json::Num(min_speedup)),
+        ("models", Json::Arr(rows)),
+    ]);
+    let out = std::path::Path::new("BENCH_sim_wallclock.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
+    assert!(
+        min_speedup >= MIN_SPEEDUP,
+        "fast path not measurably faster: min speedup {min_speedup:.2}x < {MIN_SPEEDUP}x"
+    );
+    println!(
+        "sim wallclock OK: {n} models, fast path >= {min_speedup:.1}x the reference loop everywhere"
+    );
+}

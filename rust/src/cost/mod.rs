@@ -39,19 +39,35 @@ impl CostModel for analytical::AnalyticalModel {
     }
 }
 
+/// Streaming FNV-1a over formatted bytes: hashes `Debug` output without
+/// materializing the string — `measure` sits on the tuner's inner loop and
+/// used to allocate a fresh `String` per call just to seed its noise term.
+struct FnvWriter(u64);
+
+impl std::fmt::Write for FnvWriter {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for b in s.bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+        Ok(())
+    }
+}
+
 /// "Hardware measurement": generate the kernel at this config and run the
 /// analytic timing model over its loop nest + memory profile, plus a
 /// deterministic measurement-noise term (hash-seeded ±5%) — the proxy for
 /// the paper's on-device runs (DESIGN.md §Substitutions).
 pub fn measure(mach: &MachineConfig, sig: &KernelSig, config: KernelConfig) -> f64 {
+    use std::fmt::Write;
     let art = sig.generate(mach, config);
     let cycles = crate::sim::timing::estimate_cycles(mach, &art.nest, &art.mem, config.lmul);
     // Deterministic noise: same (sig, config) always measures the same.
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in format!("{sig:?}{config:?}").bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
+    // (FNV-1a over the same bytes `format!("{sig:?}{config:?}")` produced,
+    // so historical measurements are unchanged.)
+    let mut w = FnvWriter(0xcbf29ce484222325);
+    let _ = write!(w, "{sig:?}{config:?}");
+    let h = w.0;
     let noise = 1.0 + 0.05 * (((h >> 16) % 2000) as f64 / 1000.0 - 1.0);
     (cycles.max(1.0) * noise).log2()
 }

@@ -1,12 +1,17 @@
 //! Instruction decoding — exact inverse of [`super::encode`].
 //!
-//! The functional simulator fetches encoded words and decodes through here,
-//! so the simulator exercises the *binary* encoding end-to-end, and the
-//! encode∘decode = id property test doubles as encoding validation.
+//! The functional simulator exercises the *binary* encoding end-to-end
+//! through here, and the encode∘decode = id property test doubles as
+//! encoding validation. Since the pre-decoded fast path landed, the
+//! simulator calls this once per program word at predecode time
+//! ([`crate::sim::predecode`]) rather than once per retired instruction —
+//! only the naive reference loop (`Machine::run_reference`) still decodes
+//! on every fetch.
 
 use crate::isa::{Instr, Op};
 use crate::util::error::{Error, Result};
 
+#[inline]
 fn sext(v: u32, bits: u32) -> i32 {
     let shift = 32 - bits;
     ((v << shift) as i32) >> shift
@@ -171,6 +176,7 @@ pub fn decode(word: u32) -> Result<Instr> {
     Ok(instr)
 }
 
+#[cold]
 fn bad(word: u32, what: &str) -> Error {
     Error::Validation(format!("illegal instruction {word:#010x}: bad {what}"))
 }

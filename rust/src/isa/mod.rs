@@ -39,6 +39,66 @@ pub enum OpClass {
     VRed,
 }
 
+impl OpClass {
+    /// Number of distinct classes — sizes the simulator's fixed per-class
+    /// counter arrays (no map lookups on the execution hot path).
+    pub const COUNT: usize = 19;
+
+    /// Every class, in declaration (= index) order.
+    pub const ALL: [OpClass; OpClass::COUNT] = [
+        OpClass::Alu,
+        OpClass::Mul,
+        OpClass::Div,
+        OpClass::Branch,
+        OpClass::Jump,
+        OpClass::Load,
+        OpClass::Store,
+        OpClass::FAlu,
+        OpClass::FMul,
+        OpClass::FDiv,
+        OpClass::FMa,
+        OpClass::FCustom,
+        OpClass::VSet,
+        OpClass::VLoad,
+        OpClass::VStore,
+        OpClass::VAlu,
+        OpClass::VMul,
+        OpClass::VFma,
+        OpClass::VRed,
+    ];
+
+    /// Dense index into `[_; OpClass::COUNT]` counter arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase name (RunStats keys, bench tables, energy reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Alu => "alu",
+            OpClass::Mul => "mul",
+            OpClass::Div => "div",
+            OpClass::Branch => "branch",
+            OpClass::Jump => "jump",
+            OpClass::Load => "load",
+            OpClass::Store => "store",
+            OpClass::FAlu => "falu",
+            OpClass::FMul => "fmul",
+            OpClass::FDiv => "fdiv",
+            OpClass::FMa => "fma",
+            OpClass::FCustom => "fcustom",
+            OpClass::VSet => "vset",
+            OpClass::VLoad => "vload",
+            OpClass::VStore => "vstore",
+            OpClass::VAlu => "valu",
+            OpClass::VMul => "vmul",
+            OpClass::VFma => "vfma",
+            OpClass::VRed => "vred",
+        }
+    }
+}
+
 macro_rules! isa {
     ($($variant:ident => ($name:literal, $class:ident)),+ $(,)?) => {
         /// The 61 opcodes.
@@ -290,5 +350,40 @@ mod tests {
         assert_eq!(Op::VfmaccVV.class(), OpClass::VFma);
         assert_eq!(Op::Lw.class(), OpClass::Load);
         assert_eq!(Op::FexpS.class(), OpClass::FCustom);
+    }
+
+    #[test]
+    fn class_indices_are_dense_and_names_unique() {
+        assert_eq!(OpClass::ALL.len(), OpClass::COUNT);
+        for (i, c) in OpClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{:?}", c);
+            // Exhaustiveness guard: adding an OpClass variant without
+            // extending ALL/COUNT makes this wildcard-free match (and so
+            // the whole crate) fail to compile.
+            match c {
+                OpClass::Alu
+                | OpClass::Mul
+                | OpClass::Div
+                | OpClass::Branch
+                | OpClass::Jump
+                | OpClass::Load
+                | OpClass::Store
+                | OpClass::FAlu
+                | OpClass::FMul
+                | OpClass::FDiv
+                | OpClass::FMa
+                | OpClass::FCustom
+                | OpClass::VSet
+                | OpClass::VLoad
+                | OpClass::VStore
+                | OpClass::VAlu
+                | OpClass::VMul
+                | OpClass::VFma
+                | OpClass::VRed => {}
+            }
+        }
+        let names: std::collections::BTreeSet<_> =
+            OpClass::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), OpClass::COUNT);
     }
 }

@@ -46,7 +46,9 @@ pub fn tolerance(dt: DType) -> f32 {
     }
 }
 
-/// Write every weight at its ABI address (WMEM).
+/// Write every weight at its ABI address (WMEM). One bulk copy per tensor:
+/// the machine's slice helpers resolve the address map once per call, not
+/// once per element, so staging zoo-scale weights is effectively memcpy.
 pub fn stage_weights(m: &mut Machine, g: &Graph, abi: &ModelAbi) -> Result<()> {
     for sym in abi.weights() {
         let init = g.initializers.get(&sym.tensor).ok_or_else(|| {
@@ -78,9 +80,8 @@ pub fn stage_inputs(m: &mut Machine, abi: &ModelAbi, inputs: &[Tensor]) -> Resul
             )));
         }
         if sym.dtype == DType::I32 {
-            for (i, v) in t.data.iter().enumerate() {
-                m.store_u32(sym.addr + (i * 4) as u32, *v as i32 as u32)?;
-            }
+            let words: Vec<u32> = t.data.iter().map(|v| *v as i32 as u32).collect();
+            m.write_u32_slice(sym.addr, &words)?;
         } else {
             m.write_f32_slice(sym.addr, &t.data)?;
         }
@@ -154,9 +155,7 @@ pub fn run_dispatch(
     m.max_instret = MAX_INSTRET;
     stage_weights(&mut m, g, abi)?;
     stage_inputs(&mut m, abi, inputs)?;
-    for (i, v) in dims.iter().enumerate() {
-        m.store_u32(image.dims_addr + (i * 4) as u32, *v)?;
-    }
+    m.write_u32_slice(image.dims_addr, dims)?;
     let stats = m.run(&image.words)?;
     let outputs = read_outputs(&mut m, abi)?;
     Ok(SimRun { outputs, stats })

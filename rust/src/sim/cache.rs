@@ -29,6 +29,13 @@ impl CacheParams {
 #[derive(Debug, Clone)]
 struct Level {
     params: CacheParams,
+    /// Set count, computed once (the hot path used to re-derive it — three
+    /// integer divisions — on every access).
+    sets: u64,
+    /// `(line_shift, set_shift)` when the line size and set count are both
+    /// powers of two (true for every shipped config): the address → set/tag
+    /// split becomes shifts and a mask instead of u64 divisions.
+    shifts: Option<(u32, u32)>,
     /// tags[set * assoc + way] = Some(tag)
     tags: Vec<Option<u64>>,
     /// LRU stamps, parallel to `tags`.
@@ -41,8 +48,16 @@ struct Level {
 impl Level {
     fn new(params: CacheParams) -> Level {
         let slots = params.num_sets() * params.assoc;
+        let sets = params.num_sets() as u64;
+        let shifts = if params.line.is_power_of_two() && sets.is_power_of_two() {
+            Some((params.line.trailing_zeros(), sets.trailing_zeros()))
+        } else {
+            None
+        };
         Level {
             params,
+            sets,
+            shifts,
             tags: vec![None; slots],
             stamps: vec![0; slots],
             hits: 0,
@@ -53,13 +68,21 @@ impl Level {
 
     /// Access a line address; true = hit (and refreshes LRU), false = miss
     /// (and fills).
+    #[inline]
     fn access(&mut self, addr: u64) -> bool {
         self.tick += 1;
-        let line = addr / self.params.line as u64;
-        let set = (line % self.params.num_sets() as u64) as usize;
-        let tag = line / self.params.num_sets() as u64;
+        let (set, tag) = match self.shifts {
+            Some((line_shift, set_shift)) => {
+                let line = addr >> line_shift;
+                (((line & (self.sets - 1)) as usize), line >> set_shift)
+            }
+            None => {
+                let line = addr / self.params.line as u64;
+                (((line % self.sets) as usize), line / self.sets)
+            }
+        };
         let base = set * self.params.assoc;
-        let ways = &mut self.tags[base..base + self.params.assoc];
+        let ways = &self.tags[base..base + self.params.assoc];
         if let Some(w) = ways.iter().position(|t| *t == Some(tag)) {
             self.hits += 1;
             self.stamps[base + w] = self.tick;
@@ -117,6 +140,7 @@ impl Hierarchy {
     }
 
     /// Access one byte address; returns the total latency in cycles.
+    #[inline]
     pub fn access(&mut self, addr: u64) -> u64 {
         let mut latency = 0;
         for lvl in self.levels.iter_mut() {
@@ -281,6 +305,21 @@ mod tests {
         }
         assert!(h.stats()[0].hit_rate() < 0.05);
         assert!(h.mem_accesses > 200);
+    }
+
+    #[test]
+    fn non_pow2_geometry_uses_division_fallback() {
+        // 96-byte lines: the shift fast path can't apply, the division
+        // fallback must still model a 1-set, 3-way LRU correctly.
+        let mut h = Hierarchy::new(
+            &[CacheParams { name: "L1", size: 288, line: 96, assoc: 3, latency: 2, energy_pj: 1.0 }],
+            50,
+        );
+        h.access(0);
+        h.access(96);
+        h.access(192);
+        assert_eq!(h.access(0), 2, "line 0 resident after fills");
+        assert!(h.access(288) > 2, "fourth line must miss");
     }
 
     #[test]

@@ -1,25 +1,48 @@
-//! Functional RV32I+RVV machine: fetch → decode → execute over *encoded*
-//! binaries, with cycle and cache accounting.
+//! Functional RV32I+RVV machine: runs *encoded* binaries with cycle and
+//! cache accounting.
 //!
 //! This is the hardware-in-the-loop stand-in: generated kernels actually run
 //! here, numerics are compared against the IR executor, and the cycle
 //! counts are the "measurements" the learned cost model trains on (small
 //! kernels; the analytic `timing` model extrapolates for big ones and is
 //! cross-validated against this machine).
+//!
+//! Execution has two paths:
+//!
+//! * **Fast path** (the default): [`Machine::run`] predecodes the binary
+//!   once ([`crate::sim::predecode`]) and drives [`Machine::run_predecoded`],
+//!   a tight index-based dispatch loop — no per-instruction decode, fixed
+//!   `[u64; OpClass::COUNT]` class counters, a flat contiguous vector
+//!   register file, and one bounds check per memory access through a
+//!   unified DMEM/WMEM view. `run` is a compatibility wrapper: same
+//!   signature, same semantics, same [`RunStats`].
+//! * **Reference path**: [`Machine::run_reference`] is the naive
+//!   decode-per-step loop (fetch → `decode::decode` → execute, `BTreeMap`
+//!   class bumps, per-element vector memory). It exists as the golden
+//!   baseline: `rust/tests/sim_equiv.rs` proves both paths agree
+//!   bit-for-bit on numerics and exactly on cycles/instret/class counts/
+//!   cache stats, and `benches/bench_sim_wallclock.rs` tracks the speedup.
 
 use std::collections::BTreeMap;
 
 use crate::isa::{decode, regs, Op, OpClass};
 use crate::sim::cache::Hierarchy;
+use crate::sim::predecode::{self, MicroOp, Predecoded, Slot};
 use crate::sim::{layout, MachineConfig};
 use crate::util::error::{Error, Result};
 
 /// Execution summary.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RunStats {
     pub cycles: u64,
     pub instret: u64,
     pub class_counts: BTreeMap<&'static str, u64>,
+}
+
+/// Where execution goes after one step.
+enum Ctl {
+    Next,
+    Jump(usize),
 }
 
 /// The simulated machine.
@@ -27,8 +50,10 @@ pub struct Machine {
     pub cfg: MachineConfig,
     pub x: [i32; 32],
     pub f: [f32; 32],
-    /// Vector register file: 32 regs x lanes f32.
-    pub v: Vec<Vec<f32>>,
+    /// Vector register file, flat: register `i` occupies
+    /// `v[i * lanes .. (i + 1) * lanes]` — LMUL groups are contiguous.
+    v: Vec<f32>,
+    lanes: usize,
     /// Active vector length (elements) and register-group multiplier.
     pub vl: usize,
     pub lmul: usize,
@@ -37,9 +62,57 @@ pub struct Machine {
     pub cycles: u64,
     pub instret: u64,
     pub hier: Hierarchy,
-    class_counts: BTreeMap<OpClass, u64>,
+    class_counts: [u64; OpClass::COUNT],
     /// Instruction budget guard against runaway programs.
     pub max_instret: u64,
+    /// Issue-width-scaled cycle cost for 1- and 2-cycle Alu/Branch/Jump ops
+    /// (precomputed so the hot loop never touches floating point).
+    issue_scaled: [u64; 3],
+}
+
+#[cold]
+fn oob(region: &'static str, addr: u32, len: usize) -> Error {
+    Error::Sim(format!(
+        "{region} OOB access of {len} bytes at {addr:#010x}"
+    ))
+}
+
+#[cold]
+fn scalar_only() -> Error {
+    Error::Sim("vector instruction on scalar-only platform".into())
+}
+
+/// Unified DMEM/WMEM read view: one region branch, one bounds check.
+/// Free functions (not methods) so vector ops can hold a memory view and a
+/// mutable vector-register slice at the same time (disjoint field borrows).
+#[inline]
+fn view<'a>(dmem: &'a [u8], wmem: &'a [u8], addr: u32, len: usize) -> Result<&'a [u8]> {
+    if addr >= layout::WMEM_BASE {
+        let off = (addr - layout::WMEM_BASE) as usize;
+        wmem.get(off..off + len).ok_or_else(|| oob("WMEM", addr, len))
+    } else {
+        let off = addr as usize;
+        dmem.get(off..off + len).ok_or_else(|| oob("DMEM", addr, len))
+    }
+}
+
+/// Mutable counterpart of [`view`].
+#[inline]
+fn view_mut<'a>(
+    dmem: &'a mut [u8],
+    wmem: &'a mut [u8],
+    addr: u32,
+    len: usize,
+) -> Result<&'a mut [u8]> {
+    if addr >= layout::WMEM_BASE {
+        let off = (addr - layout::WMEM_BASE) as usize;
+        wmem.get_mut(off..off + len)
+            .ok_or_else(|| oob("WMEM", addr, len))
+    } else {
+        let off = addr as usize;
+        dmem.get_mut(off..off + len)
+            .ok_or_else(|| oob("DMEM", addr, len))
+    }
 }
 
 impl Machine {
@@ -53,11 +126,18 @@ impl Machine {
         let mut x = [0; 32];
         // ABI: stack pointer starts at DMEM top (grows down).
         x[regs::SP as usize] = dmem.len() as i32;
+        let iw = cfg.issue_width;
+        let issue_scaled = [
+            1,
+            ((1.0_f64 / iw).ceil() as u64).max(1),
+            ((2.0_f64 / iw).ceil() as u64).max(1),
+        ];
         Machine {
             cfg,
             x,
             f: [0.0; 32],
-            v: vec![vec![0.0; lanes]; 32],
+            v: vec![0.0; 32 * lanes],
+            lanes,
             vl: lanes,
             lmul: 1,
             dmem,
@@ -65,47 +145,35 @@ impl Machine {
             cycles: 0,
             instret: 0,
             hier,
-            class_counts: BTreeMap::new(),
+            class_counts: [0; OpClass::COUNT],
             max_instret: 500_000_000,
+            issue_scaled,
         }
     }
 
     // -- memory ------------------------------------------------------------
 
-    fn mem(&mut self, addr: u32) -> Result<(&mut Vec<u8>, usize)> {
-        if addr >= layout::WMEM_BASE {
-            let off = (addr - layout::WMEM_BASE) as usize;
-            if off >= self.wmem.len() {
-                return Err(Error::Sim(format!("WMEM OOB access at {addr:#010x}")));
-            }
-            Ok((&mut self.wmem, off))
-        } else {
-            let off = addr as usize;
-            if off >= self.dmem.len() {
-                return Err(Error::Sim(format!("DMEM OOB access at {addr:#010x}")));
-            }
-            Ok((&mut self.dmem, off))
-        }
+    /// Read-only view of `len` bytes at `addr` (single bounds check).
+    pub fn mem_ref(&self, addr: u32, len: usize) -> Result<&[u8]> {
+        view(&self.dmem, &self.wmem, addr, len)
     }
 
-    pub fn load_u32(&mut self, addr: u32) -> Result<u32> {
-        let (m, o) = self.mem(addr)?;
-        if o + 4 > m.len() {
-            return Err(Error::Sim(format!("OOB word load at {addr:#010x}")));
-        }
-        Ok(u32::from_le_bytes([m[o], m[o + 1], m[o + 2], m[o + 3]]))
+    /// Mutable view of `len` bytes at `addr` (single bounds check).
+    pub fn mem_mut(&mut self, addr: u32, len: usize) -> Result<&mut [u8]> {
+        view_mut(&mut self.dmem, &mut self.wmem, addr, len)
+    }
+
+    pub fn load_u32(&self, addr: u32) -> Result<u32> {
+        let b = self.mem_ref(addr, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn store_u32(&mut self, addr: u32, val: u32) -> Result<()> {
-        let (m, o) = self.mem(addr)?;
-        if o + 4 > m.len() {
-            return Err(Error::Sim(format!("OOB word store at {addr:#010x}")));
-        }
-        m[o..o + 4].copy_from_slice(&val.to_le_bytes());
+        self.mem_mut(addr, 4)?.copy_from_slice(&val.to_le_bytes());
         Ok(())
     }
 
-    pub fn load_f32(&mut self, addr: u32) -> Result<f32> {
+    pub fn load_f32(&self, addr: u32) -> Result<f32> {
         Ok(f32::from_bits(self.load_u32(addr)?))
     }
 
@@ -113,30 +181,436 @@ impl Machine {
         self.store_u32(addr, val.to_bits())
     }
 
-    /// Bulk helpers for the test/bench harnesses.
+    /// Bulk staging: one address-map resolve + bounds check for the whole
+    /// tensor, then a straight byte copy (used by `runtime::simrun` to
+    /// stage weights/inputs and read outputs back).
     pub fn write_f32_slice(&mut self, addr: u32, vals: &[f32]) -> Result<()> {
-        for (i, &v) in vals.iter().enumerate() {
-            self.store_f32(addr + (i * 4) as u32, v)?;
+        let dst = self.mem_mut(addr, vals.len() * 4)?;
+        for (c, v) in dst.chunks_exact_mut(4).zip(vals) {
+            c.copy_from_slice(&v.to_le_bytes());
         }
         Ok(())
     }
 
-    pub fn read_f32_slice(&mut self, addr: u32, n: usize) -> Result<Vec<f32>> {
-        (0..n).map(|i| self.load_f32(addr + (i * 4) as u32)).collect()
+    pub fn read_f32_slice(&self, addr: u32, n: usize) -> Result<Vec<f32>> {
+        let src = self.mem_ref(addr, n * 4)?;
+        Ok(src
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn write_u32_slice(&mut self, addr: u32, vals: &[u32]) -> Result<()> {
+        let dst = self.mem_mut(addr, vals.len() * 4)?;
+        for (c, v) in dst.chunks_exact_mut(4).zip(vals) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
     }
 
     pub fn write_i8_slice(&mut self, addr: u32, vals: &[i8]) -> Result<()> {
-        for (i, &v) in vals.iter().enumerate() {
-            let (m, o) = self.mem(addr + i as u32)?;
-            m[o] = v as u8;
+        let dst = self.mem_mut(addr, vals.len())?;
+        for (d, &v) in dst.iter_mut().zip(vals) {
+            *d = v as u8;
         }
         Ok(())
     }
 
-    // -- execution ----------------------------------------------------------
+    // -- accounting ---------------------------------------------------------
 
-    fn bump(&mut self, class: OpClass, cycles: u64) {
-        *self.class_counts.entry(class).or_insert(0) += 1;
+    /// Bump for issue-width-scaled classes (Alu/Branch/Jump), `c` ∈ {1, 2}.
+    #[inline(always)]
+    fn bump_issue(&mut self, class: OpClass, c: usize) {
+        self.class_counts[class.index()] += 1;
+        self.cycles += self.issue_scaled[c];
+    }
+
+    /// Bump for everything else: cycles charged as given (min 1).
+    #[inline(always)]
+    fn bump_raw(&mut self, class: OpClass, cycles: u64) {
+        self.class_counts[class.index()] += 1;
+        self.cycles += cycles.max(1);
+    }
+
+    #[inline(always)]
+    fn wx(&mut self, rd: usize, val: u32) {
+        if rd != regs::ZERO as usize {
+            self.x[rd] = val as i32;
+        }
+    }
+
+    #[inline(always)]
+    fn wxi(&mut self, rd: usize, val: i32) {
+        if rd != regs::ZERO as usize {
+            self.x[rd] = val;
+        }
+    }
+
+    /// Stats of the run that started at the given counter snapshots —
+    /// everything, including class counts, is a per-run delta.
+    fn stats_since(
+        &self,
+        start_cycles: u64,
+        start_instret: u64,
+        start_counts: &[u64; OpClass::COUNT],
+    ) -> RunStats {
+        RunStats {
+            cycles: self.cycles - start_cycles,
+            instret: self.instret - start_instret,
+            class_counts: OpClass::ALL
+                .iter()
+                .map(|c| (c.name(), self.class_counts[c.index()] - start_counts[c.index()]))
+                .filter(|(_, n)| *n > 0)
+                .collect(),
+        }
+    }
+
+    #[cold]
+    fn budget_exceeded(&self) -> Error {
+        Error::Sim(format!(
+            "instruction budget exceeded ({})",
+            self.max_instret
+        ))
+    }
+
+    // -- execution: fast path ----------------------------------------------
+
+    /// Execute an encoded program until it falls off the end.
+    /// Returns run statistics; machine state persists for inspection.
+    ///
+    /// Compatibility wrapper: predecodes once, then runs the fast dispatch
+    /// loop ([`Self::run_predecoded`]). Identical observable behavior to
+    /// the historical decode-per-step loop (kept as
+    /// [`Self::run_reference`]).
+    pub fn run(&mut self, prog: &[u32]) -> Result<RunStats> {
+        let p = predecode::predecode(prog);
+        self.run_predecoded(&p)
+    }
+
+    /// The fast path: drive a predecoded program through the index-based
+    /// dispatch loop. Callers that run the same binary many times can
+    /// predecode once and amortize even the single decode pass.
+    pub fn run_predecoded(&mut self, p: &Predecoded) -> Result<RunStats> {
+        let start_instret = self.instret;
+        let start_cycles = self.cycles;
+        let start_counts = self.class_counts;
+        let n = p.len();
+        let mut idx = 0usize;
+        while idx < n {
+            if self.instret - start_instret > self.max_instret {
+                return Err(self.budget_exceeded());
+            }
+            match &p.slots[idx] {
+                Slot::Op(u) => {
+                    self.instret += 1;
+                    idx = match self.step(u)? {
+                        Ctl::Next => idx + 1,
+                        Ctl::Jump(t) => t,
+                    };
+                }
+                Slot::Illegal(w) => {
+                    // Re-derive the exact decode error lazily, preserving
+                    // the decode-per-step failure semantics.
+                    decode::decode(*w)?;
+                    return Err(Error::Sim(format!(
+                        "word {w:#010x} decoded on retry"
+                    )));
+                }
+                Slot::Misaligned(t) => {
+                    // The word decoded fine — the reference loop retires its
+                    // instret bump before faulting, so match that state.
+                    self.instret += 1;
+                    return Err(Error::Sim(format!(
+                        "misaligned branch target {t:#010x}"
+                    )));
+                }
+            }
+        }
+        Ok(self.stats_since(start_cycles, start_instret, &start_counts))
+    }
+
+    /// Execute one resolved micro-op.
+    #[inline(always)]
+    fn step(&mut self, u: &MicroOp) -> Result<Ctl> {
+        use Op::*;
+        match u.op {
+            // -- scalar integer ------------------------------------------
+            Lui => {
+                self.wx(u.rd, u.aux);
+                self.bump_issue(OpClass::Alu, 1);
+            }
+            Auipc => {
+                self.wx(u.rd, u.aux);
+                self.bump_issue(OpClass::Alu, 1);
+            }
+            Jal => {
+                self.wx(u.rd, u.aux);
+                self.bump_issue(OpClass::Jump, 1);
+                return Ok(Ctl::Jump(u.target));
+            }
+            Jalr => {
+                let t = (self.x[u.rs1] as u32).wrapping_add(u.imm as u32) & !1;
+                self.wx(u.rd, u.aux);
+                self.bump_issue(OpClass::Jump, 1);
+                if t % 4 != 0 {
+                    return Err(Error::Sim(format!(
+                        "misaligned jalr target {t:#010x}"
+                    )));
+                }
+                return Ok(Ctl::Jump((t / 4) as usize));
+            }
+            Beq | Bne | Blt | Bge => {
+                let a = self.x[u.rs1];
+                let b = self.x[u.rs2];
+                let taken = match u.op {
+                    Beq => a == b,
+                    Bne => a != b,
+                    Blt => a < b,
+                    _ => a >= b,
+                };
+                if taken {
+                    if u.target == predecode::MISALIGNED_TARGET {
+                        return Err(Error::Sim(format!(
+                            "misaligned branch target {:#010x}",
+                            u.aux
+                        )));
+                    }
+                    self.bump_issue(OpClass::Branch, 2); // taken-branch penalty
+                    return Ok(Ctl::Jump(u.target));
+                }
+                self.bump_issue(OpClass::Branch, 1);
+            }
+            Lw => {
+                let addr = (self.x[u.rs1] as u32).wrapping_add(u.imm as u32);
+                let lat = self.hier.access(addr as u64);
+                let val = self.load_u32(addr)?;
+                self.wx(u.rd, val);
+                self.bump_raw(OpClass::Load, lat);
+            }
+            Sw => {
+                let addr = (self.x[u.rs1] as u32).wrapping_add(u.imm as u32);
+                let lat = self.hier.access(addr as u64);
+                self.store_u32(addr, self.x[u.rs2] as u32)?;
+                self.bump_raw(OpClass::Store, lat.min(2)); // store buffer hides latency
+            }
+            Addi => { self.wxi(u.rd, self.x[u.rs1].wrapping_add(u.imm)); self.bump_issue(OpClass::Alu, 1); }
+            Slti => { self.wxi(u.rd, (self.x[u.rs1] < u.imm) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Andi => { self.wxi(u.rd, self.x[u.rs1] & u.imm); self.bump_issue(OpClass::Alu, 1); }
+            Ori => { self.wxi(u.rd, self.x[u.rs1] | u.imm); self.bump_issue(OpClass::Alu, 1); }
+            Xori => { self.wxi(u.rd, self.x[u.rs1] ^ u.imm); self.bump_issue(OpClass::Alu, 1); }
+            Slli => { self.wxi(u.rd, ((self.x[u.rs1] as u32) << u.imm) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Srli => { self.wxi(u.rd, ((self.x[u.rs1] as u32) >> u.imm) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Srai => { self.wxi(u.rd, self.x[u.rs1] >> u.imm); self.bump_issue(OpClass::Alu, 1); }
+            Add => { self.wxi(u.rd, self.x[u.rs1].wrapping_add(self.x[u.rs2])); self.bump_issue(OpClass::Alu, 1); }
+            Sub => { self.wxi(u.rd, self.x[u.rs1].wrapping_sub(self.x[u.rs2])); self.bump_issue(OpClass::Alu, 1); }
+            Sll => { self.wxi(u.rd, ((self.x[u.rs1] as u32) << (self.x[u.rs2] & 31)) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Srl => { self.wxi(u.rd, ((self.x[u.rs1] as u32) >> (self.x[u.rs2] & 31)) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Sra => { self.wxi(u.rd, self.x[u.rs1] >> (self.x[u.rs2] & 31)); self.bump_issue(OpClass::Alu, 1); }
+            And => { self.wxi(u.rd, self.x[u.rs1] & self.x[u.rs2]); self.bump_issue(OpClass::Alu, 1); }
+            Or => { self.wxi(u.rd, self.x[u.rs1] | self.x[u.rs2]); self.bump_issue(OpClass::Alu, 1); }
+            Xor => { self.wxi(u.rd, self.x[u.rs1] ^ self.x[u.rs2]); self.bump_issue(OpClass::Alu, 1); }
+            Slt => { self.wxi(u.rd, (self.x[u.rs1] < self.x[u.rs2]) as i32); self.bump_issue(OpClass::Alu, 1); }
+            Mul => { self.wxi(u.rd, self.x[u.rs1].wrapping_mul(self.x[u.rs2])); self.bump_raw(OpClass::Mul, 3); }
+            Mulh => {
+                let p = (self.x[u.rs1] as i64) * (self.x[u.rs2] as i64);
+                self.wxi(u.rd, (p >> 32) as i32);
+                self.bump_raw(OpClass::Mul, 3);
+            }
+            Div => {
+                let d = self.x[u.rs2];
+                self.wxi(u.rd, if d == 0 { -1 } else { self.x[u.rs1].wrapping_div(d) });
+                self.bump_raw(OpClass::Div, 20);
+            }
+            Rem => {
+                let d = self.x[u.rs2];
+                self.wxi(u.rd, if d == 0 { self.x[u.rs1] } else { self.x[u.rs1].wrapping_rem(d) });
+                self.bump_raw(OpClass::Div, 20);
+            }
+
+            // -- scalar float --------------------------------------------
+            Flw => {
+                let addr = (self.x[u.rs1] as u32).wrapping_add(u.imm as u32);
+                let lat = self.hier.access(addr as u64);
+                self.f[u.rd] = self.load_f32(addr)?;
+                self.bump_raw(OpClass::Load, lat);
+            }
+            Fsw => {
+                let addr = (self.x[u.rs1] as u32).wrapping_add(u.imm as u32);
+                let lat = self.hier.access(addr as u64);
+                self.store_f32(addr, self.f[u.rs2])?;
+                self.bump_raw(OpClass::Store, lat.min(2));
+            }
+            FaddS => { self.f[u.rd] = self.f[u.rs1] + self.f[u.rs2]; self.bump_raw(OpClass::FAlu, 2); }
+            FsubS => { self.f[u.rd] = self.f[u.rs1] - self.f[u.rs2]; self.bump_raw(OpClass::FAlu, 2); }
+            FmulS => { self.f[u.rd] = self.f[u.rs1] * self.f[u.rs2]; self.bump_raw(OpClass::FMul, 3); }
+            FdivS => { self.f[u.rd] = self.f[u.rs1] / self.f[u.rs2]; self.bump_raw(OpClass::FDiv, 16); }
+            FmaddS => {
+                self.f[u.rd] = self.f[u.rs1] * self.f[u.rs2] + self.f[u.rs3];
+                self.bump_raw(OpClass::FMa, 4);
+            }
+            FminS => { self.f[u.rd] = self.f[u.rs1].min(self.f[u.rs2]); self.bump_raw(OpClass::FAlu, 2); }
+            FmaxS => { self.f[u.rd] = self.f[u.rs1].max(self.f[u.rs2]); self.bump_raw(OpClass::FAlu, 2); }
+            FcvtWS => { self.wxi(u.rd, self.f[u.rs1] as i32); self.bump_raw(OpClass::FAlu, 2); }
+            FcvtSW => { self.f[u.rd] = self.x[u.rs1] as f32; self.bump_raw(OpClass::FAlu, 2); }
+            FexpS => { self.f[u.rd] = self.f[u.rs1].exp(); self.bump_raw(OpClass::FCustom, 8); }
+            FrsqrtS => { self.f[u.rd] = 1.0 / self.f[u.rs1].sqrt(); self.bump_raw(OpClass::FCustom, 8); }
+
+            // -- vector ---------------------------------------------------
+            Vsetvli => {
+                if !self.cfg.has_vector {
+                    return Err(scalar_only());
+                }
+                self.lmul = 1 << u.rs3;
+                let vlmax = self.lanes * self.lmul;
+                let avl = self.x[u.rs1].max(0) as usize;
+                self.vl = avl.min(vlmax);
+                self.wxi(u.rd, self.vl as i32);
+                self.bump_raw(OpClass::VSet, 1);
+            }
+            Vle32 | Vle8 | Vse32 | Vse8 => {
+                if !self.cfg.has_vector {
+                    return Err(scalar_only());
+                }
+                let base = self.x[u.rs1] as u32;
+                let esz: usize = if matches!(u.op, Vle32 | Vse32) { 4 } else { 1 };
+                // One cache access per line touched.
+                let bytes = self.vl * esz;
+                let mut lat = 0;
+                let mut a = base as u64;
+                let span_end = base as u64 + bytes as u64;
+                while a < span_end {
+                    lat = lat.max(self.hier.access(a));
+                    a += 64;
+                }
+                let vl = self.vl;
+                let vbase = u.rd * self.lanes;
+                // Routing the whole span by its base address is safe: the
+                // DMEM allocation is capped strictly below WMEM_BASE, so a
+                // span can never run contiguously from DMEM into WMEM — any
+                // region-crossing span passes through the unmapped hole and
+                // faults here exactly as the per-element reference loop does.
+                if bytes > 0 {
+                    match u.op {
+                        Vle32 => {
+                            let src = view(&self.dmem, &self.wmem, base, bytes)?;
+                            for (d, c) in self.v[vbase..vbase + vl]
+                                .iter_mut()
+                                .zip(src.chunks_exact(4))
+                            {
+                                *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                            }
+                        }
+                        Vse32 => {
+                            let dst = view_mut(&mut self.dmem, &mut self.wmem, base, bytes)?;
+                            for (c, s) in dst
+                                .chunks_exact_mut(4)
+                                .zip(&self.v[vbase..vbase + vl])
+                            {
+                                c.copy_from_slice(&s.to_le_bytes());
+                            }
+                        }
+                        Vle8 => {
+                            let src = view(&self.dmem, &self.wmem, base, bytes)?;
+                            for (d, &b) in
+                                self.v[vbase..vbase + vl].iter_mut().zip(src)
+                            {
+                                *d = b as i8 as f32;
+                            }
+                        }
+                        _ => {
+                            let dst = view_mut(&mut self.dmem, &mut self.wmem, base, bytes)?;
+                            for (c, s) in
+                                dst.iter_mut().zip(&self.v[vbase..vbase + vl])
+                            {
+                                *c = (*s as i32).clamp(-128, 127) as u8;
+                            }
+                        }
+                    }
+                }
+                let class = if matches!(u.op, Vle32 | Vle8) { OpClass::VLoad } else { OpClass::VStore };
+                // Throughput: lanes per cycle per port + miss latency.
+                self.bump_raw(class, (vl as u64 / 4).max(1) + lat);
+            }
+            VaddVV | VfaddVV => self.vbin(u, |a, b| a + b),
+            VsubVV | VfsubVV => self.vbin(u, |a, b| a - b),
+            VmulVV | VfmulVV => self.vmul(u),
+            VmaccVV | VfmaccVV => self.vfma(u),
+            VfmaccVF => {
+                let s = self.f[u.rs1];
+                let (d, b) = (u.rd * self.lanes, u.rs2 * self.lanes);
+                for e in 0..self.vl {
+                    let acc = self.v[d + e] + s * self.v[b + e];
+                    self.v[d + e] = acc;
+                }
+                self.bump_raw(OpClass::VFma, (2 * self.lmul) as u64);
+            }
+            VfredsumVS => {
+                let (d, a, b) = (u.rd * self.lanes, u.rs1 * self.lanes, u.rs2 * self.lanes);
+                let mut acc = self.v[a];
+                for e in 0..self.vl {
+                    acc += self.v[b + e];
+                }
+                self.v[d] = acc;
+                self.bump_raw(OpClass::VRed, 4 + self.lmul as u64);
+            }
+            VfmaxVV => self.vbin(u, |a, b| a.max(b)),
+            VfmvVF => {
+                let s = self.f[u.rs1];
+                let d = u.rd * self.lanes;
+                for e in 0..self.vl {
+                    self.v[d + e] = s;
+                }
+                self.bump_raw(OpClass::VAlu, self.lmul as u64);
+            }
+        }
+        Ok(Ctl::Next)
+    }
+
+    #[inline(always)]
+    fn vbin(&mut self, u: &MicroOp, f: impl Fn(f32, f32) -> f32) {
+        let (d, a, b) = (u.rd * self.lanes, u.rs1 * self.lanes, u.rs2 * self.lanes);
+        for e in 0..self.vl {
+            self.v[d + e] = f(self.v[a + e], self.v[b + e]);
+        }
+        self.bump_raw(OpClass::VAlu, self.lmul as u64);
+    }
+
+    #[inline(always)]
+    fn vmul(&mut self, u: &MicroOp) {
+        let (d, a, b) = (u.rd * self.lanes, u.rs1 * self.lanes, u.rs2 * self.lanes);
+        for e in 0..self.vl {
+            self.v[d + e] = self.v[a + e] * self.v[b + e];
+        }
+        self.bump_raw(OpClass::VMul, (2 * self.lmul) as u64);
+    }
+
+    #[inline(always)]
+    fn vfma(&mut self, u: &MicroOp) {
+        // vmacc vd, vs1, vs2: vd += vs1 * vs2
+        let (d, a, b) = (u.rd * self.lanes, u.rs1 * self.lanes, u.rs2 * self.lanes);
+        for e in 0..self.vl {
+            let acc = self.v[d + e] + self.v[a + e] * self.v[b + e];
+            self.v[d + e] = acc;
+        }
+        self.bump_raw(OpClass::VFma, (2 * self.lmul) as u64);
+    }
+
+    // -- execution: naive reference loop -------------------------------------
+
+    /// Element `elem` of vector register group `base` through the naive
+    /// per-element index math of the historical interpreter.
+    fn vreg_ref(&self, base: usize, elem: usize) -> f32 {
+        self.v[(base + elem / self.lanes) * self.lanes + elem % self.lanes]
+    }
+
+    fn vreg_set_ref(&mut self, base: usize, elem: usize, val: f32) {
+        self.v[(base + elem / self.lanes) * self.lanes + elem % self.lanes] = val;
+    }
+
+    /// Naive per-instruction bump: `BTreeMap` entry walk + floating-point
+    /// issue-width scaling, exactly as the historical loop did it.
+    fn bump_ref(&mut self, counts: &mut BTreeMap<OpClass, u64>, class: OpClass, cycles: u64) {
+        *counts.entry(class).or_insert(0) += 1;
         // Superscalar baselines retire multiple scalar ops per cycle.
         let scaled = if matches!(class, OpClass::Alu | OpClass::Branch | OpClass::Jump) {
             ((cycles as f64) / self.cfg.issue_width).ceil() as u64
@@ -146,59 +620,65 @@ impl Machine {
         self.cycles += scaled.max(1);
     }
 
-    fn vreg(&self, base: u8, elem: usize) -> f32 {
-        let lanes = self.cfg.lanes();
-        self.v[base as usize + elem / lanes][elem % lanes]
-    }
-
-    fn vreg_set(&mut self, base: u8, elem: usize, val: f32) {
-        let lanes = self.cfg.lanes();
-        self.v[base as usize + elem / lanes][elem % lanes] = val;
-    }
-
-    /// Execute an encoded program until it falls off the end.
-    /// Returns run statistics; machine state persists for inspection.
-    pub fn run(&mut self, prog: &[u32]) -> Result<RunStats> {
+    /// The naive decode-per-step loop: fetch a word, run `decode::decode`,
+    /// execute, repeat. This is the golden reference the fast path is
+    /// differentially tested against (`rust/tests/sim_equiv.rs`) and the
+    /// baseline `benches/bench_sim_wallclock.rs` measures speedup over.
+    /// On success its observable state (registers, memory, cycles, instret,
+    /// class counts, cache stats) is bit-identical to [`Self::run`]'s; on
+    /// error the class counters of the partial run are dropped.
+    pub fn run_reference(&mut self, prog: &[u32]) -> Result<RunStats> {
         let start_instret = self.instret;
         let start_cycles = self.cycles;
+        let start_counts = self.class_counts;
+        let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
         let end = (prog.len() * 4) as u32;
         let mut pc: u32 = 0;
         while pc < end {
             if self.instret - start_instret > self.max_instret {
-                return Err(Error::Sim(format!(
-                    "instruction budget exceeded ({})",
-                    self.max_instret
-                )));
+                return Err(self.budget_exceeded());
             }
             let word = prog[(pc / 4) as usize];
             let i = decode::decode(word)?;
             self.instret += 1;
             let mut next = pc.wrapping_add(4);
+            let (rd, rs1, rs2, rs3) =
+                (i.rd as usize, i.rs1 as usize, i.rs2 as usize, i.rs3 as usize);
             use Op::*;
             match i.op {
-                // -- scalar integer ------------------------------------------
                 Lui => {
-                    self.wx(i.rd, (i.imm as u32) << 12);
-                    self.bump(OpClass::Alu, 1);
+                    self.wx(rd, (i.imm as u32) << 12);
+                    self.bump_ref(&mut counts, OpClass::Alu, 1);
                 }
                 Auipc => {
-                    self.wx(i.rd, pc.wrapping_add((i.imm as u32) << 12));
-                    self.bump(OpClass::Alu, 1);
+                    self.wx(rd, pc.wrapping_add((i.imm as u32) << 12));
+                    self.bump_ref(&mut counts, OpClass::Alu, 1);
                 }
                 Jal => {
-                    self.wx(i.rd, next);
-                    next = pc.wrapping_add(i.imm as u32);
-                    self.bump(OpClass::Jump, 1);
+                    let t = pc.wrapping_add(i.imm as u32);
+                    if t % 4 != 0 {
+                        return Err(Error::Sim(format!(
+                            "misaligned branch target {t:#010x}"
+                        )));
+                    }
+                    self.wx(rd, next);
+                    next = t;
+                    self.bump_ref(&mut counts, OpClass::Jump, 1);
                 }
                 Jalr => {
-                    let t = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32) & !1;
-                    self.wx(i.rd, next);
+                    let t = (self.x[rs1] as u32).wrapping_add(i.imm as u32) & !1;
+                    self.wx(rd, next);
+                    self.bump_ref(&mut counts, OpClass::Jump, 1);
+                    if t % 4 != 0 {
+                        return Err(Error::Sim(format!(
+                            "misaligned jalr target {t:#010x}"
+                        )));
+                    }
                     next = t;
-                    self.bump(OpClass::Jump, 1);
                 }
                 Beq | Bne | Blt | Bge => {
-                    let a = self.x[i.rs1 as usize];
-                    let b = self.x[i.rs2 as usize];
+                    let a = self.x[rs1];
+                    let b = self.x[rs2];
                     let taken = match i.op {
                         Beq => a == b,
                         Bne => a != b,
@@ -206,105 +686,106 @@ impl Machine {
                         _ => a >= b,
                     };
                     if taken {
-                        next = pc.wrapping_add(i.imm as u32);
-                        self.bump(OpClass::Branch, 2); // taken-branch penalty
+                        let t = pc.wrapping_add(i.imm as u32);
+                        if t % 4 != 0 {
+                            return Err(Error::Sim(format!(
+                                "misaligned branch target {t:#010x}"
+                            )));
+                        }
+                        next = t;
+                        self.bump_ref(&mut counts, OpClass::Branch, 2);
                     } else {
-                        self.bump(OpClass::Branch, 1);
+                        self.bump_ref(&mut counts, OpClass::Branch, 1);
                     }
                 }
                 Lw => {
-                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
                     let val = self.load_u32(addr)?;
-                    self.wx(i.rd, val);
-                    self.bump(OpClass::Load, lat);
+                    self.wx(rd, val);
+                    self.bump_ref(&mut counts, OpClass::Load, lat);
                 }
                 Sw => {
-                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.store_u32(addr, self.x[i.rs2 as usize] as u32)?;
-                    self.bump(OpClass::Store, lat.min(2)); // store buffer hides latency
+                    self.store_u32(addr, self.x[rs2] as u32)?;
+                    self.bump_ref(&mut counts, OpClass::Store, lat.min(2));
                 }
-                Addi => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_add(i.imm)); self.bump(OpClass::Alu, 1); }
-                Slti => { self.wxi(i.rd, (self.x[i.rs1 as usize] < i.imm) as i32); self.bump(OpClass::Alu, 1); }
-                Andi => { self.wxi(i.rd, self.x[i.rs1 as usize] & i.imm); self.bump(OpClass::Alu, 1); }
-                Ori => { self.wxi(i.rd, self.x[i.rs1 as usize] | i.imm); self.bump(OpClass::Alu, 1); }
-                Xori => { self.wxi(i.rd, self.x[i.rs1 as usize] ^ i.imm); self.bump(OpClass::Alu, 1); }
-                Slli => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) << i.imm) as i32); self.bump(OpClass::Alu, 1); }
-                Srli => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) >> i.imm) as i32); self.bump(OpClass::Alu, 1); }
-                Srai => { self.wxi(i.rd, self.x[i.rs1 as usize] >> i.imm); self.bump(OpClass::Alu, 1); }
-                Add => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_add(self.x[i.rs2 as usize])); self.bump(OpClass::Alu, 1); }
-                Sub => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_sub(self.x[i.rs2 as usize])); self.bump(OpClass::Alu, 1); }
-                Sll => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) << (self.x[i.rs2 as usize] & 31)) as i32); self.bump(OpClass::Alu, 1); }
-                Srl => { self.wxi(i.rd, ((self.x[i.rs1 as usize] as u32) >> (self.x[i.rs2 as usize] & 31)) as i32); self.bump(OpClass::Alu, 1); }
-                Sra => { self.wxi(i.rd, self.x[i.rs1 as usize] >> (self.x[i.rs2 as usize] & 31)); self.bump(OpClass::Alu, 1); }
-                And => { self.wxi(i.rd, self.x[i.rs1 as usize] & self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
-                Or => { self.wxi(i.rd, self.x[i.rs1 as usize] | self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
-                Xor => { self.wxi(i.rd, self.x[i.rs1 as usize] ^ self.x[i.rs2 as usize]); self.bump(OpClass::Alu, 1); }
-                Slt => { self.wxi(i.rd, (self.x[i.rs1 as usize] < self.x[i.rs2 as usize]) as i32); self.bump(OpClass::Alu, 1); }
-                Mul => { self.wxi(i.rd, self.x[i.rs1 as usize].wrapping_mul(self.x[i.rs2 as usize])); self.bump(OpClass::Mul, 3); }
+                Addi => { self.wxi(rd, self.x[rs1].wrapping_add(i.imm)); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Slti => { self.wxi(rd, (self.x[rs1] < i.imm) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Andi => { self.wxi(rd, self.x[rs1] & i.imm); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Ori => { self.wxi(rd, self.x[rs1] | i.imm); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Xori => { self.wxi(rd, self.x[rs1] ^ i.imm); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Slli => { self.wxi(rd, ((self.x[rs1] as u32) << i.imm) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Srli => { self.wxi(rd, ((self.x[rs1] as u32) >> i.imm) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Srai => { self.wxi(rd, self.x[rs1] >> i.imm); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Add => { self.wxi(rd, self.x[rs1].wrapping_add(self.x[rs2])); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Sub => { self.wxi(rd, self.x[rs1].wrapping_sub(self.x[rs2])); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Sll => { self.wxi(rd, ((self.x[rs1] as u32) << (self.x[rs2] & 31)) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Srl => { self.wxi(rd, ((self.x[rs1] as u32) >> (self.x[rs2] & 31)) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Sra => { self.wxi(rd, self.x[rs1] >> (self.x[rs2] & 31)); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                And => { self.wxi(rd, self.x[rs1] & self.x[rs2]); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Or => { self.wxi(rd, self.x[rs1] | self.x[rs2]); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Xor => { self.wxi(rd, self.x[rs1] ^ self.x[rs2]); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Slt => { self.wxi(rd, (self.x[rs1] < self.x[rs2]) as i32); self.bump_ref(&mut counts, OpClass::Alu, 1); }
+                Mul => { self.wxi(rd, self.x[rs1].wrapping_mul(self.x[rs2])); self.bump_ref(&mut counts, OpClass::Mul, 3); }
                 Mulh => {
-                    let p = (self.x[i.rs1 as usize] as i64) * (self.x[i.rs2 as usize] as i64);
-                    self.wxi(i.rd, (p >> 32) as i32);
-                    self.bump(OpClass::Mul, 3);
+                    let p = (self.x[rs1] as i64) * (self.x[rs2] as i64);
+                    self.wxi(rd, (p >> 32) as i32);
+                    self.bump_ref(&mut counts, OpClass::Mul, 3);
                 }
                 Div => {
-                    let d = self.x[i.rs2 as usize];
-                    self.wxi(i.rd, if d == 0 { -1 } else { self.x[i.rs1 as usize].wrapping_div(d) });
-                    self.bump(OpClass::Div, 20);
+                    let d = self.x[rs2];
+                    self.wxi(rd, if d == 0 { -1 } else { self.x[rs1].wrapping_div(d) });
+                    self.bump_ref(&mut counts, OpClass::Div, 20);
                 }
                 Rem => {
-                    let d = self.x[i.rs2 as usize];
-                    self.wxi(i.rd, if d == 0 { self.x[i.rs1 as usize] } else { self.x[i.rs1 as usize].wrapping_rem(d) });
-                    self.bump(OpClass::Div, 20);
+                    let d = self.x[rs2];
+                    self.wxi(rd, if d == 0 { self.x[rs1] } else { self.x[rs1].wrapping_rem(d) });
+                    self.bump_ref(&mut counts, OpClass::Div, 20);
                 }
-
-                // -- scalar float --------------------------------------------
                 Flw => {
-                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.f[i.rd as usize] = self.load_f32(addr)?;
-                    self.bump(OpClass::Load, lat);
+                    self.f[rd] = self.load_f32(addr)?;
+                    self.bump_ref(&mut counts, OpClass::Load, lat);
                 }
                 Fsw => {
-                    let addr = (self.x[i.rs1 as usize] as u32).wrapping_add(i.imm as u32);
+                    let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.store_f32(addr, self.f[i.rs2 as usize])?;
-                    self.bump(OpClass::Store, lat.min(2));
+                    self.store_f32(addr, self.f[rs2])?;
+                    self.bump_ref(&mut counts, OpClass::Store, lat.min(2));
                 }
-                FaddS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] + self.f[i.rs2 as usize]; self.bump(OpClass::FAlu, 2); }
-                FsubS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] - self.f[i.rs2 as usize]; self.bump(OpClass::FAlu, 2); }
-                FmulS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] * self.f[i.rs2 as usize]; self.bump(OpClass::FMul, 3); }
-                FdivS => { self.f[i.rd as usize] = self.f[i.rs1 as usize] / self.f[i.rs2 as usize]; self.bump(OpClass::FDiv, 16); }
+                FaddS => { self.f[rd] = self.f[rs1] + self.f[rs2]; self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FsubS => { self.f[rd] = self.f[rs1] - self.f[rs2]; self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FmulS => { self.f[rd] = self.f[rs1] * self.f[rs2]; self.bump_ref(&mut counts, OpClass::FMul, 3); }
+                FdivS => { self.f[rd] = self.f[rs1] / self.f[rs2]; self.bump_ref(&mut counts, OpClass::FDiv, 16); }
                 FmaddS => {
-                    self.f[i.rd as usize] =
-                        self.f[i.rs1 as usize] * self.f[i.rs2 as usize] + self.f[i.rs3 as usize];
-                    self.bump(OpClass::FMa, 4);
+                    self.f[rd] = self.f[rs1] * self.f[rs2] + self.f[rs3];
+                    self.bump_ref(&mut counts, OpClass::FMa, 4);
                 }
-                FminS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].min(self.f[i.rs2 as usize]); self.bump(OpClass::FAlu, 2); }
-                FmaxS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].max(self.f[i.rs2 as usize]); self.bump(OpClass::FAlu, 2); }
-                FcvtWS => { self.wxi(i.rd, self.f[i.rs1 as usize] as i32); self.bump(OpClass::FAlu, 2); }
-                FcvtSW => { self.f[i.rd as usize] = self.x[i.rs1 as usize] as f32; self.bump(OpClass::FAlu, 2); }
-                FexpS => { self.f[i.rd as usize] = self.f[i.rs1 as usize].exp(); self.bump(OpClass::FCustom, 8); }
-                FrsqrtS => { self.f[i.rd as usize] = 1.0 / self.f[i.rs1 as usize].sqrt(); self.bump(OpClass::FCustom, 8); }
-
-                // -- vector ---------------------------------------------------
+                FminS => { self.f[rd] = self.f[rs1].min(self.f[rs2]); self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FmaxS => { self.f[rd] = self.f[rs1].max(self.f[rs2]); self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FcvtWS => { self.wxi(rd, self.f[rs1] as i32); self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FcvtSW => { self.f[rd] = self.x[rs1] as f32; self.bump_ref(&mut counts, OpClass::FAlu, 2); }
+                FexpS => { self.f[rd] = self.f[rs1].exp(); self.bump_ref(&mut counts, OpClass::FCustom, 8); }
+                FrsqrtS => { self.f[rd] = 1.0 / self.f[rs1].sqrt(); self.bump_ref(&mut counts, OpClass::FCustom, 8); }
                 Vsetvli => {
                     if !self.cfg.has_vector {
-                        return Err(Error::Sim("vector instruction on scalar-only platform".into()));
+                        return Err(scalar_only());
                     }
-                    self.lmul = 1 << i.rs3;
-                    let vlmax = self.cfg.lanes() * self.lmul;
-                    let avl = self.x[i.rs1 as usize].max(0) as usize;
+                    self.lmul = 1 << rs3;
+                    let vlmax = self.lanes * self.lmul;
+                    let avl = self.x[rs1].max(0) as usize;
                     self.vl = avl.min(vlmax);
-                    self.wxi(i.rd, self.vl as i32);
-                    self.bump(OpClass::VSet, 1);
+                    self.wxi(rd, self.vl as i32);
+                    self.bump_ref(&mut counts, OpClass::VSet, 1);
                 }
                 Vle32 | Vle8 | Vse32 | Vse8 => {
                     if !self.cfg.has_vector {
-                        return Err(Error::Sim("vector instruction on scalar-only platform".into()));
+                        return Err(scalar_only());
                     }
-                    let base = self.x[i.rs1 as usize] as u32;
+                    let base = self.x[rs1] as u32;
                     let esz = if matches!(i.op, Vle32 | Vse32) { 4 } else { 1 };
                     // One cache access per line touched.
                     let bytes = self.vl * esz;
@@ -319,134 +800,108 @@ impl Machine {
                         match i.op {
                             Vle32 => {
                                 let v = self.load_f32(addr)?;
-                                self.vreg_set(i.rd, e, v);
+                                self.vreg_set_ref(rd, e, v);
                             }
                             Vse32 => {
-                                let v = self.vreg(i.rd, e);
+                                let v = self.vreg_ref(rd, e);
                                 self.store_f32(addr, v)?;
                             }
                             Vle8 => {
-                                let (m, o) = self.mem(addr)?;
-                                let v = m[o] as i8 as f32;
-                                self.vreg_set(i.rd, e, v);
+                                let b = self.mem_ref(addr, 1)?[0];
+                                self.vreg_set_ref(rd, e, b as i8 as f32);
                             }
                             _ => {
-                                let v = self.vreg(i.rd, e);
-                                let (m, o) = self.mem(addr)?;
-                                m[o] = (v as i32).clamp(-128, 127) as u8 as u8;
+                                let v = self.vreg_ref(rd, e);
+                                self.mem_mut(addr, 1)?[0] =
+                                    (v as i32).clamp(-128, 127) as u8;
                             }
                         }
                     }
                     let class = if matches!(i.op, Vle32 | Vle8) { OpClass::VLoad } else { OpClass::VStore };
-                    // Throughput: lanes per cycle per port + miss latency.
-                    self.bump(class, (self.vl as u64 / 4).max(1) + lat);
+                    self.bump_ref(&mut counts, class, (self.vl as u64 / 4).max(1) + lat);
                 }
-                VaddVV | VfaddVV => self.vbin(&i, |a, b| a + b),
-                VsubVV | VfsubVV => self.vbin(&i, |a, b| a - b),
-                VmulVV | VfmulVV => self.vmul(&i),
-                VmaccVV | VfmaccVV => self.vfma(&i),
-                VfmaccVF => {
-                    let s = self.f[i.rs1 as usize];
+                VaddVV | VfaddVV => {
                     for e in 0..self.vl {
-                        let acc = self.vreg(i.rd, e) + s * self.vreg(i.rs2, e);
-                        self.vreg_set(i.rd, e, acc);
+                        let r = self.vreg_ref(rs1, e) + self.vreg_ref(rs2, e);
+                        self.vreg_set_ref(rd, e, r);
                     }
-                    self.bump(OpClass::VFma, (2 * self.lmul) as u64);
+                    self.bump_ref(&mut counts, OpClass::VAlu, self.lmul as u64);
+                }
+                VsubVV | VfsubVV => {
+                    for e in 0..self.vl {
+                        let r = self.vreg_ref(rs1, e) - self.vreg_ref(rs2, e);
+                        self.vreg_set_ref(rd, e, r);
+                    }
+                    self.bump_ref(&mut counts, OpClass::VAlu, self.lmul as u64);
+                }
+                VmulVV | VfmulVV => {
+                    for e in 0..self.vl {
+                        let r = self.vreg_ref(rs1, e) * self.vreg_ref(rs2, e);
+                        self.vreg_set_ref(rd, e, r);
+                    }
+                    self.bump_ref(&mut counts, OpClass::VMul, (2 * self.lmul) as u64);
+                }
+                VmaccVV | VfmaccVV => {
+                    for e in 0..self.vl {
+                        let acc = self.vreg_ref(rd, e)
+                            + self.vreg_ref(rs1, e) * self.vreg_ref(rs2, e);
+                        self.vreg_set_ref(rd, e, acc);
+                    }
+                    self.bump_ref(&mut counts, OpClass::VFma, (2 * self.lmul) as u64);
+                }
+                VfmaccVF => {
+                    let s = self.f[rs1];
+                    for e in 0..self.vl {
+                        let acc = self.vreg_ref(rd, e) + s * self.vreg_ref(rs2, e);
+                        self.vreg_set_ref(rd, e, acc);
+                    }
+                    self.bump_ref(&mut counts, OpClass::VFma, (2 * self.lmul) as u64);
                 }
                 VfredsumVS => {
-                    let mut acc = self.vreg(i.rs1, 0);
+                    let mut acc = self.vreg_ref(rs1, 0);
                     for e in 0..self.vl {
-                        acc += self.vreg(i.rs2, e);
+                        acc += self.vreg_ref(rs2, e);
                     }
-                    self.vreg_set(i.rd, 0, acc);
-                    self.bump(OpClass::VRed, 4 + self.lmul as u64);
+                    self.vreg_set_ref(rd, 0, acc);
+                    self.bump_ref(&mut counts, OpClass::VRed, 4 + self.lmul as u64);
                 }
-                VfmaxVV => self.vbin(&i, |a, b| a.max(b)),
-                VfmvVF => {
-                    let s = self.f[i.rs1 as usize];
+                VfmaxVV => {
                     for e in 0..self.vl {
-                        self.vreg_set(i.rd, e, s);
+                        let r = self.vreg_ref(rs1, e).max(self.vreg_ref(rs2, e));
+                        self.vreg_set_ref(rd, e, r);
                     }
-                    self.bump(OpClass::VAlu, self.lmul as u64);
+                    self.bump_ref(&mut counts, OpClass::VAlu, self.lmul as u64);
+                }
+                VfmvVF => {
+                    let s = self.f[rs1];
+                    for e in 0..self.vl {
+                        self.vreg_set_ref(rd, e, s);
+                    }
+                    self.bump_ref(&mut counts, OpClass::VAlu, self.lmul as u64);
                 }
             }
             pc = next;
         }
-        Ok(RunStats {
-            cycles: self.cycles - start_cycles,
-            instret: self.instret - start_instret,
-            class_counts: self
-                .class_counts
-                .iter()
-                .map(|(k, v)| (class_name(*k), *v))
-                .collect(),
-        })
-    }
-
-    fn vbin(&mut self, i: &crate::isa::Instr, f: impl Fn(f32, f32) -> f32) {
-        for e in 0..self.vl {
-            let r = f(self.vreg(i.rs1, e), self.vreg(i.rs2, e));
-            self.vreg_set(i.rd, e, r);
+        for (c, n) in counts {
+            self.class_counts[c.index()] += n;
         }
-        self.bump(OpClass::VAlu, self.lmul as u64);
+        Ok(self.stats_since(start_cycles, start_instret, &start_counts))
     }
 
-    fn vmul(&mut self, i: &crate::isa::Instr) {
-        for e in 0..self.vl {
-            let r = self.vreg(i.rs1, e) * self.vreg(i.rs2, e);
-            self.vreg_set(i.rd, e, r);
-        }
-        self.bump(OpClass::VMul, (2 * self.lmul) as u64);
+    // -- inspection ----------------------------------------------------------
+
+    /// The flat vector register file (register `i` at `i * lanes`).
+    pub fn vreg_file(&self) -> &[f32] {
+        &self.v
     }
 
-    fn vfma(&mut self, i: &crate::isa::Instr) {
-        // vmacc vd, vs1, vs2: vd += vs1 * vs2
-        for e in 0..self.vl {
-            let acc = self.vreg(i.rd, e) + self.vreg(i.rs1, e) * self.vreg(i.rs2, e);
-            self.vreg_set(i.rd, e, acc);
-        }
-        self.bump(OpClass::VFma, (2 * self.lmul) as u64);
-    }
-
-    fn wx(&mut self, rd: u8, val: u32) {
-        if rd != regs::ZERO {
-            self.x[rd as usize] = val as i32;
-        }
-    }
-
-    fn wxi(&mut self, rd: u8, val: i32) {
-        if rd != regs::ZERO {
-            self.x[rd as usize] = val;
-        }
-    }
-
-    /// Class-count snapshot (for the energy model).
-    pub fn class_counts(&self) -> &BTreeMap<OpClass, u64> {
-        &self.class_counts
-    }
-}
-
-fn class_name(c: OpClass) -> &'static str {
-    match c {
-        OpClass::Alu => "alu",
-        OpClass::Mul => "mul",
-        OpClass::Div => "div",
-        OpClass::Branch => "branch",
-        OpClass::Jump => "jump",
-        OpClass::Load => "load",
-        OpClass::Store => "store",
-        OpClass::FAlu => "falu",
-        OpClass::FMul => "fmul",
-        OpClass::FDiv => "fdiv",
-        OpClass::FMa => "fma",
-        OpClass::FCustom => "fcustom",
-        OpClass::VSet => "vset",
-        OpClass::VLoad => "vload",
-        OpClass::VStore => "vstore",
-        OpClass::VAlu => "valu",
-        OpClass::VMul => "vmul",
-        OpClass::VFma => "vfma",
-        OpClass::VRed => "vred",
+    /// Nonzero per-class retirement counters (for the energy model).
+    pub fn class_counts(&self) -> Vec<(OpClass, u64)> {
+        OpClass::ALL
+            .iter()
+            .filter(|c| self.class_counts[c.index()] > 0)
+            .map(|c| (*c, self.class_counts[c.index()]))
+            .collect()
     }
 }
 
@@ -656,5 +1111,154 @@ mod tests {
             Instr::r(Op::Div, 7, 5, 5),
         ]);
         assert!(m2.cycles > m1.cycles + 20, "{} vs {}", m2.cycles, m1.cycles);
+    }
+
+    /// The fast path and the reference loop must agree exactly — stats and
+    /// architectural state — on a branch-and-vector workout.
+    #[test]
+    fn fast_path_matches_reference_loop() {
+        let xs: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let prog = encode_all(&[
+            Instr::i(Op::Addi, 5, 0, 10),
+            Instr::i(Op::Addi, 6, 0, 0),
+            Instr::r(Op::Add, 6, 6, 5),
+            Instr::i(Op::Addi, 5, 5, -1),
+            Instr::b(Op::Bne, 5, 0, -8),
+            Instr::i(Op::Addi, 5, 0, 16),
+            {
+                let mut i = Instr::new(Op::Vsetvli);
+                i.rd = 6;
+                i.rs1 = 5;
+                i.rs3 = 1;
+                i
+            },
+            Instr::i(Op::Addi, 7, 0, 0x40),
+            {
+                let mut i = Instr::new(Op::Vle32);
+                i.rd = 2;
+                i.rs1 = 7;
+                i
+            },
+            Instr::r(Op::VfmaccVV, 4, 2, 2),
+            Instr::i(Op::Addi, 7, 0, 0x140),
+            {
+                let mut i = Instr::new(Op::Vse32);
+                i.rd = 4;
+                i.rs1 = 7;
+                i
+            },
+            Instr::u(Op::Jal, 1, 8), // skip the next word
+            Instr::i(Op::Addi, 9, 0, 77),
+        ])
+        .unwrap();
+        let mut fast = Machine::new(MachineConfig::xgen_asic());
+        fast.write_f32_slice(0x40, &xs).unwrap();
+        let sf = fast.run(&prog).unwrap();
+        let mut rf = Machine::new(MachineConfig::xgen_asic());
+        rf.write_f32_slice(0x40, &xs).unwrap();
+        let sr = rf.run_reference(&prog).unwrap();
+        assert_eq!(sf, sr);
+        assert_eq!(fast.x, rf.x);
+        assert_eq!(
+            fast.vreg_file().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            rf.vreg_file().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(fast.hier.stats(), rf.hier.stats());
+        assert_eq!(fast.x[9], 0, "jal must skip the trailing addi");
+    }
+
+    /// Illegal words fault only when executed — on both paths.
+    #[test]
+    fn illegal_word_faults_lazily_on_both_paths() {
+        // jal jumps over the garbage word, so both paths succeed...
+        let mut prog = encode_all(&[Instr::u(Op::Jal, 0, 8)]).unwrap();
+        prog.push(0xFFFF_FFFF);
+        prog.extend(encode_all(&[Instr::i(Op::Addi, 5, 0, 3)]).unwrap());
+        let mut a = Machine::new(MachineConfig::xgen_asic());
+        let mut b = Machine::new(MachineConfig::xgen_asic());
+        assert_eq!(a.run(&prog).unwrap(), b.run_reference(&prog).unwrap());
+        assert_eq!(a.x[5], 3);
+        // ...but executing it errors identically.
+        let bad = vec![0xFFFF_FFFFu32];
+        let ea = Machine::new(MachineConfig::xgen_asic()).run(&bad).unwrap_err();
+        let eb = Machine::new(MachineConfig::xgen_asic())
+            .run_reference(&bad)
+            .unwrap_err();
+        assert_eq!(ea.to_string(), eb.to_string());
+    }
+
+    /// A conditional branch with a misaligned (encodable, 2-byte-multiple)
+    /// taken-target must retire normally when not taken, and fault
+    /// identically on both paths when taken.
+    #[test]
+    fn misaligned_branch_faults_only_when_taken() {
+        let prog = encode_all(&[
+            Instr::b(Op::Beq, 1, 2, 6),
+            Instr::i(Op::Addi, 5, 0, 9),
+        ])
+        .unwrap();
+        // Not taken (x1 != x2): both paths continue past it.
+        let mut a = Machine::new(MachineConfig::xgen_asic());
+        a.x[1] = 1;
+        let mut b = Machine::new(MachineConfig::xgen_asic());
+        b.x[1] = 1;
+        assert_eq!(a.run(&prog).unwrap(), b.run_reference(&prog).unwrap());
+        assert_eq!(a.x[5], 9);
+        // Taken (x1 == x2 == 0): both paths fault, same message.
+        let ea = Machine::new(MachineConfig::xgen_asic())
+            .run(&prog)
+            .unwrap_err()
+            .to_string();
+        let eb = Machine::new(MachineConfig::xgen_asic())
+            .run_reference(&prog)
+            .unwrap_err()
+            .to_string();
+        assert_eq!(ea, eb);
+        assert!(ea.contains("misaligned"), "{ea}");
+    }
+
+    #[test]
+    fn misaligned_jal_faults_on_both_paths() {
+        let prog = encode_all(&[Instr::u(Op::Jal, 1, 6)]).unwrap();
+        let ea = Machine::new(MachineConfig::xgen_asic())
+            .run(&prog)
+            .unwrap_err()
+            .to_string();
+        let eb = Machine::new(MachineConfig::xgen_asic())
+            .run_reference(&prog)
+            .unwrap_err()
+            .to_string();
+        assert_eq!(ea, eb);
+        assert!(ea.contains("misaligned"), "{ea}");
+    }
+
+    #[test]
+    fn instruction_budget_trips() {
+        // An infinite loop: beq x0, x0, 0 (branch to self).
+        let prog = encode_all(&[Instr::b(Op::Beq, 0, 0, 0)]).unwrap();
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        m.max_instret = 1000;
+        let e = m.run(&prog).unwrap_err();
+        assert!(e.to_string().contains("budget"), "{e}");
+    }
+
+    /// RunStats are per-run deltas on every axis: a second run on the same
+    /// machine must not inherit the first run's class counts.
+    #[test]
+    fn run_stats_are_per_run_deltas() {
+        let mut m = Machine::new(MachineConfig::xgen_asic());
+        let a = encode_all(&[
+            Instr::i(Op::Addi, 5, 0, 1),
+            Instr::i(Op::Addi, 6, 0, 2),
+            Instr::r(Op::Mul, 7, 5, 6),
+        ])
+        .unwrap();
+        let b = encode_all(&[Instr::i(Op::Addi, 8, 0, 3)]).unwrap();
+        m.run(&a).unwrap();
+        let s2 = m.run(&b).unwrap();
+        assert_eq!(s2.instret, 1);
+        assert_eq!(s2.class_counts.values().sum::<u64>(), 1);
+        assert_eq!(s2.class_counts.get("alu"), Some(&1));
+        assert_eq!(s2.class_counts.get("mul"), None);
     }
 }

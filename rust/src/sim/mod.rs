@@ -2,10 +2,13 @@
 //! on proprietary silicon; we build the closest measurable equivalent).
 //!
 //! * [`machine`] — functional RV32I+RVV executor: runs *encoded* binaries
-//!   (fetch → decode → execute), with DMEM/WMEM, three register files, and
-//!   per-instruction cycle + cache accounting. This is the correctness
-//!   oracle for generated code and the "hardware measurement" the learned
-//!   cost model trains against.
+//!   with DMEM/WMEM, three register files, and per-instruction cycle +
+//!   cache accounting. This is the correctness oracle for generated code
+//!   and the "hardware measurement" the learned cost model trains against.
+//!   Binaries are decoded **once** into micro-ops ([`predecode`]) and then
+//!   driven by an index-based dispatch loop; the naive decode-per-step
+//!   loop survives as `Machine::run_reference` for differential testing.
+//! * [`predecode`] — one-shot binary → micro-op lowering for the fast path.
 //! * [`cache`] — set-associative L1/L2/L3 cache simulator (LRU).
 //! * [`timing`] — analytic kernel timing: estimates cycles from a loop-nest
 //!   profile without instruction-by-instruction replay. This is what the
@@ -17,6 +20,7 @@
 pub mod cache;
 pub mod machine;
 pub mod power;
+pub mod predecode;
 pub mod timing;
 
 use crate::ir::dtype::DType;

@@ -1,0 +1,235 @@
+//! One-shot predecode of an encoded binary into a flat micro-op program.
+//!
+//! [`crate::isa::decode`] is exact but per-word; calling it on every fetch
+//! made the interpreter the bottleneck of the whole measurement loop. Here
+//! the binary is decoded **once** into a `Vec` of resolved [`MicroOp`]s and
+//! everything that doesn't depend on runtime state is folded in up front:
+//!
+//! * branch / `jal` displacements become *instruction indices* ([`MicroOp::target`]),
+//! * `lui`/`auipc` results and `jal`/`jalr` link values are precomputed
+//!   ([`MicroOp::aux`]),
+//! * register fields widen to `usize` (no per-step casts),
+//! * the [`OpClass`] rides along so the dispatch loop never re-derives it.
+//!
+//! Words that don't decode become [`Slot::Illegal`] and raise an error only
+//! if the program actually executes them — the same lazy-fetch semantics as
+//! the decode-per-step loop, so data or padding after the final retired
+//! instruction stays harmless.
+
+use crate::isa::{decode, Op, OpClass};
+
+/// Sentinel for [`MicroOp::target`]: the taken-target address is not
+/// word-aligned, which is a fault **only if the branch is actually taken**
+/// (the raw address sits in [`MicroOp::aux`] for the fault message).
+pub const MISALIGNED_TARGET: usize = usize::MAX;
+
+/// A resolved micro-op: one decoded instruction with its operand fields
+/// widened and its statically-knowable results folded in.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroOp {
+    pub op: Op,
+    pub class: OpClass,
+    pub rd: usize,
+    pub rs1: usize,
+    pub rs2: usize,
+    pub rs3: usize,
+    pub imm: i32,
+    /// Branches and `jal`: the taken-target *instruction index*. An index
+    /// at or beyond the program length means "halt" (fall off the end),
+    /// exactly like a taken branch past the last word;
+    /// [`MISALIGNED_TARGET`] means a taken branch faults. Zero elsewhere.
+    pub target: usize,
+    /// `lui`: `imm << 12`; `auipc`: `pc + (imm << 12)`; `jal`/`jalr`: the
+    /// link value (`pc + 4`); conditional branches: the raw taken-target
+    /// byte address (used in misalignment fault messages). Zero elsewhere.
+    pub aux: u32,
+}
+
+/// One program slot: a decoded micro-op, or a fault that fires only when
+/// the slot is actually executed.
+#[derive(Debug, Clone, Copy)]
+pub enum Slot {
+    Op(MicroOp),
+    /// The word failed to decode (kept verbatim for the error message).
+    Illegal(u32),
+    /// A `jal` whose (unconditional) target address is not word-aligned:
+    /// the encoding permits 2-byte multiples, this machine has no
+    /// compressed instructions, so executing the slot is always a fault.
+    /// Conditional branches with misaligned targets stay [`Slot::Op`] and
+    /// fault only when taken (see [`MISALIGNED_TARGET`]).
+    Misaligned(u32),
+}
+
+/// A predecoded program, ready for `Machine::run_predecoded`.
+#[derive(Debug, Clone)]
+pub struct Predecoded {
+    pub slots: Vec<Slot>,
+}
+
+impl Predecoded {
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// Predecode one word sitting at instruction index `idx`. Infallible:
+/// undecodable words become [`Slot::Illegal`].
+pub fn predecode_one(word: u32, idx: usize) -> Slot {
+    let i = match decode::decode(word) {
+        Ok(i) => i,
+        Err(_) => return Slot::Illegal(word),
+    };
+    let pc = (idx as u32).wrapping_mul(4);
+    let mut u = MicroOp {
+        op: i.op,
+        class: i.op.class(),
+        rd: i.rd as usize,
+        rs1: i.rs1 as usize,
+        rs2: i.rs2 as usize,
+        rs3: i.rs3 as usize,
+        imm: i.imm,
+        target: 0,
+        aux: 0,
+    };
+    match i.op {
+        Op::Lui => u.aux = (i.imm as u32) << 12,
+        Op::Auipc => u.aux = pc.wrapping_add((i.imm as u32) << 12),
+        Op::Jalr => u.aux = pc.wrapping_add(4),
+        Op::Jal => {
+            u.aux = pc.wrapping_add(4);
+            let t = pc.wrapping_add(i.imm as u32);
+            if t % 4 != 0 {
+                return Slot::Misaligned(t);
+            }
+            u.target = (t / 4) as usize;
+        }
+        Op::Beq | Op::Bne | Op::Blt | Op::Bge => {
+            let t = pc.wrapping_add(i.imm as u32);
+            u.aux = t;
+            u.target = if t % 4 == 0 {
+                (t / 4) as usize
+            } else {
+                MISALIGNED_TARGET
+            };
+        }
+        _ => {}
+    }
+    Slot::Op(u)
+}
+
+/// Predecode a whole encoded program.
+pub fn predecode(prog: &[u32]) -> Predecoded {
+    Predecoded {
+        slots: prog
+            .iter()
+            .enumerate()
+            .map(|(idx, &w)| predecode_one(w, idx))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::isa::Instr;
+
+    fn words(prog: &[Instr]) -> Vec<u32> {
+        encode_all(prog).unwrap()
+    }
+
+    #[test]
+    fn branch_and_jump_targets_resolve_to_indices() {
+        // 0: addi; 1: bne -4 (-> idx 0); 2: jal +8 (-> idx 4)
+        let w = words(&[
+            Instr::i(Op::Addi, 5, 0, 1),
+            Instr::b(Op::Bne, 5, 0, -4),
+            Instr::u(Op::Jal, 1, 8),
+        ]);
+        let p = predecode(&w);
+        match p.slots[1] {
+            Slot::Op(u) => {
+                assert_eq!(u.op, Op::Bne);
+                assert_eq!(u.target, 0);
+            }
+            _ => panic!("bne should predecode"),
+        }
+        match p.slots[2] {
+            Slot::Op(u) => {
+                assert_eq!(u.op, Op::Jal);
+                assert_eq!(u.target, 4, "jal +8 from pc=8 lands at word 4");
+                assert_eq!(u.aux, 12, "link value is pc + 4");
+            }
+            _ => panic!("jal should predecode"),
+        }
+    }
+
+    #[test]
+    fn lui_and_auipc_constants_fold() {
+        let w = words(&[Instr::u(Op::Lui, 5, 0x12345), Instr::u(Op::Auipc, 6, 1)]);
+        let p = predecode(&w);
+        match p.slots[0] {
+            Slot::Op(u) => assert_eq!(u.aux, 0x12345 << 12),
+            _ => panic!(),
+        }
+        match p.slots[1] {
+            Slot::Op(u) => assert_eq!(u.aux, 4 + (1 << 12), "pc=4 folded in"),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn illegal_words_become_lazy_faults() {
+        let p = predecode(&[0xFFFF_FFFF, 0x0000_0000]);
+        assert!(matches!(p.slots[0], Slot::Illegal(0xFFFF_FFFF)));
+        assert!(matches!(p.slots[1], Slot::Illegal(0)));
+    }
+
+    #[test]
+    fn register_fields_widen() {
+        let w = words(&[Instr::r(Op::Add, 7, 8, 9)]);
+        match predecode(&w).slots[0] {
+            Slot::Op(u) => {
+                assert_eq!((u.rd, u.rs1, u.rs2), (7, 8, 9));
+                assert_eq!(u.class, OpClass::Alu);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn misaligned_branch_target_is_a_lazy_sentinel_not_a_slot_fault() {
+        // B-format permits 2-byte multiples; +6 is encodable but lands
+        // mid-word. The slot must stay executable (fault only if taken).
+        let w = words(&[Instr::b(Op::Beq, 1, 2, 6)]);
+        match predecode(&w).slots[0] {
+            Slot::Op(u) => {
+                assert_eq!(u.target, MISALIGNED_TARGET);
+                assert_eq!(u.aux, 6, "raw address kept for the fault message");
+            }
+            _ => panic!("conditional branch must not fault at predecode"),
+        }
+    }
+
+    #[test]
+    fn misaligned_jal_target_faults_the_slot() {
+        // jal is unconditional: executing the slot always faults.
+        let w = words(&[Instr::u(Op::Jal, 1, 6)]);
+        assert!(matches!(predecode(&w).slots[0], Slot::Misaligned(6)));
+    }
+
+    #[test]
+    fn branch_past_the_end_halts_via_large_index() {
+        // bne +16 from pc=0 -> word index 4 in a 1-word program: the
+        // dispatch loop's `idx < len` bound turns that into a halt.
+        let w = words(&[Instr::b(Op::Bne, 5, 0, 16)]);
+        match predecode(&w).slots[0] {
+            Slot::Op(u) => assert!(u.target >= 1),
+            _ => panic!(),
+        }
+    }
+}

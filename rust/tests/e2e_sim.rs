@@ -35,10 +35,11 @@ fn conform(graph: Graph, precision: DType) -> VerifyReport {
 
 // -- FP32: machine vs oracle within 1e-4 relative ---------------------------
 //
-// The conv-heavy models retire tens of millions of simulated instructions —
-// minutes at debug-interpreter speed — so they are `#[ignore]`d in the
-// default (tier-1, debug) run and executed by CI's release-mode conformance
-// job via `--include-ignored`. The light models always run.
+// The conv-heavy models retire tens of millions of simulated instructions.
+// They used to be `#[ignore]`d here (minutes at decode-per-step debug
+// speed); the pre-decoded fast path (`sim::predecode`) brought whole-model
+// simulation back inside the normal debug test budget, so the full zoo now
+// runs in tier-1 `cargo test` with no `--include-ignored` special-casing.
 
 #[test]
 fn fp32_mlp_conforms() {
@@ -46,13 +47,11 @@ fn fp32_mlp_conforms() {
 }
 
 #[test]
-#[ignore = "whole-model simulation; run in release (CI conformance job)"]
 fn fp32_resnet_cifar_conforms() {
     conform(model_zoo::resnet_cifar(1), DType::F32);
 }
 
 #[test]
-#[ignore = "whole-model simulation; run in release (CI conformance job)"]
 fn fp32_mobilenet_cifar_conforms() {
     conform(model_zoo::mobilenet_cifar(1), DType::F32);
 }
@@ -63,7 +62,6 @@ fn fp32_bert_tiny_conforms() {
 }
 
 #[test]
-#[ignore = "whole-model simulation; run in release (CI conformance job)"]
 fn fp32_vit_tiny_conforms() {
     conform(model_zoo::vit_tiny(1), DType::F32);
 }
@@ -90,7 +88,6 @@ fn int8_mlp_conforms() {
 }
 
 #[test]
-#[ignore = "whole-model simulation; run in release (CI conformance job)"]
 fn int8_resnet_cifar_conforms() {
     let r = conform(model_zoo::resnet_cifar(1), DType::I8);
     assert_eq!(r.tol, 1e-3);

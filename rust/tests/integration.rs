@@ -22,9 +22,8 @@ fn verify_model(graph: xgenc::ir::Graph, inputs: Vec<Tensor>, tol: f32) {
     for (tid, t) in c.graph.inputs.iter().zip(&inputs) {
         let base = c.plan.addr_of(*tid).unwrap();
         if c.graph.info(*tid).dtype == DType::I32 {
-            for (i, v) in t.data.iter().enumerate() {
-                m.store_u32(base + (i * 4) as u32, *v as i32 as u32).unwrap();
-            }
+            let words: Vec<u32> = t.data.iter().map(|v| *v as i32 as u32).collect();
+            m.write_u32_slice(base, &words).unwrap();
         } else {
             m.write_f32_slice(base, &t.data).unwrap();
         }

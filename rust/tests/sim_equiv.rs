@@ -1,0 +1,139 @@
+//! Differential equivalence suite: the pre-decoded fast path
+//! (`Machine::run` → `run_predecoded`) against the naive decode-per-step
+//! reference loop (`Machine::run_reference`).
+//!
+//! For every executable-scale zoo model (FP32 + INT8) the two paths must
+//! agree **exactly**: bit-identical output tensors, equal `cycles`,
+//! `instret`, per-class retirement counts, per-level cache hits/misses,
+//! and backing-memory access counts. This is the license for the fast
+//! path to be the default everywhere (`simrun`, `dynshape::run_dispatch`,
+//! the cost model's measurements) without a conformance caveat.
+//!
+//! The conv-heavy models are `#[ignore]`d in the default debug run — not
+//! because the fast path is slow (it isn't; see `e2e_sim.rs`, which runs
+//! them) but because this suite must also execute the deliberately naive
+//! reference loop, which is minutes-scale in debug. The CI conformance job
+//! runs them in release via `--include-ignored`.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::{DType, Graph};
+use xgenc::isa::encode::encode_all;
+use xgenc::pipeline::{CompileOptions, CompileSession, CompiledModel};
+use xgenc::runtime::simrun;
+use xgenc::sim::cache::CacheStats;
+use xgenc::sim::machine::{Machine, RunStats};
+
+/// Everything one simulation exposes to compare on.
+struct Observed {
+    stats: RunStats,
+    out_bits: Vec<Vec<u32>>,
+    cache: Vec<CacheStats>,
+    mem_accesses: u64,
+}
+
+fn observe(c: &CompiledModel, words: &[u32], inputs: &[xgenc::ir::tensor::Tensor], reference: bool) -> Observed {
+    let mut m = Machine::new(c.mach.clone());
+    m.max_instret = simrun::MAX_INSTRET;
+    simrun::stage_weights(&mut m, &c.graph, c.abi()).unwrap();
+    simrun::stage_inputs(&mut m, c.abi(), inputs).unwrap();
+    let stats = if reference {
+        m.run_reference(words).unwrap()
+    } else {
+        m.run(words).unwrap()
+    };
+    let out_bits = simrun::read_outputs(&mut m, c.abi())
+        .unwrap()
+        .iter()
+        .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    Observed {
+        stats,
+        out_bits,
+        cache: m.hier.stats(),
+        mem_accesses: m.hier.mem_accesses,
+    }
+}
+
+/// Compile one model, run it through both execution paths on identically
+/// staged machines, and demand exact agreement.
+fn equiv(graph: Graph, precision: DType) {
+    let g = prepare(graph).unwrap();
+    let name = g.name.clone();
+    let mut session = CompileSession::new(CompileOptions {
+        precision,
+        ..Default::default()
+    });
+    let c = session.compile(&g).unwrap();
+    let words = encode_all(&c.asm).unwrap();
+    let inputs = simrun::synth_inputs(&c.graph, 42);
+    let fast = observe(&c, &words, &inputs, false);
+    let reference = observe(&c, &words, &inputs, true);
+    assert!(fast.stats.instret > 0, "{name}: empty run proves nothing");
+    assert_eq!(
+        fast.stats, reference.stats,
+        "{name}: RunStats diverge (cycles/instret/class counts)"
+    );
+    assert_eq!(
+        fast.out_bits, reference.out_bits,
+        "{name}: output tensors are not bit-identical"
+    );
+    assert_eq!(fast.cache, reference.cache, "{name}: cache stats diverge");
+    assert_eq!(
+        fast.mem_accesses, reference.mem_accesses,
+        "{name}: backing-memory access counts diverge"
+    );
+    println!(
+        "{name}: {} instructions, {} cycles — fast path exact",
+        fast.stats.instret, fast.stats.cycles
+    );
+}
+
+// -- always-on (light models, both precisions) ------------------------------
+
+#[test]
+fn equiv_fp32_mlp() {
+    equiv(model_zoo::mlp(&[256, 128, 64, 10], 1), DType::F32);
+}
+
+#[test]
+fn equiv_int8_mlp() {
+    equiv(model_zoo::mlp(&[256, 128, 64, 10], 1), DType::I8);
+}
+
+#[test]
+fn equiv_fp32_bert_tiny() {
+    equiv(model_zoo::bert_tiny(1, 8), DType::F32);
+}
+
+#[test]
+fn equiv_fp32_dynamic_mlp_specialization() {
+    let g = prepare(model_zoo::mlp_dynamic(&[64, 32, 8], 8)).unwrap();
+    let s = xgenc::dynshape::specialize(&g, &[("batch".into(), 4)]).unwrap();
+    equiv(s, DType::F32);
+}
+
+// -- conv-heavy (reference loop is minutes-scale in debug) ------------------
+
+#[test]
+#[ignore = "naive reference loop; run in release (CI conformance job)"]
+fn equiv_fp32_resnet_cifar() {
+    equiv(model_zoo::resnet_cifar(1), DType::F32);
+}
+
+#[test]
+#[ignore = "naive reference loop; run in release (CI conformance job)"]
+fn equiv_fp32_mobilenet_cifar() {
+    equiv(model_zoo::mobilenet_cifar(1), DType::F32);
+}
+
+#[test]
+#[ignore = "naive reference loop; run in release (CI conformance job)"]
+fn equiv_fp32_vit_tiny() {
+    equiv(model_zoo::vit_tiny(1), DType::F32);
+}
+
+#[test]
+#[ignore = "naive reference loop; run in release (CI conformance job)"]
+fn equiv_int8_resnet_cifar() {
+    equiv(model_zoo::resnet_cifar(1), DType::I8);
+}
