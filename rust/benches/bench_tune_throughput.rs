@@ -1,0 +1,138 @@
+//! Tuner throughput: the batched, parallel, memoized measurement engine vs
+//! the retained serial reference, per Table-5 signature — emitted to
+//! `BENCH_tune_throughput.json` so search-loop speed is a tracked artifact
+//! like `BENCH_sim_wallclock.json`.
+//!
+//! Doubles as a perf + correctness smoke: exits nonzero if the parallel
+//! engine's `AutotuneResult` differs from the serial reference in any field
+//! (the differential suite's invariant, re-checked on the exact runs being
+//! timed) or if no signature reaches the minimum speedup at 4 workers.
+
+use std::time::Instant;
+
+use xgenc::autotune::{Algorithm, AutotuneResult, Tuner, TunerOptions};
+use xgenc::cost::features::KernelSig;
+use xgenc::runtime::store;
+use xgenc::sim::MachineConfig;
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+
+/// Intra-round measurement workers for the parallel arm.
+const WORKERS: usize = 4;
+/// At least one signature must tune this much faster with 4 workers (CI
+/// perf smoke; the observed margin is well above — this is the tripwire).
+const MIN_SPEEDUP: f64 = 1.5;
+/// Trial budget per signature: large rounds amortize the per-round
+/// `thread::scope` spawn cost and exercise the memo on re-proposals.
+const TRIALS: usize = 1024;
+const BATCH: usize = 256;
+
+fn timed(
+    tuner: &Tuner,
+    sig: &KernelSig,
+    opts: &TunerOptions,
+    serial: bool,
+) -> (f64, AutotuneResult) {
+    // Two repetitions, fastest wall time (the usual bench hygiene).
+    let mut best_s = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let r = if serial {
+            tuner.tune_reference(sig, opts, None)
+        } else {
+            tuner.tune(sig, opts, None)
+        };
+        best_s = best_s.min(t0.elapsed().as_secs_f64());
+        out = Some(r);
+    }
+    (best_s, out.expect("at least one rep"))
+}
+
+fn main() {
+    let tuner = Tuner::new(MachineConfig::xgen_asic());
+    let workloads: [(&str, KernelSig); 3] = [
+        ("matmul_128x256x512", KernelSig::matmul(128, 256, 512)),
+        ("conv_3x224x224x16", KernelSig::conv2d(3, 224, 224, 16, 3, 1)),
+        ("ew_1048576", KernelSig::elementwise(1024 * 1024)),
+    ];
+    let mut t = Table::new(
+        "Tuner throughput: serial reference vs parallel memoized engine",
+        &[
+            "Signature",
+            "Trials",
+            "Memo hits",
+            "Serial ms",
+            "Par ms",
+            "Ser meas/s",
+            "Par meas/s",
+            "Speedup",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut max_speedup = 0.0f64;
+    for (name, sig) in &workloads {
+        let opts = TunerOptions {
+            algorithm: Some(Algorithm::Random),
+            trials: TRIALS,
+            batch: BATCH,
+            screen: 1,
+            seed: 42,
+            patience: usize::MAX / 2,
+            workers: 1,
+        };
+        let par_opts = TunerOptions { workers: WORKERS, ..opts.clone() };
+        let (serial_s, serial_r) = timed(&tuner, sig, &opts, true);
+        let (par_s, par_r) = timed(&tuner, sig, &par_opts, false);
+        assert_eq!(
+            serial_r, par_r,
+            "{name}: parallel result diverged from the serial reference"
+        );
+        let trials = serial_r.trials_used as f64;
+        let memo_total = serial_r.memo_hits + serial_r.trials_used;
+        let memo_rate = serial_r.memo_hits as f64 / memo_total.max(1) as f64;
+        let speedup = serial_s / par_s.max(1e-12);
+        max_speedup = max_speedup.max(speedup);
+        t.row(&[
+            name.to_string(),
+            format!("{}", serial_r.trials_used),
+            format!("{}", serial_r.memo_hits),
+            f(serial_s * 1e3, 1),
+            f(par_s * 1e3, 1),
+            f(trials / serial_s, 0),
+            f(trials / par_s, 0),
+            f(speedup, 2),
+        ]);
+        rows.push(Json::obj(vec![
+            ("signature", Json::str_(&sig.key())),
+            ("trials_used", Json::Num(trials)),
+            ("memo_hits", Json::Num(serial_r.memo_hits as f64)),
+            ("memo_hit_rate", Json::Num(memo_rate)),
+            ("best_log_cycles", Json::Num(serial_r.best_log_cycles)),
+            ("serial_ms", Json::Num(serial_s * 1e3)),
+            ("parallel_ms", Json::Num(par_s * 1e3)),
+            ("serial_meas_per_s", Json::Num(trials / serial_s)),
+            ("parallel_meas_per_s", Json::Num(trials / par_s)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    t.print();
+    let report = Json::obj(vec![
+        ("bench", Json::str_("tune_throughput")),
+        ("workers", Json::Num(WORKERS as f64)),
+        ("trials", Json::Num(TRIALS as f64)),
+        ("batch", Json::Num(BATCH as f64)),
+        ("max_speedup", Json::Num(max_speedup)),
+        ("signatures", Json::Arr(rows)),
+    ]);
+    let out = std::path::Path::new("BENCH_tune_throughput.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
+    assert!(
+        max_speedup >= MIN_SPEEDUP,
+        "parallel tuning not measurably faster: best speedup {max_speedup:.2}x < {MIN_SPEEDUP}x"
+    );
+    println!(
+        "tune throughput OK: parallel engine bit-identical to serial, best speedup {max_speedup:.1}x at {WORKERS} workers"
+    );
+}

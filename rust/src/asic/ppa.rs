@@ -31,19 +31,13 @@ impl PpaReport {
     }
 }
 
-fn count_classes(nest: &LoopNest, counts: &mut Vec<(OpClass, u64)>, mult: u64) {
+fn count_classes(nest: &LoopNest, counts: &mut [u64; OpClass::COUNT], mult: u64) {
     let m = mult * nest.trip;
-    for (c, n) in &nest.body.counts {
-        match counts.iter_mut().find(|(cc, _)| cc == c) {
-            Some((_, total)) => *total += n * m,
-            None => counts.push((*c, n * m)),
-        }
+    for (c, n) in nest.body.iter() {
+        counts[c.index()] += n * m;
     }
     // Loop overhead retires as ALU work.
-    match counts.iter_mut().find(|(cc, _)| *cc == OpClass::Alu) {
-        Some((_, total)) => *total += nest.overhead * m,
-        None => counts.push((OpClass::Alu, nest.overhead * m)),
-    }
+    counts[OpClass::Alu.index()] += nest.overhead * m;
     for child in &nest.children {
         count_classes(child, counts, m);
     }
@@ -58,13 +52,20 @@ pub fn evaluate(
 ) -> PpaReport {
     // -- Performance: analytic timing over every kernel ---------------------
     let mut cycles = 0.0;
-    let mut counts: Vec<(OpClass, u64)> = Vec::new();
+    let mut class_counts = [0u64; OpClass::COUNT];
     let mut mem_bytes = 0u64;
     for (_, k) in &program.kernels {
         cycles += timing::estimate_cycles(mach, &k.nest, &k.mem, k.config.lmul);
-        count_classes(&k.nest, &mut counts, 1);
+        count_classes(&k.nest, &mut class_counts, 1);
         mem_bytes += k.mem.load_bytes + k.mem.store_bytes;
     }
+    // Nonzero pairs for the energy model (its per-class weighting API).
+    let counts: Vec<(OpClass, u64)> = OpClass::ALL
+        .iter()
+        .zip(class_counts.iter())
+        .filter(|&(_, &n)| n != 0)
+        .map(|(&c, &n)| (c, n))
+        .collect();
     // Quantized datapaths also move fewer bytes per element.
     let byte_scale = precision.bits() as f64 / 32.0;
     // (Lane packing by precision is modeled inside the kernel profiles —

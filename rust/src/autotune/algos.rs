@@ -160,7 +160,7 @@ impl Searcher for GeneticAlgorithm {
         }
         // Elites survive unchanged; the rest are children.
         let mut sorted = self.population.clone();
-        sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
         let n_elite = ((self.elite_fraction * n as f64) as usize).min(sorted.len());
         let mut out: Vec<Config> = sorted[..n_elite].iter().map(|(c, _)| c.clone()).collect();
         while out.len() < n {
@@ -177,9 +177,8 @@ impl Searcher for GeneticAlgorithm {
 
     fn observe(&mut self, results: &[(Config, f64)]) {
         self.population.extend(results.iter().cloned());
-        // Keep the fittest population_size individuals.
-        self.population
-            .sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // Keep the fittest population_size individuals (NaN-safe order).
+        self.population.sort_by(|a, b| a.1.total_cmp(&b.1));
         self.population.truncate(self.population_size);
     }
 }
@@ -263,7 +262,7 @@ impl Searcher for BayesianOpt {
                 (self.ei(mu, sigma), cfg)
             })
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
         scored.truncate(n);
         scored.into_iter().map(|(_, c)| c).collect()
     }

@@ -22,7 +22,8 @@ use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
 /// Bump when the on-disk layout changes; older files load as empty.
-pub const CACHE_FORMAT_VERSION: u64 = 1;
+/// v2: entries carry the search's memo-hit count.
+pub const CACHE_FORMAT_VERSION: u64 = 2;
 
 /// Hit/miss accounting for one compile (or a whole session — callers
 /// snapshot and diff).
@@ -74,6 +75,9 @@ pub struct CacheEntry {
     pub log_cycles: f64,
     /// Real measurements the original search performed.
     pub trials_used: usize,
+    /// Re-proposed candidates the original search served from its
+    /// measurement memo (search effort that cost no budget).
+    pub memo_hits: usize,
     /// Wall-clock seconds the original search took (what a hit saves).
     pub tune_seconds: f64,
 }
@@ -165,6 +169,7 @@ impl TuneCache {
                     ("lmul", Json::Num(e.config.lmul as f64)),
                     ("log_cycles", Json::Num(e.log_cycles)),
                     ("trials_used", Json::Num(e.trials_used as f64)),
+                    ("memo_hits", Json::Num(e.memo_hits as f64)),
                     ("tune_seconds", Json::Num(e.tune_seconds)),
                 ])
             })
@@ -207,6 +212,7 @@ impl TuneCache {
                 },
                 log_cycles: field("log_cycles")?,
                 trials_used: usize_field("trials_used")?,
+                memo_hits: usize_field("memo_hits")?,
                 tune_seconds: field("tune_seconds")?,
             };
             map.insert(key.to_string(), entry);
@@ -256,6 +262,7 @@ mod tests {
             config: KernelConfig { tile_m, ..Default::default() },
             log_cycles: 12.5,
             trials_used: 40,
+            memo_hits: 6,
             tune_seconds: 1.25,
         }
     }
@@ -310,7 +317,8 @@ mod tests {
         for (name, text) in [
             ("garbage", "{not json at all"),
             ("wrong_version", r#"{"version": 999, "entries": []}"#),
-            ("bad_entry", r#"{"version": 1, "entries": [{"key": "x"}]}"#),
+            ("stale_version", r#"{"version": 1, "entries": []}"#),
+            ("bad_entry", r#"{"version": 2, "entries": [{"key": "x"}]}"#),
         ] {
             let path = dir.join(format!("xgenc_cache_bad_{pid}_{name}.json"));
             std::fs::write(&path, text).unwrap();

@@ -2,7 +2,9 @@
 //! strategies — Bayesian optimization (GP-style surrogate + Expected
 //! Improvement), genetic algorithm, simulated annealing, random search,
 //! grid search — over a [`space::ParameterSpace`], with automatic algorithm
-//! selection and learned-cost-model acceleration. [`cache`] memoizes tuning
+//! selection and learned-cost-model acceleration. The measurement loop in
+//! [`tuner`] is batched, parallel, and memoized — and bit-identical to its
+//! retained serial reference at any worker count. [`cache`] memoizes tuning
 //! results across compiles (and persists them to disk) so identical layers,
 //! repeated compiles, and multi-model batches never search twice.
 

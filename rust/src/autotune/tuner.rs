@@ -2,6 +2,23 @@
 //! optionally accelerated by a cost model that pre-screens candidates so
 //! only the most promising ones get "real" measurements — the mechanism
 //! behind the paper's 50-60% convergence improvement (Table 5).
+//!
+//! The measurement loop is batched, parallel, and memoized:
+//! * every round's fresh candidates are measured concurrently across
+//!   `std::thread::scope` workers ([`measure`] is pure), then joined back in
+//!   proposal order, so each bookkeeping update — best, curve,
+//!   [`Searcher::observe`], [`CostModel::observe_batch`] — happens in
+//!   exactly the order a serial run would apply it;
+//! * a per-run memo keyed by the encoded configuration serves re-proposed
+//!   candidates from a table lookup instead of a kernel generation plus
+//!   timing-model walk; memo hits consume no trial budget and are surfaced
+//!   in [`AutotuneResult::memo_hits`].
+//!
+//! [`Tuner::tune_reference`] runs the identical engine with the fan-out
+//! forced serial; `rust/tests/tune_parallel.rs` proves the parallel loop
+//! returns bit-identical results.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::autotune::algos::{self, Searcher};
 use crate::autotune::space::{Config, ParameterSpace};
@@ -16,7 +33,7 @@ use crate::util::rng::Rng;
 #[derive(Clone)]
 pub struct TunerOptions {
     pub algorithm: Option<Algorithm>,
-    /// Max real measurements.
+    /// Max real measurements (memoized repeats are free).
     pub trials: usize,
     /// Candidates proposed per round.
     pub batch: usize,
@@ -24,24 +41,40 @@ pub struct TunerOptions {
     /// only the predicted-best `batch` (1 = no screening).
     pub screen: usize,
     pub seed: u64,
-    /// Stop when no improvement for this many measurements.
+    /// Stop when no improvement for this many consecutive candidates
+    /// (measured or memoized).
     pub patience: usize,
+    /// Worker threads for the intra-round measurement fan-out: 1 = serial,
+    /// 0 = one per available core. Purely a throughput knob — the result is
+    /// bit-identical for every value (see module docs).
+    pub workers: usize,
 }
 
 impl Default for TunerOptions {
     fn default() -> Self {
-        TunerOptions { algorithm: None, trials: 200, batch: 8, screen: 1, seed: 42, patience: 60 }
+        TunerOptions {
+            algorithm: None,
+            trials: 200,
+            batch: 8,
+            screen: 1,
+            seed: 42,
+            patience: 60,
+            workers: 1,
+        }
     }
 }
 
 /// Outcome of a tuning run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AutotuneResult {
     pub algorithm: &'static str,
     pub best_config: KernelConfig,
     pub best_log_cycles: f64,
     /// Real measurements performed.
     pub trials_used: usize,
+    /// Re-proposed candidates served from the measurement memo (no budget
+    /// consumed, no re-measurement).
+    pub memo_hits: usize,
     /// Measurement index at which the final best was first reached
     /// (the "convergence trials" of Table 5).
     pub converged_at: usize,
@@ -61,21 +94,83 @@ impl Tuner {
 
     /// Tune one kernel. `cost_model` (if given) screens candidates between
     /// search proposals and real measurements, and is trained online from
-    /// every measurement (§3.2.2 sample collection).
+    /// every measurement (§3.2.2 sample collection). Fresh measurements fan
+    /// out across `opts.workers` threads.
     pub fn tune(
         &self,
         sig: &KernelSig,
         opts: &TunerOptions,
+        cost_model: Option<&mut dyn CostModel>,
+    ) -> AutotuneResult {
+        self.run(sig, opts, cost_model, crate::util::resolve_workers(opts.workers))
+    }
+
+    /// The serial golden reference: the same engine with the measurement
+    /// fan-out forced to one worker. [`Self::tune`] must match this
+    /// bit-for-bit (differential suite: `rust/tests/tune_parallel.rs`).
+    pub fn tune_reference(
+        &self,
+        sig: &KernelSig,
+        opts: &TunerOptions,
+        cost_model: Option<&mut dyn CostModel>,
+    ) -> AutotuneResult {
+        self.run(sig, opts, cost_model, 1)
+    }
+
+    /// Measure a slice of configurations, index-striped across `workers`
+    /// scoped threads ([`measure`] is a pure function of its inputs).
+    /// Results come back in input order whatever the thread schedule.
+    fn measure_batch(&self, sig: &KernelSig, kcs: &[KernelConfig], workers: usize) -> Vec<f64> {
+        let w = workers.min(kcs.len());
+        if w <= 1 {
+            return kcs.iter().map(|&kc| measure(&self.mach, sig, kc)).collect();
+        }
+        let mut out = vec![0.0f64; kcs.len()];
+        std::thread::scope(|scope| {
+            let mach = &self.mach;
+            let handles: Vec<_> = (0..w)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let mut part = Vec::new();
+                        let mut i = t;
+                        while i < kcs.len() {
+                            part.push((i, measure(mach, sig, kcs[i])));
+                            i += w;
+                        }
+                        part
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, y) in h.join().expect("measurement worker panicked") {
+                    out[i] = y;
+                }
+            }
+        });
+        out
+    }
+
+    /// The engine behind both [`Self::tune`] and [`Self::tune_reference`]:
+    /// propose → screen → measure (fan-out over pure measurements only) →
+    /// replay bookkeeping in proposal order.
+    fn run(
+        &self,
+        sig: &KernelSig,
+        opts: &TunerOptions,
         mut cost_model: Option<&mut dyn CostModel>,
+        workers: usize,
     ) -> AutotuneResult {
         let alg = opts
             .algorithm
             .unwrap_or_else(|| Algorithm::auto_select(self.space.size(), opts.trials));
         let mut searcher: Box<dyn Searcher> = algos::make(alg);
         let mut rng = Rng::new(opts.seed);
+        // Per-run measurement memo: encoded config -> measured log2(cycles).
+        let mut memo: BTreeMap<Config, f64> = BTreeMap::new();
         let mut best = f64::INFINITY;
         let mut best_cfg = KernelConfig::default();
         let mut used = 0usize;
+        let mut memo_hits = 0usize;
         let mut converged_at = 0usize;
         let mut curve = Vec::new();
         let mut since_improve = 0usize;
@@ -95,31 +190,68 @@ impl Tuner {
                         proposals.iter().map(|c| self.space.decode(c)).collect();
                     let preds = cm.predict(sig, &kcs);
                     let mut idx: Vec<usize> = (0..proposals.len()).collect();
-                    idx.sort_by(|&a, &b| preds[a].partial_cmp(&preds[b]).unwrap());
+                    // `total_cmp`: a model emitting NaN must degrade to an
+                    // arbitrary-but-deterministic rank, never panic the
+                    // compile (NaN sorts above every real prediction).
+                    idx.sort_by(|&a, &b| preds[a].total_cmp(&preds[b]));
                     idx.truncate(want);
                     idx.into_iter().map(|i| proposals[i].clone()).collect()
                 }
                 _ => proposals.into_iter().take(want).collect(),
             };
-            // Real measurements.
-            let mut results = Vec::with_capacity(to_measure.len());
+            // Fresh work = first occurrences not already memoized; an
+            // in-round duplicate is a memo hit of its first occurrence.
+            let (fresh_cfgs, fresh_kcs) = {
+                let mut cfgs: Vec<Config> = Vec::new();
+                let mut kcs: Vec<KernelConfig> = Vec::new();
+                let mut scheduled: BTreeSet<&Config> = BTreeSet::new();
+                for cfg in &to_measure {
+                    if !memo.contains_key(cfg) && scheduled.insert(cfg) {
+                        cfgs.push(cfg.clone());
+                        kcs.push(self.space.decode(cfg));
+                    }
+                }
+                (cfgs, kcs)
+            };
+            // Real measurements: the only part that runs concurrently.
+            let ys = self.measure_batch(sig, &fresh_kcs, workers);
+            let mut fresh: BTreeSet<Config> = BTreeSet::new();
+            for (cfg, y) in fresh_cfgs.into_iter().zip(&ys) {
+                memo.insert(cfg.clone(), *y);
+                fresh.insert(cfg);
+            }
+            // Replay in proposal order — identical regardless of how the
+            // measurements above were scheduled.
+            let mut results: Vec<(Config, f64)> = Vec::with_capacity(to_measure.len());
+            let mut observed: Vec<(KernelConfig, f64)> = Vec::new();
             for cfg in to_measure {
-                let kc = self.space.decode(&cfg);
-                let y = measure(&self.mach, sig, kc);
-                used += 1;
-                if y < best - 1e-9 {
-                    best = y;
-                    best_cfg = kc;
-                    converged_at = used;
-                    since_improve = 0;
+                let y = *memo.get(&cfg).expect("measured or memoized");
+                if fresh.remove(&cfg) {
+                    used += 1;
+                    if y < best - 1e-9 {
+                        best = y;
+                        best_cfg = self.space.decode(&cfg);
+                        converged_at = used;
+                        since_improve = 0;
+                    } else {
+                        since_improve += 1;
+                    }
+                    curve.push((used, best));
+                    observed.push((self.space.decode(&cfg), y));
                 } else {
+                    // A repeat can never beat `best` (its value is already
+                    // in the minimum), so it only spends patience — this is
+                    // what guarantees termination for duplicate-heavy
+                    // searchers on tiny spaces.
+                    memo_hits += 1;
                     since_improve += 1;
                 }
-                curve.push((used, best));
-                if let Some(cm) = &mut cost_model {
-                    cm.observe(sig, kc, y);
-                }
                 results.push((cfg, y));
+            }
+            if let Some(cm) = &mut cost_model {
+                if !observed.is_empty() {
+                    cm.observe_batch(sig, &observed);
+                }
             }
             searcher.observe(&results);
         }
@@ -128,6 +260,7 @@ impl Tuner {
             best_config: best_cfg,
             best_log_cycles: best,
             trials_used: used,
+            memo_hits,
             converged_at,
             curve,
         }
@@ -185,6 +318,7 @@ impl Tuner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autotune::space::Param;
 
     fn sig() -> KernelSig {
         KernelSig::matmul(64, 128, 64)
@@ -243,5 +377,89 @@ mod tests {
         let opts = TunerOptions { trials: 500, patience: 12, ..Default::default() };
         let r = t.tune(&sig(), &opts, None);
         assert!(r.trials_used < 500);
+    }
+
+    /// A screening model that emits NaN for every candidate — the sort must
+    /// stay deterministic and panic-free (`f64::total_cmp`), and tuning must
+    /// still find a finite optimum from the real measurements.
+    struct NanModel;
+
+    impl CostModel for NanModel {
+        fn name(&self) -> &'static str {
+            "nan"
+        }
+
+        fn predict(&mut self, _sig: &KernelSig, configs: &[KernelConfig]) -> Vec<f64> {
+            vec![f64::NAN; configs.len()]
+        }
+    }
+
+    #[test]
+    fn nan_predictions_never_panic_screening() {
+        let t = Tuner::new(MachineConfig::xgen_asic());
+        let opts = TunerOptions { trials: 24, screen: 4, ..Default::default() };
+        let mut nan = NanModel;
+        let r = t.tune(&sig(), &opts, Some(&mut nan));
+        assert!(r.best_log_cycles.is_finite());
+        assert!(r.trials_used > 0);
+        assert!(r.curve.windows(2).all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn duplicate_heavy_search_terminates_without_burning_budget() {
+        // Annealing on a 4-config space revisits configurations constantly:
+        // the memo must absorb every repeat (zero budget) and patience must
+        // end the run long before the nominal 400-trial budget.
+        let mut t = Tuner::new(MachineConfig::xgen_asic());
+        t.space = ParameterSpace {
+            params: vec![
+                Param { name: "unroll", choices: vec![1, 2] },
+                Param { name: "lmul", choices: vec![1, 2] },
+            ],
+        };
+        let opts = TunerOptions {
+            algorithm: Some(Algorithm::Annealing),
+            trials: 400,
+            patience: 30,
+            ..Default::default()
+        };
+        let r = t.tune(&sig(), &opts, None);
+        assert!(r.trials_used <= 4, "at most one real measurement per distinct config");
+        assert!(r.memo_hits > 0, "repeats must hit the memo");
+        assert_eq!(r.curve.len(), r.trials_used);
+    }
+
+    #[test]
+    fn memo_hits_do_not_consume_trial_budget() {
+        // Grid search never repeats; annealing on the same tiny space does.
+        // Both must report trials_used == distinct configs measured.
+        let mut t = Tuner::new(MachineConfig::xgen_asic());
+        t.space = ParameterSpace {
+            params: vec![Param { name: "tile_n", choices: vec![16, 32, 64] }],
+        };
+        let grid = t.tune(
+            &sig(),
+            &TunerOptions { algorithm: Some(Algorithm::Grid), trials: 50, ..Default::default() },
+            None,
+        );
+        assert_eq!(grid.trials_used, 3);
+        assert_eq!(grid.memo_hits, 0);
+        let sa = t.tune(
+            &sig(),
+            &TunerOptions {
+                algorithm: Some(Algorithm::Annealing),
+                trials: 50,
+                patience: 20,
+                ..Default::default()
+            },
+            None,
+        );
+        assert!(sa.trials_used <= 3);
+        // Curve only advances on real measurements, stays monotone.
+        assert_eq!(sa.curve.len(), sa.trials_used);
+        assert!(sa.curve.windows(2).all(|w| w[1].1 <= w[0].1));
+        // Grid measured everything, so it holds the true optimum; annealing
+        // can do no better than it over a subset of the same space.
+        assert!(sa.best_log_cycles >= grid.best_log_cycles - 1e-12);
     }
 }

@@ -270,7 +270,7 @@ pub fn matmul_bias(
         inner.add(OpClass::Alu, 2); // pointer bumps
         let k_nest = LoopNest::leaf((k / unroll).max(1) as u64, {
             let mut m2 = InstrMix::default();
-            for (c, n_) in inner.counts {
+            for (c, n_) in inner.iter() {
                 m2.add(c, n_ * unroll as u64);
             }
             m2

@@ -166,6 +166,13 @@ pub fn extract(sig: &KernelSig, kc: KernelConfig) -> [f64; NUM_FEATURES] {
     ]
 }
 
+/// Batched [`extract`]: one feature matrix per screening round — the
+/// batch-shaped entry point the cost models share (and the AOT kernels
+/// consume), so extraction happens once per candidate per round.
+pub fn extract_batch(sig: &KernelSig, kcs: &[KernelConfig]) -> Vec<[f64; NUM_FEATURES]> {
+    kcs.iter().map(|&kc| extract(sig, kc)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +203,20 @@ mod tests {
         assert_eq!(KernelSig::parse_key("matmul:1x2"), None);
         assert_eq!(KernelSig::parse_key("bogus:1x2x3"), None);
         assert_eq!(KernelSig::parse_key("matmul:1x2xhuge"), None);
+    }
+
+    #[test]
+    fn extract_batch_matches_per_config_extract() {
+        let sig = KernelSig::matmul(64, 64, 64);
+        let kcs = [
+            KernelConfig::default(),
+            KernelConfig { lmul: 4, unroll: 2, ..Default::default() },
+        ];
+        let batch = extract_batch(&sig, &kcs);
+        assert_eq!(batch.len(), kcs.len());
+        for (f, &kc) in batch.iter().zip(&kcs) {
+            assert_eq!(*f, extract(&sig, kc));
+        }
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Grid-bucketed feature-space index for the hybrid model's proximity
+//! routing (paper §3.2.3). The old implementation linearly scanned every
+//! observed feature vector per prediction — O(trials² · screen) over a
+//! whole tuning run, on the tuner's hottest query. This index hashes each
+//! point into an axis-aligned cell of side `cell`, so a radius-`cell` query
+//! only has to compare against points in Chebyshev-adjacent cells.
+//!
+//! The prune is *exact*: if two points are within L2 distance `cell`, every
+//! per-axis delta is `< cell`, so their cell coordinates differ by at most
+//! one — a candidate within the radius can never hide in a skipped bucket.
+//! Observed configurations cluster hard in feature space (most features
+//! depend only on the signature under tune, not the schedule), so the
+//! bucket count stays tiny and each query touches a handful of cells.
+
+use std::collections::BTreeMap;
+
+use crate::cost::features::NUM_FEATURES;
+
+/// Cell coordinates of one bucket.
+type Cell = [i64; NUM_FEATURES];
+
+/// Points bucketed by axis-aligned grid cell of side `cell`.
+pub struct GridIndex {
+    cell: f64,
+    buckets: BTreeMap<Cell, Vec<[f64; NUM_FEATURES]>>,
+    len: usize,
+}
+
+impl GridIndex {
+    /// `cell` is both the bucket side and the query radius of
+    /// [`Self::any_within`].
+    pub fn new(cell: f64) -> GridIndex {
+        assert!(cell > 0.0, "grid cell must be positive");
+        GridIndex { cell, buckets: BTreeMap::new(), len: 0 }
+    }
+
+    /// The cell side (= the query radius).
+    pub fn cell(&self) -> f64 {
+        self.cell
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn cell_of(&self, f: &[f64; NUM_FEATURES]) -> Cell {
+        f.map(|v| (v / self.cell).floor() as i64)
+    }
+
+    pub fn insert(&mut self, f: [f64; NUM_FEATURES]) {
+        let key = self.cell_of(&f);
+        self.buckets.entry(key).or_default().push(f);
+        self.len += 1;
+    }
+
+    /// Whether any inserted point lies within L2 distance `cell` of `f` —
+    /// exactly the predicate the old linear scan answered, in far fewer
+    /// comparisons.
+    pub fn any_within(&self, f: &[f64; NUM_FEATURES]) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        let key = self.cell_of(f);
+        let r2 = self.cell * self.cell;
+        for (bkey, points) in &self.buckets {
+            // Chebyshev adjacency: a point within the radius can only live
+            // in a cell differing by <= 1 on every axis.
+            if bkey.iter().zip(&key).any(|(a, b)| (a - b).abs() > 1) {
+                continue;
+            }
+            for p in points {
+                let d2: f64 = p.iter().zip(f).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d2 < r2 {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn linear_scan(seen: &[[f64; NUM_FEATURES]], f: &[f64; NUM_FEATURES], tau: f64) -> bool {
+        seen.iter().any(|s| {
+            let d2: f64 = s.iter().zip(f).map(|(a, b)| (a - b) * (a - b)).sum();
+            d2.sqrt() < tau
+        })
+    }
+
+    fn random_point(rng: &mut crate::util::rng::Rng, scale: f64) -> [f64; NUM_FEATURES] {
+        let mut f = [0.0; NUM_FEATURES];
+        for v in f.iter_mut() {
+            *v = (rng.f64() - 0.5) * scale;
+        }
+        f
+    }
+
+    #[test]
+    fn empty_index_matches_nothing() {
+        let idx = GridIndex::new(2.0);
+        assert!(idx.is_empty());
+        assert!(!idx.any_within(&[0.0; NUM_FEATURES]));
+    }
+
+    #[test]
+    fn finds_exact_and_near_points() {
+        let mut idx = GridIndex::new(2.0);
+        let mut p = [0.0; NUM_FEATURES];
+        p[0] = 5.0;
+        idx.insert(p);
+        assert_eq!(idx.len(), 1);
+        // The point itself (distance 0) and a point just inside the radius.
+        assert!(idx.any_within(&p));
+        let mut q = p;
+        q[1] = 1.9;
+        assert!(idx.any_within(&q));
+        // Just outside.
+        let mut far = p;
+        far[1] = 2.1;
+        assert!(!idx.any_within(&far));
+    }
+
+    #[test]
+    fn cell_boundaries_do_not_hide_neighbors() {
+        // Two points straddling a cell boundary, closer than the radius.
+        let mut idx = GridIndex::new(2.0);
+        let mut a = [0.0; NUM_FEATURES];
+        a[0] = 1.999; // cell 0 on axis 0
+        idx.insert(a);
+        let mut q = [0.0; NUM_FEATURES];
+        q[0] = 2.001; // cell 1 on axis 0
+        assert!(idx.any_within(&q));
+    }
+
+    #[test]
+    fn property_grid_matches_linear_scan() {
+        forall("grid index == linear scan", 60, |rng| {
+            let tau = 0.5 + rng.f64() * 3.0;
+            let mut idx = GridIndex::new(tau);
+            let mut seen = Vec::new();
+            for _ in 0..rng.index(40) {
+                let p = random_point(rng, 12.0);
+                idx.insert(p);
+                seen.push(p);
+            }
+            for _ in 0..20 {
+                let q = random_point(rng, 12.0);
+                let fast = idx.any_within(&q);
+                let slow = linear_scan(&seen, &q, tau);
+                if fast != slow {
+                    return Err(format!("tau {tau}: grid {fast} vs scan {slow} at {q:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -12,7 +12,7 @@
 //!   `rust/tests/runtime_parity.rs`.
 
 use crate::codegen::KernelConfig;
-use crate::cost::features::{extract, KernelSig, NUM_FEATURES};
+use crate::cost::features::{extract, extract_batch, KernelSig, NUM_FEATURES};
 use crate::cost::CostModel;
 
 /// Momentum coefficient (matches `model.BETA` on the python side).
@@ -126,6 +126,14 @@ impl LearnedModel {
         self.samples.len()
     }
 
+    /// Append a pre-extracted training sample without triggering training —
+    /// callers holding already-computed features (the hybrid model's shared
+    /// extraction path) push here and call [`Self::train_if_ready`] once per
+    /// measurement round.
+    pub fn observe_sample(&mut self, sample: Sample) {
+        self.samples.push(sample);
+    }
+
     fn normalize(&self, f: &[f64; NUM_FEATURES]) -> [f64; NUM_FEATURES] {
         match &self.norm {
             None => *f,
@@ -216,9 +224,9 @@ impl CostModel for LearnedModel {
     }
 
     fn predict(&mut self, sig: &KernelSig, configs: &[KernelConfig]) -> Vec<f64> {
-        let x: Vec<[f64; NUM_FEATURES]> = configs
+        let x: Vec<[f64; NUM_FEATURES]> = extract_batch(sig, configs)
             .iter()
-            .map(|&c| self.normalize(&extract(sig, c)))
+            .map(|f| self.normalize(f))
             .collect();
         self.backend
             .predict(&self.w, &x)
@@ -229,6 +237,14 @@ impl CostModel for LearnedModel {
 
     fn observe(&mut self, sig: &KernelSig, config: KernelConfig, log_cycles: f64) {
         self.samples.push(Sample { features: extract(sig, config), log_cycles });
+        self.train_if_ready();
+    }
+
+    fn observe_batch(&mut self, sig: &KernelSig, samples: &[(KernelConfig, f64)]) {
+        for &(config, log_cycles) in samples {
+            self.samples.push(Sample { features: extract(sig, config), log_cycles });
+        }
+        // One (re)train per round instead of per sample.
         self.train_if_ready();
     }
 

@@ -9,10 +9,14 @@
 
 pub mod analytical;
 pub mod features;
+pub mod index;
 pub mod learned;
+
+use std::collections::BTreeMap;
 
 use crate::codegen::KernelConfig;
 use crate::cost::features::{KernelSig, NUM_FEATURES};
+use crate::cost::index::GridIndex;
 use crate::sim::MachineConfig;
 
 /// A cost model predicts log2(cycles) for (kernel signature, config).
@@ -22,6 +26,15 @@ pub trait CostModel {
     fn predict(&mut self, sig: &KernelSig, configs: &[KernelConfig]) -> Vec<f64>;
     /// Observe a measurement (log2 cycles). Default: ignore.
     fn observe(&mut self, _sig: &KernelSig, _config: KernelConfig, _log_cycles: f64) {}
+    /// Observe one measurement round in order. Equivalent to calling
+    /// [`Self::observe`] per sample, except batched implementations may
+    /// defer (re)training to once per call — the tuner's measurement loop
+    /// feeds each round through this.
+    fn observe_batch(&mut self, sig: &KernelSig, samples: &[(KernelConfig, f64)]) {
+        for &(config, log_cycles) in samples {
+            self.observe(sig, config, log_cycles);
+        }
+    }
     /// Whether predictions are trustworthy yet (learned models need
     /// training samples first; analytical models are always ready).
     fn ready(&self) -> bool {
@@ -72,14 +85,29 @@ pub fn measure(mach: &MachineConfig, sig: &KernelSig, config: KernelConfig) -> f
     (cycles.max(1.0) * noise).log2()
 }
 
+/// The default L2 proximity radius (and grid cell side) in feature space.
+pub const HYBRID_TAU: f64 = 2.0;
+
+/// Feature-cache key: the five schedule parameters (features are a pure
+/// function of `(sig, config)`, and the cache is scoped to one signature).
+fn cfg_key(kc: &KernelConfig) -> [usize; 5] {
+    [kc.tile_m, kc.tile_n, kc.tile_k, kc.unroll, kc.lmul]
+}
+
 /// Hybrid model (paper §3.2.3): learned prediction when the candidate is
 /// near observed configurations in feature space, analytical otherwise.
+/// Proximity queries go through a [`GridIndex`] (exact, bucket-pruned), and
+/// each candidate's features are extracted once and shared between
+/// screening (`predict`) and training (`observe_batch`).
 pub struct HybridModel {
     pub learned: learned::LearnedModel,
     pub analytical: analytical::AnalyticalModel,
-    /// L2 distance threshold in normalized feature space.
-    pub tau: f64,
-    seen: Vec<[f64; NUM_FEATURES]>,
+    /// Observed feature vectors, bucketed at cell side `tau`.
+    seen: GridIndex,
+    /// (sig-scoped) config -> extracted features, filled by `predict` so a
+    /// later `observe` of the same candidate is a lookup, not a re-extract.
+    feat_cache: BTreeMap<[usize; 5], [f64; NUM_FEATURES]>,
+    cache_sig: Option<KernelSig>,
 }
 
 impl HybridModel {
@@ -87,16 +115,28 @@ impl HybridModel {
         HybridModel {
             learned: learned::LearnedModel::new(),
             analytical: analytical::AnalyticalModel::new(mach),
-            tau: 2.0,
-            seen: Vec::new(),
+            seen: GridIndex::new(HYBRID_TAU),
+            feat_cache: BTreeMap::new(),
+            cache_sig: None,
         }
     }
 
-    fn near_observed(&self, f: &[f64; NUM_FEATURES]) -> bool {
-        self.seen.iter().any(|s| {
-            let d2: f64 = s.iter().zip(f).map(|(a, b)| (a - b) * (a - b)).sum();
-            d2.sqrt() < self.tau
-        })
+    /// L2 distance threshold for learned-vs-analytical routing (fixed at
+    /// construction: it doubles as the index's grid cell side).
+    pub fn tau(&self) -> f64 {
+        self.seen.cell()
+    }
+
+    /// Features for `(sig, kc)`, served from the per-signature cache.
+    fn cached_features(&mut self, sig: &KernelSig, kc: KernelConfig) -> [f64; NUM_FEATURES] {
+        if self.cache_sig.as_ref() != Some(sig) {
+            self.feat_cache.clear();
+            self.cache_sig = Some(sig.clone());
+        }
+        *self
+            .feat_cache
+            .entry(cfg_key(&kc))
+            .or_insert_with(|| features::extract(sig, kc))
     }
 }
 
@@ -110,8 +150,8 @@ impl CostModel for HybridModel {
         configs
             .iter()
             .map(|&c| {
-                let f = features::extract(sig, c);
-                if learned_ready && self.near_observed(&f) {
+                let f = self.cached_features(sig, c);
+                if learned_ready && self.seen.any_within(&f) {
                     self.learned.predict_one(&f)
                 } else {
                     self.analytical.predict_one(sig, c)
@@ -121,10 +161,17 @@ impl CostModel for HybridModel {
     }
 
     fn observe(&mut self, sig: &KernelSig, config: KernelConfig, log_cycles: f64) {
-        let f = features::extract(sig, config);
-        self.seen.push(f);
-        self.learned.observe(sig, config, log_cycles);
-        // Train incrementally whenever a batch is ready.
+        self.observe_batch(sig, &[(config, log_cycles)]);
+    }
+
+    fn observe_batch(&mut self, sig: &KernelSig, samples: &[(KernelConfig, f64)]) {
+        for &(config, log_cycles) in samples {
+            let f = self.cached_features(sig, config);
+            self.seen.insert(f);
+            self.learned.observe_sample(learned::Sample { features: f, log_cycles });
+        }
+        // Train incrementally whenever a batch is ready — once per round,
+        // not once per sample.
         self.learned.train_if_ready();
     }
 }
@@ -170,5 +217,29 @@ mod tests {
         assert!(p1.is_finite());
         let y_true = measure(&mach, &sig(), c);
         assert!((p1 - y_true).abs() < (p0 - y_true).abs() + 2.0);
+    }
+
+    #[test]
+    fn hybrid_feature_cache_is_signature_scoped() {
+        // Priming the cache on one signature must not leak stale features
+        // into another: a model that saw signature `a` first and one that
+        // never did must agree exactly on signature `b`.
+        let mach = MachineConfig::xgen_asic();
+        let a = KernelSig::matmul(128, 256, 512);
+        let b = KernelSig::matmul(32, 48, 64);
+        let mut h1 = HybridModel::new(mach.clone());
+        let mut h2 = HybridModel::new(mach.clone());
+        let c = KernelConfig::default();
+        let _ = h1.predict(&a, &[c]);
+        for lm in [1usize, 2, 4] {
+            for u in [1usize, 2, 4] {
+                let cfg = KernelConfig { lmul: lm, unroll: u, ..c };
+                let y = measure(&mach, &b, cfg);
+                h1.observe(&b, cfg, y);
+                h2.observe(&b, cfg, y);
+            }
+        }
+        assert_eq!(h1.predict(&b, &[c]), h2.predict(&b, &[c]));
+        assert_eq!(h1.tau(), HYBRID_TAU);
     }
 }

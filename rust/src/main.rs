@@ -171,13 +171,16 @@ fn cmd_tune(args: &Args) -> i32 {
         algorithm: args.opt("algorithm").and_then(Algorithm::parse),
         trials: args.opt_usize("trials", 200),
         seed: args.opt_u64("seed", 42),
+        // Intra-round measurement fan-out (0 = one worker per core);
+        // results are identical at any worker count.
+        workers: args.opt_usize("workers", 0),
         ..Default::default()
     };
     let mut model = xgenc::cost::HybridModel::new(tuner.mach.clone());
     let r = tuner.tune(&sig, &opts, Some(&mut model));
     println!(
-        "algorithm={} trials={} converged_at={} best=2^{:.2} cycles config={:?}",
-        r.algorithm, r.trials_used, r.converged_at, r.best_log_cycles, r.best_config
+        "algorithm={} trials={} memo_hits={} converged_at={} best=2^{:.2} cycles config={:?}",
+        r.algorithm, r.trials_used, r.memo_hits, r.converged_at, r.best_log_cycles, r.best_config
     );
     0
 }
@@ -257,13 +260,15 @@ USAGE:
                  [--calib kl|percentile|entropy|minmax] [--tune N] [--platform xgen|hand|cpu]
                  [--cache FILE] [--workers N] [--out DIR] [--run] [--verify]
   xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
-                 [--algorithm bayes|ga|sa|random|grid]
+                 [--algorithm bayes|ga|sa|random|grid] [--workers N]
   xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
   xgenc export   --model zoo:<name> [--out file.json]
 
   --cache FILE persists tuning results between runs: warm entries skip the
   search entirely (corrupted or stale files fall back to cold tuning).
-  --workers N caps the parallel tuning fan-out (0 = one per core).
+  --workers N caps the parallel tuning fan-out — shared between the
+  per-signature level and each search's measurement batches (0 = one per
+  core). Results are bit-identical at any worker count.
   --run executes the compiled binary on the functional simulator with
   synthesized inputs and reports measured vs predicted cycles.
   --verify additionally checks the outputs against the reference executor

@@ -75,6 +75,11 @@ pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<Pipel
         }
     }
 
+    // One worker budget for the whole bundle: the pre-tuning fan-out and
+    // the per-model lowering fan-out both draw from it (`--workers` caps
+    // everything; 0 = one per available core).
+    let budget = crate::util::resolve_workers(opts.tune_workers);
+
     // Phase 1: dedup kernel signatures across *all* models and tune each
     // unique signature exactly once (parallel fan-out, shared cache).
     let cache = opts.cache.clone().unwrap_or_else(|| Arc::new(TuneCache::new()));
@@ -95,18 +100,14 @@ pub fn compile_pipeline(graphs: &[Graph], opts: &CompileOptions) -> Result<Pipel
         bundle_stats = session::tune_signatures(&sigs, &opts, &cache).stats;
         // The per-model compiles below run against a warm cache; any
         // residual miss (a signature only visible post-optimization) tunes
-        // inline — keep that single-threaded since the models themselves
-        // fan out across workers next.
+        // inline — keep that single-threaded (one tuning budget worker)
+        // since the models themselves fan out across workers next.
         opts.tune_workers = 1;
     }
 
     // Phase 2: lower all graphs in parallel (index-striped workers; results
     // re-assembled in input order, so the bundle is deterministic).
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(graphs.len())
-        .max(1);
+    let workers = budget.min(graphs.len()).max(1);
     let mut done: Vec<(usize, Result<CompiledModel>)> = Vec::with_capacity(graphs.len());
     std::thread::scope(|scope| {
         let opts = &opts;

@@ -42,8 +42,9 @@ pub struct CompileOptions {
     pub calib_inputs: Vec<Vec<Tensor>>,
     /// Auto-tuning trials per distinct kernel signature (0 = heuristics).
     pub tune_trials: usize,
-    /// Worker threads for the per-signature tuning fan-out
-    /// (0 = one per available core).
+    /// Total worker-thread budget for tuning, shared between the
+    /// per-signature fan-out and each tuner's intra-round measurement
+    /// fan-out (0 = one per available core).
     pub tune_workers: usize,
     /// Shared tuning cache: hits skip the search entirely. `None` gives each
     /// compile a private cache (identical layers still tune only once).
@@ -146,9 +147,11 @@ pub struct TuneOutcome {
 
 /// Tune every distinct signature once: cache lookups first, then the misses
 /// fan out across `std::thread::scope` workers (index-striped so the merge
-/// order — and therefore the result — is independent of scheduling).
-/// Deterministic: each signature gets a fresh `Rng`/cost model seeded from
-/// `opts.seed`, so worker count never changes any config.
+/// order — and therefore the result — is independent of scheduling). The
+/// `opts.tune_workers` budget is split between this cross-signature level
+/// and each tuner's intra-round measurement fan-out — one pool, never
+/// oversubscribed. Deterministic: each signature gets a fresh `Rng`/cost
+/// model seeded from `opts.seed`, so worker count never changes any config.
 pub fn tune_signatures(
     sigs: &[KernelSig],
     opts: &CompileOptions,
@@ -175,13 +178,14 @@ pub fn tune_signatures(
     if misses.is_empty() {
         return TuneOutcome { configs, workers: 0, tuner_calls: 0, stats };
     }
-    let workers = if opts.tune_workers > 0 {
-        opts.tune_workers
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    }
-    .min(misses.len())
-    .max(1);
+    // One thread budget shared by both fan-out levels: `budget` total,
+    // split into cross-signature workers x intra-round measurement workers
+    // inside each tuner (`TunerOptions::workers`), so few-signature
+    // compiles still saturate the pool and many-signature compiles never
+    // oversubscribe it.
+    let budget = crate::util::resolve_workers(opts.tune_workers);
+    let workers = budget.min(misses.len()).max(1);
+    let measure_workers = (budget / workers).max(1);
     // (index, sig, entry, searched): searched is false when a concurrent
     // compile finished the same signature between our lookup and now.
     let mut tuned: Vec<(usize, KernelSig, CacheEntry, bool)> = Vec::with_capacity(misses.len());
@@ -209,6 +213,7 @@ pub fn tune_signatures(
                             trials: opts.tune_trials,
                             screen: 4,
                             seed: opts.seed,
+                            workers: measure_workers,
                             ..Default::default()
                         };
                         let r = tuner.tune(sig, &topts, Some(&mut model));
@@ -219,6 +224,7 @@ pub fn tune_signatures(
                                 config: r.best_config,
                                 log_cycles: r.best_log_cycles,
                                 trials_used: r.trials_used,
+                                memo_hits: r.memo_hits,
                                 tune_seconds: t0.elapsed().as_secs_f64(),
                             },
                             true,

@@ -12,25 +12,37 @@
 use crate::isa::OpClass;
 use crate::sim::MachineConfig;
 
-/// Per-iteration instruction mix of one loop body (leaf work).
-#[derive(Debug, Clone, Default)]
+/// Per-iteration instruction mix of one loop body (leaf work), held as a
+/// fixed per-class array indexed by `OpClass::index()` — `add` is O(1) and
+/// the cycle estimator walks a dense array instead of linearly scanning a
+/// `Vec` of pairs (this structure sits under every tuner measurement).
+#[derive(Debug, Clone)]
 pub struct InstrMix {
-    pub counts: Vec<(OpClass, u64)>,
+    counts: [u64; OpClass::COUNT],
+}
+
+impl Default for InstrMix {
+    fn default() -> Self {
+        InstrMix { counts: [0; OpClass::COUNT] }
+    }
 }
 
 impl InstrMix {
     pub fn add(&mut self, class: OpClass, n: u64) {
-        for (c, cnt) in self.counts.iter_mut() {
-            if *c == class {
-                *cnt += n;
-                return;
-            }
-        }
-        self.counts.push((class, n));
+        self.counts[class.index()] += n;
     }
 
     pub fn total(&self) -> u64 {
-        self.counts.iter().map(|(_, n)| n).sum()
+        self.counts.iter().sum()
+    }
+
+    /// Nonzero (class, count) pairs in class-index order.
+    pub fn iter(&self) -> impl Iterator<Item = (OpClass, u64)> + '_ {
+        OpClass::ALL
+            .iter()
+            .zip(self.counts.iter())
+            .filter(|&(_, &n)| n != 0)
+            .map(|(&c, &n)| (c, n))
     }
 }
 
@@ -109,9 +121,8 @@ pub fn estimate_cycles(cfg: &MachineConfig, nest: &LoopNest, mem: &MemProfile, l
 fn nest_cycles(cfg: &MachineConfig, nest: &LoopNest, lmul: usize) -> f64 {
     let body: f64 = nest
         .body
-        .counts
         .iter()
-        .map(|(c, n)| *n as f64 * issue_cycles(cfg, *c, lmul))
+        .map(|(c, n)| n as f64 * issue_cycles(cfg, c, lmul))
         .sum();
     let inner: f64 = nest.children.iter().map(|c| nest_cycles(cfg, c, lmul)).sum();
     nest.trip as f64 * (body + nest.overhead as f64 / cfg.issue_width + inner)
@@ -145,6 +156,18 @@ mod tests {
         let mut m = InstrMix::default();
         m.add(OpClass::VFma, n);
         m
+    }
+
+    #[test]
+    fn instr_mix_accumulates_per_class() {
+        let mut m = InstrMix::default();
+        m.add(OpClass::VFma, 2);
+        m.add(OpClass::Alu, 1);
+        m.add(OpClass::VFma, 3);
+        assert_eq!(m.total(), 6);
+        // iter() yields nonzero classes in index order, folded per class.
+        let pairs: Vec<(OpClass, u64)> = m.iter().collect();
+        assert_eq!(pairs, vec![(OpClass::Alu, 1), (OpClass::VFma, 5)]);
     }
 
     #[test]

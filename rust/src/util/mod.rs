@@ -9,3 +9,15 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Resolve a worker-count option: `0` means one worker per available core,
+/// any other value is taken literally. The single policy point for every
+/// fan-out level (tuner measurement rounds, per-signature tuning, pipeline
+/// lowering) so "auto" always means the same thing.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}

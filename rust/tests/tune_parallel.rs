@@ -1,0 +1,106 @@
+//! Differential suite for the batched, parallel, memoized tuning engine:
+//! `Tuner::tune` at any worker count must return an `AutotuneResult` that is
+//! bit-identical to `Tuner::tune_reference` (the serial golden path) —
+//! best config, best log-cycles, trials used, memo hits, convergence index,
+//! and the full curve — across signatures, algorithms, and screening modes.
+//! Plus accounting invariants: memo hits never consume trial budget and the
+//! convergence curve stays monotone.
+
+use xgenc::autotune::{Algorithm, Tuner, TunerOptions};
+use xgenc::cost::features::KernelSig;
+use xgenc::cost::HybridModel;
+use xgenc::sim::MachineConfig;
+
+fn signatures() -> Vec<KernelSig> {
+    vec![
+        KernelSig::matmul(64, 128, 64),
+        KernelSig::conv2d(3, 16, 16, 8, 3, 1),
+        KernelSig::elementwise(1 << 16),
+    ]
+}
+
+#[test]
+fn parallel_tuner_matches_serial_reference_bit_for_bit() {
+    let tuner = Tuner::new(MachineConfig::xgen_asic());
+    let algorithms = [Algorithm::Random, Algorithm::Genetic, Algorithm::Annealing];
+    for sig in &signatures() {
+        for &algorithm in &algorithms {
+            let opts = TunerOptions {
+                algorithm: Some(algorithm),
+                trials: 30,
+                seed: 7,
+                workers: 1,
+                ..Default::default()
+            };
+            let parallel_opts = TunerOptions { workers: 4, ..opts.clone() };
+            let serial = tuner.tune_reference(sig, &opts, None);
+            let parallel = tuner.tune(sig, &parallel_opts, None);
+            assert_eq!(
+                serial,
+                parallel,
+                "{} @ {}: parallel result diverged from serial reference",
+                algorithm.name(),
+                sig.key()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_tuner_matches_serial_reference_with_screening_model() {
+    // The screened path adds the stateful cost model (predict -> measure ->
+    // observe_batch); each arm gets its own fresh model, and the replay
+    // order must keep their evolutions — and therefore the screening
+    // decisions — identical.
+    let tuner = Tuner::new(MachineConfig::xgen_asic());
+    for sig in &signatures() {
+        for &algorithm in &[Algorithm::Random, Algorithm::Bayesian] {
+            let opts = TunerOptions {
+                algorithm: Some(algorithm),
+                trials: 40,
+                screen: 4,
+                seed: 11,
+                workers: 1,
+                ..Default::default()
+            };
+            let parallel_opts = TunerOptions { workers: 4, ..opts.clone() };
+            let mut serial_model = HybridModel::new(tuner.mach.clone());
+            let mut parallel_model = HybridModel::new(tuner.mach.clone());
+            let serial = tuner.tune_reference(sig, &opts, Some(&mut serial_model));
+            let parallel = tuner.tune(sig, &parallel_opts, Some(&mut parallel_model));
+            assert_eq!(
+                serial,
+                parallel,
+                "{} @ {} (screened): parallel result diverged",
+                algorithm.name(),
+                sig.key()
+            );
+        }
+    }
+}
+
+#[test]
+fn memo_and_budget_accounting_invariants() {
+    let tuner = Tuner::new(MachineConfig::xgen_asic());
+    let sig = KernelSig::matmul(64, 128, 64);
+    for workers in [1usize, 4] {
+        let opts = TunerOptions {
+            algorithm: Some(Algorithm::Annealing),
+            trials: 60,
+            workers,
+            ..Default::default()
+        };
+        let r = tuner.tune(&sig, &opts, None);
+        // Budget: every curve point is one real measurement; memo hits add
+        // nothing to trials_used or the curve.
+        assert!(r.trials_used <= 60);
+        assert_eq!(r.curve.len(), r.trials_used);
+        assert!(r.converged_at <= r.trials_used);
+        // Curve indices are 1..=trials_used and best-so-far never rises.
+        for (i, (t, _)) in r.curve.iter().enumerate() {
+            assert_eq!(*t, i + 1);
+        }
+        assert!(r.curve.windows(2).all(|w| w[1].1 <= w[0].1));
+        assert_eq!(r.best_log_cycles, r.curve.last().unwrap().1);
+    }
+}
