@@ -25,7 +25,10 @@ use crate::util::json::Json;
 /// Alignment for every allocation (cache line).
 pub const ALIGN: u32 = 64;
 
-/// View ops that alias their input buffer.
+/// View ops that alias their input buffer. `DequantizeLinear` is *not* a
+/// view: sub-byte compiles lower it to a real requantize kernel writing a
+/// dequantized f32 buffer (aliasing it to the code buffer would hand raw
+/// integer codes to the consumer kernel).
 pub fn is_view_op(op: OpKind) -> bool {
     matches!(
         op,
@@ -35,8 +38,59 @@ pub fn is_view_op(op: OpKind) -> bool {
             | OpKind::Unsqueeze
             | OpKind::Identity
             | OpKind::Cast
-            | OpKind::DequantizeLinear
     )
+}
+
+/// Pack sub-byte integer codes into their deployed layout: I4 as
+/// two's-complement nibbles (two per byte, low nibble first), Binary as sign
+/// bits (LSB first; 1 = +1, 0 = -1). Functional simulation always stages
+/// f32-wide — this layout feeds [`MemPlan::wmem_deployed`] accounting and
+/// the precision-sweep artifact, never the emitted addresses.
+pub fn pack_sub_byte(dt: DType, codes: &[f32]) -> Vec<u8> {
+    match dt {
+        DType::I4 => codes
+            .chunks(2)
+            .map(|c| {
+                let lo = (c[0] as i32 & 0xF) as u8;
+                let hi = (c.get(1).map(|&v| v as i32).unwrap_or(0) & 0xF) as u8;
+                lo | (hi << 4)
+            })
+            .collect(),
+        DType::Binary => {
+            let mut out = vec![0u8; codes.len().div_ceil(8)];
+            for (i, &v) in codes.iter().enumerate() {
+                if v >= 0.0 {
+                    out[i / 8] |= 1 << (i % 8);
+                }
+            }
+            out
+        }
+        other => panic!("pack_sub_byte: {other} is not a sub-byte dtype"),
+    }
+}
+
+/// Inverse of [`pack_sub_byte`]: recover `numel` codes from the packed
+/// image (I4 nibbles sign-extend; Binary bits map to ±1).
+pub fn unpack_sub_byte(dt: DType, bytes: &[u8], numel: usize) -> Vec<f32> {
+    match dt {
+        DType::I4 => (0..numel)
+            .map(|i| {
+                let b = bytes[i / 2];
+                let nib = if i % 2 == 0 { b & 0xF } else { b >> 4 };
+                (((nib as i8) << 4) >> 4) as f32
+            })
+            .collect(),
+        DType::Binary => (0..numel)
+            .map(|i| {
+                if (bytes[i / 8] >> (i % 8)) & 1 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect(),
+        other => panic!("unpack_sub_byte: {other} is not a sub-byte dtype"),
+    }
 }
 
 /// One placed buffer.
@@ -57,10 +111,15 @@ pub struct MemPlan {
     pub scratch: BTreeMap<NodeId, Placement>,
     /// Peak DMEM usage in bytes.
     pub dmem_peak: u32,
-    /// Total WMEM bytes (after within-model dedup).
+    /// Total WMEM bytes (after within-model dedup) at f32-wide staging —
+    /// the functional-simulation layout every emitted address strides by.
     pub wmem_used: u32,
     /// WMEM bytes before dedup (for the consolidation report).
     pub wmem_raw: u32,
+    /// Deployed weight bytes after dedup, at the *storage* dtype: sub-byte
+    /// weights count their nibble/bit-packed image (`pack_sub_byte`), wider
+    /// dtypes their natural width. This is the Table 2 "bytes" column.
+    pub wmem_deployed: u32,
 }
 
 impl MemPlan {
@@ -319,18 +378,29 @@ pub fn plan(g: &Graph, dmem_capacity: u32, wmem_capacity: u32) -> Result<MemPlan
     for (tid, init) in &g.initializers {
         // Like `act_bytes`: the functional simulator stores every value at
         // f32 width, and generated kernels stride weights at 4 bytes per
-        // element — quantized *deployed* width is accounted in `QuantPlan`
-        // and the PPA model, never in the simulation layout. (Placing
-        // quantized weights at their narrow width would make the emitted
-        // addresses overlap at runtime.)
+        // element — quantized *deployed* width is accounted in
+        // `wmem_deployed`/`QuantPlan` and the PPA model, never in the
+        // simulation layout. (Placing quantized weights at their narrow
+        // width would make the emitted addresses overlap at runtime.)
         let bytes = align(((init.numel() * 4).max(1)) as u32);
         plan.wmem_raw += bytes;
         let h = init.content_hash();
-        let placement = *by_hash.entry(h).or_insert_with(|| {
-            let p = Placement { addr: wtop, bytes };
-            wtop += bytes;
-            p
-        });
+        let placement = match by_hash.get(&h) {
+            Some(p) => *p,
+            None => {
+                let p = Placement { addr: wtop, bytes };
+                wtop += bytes;
+                by_hash.insert(h, p);
+                // Deployed footprint counts each distinct buffer once, at
+                // its storage width: ceil(numel * bits / 8). For sub-byte
+                // codes this equals `pack_sub_byte(..).len()` exactly
+                // (`pack_length_matches_deployed_accounting` pins it), so
+                // the planner never materializes weights just to size them.
+                plan.wmem_deployed +=
+                    ((init.numel() as u64 * init.dtype.bits() as u64).div_ceil(8)) as u32;
+                p
+            }
+        };
         plan.wmem.insert(*tid, placement);
     }
     plan.wmem_used = wtop;
@@ -567,6 +637,108 @@ mod tests {
                 "{} placed at quantized width",
                 init.name
             );
+        }
+    }
+
+    #[test]
+    fn sub_byte_pack_covers_all_values() {
+        // Exhaustive: every I4 code and both Binary codes round-trip.
+        let all: Vec<f32> = (-8..=7).map(|v| v as f32).collect();
+        let packed = pack_sub_byte(DType::I4, &all);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_sub_byte(DType::I4, &packed, 16), all);
+        let b = vec![1.0, -1.0, -1.0, 1.0, 1.0, -1.0, 1.0, 1.0, -1.0];
+        let pb = pack_sub_byte(DType::Binary, &b);
+        assert_eq!(pb.len(), 2);
+        assert_eq!(unpack_sub_byte(DType::Binary, &pb, 9), b);
+    }
+
+    #[test]
+    fn pack_length_matches_deployed_accounting() {
+        // The planner sizes deployed sub-byte buffers arithmetically
+        // (ceil(numel * bits / 8)) instead of materializing + packing;
+        // this pins that the formula and the real packed image agree.
+        for n in [1usize, 2, 7, 8, 9, 15, 16, 17, 100] {
+            let i4 = vec![-8.0f32; n];
+            assert_eq!(
+                pack_sub_byte(DType::I4, &i4).len() as u64,
+                (n as u64 * DType::I4.bits() as u64).div_ceil(8)
+            );
+            let bin = vec![1.0f32; n];
+            assert_eq!(
+                pack_sub_byte(DType::Binary, &bin).len() as u64,
+                (n as u64 * DType::Binary.bits() as u64).div_ceil(8)
+            );
+        }
+    }
+
+    #[test]
+    fn property_sub_byte_pack_roundtrip() {
+        // pack -> unpack is the identity for random code vectors of odd and
+        // even lengths (tail nibbles/bits included).
+        forall("sub-byte pack/unpack identity", 60, |rng| {
+            let n = rng.range(1, 40) as usize;
+            let i4: Vec<f32> = (0..n).map(|_| rng.range(-8, 8) as f32).collect();
+            let got = unpack_sub_byte(DType::I4, &pack_sub_byte(DType::I4, &i4), n);
+            if got != i4 {
+                return Err(format!("I4 n={n}: {got:?} != {i4:?}"));
+            }
+            let bin: Vec<f32> =
+                (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect();
+            let got = unpack_sub_byte(DType::Binary, &pack_sub_byte(DType::Binary, &bin), n);
+            if got != bin {
+                return Err(format!("Binary n={n}: {got:?} != {bin:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deployed_bytes_shrink_with_precision_but_staging_stays_f32() {
+        let g0 = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        let p0 = planned(&g0);
+        assert_eq!(p0.wmem_deployed, g0.param_count() as u32 * 4);
+        let mut prev = u64::MAX;
+        for dt in [DType::I8, DType::I4, DType::Binary] {
+            let mut gq = g0.clone();
+            crate::quant::ptq::quantize_graph(
+                &mut gq,
+                dt,
+                crate::quant::calib::Method::MinMax,
+                &[],
+            )
+            .unwrap();
+            let p = planned(&gq);
+            // Staging (emitted addresses) stays f32-wide at every precision.
+            assert_eq!(p.wmem_used, p0.wmem_used, "{dt}");
+            assert!(
+                (p.wmem_deployed as u64) < prev && p.wmem_deployed < p0.wmem_deployed,
+                "{dt}: deployed {} not shrinking",
+                p.wmem_deployed
+            );
+            prev = p.wmem_deployed as u64;
+        }
+    }
+
+    #[test]
+    fn dequantize_is_a_real_buffer_not_a_view() {
+        // Sub-byte dequant outputs must get their own DMEM allocation:
+        // aliasing them onto the WMEM code buffer would feed raw integer
+        // codes to the consumer kernels.
+        assert!(!is_view_op(OpKind::DequantizeLinear));
+        let mut g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        crate::quant::ptq::quantize_graph(
+            &mut g,
+            DType::I4,
+            crate::quant::calib::Method::MinMax,
+            &[],
+        )
+        .unwrap();
+        let p = planned(&g);
+        for node in g.nodes.iter().filter(|n| n.op == OpKind::DequantizeLinear) {
+            let out = node.outputs[0];
+            assert!(p.dmem.contains_key(&out), "'{}' output not in DMEM", node.name);
+            assert!(p.wmem.contains_key(&node.inputs[0]), "'{}' codes not in WMEM", node.name);
         }
     }
 

@@ -11,7 +11,7 @@ use crate::backend::memplan::{is_view_op, MemPlan, ModelAbi};
 use crate::codegen::{auto_lmul, auto_unroll, kernels, kernels_attn, kernels_nn, KernelArtifact, KernelConfig};
 use crate::ir::dtype::DType;
 use crate::ir::graph::{Graph, Node, NodeId};
-use crate::ir::ops::{attr_int, attr_ints, OpKind};
+use crate::ir::ops::{attr_f64, attr_int, attr_ints, OpKind};
 use crate::isa::Instr;
 use crate::sim::MachineConfig;
 use crate::util::error::{Error, Result};
@@ -370,6 +370,26 @@ fn lower_node(
             }
             arts
         }
+        OpKind::DequantizeLinear => {
+            // Sub-byte unpack/requantize: the operand buffer holds integer
+            // codes (staged f32-wide); out = q * scale + (-zero_point *
+            // scale), matching `ir::exec`'s (q - zp) * scale oracle. The
+            // fused-multiply-add form keeps zp = 0 (the symmetric weight
+            // contract) bit-exact against the oracle.
+            let scale = attr_f64(&node.attrs, "scale", 1.0) as f32;
+            let zp = attr_f64(&node.attrs, "zero_point", 0.0) as f32;
+            let add = if zp == 0.0 { 0.0f32 } else { -zp * scale };
+            let len = numel(&out_dims);
+            vec![kernels::elementwise_unary(
+                mach,
+                kc,
+                kernels::UnaryKind::Scale { mul_bits: scale.to_bits(), add_bits: add.to_bits() },
+                len,
+                addr(0)?,
+                out_addr,
+                precision,
+            )?]
+        }
         OpKind::QuantizeLinear | OpKind::FakeQuant | OpKind::DynamicQuantizeLinear | OpKind::BinaryQuantize => {
             // QDQ at the datapath is a scale+round; modeled as a scale pass.
             let len = numel(&out_dims);
@@ -490,6 +510,35 @@ mod tests {
         let g = prepare(model_zoo::bert_tiny(1, 8)).unwrap();
         let ids = Tensor::new(vec![1, 8], (0..8).map(|i| (i * 37 % 100) as f32).collect());
         roundtrip(&g, &[ids], 5e-2);
+    }
+
+    #[test]
+    fn sub_byte_dequant_emits_requantize_kernels() {
+        // An INT4 compile must materialize one requantize (scale) kernel
+        // per weight and still verify against the oracle end-to-end.
+        let mut g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        crate::quant::ptq::quantize_graph(
+            &mut g,
+            DType::I4,
+            crate::quant::calib::Method::MinMax,
+            &[],
+        )
+        .unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let prog = lower_graph(&g, &mach, &plan, &Schedules::new(), DType::I4).unwrap();
+        let n_dq = g.nodes.iter().filter(|n| n.op == OpKind::DequantizeLinear).count();
+        assert_eq!(n_dq, g.initializers.len());
+        let scale_kernels = prog
+            .kernels
+            .iter()
+            .filter(|(_, k)| k.name.starts_with("un_scale"))
+            .count();
+        assert!(scale_kernels >= n_dq, "{scale_kernels} scale kernels for {n_dq} weights");
+        let inputs = simrun::synth_inputs(&g, 3);
+        let r = simrun::verify(&mach, &g, &prog.abi, &prog.asm, &inputs, DType::I4, None)
+            .unwrap();
+        assert!(r.passed(), "{}", r.summary());
     }
 
     #[test]

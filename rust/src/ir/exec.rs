@@ -253,7 +253,15 @@ pub fn eval_node(node: &Node, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
                 (q - zp) * scale
             })
         }
-        OpKind::DequantizeLinear => a()?.clone(),
+        // Sub-byte weight dequantization: the input holds integer codes
+        // (I4 in [-8, 7], Binary ±1); out = (q - zero_point) * scale. This
+        // mirrors bit-for-bit what codegen's requantize kernel computes on
+        // the machine, keeping differential verification closed.
+        OpKind::DequantizeLinear => {
+            let scale = attr_f64(&node.attrs, "scale", 1.0) as f32;
+            let zp = attr_f64(&node.attrs, "zero_point", 0.0) as f32;
+            unop(a()?, |q| (q - zp) * scale)
+        }
         // Integer/QLinear compute ops: the functional datapath stores f32
         // (quantization lives in the weights and the QDQ boundaries), so the
         // oracle evaluates them as their float counterparts — mirroring
@@ -968,6 +976,19 @@ mod tests {
         let input = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let out = Executor::new().run(&g, &[input]).unwrap();
         assert_eq!(out[0].data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn dequantize_linear_scales_codes() {
+        let mut g = Graph::new("dq");
+        let w = g.init(Initializer::eager("w", &[4], vec![-8.0, -1.0, 0.0, 7.0]));
+        let mut at = Attrs::new();
+        at.insert("scale".into(), AttrValue::Float(0.25));
+        at.insert("zero_point".into(), AttrValue::Float(0.0));
+        let y = g.node(OpKind::DequantizeLinear, "dq", &[w], at);
+        g.outputs.push(y);
+        let out = Executor::new().run(&g, &[]).unwrap();
+        assert_eq!(out[0].data, vec![-2.0, -0.25, 0.0, 1.75]);
     }
 
     #[test]

@@ -42,6 +42,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
         "ppa" => cmd_compile(&args), // same path; the summary carries PPA
+        "sweep" => cmd_sweep(&args),
         "pipeline" => cmd_pipeline(&args),
         "export" => cmd_export(&args),
         _ => {
@@ -185,6 +186,68 @@ fn cmd_tune(args: &Args) -> i32 {
     0
 }
 
+/// `xgenc sweep`: compile + simulate + differentially verify one model at
+/// every Table 2 precision (FP32 → Binary), reporting deployed weight
+/// bytes, predicted/measured cycles, PPA, and the verification error.
+fn cmd_sweep(args: &Args) -> i32 {
+    let spec = args.opt_or("model", "zoo:mlp");
+    let graph = match frontend::load_model(spec) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let opts = CompileOptions {
+        mach: platform(args),
+        calib_method: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
+        tune_trials: args.opt_usize("tune", 0),
+        tune_workers: args.opt_usize("workers", 0),
+        seed: args.opt_u64("seed", 42),
+        ..Default::default()
+    };
+    let rows = match xgenc::pipeline::precision_sweep(&graph, &opts) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut t = xgenc::util::table::Table::new(
+        &format!("Precision sweep: {spec} (Table 2/6)"),
+        &[
+            "Precision", "Weight bytes", "Reduction", "Cycles (pred)", "Cycles (meas)",
+            "Latency ms", "Power mW", "Max rel err", "Tol",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.precision.name().to_string(),
+            format!("{}", r.weight_bytes),
+            format!("{}x", xgenc::util::table::f(r.memory_reduction, 1)),
+            format!("{:.0}", r.predicted_cycles),
+            format!("{}", r.measured_cycles),
+            xgenc::util::table::f(r.latency_ms, 3),
+            xgenc::util::table::f(r.power_mw, 0),
+            format!("{:.2e}", r.max_rel_err),
+            format!("{:.0e}", r.tol),
+        ]);
+    }
+    t.print();
+    if let Some(path) = args.opt("out") {
+        let doc = xgenc::util::json::Json::obj(vec![
+            ("model", xgenc::util::json::Json::str_(spec)),
+            ("rows", xgenc::pipeline::session::sweep_rows_json(&rows)),
+        ]);
+        if let Err(e) = xgenc::runtime::store::save_json(std::path::Path::new(path), &doc) {
+            eprintln!("error: could not write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
 fn cmd_pipeline(args: &Args) -> i32 {
     let specs = args.opt_or("models", "zoo:vision_encoder,zoo:text_encoder,zoo:decoder");
     let mut graphs = Vec::new();
@@ -261,8 +324,14 @@ USAGE:
                  [--cache FILE] [--workers N] [--out DIR] [--run] [--verify]
   xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
                  [--algorithm bayes|ga|sa|random|grid] [--workers N]
+  xgenc sweep    --model zoo:<name> [--platform xgen|hand|cpu] [--out file.json]
   xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
   xgenc export   --model zoo:<name> [--out file.json]
+
+  sweep compiles, simulates, and differentially verifies the model at every
+  Table 2 precision (FP32 FP16 BF16 FP8 INT8 FP4 INT4 Binary), reporting
+  deployed weight bytes, predicted vs measured cycles, PPA, and the
+  verification error per precision.
 
   --cache FILE persists tuning results between runs: warm entries skip the
   search entirely (corrupted or stale files fall back to cold tuning).

@@ -5,6 +5,6 @@ pub mod multi_model;
 pub mod session;
 
 pub use session::{
-    kernel_signatures, tune_signatures, CompileOptions, CompileSession, CompiledModel,
-    TuneOutcome,
+    kernel_signatures, precision_sweep, tune_signatures, CompileOptions, CompileSession,
+    CompiledModel, SweepRow, TuneOutcome, SWEEP_LADDER,
 };

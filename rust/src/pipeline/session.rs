@@ -270,6 +270,103 @@ pub fn kernel_signatures(g: &Graph) -> Result<Vec<KernelSig>> {
     Ok(out)
 }
 
+/// One row of the Table 2/6 precision sweep (see [`precision_sweep`]).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub precision: DType,
+    /// Deployed weight footprint (sub-byte precisions bit/nibble-packed,
+    /// after content dedup) — the Table 2 "bytes" column.
+    pub weight_bytes: u64,
+    /// f32-wide staged WMEM (constant across precisions by construction).
+    pub wmem_staged: u64,
+    pub memory_reduction: f64,
+    /// Analytic cost-model prediction and PPA.
+    pub predicted_cycles: f64,
+    pub latency_ms: f64,
+    pub power_mw: f64,
+    /// Machine-measured execution + differential verification outcome.
+    pub measured_cycles: u64,
+    pub max_rel_err: f32,
+    pub tol: f32,
+}
+
+/// The Table 2 precision ladder in descending bit-width order (FP32 →
+/// Binary). This is the sweep order: deployed weight bytes are monotonically
+/// non-increasing along it.
+pub const SWEEP_LADDER: [DType; 8] = [
+    DType::F32,
+    DType::F16,
+    DType::BF16,
+    DType::FP8,
+    DType::I8,
+    DType::FP4,
+    DType::I4,
+    DType::Binary,
+];
+
+/// Compile + simulate + differentially verify `graph` at every Table 2
+/// precision (what `xgenc sweep` and `bench_precision_sweep` run). Each
+/// precision compiles with `base`'s options; integer precisions synthesize
+/// one calibration batch when none is supplied, so activation calibration
+/// is exercised end-to-end. Errors (including verification divergence) abort
+/// the sweep — a precision that cannot hold its documented tolerance is a
+/// bug, not a data point.
+pub fn precision_sweep(graph: &Graph, base: &CompileOptions) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    for &dt in &SWEEP_LADDER {
+        let mut opts = base.clone();
+        opts.precision = dt;
+        if opts.calib_inputs.is_empty() && dt.is_int_quant() {
+            opts.calib_inputs = vec![simrun::synth_inputs(graph, base.seed)];
+        }
+        let mut session = CompileSession::new(opts);
+        let c = session.compile(graph)?;
+        let r = session.verify_auto(&c)?.into_result()?;
+        rows.push(SweepRow {
+            precision: dt,
+            weight_bytes: c.plan.wmem_deployed as u64,
+            wmem_staged: c.plan.wmem_used as u64,
+            memory_reduction: c
+                .quant
+                .as_ref()
+                .map(|q| q.memory_reduction())
+                .unwrap_or(1.0),
+            predicted_cycles: c.ppa.cycles,
+            latency_ms: c.ppa.latency_ms,
+            power_mw: c.ppa.power_mw,
+            measured_cycles: r.measured_cycles,
+            max_rel_err: r.max_rel_err,
+            tol: r.tol,
+        });
+    }
+    Ok(rows)
+}
+
+/// JSON rendering of sweep rows (shared by `xgenc sweep --out` and
+/// `benches/bench_precision_sweep`).
+pub fn sweep_rows_json(rows: &[SweepRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("precision", Json::str_(r.precision.name())),
+                    ("bits", Json::Num(r.precision.bits() as f64)),
+                    ("weight_bytes", Json::Num(r.weight_bytes as f64)),
+                    ("wmem_staged_bytes", Json::Num(r.wmem_staged as f64)),
+                    ("memory_reduction", Json::Num(r.memory_reduction)),
+                    ("predicted_cycles", Json::Num(r.predicted_cycles)),
+                    ("measured_cycles", Json::Num(r.measured_cycles as f64)),
+                    ("latency_ms", Json::Num(r.latency_ms)),
+                    ("power_mw", Json::Num(r.power_mw)),
+                    ("max_rel_err", Json::Num(r.max_rel_err as f64)),
+                    ("tolerance", Json::Num(r.tol as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 pub struct CompileSession {
     pub opts: CompileOptions,
 }
@@ -400,11 +497,15 @@ impl CompileSession {
             program.asm.clone()
         };
 
-        // Stage 5: validation (hard gate) — ISA + memory + ABI coverage.
+        // Stage 5: validation (hard gate) — ISA + memory + ABI coverage +
+        // the per-precision staging/dtype contract.
         let mut validation = validate::validate_all(&g, &asm, &plan, &opts.mach);
         validation
             .checks
             .extend(validate::validate_abi(&program.abi, &g, &opts.mach).checks);
+        validation
+            .checks
+            .extend(validate::validate_precision(&program.abi, &g, opts.precision).checks);
         let validation = validation.into_result()?;
 
         // ASIC-ready output.
@@ -494,6 +595,47 @@ mod tests {
         assert!(r.measured_cycles > 0);
         assert!(r.predicted_cycles.unwrap() > 0.0);
         assert!(r.cycle_ratio().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sub_byte_pipeline_compiles_validates_and_verifies() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        for dt in [DType::I4, DType::Binary] {
+            let mut s = CompileSession::new(CompileOptions {
+                precision: dt,
+                ..Default::default()
+            });
+            let c = s.compile(&g).unwrap();
+            assert!(c.validation.passed(), "{dt}: {}", c.validation.summary());
+            assert_eq!(c.precision(), dt);
+            let r = s.verify_auto(&c).unwrap();
+            assert!(r.passed(), "{dt}: {}", r.summary());
+        }
+    }
+
+    #[test]
+    fn precision_sweep_covers_table2_and_shrinks_weights() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        let rows = precision_sweep(&g, &CompileOptions::default()).unwrap();
+        assert_eq!(rows.len(), SWEEP_LADDER.len());
+        for w in rows.windows(2) {
+            assert!(
+                w[1].weight_bytes <= w[0].weight_bytes,
+                "{} bytes {} > {} bytes {}",
+                w[1].precision,
+                w[1].weight_bytes,
+                w[0].precision,
+                w[0].weight_bytes
+            );
+            // f32-wide staging is precision-invariant.
+            assert_eq!(w[1].wmem_staged, w[0].wmem_staged);
+        }
+        let (first, last) = (&rows[0], rows.last().unwrap());
+        assert!(last.weight_bytes * 8 < first.weight_bytes, "Binary not sub-byte packed");
+        for r in &rows {
+            assert!(r.max_rel_err <= r.tol, "{}: {} > {}", r.precision, r.max_rel_err, r.tol);
+            assert!(r.measured_cycles > 0 && r.predicted_cycles > 0.0);
+        }
     }
 
     #[test]

@@ -110,13 +110,15 @@ pub fn kl_for_candidate(hist: &[f32], edge: usize) -> f64 {
 }
 
 /// Full KL sweep: returns (per-candidate KLs, best candidate index).
+/// NaN-safe: a poisoned histogram yields NaN KLs, which `total_cmp` orders
+/// after every finite candidate instead of panicking the compile.
 pub fn kl_sweep(hist: &[f32]) -> (Vec<f64>, usize) {
     let edges = candidate_edges();
     let kls: Vec<f64> = edges.iter().map(|&e| kl_for_candidate(hist, e)).collect();
     let best = kls
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
     (kls, best)
@@ -161,11 +163,30 @@ pub fn calibrate_threshold(h: &Histogram, method: Method, percentile_p: f64) -> 
     }
 }
 
-/// Calibrate full QParams for a dtype (symmetric for weights and
-/// KL/entropy activations, asymmetric for min-max signed activations).
+/// Calibrate full *symmetric* QParams for a dtype (zero_point = 0). This is
+/// the contract for weights and for KL/percentile/entropy activations; the
+/// min-max *activation* path calibrates asymmetric via
+/// [`calibrate_asymmetric`] — the doc used to promise that here while the
+/// code unconditionally returned symmetric parameters.
 pub fn calibrate(h: &Histogram, method: Method, dt: DType, percentile_p: f64) -> QParams {
     let clip = calibrate_threshold(h, method, percentile_p).max(1e-12);
     QParams::symmetric(clip, dt)
+}
+
+/// Asymmetric min-max calibration for activations: QParams spanning the
+/// exactly-tracked signed range `[min_val, max_val]` (widened to include
+/// zero, so zero stays representable), with zero_point != 0 whenever the
+/// distribution is shifted — e.g. post-ReLU activations use the full code
+/// range for `[0, max]` instead of wasting half of it on negatives.
+/// Falls back to the symmetric clip for degenerate or unobserved ranges and
+/// for Binary (sign quantization has no zero_point).
+pub fn calibrate_asymmetric(h: &Histogram, dt: DType) -> QParams {
+    let lo = h.min_val.min(0.0);
+    let hi = h.max_val.max(0.0);
+    if dt == DType::Binary || !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return QParams::symmetric(h.max_abs.max(1e-12), dt);
+    }
+    QParams::asymmetric(lo, hi, dt)
 }
 
 #[cfg(test)]
@@ -246,6 +267,41 @@ mod tests {
             let p = calibrate(&h, m, DType::I8, 99.9);
             assert!(p.scale > 0.0, "{m:?}");
             assert_eq!(p.zero_point, 0.0);
+        }
+    }
+
+    #[test]
+    fn minmax_signed_activations_calibrate_asymmetric() {
+        // Pins the QParams contract the INT4 datapath relies on: `calibrate`
+        // stays symmetric (weight dequant is a pure multiply, zero_point 0),
+        // while min-max *activations* get the asymmetric [min, max] span.
+        let mut h = Histogram::new();
+        let xs: Vec<f32> = (0..=1000).map(|i| i as f32 / 1000.0 * 3.0 - 1.0).collect();
+        h.observe(&xs); // signed range [-1, 2]
+        let a = calibrate_asymmetric(&h, DType::I4);
+        assert_ne!(a.zero_point, 0.0, "shifted range must shift the zero point");
+        assert!((a.fake_quant(-1.0) + 1.0).abs() <= a.scale, "low end clipped");
+        assert!((a.fake_quant(2.0) - 2.0).abs() <= a.scale, "high end clipped");
+        let s = calibrate(&h, Method::MinMax, DType::I4, 99.9);
+        assert_eq!(s.zero_point, 0.0, "calibrate keeps the symmetric contract");
+        // Unobserved histograms degrade to the symmetric clip.
+        let empty = Histogram::new();
+        assert_eq!(calibrate_asymmetric(&empty, DType::I8).zero_point, 0.0);
+    }
+
+    #[test]
+    fn nan_poisoned_histogram_does_not_panic() {
+        // A single NaN sample must not panic KL, percentile, or min-max
+        // calibration (regression for the partial_cmp().unwrap() sorts).
+        let mut h = gauss_hist(13, 5_000);
+        h.observe(&[f32::NAN]);
+        h.bins[7] = f32::NAN;
+        let (kls, best) = kl_sweep(&h.bins);
+        assert_eq!(kls.len(), NUM_CANDIDATES);
+        assert!(best < NUM_CANDIDATES);
+        for m in [Method::Kl, Method::Percentile, Method::Entropy, Method::MinMax] {
+            let p = calibrate(&h, m, DType::I8, 99.9);
+            assert!(p.scale > 0.0, "{m:?}");
         }
     }
 

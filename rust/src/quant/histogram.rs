@@ -2,8 +2,13 @@
 //! resolution), magnitude-based, built incrementally over calibration
 //! batches without storing activations.
 
+use crate::util::rng::Rng;
+
 /// Number of bins (paper: "2048-bin histogram optimization").
 pub const NUM_BINS: usize = 2048;
+
+/// Retained samples for percentile calibration (Algorithm R reservoir).
+pub const RESERVOIR_K: usize = 4096;
 
 /// A magnitude histogram over [0, max_abs].
 #[derive(Debug, Clone)]
@@ -16,6 +21,10 @@ pub struct Histogram {
     pub max_val: f32,
     /// Retained sample reservoir for percentile calibration.
     reservoir: Vec<f32>,
+    /// Reservoir index source (deterministic; Algorithm R needs a uniform
+    /// index in `[0, count)` — a fixed multiplicative hash of the count is
+    /// *not* one, see `observe`).
+    rng: Rng,
 }
 
 impl Default for Histogram {
@@ -33,35 +42,54 @@ impl Histogram {
             min_val: f32::INFINITY,
             max_val: f32::NEG_INFINITY,
             reservoir: Vec::new(),
+            rng: Rng::new(0x9E37_79B9_7F4A_7C15),
         }
     }
 
-    /// Observe a batch of values. The first batch fixes the range; later
-    /// values beyond it clamp into the top bin (standard practice — the
-    /// range is refined by observing the largest batch first or by a
-    /// two-pass build; `rebin` supports explicit range growth).
+    /// Observe a batch of values. The range grows whenever a batch exceeds
+    /// it: `rebin` redistributes the existing mass, so `max_abs` always
+    /// covers every observed magnitude and min-max clips never go stale.
+    /// (The old behavior — rebinning only past a 1.5x hysteresis — clamped
+    /// values in `(max_abs, 1.5*max_abs]` into the top bin while `max_abs`
+    /// underestimated the true range.)
     pub fn observe(&mut self, xs: &[f32]) {
         if xs.is_empty() {
             return;
         }
-        let batch_max = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        // Non-finite samples are dropped entirely (not binned, counted, or
+        // admitted to the reservoir): a NaN that reached the reservoir
+        // would sort to the top ranks under total_cmp and silently collapse
+        // the percentile clip to the 1e-12 floor — worse than the panic
+        // this path used to produce.
+        let batch_max = xs
+            .iter()
+            .filter(|v| v.is_finite())
+            .fold(0.0f32, |a, &v| a.max(v.abs()));
         if self.max_abs == 0.0 {
             self.max_abs = batch_max.max(1e-12);
-        } else if batch_max > self.max_abs * 1.5 {
+        } else if batch_max > self.max_abs {
             self.rebin(batch_max);
         }
         for &v in xs {
+            if !v.is_finite() {
+                continue;
+            }
             self.min_val = self.min_val.min(v);
             self.max_val = self.max_val.max(v);
             let idx = ((v.abs() / self.max_abs) * NUM_BINS as f32) as usize;
             self.bins[idx.min(NUM_BINS - 1)] += 1.0;
             self.count += 1;
-            // Reservoir sampling (k = 4096) for percentile calibration.
-            if self.reservoir.len() < 4096 {
+            // Reservoir sampling (Algorithm R): once full, item number
+            // `count` replaces a uniformly random slot with probability
+            // k/count. The previous index formula
+            // `(count * 2654435761) % count` is identically zero — only
+            // slot 0 was ever replaced, biasing every percentile toward
+            // the first k samples.
+            if self.reservoir.len() < RESERVOIR_K {
                 self.reservoir.push(v.abs());
             } else {
-                let j = (self.count as usize * 2654435761) % self.count as usize;
-                if j < 4096 {
+                let j = self.rng.index(self.count as usize);
+                if j < RESERVOIR_K {
                     self.reservoir[j] = v.abs();
                 }
             }
@@ -94,7 +122,7 @@ impl Histogram {
             return self.max_abs;
         }
         let mut s: Vec<f32> = self.reservoir.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[rank.min(s.len() - 1)]
     }
@@ -103,7 +131,6 @@ impl Histogram {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
 
     #[test]
     fn mass_is_conserved() {
@@ -125,6 +152,19 @@ mod tests {
     }
 
     #[test]
+    fn range_growth_rebins_any_increase() {
+        // Regression: 1.2x growth used to clamp into the top bin while
+        // max_abs stayed stale, so min-max clips underestimated the range.
+        let mut h = Histogram::new();
+        h.observe(&[1.0]);
+        h.observe(&[1.2]);
+        assert!((h.max_abs - 1.2).abs() < 1e-6, "stale range: {}", h.max_abs);
+        assert!((h.bins.iter().sum::<f32>() - 2.0).abs() < 1e-3);
+        // The exactly-tracked signed extrema agree with the magnitude range.
+        assert_eq!(h.max_val, 1.2);
+    }
+
+    #[test]
     fn percentile_tracks_distribution() {
         let mut h = Histogram::new();
         let xs: Vec<f32> = (0..2000).map(|i| i as f32 / 2000.0).collect();
@@ -133,6 +173,39 @@ mod tests {
         assert!((0.97..=1.0).contains(&p999), "{p999}");
         let p50 = h.percentile(50.0);
         assert!((0.4..=0.6).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn reservoir_admits_late_stream_mass() {
+        // Regression for the degenerate Algorithm-R index: after the
+        // reservoir filled, only slot 0 was ever replaced, so a late shift
+        // in the distribution never moved the high percentiles.
+        let mut h = Histogram::new();
+        let early = vec![0.1f32; 2 * RESERVOIR_K];
+        h.observe(&early);
+        let late = vec![1.0f32; 2 * RESERVOIR_K];
+        h.observe(&late);
+        // Half the stream is late mass; with a uniform replacement index
+        // roughly half the reservoir must be too (the broken index kept
+        // p99.9 pinned at 0.1).
+        assert!(h.percentile(99.9) > 0.9, "p99.9 = {}", h.percentile(99.9));
+        assert!(h.percentile(80.0) > 0.9, "p80 = {}", h.percentile(80.0));
+        // Early mass is still represented.
+        assert!(h.percentile(10.0) < 0.2, "p10 = {}", h.percentile(10.0));
+    }
+
+    #[test]
+    fn nan_samples_are_dropped_not_panicking() {
+        let mut h = Histogram::new();
+        h.observe(&[1.0, f32::NAN, 2.0, f32::INFINITY]);
+        // Non-finite samples never enter the histogram: they would poison
+        // the range (inf) or the reservoir's top ranks (NaN under
+        // total_cmp, collapsing percentile clips to the epsilon floor).
+        assert_eq!(h.count, 2);
+        assert!((h.max_abs - 2.0).abs() < 1e-6);
+        assert_eq!(h.max_val, 2.0);
+        assert!(h.percentile(99.9).is_finite());
+        assert!(h.percentile(99.9) <= 2.0);
     }
 
     #[test]

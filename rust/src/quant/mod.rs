@@ -26,8 +26,13 @@ pub struct QParams {
 }
 
 impl QParams {
-    /// Symmetric parameters from a clip threshold.
+    /// Symmetric parameters from a clip threshold. Integer dtypes map the
+    /// clip onto the code half-range; reduced floats delegate to
+    /// [`QParams::float_cast`].
     pub fn symmetric(clip: f32, dtype: DType) -> QParams {
+        if dtype.is_low_float() {
+            return QParams::float_cast(clip, dtype);
+        }
         let (qmin, qmax) = dtype.int_range().unwrap_or((-128, 127));
         let half_range = qmax.max(-qmin) as f32;
         QParams {
@@ -46,18 +51,56 @@ impl QParams {
         QParams { scale, zero_point: zp, dtype }
     }
 
+    /// Scaled storage cast for reduced floats: values in `[-clip, clip]`
+    /// map onto the format's representable magnitude range. FP8 (max 448)
+    /// and especially FP4 (max 6, min normal 0.5) need the per-tensor scale
+    /// — raw-cast weights with std ~0.1 would all collapse to zero; F16 and
+    /// BF16 cover the practical FP32 range, so their scale is 1.
+    pub fn float_cast(clip: f32, dtype: DType) -> QParams {
+        let scale = match dtype {
+            DType::FP8 => (clip / 448.0).max(f32::MIN_POSITIVE),
+            DType::FP4 => (clip / 6.0).max(f32::MIN_POSITIVE),
+            _ => 1.0,
+        };
+        QParams { scale, zero_point: 0.0, dtype }
+    }
+
+    /// XNOR-net binary parameters: codes are `sign(x)` (±1), the scale is
+    /// the per-tensor mean magnitude `alpha`.
+    pub fn binary(alpha: f32) -> QParams {
+        QParams {
+            scale: alpha.max(f32::MIN_POSITIVE),
+            zero_point: 0.0,
+            dtype: DType::Binary,
+        }
+    }
+
     pub fn qrange(&self) -> (f32, f32) {
         let (lo, hi) = self.dtype.int_range().unwrap_or((-128, 127));
         (lo as f32, hi as f32)
     }
 
-    /// Quantize one value to its integer code.
+    /// Quantize one value to its storage code: round-clamp for integer
+    /// dtypes, `sign(x)` for Binary (round-clamp would invent a spurious
+    /// zero level), and the scaled bit-level round-trip for reduced floats.
     pub fn quantize(&self, x: f32) -> f32 {
-        let (qmin, qmax) = self.qrange();
-        (x / self.scale + self.zero_point).round().clamp(qmin, qmax)
+        match self.dtype {
+            DType::Binary => {
+                if x >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            dt if dt.is_low_float() => crate::ir::dtype::float_roundtrip(dt, x / self.scale),
+            _ => {
+                let (qmin, qmax) = self.qrange();
+                (x / self.scale + self.zero_point).round().clamp(qmin, qmax)
+            }
+        }
     }
 
-    /// Dequantize an integer code back to real.
+    /// Dequantize a storage code back to real.
     pub fn dequantize(&self, q: f32) -> f32 {
         (q - self.zero_point) * self.scale
     }
@@ -69,15 +112,23 @@ impl QParams {
 }
 
 /// Apply a precision's storage round-trip to a slice (int types via params,
-/// reduced floats via bit-level conversion).
+/// reduced floats via the scaled bit-level conversion when params are given,
+/// the raw cast otherwise).
 pub fn quantize_slice(dt: DType, params: Option<QParams>, xs: &mut [f32]) {
     match dt {
         DType::F32 | DType::I32 => {}
-        DType::F16 | DType::BF16 | DType::FP8 | DType::FP4 => {
-            for v in xs.iter_mut() {
-                *v = crate::ir::dtype::float_roundtrip(dt, *v);
+        DType::F16 | DType::BF16 | DType::FP8 | DType::FP4 => match params {
+            Some(p) => {
+                for v in xs.iter_mut() {
+                    *v = p.fake_quant(*v);
+                }
             }
-        }
+            None => {
+                for v in xs.iter_mut() {
+                    *v = crate::ir::dtype::float_roundtrip(dt, *v);
+                }
+            }
+        },
         DType::I8 | DType::I4 => {
             let p = params.expect("int quantization needs QParams");
             for v in xs.iter_mut() {
@@ -85,10 +136,13 @@ pub fn quantize_slice(dt: DType, params: Option<QParams>, xs: &mut [f32]) {
             }
         }
         DType::Binary => {
-            // XNOR-net style: sign(x) * mean(|x|).
-            let alpha = xs.iter().map(|v| v.abs()).sum::<f32>() / xs.len().max(1) as f32;
+            // XNOR-net style: sign(x) * alpha, alpha = mean(|x|) unless the
+            // caller calibrated one.
+            let p = params.unwrap_or_else(|| {
+                QParams::binary(xs.iter().map(|v| v.abs()).sum::<f32>() / xs.len().max(1) as f32)
+            });
             for v in xs.iter_mut() {
-                *v = if *v >= 0.0 { alpha } else { -alpha };
+                *v = p.fake_quant(*v);
             }
         }
     }
@@ -143,5 +197,33 @@ mod tests {
         quantize_slice(DType::Binary, None, &mut xs);
         let alpha = (0.5 + 0.25 + 1.0 + 1.25) / 4.0;
         assert_eq!(xs, vec![alpha, -alpha, alpha, -alpha]);
+    }
+
+    #[test]
+    fn binary_codes_are_signs_not_levels() {
+        // Binary quantize must be sign(x), never round(x/scale): a 3-level
+        // {-s, 0, +s} grid is not a binary network.
+        let p = QParams::binary(0.8);
+        assert_eq!(p.quantize(0.01), 1.0);
+        assert_eq!(p.quantize(-0.01), -1.0);
+        assert_eq!(p.quantize(0.0), 1.0);
+        assert_eq!(p.fake_quant(0.3), 0.8);
+        assert_eq!(p.fake_quant(-5.0), -0.8);
+    }
+
+    #[test]
+    fn fp4_float_cast_scales_small_weights() {
+        // Raw FP4 (min normal 0.5) collapses std-0.1 weights to zero; the
+        // per-tensor float_cast scale keeps them representable.
+        let p = QParams::float_cast(0.12, DType::FP4);
+        let y = p.fake_quant(0.06);
+        assert!(y > 0.0, "small weight collapsed to {y}");
+        assert!((y - 0.06).abs() < 1e-6, "{y}");
+        // Saturation at the clip.
+        assert!(p.fake_quant(10.0) <= 0.12 * 1.001);
+        // F16 is wide enough: identity scale.
+        let f16 = QParams::float_cast(3.0, DType::F16);
+        assert_eq!(f16.scale, 1.0);
+        assert!((f16.fake_quant(0.1) - 0.1).abs() < 1e-4);
     }
 }

@@ -1,21 +1,36 @@
 //! Post-training quantization of a graph (paper §3.3.1) and the
 //! quantized-inference evaluation behind Table 6 / case study 2.
 //!
-//! Weights are quantized per-tensor from their own histograms; activations
+//! Weights are quantized per-tensor from their exact ranges; activations
 //! are calibrated by running the FP32 reference executor over calibration
 //! batches with an observer collecting per-tensor histograms, then choosing
-//! clip thresholds with the configured method (KL by default).
+//! clip thresholds with the configured method (KL by default; min-max
+//! calibrates activations *asymmetric* per the QParams contract).
+//!
+//! Storage per precision band:
+//! * **I8** — weights stored fake-quantized in f32 (the datapath value
+//!   grid), matching the machine's f32-wide staging.
+//! * **I4 / Binary (sub-byte)** — weights stored as *integer codes* (I4:
+//!   round-clamp to [-8, 7]; Binary: sign ±1), with an explicit
+//!   `DequantizeLinear` node inserted before each consumer. Codegen lowers
+//!   those nodes to real requantize (scale) kernels and the oracle
+//!   evaluates them with identical arithmetic, so the whole sub-byte
+//!   unpack/requantize sequence is differentially verified end-to-end.
+//!   Deployed layouts pack codes to nibbles/bits (`memplan::pack_sub_byte`).
+//! * **F16 / BF16 / FP8 / FP4** — weights round-trip through the scaled
+//!   storage cast ([`QParams::float_cast`]).
 //!
 //! Quantized inference for accuracy measurement runs the IR executor with
-//! fake-quantized weights + activation QDQ at every node boundary — the
-//! same numerics the ASIC integer datapath produces (DESIGN.md
-//! §Substitutions).
+//! quantized weights + activation QDQ (or float storage round-trips) at
+//! compute-op boundaries — the same numerics the ASIC datapath produces
+//! (DESIGN.md §Substitutions).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::ir::dtype::DType;
 use crate::ir::exec::Executor;
-use crate::ir::graph::{Graph, TensorId};
+use crate::ir::graph::{Graph, Node, TensorId};
+use crate::ir::ops::{AttrValue, Attrs, OpKind};
 use crate::ir::tensor::{Initializer, Tensor};
 use crate::quant::calib::{self, Method};
 use crate::quant::histogram::Histogram;
@@ -72,64 +87,124 @@ pub fn quantize_graph(
             exec.run(g, inputs)?;
         }
         for (tid, h) in hists.borrow().iter() {
-            plan.activations
-                .insert(*tid, calib::calibrate(h, method, dtype, 99.9));
+            // Min-max activations use the asymmetric [min, max] span
+            // (zero_point != 0); every other method keeps the symmetric
+            // clip (see the QParams contract in `calib`).
+            let qp = if method == Method::MinMax {
+                calib::calibrate_asymmetric(h, dtype)
+            } else {
+                calib::calibrate(h, method, dtype, 99.9)
+            };
+            plan.activations.insert(*tid, qp);
         }
     }
 
     // -- Weights: quantize in place -----------------------------------------
+    // Sub-byte precisions store integer *codes* and dequantize through an
+    // explicit graph op; everything else stores datapath values directly.
+    let sub_byte = dtype.is_int_quant() && dtype.bits() < 8;
     let ids: Vec<TensorId> = g.initializers.keys().copied().collect();
     for tid in ids {
         let init = &g.initializers[&tid];
         plan.fp32_bytes += init.numel() * 4;
         let mut t = init.materialize();
-        let params = if dtype.is_int_quant() {
-            // Weights always use min-max: their histograms are sparse (one
-            // tensor's worth of samples), where the KL sweep over-clips.
-            // KL/percentile/entropy apply to *activations* (the paper's
-            // calibration-data setting).
-            let mut h = Histogram::new();
-            h.observe(&t.data);
-            let p = calib::calibrate(&h, Method::MinMax, dtype, 99.9);
-            plan.weights.insert(tid, p);
-            Some(p)
-        } else {
-            None
+        // Weights always use min-max over their exact range: a single
+        // tensor's histogram is sparse, where the KL sweep over-clips.
+        // KL/percentile/entropy apply to *activations* (the paper's
+        // calibration-data setting).
+        let max_abs = t.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+        let params = match dtype {
+            DType::F32 | DType::I32 => None,
+            DType::Binary => {
+                let alpha =
+                    t.data.iter().map(|v| v.abs()).sum::<f32>() / t.numel().max(1) as f32;
+                Some(QParams::binary(alpha))
+            }
+            dt if dt.is_low_float() => Some(QParams::float_cast(max_abs, dt)),
+            _ => Some(QParams::symmetric(max_abs, dtype)),
         };
-        quantize_slice(dtype, params, &mut t.data);
+        if let Some(p) = params {
+            plan.weights.insert(tid, p);
+        }
+        if sub_byte {
+            let p = params.expect("sub-byte weights carry QParams");
+            for v in t.data.iter_mut() {
+                *v = p.quantize(*v);
+            }
+            plan.quant_bytes += crate::backend::memplan::pack_sub_byte(dtype, &t.data).len();
+        } else {
+            quantize_slice(dtype, params, &mut t.data);
+            plan.quant_bytes += (t.numel() as f64 * dtype.bytes_f64()).ceil() as usize;
+        }
         let name = init.name.clone();
         let shape = t.shape.clone();
         let mut ni = Initializer::eager(&name, &shape, t.data);
         ni.dtype = dtype;
         g.initializers.insert(tid, ni);
-        plan.quant_bytes += (init_numel(g, tid) as f64 * dtype.bytes_f64()).ceil() as usize;
+    }
+    if sub_byte {
+        insert_dequant_nodes(g, &plan.weights);
     }
     Ok(plan)
 }
 
-fn init_numel(g: &Graph, tid: TensorId) -> usize {
-    g.initializers[&tid].numel()
+/// Insert one `DequantizeLinear` per sub-byte weight, placed immediately
+/// before its first consumer (keeps the dequantized buffer's lifetime tight
+/// under the memory planner's topological walk), and rewire every consumer
+/// to read the dequantized tensor. The node carries scale/zero_point/bits
+/// attrs; codegen lowers it to a requantize (scale) kernel and `ir::exec`
+/// evaluates it with matching arithmetic.
+fn insert_dequant_nodes(g: &mut Graph, weights: &BTreeMap<TensorId, QParams>) {
+    let mut dq_out: BTreeMap<TensorId, TensorId> = BTreeMap::new();
+    let mut dq_nodes: BTreeMap<TensorId, Node> = BTreeMap::new();
+    for (wid, p) in weights {
+        let info = g.info(*wid).clone();
+        let out = g.tensor(&format!("{}_dq", info.name), info.shape.clone(), DType::F32);
+        let mut attrs = Attrs::new();
+        attrs.insert("scale".into(), AttrValue::Float(p.scale as f64));
+        attrs.insert("zero_point".into(), AttrValue::Float(p.zero_point as f64));
+        attrs.insert("bits".into(), AttrValue::Int(p.dtype.bits() as i64));
+        dq_nodes.insert(
+            *wid,
+            Node {
+                name: format!("{}_dequant", info.name),
+                op: OpKind::DequantizeLinear,
+                inputs: vec![*wid],
+                outputs: vec![out],
+                attrs,
+            },
+        );
+        dq_out.insert(*wid, out);
+    }
+    let old: Vec<Node> = std::mem::take(&mut g.nodes);
+    let mut placed: BTreeSet<TensorId> = BTreeSet::new();
+    for mut node in old {
+        for t in node.inputs.iter_mut() {
+            let wid = *t;
+            if let Some(&out) = dq_out.get(&wid) {
+                if placed.insert(wid) {
+                    g.nodes.push(dq_nodes.remove(&wid).expect("dequant node built above"));
+                }
+                *t = out;
+            }
+        }
+        g.nodes.push(node);
+    }
 }
 
 /// Quantized inference: run the (already weight-quantized) graph with
-/// activation QDQ applied after every node, per the calibrated params.
+/// activation QDQ (integer precisions) or storage round-trips (reduced
+/// floats) applied at compute-op boundaries, per the calibrated params.
 pub fn run_quantized(
     g: &Graph,
     plan: &QuantPlan,
     inputs: &[Tensor],
 ) -> Result<Vec<Tensor>> {
-    if !plan.dtype.is_int_quant() {
-        // Reduced-float: weights already converted; activations round-trip
-        // through the storage format at node boundaries.
-        let dt = plan.dtype;
-        let mut exec = Executor::new();
-        if dt != DType::F32 {
-            exec.observer = Some(Box::new(move |_tid, _t| {}));
-        }
-        return exec.run(g, inputs);
+    if !plan.dtype.is_int_quant() && !plan.dtype.is_low_float() {
+        return Executor::new().run(g, inputs);
     }
-    // Integer path: QDQ injected through the observer by mutating a copy of
-    // each activation is not possible (observer is read-only), so execute
+    // QDQ injected through the observer by mutating a copy of each
+    // activation is not possible (observer is read-only), so execute
     // node-by-node explicitly here.
     let mut env: BTreeMap<TensorId, Tensor> = BTreeMap::new();
     for (tid, t) in g.inputs.iter().zip(inputs) {
@@ -162,7 +237,14 @@ pub fn run_quantized(
                     | crate::ir::ops::OpCategory::ElementwiseArith
             );
             if qdq_here && g.info(*tid).dtype != DType::I32 {
-                if let Some(p) = plan.activations.get(tid) {
+                if plan.dtype.is_low_float() {
+                    // Reduced-float datapath: activations round-trip
+                    // through the storage format (raw cast — activations
+                    // get no per-tensor scale on this hardware).
+                    for v in t.data.iter_mut() {
+                        *v = crate::ir::dtype::float_roundtrip(plan.dtype, *v);
+                    }
+                } else if let Some(p) = plan.activations.get(tid) {
                     for v in t.data.iter_mut() {
                         *v = p.fake_quant(*v);
                     }
@@ -191,11 +273,14 @@ pub fn top1_agreement(
         for (r, q) in ref_out.iter().zip(&q_out) {
             let n = *r.shape.last().unwrap_or(&1);
             for row in 0..r.numel() / n {
+                // NaN-safe: total_cmp keeps a poisoned logit from panicking
+                // the whole accuracy sweep (NaNs sort above every finite
+                // value, so the row still yields a stable argmax).
                 let argmax = |t: &Tensor| {
                     t.data[row * n..(row + 1) * n]
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i)
                         .unwrap()
                 };
@@ -271,6 +356,81 @@ mod tests {
         let eval = batches(20, &[1, 16], 6);
         let acc = top1_agreement(&g0, &gq, &plan, &eval).unwrap();
         assert!(acc >= 0.95, "fp16 agreement {acc}");
+    }
+
+    #[test]
+    fn sub_byte_weights_store_codes_behind_dequant_nodes() {
+        let g0 = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        for dt in [DType::I4, DType::Binary] {
+            let mut gq = g0.clone();
+            let n0 = gq.nodes.len();
+            let plan = quantize_graph(&mut gq, dt, Method::MinMax, &[]).unwrap();
+            let dq = gq
+                .nodes
+                .iter()
+                .filter(|n| n.op == OpKind::DequantizeLinear)
+                .count();
+            assert_eq!(dq, gq.initializers.len(), "{dt}: one dequant per weight");
+            assert_eq!(gq.nodes.len(), n0 + dq);
+            gq.check().unwrap();
+            // Initializers now hold integer codes in the dtype's range.
+            let (lo, hi) = dt.int_range().unwrap();
+            for init in gq.initializers.values() {
+                for v in init.materialize().data {
+                    assert_eq!(v.fract(), 0.0, "{dt}: non-integer code {v}");
+                    assert!((lo as f32..=hi as f32).contains(&v), "{dt}: code {v}");
+                    if dt == DType::Binary {
+                        assert!(v == 1.0 || v == -1.0);
+                    }
+                }
+                assert_eq!(init.dtype, dt);
+            }
+            // No compute node reads a raw sub-byte weight anymore.
+            for node in &gq.nodes {
+                if node.op == OpKind::DequantizeLinear {
+                    continue;
+                }
+                for t in &node.inputs {
+                    assert!(!gq.is_initializer(*t), "{dt}: '{}' reads raw codes", node.name);
+                }
+            }
+            // The rewritten graph still executes and tracks the FP32 model.
+            let eval = batches(10, &[1, 16], 11);
+            let acc = top1_agreement(&g0, &gq, &plan, &eval).unwrap();
+            assert!((0.0..=1.0).contains(&acc), "{dt}: {acc}");
+            let out = run_quantized(&gq, &plan, &eval[0]).unwrap();
+            assert!(out[0].data.iter().all(|v| v.is_finite()), "{dt}");
+        }
+    }
+
+    #[test]
+    fn sub_byte_memory_reduction_matches_table2() {
+        let g0 = prepare(model_zoo::mlp(&[32, 64, 10], 1)).unwrap();
+        let mut g4 = g0.clone();
+        let p4 = quantize_graph(&mut g4, DType::I4, Method::MinMax, &[]).unwrap();
+        assert!((p4.memory_reduction() - 8.0).abs() < 0.2, "{}", p4.memory_reduction());
+        let mut g1 = g0.clone();
+        let p1 = quantize_graph(&mut g1, DType::Binary, Method::MinMax, &[]).unwrap();
+        assert!(p1.memory_reduction() > 24.0, "{}", p1.memory_reduction());
+    }
+
+    #[test]
+    fn minmax_activations_get_asymmetric_params() {
+        // Bugfix contract: post-ReLU activations are one-sided, so min-max
+        // calibration must shift the zero point instead of wasting half the
+        // code range (the doc promised this; the code returned symmetric).
+        let mut g = prepare(model_zoo::mlp(&[16, 32, 8], 1)).unwrap();
+        let calib = batches(3, &[1, 16], 12);
+        let plan = quantize_graph(&mut g, DType::I8, Method::MinMax, &calib).unwrap();
+        assert!(!plan.activations.is_empty());
+        assert!(
+            plan.activations.values().any(|p| p.zero_point != 0.0),
+            "no activation calibrated asymmetric"
+        );
+        // KL keeps the symmetric contract.
+        let mut g2 = prepare(model_zoo::mlp(&[16, 32, 8], 1)).unwrap();
+        let plan2 = quantize_graph(&mut g2, DType::I8, Method::Kl, &calib).unwrap();
+        assert!(plan2.activations.values().all(|p| p.zero_point == 0.0));
     }
 
     #[test]

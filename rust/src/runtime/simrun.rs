@@ -36,13 +36,20 @@ pub struct SimRun {
 /// Per-precision differential tolerance (relative to `max(|ref|, 1)`).
 /// FP32 storage is exact on both sides, so only accumulation-order and
 /// reciprocal-vs-divide rounding separate machine from oracle; quantized
-/// datapaths sit on a coarser value grid that amplifies that reorder noise.
+/// and reduced-float datapaths sit on coarser value grids that amplify the
+/// reorder noise — the bound widens with the grid, down to Binary's ±alpha
+/// two-level weights. Every Table 2 precision has an explicit entry so a
+/// new dtype can't silently inherit a wrong bound.
 pub fn tolerance(dt: DType) -> f32 {
     match dt {
-        DType::F32 => 1e-4,
+        DType::F32 | DType::I32 => 1e-4,
+        DType::F16 => 2e-4,
+        DType::BF16 => 5e-4,
+        DType::FP8 => 1e-3,
+        DType::FP4 => 2e-3,
         DType::I8 => 1e-3,
         DType::I4 => 5e-3,
-        _ => 1e-2,
+        DType::Binary => 1e-2,
     }
 }
 
@@ -370,6 +377,22 @@ mod tests {
         for v in &inputs[0].data {
             assert!(*v >= 0.0 && *v < 1000.0, "{v}");
         }
+    }
+
+    #[test]
+    fn tolerance_widens_with_coarser_grids() {
+        use crate::ir::dtype::DType as D;
+        let ladder = [D::F32, D::F16, D::BF16, D::FP8, D::FP4, D::I4, D::Binary];
+        for w in ladder.windows(2) {
+            assert!(
+                tolerance(w[0]) <= tolerance(w[1]),
+                "{} tol > {} tol",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(tolerance(D::I8), 1e-3);
+        assert_eq!(tolerance(D::Binary), 1e-2);
     }
 
     #[test]

@@ -18,11 +18,12 @@ pub fn std(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. NaN-safe: `total_cmp`
+/// sorts NaNs to the end instead of panicking mid-compile.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -132,5 +133,14 @@ mod tests {
     #[test]
     fn geomean_of_speedups() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // A single NaN measurement must not panic the sweep; total_cmp
+        // orders NaN after every finite value.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 50.0).is_finite());
     }
 }

@@ -244,6 +244,48 @@ pub fn validate_abi(abi: &ModelAbi, g: &Graph, mach: &MachineConfig) -> Report {
     r
 }
 
+/// Per-precision ABI checks (the quantized-datapath contract):
+///
+/// 1. **Staging width** — every weight symbol's extent covers f32-wide
+///    elements. Kernels stride weights at 4 bytes/element on the functional
+///    machine regardless of storage dtype; a symbol placed at quantized
+///    width would make staged buffers overlap at runtime (the latent bug
+///    PR 2 fixed for INT8, enforced here for every precision down to
+///    Binary, whose deployed layout is bit-packed).
+/// 2. **Storage dtype** — a quantized compile records its target precision
+///    on every weight it quantized; a mismatch means some weight skipped
+///    quantization (its bytes/PPA accounting would silently lie).
+pub fn validate_precision(abi: &ModelAbi, g: &Graph, precision: crate::ir::DType) -> Report {
+    let mut r = Report::default();
+    let narrow = abi
+        .weights()
+        .filter(|s| (s.bytes as usize) < s.numel() * 4)
+        .count();
+    r.check(
+        "abi.staging_width",
+        narrow == 0,
+        format!("{narrow} weight symbols narrower than f32 staging"),
+    );
+    let mismatched = if precision == crate::ir::DType::F32 {
+        0
+    } else {
+        abi.weights()
+            .filter(|s| {
+                g.initializers
+                    .get(&s.tensor)
+                    .map(|i| i.dtype != precision)
+                    .unwrap_or(false)
+            })
+            .count()
+    };
+    r.check(
+        "abi.weight_dtype",
+        mismatched == 0,
+        format!("{mismatched} weights not stored at {}", precision.name()),
+    );
+    r
+}
+
 /// Full validation stage: ISA + memory, merged report.
 pub fn validate_all(g: &Graph, prog: &[Instr], plan: &MemPlan, mach: &MachineConfig) -> Report {
     let mut r = validate_isa(prog, mach);
@@ -319,6 +361,37 @@ mod tests {
         assert!(!r.passed());
         assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.alignment" && !ok));
         assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.bounds" && !ok));
+    }
+
+    #[test]
+    fn precision_checks_enforce_f32_staging_and_dtype() {
+        let mut g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        crate::quant::ptq::quantize_graph(
+            &mut g,
+            DType::I4,
+            crate::quant::calib::Method::MinMax,
+            &[],
+        )
+        .unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let abi = plan.abi(&g).unwrap();
+        let r = validate_precision(&abi, &g, DType::I4);
+        assert!(r.passed(), "{}", r.summary());
+        // A symbol shrunk to its quantized width must fail the gate.
+        let mut bad = abi.clone();
+        if let Some(w) = bad.symbols.iter_mut().find(|s| s.kind == memplan::SymKind::Weight) {
+            w.bytes = (w.numel() / 2) as u32; // nibble-packed extent
+        }
+        let r = validate_precision(&bad, &g, DType::I4);
+        assert!(!r.passed());
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.staging_width" && !ok));
+        // A weight left at the wrong storage dtype must fail too.
+        let wid = *g.initializers.keys().next().unwrap();
+        g.initializers.get_mut(&wid).unwrap().dtype = DType::F32;
+        let r = validate_precision(&abi, &g, DType::I4);
+        assert!(!r.passed());
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.weight_dtype" && !ok));
     }
 
     #[test]

@@ -93,6 +93,49 @@ fn int8_resnet_cifar_conforms() {
     assert_eq!(r.tol, 1e-3);
 }
 
+// -- Sub-byte precisions: INT4 and Binary ------------------------------------
+//
+// Weights are stored as integer codes (I4 nibble range, Binary ±1) behind
+// explicit DequantizeLinear nodes; codegen lowers those to requantize
+// (scale) kernels, so the machine executes the full unpack/requantize
+// sequence and the oracle evaluates the same arithmetic. Deployed layouts
+// bit/nibble-pack the codes (`memplan::pack_sub_byte`); staging stays
+// f32-wide so every emitted address keeps striding correctly.
+
+#[test]
+fn int4_mlp_conforms() {
+    let r = conform(model_zoo::mlp(&[256, 128, 64, 10], 1), DType::I4);
+    assert_eq!(r.tol, 5e-3);
+}
+
+#[test]
+fn int4_resnet_cifar_conforms() {
+    let r = conform(model_zoo::resnet_cifar(1), DType::I4);
+    assert_eq!(r.tol, 5e-3);
+}
+
+#[test]
+fn binary_mlp_conforms() {
+    let r = conform(model_zoo::mlp(&[256, 128, 64, 10], 1), DType::Binary);
+    assert_eq!(r.tol, 1e-2);
+}
+
+#[test]
+fn binary_resnet_cifar_conforms() {
+    let r = conform(model_zoo::resnet_cifar(1), DType::Binary);
+    assert_eq!(r.tol, 1e-2);
+}
+
+// -- Reduced-float storage casts ---------------------------------------------
+
+#[test]
+fn fp16_and_fp4_mlp_conform() {
+    for dt in [DType::F16, DType::FP4] {
+        let r = conform(model_zoo::mlp(&[256, 128, 64, 10], 1), dt);
+        assert!(r.tol < 1e-2, "{dt}");
+    }
+}
+
 // -- Encoder/decoder round-trip over the whole zoo's emitted code -----------
 
 #[test]
