@@ -1,0 +1,207 @@
+//! Serving-runtime benchmark: the batched concurrent inference server over
+//! the demo fleet (FP32 MLP + INT8 MLP + dynamic-batch MLP), emitted to
+//! `BENCH_serving.json`.
+//!
+//! Three phases:
+//! 1. **Scaling** — closed-loop saturation throughput at 1 worker vs one
+//!    worker per core. The pool must scale (>= 2x on >= 4 cores), and
+//!    saturation must actually batch (efficiency > 1.2 requests/dequeue).
+//! 2. **Open loop** — a Poisson arrival stream at ~70% of measured
+//!    capacity, >= 1M generated requests in release, 50 ms deadline,
+//!    bounded queues. Reports req/s, simulated MIPS, p50/p99/p99.9
+//!    latency, batching efficiency, queue-depth and shed accounting.
+//! 3. **Verification** — every sampled response is re-synthesized from its
+//!    `(model, spec, seed)` tag and replayed through the serial engine;
+//!    outputs *and* per-request cycle counts must match bit-for-bit.
+//!
+//! Exits nonzero (assert) if the pool doesn't scale, saturation doesn't
+//! batch, any request fails with a non-shed error, or any sampled response
+//! diverges from the serial reference.
+
+use std::time::Duration;
+
+use xgenc::ir::DType;
+use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions};
+use xgenc::runtime::server::{Server, ServerOptions};
+use xgenc::runtime::store;
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+
+/// Closed-loop saturation run; returns (req/s, simulated MIPS, batching
+/// efficiency).
+fn saturation(fleet: &DemoFleet, workers: usize, requests: u64, seed: u64) -> (f64, f64, f64) {
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions { workers, max_batch: 8, queue_depth: 256, deadline: None },
+    )
+    .unwrap();
+    let lr = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests, rate: 0.0, seed, sample_every: 0, duration: None },
+    );
+    let sr = server.shutdown();
+    assert_eq!(lr.ok, requests, "saturation run shed or failed: {}", lr.summary());
+    (sr.throughput_rps(), sr.simulated_mips(), sr.batching_efficiency())
+}
+
+fn main() {
+    let debug = cfg!(debug_assertions);
+    // Release: >= 1M generated requests end-to-end (the acceptance bar).
+    let total: u64 = if debug { 2_000 } else { 1_050_000 };
+    let cap_n: u64 = if debug { 300 } else { 30_000 };
+    let sample_every: u64 = if debug { 97 } else { 1_009 };
+
+    let fleet = DemoFleet::build().unwrap();
+    assert!(fleet.images.len() >= 3, "bench fleet must mix >= 3 models");
+    assert!(
+        fleet.images.iter().any(|i| i.precision == DType::I8),
+        "bench fleet must include a quantized model"
+    );
+    assert!(
+        fleet.images.iter().any(|i| i.spec_count() > 1),
+        "bench fleet must include a dynamic-shape model"
+    );
+    let cores = xgenc::util::resolve_workers(0);
+
+    // Phase 1: worker-pool scaling at saturation.
+    let (single_rps, single_mips, _) = saturation(&fleet, 1, cap_n, 1);
+    let (multi_rps, multi_mips, sat_eff) = saturation(&fleet, cores, cap_n, 2);
+    let scaling = multi_rps / single_rps.max(1e-9);
+
+    // Phase 2: open-loop Poisson arrivals at ~70% of measured capacity,
+    // with a deadline and bounded queues (sheds are accounted, not errors).
+    let rate = (multi_rps * 0.7).max(50.0);
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions {
+            workers: cores,
+            max_batch: 8,
+            queue_depth: 256,
+            deadline: Some(Duration::from_millis(50)),
+        },
+    )
+    .unwrap();
+    let lr = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests: total, rate, seed: 42, sample_every, duration: None },
+    );
+    let sr = server.shutdown();
+    assert_eq!(lr.generated, total);
+    assert_eq!(lr.failed, 0, "non-shed serving errors: {}", lr.summary());
+    assert_eq!(lr.ok + lr.shed_submit + lr.shed_deadline, lr.generated, "{}", lr.summary());
+
+    // Phase 3: sampled responses replay bit-identically through the serial
+    // engine — outputs and per-request cycles.
+    assert!(!lr.samples.is_empty(), "open-loop run produced no samples");
+    for s in &lr.samples {
+        assert!(
+            fleet.sample_matches(s).unwrap(),
+            "sampled response (model {}, spec {}, seed {}) diverged from the serial reference",
+            s.model,
+            s.spec,
+            s.seed
+        );
+    }
+
+    let mut t = Table::new(
+        "Serving runtime: batched concurrent inference over the demo fleet",
+        &["Phase", "Workers", "Requests", "req/s", "sim MIPS", "Batch eff", "p99 ms"],
+    );
+    t.row(&[
+        "saturation".to_string(),
+        "1".to_string(),
+        format!("{cap_n}"),
+        f(single_rps, 0),
+        f(single_mips, 1),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "saturation".to_string(),
+        format!("{cores}"),
+        format!("{cap_n}"),
+        f(multi_rps, 0),
+        f(multi_mips, 1),
+        f(sat_eff, 2),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "open loop".to_string(),
+        format!("{cores}"),
+        format!("{total}"),
+        f(sr.throughput_rps(), 0),
+        f(sr.simulated_mips(), 1),
+        f(sr.batching_efficiency(), 2),
+        f(sr.latency_ms(99.0), 3),
+    ]);
+    t.print();
+    println!("{}", sr.summary());
+    println!("{}", lr.summary());
+    println!(
+        "scaling: {} -> {} workers = {:.2}x | verified {} samples bit-identical",
+        1,
+        cores,
+        scaling,
+        lr.samples.len()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str_("serving")),
+        (
+            "fleet",
+            Json::Arr(
+                fleet
+                    .images
+                    .iter()
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("model", Json::str_(&i.name)),
+                            ("precision", Json::str_(i.precision.name())),
+                            ("specializations", Json::Num(i.spec_count() as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("cores", Json::Num(cores as f64)),
+        ("saturation_single_rps", Json::Num(single_rps)),
+        ("saturation_multi_rps", Json::Num(multi_rps)),
+        ("scaling", Json::Num(scaling)),
+        ("saturation_batching_efficiency", Json::Num(sat_eff)),
+        ("open_loop_rate_rps", Json::Num(rate)),
+        ("server", sr.to_json()),
+        ("loadgen", lr.to_json()),
+        ("samples_verified", Json::Num(lr.samples.len() as f64)),
+    ]);
+    let out = std::path::Path::new("BENCH_serving.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
+
+    // Saturation with a full pool must actually batch.
+    assert!(
+        sat_eff > 1.2,
+        "saturation batching efficiency {sat_eff:.2} <= 1.2: batching is not engaging"
+    );
+    if cores >= 4 {
+        assert!(
+            scaling >= 2.0,
+            "worker pool does not scale: {scaling:.2}x with {cores} workers (need >= 2x)"
+        );
+    } else if cores >= 2 {
+        assert!(
+            scaling >= 1.25,
+            "worker pool does not scale: {scaling:.2}x with {cores} workers (need >= 1.25x)"
+        );
+    }
+    println!(
+        "serving OK: {total} requests across {} models, {:.2}x scaling on {cores} cores, \
+         {} samples verified",
+        fleet.images.len(),
+        scaling,
+        lr.samples.len()
+    );
+}

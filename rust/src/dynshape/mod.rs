@@ -186,6 +186,43 @@ pub fn dispatch_image(dims_addr: u32, variants: &[(Vec<u32>, Vec<Instr>)]) -> Re
     Err(Error::Codegen("dispatch image layout did not converge".into()))
 }
 
+/// Compile a symbolic graph into a runnable multi-configuration image: one
+/// full pipeline compile per configuration, a dims slot placed past the
+/// largest specialization's DMEM peak (so it can never overlap a staged
+/// buffer), and the dispatch stub assembled around the variants. Returns
+/// the image plus the compiled specializations in configuration order —
+/// exactly what [`crate::runtime::engine::ModelImage::from_dispatch`]
+/// consumes to build a servable dynamic-shape model.
+pub fn compile_image(
+    g: &Graph,
+    configs: &[Vec<(String, usize)>],
+    opts: &crate::pipeline::CompileOptions,
+) -> Result<(DispatchImage, Vec<crate::pipeline::CompiledModel>)> {
+    if configs.is_empty() {
+        return Err(Error::Shape("compile_image: no configurations".into()));
+    }
+    let mut compiled = Vec::new();
+    for bindings in configs {
+        let s = specialize(g, bindings)?;
+        let mut session = crate::pipeline::CompileSession::new(opts.clone());
+        compiled.push(session.compile(&s)?);
+    }
+    let peak = compiled.iter().map(|c| c.plan.dmem_peak).max().unwrap();
+    let dims_addr = peak.div_ceil(64) * 64 + 64;
+    let variants: Vec<(Vec<u32>, Vec<Instr>)> = configs
+        .iter()
+        .zip(&compiled)
+        .map(|(bindings, c)| {
+            (
+                bindings.iter().map(|(_, v)| *v as u32).collect(),
+                c.asm.clone(),
+            )
+        })
+        .collect();
+    let image = dispatch_image(dims_addr, &variants)?;
+    Ok((image, compiled))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,6 +347,48 @@ mod tests {
         for (a, b) in run.outputs[0].data.iter().zip(&want[0].data) {
             assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn compile_image_serves_reused_machine_bit_identical_to_serial() {
+        use crate::runtime::engine::{LoadedModel, ModelImage};
+        use crate::runtime::simrun;
+        let g = prepare(model_zoo::mlp_dynamic(&[16, 8, 4], 8)).unwrap();
+        let configs: Vec<Vec<(String, usize)>> = [1usize, 4, 8]
+            .iter()
+            .map(|b| vec![("batch".to_string(), *b)])
+            .collect();
+        let (image, compiled) = compile_image(&g, &configs, &CompileOptions::default()).unwrap();
+        let specs: Vec<&_> = compiled.iter().collect();
+        let img = std::sync::Arc::new(ModelImage::from_dispatch(&image, &specs).unwrap());
+        let mut lm = LoadedModel::from_image(img.clone()).unwrap();
+        // Mixed batch sizes through ONE reused machine, each compared to a
+        // fresh-machine run_dispatch of the same request.
+        for (spec, seed) in [(1usize, 7u64), (0, 9), (2, 11), (1, 13)] {
+            let req = img.synth_request(spec, seed);
+            let served = lm.infer(&req).unwrap();
+            let c = &compiled[spec];
+            let fresh = simrun::run_dispatch(
+                &c.mach,
+                &image,
+                img.spec_dims(spec),
+                &c.graph,
+                c.abi(),
+                &req.inputs,
+            )
+            .unwrap();
+            let bits = |ts: &[crate::ir::tensor::Tensor]| -> Vec<Vec<u32>> {
+                ts.iter()
+                    .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+                    .collect()
+            };
+            assert_eq!(bits(&served.outputs), bits(&fresh.outputs), "spec {spec} seed {seed}");
+            assert_eq!(served.stats, fresh.stats, "spec {spec} seed {seed}");
+        }
+        // Unknown dims still fail fast on the engine path.
+        let mut bad = img.synth_request(0, 1);
+        bad.dims = Some(vec![3]);
+        assert!(lm.infer(&bad).is_err());
     }
 
     #[test]

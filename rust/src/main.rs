@@ -1,15 +1,22 @@
 //! xgenc CLI — the fully automated pipeline from model to ASIC-ready
-//! output ("zero manual intervention").
+//! output ("zero manual intervention"), plus the serving runtime.
 //!
 //! ```text
 //! xgenc compile --model zoo:resnet50 --precision INT8 --tune 40 --out out/
 //! xgenc tune    --sig matmul:128x256x512 --trials 85 --algorithm bayes
 //! xgenc ppa     --model zoo:mobilenet_v2 --precision INT8
 //! xgenc pipeline --models zoo:vision_encoder,zoo:text_encoder,zoo:decoder
+//! xgenc serve   --requests 100000 --rate 2000 --deadline-ms 50
+//! xgenc loadgen --requests 10000
 //! xgenc export  --model zoo:mlp --out model.json
 //! ```
+//!
+//! Every subcommand parses its flags into its own options struct
+//! (`CompileArgs`, `TuneArgs`, `ServeArgs`, ...) built on the shared
+//! [`SessionArgs`] compile-session knobs.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use xgenc::autotune::{Algorithm, TuneCache, Tuner, TunerOptions};
 use xgenc::cost::features::KernelSig;
@@ -17,34 +24,52 @@ use xgenc::frontend;
 use xgenc::ir::dtype::DType;
 use xgenc::pipeline::{multi_model, CompileOptions, CompileSession};
 use xgenc::quant::calib::Method;
+use xgenc::runtime::engine::{LoadedModel, ModelImage};
+use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions, MixEntry};
+use xgenc::runtime::server::{Server, ServerOptions};
 use xgenc::runtime::simrun;
 use xgenc::sim::MachineConfig;
 use xgenc::util::cli::Args;
+use xgenc::util::json::Json;
+use xgenc::util::rng::Rng;
+use xgenc::util::table::{self, Table};
 
 const OPTION_KEYS: &[&str] = &[
-    "model", "models", "precision", "calib", "tune", "trials", "algorithm",
-    "sig", "out", "platform", "seed", "cache", "workers",
+    "model",
+    "models",
+    "precision",
+    "calib",
+    "tune",
+    "trials",
+    "algorithm",
+    "sig",
+    "out",
+    "platform",
+    "seed",
+    "cache",
+    "workers",
+    "batch",
+    "queue",
+    "deadline-ms",
+    "rate",
+    "requests",
+    "duration",
+    "sample-every",
 ];
-
-fn platform(args: &Args) -> MachineConfig {
-    match args.opt_or("platform", "xgen") {
-        "cpu" => MachineConfig::cpu_a78(),
-        "hand" => MachineConfig::hand_asic(),
-        _ => MachineConfig::xgen_asic(),
-    }
-}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, OPTION_KEYS);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
-        "compile" => cmd_compile(&args),
-        "tune" => cmd_tune(&args),
-        "ppa" => cmd_compile(&args), // same path; the summary carries PPA
-        "sweep" => cmd_sweep(&args),
-        "pipeline" => cmd_pipeline(&args),
-        "export" => cmd_export(&args),
+        "compile" => cmd_compile(&CompileArgs::from_args(&args)),
+        "tune" => cmd_tune(&TuneArgs::from_args(&args)),
+        "ppa" => cmd_ppa(&PpaArgs::from_args(&args)),
+        "sweep" => cmd_sweep(&SweepArgs::from_args(&args)),
+        "pipeline" => cmd_pipeline(&PipelineArgs::from_args(&args)),
+        "export" => cmd_export(&ExportArgs::from_args(&args)),
+        "serve" => cmd_serve(&ServeArgs::from_args(&args)),
+        "loadgen" => cmd_loadgen(&ServeArgs::from_args(&args)),
         _ => {
             print!("{}", HELP);
             0
@@ -53,60 +78,109 @@ fn main() {
     std::process::exit(code);
 }
 
-/// `--cache FILE`: load a persistent tune cache (corrupted/missing files
-/// degrade to cold tuning). Returns the cache and the path to save back to.
-fn cache_from_args(args: &Args) -> Option<(Arc<TuneCache>, String)> {
-    args.opt("cache").map(|path| {
-        (Arc::new(TuneCache::load_or_empty(std::path::Path::new(path))), path.to_string())
-    })
+/// Compile-session knobs shared by every command that runs a
+/// [`CompileSession`]: target platform, precision, calibration, tuning
+/// budget, seed, and the persistent tune cache.
+struct SessionArgs {
+    mach: MachineConfig,
+    precision: DType,
+    calib: Method,
+    tune_trials: usize,
+    workers: usize,
+    seed: u64,
+    /// `--cache FILE`: the loaded cache and the path to save back to
+    /// (corrupted/missing files degrade to cold tuning).
+    cache: Option<(Arc<TuneCache>, String)>,
 }
 
-fn save_cache(cache: &Option<(Arc<TuneCache>, String)>) {
-    if let Some((cache, path)) = cache {
-        match cache.save(std::path::Path::new(path)) {
-            Ok(()) => println!(
-                "tune cache: {} entries -> {path} ({})",
-                cache.len(),
-                cache.stats().summary()
-            ),
-            Err(e) => eprintln!("warning: could not save tune cache {path}: {e}"),
+impl SessionArgs {
+    fn from_args(args: &Args) -> SessionArgs {
+        let mach = match args.opt_or("platform", "xgen") {
+            "cpu" => MachineConfig::cpu_a78(),
+            "hand" => MachineConfig::hand_asic(),
+            _ => MachineConfig::xgen_asic(),
+        };
+        SessionArgs {
+            mach,
+            precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
+            calib: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
+            tune_trials: args.opt_usize("tune", 0),
+            workers: args.opt_usize("workers", 0),
+            seed: args.opt_u64("seed", 42),
+            cache: args.opt("cache").map(|path| {
+                (
+                    Arc::new(TuneCache::load_or_empty(std::path::Path::new(path))),
+                    path.to_string(),
+                )
+            }),
+        }
+    }
+
+    fn compile_options(&self) -> CompileOptions {
+        CompileOptions {
+            mach: self.mach.clone(),
+            precision: self.precision,
+            calib_method: self.calib,
+            tune_trials: self.tune_trials,
+            tune_workers: self.workers,
+            cache: self.cache.as_ref().map(|(c, _)| c.clone()),
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    fn save_cache(&self) {
+        if let Some((cache, path)) = &self.cache {
+            match cache.save(std::path::Path::new(path)) {
+                Ok(()) => println!(
+                    "tune cache: {} entries -> {path} ({})",
+                    cache.len(),
+                    cache.stats().summary()
+                ),
+                Err(e) => eprintln!("warning: could not save tune cache {path}: {e}"),
+            }
         }
     }
 }
 
-fn cmd_compile(args: &Args) -> i32 {
-    let spec = args.opt_or("model", "zoo:mlp");
-    let graph = match frontend::load_model(spec) {
+/// `xgenc compile` options.
+struct CompileArgs {
+    session: SessionArgs,
+    model: String,
+    out: Option<String>,
+    verify: bool,
+    run: bool,
+}
+
+impl CompileArgs {
+    fn from_args(args: &Args) -> CompileArgs {
+        CompileArgs {
+            session: SessionArgs::from_args(args),
+            model: args.opt_or("model", "zoo:mlp").to_string(),
+            out: args.opt("out").map(|s| s.to_string()),
+            verify: args.has_flag("verify"),
+            run: args.has_flag("run"),
+        }
+    }
+}
+
+fn cmd_compile(a: &CompileArgs) -> i32 {
+    let graph = match frontend::load_model(&a.model) {
         Ok(g) => g,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
-    let cache = cache_from_args(args);
-    let opts = CompileOptions {
-        mach: platform(args),
-        precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
-        calib_method: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
-        tune_trials: args.opt_usize("tune", 0),
-        tune_workers: args.opt_usize("workers", 0),
-        cache: cache.as_ref().map(|(c, _)| c.clone()),
-        seed: args.opt_u64("seed", 42),
-        ..Default::default()
-    };
-    let mut session = CompileSession::new(opts);
+    let mut session = CompileSession::new(a.session.compile_options());
     let result = session.compile(&graph);
-    save_cache(&cache);
+    a.session.save_cache();
     match result {
         Ok(c) => {
             println!("{}", c.summary());
-            if let Some(dir) = args.opt("out") {
+            if let Some(dir) = &a.out {
                 let _ = std::fs::create_dir_all(dir);
-                let asm_text: String = c
-                    .asm
-                    .iter()
-                    .map(|i| format!("{}\n", i.asm()))
-                    .collect();
+                let asm_text: String = c.asm.iter().map(|i| format!("{}\n", i.asm())).collect();
                 let abi_json = c.abi().to_json().to_string_pretty();
                 let artifacts = [
                     (format!("{dir}/{}.s", graph.name), asm_text.as_str()),
@@ -121,7 +195,7 @@ fn cmd_compile(args: &Args) -> i32 {
                 }
                 println!("wrote {dir}/{}.s, .hex and .abi.json", graph.name);
             }
-            if args.has_flag("verify") {
+            if a.verify {
                 // Differential run: functional machine vs reference executor,
                 // measured cycles vs the analytic prediction.
                 match session.verify_auto(&c) {
@@ -136,7 +210,7 @@ fn cmd_compile(args: &Args) -> i32 {
                         return 1;
                     }
                 }
-            } else if args.has_flag("run") {
+            } else if a.run {
                 let inputs = simrun::synth_inputs(&c.graph, session.opts.seed);
                 match simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &inputs) {
                     Ok(run) => println!(
@@ -158,23 +232,45 @@ fn cmd_compile(args: &Args) -> i32 {
     }
 }
 
-fn cmd_tune(args: &Args) -> i32 {
-    let sig_spec = args.opt_or("sig", "matmul:128x256x512");
-    let sig = match parse_sig(sig_spec) {
+/// `xgenc tune` options.
+struct TuneArgs {
+    mach: MachineConfig,
+    sig: String,
+    algorithm: Option<Algorithm>,
+    trials: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl TuneArgs {
+    fn from_args(args: &Args) -> TuneArgs {
+        TuneArgs {
+            mach: SessionArgs::from_args(args).mach,
+            sig: args.opt_or("sig", "matmul:128x256x512").to_string(),
+            algorithm: args.opt("algorithm").and_then(Algorithm::parse),
+            trials: args.opt_usize("trials", 200),
+            workers: args.opt_usize("workers", 0),
+            seed: args.opt_u64("seed", 42),
+        }
+    }
+}
+
+fn cmd_tune(a: &TuneArgs) -> i32 {
+    let sig = match KernelSig::parse_key(&a.sig) {
         Some(s) => s,
         None => {
-            eprintln!("error: bad --sig '{sig_spec}' (matmul:MxNxK | conv:CxHxWxFxKxS | ew:LEN)");
+            eprintln!("error: bad --sig '{}' (matmul:MxNxK | conv:CxHxWxFxKxS | ew:LEN)", a.sig);
             return 1;
         }
     };
-    let tuner = Tuner::new(platform(args));
+    let tuner = Tuner::new(a.mach.clone());
     let opts = TunerOptions {
-        algorithm: args.opt("algorithm").and_then(Algorithm::parse),
-        trials: args.opt_usize("trials", 200),
-        seed: args.opt_u64("seed", 42),
+        algorithm: a.algorithm,
+        trials: a.trials,
+        seed: a.seed,
         // Intra-round measurement fan-out (0 = one worker per core);
         // results are identical at any worker count.
-        workers: args.opt_usize("workers", 0),
+        workers: a.workers,
         ..Default::default()
     };
     let mut model = xgenc::cost::HybridModel::new(tuner.mach.clone());
@@ -186,35 +282,98 @@ fn cmd_tune(args: &Args) -> i32 {
     0
 }
 
-/// `xgenc sweep`: compile + simulate + differentially verify one model at
-/// every Table 2 precision (FP32 → Binary), reporting deployed weight
-/// bytes, predicted/measured cycles, PPA, and the verification error.
-fn cmd_sweep(args: &Args) -> i32 {
-    let spec = args.opt_or("model", "zoo:mlp");
-    let graph = match frontend::load_model(spec) {
+/// `xgenc ppa` options — its own command (it used to alias `compile`): one
+/// compile, then the full power/performance/area report.
+struct PpaArgs {
+    session: SessionArgs,
+    model: String,
+}
+
+impl PpaArgs {
+    fn from_args(args: &Args) -> PpaArgs {
+        PpaArgs {
+            session: SessionArgs::from_args(args),
+            model: args.opt_or("model", "zoo:mlp").to_string(),
+        }
+    }
+}
+
+fn cmd_ppa(a: &PpaArgs) -> i32 {
+    let graph = match frontend::load_model(&a.model) {
         Ok(g) => g,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
-    let opts = CompileOptions {
-        mach: platform(args),
-        calib_method: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
-        tune_trials: args.opt_usize("tune", 0),
-        tune_workers: args.opt_usize("workers", 0),
-        seed: args.opt_u64("seed", 42),
-        ..Default::default()
+    let mut session = CompileSession::new(a.session.compile_options());
+    let result = session.compile(&graph);
+    a.session.save_cache();
+    match result {
+        Ok(c) => {
+            let p = &c.ppa;
+            let mut t = Table::new(
+                &format!("PPA: {} @ {} on {}", a.model, c.precision().name(), p.platform),
+                &["Metric", "Value"],
+            );
+            t.row(&["Latency".to_string(), format!("{} ms", table::f(p.latency_ms, 3))]);
+            t.row(&["Power".to_string(), format!("{} mW", table::f(p.power_mw, 0))]);
+            t.row(&[
+                "Area".to_string(),
+                p.area_mm2
+                    .map(|v| format!("{} mm2", table::f(v, 2)))
+                    .unwrap_or_else(|| "n/a (off-the-shelf)".to_string()),
+            ]);
+            t.row(&["Energy".to_string(), format!("{} mJ", table::f(p.energy_mj, 3))]);
+            t.row(&["Cycles".to_string(), format!("{:.0}", p.cycles)]);
+            t.row(&["Throughput".to_string(), format!("{} GFLOP/s", table::f(p.gflops(), 2))]);
+            t.print();
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// `xgenc sweep` options.
+struct SweepArgs {
+    session: SessionArgs,
+    model: String,
+    out: Option<String>,
+}
+
+impl SweepArgs {
+    fn from_args(args: &Args) -> SweepArgs {
+        SweepArgs {
+            session: SessionArgs::from_args(args),
+            model: args.opt_or("model", "zoo:mlp").to_string(),
+            out: args.opt("out").map(|s| s.to_string()),
+        }
+    }
+}
+
+/// `xgenc sweep`: compile + simulate + differentially verify one model at
+/// every Table 2 precision (FP32 → Binary), reporting deployed weight
+/// bytes, predicted/measured cycles, PPA, and the verification error.
+fn cmd_sweep(a: &SweepArgs) -> i32 {
+    let graph = match frontend::load_model(&a.model) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
     };
-    let rows = match xgenc::pipeline::precision_sweep(&graph, &opts) {
+    let rows = match xgenc::pipeline::precision_sweep(&graph, &a.session.compile_options()) {
         Ok(rows) => rows,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
-    let mut t = xgenc::util::table::Table::new(
-        &format!("Precision sweep: {spec} (Table 2/6)"),
+    let mut t = Table::new(
+        &format!("Precision sweep: {} (Table 2/6)", a.model),
         &[
             "Precision", "Weight bytes", "Reduction", "Cycles (pred)", "Cycles (meas)",
             "Latency ms", "Power mW", "Max rel err", "Tol",
@@ -224,19 +383,19 @@ fn cmd_sweep(args: &Args) -> i32 {
         t.row(&[
             r.precision.name().to_string(),
             format!("{}", r.weight_bytes),
-            format!("{}x", xgenc::util::table::f(r.memory_reduction, 1)),
+            format!("{}x", table::f(r.memory_reduction, 1)),
             format!("{:.0}", r.predicted_cycles),
             format!("{}", r.measured_cycles),
-            xgenc::util::table::f(r.latency_ms, 3),
-            xgenc::util::table::f(r.power_mw, 0),
+            table::f(r.latency_ms, 3),
+            table::f(r.power_mw, 0),
             format!("{:.2e}", r.max_rel_err),
             format!("{:.0e}", r.tol),
         ]);
     }
     t.print();
-    if let Some(path) = args.opt("out") {
-        let doc = xgenc::util::json::Json::obj(vec![
-            ("model", xgenc::util::json::Json::str_(spec)),
+    if let Some(path) = &a.out {
+        let doc = Json::obj(vec![
+            ("model", Json::str_(&a.model)),
             ("rows", xgenc::pipeline::session::sweep_rows_json(&rows)),
         ]);
         if let Err(e) = xgenc::runtime::store::save_json(std::path::Path::new(path), &doc) {
@@ -248,10 +407,26 @@ fn cmd_sweep(args: &Args) -> i32 {
     0
 }
 
-fn cmd_pipeline(args: &Args) -> i32 {
-    let specs = args.opt_or("models", "zoo:vision_encoder,zoo:text_encoder,zoo:decoder");
+/// `xgenc pipeline` options.
+struct PipelineArgs {
+    session: SessionArgs,
+    models: String,
+}
+
+impl PipelineArgs {
+    fn from_args(args: &Args) -> PipelineArgs {
+        PipelineArgs {
+            session: SessionArgs::from_args(args),
+            models: args
+                .opt_or("models", "zoo:vision_encoder,zoo:text_encoder,zoo:decoder")
+                .to_string(),
+        }
+    }
+}
+
+fn cmd_pipeline(a: &PipelineArgs) -> i32 {
     let mut graphs = Vec::new();
-    for spec in specs.split(',') {
+    for spec in a.models.split(',') {
         match frontend::load_model(spec.trim()) {
             Ok(g) => graphs.push(g),
             Err(e) => {
@@ -260,18 +435,8 @@ fn cmd_pipeline(args: &Args) -> i32 {
             }
         }
     }
-    let cache = cache_from_args(args);
-    let opts = CompileOptions {
-        mach: platform(args),
-        precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
-        tune_trials: args.opt_usize("tune", 0),
-        tune_workers: args.opt_usize("workers", 0),
-        cache: cache.as_ref().map(|(c, _)| c.clone()),
-        seed: args.opt_u64("seed", 42),
-        ..Default::default()
-    };
-    let result = multi_model::compile_pipeline(&graphs, &opts);
-    save_cache(&cache);
+    let result = multi_model::compile_pipeline(&graphs, &a.session.compile_options());
+    a.session.save_cache();
     match result {
         Ok(bundle) => {
             println!("{}", bundle.summary());
@@ -287,12 +452,26 @@ fn cmd_pipeline(args: &Args) -> i32 {
     }
 }
 
-fn cmd_export(args: &Args) -> i32 {
-    let spec = args.opt_or("model", "zoo:mlp");
-    match frontend::load_model(spec) {
+/// `xgenc export` options.
+struct ExportArgs {
+    model: String,
+    out: Option<String>,
+}
+
+impl ExportArgs {
+    fn from_args(args: &Args) -> ExportArgs {
+        ExportArgs {
+            model: args.opt_or("model", "zoo:mlp").to_string(),
+            out: args.opt("out").map(|s| s.to_string()),
+        }
+    }
+}
+
+fn cmd_export(a: &ExportArgs) -> i32 {
+    match frontend::load_model(&a.model) {
         Ok(g) => {
             let text = xgenc::frontend::onnx_json::save_str(&g);
-            match args.opt("out") {
+            match &a.out {
                 Some(path) => {
                     if let Err(e) = std::fs::write(path, text) {
                         eprintln!("error: {e}");
@@ -311,8 +490,191 @@ fn cmd_export(args: &Args) -> i32 {
     }
 }
 
-fn parse_sig(spec: &str) -> Option<KernelSig> {
-    KernelSig::parse_key(spec)
+/// `xgenc serve` / `xgenc loadgen` options: the server knobs, the load
+/// profile, and the fleet to build (demo fleet when `--models` is absent).
+struct ServeArgs {
+    session: SessionArgs,
+    models: Option<String>,
+    server: ServerOptions,
+    load: LoadGenOptions,
+    out: Option<String>,
+}
+
+impl ServeArgs {
+    fn from_args(args: &Args) -> ServeArgs {
+        let deadline_ms = args.opt_f64("deadline-ms", 0.0);
+        let duration_s = args.opt_f64("duration", 0.0);
+        ServeArgs {
+            session: SessionArgs::from_args(args),
+            models: args.opt("models").map(|s| s.to_string()),
+            server: ServerOptions {
+                workers: args.opt_usize("workers", 0),
+                max_batch: args.opt_usize("batch", 8),
+                queue_depth: args.opt_usize("queue", 256),
+                deadline: (deadline_ms > 0.0).then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
+            },
+            load: LoadGenOptions {
+                requests: args.opt_u64("requests", 10_000),
+                rate: args.opt_f64("rate", 0.0),
+                seed: args.opt_u64("seed", 42),
+                sample_every: args.opt_u64("sample-every", 1000),
+                duration: (duration_s > 0.0).then(|| Duration::from_secs_f64(duration_s)),
+            },
+            out: args.opt("out").map(|s| s.to_string()),
+        }
+    }
+}
+
+/// Build the serving fleet: the mixed demo fleet (FP32 + INT8 + dynamic
+/// batch, with serial references for sample verification) by default, or
+/// one image per `--models` spec compiled at the session's options.
+#[allow(clippy::type_complexity)]
+fn build_fleet(
+    a: &ServeArgs,
+) -> Result<(Vec<Arc<ModelImage>>, Vec<MixEntry>, Option<DemoFleet>), String> {
+    match &a.models {
+        None => {
+            let fleet = DemoFleet::build().map_err(|e| e.to_string())?;
+            Ok((fleet.images.clone(), fleet.mix.clone(), Some(fleet)))
+        }
+        Some(specs) => {
+            let mut images = Vec::new();
+            for spec in specs.split(',') {
+                let g = frontend::load_model(spec.trim())
+                    .map_err(|e| format!("loading '{spec}': {e}"))?;
+                let c = CompileSession::new(a.session.compile_options())
+                    .compile(&g)
+                    .map_err(|e| format!("compiling '{spec}': {e}"))?;
+                images.push(Arc::new(ModelImage::from_compiled(&c).map_err(|e| e.to_string())?));
+            }
+            let mix = (0..images.len()).map(|m| MixEntry { model: m, weight: 1.0 }).collect();
+            Ok((images, mix, None))
+        }
+    }
+}
+
+/// `xgenc serve`: start the batched concurrent server over the fleet,
+/// drive it with the synthetic load generator, and report throughput,
+/// latency percentiles, batching, and shed accounting. Sampled responses
+/// from the demo fleet are verified bit-identical to the serial engine.
+fn cmd_serve(a: &ServeArgs) -> i32 {
+    let (images, mix, demo) = match build_fleet(a) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let names: Vec<String> = images.iter().map(|i| i.name.clone()).collect();
+    println!("serving fleet: {}", names.join(", "));
+    let server = match Server::start(&images, a.server.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let lr = loadgen::drive(&server, &images, &mix, &a.load);
+    let sr = server.shutdown();
+    println!("{}", lr.summary());
+    println!("{}", sr.summary());
+    let mut t = Table::new("Served per model", &["Model", "Served"]);
+    for (i, name) in names.iter().enumerate() {
+        let n = sr.per_model_served.get(i).copied().unwrap_or(0);
+        t.row(&[name.clone(), format!("{n}")]);
+    }
+    t.print();
+    let mut code = 0;
+    if let Some(fleet) = &demo {
+        let mut bad = 0usize;
+        for s in &lr.samples {
+            match fleet.sample_matches(s) {
+                Ok(true) => {}
+                Ok(false) => bad += 1,
+                Err(e) => {
+                    eprintln!("sample replay error: {e}");
+                    bad += 1;
+                }
+            }
+        }
+        if bad > 0 {
+            eprintln!(
+                "error: {bad}/{} sampled responses diverged from the serial reference",
+                lr.samples.len()
+            );
+            code = 1;
+        } else if !lr.samples.is_empty() {
+            println!(
+                "verified {} sampled responses bit-identical to the serial reference",
+                lr.samples.len()
+            );
+        }
+    }
+    if let Some(path) = &a.out {
+        let doc = Json::obj(vec![("server", sr.to_json()), ("loadgen", lr.to_json())]);
+        if let Err(e) = xgenc::runtime::store::save_json(std::path::Path::new(path), &doc) {
+            eprintln!("error: could not write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    code
+}
+
+/// `xgenc loadgen`: the serial baseline — the same request stream served
+/// through one long-lived `LoadedModel` per model on this thread. Compare
+/// its req/s against `xgenc serve` to see the worker-pool speedup.
+fn cmd_loadgen(a: &ServeArgs) -> i32 {
+    let (images, mix, _demo) = match build_fleet(a) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut loaded = Vec::new();
+    for img in &images {
+        match LoadedModel::from_image(Arc::clone(img)) {
+            Ok(lm) => loaded.push(lm),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    let mut rng = Rng::new(a.load.seed);
+    let start = std::time::Instant::now();
+    let (mut cycles, mut instret, mut served) = (0u64, 0u64, 0u64);
+    while served < a.load.requests {
+        if let Some(d) = a.load.duration {
+            if start.elapsed() >= d {
+                break;
+            }
+        }
+        let model = loadgen::pick_model(&mut rng, &mix);
+        let spec = rng.index(images[model].spec_count());
+        let req = images[model].synth_request(spec, loadgen::request_seed(a.load.seed, served));
+        match loaded[model].infer(&req) {
+            Ok(resp) => {
+                cycles += resp.stats.cycles;
+                instret += resp.stats.instret;
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+        served += 1;
+    }
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "serial baseline: {served} requests in {:.2}s ({:.0} req/s, {:.1} simulated MIPS, \
+         {cycles} simulated cycles)",
+        wall,
+        served as f64 / wall,
+        instret as f64 / wall / 1e6,
+    );
+    0
 }
 
 const HELP: &str = "\
@@ -324,14 +686,32 @@ USAGE:
                  [--cache FILE] [--workers N] [--out DIR] [--run] [--verify]
   xgenc tune     --sig matmul:MxNxK|conv:CxHxWxFxKxS|ew:LEN [--trials N]
                  [--algorithm bayes|ga|sa|random|grid] [--workers N]
+  xgenc ppa      --model zoo:<name> [--precision ...] [--platform xgen|hand|cpu]
   xgenc sweep    --model zoo:<name> [--platform xgen|hand|cpu] [--out file.json]
   xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
+  xgenc serve    [--models spec1,...] [--workers N] [--batch N] [--queue N]
+                 [--deadline-ms MS] [--requests N] [--rate RPS] [--duration S]
+                 [--sample-every N] [--seed N] [--out file.json]
+  xgenc loadgen  [--models spec1,...] [--requests N] [--duration S] [--seed N]
   xgenc export   --model zoo:<name> [--out file.json]
+
+  ppa compiles one model and prints the full power/performance/area report
+  (latency, power, area, energy, cycles, GFLOP/s) for the chosen platform.
 
   sweep compiles, simulates, and differentially verifies the model at every
   Table 2 precision (FP32 FP16 BF16 FP8 INT8 FP4 INT4 Binary), reporting
   deployed weight bytes, predicted vs measured cycles, PPA, and the
   verification error per precision.
+
+  serve starts the batched concurrent inference server (one long-lived
+  predecoded machine per worker x model) and drives it with a synthetic
+  load generator. --rate RPS generates an open-loop Poisson arrival stream
+  (full queues shed with an error); --rate 0 (default) runs closed-loop at
+  saturation. --deadline-ms sheds requests that queued too long. Without
+  --models it serves the demo fleet (FP32 MLP + INT8 MLP + dynamic-batch
+  MLP) and verifies every --sample-every'th response bit-identical to the
+  serial engine. loadgen runs the identical request stream serially on one
+  thread — the baseline for the serving speedup.
 
   --cache FILE persists tuning results between runs: warm entries skip the
   search entirely (corrupted or stale files fall back to cold tuning).

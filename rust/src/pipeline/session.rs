@@ -402,24 +402,18 @@ impl CompileSession {
         }
     }
 
-    /// Stage 6 (opt-in): differential verification. Runs the compiled
-    /// binary end-to-end on the functional machine via the artifact ABI and
-    /// compares the outputs against the reference executor under the
-    /// per-precision tolerance; the report also carries machine-measured
-    /// cycles next to the analytic cost-model prediction, giving the
-    /// "unified cost model" whole-model ground truth. Machine and precision
-    /// come from the *model* (what it was compiled for), never from
-    /// whichever session happens to hold it.
+    /// Stage 6 (opt-in): differential verification. Loads the compiled
+    /// model into the inference engine ([`crate::runtime::engine`]), serves
+    /// the inputs end-to-end on the functional machine via the artifact
+    /// ABI, and compares the outputs against the reference executor under
+    /// the per-precision tolerance; the report also carries
+    /// machine-measured cycles next to the analytic cost-model prediction,
+    /// giving the "unified cost model" whole-model ground truth. Machine
+    /// and precision come from the *model* (what it was compiled for),
+    /// never from whichever session happens to hold it.
     pub fn verify(&self, c: &CompiledModel, inputs: &[Tensor]) -> Result<simrun::VerifyReport> {
-        simrun::verify(
-            &c.mach,
-            &c.graph,
-            c.abi(),
-            &c.asm,
-            inputs,
-            c.precision(),
-            Some(c.ppa.cycles),
-        )
+        let mut lm = crate::runtime::engine::LoadedModel::load(c)?;
+        lm.verify(&crate::runtime::engine::InferenceRequest::new(inputs.to_vec()))
     }
 
     /// [`Self::verify`] with deterministic synthesized inputs (seeded from

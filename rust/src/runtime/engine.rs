@@ -1,0 +1,469 @@
+//! Sessioned inference engine over the functional simulator — the API the
+//! serving runtime ([`crate::runtime::server`]) and the legacy
+//! [`crate::runtime::simrun`] free functions are built on.
+//!
+//! A [`ModelImage`] is the immutable, shareable half of a deployed model:
+//! the predecoded binary, the per-specialization `(dims, Graph, ModelAbi)`
+//! table, and the dispatch metadata for dynamic-shape images. Build it once
+//! (per model, per fleet) and hand `Arc<ModelImage>`s to as many workers as
+//! you like. A [`LoadedModel`] is the mutable half: one long-lived
+//! [`Machine`] bound to one image, with weights staged once at load.
+//!
+//! # Machine-reuse invariants
+//!
+//! [`LoadedModel::infer`] reuses the machine across requests instead of
+//! reconstructing it, so per-request cost is staging + run. The contract:
+//!
+//! - **WMEM persists.** Weights are staged once by [`LoadedModel::load`] /
+//!   [`LoadedModel::from_image`] and never re-staged; compiled programs
+//!   treat WMEM as read-only, and for dispatch images every specialization
+//!   must agree on weight placement (checked at image build).
+//! - **DMEM is zeroed per request** up to the image's zero extent (the max
+//!   memory-plan `dmem_peak` over specializations, plus the dims slot) —
+//!   activations, scratch, and the previous request's outputs are gone.
+//!   Inputs (and the dims slot, for dynamic images) are re-staged from the
+//!   request.
+//! - **Architectural and timing state resets.** Registers, vector state,
+//!   cycle/instret counters, and the cache hierarchy (tags + LRU, not just
+//!   counters) go back to power-on, so every request's outputs *and*
+//!   [`RunStats`] are bit-identical to a serial run of the same request on
+//!   a fresh machine — the property the serving determinism suite
+//!   (`rust/tests/serving.rs`) and `benches/bench_serving.rs` assert.
+
+use std::sync::Arc;
+
+use crate::backend::memplan::ModelAbi;
+use crate::dynshape::DispatchImage;
+use crate::ir::dtype::DType;
+use crate::ir::exec::Executor;
+use crate::ir::graph::Graph;
+use crate::ir::tensor::Tensor;
+use crate::isa::encode::encode_all;
+use crate::isa::Instr;
+use crate::pipeline::CompiledModel;
+use crate::runtime::simrun::{self, VerifyReport};
+use crate::sim::machine::{Machine, RunStats};
+use crate::sim::predecode::{predecode, Predecoded};
+use crate::sim::MachineConfig;
+use crate::util::error::{Error, Result};
+
+/// One inference request: the model inputs, plus the actual extents of the
+/// symbolic dimensions for dynamic-shape images (`None` for static models).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub inputs: Vec<Tensor>,
+    pub dims: Option<Vec<u32>>,
+}
+
+impl InferenceRequest {
+    pub fn new(inputs: Vec<Tensor>) -> InferenceRequest {
+        InferenceRequest { inputs, dims: None }
+    }
+
+    pub fn with_dims(inputs: Vec<Tensor>, dims: Vec<u32>) -> InferenceRequest {
+        InferenceRequest { inputs, dims: Some(dims) }
+    }
+}
+
+/// One finished inference: outputs plus the machine's per-run measurements
+/// (cycles, instret, per-class counts — all deltas for this request).
+#[derive(Debug)]
+pub struct InferenceResponse {
+    pub outputs: Vec<Tensor>,
+    pub stats: RunStats,
+}
+
+/// One specialization of a deployed model: its dim binding (empty for
+/// static models), the static graph, and the ABI to stage by.
+struct Spec {
+    dims: Vec<u32>,
+    graph: Graph,
+    abi: ModelAbi,
+}
+
+/// Dynamic-shape dispatch metadata: where the runtime writes the actual dim
+/// extents, and which configurations the stub knows.
+struct Dispatch {
+    dims_addr: u32,
+    configs: Vec<Vec<u32>>,
+}
+
+/// The immutable, `Arc`-shareable half of a deployed model: predecoded
+/// program + specialization table + dispatch metadata. See the module docs
+/// for the reuse invariants it encodes.
+pub struct ModelImage {
+    pub name: String,
+    pub mach: MachineConfig,
+    /// Datapath precision (drives the differential-verification tolerance).
+    pub precision: DType,
+    /// Analytic cost-model prediction, when the compile produced one.
+    pub predicted_cycles: Option<f64>,
+    prog: Predecoded,
+    specs: Vec<Spec>,
+    dispatch: Option<Dispatch>,
+    /// DMEM bytes [`Machine::reset_keep_wmem`] zeroes between requests.
+    zero_extent: usize,
+}
+
+impl ModelImage {
+    /// Image of one static compiled model: predecode the scheduled binary,
+    /// adopt the model's machine/precision/prediction, and use the memory
+    /// plan's `dmem_peak` as the per-request zero extent.
+    pub fn from_compiled(c: &CompiledModel) -> Result<ModelImage> {
+        let mut img = ModelImage::from_parts(&c.mach, &c.graph, c.abi(), &c.asm)?;
+        img.precision = c.precision();
+        img.predicted_cycles = Some(c.ppa.cycles);
+        img.zero_extent = c.plan.dmem_peak as usize;
+        Ok(img)
+    }
+
+    /// Image from loose parts (the legacy `simrun::run_model` tuple).
+    /// Precision defaults to FP32 and the whole DMEM is zeroed per request
+    /// — without a memory plan the program's footprint is unknown.
+    pub fn from_parts(
+        mach: &MachineConfig,
+        g: &Graph,
+        abi: &ModelAbi,
+        asm: &[Instr],
+    ) -> Result<ModelImage> {
+        Ok(ModelImage {
+            name: g.name.clone(),
+            mach: mach.clone(),
+            precision: DType::F32,
+            predicted_cycles: None,
+            prog: predecode(&encode_all(asm)?),
+            specs: vec![Spec { dims: Vec::new(), graph: g.clone(), abi: abi.clone() }],
+            dispatch: None,
+            zero_extent: usize::MAX,
+        })
+    }
+
+    /// Image of a multi-specialization dispatch build: the stub + variants
+    /// binary plus one `(dims, graph, abi)` spec per configuration, in the
+    /// image's variant order. Checks the layout contracts a reusable
+    /// machine depends on: the dims slot must not overlap any staged
+    /// buffer, and every specialization must place every weight at the same
+    /// WMEM address (weights are staged once, from the first spec).
+    pub fn from_dispatch(image: &DispatchImage, specs: &[&CompiledModel]) -> Result<ModelImage> {
+        if specs.len() != image.configs.len() {
+            return Err(Error::Runtime(format!(
+                "dispatch image has {} configurations but {} specializations were supplied",
+                image.configs.len(),
+                specs.len()
+            )));
+        }
+        let first = specs.first().ok_or_else(|| {
+            Error::Runtime("dispatch image needs at least one specialization".into())
+        })?;
+        let weight_table = |c: &CompiledModel| -> Vec<(String, u32, u32)> {
+            let mut t: Vec<_> = c
+                .abi()
+                .weights()
+                .map(|s| (s.name.clone(), s.addr, s.bytes))
+                .collect();
+            t.sort();
+            t
+        };
+        let want = weight_table(first);
+        let mut zero_extent = image.dims_addr as usize + 4 * image.configs[0].len();
+        for (config, c) in image.configs.iter().zip(specs) {
+            if weight_table(c) != want {
+                return Err(Error::Runtime(format!(
+                    "specialization '{}' disagrees with '{}' on weight placement — \
+                     cannot stage weights once for the whole image",
+                    c.graph.name, first.graph.name
+                )));
+            }
+            check_dims_slot(image, config, c.abi())?;
+            zero_extent = zero_extent.max(c.plan.dmem_peak as usize);
+        }
+        let mut img = ModelImage::from_dispatch_parts(image, &first.graph, first.abi())?;
+        img.name = first
+            .graph
+            .name
+            .split('@')
+            .next()
+            .unwrap_or(&first.graph.name)
+            .to_string();
+        img.mach = first.mach.clone();
+        img.precision = first.precision();
+        img.zero_extent = zero_extent;
+        img.specs = image
+            .configs
+            .iter()
+            .zip(specs)
+            .map(|(config, c)| Spec {
+                dims: config.clone(),
+                graph: c.graph.clone(),
+                abi: c.abi().clone(),
+            })
+            .collect();
+        Ok(img)
+    }
+
+    /// Dispatch image from loose parts (the legacy `simrun::run_dispatch`
+    /// tuple): a single spec serves whichever configuration the request
+    /// selects — the caller vouches that `g`/`abi` belong to it.
+    pub fn from_dispatch_parts(
+        image: &DispatchImage,
+        g: &Graph,
+        abi: &ModelAbi,
+    ) -> Result<ModelImage> {
+        for config in &image.configs {
+            check_dims_slot(image, config, abi)?;
+        }
+        Ok(ModelImage {
+            name: g.name.clone(),
+            mach: MachineConfig::xgen_asic(),
+            precision: DType::F32,
+            predicted_cycles: None,
+            prog: predecode(&image.words),
+            specs: vec![Spec { dims: Vec::new(), graph: g.clone(), abi: abi.clone() }],
+            dispatch: Some(Dispatch {
+                dims_addr: image.dims_addr,
+                configs: image.configs.clone(),
+            }),
+            zero_extent: usize::MAX,
+        })
+    }
+
+    /// Number of specializations (1 for static models).
+    pub fn spec_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Dim binding of specialization `i` (empty for static models).
+    pub fn spec_dims(&self, i: usize) -> &[u32] {
+        &self.specs[i].dims
+    }
+
+    /// Deterministic synthetic request for specialization `i` — what the
+    /// load generator feeds the server, and what the serial reference
+    /// re-synthesizes from `(spec, seed)` to verify a served output.
+    pub fn synth_request(&self, spec: usize, seed: u64) -> InferenceRequest {
+        let s = &self.specs[spec];
+        let inputs = simrun::synth_inputs(&s.graph, seed);
+        if self.dispatch.is_some() {
+            InferenceRequest::with_dims(inputs, s.dims.clone())
+        } else {
+            InferenceRequest::new(inputs)
+        }
+    }
+
+    /// Resolve a request's dims to a specialization index, enforcing the
+    /// static/dynamic contract and shape validation (unknown dims fail fast
+    /// here — never by spinning the dispatch stub's trap loop).
+    fn select_spec(&self, dims: Option<&[u32]>) -> Result<usize> {
+        match (&self.dispatch, dims) {
+            (None, None) => Ok(0),
+            (None, Some(d)) => Err(Error::Runtime(format!(
+                "model '{}' is static but the request carries dims {d:?}",
+                self.name
+            ))),
+            (Some(_), None) => Err(Error::Runtime(format!(
+                "model '{}' is a dynamic-shape image: the request must carry dims",
+                self.name
+            ))),
+            (Some(disp), Some(d)) => {
+                if !disp.configs.iter().any(|c| c.as_slice() == d) {
+                    return Err(Error::Runtime(format!(
+                        "shape validation failed: dims {d:?} match none of {} specializations",
+                        disp.configs.len()
+                    )));
+                }
+                if let Some(i) = self.specs.iter().position(|s| s.dims.as_slice() == d) {
+                    Ok(i)
+                } else if self.specs.len() == 1 && self.specs[0].dims.is_empty() {
+                    // from_dispatch_parts: one caller-supplied spec serves
+                    // whichever known configuration was requested.
+                    Ok(0)
+                } else {
+                    Err(Error::Runtime(format!(
+                        "dims {d:?} are a known configuration but no specialization carries them"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// The dims slot must not overlap any staged DMEM buffer — overlap would
+/// silently corrupt inputs/activations, not fail.
+fn check_dims_slot(image: &DispatchImage, dims: &[u32], abi: &ModelAbi) -> Result<()> {
+    let dims_end = image.dims_addr as u64 + 4 * dims.len() as u64;
+    for sym in &abi.symbols {
+        let apart = sym.addr as u64 + sym.bytes as u64 <= image.dims_addr as u64
+            || dims_end <= sym.addr as u64;
+        if !apart {
+            return Err(Error::Runtime(format!(
+                "dims slot {:#x} overlaps abi symbol '{}'",
+                image.dims_addr, sym.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The mutable half of a deployed model: one long-lived [`Machine`] bound
+/// to one [`ModelImage`], weights staged once at construction. `infer` is
+/// `&mut self`: a `LoadedModel` serves one request at a time — concurrency
+/// comes from many `LoadedModel`s sharing one `Arc<ModelImage>` (what the
+/// serving worker pool does).
+pub struct LoadedModel {
+    image: Arc<ModelImage>,
+    machine: Machine,
+    /// Whether the machine has run since the last reset (fresh machines
+    /// skip the reset — keeps single-shot `run_model` on the historical
+    /// cost profile).
+    dirty: bool,
+}
+
+impl LoadedModel {
+    /// Load one compiled model: build its image and bind a machine to it.
+    pub fn load(c: &CompiledModel) -> Result<LoadedModel> {
+        LoadedModel::from_image(Arc::new(ModelImage::from_compiled(c)?))
+    }
+
+    /// Bind a fresh machine to a shared image and stage weights once.
+    pub fn from_image(image: Arc<ModelImage>) -> Result<LoadedModel> {
+        let mut machine = Machine::new(image.mach.clone());
+        machine.max_instret = simrun::MAX_INSTRET;
+        let spec = &image.specs[0];
+        simrun::stage_weights(&mut machine, &spec.graph, &spec.abi)?;
+        Ok(LoadedModel { image, machine, dirty: false })
+    }
+
+    pub fn image(&self) -> &Arc<ModelImage> {
+        &self.image
+    }
+
+    /// Serve one request: reset the machine (keeping staged weights), stage
+    /// the request's inputs (and dims, for dynamic images), run the
+    /// predecoded program, read outputs back. Bit-identical — outputs and
+    /// stats — to running the same request on a fresh machine.
+    pub fn infer(&mut self, req: &InferenceRequest) -> Result<InferenceResponse> {
+        let spec_idx = self.image.select_spec(req.dims.as_deref())?;
+        if self.dirty {
+            self.machine.reset_keep_wmem(self.image.zero_extent);
+        }
+        // Dirty from here: even a failed staging leaves partial writes.
+        self.dirty = true;
+        let spec = &self.image.specs[spec_idx];
+        simrun::stage_inputs(&mut self.machine, &spec.abi, &req.inputs)?;
+        if let Some(disp) = &self.image.dispatch {
+            let dims = req.dims.as_deref().unwrap_or_default();
+            self.machine.write_u32_slice(disp.dims_addr, dims)?;
+        }
+        let stats = self.machine.run_predecoded(&self.image.prog)?;
+        let outputs = simrun::read_outputs(&mut self.machine, &spec.abi)?;
+        Ok(InferenceResponse { outputs, stats })
+    }
+
+    /// Differential verification of one request: serve it, run the same
+    /// inputs through the reference executor, and compare under the
+    /// image's per-precision tolerance.
+    pub fn verify(&mut self, req: &InferenceRequest) -> Result<VerifyReport> {
+        let resp = self.infer(req)?;
+        let spec = &self.image.specs[self.image.select_spec(req.dims.as_deref())?];
+        let want = Executor::new().run(&spec.graph, &req.inputs)?;
+        if want.len() != resp.outputs.len() {
+            return Err(Error::Sim(format!(
+                "output arity mismatch: machine {} vs reference {}",
+                resp.outputs.len(),
+                want.len()
+            )));
+        }
+        let mut max_rel_err = 0.0f32;
+        let mut elems = 0usize;
+        for (got, want_t) in resp.outputs.iter().zip(&want) {
+            if got.numel() < want_t.numel() {
+                return Err(Error::Sim(format!(
+                    "output size mismatch: machine {} vs reference {}",
+                    got.numel(),
+                    want_t.numel()
+                )));
+            }
+            for (a, b) in got.data.iter().zip(&want_t.data) {
+                if !a.is_finite() || !b.is_finite() {
+                    return Err(Error::Sim(format!("non-finite output: {a} vs {b}")));
+                }
+                max_rel_err = max_rel_err.max((a - b).abs() / b.abs().max(1.0));
+                elems += 1;
+            }
+        }
+        Ok(VerifyReport {
+            model: spec.graph.name.clone(),
+            precision: self.image.precision,
+            elems,
+            max_rel_err,
+            tol: simrun::tolerance(self.image.precision),
+            measured_cycles: resp.stats.cycles,
+            measured_instret: resp.stats.instret,
+            predicted_cycles: self.image.predicted_cycles,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::pipeline::{CompileOptions, CompileSession};
+
+    fn compiled(precision: DType) -> CompiledModel {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1)).unwrap();
+        let mut s = CompileSession::new(CompileOptions { precision, ..Default::default() });
+        s.compile(&g).unwrap()
+    }
+
+    fn bits(outs: &[Tensor]) -> Vec<Vec<u32>> {
+        outs.iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn machine_reuse_is_bit_identical_to_fresh() {
+        let c = compiled(DType::F32);
+        let mut lm = LoadedModel::load(&c).unwrap();
+        for seed in [3u64, 4, 5] {
+            let req = InferenceRequest::new(simrun::synth_inputs(&c.graph, seed));
+            let served = lm.infer(&req).unwrap();
+            // Fresh-machine serial reference for the same request.
+            let fresh = simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &req.inputs).unwrap();
+            assert_eq!(bits(&served.outputs), bits(&fresh.outputs), "seed {seed}");
+            assert_eq!(served.stats, fresh.stats, "seed {seed}: timing must reset too");
+        }
+    }
+
+    #[test]
+    fn quantized_model_reuse_stays_in_tolerance() {
+        let c = compiled(DType::I8);
+        let mut lm = LoadedModel::load(&c).unwrap();
+        for seed in [1u64, 2] {
+            let req = InferenceRequest::new(simrun::synth_inputs(&c.graph, seed));
+            let r = lm.verify(&req).unwrap();
+            assert!(r.passed(), "seed {seed}: {}", r.summary());
+            assert_eq!(r.precision, DType::I8);
+        }
+    }
+
+    #[test]
+    fn static_model_rejects_dims_and_dynamic_requires_them() {
+        let c = compiled(DType::F32);
+        let mut lm = LoadedModel::load(&c).unwrap();
+        let inputs = simrun::synth_inputs(&c.graph, 1);
+        let err = lm.infer(&InferenceRequest::with_dims(inputs, vec![1])).unwrap_err();
+        assert!(err.to_string().contains("static"), "{err}");
+    }
+
+    #[test]
+    fn verify_carries_compile_metadata() {
+        let c = compiled(DType::F32);
+        let mut lm = LoadedModel::load(&c).unwrap();
+        let r = lm.verify(&InferenceRequest::new(simrun::synth_inputs(&c.graph, 42))).unwrap();
+        assert!(r.passed(), "{}", r.summary());
+        assert!(r.predicted_cycles.unwrap() > 0.0);
+        assert!(r.cycle_ratio().unwrap() > 0.0);
+    }
+}

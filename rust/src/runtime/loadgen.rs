@@ -1,0 +1,431 @@
+//! Synthetic load generation for the serving runtime: an open-loop
+//! Poisson-process arrival stream (or a closed-loop saturation stream) of
+//! deterministic requests over a mixed model fleet, plus the demo fleet
+//! `xgenc serve` and `benches/bench_serving.rs` share.
+//!
+//! Determinism is the point: every request is reconstructible from
+//! `(model, spec, request_seed(seed, i))`, so a sampled served output can
+//! be re-synthesized and replayed through the serial engine
+//! ([`DemoFleet::reference`]) and compared bit-for-bit — outputs *and*
+//! per-run [`RunStats`] — against what the concurrent server returned.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dynshape::{self, DispatchImage};
+use crate::frontend::{model_zoo, prepare};
+use crate::ir::dtype::DType;
+use crate::pipeline::{CompileOptions, CompiledModel};
+use crate::runtime::engine::ModelImage;
+use crate::runtime::server::{Server, Ticket};
+use crate::runtime::simrun::{self, SimRun};
+use crate::sim::machine::RunStats;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One entry of the traffic mix: a model index and its relative weight.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub model: usize,
+    pub weight: f64,
+}
+
+/// Load-generator knobs (`xgenc serve`/`loadgen` flags map onto these).
+#[derive(Debug, Clone)]
+pub struct LoadGenOptions {
+    /// Requests to generate.
+    pub requests: u64,
+    /// Mean arrivals per second; 0 = closed-loop saturation (blocking
+    /// submit, no pacing).
+    pub rate: f64,
+    /// Seed for arrivals, the model/spec mix, and per-request inputs.
+    pub seed: u64,
+    /// Keep every Nth response for offline verification (0 = never).
+    pub sample_every: u64,
+    /// Stop generating after this long even if `requests` remain.
+    pub duration: Option<Duration>,
+}
+
+impl Default for LoadGenOptions {
+    fn default() -> LoadGenOptions {
+        LoadGenOptions { requests: 1000, rate: 0.0, seed: 42, sample_every: 0, duration: None }
+    }
+}
+
+/// The seed of generated request `i` under generator seed `seed` — public
+/// so verifiers can re-synthesize any sampled request.
+pub fn request_seed(seed: u64, i: u64) -> u64 {
+    seed ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Weighted model pick — one `rng.f64()` draw per request, shared by the
+/// concurrent driver and the serial baseline so both generate the same
+/// stream from the same seed.
+pub fn pick_model(rng: &mut Rng, mix: &[MixEntry]) -> usize {
+    let total: f64 = mix.iter().map(|m| m.weight).sum();
+    let mut pick = rng.f64() * total;
+    for m in mix {
+        if pick < m.weight {
+            return m.model;
+        }
+        pick -= m.weight;
+    }
+    mix[mix.len() - 1].model
+}
+
+/// A retained response: enough to re-synthesize the request (`model`,
+/// `spec`, `seed`) and the served result to compare against.
+pub struct Sample {
+    pub model: usize,
+    pub spec: usize,
+    pub seed: u64,
+    pub output_bits: Vec<Vec<u32>>,
+    pub stats: RunStats,
+}
+
+/// What one load-generation run produced.
+pub struct LoadReport {
+    /// Requests generated (= accepted + shed at submit).
+    pub generated: u64,
+    pub accepted: u64,
+    /// Shed synchronously by `submit` (queue full).
+    pub shed_submit: u64,
+    /// Completed successfully.
+    pub ok: u64,
+    /// Shed by a worker after queueing past the deadline.
+    pub shed_deadline: u64,
+    /// Completed with any other error (always 0 in a healthy run).
+    pub failed: u64,
+    pub duration_s: f64,
+    pub samples: Vec<Sample>,
+}
+
+impl LoadReport {
+    pub fn offered_rps(&self) -> f64 {
+        self.generated as f64 / self.duration_s.max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} generated in {:.2}s ({:.0} req/s offered): {} ok, {} shed at submit, \
+             {} shed at deadline, {} failed, {} sampled",
+            self.generated,
+            self.duration_s,
+            self.offered_rps(),
+            self.ok,
+            self.shed_submit,
+            self.shed_deadline,
+            self.failed,
+            self.samples.len(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("generated", Json::Num(self.generated as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("shed_submit", Json::Num(self.shed_submit as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("offered_rps", Json::Num(self.offered_rps())),
+            ("samples", Json::Num(self.samples.len() as f64)),
+        ])
+    }
+}
+
+/// Drive a running [`Server`] with synthetic traffic.
+///
+/// Open loop (`rate > 0`): exponential inter-arrival gaps (a Poisson
+/// process at `rate` req/s) and non-blocking submits — a full queue sheds
+/// the arrival, as production front-ends do. Closed loop (`rate == 0`):
+/// blocking submits as fast as the server drains, measuring saturation
+/// throughput.
+///
+/// A collector thread waits on tickets as they are issued so completed
+/// responses never accumulate; the generator thread only paces, picks
+/// `(model, spec, seed)`, and submits.
+pub fn drive(
+    server: &Server,
+    images: &[Arc<ModelImage>],
+    mix: &[MixEntry],
+    opts: &LoadGenOptions,
+) -> LoadReport {
+    assert!(!mix.is_empty(), "loadgen needs a non-empty mix");
+    let total_weight: f64 = mix.iter().map(|m| m.weight).sum();
+    assert!(total_weight > 0.0, "loadgen mix weights must sum > 0");
+
+    let (tx, rx) = mpsc::channel::<(Ticket, Option<(usize, usize, u64)>)>();
+    let (mut generated, mut accepted, mut shed_submit) = (0u64, 0u64, 0u64);
+    let start = Instant::now();
+
+    let (ok, shed_deadline, failed, samples) = std::thread::scope(|s| {
+        let collector = s.spawn(move || {
+            let (mut ok, mut shed_deadline, mut failed) = (0u64, 0u64, 0u64);
+            let mut samples = Vec::new();
+            for (ticket, tag) in rx {
+                match ticket.wait() {
+                    Ok(out) => {
+                        ok += 1;
+                        if let Some((model, spec, seed)) = tag {
+                            samples.push(Sample {
+                                model,
+                                spec,
+                                seed,
+                                output_bits: out
+                                    .outputs
+                                    .iter()
+                                    .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+                                    .collect(),
+                                stats: out.stats,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        if e.to_string().contains("deadline") {
+                            shed_deadline += 1;
+                        } else {
+                            failed += 1;
+                        }
+                    }
+                }
+            }
+            (ok, shed_deadline, failed, samples)
+        });
+
+        let mut rng = Rng::new(opts.seed);
+        let mut next_at = 0.0f64;
+        while generated < opts.requests {
+            if let Some(d) = opts.duration {
+                if start.elapsed() >= d {
+                    break;
+                }
+            }
+            if opts.rate > 0.0 {
+                // Poisson process: exponential inter-arrival gaps.
+                next_at += -(1.0 - rng.f64()).ln() / opts.rate;
+                loop {
+                    let now = start.elapsed().as_secs_f64();
+                    if now >= next_at {
+                        break;
+                    }
+                    let gap = next_at - now;
+                    if gap > 200e-6 {
+                        std::thread::sleep(Duration::from_secs_f64(gap - 100e-6));
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+            let model = pick_model(&mut rng, mix);
+            let spec = rng.index(images[model].spec_count());
+            let seed = request_seed(opts.seed, generated);
+            let req = images[model].synth_request(spec, seed);
+            generated += 1;
+            let tag = if opts.sample_every > 0 && generated % opts.sample_every == 0 {
+                Some((model, spec, seed))
+            } else {
+                None
+            };
+            let res = if opts.rate > 0.0 {
+                server.submit(model, req)
+            } else {
+                server.submit_blocking(model, req)
+            };
+            match res {
+                Ok(ticket) => {
+                    accepted += 1;
+                    // Collector hung up only if it panicked; surface that.
+                    tx.send((ticket, tag)).expect("loadgen collector died");
+                }
+                Err(_) => shed_submit += 1,
+            }
+        }
+        drop(tx);
+        collector.join().expect("loadgen collector panicked")
+    });
+
+    LoadReport {
+        generated,
+        accepted,
+        shed_submit,
+        ok,
+        shed_deadline,
+        failed,
+        duration_s: start.elapsed().as_secs_f64(),
+        samples,
+    }
+}
+
+/// How one fleet model reproduces a served output serially.
+enum Reference {
+    Static(CompiledModel),
+    Dynamic(DispatchImage, Vec<CompiledModel>),
+}
+
+/// The mixed demo fleet `xgenc serve` and the serving bench share: an FP32
+/// MLP, the same model quantized to INT8, and a dynamic-batch MLP with
+/// three specializations — plus the serial reference engine that replays
+/// any `(model, spec, seed)` request for bit-exact verification.
+pub struct DemoFleet {
+    pub images: Vec<Arc<ModelImage>>,
+    pub mix: Vec<MixEntry>,
+    refs: Vec<Reference>,
+}
+
+impl DemoFleet {
+    pub fn build() -> Result<DemoFleet> {
+        let mut images = Vec::new();
+        let mut refs = Vec::new();
+
+        // Model 0: FP32 static MLP.
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 1))?;
+        let c = crate::pipeline::CompileSession::new(CompileOptions::default()).compile(&g)?;
+        let mut img = ModelImage::from_compiled(&c)?;
+        img.name = "mlp-f32".into();
+        images.push(Arc::new(img));
+        refs.push(Reference::Static(c));
+
+        // Model 1: the same MLP quantized to INT8 (calibrated on synthetic
+        // activations, like `precision_sweep`).
+        let opts_i8 = CompileOptions {
+            precision: DType::I8,
+            calib_inputs: vec![simrun::synth_inputs(&g, 42)],
+            ..Default::default()
+        };
+        let c = crate::pipeline::CompileSession::new(opts_i8).compile(&g)?;
+        let mut img = ModelImage::from_compiled(&c)?;
+        img.name = "mlp-i8".into();
+        images.push(Arc::new(img));
+        refs.push(Reference::Static(c));
+
+        // Model 2: dynamic-batch MLP, specialized for batches 1/2/4.
+        let gd = prepare(model_zoo::mlp_dynamic(&[16, 8, 4], 8))?;
+        let configs: Vec<Vec<(String, usize)>> = [1usize, 2, 4]
+            .iter()
+            .map(|b| vec![("batch".to_string(), *b)])
+            .collect();
+        let (dimage, compiled) =
+            dynshape::compile_image(&gd, &configs, &CompileOptions::default())?;
+        let spec_refs: Vec<&CompiledModel> = compiled.iter().collect();
+        let mut img = ModelImage::from_dispatch(&dimage, &spec_refs)?;
+        img.name = "mlp-dyn".into();
+        images.push(Arc::new(img));
+        refs.push(Reference::Dynamic(dimage, compiled));
+
+        // Traffic mix: mostly FP32, a quantized slice, a dynamic slice.
+        let mix = vec![
+            MixEntry { model: 0, weight: 0.5 },
+            MixEntry { model: 1, weight: 0.3 },
+            MixEntry { model: 2, weight: 0.2 },
+        ];
+        Ok(DemoFleet { images, mix, refs })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.images.iter().map(|i| i.name.clone()).collect()
+    }
+
+    /// Serial fresh-machine replay of the request `(model, spec, seed)`
+    /// identifies — the ground truth a served [`Sample`] must match
+    /// bit-for-bit, stats included.
+    pub fn reference(&self, model: usize, spec: usize, seed: u64) -> Result<SimRun> {
+        match &self.refs[model] {
+            Reference::Static(c) => {
+                let inputs = simrun::synth_inputs(&c.graph, seed);
+                simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &inputs)
+            }
+            Reference::Dynamic(dimage, compiled) => {
+                let c = &compiled[spec];
+                let dims = self.images[model].spec_dims(spec).to_vec();
+                let inputs = simrun::synth_inputs(&c.graph, seed);
+                simrun::run_dispatch(&c.mach, dimage, &dims, &c.graph, c.abi(), &inputs)
+            }
+        }
+    }
+
+    /// True when a [`Sample`] matches its serial reference bit-for-bit.
+    pub fn sample_matches(&self, sample: &Sample) -> Result<bool> {
+        let want = self.reference(sample.model, sample.spec, sample.seed)?;
+        let want_bits: Vec<Vec<u32>> = want
+            .outputs
+            .iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        Ok(want_bits == sample.output_bits && want.stats == sample.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::server::ServerOptions;
+
+    #[test]
+    fn request_seed_is_stable_and_distinct() {
+        assert_eq!(request_seed(42, 0), request_seed(42, 0));
+        assert_ne!(request_seed(42, 0), request_seed(42, 1));
+        assert_ne!(request_seed(42, 0), request_seed(43, 0));
+    }
+
+    #[test]
+    fn saturation_drive_serves_everything_and_samples_verify() {
+        let fleet = DemoFleet::build().unwrap();
+        let server = Server::start(
+            &fleet.images,
+            ServerOptions { workers: 2, max_batch: 4, queue_depth: 16, deadline: None },
+        )
+        .unwrap();
+        let report = drive(
+            &server,
+            &fleet.images,
+            &fleet.mix,
+            &LoadGenOptions { requests: 24, rate: 0.0, seed: 7, sample_every: 6, duration: None },
+        );
+        let sreport = server.shutdown();
+        assert_eq!(report.generated, 24);
+        assert_eq!(report.ok, 24, "saturation mode must not shed: {}", report.summary());
+        assert_eq!(report.failed, 0);
+        assert_eq!(sreport.served, 24);
+        assert_eq!(report.samples.len(), 4);
+        for s in &report.samples {
+            assert!(
+                fleet.sample_matches(s).unwrap(),
+                "sample (model {}, spec {}, seed {}) diverged",
+                s.model,
+                s.spec,
+                s.seed
+            );
+        }
+    }
+
+    #[test]
+    fn open_loop_paces_against_the_clock() {
+        let fleet = DemoFleet::build().unwrap();
+        let server = Server::start(
+            &fleet.images,
+            ServerOptions { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        // 20 arrivals at 2 kHz should take ~10 ms of pacing.
+        let report = drive(
+            &server,
+            &fleet.images,
+            &fleet.mix,
+            &LoadGenOptions {
+                requests: 20,
+                rate: 2000.0,
+                seed: 3,
+                sample_every: 0,
+                duration: None,
+            },
+        );
+        server.shutdown();
+        assert_eq!(report.generated, 20);
+        assert_eq!(report.ok + report.shed_submit + report.shed_deadline, 20);
+        assert!(report.duration_s > 0.0);
+    }
+}

@@ -17,9 +17,22 @@
 //! table, executes the encoded binary, and differentially verifies the
 //! outputs against the reference executor (`CompileSession::verify`,
 //! `xgenc --run`/`--verify`).
+//!
+//! [`engine`] is the sessioned inference API over the same machinery:
+//! [`engine::ModelImage`] (immutable, `Arc`-shared: predecoded binary +
+//! specialization table) and [`engine::LoadedModel`] (one long-lived
+//! machine, weights staged once, inputs re-staged per request). [`server`]
+//! drives pools of `LoadedModel`s concurrently with per-model queues,
+//! request batching, and backpressure; [`loadgen`] is the synthetic
+//! open-loop load generator that feeds it (`xgenc serve`,
+//! `benches/bench_serving.rs`).
 
 pub mod artifacts;
+pub mod engine;
+pub mod loadgen;
+pub mod server;
 pub mod simrun;
 pub mod store;
 
 pub use artifacts::Artifacts;
+pub use engine::{InferenceRequest, InferenceResponse, LoadedModel, ModelImage};

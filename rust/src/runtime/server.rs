@@ -1,0 +1,563 @@
+//! Batched concurrent inference server over the fast simulator — the
+//! production serving runtime.
+//!
+//! [`Server::start`] loads a fleet of [`ModelImage`]s and spawns a pool of
+//! worker threads; every worker owns one long-lived [`LoadedModel`] per
+//! model (predecode + weight staging happen once per worker × model; the
+//! per-request cost is the `reset_keep_wmem` path: zero the live DMEM
+//! extent, re-stage inputs, run). Requests flow through bounded per-model
+//! queues:
+//!
+//! - **Batching:** a worker drains up to `max_batch` *compatible* requests
+//!   (same model, same dims — dynamic-shape images batch per
+//!   specialization) in one dequeue, amortizing lock traffic and keeping
+//!   the machine's working set hot across the batch.
+//! - **Backpressure:** [`Server::submit`] sheds with an error once a
+//!   model's queue holds `queue_depth` requests (open-loop callers);
+//!   [`Server::submit_blocking`] waits for space instead (closed-loop
+//!   saturation drivers). With a `deadline`, requests that queued longer
+//!   than the budget are shed *at dequeue* with an error — the server
+//!   returns a late error, never a wrong answer.
+//! - **Determinism:** workers add no numerical or timing state of their
+//!   own; every served output and its [`RunStats`] are bit-identical to a
+//!   serial [`LoadedModel::infer`] of the same request
+//!   (`rust/tests/serving.rs` proves it under concurrency).
+//!
+//! [`Server::shutdown`] closes the queues, drains what's enqueued, joins
+//! the pool, and returns a [`ServerReport`]: throughput (req/s and
+//! simulated MIPS), latency percentiles, batching efficiency, queue-depth
+//! and shed accounting — what `benches/bench_serving.rs` emits as
+//! `BENCH_serving.json`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ir::tensor::Tensor;
+use crate::runtime::engine::{InferenceRequest, LoadedModel, ModelImage};
+use crate::sim::machine::RunStats;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Server tuning knobs (`xgenc serve` flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Worker threads (0 = one per available core).
+    pub workers: usize,
+    /// Max compatible requests drained per dequeue (min 1).
+    pub max_batch: usize,
+    /// Per-model queue bound before `submit` sheds (min 1).
+    pub queue_depth: usize,
+    /// Shed requests that queued longer than this before dispatch.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions { workers: 0, max_batch: 8, queue_depth: 256, deadline: None }
+    }
+}
+
+/// One served request: which model ran, its outputs and per-run machine
+/// stats, and the enqueue → completion latency.
+#[derive(Debug)]
+pub struct ServedOutput {
+    pub model: usize,
+    pub outputs: Vec<Tensor>,
+    pub stats: RunStats,
+    pub latency: Duration,
+}
+
+/// One-shot response slot a worker fills and a [`Ticket`] waits on.
+struct Slot {
+    result: Mutex<Option<Result<ServedOutput>>>,
+    done: Condvar,
+}
+
+fn fill(slot: &Slot, out: Result<ServedOutput>) {
+    let mut r = slot.result.lock().unwrap();
+    *r = Some(out);
+    slot.done.notify_all();
+}
+
+/// Handle to one submitted request; [`Ticket::wait`] blocks until a worker
+/// serves or sheds it.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<ServedOutput> {
+        let mut r = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(out) = r.take() {
+                return out;
+            }
+            r = self.slot.done.wait(r).unwrap();
+        }
+    }
+}
+
+struct Pending {
+    model: usize,
+    req: InferenceRequest,
+    enqueued: Instant,
+    slot: Arc<Slot>,
+}
+
+/// Everything behind the server mutex: the per-model queues plus the
+/// submit-side counters maintained under the same lock.
+struct State {
+    queues: Vec<VecDeque<Pending>>,
+    open: bool,
+    submitted: u64,
+    shed_queue_full: u64,
+    depth_samples: u64,
+    depth_sum: u64,
+    depth_max: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signaled on enqueue and shutdown (workers wait here).
+    work: Condvar,
+    /// Signaled on dequeue (blocking submitters wait here).
+    space: Condvar,
+    opts: ServerOptions,
+}
+
+/// Per-worker accounting, merged at shutdown.
+#[derive(Default)]
+struct WorkerStats {
+    served: u64,
+    shed_deadline: u64,
+    batches: u64,
+    batched_requests: u64,
+    max_batch_seen: usize,
+    latencies_ms: Vec<f64>,
+    cycles: u64,
+    instret: u64,
+    per_model_served: Vec<u64>,
+}
+
+/// The running server. Always finish with [`Server::shutdown`]; dropping
+/// the handle without it would leave the worker threads parked forever.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Load the fleet and spawn the worker pool. Every worker stages every
+    /// model's weights into its own machines up front — startup cost paid
+    /// once, and load errors surface here rather than inside a thread.
+    pub fn start(images: &[Arc<ModelImage>], opts: ServerOptions) -> Result<Server> {
+        if images.is_empty() {
+            return Err(Error::Runtime("server needs at least one model".into()));
+        }
+        let opts = ServerOptions {
+            workers: crate::util::resolve_workers(opts.workers),
+            max_batch: opts.max_batch.max(1),
+            queue_depth: opts.queue_depth.max(1),
+            deadline: opts.deadline,
+        };
+        let mut fleets: Vec<Vec<LoadedModel>> = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let mut fleet = Vec::with_capacity(images.len());
+            for img in images {
+                fleet.push(LoadedModel::from_image(img.clone())?);
+            }
+            fleets.push(fleet);
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queues: images.iter().map(|_| VecDeque::new()).collect(),
+                open: true,
+                submitted: 0,
+                shed_queue_full: 0,
+                depth_samples: 0,
+                depth_sum: 0,
+                depth_max: 0,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            opts,
+        });
+        let handles = fleets
+            .into_iter()
+            .enumerate()
+            .map(|(w, fleet)| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, fleet, w))
+            })
+            .collect();
+        Ok(Server { shared, handles, started: Instant::now() })
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.shared.state.lock().unwrap().queues.len()
+    }
+
+    /// Enqueue a request; sheds with an error when the model's queue is
+    /// full (graceful backpressure for open-loop arrivals).
+    pub fn submit(&self, model: usize, req: InferenceRequest) -> Result<Ticket> {
+        self.enqueue(model, req, false)
+    }
+
+    /// Enqueue a request, waiting for queue space instead of shedding —
+    /// the closed-loop saturation driver.
+    pub fn submit_blocking(&self, model: usize, req: InferenceRequest) -> Result<Ticket> {
+        self.enqueue(model, req, true)
+    }
+
+    fn enqueue(&self, model: usize, req: InferenceRequest, block: bool) -> Result<Ticket> {
+        let shared = &self.shared;
+        let mut st = shared.state.lock().unwrap();
+        if model >= st.queues.len() {
+            return Err(Error::Runtime(format!(
+                "unknown model index {model} (fleet has {})",
+                st.queues.len()
+            )));
+        }
+        if block {
+            while st.open && st.queues[model].len() >= shared.opts.queue_depth {
+                st = shared.space.wait(st).unwrap();
+            }
+        }
+        if !st.open {
+            return Err(Error::Runtime("server is shut down".into()));
+        }
+        if st.queues[model].len() >= shared.opts.queue_depth {
+            st.shed_queue_full += 1;
+            return Err(Error::Runtime(format!(
+                "shed: queue full for model {model} ({} pending)",
+                st.queues[model].len()
+            )));
+        }
+        let slot = Arc::new(Slot { result: Mutex::new(None), done: Condvar::new() });
+        st.queues[model].push_back(Pending {
+            model,
+            req,
+            enqueued: Instant::now(),
+            slot: Arc::clone(&slot),
+        });
+        st.submitted += 1;
+        let depth = st.queues[model].len();
+        st.depth_samples += 1;
+        st.depth_sum += depth as u64;
+        st.depth_max = st.depth_max.max(depth);
+        drop(st);
+        shared.work.notify_one();
+        Ok(Ticket { slot })
+    }
+
+    /// Close the queues, let the workers drain what is already enqueued,
+    /// join the pool, and return the merged report.
+    pub fn shutdown(self) -> ServerReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+        let workers = self.handles.len();
+        let mut merged = WorkerStats::default();
+        for h in self.handles {
+            let w = h.join().expect("server worker panicked");
+            merged.served += w.served;
+            merged.shed_deadline += w.shed_deadline;
+            merged.batches += w.batches;
+            merged.batched_requests += w.batched_requests;
+            merged.max_batch_seen = merged.max_batch_seen.max(w.max_batch_seen);
+            merged.latencies_ms.extend(w.latencies_ms);
+            merged.cycles += w.cycles;
+            merged.instret += w.instret;
+            if merged.per_model_served.len() < w.per_model_served.len() {
+                merged.per_model_served.resize(w.per_model_served.len(), 0);
+            }
+            for (m, n) in w.per_model_served.iter().enumerate() {
+                merged.per_model_served[m] += n;
+            }
+        }
+        let wall_seconds = self.started.elapsed().as_secs_f64();
+        let st = self.shared.state.lock().unwrap();
+        ServerReport {
+            workers,
+            wall_seconds,
+            submitted: st.submitted,
+            served: merged.served,
+            shed_queue_full: st.shed_queue_full,
+            shed_deadline: merged.shed_deadline,
+            batches: merged.batches,
+            batched_requests: merged.batched_requests,
+            max_batch: merged.max_batch_seen,
+            total_cycles: merged.cycles,
+            total_instret: merged.instret,
+            per_model_served: merged.per_model_served,
+            latencies_ms: merged.latencies_ms,
+            mean_queue_depth: if st.depth_samples == 0 {
+                0.0
+            } else {
+                st.depth_sum as f64 / st.depth_samples as f64
+            },
+            max_queue_depth: st.depth_max,
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, mut fleet: Vec<LoadedModel>, wid: usize) -> WorkerStats {
+    let n_models = fleet.len();
+    let mut stats = WorkerStats { per_model_served: vec![0; n_models], ..Default::default() };
+    // Stagger starting queues across workers so a mixed fleet doesn't
+    // funnel every worker onto model 0.
+    let mut cursor = wid % n_models;
+    loop {
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let found = (0..n_models)
+                    .map(|k| (cursor + k) % n_models)
+                    .find(|&qi| !st.queues[qi].is_empty());
+                if let Some(qi) = found {
+                    cursor = (qi + 1) % n_models;
+                    let q = &mut st.queues[qi];
+                    let first = q.pop_front().unwrap();
+                    let dims = first.req.dims.clone();
+                    batch.push(first);
+                    while batch.len() < shared.opts.max_batch
+                        && q.front().is_some_and(|p| p.req.dims == dims)
+                    {
+                        batch.push(q.pop_front().unwrap());
+                    }
+                    break;
+                }
+                if !st.open {
+                    return stats;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        }
+        shared.space.notify_all();
+        stats.batches += 1;
+        stats.batched_requests += batch.len() as u64;
+        stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+        for p in batch {
+            if let Some(deadline) = shared.opts.deadline {
+                let waited = p.enqueued.elapsed();
+                if waited > deadline {
+                    stats.shed_deadline += 1;
+                    fill(
+                        &p.slot,
+                        Err(Error::Runtime(format!(
+                            "shed: deadline exceeded ({:.1} ms queued > {:.1} ms budget)",
+                            waited.as_secs_f64() * 1e3,
+                            deadline.as_secs_f64() * 1e3
+                        ))),
+                    );
+                    continue;
+                }
+            }
+            match fleet[p.model].infer(&p.req) {
+                Ok(resp) => {
+                    stats.served += 1;
+                    stats.per_model_served[p.model] += 1;
+                    stats.cycles += resp.stats.cycles;
+                    stats.instret += resp.stats.instret;
+                    let latency = p.enqueued.elapsed();
+                    stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                    fill(
+                        &p.slot,
+                        Ok(ServedOutput {
+                            model: p.model,
+                            outputs: resp.outputs,
+                            stats: resp.stats,
+                            latency,
+                        }),
+                    );
+                }
+                Err(e) => fill(&p.slot, Err(e)),
+            }
+        }
+    }
+}
+
+/// Merged serving metrics for one server lifetime.
+pub struct ServerReport {
+    pub workers: usize,
+    pub wall_seconds: f64,
+    /// Requests accepted into a queue (submit-side sheds are not counted).
+    pub submitted: u64,
+    pub served: u64,
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+    /// Dequeue operations and the requests they carried — efficiency is
+    /// `batched_requests / batches`.
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Largest single batch observed.
+    pub max_batch: usize,
+    pub total_cycles: u64,
+    pub total_instret: u64,
+    pub per_model_served: Vec<u64>,
+    /// Enqueue → completion latency of every served request, in ms.
+    pub latencies_ms: Vec<f64>,
+    /// Queue depth sampled at every accepted submit.
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+}
+
+impl ServerReport {
+    /// Served requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.served as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    /// Simulated instructions retired per wall-clock second, in millions.
+    pub fn simulated_mips(&self) -> f64 {
+        self.total_instret as f64 / self.wall_seconds.max(1e-9) / 1e6
+    }
+
+    /// Mean requests per dequeue (1.0 = no batching benefit).
+    pub fn batching_efficiency(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Latency percentile in ms (`p` in `[0, 100]`); 0 when nothing served.
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_ms, p)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} workers: {} served in {:.2}s ({:.0} req/s, {:.1} simulated MIPS) | \
+             p50 {:.3} ms p99 {:.3} ms p99.9 {:.3} ms | batch {:.2} avg / {} max | \
+             queue {:.1} avg / {} max | shed {} full + {} deadline",
+            self.workers,
+            self.served,
+            self.wall_seconds,
+            self.throughput_rps(),
+            self.simulated_mips(),
+            self.latency_ms(50.0),
+            self.latency_ms(99.0),
+            self.latency_ms(99.9),
+            self.batching_efficiency(),
+            self.max_batch,
+            self.mean_queue_depth,
+            self.max_queue_depth,
+            self.shed_queue_full,
+            self.shed_deadline,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_model: Vec<f64> = self.per_model_served.iter().map(|n| *n as f64).collect();
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("simulated_mips", Json::Num(self.simulated_mips())),
+            ("p50_ms", Json::Num(self.latency_ms(50.0))),
+            ("p99_ms", Json::Num(self.latency_ms(99.0))),
+            ("p99_9_ms", Json::Num(self.latency_ms(99.9))),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batching_efficiency", Json::Num(self.batching_efficiency())),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("mean_queue_depth", Json::Num(self.mean_queue_depth)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("total_cycles", Json::Num(self.total_cycles as f64)),
+            ("total_instret", Json::Num(self.total_instret as f64)),
+            ("per_model_served", Json::num_arr(&per_model)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::pipeline::{CompileOptions, CompileSession};
+    use crate::runtime::simrun;
+
+    fn tiny_compiled() -> crate::pipeline::CompiledModel {
+        let g = prepare(model_zoo::mlp(&[8, 4], 1)).unwrap();
+        let mut s = CompileSession::new(CompileOptions::default());
+        s.compile(&g).unwrap()
+    }
+
+    #[test]
+    fn round_trip_serves_and_reports() {
+        let img = Arc::new(ModelImage::from_compiled(&tiny_compiled()).unwrap());
+        let server = Server::start(
+            &[Arc::clone(&img)],
+            ServerOptions { workers: 2, max_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(server.model_count(), 1);
+        let mut tickets = Vec::new();
+        for seed in 0..6u64 {
+            tickets.push(server.submit(0, img.synth_request(0, seed)).unwrap());
+        }
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert_eq!(out.model, 0);
+            assert_eq!(out.outputs.len(), 1);
+            assert!(out.stats.instret > 0);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served, 6);
+        assert_eq!(report.submitted, 6);
+        assert_eq!(report.per_model_served, vec![6]);
+        assert!(report.batches >= 1 && report.batches <= 6);
+        assert_eq!(report.batched_requests, 6);
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.batching_efficiency() >= 1.0);
+    }
+
+    #[test]
+    fn unknown_model_index_is_an_error() {
+        let img = Arc::new(ModelImage::from_compiled(&tiny_compiled()).unwrap());
+        let server = Server::start(
+            &[Arc::clone(&img)],
+            ServerOptions { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(server.submit(1, img.synth_request(0, 0)).is_err());
+        let report = server.shutdown();
+        assert_eq!(report.submitted, 0);
+    }
+
+    #[test]
+    fn served_output_matches_serial_run_model() {
+        let c = tiny_compiled();
+        let img = Arc::new(ModelImage::from_compiled(&c).unwrap());
+        let server = Server::start(
+            &[Arc::clone(&img)],
+            ServerOptions { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let req = img.synth_request(0, 9);
+        let out = server.submit(0, req.clone()).unwrap().wait().unwrap();
+        server.shutdown();
+        let fresh = simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &req.inputs).unwrap();
+        assert_eq!(out.stats, fresh.stats);
+        let a: Vec<u32> = out.outputs[0].data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = fresh.outputs[0].data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -10,15 +10,23 @@
 //! kernel. `CompileSession::verify` and the `xgenc --run`/`--verify` CLI
 //! flags are thin wrappers over this module; `rust/tests/e2e_sim.rs` is the
 //! conformance suite built on it.
+//!
+//! The one-shot entry points (`run_model`, `run_dispatch`, `verify`) are
+//! kept for compatibility and now delegate to the sessioned
+//! [`crate::runtime::engine`] API ([`engine::LoadedModel`]), which
+//! predecodes and stages weights once and reuses the machine across
+//! requests — hold a `LoadedModel` instead of calling these in a loop. The
+//! staging primitives (`stage_weights`, `stage_inputs`, `read_outputs`) and
+//! the synthetic-input / tolerance helpers stay here as the shared
+//! substrate both layers use.
 
 use crate::backend::memplan::ModelAbi;
 use crate::ir::dtype::DType;
-use crate::ir::exec::Executor;
 use crate::ir::graph::Graph;
 use crate::ir::ops::OpKind;
 use crate::ir::tensor::Tensor;
-use crate::isa::encode::encode_all;
 use crate::isa::Instr;
+use crate::runtime::engine;
 use crate::sim::machine::{Machine, RunStats};
 use crate::sim::MachineConfig;
 use crate::util::error::{Error, Result};
@@ -108,6 +116,11 @@ pub fn read_outputs(m: &mut Machine, abi: &ModelAbi) -> Result<Vec<Tensor>> {
 
 /// Execute a compiled model end-to-end on a fresh functional machine:
 /// stage weights + inputs, run the encoded binary, read outputs.
+///
+/// Thin wrapper over the sessioned engine ([`crate::runtime::engine`]):
+/// builds a one-shot [`engine::LoadedModel`] and serves a single request.
+/// Callers that run more than once should hold a `LoadedModel` instead and
+/// amortize the predecode + weight staging.
 pub fn run_model(
     cfg: &MachineConfig,
     g: &Graph,
@@ -115,14 +128,10 @@ pub fn run_model(
     asm: &[Instr],
     inputs: &[Tensor],
 ) -> Result<SimRun> {
-    let words = encode_all(asm)?;
-    let mut m = Machine::new(cfg.clone());
-    m.max_instret = MAX_INSTRET;
-    stage_weights(&mut m, g, abi)?;
-    stage_inputs(&mut m, abi, inputs)?;
-    let stats = m.run(&words)?;
-    let outputs = read_outputs(&mut m, abi)?;
-    Ok(SimRun { outputs, stats })
+    let image = engine::ModelImage::from_parts(cfg, g, abi, asm)?;
+    let mut lm = engine::LoadedModel::from_image(std::sync::Arc::new(image))?;
+    let resp = lm.infer(&engine::InferenceRequest::new(inputs.to_vec()))?;
+    Ok(SimRun { outputs: resp.outputs, stats: resp.stats })
 }
 
 /// Execute a multi-specialization image (dispatch stub + variants, see
@@ -139,33 +148,11 @@ pub fn run_dispatch(
     abi: &ModelAbi,
     inputs: &[Tensor],
 ) -> Result<SimRun> {
-    if !image.configs.iter().any(|c| c.as_slice() == dims) {
-        return Err(Error::Runtime(format!(
-            "shape validation failed: dims {dims:?} match none of {} specializations",
-            image.configs.len()
-        )));
-    }
-    // The dims slot must not overlap any staged DMEM buffer — overlap would
-    // silently corrupt inputs/activations, not fail.
-    let dims_end = image.dims_addr as u64 + 4 * dims.len() as u64;
-    for sym in &abi.symbols {
-        let apart =
-            sym.addr as u64 + sym.bytes as u64 <= image.dims_addr as u64 || dims_end <= sym.addr as u64;
-        if !apart {
-            return Err(Error::Runtime(format!(
-                "dims slot {:#x} overlaps abi symbol '{}'",
-                image.dims_addr, sym.name
-            )));
-        }
-    }
-    let mut m = Machine::new(cfg.clone());
-    m.max_instret = MAX_INSTRET;
-    stage_weights(&mut m, g, abi)?;
-    stage_inputs(&mut m, abi, inputs)?;
-    m.write_u32_slice(image.dims_addr, dims)?;
-    let stats = m.run(&image.words)?;
-    let outputs = read_outputs(&mut m, abi)?;
-    Ok(SimRun { outputs, stats })
+    let mut img = engine::ModelImage::from_dispatch_parts(image, g, abi)?;
+    img.mach = cfg.clone();
+    let mut lm = engine::LoadedModel::from_image(std::sync::Arc::new(img))?;
+    let resp = lm.infer(&engine::InferenceRequest::with_dims(inputs.to_vec(), dims.to_vec()))?;
+    Ok(SimRun { outputs: resp.outputs, stats: resp.stats })
 }
 
 /// Deterministic pseudo-inputs for a graph: a bounded wave in `[-1, 1]` for
@@ -290,43 +277,11 @@ pub fn verify(
     precision: DType,
     predicted_cycles: Option<f64>,
 ) -> Result<VerifyReport> {
-    let run = run_model(cfg, g, abi, asm, inputs)?;
-    let want = Executor::new().run(g, inputs)?;
-    if want.len() != run.outputs.len() {
-        return Err(Error::Sim(format!(
-            "output arity mismatch: machine {} vs reference {}",
-            run.outputs.len(),
-            want.len()
-        )));
-    }
-    let mut max_rel_err = 0.0f32;
-    let mut elems = 0usize;
-    for (got, want_t) in run.outputs.iter().zip(&want) {
-        if got.numel() < want_t.numel() {
-            return Err(Error::Sim(format!(
-                "output size mismatch: machine {} vs reference {}",
-                got.numel(),
-                want_t.numel()
-            )));
-        }
-        for (a, b) in got.data.iter().zip(&want_t.data) {
-            if !a.is_finite() || !b.is_finite() {
-                return Err(Error::Sim(format!("non-finite output: {a} vs {b}")));
-            }
-            max_rel_err = max_rel_err.max((a - b).abs() / b.abs().max(1.0));
-            elems += 1;
-        }
-    }
-    Ok(VerifyReport {
-        model: g.name.clone(),
-        precision,
-        elems,
-        max_rel_err,
-        tol: tolerance(precision),
-        measured_cycles: run.stats.cycles,
-        measured_instret: run.stats.instret,
-        predicted_cycles,
-    })
+    let mut img = engine::ModelImage::from_parts(cfg, g, abi, asm)?;
+    img.precision = precision;
+    img.predicted_cycles = predicted_cycles;
+    let mut lm = engine::LoadedModel::from_image(std::sync::Arc::new(img))?;
+    lm.verify(&engine::InferenceRequest::new(inputs.to_vec()))
 }
 
 #[cfg(test)]

@@ -3,15 +3,20 @@
 //! (temp-file + rename) so a crashed compile never leaves a truncated
 //! artifact for the next run to choke on.
 
+use std::io::Write;
 use std::path::Path;
 
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
-/// Atomically write a JSON document (pretty-printed, trailing newline).
-/// The temp name is unique per process + call, so concurrent writers of the
-/// same artifact cannot interleave inside one temp file: last rename wins
-/// with intact content either way.
+/// Atomically and durably write a JSON document (pretty-printed, trailing
+/// newline). The temp name is unique per process + call, so concurrent
+/// writers of the same artifact cannot interleave inside one temp file:
+/// last rename wins with intact content either way. The temp file is
+/// fsynced before the rename — a crash right after `save_json` returns
+/// cannot surface the *old* name with the *new* (unflushed) content — and
+/// removed if the rename itself fails, so aborted writes don't litter the
+/// artifact directory.
 pub fn save_json(path: &Path, doc: &Json) -> Result<()> {
     static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     if let Some(dir) = path.parent() {
@@ -28,9 +33,19 @@ pub fn save_json(path: &Path, doc: &Json) -> Result<()> {
     let tmp = std::path::PathBuf::from(tmp);
     let mut text = doc.to_string_pretty();
     text.push('\n');
-    std::fs::write(&tmp, text)?;
-    std::fs::rename(&tmp, path)?;
+    if let Err(e) = write_synced(&tmp, &text).and_then(|_| std::fs::rename(&tmp, path)) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(Error::Io(e));
+    }
     Ok(())
+}
+
+/// Create + write + fsync the temp file (the pre-rename half of
+/// [`save_json`]).
+fn write_synced(tmp: &Path, text: &str) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(tmp)?;
+    f.write_all(text.as_bytes())?;
+    f.sync_all()
 }
 
 /// Load and parse a JSON document.
@@ -66,5 +81,40 @@ mod tests {
     #[test]
     fn missing_file_is_an_error() {
         assert!(load_json(&tmp_path("nonexistent.json")).is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_never_leave_a_torn_file() {
+        let path = tmp_path("concurrent.json");
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let path = path.clone();
+                s.spawn(move || {
+                    for i in 0..25u64 {
+                        let doc = Json::obj(vec![
+                            ("writer", Json::Num(t as f64)),
+                            ("iter", Json::Num(i as f64)),
+                            ("payload", Json::num_arr(&[t as f64; 64])),
+                        ]);
+                        save_json(&path, &doc).unwrap();
+                        // Whatever is on disk at any instant parses whole.
+                        load_json(&path).unwrap();
+                    }
+                });
+            }
+        });
+        // No temp litter left behind.
+        let dir = path.parent().unwrap();
+        let stem = path.file_name().unwrap().to_string_lossy().to_string();
+        let leftovers = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let n = e.file_name().to_string_lossy().to_string();
+                n.starts_with(&stem) && n.contains(".tmp.")
+            })
+            .count();
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_file(&path);
     }
 }

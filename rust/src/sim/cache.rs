@@ -178,6 +178,19 @@ impl Hierarchy {
         }
         self.mem_accesses = 0;
     }
+
+    /// Full reset: counters *and* tag/LRU state. A reused machine must
+    /// measure the same cycles as a fresh one, and latency depends on which
+    /// lines are warm — `reset_stats` alone would leave the previous
+    /// request's working set resident.
+    pub fn reset(&mut self) {
+        for l in self.levels.iter_mut() {
+            l.tags.fill(None);
+            l.stamps.fill(0);
+            l.tick = 0;
+        }
+        self.reset_stats();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -320,6 +333,16 @@ mod tests {
         h.access(192);
         assert_eq!(h.access(0), 2, "line 0 resident after fills");
         assert!(h.access(288) > 2, "fourth line must miss");
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let mut h = tiny();
+        let cold = h.access(0x100);
+        assert!(h.access(0x100) < cold, "second access must be warm");
+        h.reset();
+        assert_eq!(h.access(0x100), cold, "reset must evict warm lines");
+        assert_eq!(h.stats()[0].misses, 1, "reset must clear counters too");
     }
 
     #[test]

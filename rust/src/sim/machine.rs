@@ -151,6 +151,33 @@ impl Machine {
         }
     }
 
+    /// Reset architectural state for a fresh run while keeping WMEM — the
+    /// re-stage path for long-lived serving machines: weights staged once
+    /// persist, everything a program can observe or that affects timing goes
+    /// back to power-on state. The first `dmem_zero_extent` bytes of DMEM
+    /// are zeroed (clamped to the DMEM size; pass the memory plan's
+    /// `dmem_peak` to avoid re-zeroing untouched megabytes, or `usize::MAX`
+    /// when the program's footprint is unknown). Registers, vector state,
+    /// cycle/instret counters, per-class counts, and the full cache
+    /// hierarchy (tags + LRU, not just counters) reset so a subsequent
+    /// [`Self::run_predecoded`] is bit-identical — outputs *and* stats — to
+    /// a run on a freshly constructed machine with the same WMEM contents.
+    /// `max_instret` is configuration, not run state: it persists.
+    pub fn reset_keep_wmem(&mut self, dmem_zero_extent: usize) {
+        let n = dmem_zero_extent.min(self.dmem.len());
+        self.dmem[..n].fill(0);
+        self.x = [0; 32];
+        self.x[regs::SP as usize] = self.dmem.len() as i32;
+        self.f = [0.0; 32];
+        self.v.fill(0.0);
+        self.vl = self.lanes;
+        self.lmul = 1;
+        self.cycles = 0;
+        self.instret = 0;
+        self.class_counts = [0; OpClass::COUNT];
+        self.hier.reset();
+    }
+
     // -- memory ------------------------------------------------------------
 
     /// Read-only view of `len` bytes at `addr` (single bounds check).

@@ -1,0 +1,187 @@
+//! Serving-runtime conformance: the batched concurrent server must be
+//! *invisible* in the results — every response bit-identical (outputs and
+//! per-request cycle counts) to a serial `LoadedModel::infer` of the same
+//! request — and backpressure must shed with errors, never wrong answers.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::runtime::engine::{LoadedModel, ModelImage};
+use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions};
+use xgenc::runtime::server::{Server, ServerOptions};
+use xgenc::runtime::simrun;
+
+/// N workers x M mixed requests (FP32 + INT8 + dynamic-shape): every
+/// response — all sampled — must match both the fresh-machine serial
+/// reference and a *reused* serial `LoadedModel`, bit for bit, stats
+/// included.
+#[test]
+fn concurrent_serving_is_bit_identical_to_serial() {
+    let fleet = DemoFleet::build().unwrap();
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions { workers: 4, max_batch: 4, queue_depth: 64, deadline: None },
+    )
+    .unwrap();
+    let requests = 40u64;
+    let report = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests, rate: 0.0, seed: 11, sample_every: 1, duration: None },
+    );
+    let sreport = server.shutdown();
+    assert_eq!(report.ok, requests, "{}", report.summary());
+    assert_eq!(report.failed, 0);
+    assert_eq!(sreport.served, requests);
+    assert_eq!(report.samples.len(), requests as usize);
+    // The mix actually exercised more than one model.
+    assert!(
+        sreport.per_model_served.iter().filter(|&&n| n > 0).count() >= 2,
+        "mix collapsed onto one model: {:?}",
+        sreport.per_model_served
+    );
+
+    // Serial reused-machine engines, one per model, fed the same requests.
+    let mut serial: Vec<LoadedModel> = fleet
+        .images
+        .iter()
+        .map(|img| LoadedModel::from_image(Arc::clone(img)).unwrap())
+        .collect();
+    for s in &report.samples {
+        // Fresh-machine reference (run_model / run_dispatch).
+        assert!(
+            fleet.sample_matches(s).unwrap(),
+            "served (model {}, spec {}, seed {}) diverged from the fresh-machine reference",
+            s.model,
+            s.spec,
+            s.seed
+        );
+        // Reused-machine serial reference.
+        let req = fleet.images[s.model].synth_request(s.spec, s.seed);
+        let resp = serial[s.model].infer(&req).unwrap();
+        let bits: Vec<Vec<u32>> = resp
+            .outputs
+            .iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(bits, s.output_bits, "outputs diverged from serial reused LoadedModel");
+        assert_eq!(resp.stats, s.stats, "cycles diverged from serial reused LoadedModel");
+    }
+}
+
+/// A full queue sheds synchronously with an error; every *accepted*
+/// request still returns the correct answer.
+#[test]
+fn bounded_queue_sheds_but_never_corrupts() {
+    // A model slow enough (in simulated work) that one in-flight request
+    // outlasts the whole submit burst.
+    let g = prepare(model_zoo::mlp(&[256, 128, 64, 10], 1)).unwrap();
+    let c = CompileSession::new(CompileOptions::default()).compile(&g).unwrap();
+    let img = Arc::new(ModelImage::from_compiled(&c).unwrap());
+    let server = Server::start(
+        &[Arc::clone(&img)],
+        ServerOptions { workers: 1, max_batch: 1, queue_depth: 2, deadline: None },
+    )
+    .unwrap();
+
+    let burst = 50u64;
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for seed in 0..burst {
+        match server.submit(0, img.synth_request(0, seed)) {
+            Ok(ticket) => accepted.push((seed, ticket)),
+            Err(e) => {
+                assert!(e.to_string().contains("queue full"), "unexpected shed error: {e}");
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "a 50-deep burst into a 2-deep queue must shed");
+    assert!(!accepted.is_empty(), "the queue accepted nothing");
+
+    let accepted_n = accepted.len() as u64;
+    for (seed, ticket) in accepted {
+        let out = ticket.wait().expect("accepted requests must be served");
+        let inputs = simrun::synth_inputs(&c.graph, seed);
+        let want = simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &inputs).unwrap();
+        let got: Vec<Vec<u32>> = out
+            .outputs
+            .iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let exp: Vec<Vec<u32>> = want
+            .outputs
+            .iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(got, exp, "accepted request (seed {seed}) served a wrong answer");
+        assert_eq!(out.stats, want.stats);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.shed_queue_full, shed);
+    assert_eq!(report.served, accepted_n);
+    assert_eq!(report.submitted, accepted_n);
+}
+
+/// With a zero deadline every dequeued request is past its budget: all are
+/// shed with a deadline error, none served — a late error, never a wrong
+/// or stale answer.
+#[test]
+fn deadline_sheds_with_error_not_wrong_answer() {
+    let fleet = DemoFleet::build().unwrap();
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions {
+            workers: 2,
+            max_batch: 4,
+            queue_depth: 64,
+            deadline: Some(Duration::ZERO),
+        },
+    )
+    .unwrap();
+    let mut tickets = Vec::new();
+    for seed in 0..6u64 {
+        tickets.push(server.submit(0, fleet.images[0].synth_request(0, seed)).unwrap());
+    }
+    for t in tickets {
+        let err = t.wait().expect_err("zero deadline must shed every request");
+        assert!(err.to_string().contains("deadline"), "unexpected error: {err}");
+    }
+    let report = server.shutdown();
+    assert_eq!(report.served, 0);
+    assert_eq!(report.shed_deadline, 6);
+}
+
+/// Requests that fail shape validation (dims on a static model) come back
+/// as per-ticket errors; the server keeps serving.
+#[test]
+fn invalid_request_errors_do_not_poison_the_server() {
+    let fleet = DemoFleet::build().unwrap();
+    let opts = ServerOptions { workers: 1, ..Default::default() };
+    let server = Server::start(&fleet.images, opts).unwrap();
+    // Model 0 is static: a dims-carrying request must fail.
+    let mut bad = fleet.images[0].synth_request(0, 1);
+    bad.dims = Some(vec![1]);
+    let err = server.submit(0, bad).unwrap().wait().expect_err("static model given dims");
+    assert!(err.to_string().contains("static"), "{err}");
+    // The same worker then serves a valid request correctly.
+    let good = fleet.images[0].synth_request(0, 2);
+    let out = server.submit(0, good).unwrap().wait().unwrap();
+    server.shutdown();
+    let want = fleet.reference(0, 0, 2).unwrap();
+    let got: Vec<Vec<u32>> = out
+        .outputs
+        .iter()
+        .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    let exp: Vec<Vec<u32>> = want
+        .outputs
+        .iter()
+        .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    assert_eq!(got, exp);
+    assert_eq!(out.stats, want.stats);
+}
