@@ -3,6 +3,13 @@
 //! the reference executor, and its machine-measured cycles are reported next
 //! to the analytic cost-model prediction — emitted to `BENCH_sim_cycles.json`
 //! so CI can track the unified cost model's whole-model calibration drift.
+//!
+//! Each model is compiled twice — with deep epilogue fusion (the default)
+//! and with `CompileOptions::fuse_epilogue = false` (the un-fused baseline)
+//! — and both binaries are differentially verified. The machine-measured
+//! cycle delta goes into the artifact, and the conv-heavy models
+//! (resnet_cifar, mobilenet_cifar) must show a strict fused cycle reduction.
+//! The scheduled DMEM peak must never exceed the unscheduled baseline.
 
 use xgenc::frontend::{model_zoo, prepare};
 use xgenc::ir::DType;
@@ -10,6 +17,10 @@ use xgenc::pipeline::{CompileOptions, CompileSession};
 use xgenc::runtime::store;
 use xgenc::util::json::Json;
 use xgenc::util::table::{f, Table};
+
+/// Models where epilogue fusion must strictly reduce machine-measured
+/// cycles (conv-heavy: every conv carries a BN-folded scale + ReLU chain).
+const MUST_IMPROVE: [&str; 2] = ["resnet_cifar", "mobilenet_cifar"];
 
 fn main() {
     let cases: Vec<(&str, xgenc::ir::Graph, DType)> = vec![
@@ -21,19 +32,44 @@ fn main() {
         ("resnet_cifar-int8", model_zoo::resnet_cifar(1), DType::I8),
     ];
     let mut t = Table::new(
-        "Simulator conformance: measured vs predicted cycles",
-        &["Model", "Precision", "Max rel err", "Tol", "Measured", "Predicted", "Ratio"],
+        "Simulator conformance: measured vs predicted cycles, fused vs un-fused epilogues",
+        &["Model", "Precision", "Max rel err", "Tol", "Fused", "Unfused", "Speedup", "Predicted", "Ratio"],
     );
     let mut rows = Vec::new();
+    let mut improved = 0usize;
     for (name, graph, precision) in cases {
         let g = prepare(graph).unwrap();
-        let mut session = CompileSession::new(CompileOptions {
-            precision,
-            ..Default::default()
-        });
-        let c = session.compile(&g).unwrap();
-        let r = session.verify_auto(&c).unwrap();
-        assert!(r.passed(), "{name}: {}", r.summary());
+        let mut run = |fuse: bool| {
+            let mut session = CompileSession::new(CompileOptions {
+                precision,
+                fuse_epilogue: fuse,
+                ..Default::default()
+            });
+            let c = session.compile(&g).unwrap();
+            let r = session.verify_auto(&c).unwrap();
+            assert!(r.passed(), "{name} (fuse={fuse}): {}", r.summary());
+            (c, r)
+        };
+        let (c, r) = run(true);
+        let (cu, ru) = run(false);
+        assert!(
+            c.plan.dmem_peak <= c.plan.dmem_peak_unscheduled,
+            "{name}: scheduled DMEM peak {} above unscheduled {}",
+            c.plan.dmem_peak,
+            c.plan.dmem_peak_unscheduled
+        );
+        let speedup = ru.measured_cycles as f64 / r.measured_cycles.max(1) as f64;
+        if MUST_IMPROVE.contains(&name) {
+            assert!(
+                r.measured_cycles < ru.measured_cycles,
+                "{name}: fused {} cycles not below un-fused {}",
+                r.measured_cycles,
+                ru.measured_cycles
+            );
+        }
+        if r.measured_cycles < ru.measured_cycles {
+            improved += 1;
+        }
         let predicted = r.predicted_cycles.unwrap();
         let ratio = r.cycle_ratio().unwrap();
         t.row(&[
@@ -42,6 +78,8 @@ fn main() {
             format!("{:.2e}", r.max_rel_err),
             format!("{:.0e}", r.tol),
             format!("{}", r.measured_cycles),
+            format!("{}", ru.measured_cycles),
+            f(speedup, 3),
             format!("{predicted:.0}"),
             f(ratio, 2),
         ]);
@@ -51,6 +89,12 @@ fn main() {
             ("max_rel_err", Json::Num(r.max_rel_err as f64)),
             ("tolerance", Json::Num(r.tol as f64)),
             ("measured_cycles", Json::Num(r.measured_cycles as f64)),
+            ("unfused_cycles", Json::Num(ru.measured_cycles as f64)),
+            ("fused_speedup", Json::Num(speedup)),
+            ("unfused_max_rel_err", Json::Num(ru.max_rel_err as f64)),
+            ("dmem_peak", Json::Num(c.plan.dmem_peak as f64)),
+            ("dmem_peak_unscheduled", Json::Num(c.plan.dmem_peak_unscheduled as f64)),
+            ("unfused_dmem_peak", Json::Num(cu.plan.dmem_peak as f64)),
             ("predicted_cycles", Json::Num(predicted)),
             ("measured_over_predicted", Json::Num(ratio)),
             ("instret", Json::Num(r.measured_instret as f64)),
@@ -66,5 +110,8 @@ fn main() {
     let out = std::path::Path::new("BENCH_sim_cycles.json");
     store::save_json(out, &report).unwrap();
     println!("wrote {}", out.display());
+    println!(
+        "fused epilogue cycle check OK: {improved}/{n} model configs faster fused (conv-heavy strictly)"
+    );
     println!("sim conformance OK: {n} models verified on the functional machine");
 }

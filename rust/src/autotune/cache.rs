@@ -167,6 +167,7 @@ impl TuneCache {
                     ("tile_k", Json::Num(e.config.tile_k as f64)),
                     ("unroll", Json::Num(e.config.unroll as f64)),
                     ("lmul", Json::Num(e.config.lmul as f64)),
+                    ("fuse", Json::Num(if e.config.fuse_epilogue { 1.0 } else { 0.0 })),
                     ("log_cycles", Json::Num(e.log_cycles)),
                     ("trials_used", Json::Num(e.trials_used as f64)),
                     ("memo_hits", Json::Num(e.memo_hits as f64)),
@@ -209,6 +210,9 @@ impl TuneCache {
                     tile_k: usize_field("tile_k")?,
                     unroll: usize_field("unroll")?,
                     lmul: usize_field("lmul")?,
+                    // Caches written before the fuse dimension existed carry
+                    // no "fuse" field; treat them as fused (the old behavior).
+                    fuse_epilogue: e.get("fuse").as_i64().map(|v| v != 0).unwrap_or(true),
                 },
                 log_cycles: field("log_cycles")?,
                 trials_used: usize_field("trials_used")?,

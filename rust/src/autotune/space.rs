@@ -23,7 +23,8 @@ pub struct ParameterSpace {
 
 impl ParameterSpace {
     /// The default kernel-schedule space used for the paper's experiments:
-    /// tile_m/n/k ∈ {8..256}, unroll ∈ {1,2,4,8}, lmul ∈ {1,2,4,8}.
+    /// tile_m/n/k ∈ {8..256}, unroll ∈ {1,2,4,8}, lmul ∈ {1,2,4,8}, plus the
+    /// per-site epilogue-fusion switch (fuse ∈ {off, on}).
     pub fn kernel_default() -> ParameterSpace {
         ParameterSpace {
             params: vec![
@@ -32,6 +33,7 @@ impl ParameterSpace {
                 Param { name: "tile_k", choices: vec![8, 16, 32, 64, 128] },
                 Param { name: "unroll", choices: vec![1, 2, 4, 8] },
                 Param { name: "lmul", choices: vec![1, 2, 4, 8] },
+                Param { name: "fuse", choices: vec![0, 1] },
             ],
         }
     }
@@ -109,6 +111,7 @@ impl ParameterSpace {
                 "tile_k" => kc.tile_k = v,
                 "unroll" => kc.unroll = v,
                 "lmul" => kc.lmul = v,
+                "fuse" => kc.fuse_epilogue = v != 0,
                 _ => {}
             }
         }
@@ -132,7 +135,7 @@ mod tests {
     #[test]
     fn size_and_enumeration_agree() {
         let s = ParameterSpace::kernel_default();
-        assert_eq!(s.size(), 6 * 6 * 5 * 4 * 4);
+        assert_eq!(s.size(), 6 * 6 * 5 * 4 * 4 * 2);
         assert_eq!(s.enumerate().count(), s.size());
         // All enumerated configs valid + distinct.
         let set: std::collections::BTreeSet<Config> = s.enumerate().collect();
@@ -161,12 +164,16 @@ mod tests {
     #[test]
     fn decode_maps_choices() {
         let s = ParameterSpace::kernel_default();
-        let cfg = vec![2, 5, 1, 3, 0];
+        let cfg = vec![2, 5, 1, 3, 0, 0];
         let kc = s.decode(&cfg);
         assert_eq!(kc.tile_m, 32);
         assert_eq!(kc.tile_n, 256);
         assert_eq!(kc.tile_k, 16);
         assert_eq!(kc.unroll, 8);
         assert_eq!(kc.lmul, 1);
+        assert!(!kc.fuse_epilogue);
+        let cfg2 = vec![0, 0, 0, 0, 0, 1];
+        let kc2 = s.decode(&cfg2);
+        assert!(kc2.fuse_epilogue);
     }
 }

@@ -109,8 +109,15 @@ pub struct MemPlan {
     pub wmem: BTreeMap<TensorId, Placement>,
     /// Scratch region per node (DMEM).
     pub scratch: BTreeMap<NodeId, Placement>,
-    /// Peak DMEM usage in bytes.
+    /// Peak DMEM usage in bytes (under the node order the plan was built
+    /// with).
     pub dmem_peak: u32,
+    /// Peak DMEM usage the *original* (unscheduled) node order would have
+    /// needed. [`plan`] initializes it to `dmem_peak`; the compile pipeline
+    /// overwrites it with the pre-reorder baseline when the memory-aware
+    /// scheduler changed the order, so `dmem_peak <= dmem_peak_unscheduled`
+    /// always holds (the scheduler keeps whichever order is lower).
+    pub dmem_peak_unscheduled: u32,
     /// Total WMEM bytes (after within-model dedup) at f32-wide staging —
     /// the functional-simulation layout every emitted address strides by.
     pub wmem_used: u32,
@@ -291,8 +298,10 @@ fn align(x: u32) -> u32 {
 
 /// Bytes a tensor occupies in DMEM (activations are stored at f32 width in
 /// the functional simulator; quantized storage width affects WMEM and the
-/// PPA model, not the simulation layout).
-fn act_bytes(g: &Graph, t: TensorId) -> Result<u32> {
+/// PPA model, not the simulation layout). Also the size model the
+/// memory-aware node scheduler ([`super::sched::memory_aware_order`]) scores
+/// candidate orders with.
+pub(crate) fn act_bytes(g: &Graph, t: TensorId) -> Result<u32> {
     let shape = g.shape_of(t)?;
     Ok(align((shape.numel_upper() * 4) as u32).max(ALIGN))
 }
@@ -492,6 +501,7 @@ pub fn plan(g: &Graph, dmem_capacity: u32, wmem_capacity: u32) -> Result<MemPlan
         }
     }
     plan.dmem_peak = fl.peak;
+    plan.dmem_peak_unscheduled = fl.peak;
     if plan.dmem_peak > dmem_capacity {
         return Err(Error::Backend(format!(
             "DMEM overflow: peak {} bytes, capacity {} — reduce batch or quantize activations",

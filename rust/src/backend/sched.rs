@@ -1,14 +1,140 @@
-//! Instruction scheduler: list scheduling within basic blocks to separate
-//! producers from consumers (the paper's "efficient instruction scheduling
-//! (reduced pipeline stalls)", §4.4).
+//! Schedulers at two levels.
 //!
-//! Conservative dependence model: register RAW/WAR/WAW, all memory ops
-//! ordered among themselves, vector state (`vsetvli`) is a barrier, control
-//! flow ends a block. Correctness is re-checked by running scheduled kernels
-//! on the functional machine.
+//! **Graph level** ([`memory_aware_order`]): liveness-aware topological node
+//! ordering that greedily minimizes peak live DMEM. Invariants: the result
+//! is always a valid topological order of the data dependences; graph inputs
+//! and outputs are pinned live for the whole program (a buffer is considered
+//! freed only once its *last* internal consumer has run and it is not a graph
+//! output); the compile pipeline only adopts the order when the memory
+//! planner's measured peak is no worse than the original order's, so
+//! `MemPlan::dmem_peak <= MemPlan::dmem_peak_unscheduled` always holds.
+//!
+//! **Instruction level** ([`schedule`]): list scheduling within basic blocks
+//! to separate producers from consumers (the paper's "efficient instruction
+//! scheduling (reduced pipeline stalls)", §4.4). Conservative dependence
+//! model: register RAW/WAR/WAW, all memory ops ordered among themselves,
+//! vector state (`vsetvli`) is a barrier, control flow ends a block.
+//! Correctness is re-checked by running scheduled kernels on the functional
+//! machine.
 
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::backend::memplan;
+use crate::ir::graph::{Graph, NodeId, TensorId};
 use crate::isa::encode::{format_of, Format};
 use crate::isa::{Instr, Op, OpClass};
+use crate::util::error::{Error, Result};
+
+/// Liveness-aware topological order over the graph's nodes, chosen to keep
+/// the peak number of live DMEM bytes low: among ready nodes, greedily pick
+/// the one with the smallest `allocated - freed` byte delta (ties broken by
+/// original node index, so the order is deterministic and degenerates to the
+/// original order on chains).
+///
+/// A node *frees* an input buffer when it is that buffer's last remaining
+/// consumer and the buffer is not a graph input/output (those stay live for
+/// the whole program — the output-aware liveness rule the fusion passes also
+/// observe). View-op outputs alias their input and allocate nothing.
+///
+/// This is a scoring heuristic: the authoritative peak is whatever
+/// [`memplan::plan`] measures for the resulting order, and the compile
+/// pipeline keeps the original order whenever it measures no worse.
+pub fn memory_aware_order(g: &Graph) -> Result<Vec<NodeId>> {
+    let n = g.nodes.len();
+    let mut producer: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for (i, node) in g.nodes.iter().enumerate() {
+        for t in &node.outputs {
+            producer.insert(*t, i);
+        }
+    }
+    // Node dependence edges via tensor producers.
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        let mut preds: BTreeSet<usize> = BTreeSet::new();
+        for t in &node.inputs {
+            if let Some(&p) = producer.get(t) {
+                if p != i {
+                    preds.insert(p);
+                }
+            }
+        }
+        indeg[i] = preds.len();
+        for p in preds {
+            succs[p].push(i);
+        }
+    }
+    // Remaining internal consumers per tensor; graph inputs/outputs pinned.
+    let mut uses: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for node in &g.nodes {
+        for t in &node.inputs {
+            *uses.entry(*t).or_insert(0) += 1;
+        }
+    }
+    let pinned: BTreeSet<TensorId> = g.inputs.iter().chain(&g.outputs).copied().collect();
+    let bytes = |t: TensorId| -> i64 { memplan::act_bytes(g, t).unwrap_or(memplan::ALIGN) as i64 };
+
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order: Vec<NodeId> = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        // Score each ready node: DMEM delta if run next.
+        let mut best: Option<(i64, usize)> = None;
+        for &i in &ready {
+            let node = &g.nodes[i];
+            let alloc: i64 = if memplan::is_view_op(node.op) {
+                0
+            } else {
+                node.outputs.iter().map(|&t| bytes(t)).sum()
+            };
+            let mut freed: i64 = 0;
+            let mut seen: BTreeSet<TensorId> = BTreeSet::new();
+            for &t in &node.inputs {
+                if !seen.insert(t) {
+                    continue;
+                }
+                let mine = node.inputs.iter().filter(|&&x| x == t).count();
+                if uses.get(&t).copied().unwrap_or(0) == mine && !pinned.contains(&t) {
+                    freed += bytes(t);
+                }
+            }
+            let key = (alloc - freed, i);
+            if best.map(|b| key < b).unwrap_or(true) {
+                best = Some(key);
+            }
+        }
+        let (_, pick) = best.expect("ready set non-empty");
+        ready.retain(|&i| i != pick);
+        order.push(NodeId(pick));
+        for &t in &g.nodes[pick].inputs {
+            if let Some(u) = uses.get_mut(&t) {
+                *u = u.saturating_sub(1);
+            }
+        }
+        for &s in &succs[pick] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    if order.len() != n {
+        return Err(Error::Backend("memory_aware_order: graph has a cycle".into()));
+    }
+    Ok(order)
+}
+
+/// Physically permute `g.nodes` into `order` (which must be a permutation of
+/// all node ids). Kahn-style `topo_order` scans in index order, so after this
+/// every downstream consumer (planner, tuner, codegen) adopts the schedule.
+pub fn apply_node_order(g: &mut Graph, order: &[NodeId]) {
+    debug_assert_eq!(order.len(), g.nodes.len());
+    let nodes = std::mem::take(&mut g.nodes);
+    let mut slots: Vec<Option<crate::ir::graph::Node>> = nodes.into_iter().map(Some).collect();
+    g.nodes = order
+        .iter()
+        .map(|nid| slots[nid.0].take().expect("order must be a permutation"))
+        .collect();
+}
 
 /// Result latency (cycles until the destination is ready).
 fn latency(op: Op) -> u64 {
@@ -297,6 +423,90 @@ mod tests {
                 let want: f32 = (0..kk).map(|x| a[i * kk + x] * b[x * nn + j]).sum();
                 assert!((got[i * nn + j] - want).abs() < 1e-3);
             }
+        }
+    }
+
+    #[test]
+    fn memory_aware_order_is_topological() {
+        use crate::frontend::{model_zoo, prepare};
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let order = memory_aware_order(&g).unwrap();
+        assert_eq!(order.len(), g.nodes.len());
+        let mut pos = vec![0usize; g.nodes.len()];
+        for (p, nid) in order.iter().enumerate() {
+            pos[nid.0] = p;
+        }
+        let mut producer = std::collections::BTreeMap::new();
+        for (i, node) in g.nodes.iter().enumerate() {
+            for t in &node.outputs {
+                producer.insert(*t, i);
+            }
+        }
+        for (i, node) in g.nodes.iter().enumerate() {
+            for t in &node.inputs {
+                if let Some(&p) = producer.get(t) {
+                    if p != i {
+                        assert!(pos[p] < pos[i], "node {i} scheduled before its producer {p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_aware_order_shrinks_fanout_peak() {
+        // Four wide branches reduced pairwise: the original breadth-first
+        // order holds all four branch buffers live at once; the memory-aware
+        // order interleaves the reductions and frees two of them early.
+        use crate::backend::memplan;
+        use crate::frontend::prepare;
+        use crate::ir::graph::Graph;
+        use crate::ir::ops::{Attrs, OpKind};
+        use crate::ir::shape::Shape;
+        let mut g = Graph::new("fanout");
+        let x = g.input("x", Shape::fixed(&[1, 1024]), crate::ir::DType::F32);
+        let a1 = g.node(OpKind::Relu, "a1", &[x], Attrs::new());
+        let a2 = g.node(OpKind::Sigmoid, "a2", &[x], Attrs::new());
+        let a3 = g.node(OpKind::Abs, "a3", &[x], Attrs::new());
+        let a4 = g.node(OpKind::Neg, "a4", &[x], Attrs::new());
+        let s1 = g.node(OpKind::Add, "s1", &[a1, a2], Attrs::new());
+        let s2 = g.node(OpKind::Add, "s2", &[a3, a4], Attrs::new());
+        let out = g.node(OpKind::Add, "out", &[s1, s2], Attrs::new());
+        g.outputs.push(out);
+        let g = prepare(g).unwrap();
+        let p0 = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let mut g2 = g.clone();
+        let order = memory_aware_order(&g2).unwrap();
+        apply_node_order(&mut g2, &order);
+        let p1 = memplan::plan(&g2, 1 << 30, 2 << 30).unwrap();
+        assert!(
+            p1.dmem_peak < p0.dmem_peak,
+            "reorder did not shrink peak: {} vs {}",
+            p1.dmem_peak,
+            p0.dmem_peak
+        );
+    }
+
+    #[test]
+    fn memory_aware_order_zoo_models_never_worse() {
+        // The pipeline guarantee: the adopted order's measured peak is never
+        // above the unscheduled baseline (the pipeline falls back to the
+        // original order otherwise — mirrored here by taking the min).
+        use crate::backend::memplan;
+        use crate::frontend::{model_zoo, prepare};
+        for g in [
+            prepare(model_zoo::resnet_cifar(1)).unwrap(),
+            prepare(model_zoo::mobilenet_cifar(1)).unwrap(),
+        ] {
+            let p0 = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+            let mut g2 = g.clone();
+            let order = memory_aware_order(&g2).unwrap();
+            apply_node_order(&mut g2, &order);
+            let p1 = memplan::plan(&g2, 1 << 30, 2 << 30).unwrap();
+            let adopted = p1.dmem_peak.min(p0.dmem_peak);
+            assert!(adopted <= p0.dmem_peak);
+            // Reordering must not lose or duplicate nodes.
+            assert_eq!(g2.nodes.len(), g.nodes.len());
         }
     }
 

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use crate::backend::memplan::{is_view_op, MemPlan, ModelAbi};
 use crate::codegen::{auto_lmul, auto_unroll, kernels, kernels_attn, kernels_nn, KernelArtifact, KernelConfig};
 use crate::ir::dtype::DType;
+use crate::ir::epilogue::{self, EpiOp};
 use crate::ir::graph::{Graph, Node, NodeId};
 use crate::ir::ops::{attr_f64, attr_int, attr_ints, OpKind};
 use crate::isa::Instr;
@@ -102,6 +103,93 @@ fn numel(dims: &[usize]) -> usize {
     dims.iter().product::<usize>().max(1)
 }
 
+/// Resolve a node's fused-epilogue attribute into kernel [`kernels::EpiStep`]s:
+/// float parameters become IEEE-754 bit patterns, tensor operands become the
+/// memory plan's addresses.
+fn resolve_epi(node: &Node, plan: &MemPlan) -> Result<Vec<kernels::EpiStep>> {
+    epilogue::decode(&node.attrs)
+        .into_iter()
+        .map(|op| {
+            Ok(match op {
+                EpiOp::Relu => kernels::EpiStep::Relu,
+                EpiOp::Relu6 => kernels::EpiStep::Relu6,
+                EpiOp::LeakyRelu { alpha } => kernels::EpiStep::LeakyRelu { alpha_bits: alpha.to_bits() },
+                EpiOp::Scale { mul, add } => {
+                    kernels::EpiStep::Scale { mul_bits: mul.to_bits(), add_bits: add.to_bits() }
+                }
+                EpiOp::AddTensor { input } => {
+                    let tid = *node.inputs.get(input).ok_or_else(|| {
+                        Error::Codegen(format!(
+                            "node '{}': epilogue AddTensor operand index {} out of range",
+                            node.name, input
+                        ))
+                    })?;
+                    kernels::EpiStep::AddTensor { addr: plan.addr_of(tid)? }
+                }
+            })
+        })
+        .collect()
+}
+
+/// Un-fused epilogue lowering: apply each step as a standalone elementwise
+/// kernel in-place over the producer's output buffer. This is the baseline
+/// the tuner's `fuse_epilogue = false` arm measures, and the fallback when a
+/// chain exceeds [`kernels::MAX_FUSED_EPI`].
+fn lower_epi_unfused(
+    mach: &MachineConfig,
+    kc: KernelConfig,
+    node: &Node,
+    plan: &MemPlan,
+    len: usize,
+    out_addr: u32,
+    precision: DType,
+    arts: &mut Vec<KernelArtifact>,
+) -> Result<()> {
+    for op in epilogue::decode(&node.attrs) {
+        let art = match op {
+            EpiOp::Relu => {
+                kernels::elementwise_unary(mach, kc, kernels::UnaryKind::Relu, len, out_addr, out_addr, precision)?
+            }
+            EpiOp::Relu6 => {
+                kernels::elementwise_unary(mach, kc, kernels::UnaryKind::Relu6, len, out_addr, out_addr, precision)?
+            }
+            EpiOp::LeakyRelu { alpha } => kernels::elementwise_unary(
+                mach,
+                kc,
+                kernels::UnaryKind::LeakyRelu { alpha_bits: alpha.to_bits() },
+                len,
+                out_addr,
+                out_addr,
+                precision,
+            )?,
+            EpiOp::Scale { mul, add } => kernels::elementwise_unary(
+                mach,
+                kc,
+                kernels::UnaryKind::Scale { mul_bits: mul.to_bits(), add_bits: add.to_bits() },
+                len,
+                out_addr,
+                out_addr,
+                precision,
+            )?,
+            EpiOp::AddTensor { input } => {
+                let a = plan.addr_of(node.inputs[input])?;
+                kernels::elementwise_binary(
+                    mach,
+                    kc,
+                    kernels::BinKind::Add,
+                    len,
+                    out_addr,
+                    a,
+                    out_addr,
+                    precision,
+                )?
+            }
+        };
+        arts.push(art);
+    }
+    Ok(())
+}
+
 /// Lower one node to one-or-more kernel artifacts.
 #[allow(clippy::too_many_arguments)]
 fn lower_node(
@@ -135,10 +223,22 @@ fn lower_node(
                     b.len()
                 )));
             }
-            let bias = if node.inputs.len() > 2 { Some(addr(2)?) } else { None };
-            vec![kernels::matmul_bias(
-                mach, kc, m, n, k, addr(0)?, addr(1)?, bias, out_addr, precision,
-            )?]
+            // Epilogue operands appended by FuseEpilogue sit after the base
+            // inputs, so bias presence is judged on the base-input count.
+            let base_n = epilogue::base_inputs(&node.attrs, node.inputs.len());
+            let bias = if base_n > 2 { Some(addr(2)?) } else { None };
+            let epi = resolve_epi(node, plan)?;
+            if kc.fuse_epilogue && epi.len() <= kernels::MAX_FUSED_EPI {
+                vec![kernels::matmul_bias(
+                    mach, kc, m, n, k, addr(0)?, addr(1)?, bias, out_addr, &epi, precision,
+                )?]
+            } else {
+                let mut arts = vec![kernels::matmul_bias(
+                    mach, kc, m, n, k, addr(0)?, addr(1)?, bias, out_addr, &[], precision,
+                )?];
+                lower_epi_unfused(mach, kc, node, plan, m * n, out_addr, precision, &mut arts)?;
+                arts
+            }
         }
         OpKind::Conv | OpKind::DepthwiseConv | OpKind::ConvInteger | OpKind::QLinearConv => {
             let x = in_dims(0)?;
@@ -158,8 +258,17 @@ fn lower_node(
                 pad: pads[0] as usize,
                 groups,
             };
-            let bias = if node.inputs.len() > 2 { Some(addr(2)?) } else { None };
-            vec![kernels_nn::conv2d(mach, kc, d, addr(0)?, addr(1)?, bias, out_addr, precision)?]
+            let base_n = epilogue::base_inputs(&node.attrs, node.inputs.len());
+            let bias = if base_n > 2 { Some(addr(2)?) } else { None };
+            let epi = resolve_epi(node, plan)?;
+            if kc.fuse_epilogue && epi.len() <= kernels::MAX_FUSED_EPI {
+                vec![kernels_nn::conv2d(mach, kc, d, addr(0)?, addr(1)?, bias, out_addr, &epi, precision)?]
+            } else {
+                let mut arts =
+                    vec![kernels_nn::conv2d(mach, kc, d, addr(0)?, addr(1)?, bias, out_addr, &[], precision)?];
+                lower_epi_unfused(mach, kc, node, plan, numel(&out_dims), out_addr, precision, &mut arts)?;
+                arts
+            }
         }
         OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Min | OpKind::Max
         | OpKind::QLinearAdd => {
@@ -199,6 +308,18 @@ fn lower_node(
         OpKind::Relu6 => vec![kernels::elementwise_unary(
             mach, kc, kernels::UnaryKind::Relu6, numel(&out_dims), addr(0)?, out_addr, precision,
         )?],
+        OpKind::LeakyRelu => {
+            let alpha = crate::ir::ops::attr_f64(&node.attrs, "alpha", 0.01) as f32;
+            vec![kernels::elementwise_unary(
+                mach,
+                kc,
+                kernels::UnaryKind::LeakyRelu { alpha_bits: alpha.to_bits() },
+                numel(&out_dims),
+                addr(0)?,
+                out_addr,
+                precision,
+            )?]
+        }
         OpKind::Sigmoid => vec![kernels::elementwise_unary(
             mach, kc, kernels::UnaryKind::Sigmoid, numel(&out_dims), addr(0)?, out_addr, precision,
         )?],
@@ -539,6 +660,81 @@ mod tests {
         let r = simrun::verify(&mach, &g, &prog.abi, &prog.asm, &inputs, DType::I4, None)
             .unwrap();
         assert!(r.passed(), "{}", r.summary());
+    }
+
+    #[test]
+    fn fused_gemm_epilogue_matches_oracle_fused_and_defused() {
+        use crate::ir::ops::Attrs;
+        use crate::ir::shape::Shape;
+        use crate::ir::tensor::Initializer;
+        // Gemm(+bias) -> Mul(scalar) -> Relu: after FuseEpilogue one node
+        // remains; the fused in-loop lowering and the per-site de-fused
+        // lowering (tuner chose fuse_epilogue = false) must both match the
+        // reference executor.
+        let mut g = Graph::new("epi_gemm");
+        let x = g.input("x", Shape::fixed(&[4, 8]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[8, 6], 3, 0.3));
+        let b = g.init(Initializer::lazy("b", &[6], 4, 0.1));
+        let mm = g.node(OpKind::Gemm, "mm", &[x, w, b], Attrs::new());
+        let s = g.init(Initializer::eager("s", &[1], vec![0.25]));
+        let sc = g.node(OpKind::Mul, "sc", &[mm, s], Attrs::new());
+        let r = g.node(OpKind::Relu, "r", &[sc], Attrs::new());
+        g.outputs.push(r);
+        let mut g = prepare(g).unwrap();
+        crate::opt::optimize(&mut g).unwrap();
+        assert_eq!(g.nodes.len(), 1, "chain should fuse into the Gemm");
+        assert!(!crate::ir::epilogue::decode(&g.nodes[0].attrs).is_empty());
+
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let inputs = simrun::synth_inputs(&g, 11);
+        let fused = lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        assert!(
+            fused.kernels.iter().any(|(_, k)| k.name.contains("_epi")),
+            "no fused-epilogue kernel emitted"
+        );
+        let rf = simrun::verify(&mach, &g, &fused.abi, &fused.asm, &inputs, DType::F32, None).unwrap();
+        assert!(rf.passed(), "fused: {}", rf.summary());
+
+        let mut sched = Schedules::new();
+        for nid in g.topo_order().unwrap() {
+            sched.insert(nid, KernelConfig { fuse_epilogue: false, ..Default::default() });
+        }
+        let defused = lower_graph(&g, &mach, &plan, &sched, DType::F32).unwrap();
+        assert!(defused.kernels.iter().all(|(_, k)| !k.name.contains("_epi")));
+        assert!(defused.kernels.len() > fused.kernels.len());
+        let rd = simrun::verify(&mach, &g, &defused.abi, &defused.asm, &inputs, DType::F32, None).unwrap();
+        assert!(rd.passed(), "de-fused: {}", rd.summary());
+    }
+
+    #[test]
+    fn fused_conv_residual_epilogue_matches_oracle() {
+        use crate::ir::ops::{AttrValue, Attrs};
+        use crate::ir::shape::Shape;
+        use crate::ir::tensor::Initializer;
+        // Conv -> Add(residual x) -> Relu fuses to one conv whose store loop
+        // performs the residual add + clamp (AddTensor reads a non-bias
+        // operand appended after the base inputs).
+        let mut g = Graph::new("epi_conv");
+        let x = g.input("x", Shape::fixed(&[1, 2, 6, 6]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[2, 2, 3, 3], 9, 0.2));
+        let mut attrs = Attrs::new();
+        attrs.insert("pads".into(), AttrValue::Ints(vec![1, 1]));
+        let c = g.node(OpKind::Conv, "c", &[x, w], attrs);
+        let add = g.node(OpKind::Add, "res", &[c, x], Attrs::new());
+        let r = g.node(OpKind::Relu, "relu", &[add], Attrs::new());
+        g.outputs.push(r);
+        let mut g = prepare(g).unwrap();
+        crate::opt::optimize(&mut g).unwrap();
+        assert_eq!(g.nodes.len(), 1, "residual chain should fuse into the Conv");
+
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let inputs = simrun::synth_inputs(&g, 12);
+        let prog = lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        assert!(prog.kernels.iter().any(|(_, k)| k.name.contains("_epi")));
+        let rr = simrun::verify(&mach, &g, &prog.abi, &prog.asm, &inputs, DType::F32, None).unwrap();
+        assert!(rr.passed(), "{}", rr.summary());
     }
 
     #[test]

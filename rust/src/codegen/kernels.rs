@@ -78,6 +78,213 @@ fn vse32(e: &mut Emitter, vs: u8, addr_reg: u8) {
 }
 
 // ---------------------------------------------------------------------------
+// Fused epilogues (see `ir::epilogue`): applied to the accumulator inside
+// the matmul/conv store loop, before the store — the fused intermediate
+// never makes a DMEM round-trip.
+// ---------------------------------------------------------------------------
+
+/// One resolved epilogue step for emission. Float parameters travel as f32
+/// bit patterns; `AddTensor` carries the absolute base address of the
+/// same-shape operand (resolved from the memory plan by `graphgen`). Its
+/// element address mirrors the output element: `addr + (out_elem - out_base)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpiStep {
+    Relu,
+    Relu6,
+    LeakyRelu { alpha_bits: u32 },
+    Scale { mul_bits: u32, add_bits: u32 },
+    AddTensor { addr: u32 },
+}
+
+/// Float-register layout for epilogue constants: f15 holds 0.0, per-step
+/// constants are assigned from f16 upward (at most 2 per step). Kernels keep
+/// f0-f6 for their own accumulators/operands, so there is no overlap.
+/// `graphgen` caps fused chains at [`MAX_FUSED_EPI`] steps so the register
+/// file can never overflow.
+const EPI_FZERO: u8 = 15;
+const EPI_FCONST: u8 = 16;
+
+/// Longest epilogue chain applied in-loop; longer chains fall back to the
+/// un-fused lowering (base kernel + separate elementwise kernels).
+pub const MAX_FUSED_EPI: usize = 6;
+
+/// Materialize an f32 bit pattern into float register `f` via the stack.
+fn load_fconst(e: &mut Emitter, f: u8, bits: u32, itmp: u8) {
+    e.li(itmp, bits as i32);
+    e.push(Instr::s(Op::Sw, regs::SP, itmp, -4));
+    e.push(Instr::i(Op::Flw, f, regs::SP, -4));
+}
+
+/// Preload every constant the epilogue chain needs (kernel prologue, once).
+pub(crate) fn emit_epi_consts(e: &mut Emitter, steps: &[EpiStep], itmp: u8) {
+    if steps.is_empty() {
+        return;
+    }
+    e.push(Instr::r(Op::FcvtSW, EPI_FZERO, regs::ZERO, 0));
+    let mut f = EPI_FCONST;
+    for s in steps {
+        match *s {
+            EpiStep::Relu | EpiStep::AddTensor { .. } => {}
+            EpiStep::Relu6 => {
+                load_fconst(e, f, 6f32.to_bits(), itmp);
+                f += 1;
+            }
+            EpiStep::LeakyRelu { alpha_bits } => {
+                load_fconst(e, f, alpha_bits, itmp);
+                f += 1;
+            }
+            EpiStep::Scale { mul_bits, add_bits } => {
+                load_fconst(e, f, mul_bits, itmp);
+                load_fconst(e, f + 1, add_bits, itmp);
+                f += 2;
+            }
+        }
+    }
+}
+
+/// Apply the epilogue to scalar accumulator `facc` right before its store.
+/// `addr_reg` holds the absolute output-element address and `out_base` the
+/// output base register; `itmp`/`itmp2`/`ftmp` must be dead at this point.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn emit_epi_scalar(
+    e: &mut Emitter,
+    steps: &[EpiStep],
+    facc: u8,
+    ftmp: u8,
+    addr_reg: u8,
+    out_base: u8,
+    itmp: u8,
+    itmp2: u8,
+) {
+    let mut f = EPI_FCONST;
+    for s in steps {
+        match *s {
+            EpiStep::Relu => e.push(Instr::r(Op::FmaxS, facc, facc, EPI_FZERO)),
+            EpiStep::Relu6 => {
+                e.push(Instr::r(Op::FmaxS, facc, facc, EPI_FZERO));
+                e.push(Instr::r(Op::FminS, facc, facc, f));
+                f += 1;
+            }
+            EpiStep::LeakyRelu { .. } => {
+                // alpha*min(x,0) + max(x,0)
+                e.push(Instr::r(Op::FminS, ftmp, facc, EPI_FZERO));
+                e.push(Instr::r(Op::FmulS, ftmp, ftmp, f));
+                e.push(Instr::r(Op::FmaxS, facc, facc, EPI_FZERO));
+                e.push(Instr::r(Op::FaddS, facc, facc, ftmp));
+                f += 1;
+            }
+            EpiStep::Scale { .. } => {
+                e.push(Instr::r4(Op::FmaddS, facc, facc, f, f + 1));
+                f += 2;
+            }
+            EpiStep::AddTensor { addr } => {
+                e.push(Instr::r(Op::Sub, itmp, addr_reg, out_base));
+                e.li(itmp2, addr as i32);
+                e.push(Instr::r(Op::Add, itmp, itmp, itmp2));
+                e.push(Instr::i(Op::Flw, ftmp, itmp, 0));
+                e.push(Instr::r(Op::FaddS, facc, facc, ftmp));
+            }
+        }
+    }
+}
+
+/// Apply the epilogue to the v8 accumulator group right before `vse32`.
+/// Uses v16/v24 as scratch groups (dead after the reduction loop) and must
+/// preserve the register holding the active vector length.
+pub(crate) fn emit_epi_vector(
+    e: &mut Emitter,
+    steps: &[EpiStep],
+    addr_reg: u8,
+    out_base: u8,
+    itmp: u8,
+    itmp2: u8,
+) {
+    let mut f = EPI_FCONST;
+    for s in steps {
+        match *s {
+            EpiStep::Relu => {
+                e.push(Instr::r(Op::VfmvVF, 24, EPI_FZERO, 0));
+                e.push(Instr::r(Op::VfmaxVV, 8, 8, 24));
+            }
+            EpiStep::Relu6 => {
+                // No vfmin in the ISA: min(x,6) = x + 6 - max(x,6).
+                e.push(Instr::r(Op::VfmvVF, 24, EPI_FZERO, 0));
+                e.push(Instr::r(Op::VfmaxVV, 8, 8, 24));
+                e.push(Instr::r(Op::VfmvVF, 24, f, 0));
+                e.push(Instr::r(Op::VfmaxVV, 16, 8, 24));
+                e.push(Instr::r(Op::VfaddVV, 8, 8, 24));
+                e.push(Instr::r(Op::VfsubVV, 8, 8, 16));
+                f += 1;
+            }
+            EpiStep::LeakyRelu { .. } => {
+                // pos = max(x,0); neg = x - pos; out = alpha*neg + pos.
+                e.push(Instr::r(Op::VfmvVF, 24, EPI_FZERO, 0));
+                e.push(Instr::r(Op::VfmaxVV, 16, 8, 24));
+                e.push(Instr::r(Op::VfsubVV, 8, 8, 16));
+                e.push(Instr::r(Op::VfmvVF, 24, f, 0));
+                e.push(Instr::r(Op::VfmulVV, 8, 8, 24));
+                e.push(Instr::r(Op::VfaddVV, 8, 8, 16));
+                f += 1;
+            }
+            EpiStep::Scale { .. } => {
+                e.push(Instr::r(Op::VfmvVF, 24, f, 0));
+                e.push(Instr::r(Op::VfmulVV, 8, 8, 24));
+                e.push(Instr::r(Op::VfmvVF, 24, f + 1, 0));
+                e.push(Instr::r(Op::VfaddVV, 8, 8, 24));
+                f += 2;
+            }
+            EpiStep::AddTensor { addr } => {
+                e.push(Instr::r(Op::Sub, itmp, addr_reg, out_base));
+                e.li(itmp2, addr as i32);
+                e.push(Instr::r(Op::Add, itmp, itmp, itmp2));
+                vle32(e, 24, itmp);
+                e.push(Instr::r(Op::VfaddVV, 8, 8, 24));
+            }
+        }
+    }
+}
+
+/// Per-step additions to the analytic store-loop instruction mix.
+pub(crate) fn epi_mix(steps: &[EpiStep], vector: bool, mix: &mut InstrMix) {
+    for s in steps {
+        if vector {
+            match *s {
+                EpiStep::Relu => mix.add(OpClass::VAlu, 2),
+                EpiStep::Relu6 | EpiStep::LeakyRelu { .. } => mix.add(OpClass::VAlu, 6),
+                EpiStep::Scale { .. } => mix.add(OpClass::VAlu, 4),
+                EpiStep::AddTensor { .. } => {
+                    mix.add(OpClass::VLoad, 1);
+                    mix.add(OpClass::VAlu, 1);
+                    mix.add(OpClass::Alu, 3);
+                }
+            }
+        } else {
+            match *s {
+                EpiStep::Relu => mix.add(OpClass::FAlu, 1),
+                EpiStep::Relu6 => mix.add(OpClass::FAlu, 2),
+                EpiStep::LeakyRelu { .. } => mix.add(OpClass::FAlu, 4),
+                EpiStep::Scale { .. } => mix.add(OpClass::FAlu, 1),
+                EpiStep::AddTensor { .. } => {
+                    mix.add(OpClass::Load, 1);
+                    mix.add(OpClass::FAlu, 1);
+                    mix.add(OpClass::Alu, 3);
+                }
+            }
+        }
+    }
+}
+
+/// Extra DMEM load traffic the epilogue introduces (AddTensor operands).
+pub(crate) fn epi_load_bytes(steps: &[EpiStep], out_elems: usize, es: u64) -> u64 {
+    steps
+        .iter()
+        .filter(|s| matches!(s, EpiStep::AddTensor { .. }))
+        .count() as u64
+        * out_elems as u64
+        * es
+}
+
+// ---------------------------------------------------------------------------
 // MatMul: C[M,N] += A[M,K] * B[K,N]  (row-major, f32 storage)
 // ---------------------------------------------------------------------------
 
@@ -108,12 +315,13 @@ pub fn matmul(
     c_addr: u32,
     dt: DType,
 ) -> Result<KernelArtifact> {
-    matmul_bias(mach, kc, m, n, k, a_addr, b_addr, None, c_addr, dt)
+    matmul_bias(mach, kc, m, n, k, a_addr, b_addr, None, c_addr, &[], dt)
 }
 
-/// MatMul with an optional fused per-column bias: C[i,j] = A·B + bias[j].
-/// Gemm/Linear lower here (the bias initializes the accumulator, saving a
-/// separate elementwise pass over C).
+/// MatMul with an optional fused per-column bias: C[i,j] = A·B + bias[j],
+/// plus an optional fused epilogue applied to the accumulator before the
+/// store. Gemm/Linear lower here (the bias initializes the accumulator,
+/// saving a separate elementwise pass over C).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_bias(
     mach: &MachineConfig,
@@ -125,6 +333,7 @@ pub fn matmul_bias(
     b_addr: u32,
     bias_addr: Option<u32>,
     c_addr: u32,
+    epi: &[EpiStep],
     dt: DType,
 ) -> Result<KernelArtifact> {
     let mut e = Emitter::new();
@@ -133,6 +342,7 @@ pub fn matmul_bias(
         e.li(A, a_addr as i32);
         e.li(B, b_addr as i32);
         e.li(C, c_addr as i32);
+        emit_epi_consts(&mut e, epi, T0);
         // f0 must be 0.0 for the accumulator splat — never assume register
         // state across kernels (attention_core clobbers f0).
         e.push(Instr::r(Op::FcvtSW, 0, regs::ZERO, 0));
@@ -182,6 +392,8 @@ pub fn matmul_bias(
                 e.push(Instr::r(Op::Add, T5, T5, S3));
                 e.push(Instr::i(Op::Slli, T5, T5, 2));
                 e.push(Instr::r(Op::Add, T5, C, T5));
+                // Fused epilogue on the acc group (T1 = vl is preserved).
+                emit_epi_vector(&mut e, epi, T5, C, T2, T4);
                 vse32(&mut e, 8, T5);
                 // j0 += vl
                 e.push(Instr::r(Op::Add, S3, S3, T1));
@@ -197,6 +409,7 @@ pub fn matmul_bias(
         e.li(A, a_addr as i32);
         e.li(B, b_addr as i32);
         e.li(C, c_addr as i32);
+        emit_epi_consts(&mut e, epi, T0);
         e.push(Instr::r(Op::Xor, S2, S2, S2)); // i
         let i_loop = e.here();
         {
@@ -234,6 +447,7 @@ pub fn matmul_bias(
                 e.push(Instr::r(Op::Add, T5, T5, S3));
                 e.push(Instr::i(Op::Slli, T5, T5, 2));
                 e.push(Instr::r(Op::Add, T5, C, T5));
+                emit_epi_scalar(&mut e, epi, 2, 6, T5, C, T3, T4);
                 e.push(Instr::s(Op::Fsw, T5, 2, 0));
                 e.push(Instr::i(Op::Addi, S3, S3, 1));
             }
@@ -257,7 +471,9 @@ pub fn matmul_bias(
     // Tiled traffic: A re-read per N-tile, B re-read per M-tile, C once.
     let n_tiles_n = n.div_ceil(tile_n) as u64;
     let n_tiles_m = m.div_ceil(tile_m) as u64;
-    let load_bytes = (m * k) as u64 * es * n_tiles_n + (k * n) as u64 * es * n_tiles_m;
+    let load_bytes = (m * k) as u64 * es * n_tiles_n
+        + (k * n) as u64 * es * n_tiles_m
+        + epi_load_bytes(epi, m * n, es);
     let store_bytes = (m * n) as u64 * es;
     let tile_bytes = ((tile_m * tile_k + tile_k * tile_n + tile_m * tile_n) as u64 * es) as usize;
     let working_set = ((m * k + k * n + m * n) as u64 * es) as usize;
@@ -281,6 +497,7 @@ pub fn matmul_bias(
         j_mix.add(OpClass::VStore, 1);
         j_mix.add(OpClass::Alu, 8);
         j_mix.add(OpClass::Mul, 1);
+        epi_mix(epi, true, &mut j_mix);
         let j_nest = LoopNest {
             trip: n.div_ceil(lanes) as u64,
             body: j_mix,
@@ -298,16 +515,18 @@ pub fn matmul_bias(
         j_mix.add(OpClass::Store, 1);
         j_mix.add(OpClass::Alu, 8);
         j_mix.add(OpClass::Mul, 1);
+        epi_mix(epi, false, &mut j_mix);
         let j_nest = LoopNest { trip: n as u64, body: j_mix, children: vec![k_nest], overhead: 3 };
         LoopNest { trip: m as u64, body: InstrMix::default(), children: vec![j_nest], overhead: 3 }
     };
 
+    let epi_suffix = if epi.is_empty() { String::new() } else { format!("_epi{}", epi.len()) };
     Ok(KernelArtifact {
-        name: format!("matmul_{m}x{n}x{k}"),
+        name: format!("matmul_{m}x{n}x{k}{epi_suffix}"),
         asm: e.finish()?,
         nest,
         mem: mem_profile(mach, load_bytes, store_bytes, working_set, true, tile_bytes),
-        flops: 2 * (m * n * k) as u64,
+        flops: 2 * (m * n * k) as u64 + (m * n * epi.len()) as u64,
         config: kc,
         dtype: dt,
     })
@@ -420,6 +639,7 @@ pub fn elementwise_binary(
 pub enum UnaryKind {
     Relu,
     Relu6,
+    LeakyRelu { alpha_bits: u32 },
     Sigmoid,
     Exp,
     Rsqrt,
@@ -468,6 +688,11 @@ pub fn elementwise_unary(
                 e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
                 e.push(Instr::i(Op::Flw, 3, regs::SP, -4)); // f3 = 6.0
             }
+            UnaryKind::LeakyRelu { alpha_bits } => {
+                e.li(T3, alpha_bits as i32);
+                e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
+                e.push(Instr::i(Op::Flw, 3, regs::SP, -4)); // f3 = alpha
+            }
             UnaryKind::Sigmoid => {
                 e.li(T3, 1f32.to_bits() as i32);
                 e.push(Instr::s(Op::Sw, regs::SP, T3, -4));
@@ -494,6 +719,14 @@ pub fn elementwise_unary(
                 e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
                 e.push(Instr::r(Op::FmaxS, 2, 1, 2));
                 e.push(Instr::r(Op::FminS, 2, 2, 3));
+            }
+            UnaryKind::LeakyRelu { .. } => {
+                // alpha*min(x,0) + max(x,0)
+                e.push(Instr::r(Op::FcvtSW, 2, regs::ZERO, 0));
+                e.push(Instr::r(Op::FminS, 4, 1, 2));
+                e.push(Instr::r(Op::FmulS, 4, 4, 3));
+                e.push(Instr::r(Op::FmaxS, 2, 1, 2));
+                e.push(Instr::r(Op::FaddS, 2, 2, 4));
             }
             UnaryKind::Sigmoid => {
                 // 1 / (1 + exp(-x))
@@ -561,6 +794,7 @@ fn unary_name(k: UnaryKind) -> &'static str {
     match k {
         UnaryKind::Relu => "relu",
         UnaryKind::Relu6 => "relu6",
+        UnaryKind::LeakyRelu { .. } => "lrelu",
         UnaryKind::Sigmoid => "sigmoid",
         UnaryKind::Exp => "exp",
         UnaryKind::Rsqrt => "rsqrt",

@@ -6,6 +6,7 @@
 //! Same contract as [`super::kernels`]: executable asm + analytic profiles.
 
 use crate::codegen::emitter::Emitter;
+use crate::codegen::kernels::{emit_epi_consts, emit_epi_scalar, epi_load_bytes, epi_mix, EpiStep};
 use crate::codegen::{KernelArtifact, KernelConfig};
 use crate::ir::dtype::DType;
 use crate::isa::{regs, Instr, Op, OpClass};
@@ -80,7 +81,8 @@ impl Conv2dDesc {
 }
 
 /// Direct convolution. x: [N, C, H, W] at a0, w: [F, C/g, kH, kW] at a1,
-/// bias (optional, [F]) at a3, out: [N, F, OH, OW] at a2.
+/// bias (optional, [F]) at a3, out: [N, F, OH, OW] at a2. `epi` is the
+/// node's fused epilogue, applied to the accumulator before each store.
 ///
 /// Loop order: n, f, oy, ox / (c, ky, kx) with a scalar FMA accumulator.
 /// Padding handled with bounds checks; grouped/depthwise via `groups`.
@@ -95,6 +97,7 @@ pub fn conv2d(
     w_addr: u32,
     bias_addr: Option<u32>,
     out_addr: u32,
+    epi: &[EpiStep],
     dt: DType,
 ) -> Result<KernelArtifact> {
     let (oh, ow) = (d.oh(), d.ow());
@@ -107,6 +110,7 @@ pub fn conv2d(
     if let Some(ba) = bias_addr {
         e.li(D, ba as i32);
     }
+    emit_epi_consts(&mut e, epi, T0);
     e.push(Instr::r(Op::Xor, S2, S2, S2)); // ni
     let n_loop = e.here();
     {
@@ -214,6 +218,8 @@ pub fn conv2d(
                     e.push(Instr::r(Op::Add, T1, T1, S5));
                     e.push(Instr::i(Op::Slli, T1, T1, 2));
                     e.push(Instr::r(Op::Add, T1, C, T1));
+                    // Fused epilogue on the accumulator (T1 = out address).
+                    emit_epi_scalar(&mut e, epi, 2, 6, T1, C, T3, T4);
                     e.push(Instr::s(Op::Fsw, T1, 2, 0));
                     e.push(Instr::i(Op::Addi, S5, S5, 1));
                 }
@@ -253,6 +259,7 @@ pub fn conv2d(
         grp_mix.add(OpClass::VSet, 1);
         grp_mix.add(OpClass::VStore, 1);
         grp_mix.add(OpClass::Alu, 6);
+        epi_mix(epi, true, &mut grp_mix);
         let vec_groups = outputs.div_ceil(lanes as u64).max(1);
         LoopNest {
             trip: vec_groups,
@@ -273,6 +280,7 @@ pub fn conv2d(
                 m.add(OpClass::Store, 1);
                 m.add(OpClass::Alu, 10);
                 m.add(OpClass::Mul, 4);
+                epi_mix(epi, false, &mut m);
                 m
             },
             children: vec![k_nest],
@@ -284,17 +292,22 @@ pub fn conv2d(
     let weight_bytes = (d.cout * cg * d.kh * d.kw) as u64 * es;
     let tile_n = kc.tile_n.min(ow.max(1));
     let reuse_factor = (oh * ow).div_ceil(tile_n * tile_n).max(1) as u64;
-    let load_bytes =
-        (d.n * d.cin * d.h * d.w) as u64 * es * (d.kh as u64) + weight_bytes * reuse_factor.min(16);
+    let load_bytes = (d.n * d.cin * d.h * d.w) as u64 * es * (d.kh as u64)
+        + weight_bytes * reuse_factor.min(16)
+        + epi_load_bytes(epi, outputs as usize, es);
     let store_bytes = outputs * es;
     let working_set = ((d.cin * d.h * d.w + d.cout * cg * d.kh * d.kw) as u64 * es) as usize;
     let tile_bytes = (kc.tile_m * kc.tile_k + kc.tile_k * tile_n) * es as usize;
+    let epi_suffix = if epi.is_empty() { String::new() } else { format!("_epi{}", epi.len()) };
     Ok(KernelArtifact {
-        name: format!("conv_{}x{}x{}x{}_k{}s{}g{}", d.cout, d.cin, d.h, d.w, d.kh, d.stride, d.groups),
+        name: format!(
+            "conv_{}x{}x{}x{}_k{}s{}g{}{epi_suffix}",
+            d.cout, d.cin, d.h, d.w, d.kh, d.stride, d.groups
+        ),
         asm: e.finish()?,
         nest,
         mem: mem_profile(mach, load_bytes, store_bytes, working_set, true, tile_bytes),
-        flops: d.flops(),
+        flops: d.flops() + outputs * epi.len() as u64,
         config: kc,
         dtype: dt,
     })
@@ -848,7 +861,7 @@ mod tests {
         m.write_f32_slice(0x1000, &x).unwrap();
         m.write_f32_slice(0x8000, &w).unwrap();
         m.write_f32_slice(0xF000, &bias).unwrap();
-        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, Some(0xF000), 0x10000, DType::F32).unwrap();
+        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, Some(0xF000), 0x10000, &[], DType::F32).unwrap();
         run(&mach, &art, &mut m);
         let got = m.read_f32_slice(0x10000, d.n * d.cout * d.oh() * d.ow()).unwrap();
 
@@ -885,7 +898,7 @@ mod tests {
         let mut m = Machine::new(mach.clone());
         m.write_f32_slice(0x1000, &x).unwrap();
         m.write_f32_slice(0x8000, &w).unwrap();
-        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, None, 0x10000, DType::F32).unwrap();
+        let art = conv2d(&mach, KernelConfig::default(), d, 0x1000, 0x8000, None, 0x10000, &[], DType::F32).unwrap();
         run(&mach, &art, &mut m);
         let got = m.read_f32_slice(0x10000, d.cout * 25).unwrap();
 

@@ -36,12 +36,18 @@ pub struct KernelConfig {
     pub unroll: usize,
     /// RVV register-group multiplier (§3.4.1, eq. 14): 1, 2, 4, or 8.
     pub lmul: usize,
+    /// Apply the node's fused epilogue inside the kernel's store loop.
+    /// When false, a node carrying an epilogue is lowered as the base
+    /// kernel plus separate elementwise kernels (the un-fused baseline);
+    /// the auto-tuner searches this per fusable site.
+    pub fuse_epilogue: bool,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        // The case-study baseline schedule: 64/64/32, no unroll, LMUL=1.
-        KernelConfig { tile_m: 64, tile_n: 64, tile_k: 32, unroll: 1, lmul: 1 }
+        // The case-study baseline schedule: 64/64/32, no unroll, LMUL=1,
+        // epilogues fused in-loop.
+        KernelConfig { tile_m: 64, tile_n: 64, tile_k: 32, unroll: 1, lmul: 1, fuse_epilogue: true }
     }
 }
 

@@ -110,6 +110,7 @@ impl KernelSig {
                 0x40000000,
                 None,
                 0x200000,
+                &[],
                 DType::F32,
             )
             .expect("conv generation"),
@@ -144,7 +145,12 @@ pub fn extract(sig: &KernelSig, kc: KernelConfig) -> [f64; NUM_FEATURES] {
         KernelSig::Elementwise { len } => (1, len, 1),
     };
     let flops = sig.flops() as f64;
-    let bytes = sig.bytes() as f64;
+    // Un-fused epilogue lowering re-reads and re-writes the output once per
+    // step; charge one extra output round-trip so the learned model sees the
+    // traffic difference. With the default `fuse_epilogue = true` this term
+    // is zero and the frozen feature contract stays bit-identical.
+    let epi_bytes = if kc.fuse_epilogue { 0.0 } else { 2.0 * 4.0 * (m * n) as f64 };
+    let bytes = sig.bytes() as f64 + epi_bytes;
     let tile_bytes = 4.0 * (kc.tile_m * kc.tile_k + kc.tile_k * kc.tile_n + kc.tile_m * kc.tile_n) as f64;
     [
         lg(m as f64),

@@ -1,0 +1,180 @@
+//! Fused-epilogue representation shared by the optimizer, the reference
+//! executor, and code generation.
+//!
+//! The `FuseEpilogue` pass (`opt/fusion.rs`) absorbs single-use elementwise
+//! chains hanging off a Gemm/Conv/DepthwiseConv producer into the producer
+//! node itself, recorded as an *ordered* list of [`EpiOp`] steps in the
+//! node's attributes. Every layer that evaluates or lowers a node must apply
+//! the epilogue to the node's output in order:
+//!
+//! - `ir::exec::eval_node` applies it in f32 after the base op — the oracle.
+//! - `codegen` applies it inside the store loop of the matmul/conv kernel,
+//!   so the intermediate never makes a DMEM round-trip.
+//!
+//! Encoding (chosen to fit the existing [`AttrValue`] variants — there is no
+//! float-array attribute, so f32 parameters travel as bit patterns in Ints):
+//!
+//! - `"epilogue_ops"`: `Ints` — one opcode per step (see `code()`).
+//! - `"epilogue_p0"`, `"epilogue_p1"`: `Ints` — per-step parameters. For
+//!   float parameters the i64 holds `f32::to_bits` (lossless); for
+//!   `AddTensor` p0 holds the index into `node.inputs` of the added operand.
+//! - `"epilogue_base_inputs"`: `Int` — the node's input count *before* any
+//!   `AddTensor` operands were appended. Consumers that follow positional
+//!   input conventions (e.g. "inputs[2] is the bias") must use
+//!   [`base_inputs`] instead of `node.inputs.len()`.
+
+use super::ops::{attr_int, AttrValue, Attrs};
+
+/// One fused epilogue step, applied elementwise to the producer's output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EpiOp {
+    /// `max(x, 0)`
+    Relu,
+    /// `clamp(x, 0, 6)`
+    Relu6,
+    /// `x >= 0 ? x : alpha * x`
+    LeakyRelu { alpha: f32 },
+    /// `x * mul + add` (folded scalar Mul/Add, requantize-style affine)
+    Scale { mul: f32, add: f32 },
+    /// `x + other`, where `other` is `node.inputs[input]` (same shape as the
+    /// output — the fusion pass enforces this). Used for residual adds.
+    AddTensor { input: usize },
+}
+
+impl EpiOp {
+    fn code(self) -> i64 {
+        match self {
+            EpiOp::Relu => 0,
+            EpiOp::Relu6 => 1,
+            EpiOp::LeakyRelu { .. } => 2,
+            EpiOp::Scale { .. } => 3,
+            EpiOp::AddTensor { .. } => 4,
+        }
+    }
+
+    /// Scalar reference semantics for the non-tensor steps. `AddTensor` needs
+    /// the operand tensor and is handled by the caller.
+    pub fn eval_scalar(self, x: f32) -> f32 {
+        match self {
+            EpiOp::Relu => x.max(0.0),
+            EpiOp::Relu6 => x.clamp(0.0, 6.0),
+            EpiOp::LeakyRelu { alpha } => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    alpha * x
+                }
+            }
+            EpiOp::Scale { mul, add } => x * mul + add,
+            EpiOp::AddTensor { .. } => x,
+        }
+    }
+}
+
+/// Record `ops` as the node's epilogue (overwrites any existing epilogue).
+pub fn encode(attrs: &mut Attrs, ops: &[EpiOp]) {
+    let mut codes = Vec::with_capacity(ops.len());
+    let mut p0 = Vec::with_capacity(ops.len());
+    let mut p1 = Vec::with_capacity(ops.len());
+    for op in ops {
+        codes.push(op.code());
+        let (a, b) = match *op {
+            EpiOp::Relu | EpiOp::Relu6 => (0, 0),
+            EpiOp::LeakyRelu { alpha } => (alpha.to_bits() as i64, 0),
+            EpiOp::Scale { mul, add } => (mul.to_bits() as i64, add.to_bits() as i64),
+            EpiOp::AddTensor { input } => (input as i64, 0),
+        };
+        p0.push(a);
+        p1.push(b);
+    }
+    attrs.insert("epilogue_ops".into(), AttrValue::Ints(codes));
+    attrs.insert("epilogue_p0".into(), AttrValue::Ints(p0));
+    attrs.insert("epilogue_p1".into(), AttrValue::Ints(p1));
+}
+
+/// Decode the node's epilogue; empty when the node has none. Unknown opcodes
+/// are impossible for graphs produced by this crate; they decode to an empty
+/// epilogue rather than panicking so stale caches can't take the process down.
+pub fn decode(attrs: &Attrs) -> Vec<EpiOp> {
+    let codes = match attrs.get("epilogue_ops").and_then(|a| a.as_ints()) {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let p0 = attrs.get("epilogue_p0").and_then(|a| a.as_ints()).unwrap_or(&[]);
+    let p1 = attrs.get("epilogue_p1").and_then(|a| a.as_ints()).unwrap_or(&[]);
+    let mut out = Vec::with_capacity(codes.len());
+    for (i, &c) in codes.iter().enumerate() {
+        let a = p0.get(i).copied().unwrap_or(0);
+        let b = p1.get(i).copied().unwrap_or(0);
+        let op = match c {
+            0 => EpiOp::Relu,
+            1 => EpiOp::Relu6,
+            2 => EpiOp::LeakyRelu { alpha: f32::from_bits(a as u32) },
+            3 => EpiOp::Scale {
+                mul: f32::from_bits(a as u32),
+                add: f32::from_bits(b as u32),
+            },
+            4 => EpiOp::AddTensor { input: a as usize },
+            _ => return Vec::new(),
+        };
+        out.push(op);
+    }
+    out
+}
+
+/// The node's input count before epilogue `AddTensor` operands were appended.
+/// Positional conventions (bias at `inputs[2]`, …) must slice with this.
+pub fn base_inputs(attrs: &Attrs, total_inputs: usize) -> usize {
+    let n = attr_int(attrs, "epilogue_base_inputs", total_inputs as i64);
+    (n as usize).min(total_inputs)
+}
+
+/// Record the pre-epilogue input count (call once, before appending operands).
+pub fn set_base_inputs(attrs: &mut Attrs, n: usize) {
+    attrs
+        .entry("epilogue_base_inputs".into())
+        .or_insert(AttrValue::Int(n as i64));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let ops = vec![
+            EpiOp::Relu,
+            EpiOp::Relu6,
+            EpiOp::LeakyRelu { alpha: 0.125 },
+            EpiOp::Scale { mul: 0.5, add: -3.25 },
+            EpiOp::AddTensor { input: 3 },
+        ];
+        let mut attrs = Attrs::new();
+        encode(&mut attrs, &ops);
+        assert_eq!(decode(&attrs), ops);
+    }
+
+    #[test]
+    fn empty_attrs_decode_empty() {
+        assert!(decode(&Attrs::new()).is_empty());
+    }
+
+    #[test]
+    fn base_inputs_defaults_to_total() {
+        let mut attrs = Attrs::new();
+        assert_eq!(base_inputs(&attrs, 3), 3);
+        set_base_inputs(&mut attrs, 2);
+        assert_eq!(base_inputs(&attrs, 3), 2);
+        // set_base_inputs is idempotent: first call wins.
+        set_base_inputs(&mut attrs, 9);
+        assert_eq!(base_inputs(&attrs, 3), 2);
+    }
+
+    #[test]
+    fn scalar_semantics() {
+        assert_eq!(EpiOp::Relu.eval_scalar(-1.0), 0.0);
+        assert_eq!(EpiOp::Relu6.eval_scalar(8.0), 6.0);
+        assert_eq!(EpiOp::LeakyRelu { alpha: 0.1 }.eval_scalar(-2.0), -0.2);
+        assert_eq!(EpiOp::Scale { mul: 2.0, add: 1.0 }.eval_scalar(3.0), 7.0);
+    }
+}

@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::ir::epilogue::{self, EpiOp};
 use crate::ir::graph::{Graph, Node, TensorId};
 use crate::ir::ops::{attr_f64, attr_int, attr_ints, OpKind};
 use crate::ir::tensor::Tensor;
@@ -92,8 +93,53 @@ impl Executor {
     }
 }
 
-/// Evaluate a single node on concrete tensors.
+/// Evaluate a single node on concrete tensors. If the node carries a fused
+/// epilogue (see [`crate::ir::epilogue`]), the base op is evaluated on the
+/// pre-fusion inputs only and the epilogue steps are applied to the output
+/// in order — this is the oracle that fused codegen is verified against.
 pub fn eval_node(node: &Node, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let epi = epilogue::decode(&node.attrs);
+    if epi.is_empty() {
+        return eval_base(node, ins);
+    }
+    let base_n = epilogue::base_inputs(&node.attrs, ins.len());
+    let mut outs = eval_base(node, &ins[..base_n])?;
+    let out = outs.first_mut().ok_or_else(|| {
+        Error::Sim(format!("'{}': epilogue on node with no output", node.name))
+    })?;
+    for step in &epi {
+        match *step {
+            EpiOp::AddTensor { input } => {
+                let other = ins.get(input).copied().ok_or_else(|| {
+                    Error::Sim(format!(
+                        "'{}': epilogue AddTensor references missing input {}",
+                        node.name, input
+                    ))
+                })?;
+                if other.data.len() != out.data.len() {
+                    return Err(Error::Sim(format!(
+                        "'{}': epilogue AddTensor operand has {} elements, output has {}",
+                        node.name,
+                        other.data.len(),
+                        out.data.len()
+                    )));
+                }
+                for (v, o) in out.data.iter_mut().zip(&other.data) {
+                    *v += *o;
+                }
+            }
+            s => {
+                for v in out.data.iter_mut() {
+                    *v = s.eval_scalar(*v);
+                }
+            }
+        }
+    }
+    Ok(outs)
+}
+
+/// The un-fused node semantics (epilogue-free).
+fn eval_base(node: &Node, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
     let op = node.op;
     let a = || -> Result<&Tensor> {
         ins.first()

@@ -154,6 +154,26 @@ impl Graph {
             .collect()
     }
 
+    /// Total number of uses of a tensor: consuming node input slots *plus*
+    /// occurrences in `self.outputs`. Fusion passes must gate "single-use"
+    /// rewrites on this — `consumers()` alone misses graph outputs, so a
+    /// rewrite could silently rename away a model output.
+    pub fn use_count(&self, id: TensorId) -> usize {
+        let node_uses: usize = self
+            .nodes
+            .iter()
+            .map(|n| n.inputs.iter().filter(|t| **t == id).count())
+            .sum();
+        let output_uses = self.outputs.iter().filter(|t| **t == id).count();
+        node_uses + output_uses
+    }
+
+    /// True when `id` is consumed by exactly one node input slot and is not a
+    /// graph output — the only case where a fusion pass may rewrite it away.
+    pub fn single_internal_use(&self, id: TensorId) -> bool {
+        self.use_count(id) == 1 && !self.outputs.contains(&id)
+    }
+
     /// Topological order of nodes (inputs/initializers are roots).
     /// Errors on cycles or use of undefined tensors.
     pub fn topo_order(&self) -> Result<Vec<NodeId>> {

@@ -8,6 +8,7 @@
 //! quantization are validated against.
 
 pub mod dtype;
+pub mod epilogue;
 pub mod exec;
 pub mod graph;
 pub mod infer;

@@ -6,8 +6,26 @@
 //! * `FuseBiasAdd` — MatMul followed by a broadcast Add of a [N] initializer
 //!   becomes a Gemm with fused bias (codegen initializes accumulators from
 //!   the bias, removing a whole pass over the output).
+//! * `FuseEpilogue` — producer-consumer fusion in the DLFusion style
+//!   (arXiv 2011.05630): single-use elementwise/activation chains (Relu,
+//!   Relu6, LeakyRelu, scalar Mul/Add → Scale, same-shape residual Add)
+//!   hanging off a Gemm/Conv/DepthwiseConv are absorbed into the producer
+//!   as an ordered epilogue attribute (see [`crate::ir::epilogue`]). Codegen
+//!   applies the epilogue inside the producer's store loop, eliminating one
+//!   full DMEM round-trip per fused op.
+//!
+//! Liveness invariants — every rewrite here must respect both:
+//!
+//! 1. A tensor may only be rewritten away when it has exactly one use
+//!    *counting graph outputs* ([`Graph::single_internal_use`]). The raw
+//!    `Graph::consumers` list misses `g.outputs`, and fusing across a tensor
+//!    that is also a model output would silently drop that output.
+//! 2. A weight initializer may only be mutated in place when exactly one
+//!    node consumes it; shared weights get the folded copy installed under a
+//!    fresh tensor id so sibling consumers keep the original values.
 
-use crate::ir::graph::Graph;
+use crate::ir::epilogue::{self, EpiOp};
+use crate::ir::graph::{Graph, Node, TensorId};
 use crate::ir::ops::{attr_f64, OpKind};
 use crate::ir::tensor::Initializer;
 use crate::opt::Pass;
@@ -33,8 +51,8 @@ impl Pass for FuseConvBn {
             if !matches!(conv.op, OpKind::Conv | OpKind::DepthwiseConv) {
                 continue;
             }
-            if g.consumers(conv_out).len() != 1 {
-                continue; // conv output used elsewhere: cannot rewrite weights
+            if !g.single_internal_use(conv_out) {
+                continue; // conv output used elsewhere (or is a graph output)
             }
             // BN params must be initializers.
             if !bn.inputs[1..].iter().all(|t| g.is_initializer(*t)) {
@@ -71,13 +89,18 @@ impl Pass for FuseConvBn {
                 }
                 bias[f] = (bias[f] - mean.data[f]) * s + beta.data[f];
             }
-            // Install new weight + bias initializers.
+            // Install new weight + bias initializers. When the weight tensor
+            // is shared with another node, the folded copy must live under a
+            // fresh id — mutating it in place would corrupt the sibling.
             let wname = format!("{}_bnfold_w", conv.name);
             let w_shape = w.shape.clone();
-            g.initializers.insert(
-                conv.inputs[1],
-                Initializer::eager(&wname, &w_shape, w.data),
-            );
+            let folded_w = Initializer::eager(&wname, &w_shape, w.data);
+            let w_id = if g.consumers(conv.inputs[1]).len() > 1 {
+                g.init(folded_w)
+            } else {
+                g.initializers.insert(conv.inputs[1], folded_w);
+                conv.inputs[1]
+            };
             let bias_id = g.init(Initializer::eager(
                 &format!("{}_bnfold_b", conv.name),
                 &[cout],
@@ -85,6 +108,7 @@ impl Pass for FuseConvBn {
             ));
             // Conv now writes directly to BN's output tensor with the bias.
             let node = &mut g.nodes[ci];
+            node.inputs[1] = w_id;
             if node.inputs.len() > 2 {
                 node.inputs[2] = bias_id;
             } else {
@@ -117,7 +141,7 @@ impl Pass for FuseBiasAdd {
                 if g.nodes[mi.0].op != OpKind::MatMul {
                     continue;
                 }
-                if g.consumers(mm_in).len() != 1 {
+                if !g.single_internal_use(mm_in) {
                     continue;
                 }
                 let Some(init) = g.initializers.get(&bias_in) else { continue };
@@ -142,6 +166,166 @@ impl Pass for FuseBiasAdd {
         }
         crate::opt::remove_nodes(g, &dead);
         Ok(true)
+    }
+}
+
+/// Producer-consumer epilogue fusion: absorb single-use elementwise chains
+/// into the producing Gemm/Conv/DepthwiseConv node as an ordered epilogue.
+pub struct FuseEpilogue;
+
+/// One classified chain link before rewriting.
+enum Step {
+    Simple(EpiOp),
+    /// Same-shape residual add; the operand tensor gets appended to the
+    /// producer's inputs and addressed by index at apply time.
+    AddTensor(TensorId),
+}
+
+/// A fully walked chain rooted at producer node `pi`.
+struct ChainRewrite {
+    pi: usize,
+    steps: Vec<Step>,
+    dead: Vec<usize>,
+    out: TensorId,
+}
+
+impl Pass for FuseEpilogue {
+    fn name(&self) -> &'static str {
+        "fuse_epilogue"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool> {
+        // Phase 1: walk chains without mutating. `claimed` stops two
+        // producers from absorbing the same consumer (e.g. a residual Add
+        // whose both operands are single-use conv outputs).
+        let mut claimed = std::collections::BTreeSet::new();
+        let mut rewrites: Vec<ChainRewrite> = Vec::new();
+        for pi in 0..g.nodes.len() {
+            if !matches!(
+                g.nodes[pi].op,
+                OpKind::MatMul
+                    | OpKind::Gemm
+                    | OpKind::Linear
+                    | OpKind::Conv
+                    | OpKind::DepthwiseConv
+            ) {
+                continue;
+            }
+            if let Some(rw) = walk_chain(g, pi, &claimed) {
+                claimed.extend(rw.dead.iter().copied());
+                rewrites.push(rw);
+            }
+        }
+        if rewrites.is_empty() {
+            return Ok(false);
+        }
+        // Phase 2: apply.
+        let mut dead = Vec::new();
+        for rw in rewrites {
+            let node = &mut g.nodes[rw.pi];
+            let mut ops = epilogue::decode(&node.attrs);
+            // Record the pre-epilogue input count before appending residual
+            // operands (first call wins — repeated fusion keeps the original).
+            epilogue::set_base_inputs(&mut node.attrs, node.inputs.len());
+            for step in rw.steps {
+                match step {
+                    Step::Simple(op) => ops.push(op),
+                    Step::AddTensor(tid) => {
+                        let idx = node.inputs.len();
+                        node.inputs.push(tid);
+                        ops.push(EpiOp::AddTensor { input: idx });
+                    }
+                }
+            }
+            epilogue::encode(&mut node.attrs, &ops);
+            node.outputs = vec![rw.out];
+            dead.extend(rw.dead);
+        }
+        crate::opt::remove_nodes(g, &dead);
+        Ok(true)
+    }
+}
+
+/// Greedily walk the single-use consumer chain off `g.nodes[pi]`'s output,
+/// classifying each link. Stops at the first unfusable consumer, a tensor
+/// with >1 use, a graph output, or an already-claimed node.
+fn walk_chain(
+    g: &Graph,
+    pi: usize,
+    claimed: &std::collections::BTreeSet<usize>,
+) -> Option<ChainRewrite> {
+    if g.nodes[pi].outputs.len() != 1 {
+        return None;
+    }
+    let mut t = g.nodes[pi].outputs[0];
+    let mut steps = Vec::new();
+    let mut dead = Vec::new();
+    loop {
+        if !g.single_internal_use(t) {
+            break;
+        }
+        let consumers = g.consumers(t);
+        let ci = consumers[0].0;
+        if ci == pi || claimed.contains(&ci) || dead.contains(&ci) {
+            break;
+        }
+        let c = &g.nodes[ci];
+        if c.outputs.len() != 1 {
+            break;
+        }
+        let Some(step) = classify(g, c, t) else { break };
+        steps.push(step);
+        dead.push(ci);
+        t = c.outputs[0];
+    }
+    if steps.is_empty() {
+        None
+    } else {
+        Some(ChainRewrite { pi, steps, dead, out: t })
+    }
+}
+
+/// Classify a candidate consumer `c` of chain tensor `t` as a fusable step.
+fn classify(g: &Graph, c: &Node, t: TensorId) -> Option<Step> {
+    match c.op {
+        OpKind::Relu => Some(Step::Simple(EpiOp::Relu)),
+        OpKind::Relu6 => Some(Step::Simple(EpiOp::Relu6)),
+        OpKind::LeakyRelu => Some(Step::Simple(EpiOp::LeakyRelu {
+            alpha: attr_f64(&c.attrs, "alpha", 0.01) as f32,
+        })),
+        OpKind::Mul | OpKind::Add => {
+            if c.inputs.len() != 2 {
+                return None;
+            }
+            let other = if c.inputs[0] == t { c.inputs[1] } else { c.inputs[0] };
+            if let Some(init) = g.initializers.get(&other) {
+                // Scalar constant → affine Scale step.
+                if init.shape.numel() == Some(1) {
+                    let v = init.materialize().data[0];
+                    return Some(Step::Simple(if c.op == OpKind::Mul {
+                        EpiOp::Scale { mul: v, add: 0.0 }
+                    } else {
+                        EpiOp::Scale { mul: 1.0, add: v }
+                    }));
+                }
+                None
+            } else if c.op == OpKind::Add {
+                // Residual add: only when shapes match exactly (elementwise,
+                // no broadcast) and are fully static. `other` cannot depend
+                // on `t` — `t` has exactly one use (this Add) — so appending
+                // it to the producer's inputs cannot create a cycle.
+                let sa = g.shape_of(t).ok()?;
+                let sb = g.shape_of(other).ok()?;
+                if sa == sb && sa.is_static() {
+                    Some(Step::AddTensor(other))
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        }
+        _ => None,
     }
 }
 
@@ -207,6 +391,203 @@ mod tests {
         let after = Executor::new().run(&g, &[x_t]).unwrap();
         for (a, b) in before[0].data.iter().zip(&after[0].data) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    /// Regression: two convs sharing one weight id. Folding BN into the
+    /// first used to overwrite the shared initializer in place, corrupting
+    /// the second conv's numerics.
+    #[test]
+    fn conv_bn_fold_does_not_corrupt_shared_weight() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 4, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w_shared", &[3, 2, 3, 3], 7, 0.2));
+        let c1 = g.node(OpKind::Conv, "c1", &[x, w], Attrs::new());
+        let gm = g.init(Initializer::eager("g", &[3], vec![2.0, 0.5, 1.5]));
+        let bt = g.init(Initializer::eager("b", &[3], vec![0.1, -0.2, 0.3]));
+        let mn = g.init(Initializer::eager("m", &[3], vec![0.2, 0.0, -0.1]));
+        let vr = g.init(Initializer::eager("v", &[3], vec![1.0, 2.0, 0.5]));
+        let bn = g.node(OpKind::BatchNormalization, "bn", &[c1, gm, bt, mn, vr], Attrs::new());
+        // Second conv uses the *same* weight id, no BN.
+        let c2 = g.node(OpKind::Conv, "c2", &[x, w], Attrs::new());
+        g.outputs.push(bn);
+        g.outputs.push(c2);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+
+        let mut x_t = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x_t.data.iter_mut().enumerate() {
+            *v = (i as f32 - 16.0) / 16.0;
+        }
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(FuseConvBn.run(&mut g).unwrap());
+        let mut exec = Executor::new();
+        exec.invalidate_weights();
+        let after = exec.run(&g, &[x_t]).unwrap();
+        // Both outputs — the folded path AND the sibling conv — must match.
+        for (ta, tb) in before.iter().zip(&after) {
+            for (a, b) in ta.data.iter().zip(&tb.data) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    /// Regression: Conv→BN where the conv's output is *also* a graph output.
+    /// The pass must skip the rewrite — fusing would rename the output away.
+    #[test]
+    fn conv_bn_skips_when_intermediate_is_graph_output() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 4, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[3, 2, 3, 3], 3, 0.2));
+        let c = g.node(OpKind::Conv, "c", &[x, w], Attrs::new());
+        let gm = g.init(Initializer::eager("g", &[3], vec![1.0, 0.5, 2.0]));
+        let bt = g.init(Initializer::eager("b", &[3], vec![0.1, -0.1, 0.0]));
+        let mn = g.init(Initializer::eager("m", &[3], vec![0.2, 0.0, -0.3]));
+        let vr = g.init(Initializer::eager("v", &[3], vec![1.0, 2.0, 0.5]));
+        let bn = g.node(OpKind::BatchNormalization, "bn", &[c, gm, bt, mn, vr], Attrs::new());
+        g.outputs.push(c); // the conv intermediate is itself a model output
+        g.outputs.push(bn);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+
+        let mut x_t = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x_t.data.iter_mut().enumerate() {
+            *v = (i as f32 - 16.0) / 16.0;
+        }
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(!FuseConvBn.run(&mut g).unwrap(), "must skip: conv out is a graph output");
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        assert_eq!(before.len(), after.len());
+        for (ta, tb) in before.iter().zip(&after) {
+            assert_eq!(ta.data, tb.data);
+        }
+    }
+
+    /// Regression: MatMul→Add where the MatMul output is also a graph output.
+    #[test]
+    fn bias_add_skips_when_intermediate_is_graph_output() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 3], 5, 0.3));
+        let b = g.init(Initializer::eager("b", &[3], vec![1.0, 2.0, 3.0]));
+        let mm = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let y = g.node(OpKind::Add, "badd", &[mm, b], Attrs::new());
+        g.outputs.push(mm); // intermediate doubles as a model output
+        g.outputs.push(y);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        let x_t = Tensor::new(vec![2, 4], (0..8).map(|i| i as f32 / 4.0).collect());
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(!FuseBiasAdd.run(&mut g).unwrap(), "must skip: matmul out is a graph output");
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        for (ta, tb) in before.iter().zip(&after) {
+            assert_eq!(ta.data, tb.data);
+        }
+    }
+
+    #[test]
+    fn epilogue_fuses_relu_chain_into_gemm() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 3], 5, 0.3));
+        let b = g.init(Initializer::eager("b", &[3], vec![0.5, -0.5, 0.1]));
+        let mm = g.node(OpKind::Gemm, "mm", &[x, w, b], Attrs::new());
+        let s = g.init(Initializer::eager("s", &[1], vec![0.25]));
+        let sc = g.node(OpKind::Mul, "scale", &[mm, s], Attrs::new());
+        let r = g.node(OpKind::Relu, "relu", &[sc], Attrs::new());
+        g.outputs.push(r);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        let x_t = Tensor::new(vec![2, 4], (0..8).map(|i| i as f32 / 4.0 - 1.0).collect());
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(FuseEpilogue.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1, "Mul + Relu absorbed into the Gemm");
+        let epi = epilogue::decode(&g.nodes[0].attrs);
+        assert_eq!(epi, vec![EpiOp::Scale { mul: 0.25, add: 0.0 }, EpiOp::Relu]);
+        // Bias convention survives: base inputs still 3 (x, w, b).
+        assert_eq!(epilogue::base_inputs(&g.nodes[0].attrs, g.nodes[0].inputs.len()), 3);
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        for (a, b) in before[0].data.iter().zip(&after[0].data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn epilogue_fuses_residual_add_into_conv() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 4, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[2, 2, 3, 3], 9, 0.2));
+        let c = g.node(OpKind::Conv, "c", &[x, w], {
+            let mut a = Attrs::new();
+            a.insert("pads".into(), crate::ir::ops::AttrValue::Ints(vec![1, 1]));
+            a
+        });
+        // Residual: conv output + the model input (same shape), then Relu.
+        let add = g.node(OpKind::Add, "res", &[c, x], Attrs::new());
+        let r = g.node(OpKind::Relu, "relu", &[add], Attrs::new());
+        g.outputs.push(r);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        let mut x_t = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x_t.data.iter_mut().enumerate() {
+            *v = (i as f32 - 16.0) / 16.0;
+        }
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(FuseEpilogue.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1, "residual Add + Relu absorbed into the Conv");
+        let node = &g.nodes[0];
+        let epi = epilogue::decode(&node.attrs);
+        assert_eq!(epi, vec![EpiOp::AddTensor { input: 2 }, EpiOp::Relu]);
+        assert_eq!(node.inputs[2], x, "residual operand appended to conv inputs");
+        assert_eq!(epilogue::base_inputs(&node.attrs, node.inputs.len()), 2);
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        for (a, b) in before[0].data.iter().zip(&after[0].data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn epilogue_stops_at_graph_output_and_multi_use() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 3], 5, 0.3));
+        let mm = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let r = g.node(OpKind::Relu, "relu", &[mm], Attrs::new());
+        g.outputs.push(mm); // matmul out is a graph output: chain must not start
+        g.outputs.push(r);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        assert!(!FuseEpilogue.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2);
+    }
+
+    /// Two convs feeding one residual Add: only one producer may claim it.
+    #[test]
+    fn epilogue_residual_claimed_by_one_producer_only() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[1, 2, 4, 4]), DType::F32);
+        let w1 = g.init(Initializer::lazy("w1", &[2, 2, 3, 3], 9, 0.2));
+        let w2 = g.init(Initializer::lazy("w2", &[2, 2, 3, 3], 11, 0.2));
+        let pads = {
+            let mut a = Attrs::new();
+            a.insert("pads".into(), crate::ir::ops::AttrValue::Ints(vec![1, 1]));
+            a
+        };
+        let c1 = g.node(OpKind::Conv, "c1", &[x, w1], pads.clone());
+        let c2 = g.node(OpKind::Conv, "c2", &[x, w2], pads);
+        let add = g.node(OpKind::Add, "res", &[c1, c2], Attrs::new());
+        g.outputs.push(add);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        let mut x_t = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x_t.data.iter_mut().enumerate() {
+            *v = (i as f32 - 16.0) / 16.0;
+        }
+        let before = Executor::new().run(&g, &[x_t.clone()]).unwrap();
+        assert!(FuseEpilogue.run(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2, "exactly one conv absorbs the Add");
+        let fused: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|n| !epilogue::decode(&n.attrs).is_empty())
+            .collect();
+        assert_eq!(fused.len(), 1);
+        let after = Executor::new().run(&g, &[x_t]).unwrap();
+        for (a, b) in before[0].data.iter().zip(&after[0].data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
 }

@@ -17,7 +17,23 @@ pub trait Pass {
 }
 
 /// The default pipeline, in the order the paper's figure lists them.
+/// `FuseEpilogue` runs after the structural fusions so folded Gemm/Conv
+/// nodes can absorb their activation chains in the same fixed point.
 pub fn default_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(const_fold::ConstFold),
+        Box::new(fusion::FuseConvBn),
+        Box::new(fusion::FuseBiasAdd),
+        Box::new(fusion::FuseEpilogue),
+        Box::new(cse::Cse),
+        Box::new(dce::Dce),
+    ]
+}
+
+/// The default pipeline without epilogue fusion — used when the caller
+/// wants un-fused kernels (e.g. `CompileOptions::fuse_epilogue = false`,
+/// the baseline side of the fused-vs-unfused benchmarks).
+pub fn default_passes_no_epilogue() -> Vec<Box<dyn Pass>> {
     vec![
         Box::new(const_fold::ConstFold),
         Box::new(fusion::FuseConvBn),
@@ -29,7 +45,11 @@ pub fn default_passes() -> Vec<Box<dyn Pass>> {
 
 /// Run passes to a fixed point (bounded iterations).
 pub fn optimize(g: &mut Graph) -> Result<Vec<&'static str>> {
-    let passes = default_passes();
+    optimize_with(g, default_passes())
+}
+
+/// Run a caller-chosen pass list to a fixed point (bounded iterations).
+pub fn optimize_with(g: &mut Graph, passes: Vec<Box<dyn Pass>>) -> Result<Vec<&'static str>> {
     let mut applied = Vec::new();
     for _ in 0..8 {
         let mut changed = false;
@@ -48,9 +68,12 @@ pub fn optimize(g: &mut Graph) -> Result<Vec<&'static str>> {
     Ok(applied)
 }
 
-/// Remove a set of nodes by index (helper shared by passes).
+/// Remove a set of nodes by index (helper shared by passes). Set lookup
+/// keeps multi-rewrite passes linear in graph size instead of
+/// O(nodes × dead) on conv-heavy models.
 pub(crate) fn remove_nodes(g: &mut Graph, dead: &[usize]) {
-    let mut keep = Vec::with_capacity(g.nodes.len());
+    let dead: std::collections::BTreeSet<usize> = dead.iter().copied().collect();
+    let mut keep = Vec::with_capacity(g.nodes.len().saturating_sub(dead.len()));
     for (i, n) in g.nodes.drain(..).enumerate() {
         if !dead.contains(&i) {
             keep.push(n);

@@ -51,6 +51,11 @@ pub struct CompileOptions {
     pub cache: Option<Arc<TuneCache>>,
     /// Run the instruction scheduler.
     pub schedule: bool,
+    /// Run the `FuseEpilogue` pass (deep epilogue fusion into Gemm/Conv
+    /// store loops). `false` compiles the un-fused baseline the
+    /// fused-vs-unfused benchmarks measure against; the per-site tuner knob
+    /// is `KernelConfig::fuse_epilogue`.
+    pub fuse_epilogue: bool,
     pub seed: u64,
 }
 
@@ -65,6 +70,7 @@ impl Default for CompileOptions {
             tune_workers: 0,
             cache: None,
             schedule: true,
+            fuse_epilogue: true,
             seed: 42,
         }
     }
@@ -430,7 +436,11 @@ impl CompileSession {
         let mut g = graph.clone();
 
         // Stage 2: optimization.
-        let passes_applied = crate::opt::optimize(&mut g)?;
+        let passes_applied = if opts.fuse_epilogue {
+            crate::opt::optimize(&mut g)?
+        } else {
+            crate::opt::optimize_with(&mut g, crate::opt::default_passes_no_epilogue())?
+        };
 
         // Stage 2.5: quantization (PTQ).
         let quant = if opts.precision != DType::F32 {
@@ -442,6 +452,22 @@ impl CompileSession {
             )?)
         } else {
             None
+        };
+
+        // Stage 2.75: memory-aware node scheduling. Probe both orders with
+        // uncapped planning, adopt the liveness-aware order only when its
+        // *measured* DMEM peak improves on the original order (never-worse
+        // guarantee), and remember the unscheduled baseline for the report.
+        let unscheduled_peak = {
+            let probe = memplan::plan(&g, u32::MAX, u32::MAX)?;
+            let order = sched::memory_aware_order(&g)?;
+            let mut candidate = g.clone();
+            sched::apply_node_order(&mut candidate, &order);
+            let cand_plan = memplan::plan(&candidate, u32::MAX, u32::MAX)?;
+            if cand_plan.dmem_peak < probe.dmem_peak {
+                g = candidate;
+            }
+            probe.dmem_peak
         };
 
         // Auto-tuning: dedup signatures, hit the cache, tune misses in
@@ -479,7 +505,9 @@ impl CompileSession {
         }
 
         // Stage 4a: memory planning (before codegen: addresses).
-        let plan = memplan::plan(&g, opts.mach.dmem_bytes as u32, opts.mach.wmem_bytes as u32)?;
+        let mut plan = memplan::plan(&g, opts.mach.dmem_bytes as u32, opts.mach.wmem_bytes as u32)?;
+        plan.dmem_peak_unscheduled = unscheduled_peak;
+        debug_assert!(plan.dmem_peak <= plan.dmem_peak_unscheduled);
 
         // Stage 3: code generation.
         let program = graphgen::lower_graph(&g, &opts.mach, &plan, &schedules, opts.precision)?;
@@ -629,6 +657,47 @@ mod tests {
         for r in &rows {
             assert!(r.max_rel_err <= r.tol, "{}: {} > {}", r.precision, r.max_rel_err, r.tol);
             assert!(r.measured_cycles > 0 && r.predicted_cycles > 0.0);
+        }
+    }
+
+    #[test]
+    fn fuse_epilogue_option_gates_the_pass() {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mut fused = CompileSession::new(CompileOptions::default());
+        let cf = fused.compile(&g).unwrap();
+        let mut unfused = CompileSession::new(CompileOptions {
+            fuse_epilogue: false,
+            ..Default::default()
+        });
+        let cu = unfused.compile(&g).unwrap();
+        assert!(cf.passes_applied.contains(&"fuse_epilogue"));
+        assert!(!cu.passes_applied.contains(&"fuse_epilogue"));
+        assert!(
+            cf.graph.nodes.len() < cu.graph.nodes.len(),
+            "fused {} nodes vs un-fused {}",
+            cf.graph.nodes.len(),
+            cu.graph.nodes.len()
+        );
+    }
+
+    #[test]
+    fn scheduled_dmem_peak_never_worse_than_unscheduled() {
+        for graph in [
+            model_zoo::resnet_cifar(1),
+            model_zoo::mobilenet_cifar(1),
+            model_zoo::bert_tiny(1, 8),
+        ] {
+            let g = prepare(graph).unwrap();
+            let mut s = CompileSession::new(CompileOptions::default());
+            let c = s.compile(&g).unwrap();
+            assert!(c.plan.dmem_peak_unscheduled > 0, "{}", c.graph.name);
+            assert!(
+                c.plan.dmem_peak <= c.plan.dmem_peak_unscheduled,
+                "{}: scheduled peak {} above unscheduled {}",
+                c.graph.name,
+                c.plan.dmem_peak,
+                c.plan.dmem_peak_unscheduled
+            );
         }
     }
 

@@ -136,6 +136,57 @@ fn fp16_and_fp4_mlp_conform() {
     }
 }
 
+// -- Deep epilogue fusion: fused vs un-fused binaries ------------------------
+//
+// The `conform` calls above already exercise the *fused* pipeline (epilogue
+// fusion is on by default) across the precision ladder. These additionally
+// pin that (a) the un-fused baseline (`fuse_epilogue = false`) conforms too,
+// (b) fusion actually fires (strictly fewer nodes), and (c) the memory-aware
+// scheduler's peak-DMEM guarantee holds on compiled models.
+
+#[test]
+fn fused_and_unfused_resnet_both_conform_f32_and_int8() {
+    for precision in [DType::F32, DType::I8] {
+        let g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        let mut nodes = Vec::new();
+        for fuse in [true, false] {
+            let mut session = CompileSession::new(CompileOptions {
+                precision,
+                fuse_epilogue: fuse,
+                ..Default::default()
+            });
+            let c = session.compile(&g).unwrap();
+            assert!(
+                c.plan.dmem_peak <= c.plan.dmem_peak_unscheduled,
+                "fuse={fuse}: peak {} above unscheduled {}",
+                c.plan.dmem_peak,
+                c.plan.dmem_peak_unscheduled
+            );
+            let r = session.verify_auto(&c).unwrap();
+            assert!(r.passed(), "{precision} fuse={fuse}: {}", r.summary());
+            nodes.push(c.graph.nodes.len());
+        }
+        assert!(
+            nodes[0] < nodes[1],
+            "{precision}: fused graph ({} nodes) not smaller than un-fused ({})",
+            nodes[0],
+            nodes[1]
+        );
+    }
+}
+
+#[test]
+fn fused_mobilenet_conforms_f32_and_int4() {
+    // mobilenet's depthwise/pointwise stacks carry BN-folded scale + Relu6
+    // chains; INT4 composes epilogue fusion with PR 5's explicit
+    // DequantizeLinear insertion (dequant is inserted after optimize(), so
+    // FuseEpilogue never sees it by construction).
+    for precision in [DType::F32, DType::I4] {
+        let r = conform(model_zoo::mobilenet_cifar(1), precision);
+        assert!(r.tol <= 1e-2, "{precision}");
+    }
+}
+
 // -- Encoder/decoder round-trip over the whole zoo's emitted code -----------
 
 #[test]
