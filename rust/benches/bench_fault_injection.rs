@@ -1,0 +1,217 @@
+//! Fault-injection benchmark: the fault-tolerant serving stack under
+//! deterministic chaos, emitted to `BENCH_fault_tolerance.json`.
+//!
+//! Three phases:
+//! 1. **Fault-free baseline** — chaos disabled: the fault-tolerance
+//!    machinery must be invisible (zero retries/rebuilds/panics) and every
+//!    sampled response bit-identical to the serial reference — the
+//!    fault-free path is unchanged by the hardening.
+//! 2. **Chaos** — injected machine faults + worker panics at production
+//!    -plausible rates, with retries: zero wrong answers (every sample
+//!    verified), availability >= 99%, and the fault counters (machine
+//!    failures, retries, rebuilds, panics) land in the JSON artifact.
+//! 3. **Quarantine** — a model that fails every attempt trips its circuit
+//!    breaker; subsequent submits shed synchronously.
+//!
+//! Exits nonzero (assert) if any sampled response diverges, availability
+//! drops below 99% under chaos, or the breaker never opens.
+
+use std::sync::Arc;
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::runtime::engine::ModelImage;
+use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions, LoadReport};
+use xgenc::runtime::server::{ChaosOptions, Server, ServerOptions, ServerReport};
+use xgenc::runtime::store;
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+
+/// Closed-loop run over the demo fleet with the given chaos settings.
+fn drive_fleet(
+    fleet: &DemoFleet,
+    requests: u64,
+    sample_every: u64,
+    retries: u32,
+    chaos: Option<ChaosOptions>,
+) -> (LoadReport, ServerReport) {
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions { workers: 2, retries, chaos, ..Default::default() },
+    )
+    .unwrap();
+    let lr = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests, rate: 0.0, seed: 21, sample_every, duration: None },
+    );
+    (lr, server.shutdown())
+}
+
+fn verify_samples(fleet: &DemoFleet, lr: &LoadReport, phase: &str) {
+    assert!(!lr.samples.is_empty(), "{phase}: no samples to verify");
+    for s in &lr.samples {
+        assert!(
+            fleet.sample_matches(s).unwrap(),
+            "{phase}: WRONG ANSWER SERVED (model {}, spec {}, seed {})",
+            s.model,
+            s.spec,
+            s.seed
+        );
+    }
+}
+
+fn main() {
+    let debug = cfg!(debug_assertions);
+    let total: u64 = if debug { 400 } else { 20_000 };
+    let sample_every: u64 = if debug { 7 } else { 97 };
+
+    let fleet = DemoFleet::build().unwrap();
+
+    // Phase 1: fault-free baseline — hardening must be invisible.
+    let (base_lr, base_sr) = drive_fleet(&fleet, total, sample_every, 3, None);
+    assert_eq!(base_lr.ok, total, "fault-free run failed: {}", base_lr.summary());
+    assert_eq!(base_sr.machine_failures, 0);
+    assert_eq!(base_sr.retries, 0);
+    assert_eq!(base_sr.rebuilds, 0);
+    assert_eq!(base_sr.panics, 0);
+    assert_eq!(base_sr.quarantine_opened, 0);
+    verify_samples(&fleet, &base_lr, "baseline");
+
+    // Phase 2: chaos — detected machine faults + worker panics, retried.
+    let chaos = ChaosOptions {
+        fault_rate: 0.05,
+        panic_rate: 0.002,
+        crash_rate: 0.0,
+        seed: 77,
+    };
+    let (chaos_lr, chaos_sr) = drive_fleet(&fleet, total, sample_every, 3, Some(chaos));
+    verify_samples(&fleet, &chaos_lr, "chaos");
+    let availability = chaos_lr.availability();
+    assert!(
+        availability >= 0.99,
+        "chaos availability {availability:.4} < 0.99: {}",
+        chaos_lr.summary()
+    );
+    assert!(
+        chaos_sr.machine_failures >= 1,
+        "a 5% fault rate over {total} requests never trapped: {}",
+        chaos_sr.summary()
+    );
+    assert_eq!(chaos_lr.failed, 0, "chaos produced request-scoped failures");
+
+    // Phase 3: quarantine — every attempt on this model faults; the
+    // breaker must open and shed instead of burning worker time.
+    let g = prepare(model_zoo::mlp(&[256, 128, 64, 10], 1)).unwrap();
+    let c = CompileSession::new(CompileOptions::default()).compile(&g).unwrap();
+    let img = Arc::new(ModelImage::from_compiled(&c).unwrap());
+    let server = Server::start(
+        &[Arc::clone(&img)],
+        ServerOptions {
+            workers: 1,
+            retries: 0,
+            breaker_threshold: 3,
+            breaker_cooldown: std::time::Duration::from_secs(600),
+            chaos: Some(ChaosOptions {
+                fault_rate: 1.0,
+                panic_rate: 0.0,
+                crash_rate: 0.0,
+                seed: 5,
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut q_failed = 0u64;
+    let mut q_shed = 0u64;
+    for seed in 0..12u64 {
+        match server.submit(0, img.synth_request(0, seed)) {
+            Ok(t) => {
+                assert!(t.wait().is_err(), "every attempt is armed with a detected fault");
+                q_failed += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("quarantine"), "unexpected shed: {e}");
+                q_shed += 1;
+            }
+        }
+    }
+    let quarantine_sr = server.shutdown();
+    assert!(quarantine_sr.quarantine_opened >= 1, "breaker never opened");
+    assert!(q_shed >= 1, "no submit was shed by the open breaker");
+
+    let mut t = Table::new(
+        "Fault tolerance: chaos-mode serving over the demo fleet",
+        &["Phase", "Requests", "ok", "Machine fails", "Retries", "Rebuilds", "Panics", "Availability"],
+    );
+    t.row(&[
+        "baseline".to_string(),
+        format!("{total}"),
+        format!("{}", base_lr.ok),
+        format!("{}", base_sr.machine_failures),
+        format!("{}", base_sr.retries),
+        format!("{}", base_sr.rebuilds),
+        format!("{}", base_sr.panics),
+        f(base_lr.availability(), 4),
+    ]);
+    t.row(&[
+        "chaos".to_string(),
+        format!("{total}"),
+        format!("{}", chaos_lr.ok),
+        format!("{}", chaos_sr.machine_failures),
+        format!("{}", chaos_sr.retries),
+        format!("{}", chaos_sr.rebuilds),
+        format!("{}", chaos_sr.panics),
+        f(availability, 4),
+    ]);
+    t.row(&[
+        "quarantine".to_string(),
+        "12".to_string(),
+        "0".to_string(),
+        format!("{}", quarantine_sr.machine_failures),
+        format!("{}", quarantine_sr.retries),
+        format!("{}", quarantine_sr.rebuilds),
+        format!("{}", quarantine_sr.panics),
+        "-".to_string(),
+    ]);
+    t.print();
+    println!("{}", chaos_sr.summary());
+    println!("{}", chaos_lr.summary());
+
+    let report = Json::obj(vec![
+        ("bench", Json::str_("fault_tolerance")),
+        ("requests_per_phase", Json::Num(total as f64)),
+        ("baseline_server", base_sr.to_json()),
+        ("baseline_loadgen", base_lr.to_json()),
+        ("chaos_fault_rate", Json::Num(0.05)),
+        ("chaos_panic_rate", Json::Num(0.002)),
+        ("chaos_server", chaos_sr.to_json()),
+        ("chaos_loadgen", chaos_lr.to_json()),
+        ("chaos_availability", Json::Num(availability)),
+        (
+            "chaos_samples_verified",
+            Json::Num(chaos_lr.samples.len() as f64),
+        ),
+        ("quarantine_server", quarantine_sr.to_json()),
+        ("quarantine_failed", Json::Num(q_failed as f64)),
+        ("quarantine_shed", Json::Num(q_shed as f64)),
+    ]);
+    let out = std::path::Path::new("BENCH_fault_tolerance.json");
+    store::save_json(out, &report).unwrap();
+    println!("wrote {}", out.display());
+
+    println!(
+        "fault tolerance OK: {} chaos requests, {} machine failures absorbed \
+         ({} retries, {} rebuilds, {} panics), availability {:.4}, \
+         {} samples verified bit-identical, breaker opened {}x",
+        total,
+        chaos_sr.machine_failures,
+        chaos_sr.retries,
+        chaos_sr.rebuilds,
+        chaos_sr.panics,
+        availability,
+        chaos_lr.samples.len(),
+        quarantine_sr.quarantine_opened,
+    );
+}

@@ -32,7 +32,7 @@ use xgenc::util::table::{f, Table};
 fn saturation(fleet: &DemoFleet, workers: usize, requests: u64, seed: u64) -> (f64, f64, f64) {
     let server = Server::start(
         &fleet.images,
-        ServerOptions { workers, max_batch: 8, queue_depth: 256, deadline: None },
+        ServerOptions { workers, max_batch: 8, queue_depth: 256, ..Default::default() },
     )
     .unwrap();
     let lr = loadgen::drive(
@@ -80,6 +80,7 @@ fn main() {
             max_batch: 8,
             queue_depth: 256,
             deadline: Some(Duration::from_millis(50)),
+            ..Default::default()
         },
     )
     .unwrap();

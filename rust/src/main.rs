@@ -26,7 +26,7 @@ use xgenc::pipeline::{multi_model, CompileOptions, CompileSession};
 use xgenc::quant::calib::Method;
 use xgenc::runtime::engine::{LoadedModel, ModelImage};
 use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions, MixEntry};
-use xgenc::runtime::server::{Server, ServerOptions};
+use xgenc::runtime::server::{ChaosOptions, Server, ServerOptions};
 use xgenc::runtime::simrun;
 use xgenc::sim::MachineConfig;
 use xgenc::util::cli::Args;
@@ -55,6 +55,11 @@ const OPTION_KEYS: &[&str] = &[
     "requests",
     "duration",
     "sample-every",
+    "retries",
+    "chaos-rate",
+    "chaos-panic-rate",
+    "chaos-crash-rate",
+    "chaos-seed",
 ];
 
 fn main() {
@@ -504,6 +509,13 @@ impl ServeArgs {
     fn from_args(args: &Args) -> ServeArgs {
         let deadline_ms = args.opt_f64("deadline-ms", 0.0);
         let duration_s = args.opt_f64("duration", 0.0);
+        let chaos = ChaosOptions {
+            fault_rate: args.opt_f64("chaos-rate", 0.0),
+            panic_rate: args.opt_f64("chaos-panic-rate", 0.0),
+            crash_rate: args.opt_f64("chaos-crash-rate", 0.0),
+            seed: args.opt_u64("chaos-seed", 42),
+        };
+        let chaos_on = chaos.fault_rate > 0.0 || chaos.panic_rate > 0.0 || chaos.crash_rate > 0.0;
         ServeArgs {
             session: SessionArgs::from_args(args),
             models: args.opt("models").map(|s| s.to_string()),
@@ -512,6 +524,9 @@ impl ServeArgs {
                 max_batch: args.opt_usize("batch", 8),
                 queue_depth: args.opt_usize("queue", 256),
                 deadline: (deadline_ms > 0.0).then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
+                retries: args.opt_usize("retries", 2) as u32,
+                chaos: chaos_on.then_some(chaos),
+                ..Default::default()
             },
             load: LoadGenOptions {
                 requests: args.opt_u64("requests", 10_000),
@@ -691,7 +706,9 @@ USAGE:
   xgenc pipeline --models spec1,spec2,... [--tune N] [--cache FILE] [--workers N]
   xgenc serve    [--models spec1,...] [--workers N] [--batch N] [--queue N]
                  [--deadline-ms MS] [--requests N] [--rate RPS] [--duration S]
-                 [--sample-every N] [--seed N] [--out file.json]
+                 [--sample-every N] [--seed N] [--retries N] [--chaos-rate P]
+                 [--chaos-panic-rate P] [--chaos-crash-rate P] [--chaos-seed N]
+                 [--out file.json]
   xgenc loadgen  [--models spec1,...] [--requests N] [--duration S] [--seed N]
   xgenc export   --model zoo:<name> [--out file.json]
 
@@ -712,6 +729,16 @@ USAGE:
   MLP) and verifies every --sample-every'th response bit-identical to the
   serial engine. loadgen runs the identical request stream serially on one
   thread — the baseline for the serving speedup.
+
+  serve is fault-tolerant: machine-scoped failures (traps, panics) rebuild
+  the worker's machine from the immutable image and retry up to --retries
+  times with exponential backoff; repeated failures quarantine the model
+  behind a per-model circuit breaker. Chaos mode injects deterministic
+  faults to prove it: --chaos-rate arms a detected machine fault on that
+  fraction of attempts, --chaos-panic-rate panics inside the worker,
+  --chaos-crash-rate kills whole workers (the supervisor respawns them).
+  Injected faults always trap — a fault can cost a retry, never a wrong
+  answer; sampled responses stay bit-identical to the serial engine.
 
   --cache FILE persists tuning results between runs: warm entries skip the
   search entirely (corrupted or stale files fall back to cold tuning).

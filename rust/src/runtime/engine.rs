@@ -316,6 +316,18 @@ pub struct LoadedModel {
     /// skip the reset — keeps single-shot `run_model` on the historical
     /// cost profile).
     dirty: bool,
+    /// Machine rebuilds after machine-scoped failures (see [`Self::rebuild`]).
+    rebuilds: u64,
+}
+
+/// A fresh machine bound to `image` with weights staged once — the one
+/// construction path shared by initial load and post-failure rebuild.
+fn fresh_machine(image: &ModelImage) -> Result<Machine> {
+    let mut machine = Machine::new(image.mach.clone());
+    machine.max_instret = simrun::MAX_INSTRET;
+    let spec = &image.specs[0];
+    simrun::stage_weights(&mut machine, &spec.graph, &spec.abi)?;
+    Ok(machine)
 }
 
 impl LoadedModel {
@@ -326,15 +338,36 @@ impl LoadedModel {
 
     /// Bind a fresh machine to a shared image and stage weights once.
     pub fn from_image(image: Arc<ModelImage>) -> Result<LoadedModel> {
-        let mut machine = Machine::new(image.mach.clone());
-        machine.max_instret = simrun::MAX_INSTRET;
-        let spec = &image.specs[0];
-        simrun::stage_weights(&mut machine, &spec.graph, &spec.abi)?;
-        Ok(LoadedModel { image, machine, dirty: false })
+        let machine = fresh_machine(&image)?;
+        Ok(LoadedModel { image, machine, dirty: false, rebuilds: 0 })
     }
 
     pub fn image(&self) -> &Arc<ModelImage> {
         &self.image
+    }
+
+    /// Recover from a machine-scoped failure (trap, caught panic, injected
+    /// fault): discard the suspect machine — its DMEM, *WMEM*, registers,
+    /// and caches may all be corrupted — and rebuild from the immutable
+    /// image exactly as [`Self::from_image`] did. The PR 6 reuse invariant
+    /// then guarantees subsequent requests are bit-identical to a
+    /// fresh-machine run.
+    pub fn rebuild(&mut self) -> Result<()> {
+        self.machine = fresh_machine(&self.image)?;
+        self.dirty = false;
+        self.rebuilds += 1;
+        Ok(())
+    }
+
+    /// Machine rebuilds performed so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Arm a one-shot fault schedule on the underlying machine: the next
+    /// [`Self::infer`] consumes it (fault-injection harness / chaos mode).
+    pub fn arm_faults(&mut self, plan: crate::sim::fault::FaultPlan) {
+        self.machine.arm_faults(plan);
     }
 
     /// Serve one request: reset the machine (keeping staged weights), stage

@@ -94,8 +94,14 @@ pub struct LoadReport {
     pub shed_submit: u64,
     /// Completed successfully.
     pub ok: u64,
+    /// Shed synchronously by `submit` because the model was quarantined by
+    /// its circuit breaker.
+    pub shed_quarantine: u64,
     /// Shed by a worker after queueing past the deadline.
     pub shed_deadline: u64,
+    /// Completed with a machine-scoped error (trap or worker panic that
+    /// survived every retry) — the chaos-mode unavailability signal.
+    pub failed_machine: u64,
     /// Completed with any other error (always 0 in a healthy run).
     pub failed: u64,
     pub duration_s: f64,
@@ -107,17 +113,33 @@ impl LoadReport {
         self.generated as f64 / self.duration_s.max(1e-9)
     }
 
+    /// Fraction of *completed* (non-shed) requests that were served
+    /// successfully — sheds are backpressure, not unavailability; a typed
+    /// failure after retries is. 1.0 when nothing completed.
+    pub fn availability(&self) -> f64 {
+        let completed = self.ok + self.failed + self.failed_machine;
+        if completed == 0 {
+            1.0
+        } else {
+            self.ok as f64 / completed as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{} generated in {:.2}s ({:.0} req/s offered): {} ok, {} shed at submit, \
-             {} shed at deadline, {} failed, {} sampled",
+             {} shed quarantined, {} shed at deadline, {} failed machine-scoped, \
+             {} failed, {:.4} availability, {} sampled",
             self.generated,
             self.duration_s,
             self.offered_rps(),
             self.ok,
             self.shed_submit,
+            self.shed_quarantine,
             self.shed_deadline,
+            self.failed_machine,
             self.failed,
+            self.availability(),
             self.samples.len(),
         )
     }
@@ -127,9 +149,12 @@ impl LoadReport {
             ("generated", Json::Num(self.generated as f64)),
             ("accepted", Json::Num(self.accepted as f64)),
             ("shed_submit", Json::Num(self.shed_submit as f64)),
+            ("shed_quarantine", Json::Num(self.shed_quarantine as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("failed_machine", Json::Num(self.failed_machine as f64)),
             ("failed", Json::Num(self.failed as f64)),
+            ("availability", Json::Num(self.availability())),
             ("duration_s", Json::Num(self.duration_s)),
             ("offered_rps", Json::Num(self.offered_rps())),
             ("samples", Json::Num(self.samples.len() as f64)),
@@ -159,12 +184,14 @@ pub fn drive(
     assert!(total_weight > 0.0, "loadgen mix weights must sum > 0");
 
     let (tx, rx) = mpsc::channel::<(Ticket, Option<(usize, usize, u64)>)>();
-    let (mut generated, mut accepted, mut shed_submit) = (0u64, 0u64, 0u64);
+    let (mut generated, mut accepted, mut shed_submit, mut shed_quarantine) =
+        (0u64, 0u64, 0u64, 0u64);
     let start = Instant::now();
 
-    let (ok, shed_deadline, failed, samples) = std::thread::scope(|s| {
+    let (ok, shed_deadline, failed_machine, failed, samples) = std::thread::scope(|s| {
         let collector = s.spawn(move || {
-            let (mut ok, mut shed_deadline, mut failed) = (0u64, 0u64, 0u64);
+            let (mut ok, mut shed_deadline, mut failed_machine, mut failed) =
+                (0u64, 0u64, 0u64, 0u64);
             let mut samples = Vec::new();
             for (ticket, tag) in rx {
                 match ticket.wait() {
@@ -187,13 +214,15 @@ pub fn drive(
                     Err(e) => {
                         if e.to_string().contains("deadline") {
                             shed_deadline += 1;
+                        } else if e.is_machine_scoped() {
+                            failed_machine += 1;
                         } else {
                             failed += 1;
                         }
                     }
                 }
             }
-            (ok, shed_deadline, failed, samples)
+            (ok, shed_deadline, failed_machine, failed, samples)
         });
 
         let mut rng = Rng::new(opts.seed);
@@ -241,7 +270,13 @@ pub fn drive(
                     // Collector hung up only if it panicked; surface that.
                     tx.send((ticket, tag)).expect("loadgen collector died");
                 }
-                Err(_) => shed_submit += 1,
+                Err(e) => {
+                    if e.to_string().contains("quarantine") {
+                        shed_quarantine += 1;
+                    } else {
+                        shed_submit += 1;
+                    }
+                }
             }
         }
         drop(tx);
@@ -252,8 +287,10 @@ pub fn drive(
         generated,
         accepted,
         shed_submit,
+        shed_quarantine,
         ok,
         shed_deadline,
+        failed_machine,
         failed,
         duration_s: start.elapsed().as_secs_f64(),
         samples,
@@ -376,7 +413,7 @@ mod tests {
         let fleet = DemoFleet::build().unwrap();
         let server = Server::start(
             &fleet.images,
-            ServerOptions { workers: 2, max_batch: 4, queue_depth: 16, deadline: None },
+            ServerOptions { workers: 2, max_batch: 4, queue_depth: 16, ..Default::default() },
         )
         .unwrap();
         let report = drive(

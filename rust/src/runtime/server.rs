@@ -23,23 +23,78 @@
 //!   serial [`LoadedModel::infer`] of the same request
 //!   (`rust/tests/serving.rs` proves it under concurrency).
 //!
+//! # Fault tolerance
+//!
+//! The server assumes machines fail: traps, injected hardware faults, and
+//! panicking kernels are part of the operating envelope, not exceptional
+//! aborts. The discipline, end to end:
+//!
+//! - **Isolation.** Every request runs under `catch_unwind`; a panicking
+//!   kernel fails one ticket with [`Error::Panic`], not the fleet. A panic
+//!   that escapes a worker loop is caught by its supervisor, which rebuilds
+//!   the worker's machines from the immutable images and respawns the loop;
+//!   requests that were in flight resolve with a typed error (never a hang).
+//! - **Recovery + retry.** Machine-scoped failures ([`Error::is_machine_scoped`]:
+//!   traps and panics) discard the suspect machine via [`LoadedModel::rebuild`]
+//!   and retry the request with bounded exponential backoff, as long as
+//!   attempts and the request deadline allow. Request-scoped failures (bad
+//!   shape, shed) are returned immediately — retrying cannot help.
+//! - **Circuit breaking.** `breaker_threshold` consecutive machine-scoped
+//!   request failures quarantine the model: submits shed with a
+//!   "quarantined" error until `breaker_cooldown` elapses, then one
+//!   half-open probe is admitted; its outcome closes or reopens the circuit.
+//! - **Never a wrong answer.** A fault can cost a retry, a rebuild, or the
+//!   request — it can never change served bits: every completed response is
+//!   bit-identical (outputs *and* [`RunStats`]) to a serial fresh-machine
+//!   run of the same request. `rust/tests/fault_tolerance.rs` and
+//!   `benches/bench_fault_injection.rs` prove it under injected chaos.
+//!
 //! [`Server::shutdown`] closes the queues, drains what's enqueued, joins
-//! the pool, and returns a [`ServerReport`]: throughput (req/s and
-//! simulated MIPS), latency percentiles, batching efficiency, queue-depth
-//! and shed accounting — what `benches/bench_serving.rs` emits as
-//! `BENCH_serving.json`.
+//! the pool (harvesting worker panics instead of propagating them), fails
+//! anything still queued with a typed error, and returns a [`ServerReport`]:
+//! throughput (req/s and simulated MIPS), latency percentiles, batching
+//! efficiency, queue-depth/shed accounting, and the fault-tolerance
+//! counters (retries, rebuilds, panics, quarantine transitions) — what
+//! `benches/bench_serving.rs` and `benches/bench_fault_injection.rs` emit
+//! as JSON artifacts.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::ir::tensor::Tensor;
 use crate::runtime::engine::{InferenceRequest, LoadedModel, ModelImage};
+use crate::sim::fault::FaultPlan;
 use crate::sim::machine::RunStats;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
+use crate::util::lock_recover;
+use crate::util::rng::Rng;
 use crate::util::stats::percentile;
+
+/// Chaos-mode knobs: seeded fault/panic/crash injection rates the load
+/// generator and the fault-tolerance suite drive the server with.
+#[derive(Debug, Clone)]
+pub struct ChaosOptions {
+    /// Probability that a request attempt runs with a detected injected
+    /// machine fault armed ([`FaultPlan::chaos`]).
+    pub fault_rate: f64,
+    /// Probability that a request attempt panics inside the worker.
+    pub panic_rate: f64,
+    /// Probability per dequeued batch that the whole worker thread crashes
+    /// (exercises supervisor respawn + in-flight ticket resolution).
+    pub crash_rate: f64,
+    /// Seed for the per-worker chaos PRNG (deterministic chaos).
+    pub seed: u64,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> ChaosOptions {
+        ChaosOptions { fault_rate: 0.0, panic_rate: 0.0, crash_rate: 0.0, seed: 42 }
+    }
+}
 
 /// Server tuning knobs (`xgenc serve` flags map 1:1 onto these).
 #[derive(Debug, Clone)]
@@ -52,11 +107,32 @@ pub struct ServerOptions {
     pub queue_depth: usize,
     /// Shed requests that queued longer than this before dispatch.
     pub deadline: Option<Duration>,
+    /// Max retry attempts after a machine-scoped failure (0 = fail fast).
+    pub retries: u32,
+    /// Initial retry backoff; doubles per attempt, bounded by `deadline`.
+    pub retry_backoff: Duration,
+    /// Consecutive machine-scoped request failures before a model is
+    /// quarantined (min 1).
+    pub breaker_threshold: u32,
+    /// Quarantine duration before a half-open probe is admitted.
+    pub breaker_cooldown: Duration,
+    /// Fault/panic/crash injection (None = production, no chaos).
+    pub chaos: Option<ChaosOptions>,
 }
 
 impl Default for ServerOptions {
     fn default() -> ServerOptions {
-        ServerOptions { workers: 0, max_batch: 8, queue_depth: 256, deadline: None }
+        ServerOptions {
+            workers: 0,
+            max_batch: 8,
+            queue_depth: 256,
+            deadline: None,
+            retries: 2,
+            retry_backoff: Duration::from_micros(200),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(50),
+            chaos: None,
+        }
     }
 }
 
@@ -76,26 +152,35 @@ struct Slot {
     done: Condvar,
 }
 
+/// First write wins: a slot is filled exactly once (the explicit serve/shed
+/// path, or the [`Pending`] drop glue when a worker crashed mid-flight).
 fn fill(slot: &Slot, out: Result<ServedOutput>) {
-    let mut r = slot.result.lock().unwrap();
-    *r = Some(out);
-    slot.done.notify_all();
+    let mut r = lock_recover(&slot.result);
+    if r.is_none() {
+        *r = Some(out);
+        slot.done.notify_all();
+    }
 }
 
 /// Handle to one submitted request; [`Ticket::wait`] blocks until a worker
-/// serves or sheds it.
+/// serves or sheds it. Never hangs: every accepted request's slot is filled
+/// by the serve path, the crash drop glue, or the shutdown drain.
 pub struct Ticket {
     slot: Arc<Slot>,
 }
 
 impl Ticket {
     pub fn wait(self) -> Result<ServedOutput> {
-        let mut r = self.slot.result.lock().unwrap();
+        let mut r = lock_recover(&self.slot.result);
         loop {
             if let Some(out) = r.take() {
                 return out;
             }
-            r = self.slot.done.wait(r).unwrap();
+            r = self
+                .slot
+                .done
+                .wait(r)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -107,13 +192,42 @@ struct Pending {
     slot: Arc<Slot>,
 }
 
+impl Drop for Pending {
+    /// Crash glue: if this request is dropped with its slot still empty
+    /// (a worker panicked while it was in flight, or a queue was dropped
+    /// wholesale), resolve the ticket with a typed machine-scoped error so
+    /// [`Ticket::wait`] can never hang.
+    fn drop(&mut self) {
+        fill(
+            &self.slot,
+            Err(Error::Panic("worker crashed with the request in flight".into())),
+        );
+    }
+}
+
+/// Per-model circuit breaker state (driven under the server state lock).
+enum BreakerState {
+    Closed,
+    Open { since: Instant },
+    HalfOpen,
+}
+
+struct Breaker {
+    consecutive: u32,
+    state: BreakerState,
+}
+
 /// Everything behind the server mutex: the per-model queues plus the
-/// submit-side counters maintained under the same lock.
+/// submit-side counters and circuit breakers maintained under the same lock.
 struct State {
     queues: Vec<VecDeque<Pending>>,
+    breakers: Vec<Breaker>,
     open: bool,
     submitted: u64,
     shed_queue_full: u64,
+    shed_quarantine: u64,
+    quarantine_opened: u64,
+    quarantine_probes: u64,
     depth_samples: u64,
     depth_sum: u64,
     depth_max: usize,
@@ -140,6 +254,11 @@ struct WorkerStats {
     cycles: u64,
     instret: u64,
     per_model_served: Vec<u64>,
+    retries: u64,
+    rebuilds: u64,
+    machine_failures: u64,
+    panics: u64,
+    worker_respawns: u64,
 }
 
 /// The running server. Always finish with [`Server::shutdown`]; dropping
@@ -162,7 +281,8 @@ impl Server {
             workers: crate::util::resolve_workers(opts.workers),
             max_batch: opts.max_batch.max(1),
             queue_depth: opts.queue_depth.max(1),
-            deadline: opts.deadline,
+            breaker_threshold: opts.breaker_threshold.max(1),
+            ..opts
         };
         let mut fleets: Vec<Vec<LoadedModel>> = Vec::with_capacity(opts.workers);
         for _ in 0..opts.workers {
@@ -175,9 +295,16 @@ impl Server {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 queues: images.iter().map(|_| VecDeque::new()).collect(),
+                breakers: images
+                    .iter()
+                    .map(|_| Breaker { consecutive: 0, state: BreakerState::Closed })
+                    .collect(),
                 open: true,
                 submitted: 0,
                 shed_queue_full: 0,
+                shed_quarantine: 0,
+                quarantine_opened: 0,
+                quarantine_probes: 0,
                 depth_samples: 0,
                 depth_sum: 0,
                 depth_max: 0,
@@ -191,18 +318,20 @@ impl Server {
             .enumerate()
             .map(|(w, fleet)| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared, fleet, w))
+                let images: Vec<Arc<ModelImage>> = images.to_vec();
+                std::thread::spawn(move || supervise(&shared, &images, fleet, w))
             })
             .collect();
         Ok(Server { shared, handles, started: Instant::now() })
     }
 
     pub fn model_count(&self) -> usize {
-        self.shared.state.lock().unwrap().queues.len()
+        lock_recover(&self.shared.state).queues.len()
     }
 
     /// Enqueue a request; sheds with an error when the model's queue is
-    /// full (graceful backpressure for open-loop arrivals).
+    /// full (graceful backpressure for open-loop arrivals) or the model is
+    /// quarantined by its circuit breaker.
     pub fn submit(&self, model: usize, req: InferenceRequest) -> Result<Ticket> {
         self.enqueue(model, req, false)
     }
@@ -215,7 +344,7 @@ impl Server {
 
     fn enqueue(&self, model: usize, req: InferenceRequest, block: bool) -> Result<Ticket> {
         let shared = &self.shared;
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_recover(&shared.state);
         if model >= st.queues.len() {
             return Err(Error::Runtime(format!(
                 "unknown model index {model} (fleet has {})",
@@ -224,11 +353,37 @@ impl Server {
         }
         if block {
             while st.open && st.queues[model].len() >= shared.opts.queue_depth {
-                st = shared.space.wait(st).unwrap();
+                st = shared.space.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         }
         if !st.open {
             return Err(Error::Runtime("server is shut down".into()));
+        }
+        // Circuit breaker: quarantined models shed at submit; after the
+        // cooldown one half-open probe is admitted to test recovery.
+        match st.breakers[model].state {
+            BreakerState::Open { since } => {
+                if since.elapsed() >= shared.opts.breaker_cooldown {
+                    st.breakers[model].state = BreakerState::HalfOpen;
+                    st.quarantine_probes += 1;
+                } else {
+                    st.shed_quarantine += 1;
+                    return Err(Error::Runtime(format!(
+                        "shed: model {model} quarantined (circuit open after {} \
+                         consecutive machine failures)",
+                        st.breakers[model].consecutive
+                    )));
+                }
+            }
+            BreakerState::HalfOpen => {
+                // A probe is already in flight; keep shedding until it
+                // resolves the breaker one way or the other.
+                st.shed_quarantine += 1;
+                return Err(Error::Runtime(format!(
+                    "shed: model {model} quarantined (half-open probe in flight)"
+                )));
+            }
+            BreakerState::Closed => {}
         }
         if st.queues[model].len() >= shared.opts.queue_depth {
             st.shed_queue_full += 1;
@@ -255,35 +410,64 @@ impl Server {
     }
 
     /// Close the queues, let the workers drain what is already enqueued,
-    /// join the pool, and return the merged report.
+    /// join the pool — harvesting panicked workers instead of propagating —
+    /// fail anything still queued with a typed error, and return the merged
+    /// report. After this returns, every ticket ever issued has resolved.
     pub fn shutdown(self) -> ServerReport {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.open = false;
         }
         self.shared.work.notify_all();
         self.shared.space.notify_all();
         let workers = self.handles.len();
         let mut merged = WorkerStats::default();
+        let mut crashed_workers = 0u64;
         for h in self.handles {
-            let w = h.join().expect("server worker panicked");
-            merged.served += w.served;
-            merged.shed_deadline += w.shed_deadline;
-            merged.batches += w.batches;
-            merged.batched_requests += w.batched_requests;
-            merged.max_batch_seen = merged.max_batch_seen.max(w.max_batch_seen);
-            merged.latencies_ms.extend(w.latencies_ms);
-            merged.cycles += w.cycles;
-            merged.instret += w.instret;
-            if merged.per_model_served.len() < w.per_model_served.len() {
-                merged.per_model_served.resize(w.per_model_served.len(), 0);
-            }
-            for (m, n) in w.per_model_served.iter().enumerate() {
-                merged.per_model_served[m] += n;
+            match h.join() {
+                Ok(w) => {
+                    merged.served += w.served;
+                    merged.shed_deadline += w.shed_deadline;
+                    merged.batches += w.batches;
+                    merged.batched_requests += w.batched_requests;
+                    merged.max_batch_seen = merged.max_batch_seen.max(w.max_batch_seen);
+                    merged.latencies_ms.extend(w.latencies_ms);
+                    merged.cycles += w.cycles;
+                    merged.instret += w.instret;
+                    merged.retries += w.retries;
+                    merged.rebuilds += w.rebuilds;
+                    merged.machine_failures += w.machine_failures;
+                    merged.panics += w.panics;
+                    merged.worker_respawns += w.worker_respawns;
+                    if merged.per_model_served.len() < w.per_model_served.len() {
+                        merged.per_model_served.resize(w.per_model_served.len(), 0);
+                    }
+                    for (m, n) in w.per_model_served.iter().enumerate() {
+                        merged.per_model_served[m] += n;
+                    }
+                }
+                // A supervisor itself died; its stats are lost but shutdown
+                // must not: the queue drain below keeps every ticket resolved.
+                Err(_) => crashed_workers += 1,
             }
         }
+        merged.panics += crashed_workers;
         let wall_seconds = self.started.elapsed().as_secs_f64();
-        let st = self.shared.state.lock().unwrap();
+        let mut st = lock_recover(&self.shared.state);
+        // Workers normally drain the queues before exiting; if any died for
+        // good, fail the leftovers with a typed error so no Ticket hangs.
+        let mut failed_at_shutdown = 0u64;
+        for q in st.queues.iter_mut() {
+            while let Some(p) = q.pop_front() {
+                failed_at_shutdown += 1;
+                fill(
+                    &p.slot,
+                    Err(Error::Runtime(
+                        "server shut down before serving this request".into(),
+                    )),
+                );
+            }
+        }
         ServerReport {
             workers,
             wall_seconds,
@@ -291,6 +475,8 @@ impl Server {
             served: merged.served,
             shed_queue_full: st.shed_queue_full,
             shed_deadline: merged.shed_deadline,
+            shed_quarantine: st.shed_quarantine,
+            failed_at_shutdown,
             batches: merged.batches,
             batched_requests: merged.batched_requests,
             max_batch: merged.max_batch_seen,
@@ -304,20 +490,99 @@ impl Server {
                 st.depth_sum as f64 / st.depth_samples as f64
             },
             max_queue_depth: st.depth_max,
+            retries: merged.retries,
+            rebuilds: merged.rebuilds,
+            machine_failures: merged.machine_failures,
+            panics: merged.panics,
+            worker_respawns: merged.worker_respawns,
+            quarantine_opened: st.quarantine_opened,
+            quarantine_probes: st.quarantine_probes,
         }
     }
 }
 
-fn worker_loop(shared: &Shared, mut fleet: Vec<LoadedModel>, wid: usize) -> WorkerStats {
+/// Reset a model's breaker after a served request.
+fn breaker_success(shared: &Shared, model: usize) {
+    let mut st = lock_recover(&shared.state);
+    let b = &mut st.breakers[model];
+    b.consecutive = 0;
+    b.state = BreakerState::Closed;
+}
+
+/// Record a machine-scoped request failure; trips the breaker at the
+/// configured threshold (immediately, for a failed half-open probe).
+fn breaker_failure(shared: &Shared, model: usize) {
+    let mut st = lock_recover(&shared.state);
+    let tripped = {
+        let b = &mut st.breakers[model];
+        b.consecutive += 1;
+        let should_open = matches!(b.state, BreakerState::HalfOpen)
+            || b.consecutive >= shared.opts.breaker_threshold;
+        if should_open && !matches!(b.state, BreakerState::Open { .. }) {
+            b.state = BreakerState::Open { since: Instant::now() };
+            true
+        } else {
+            false
+        }
+    };
+    if tripped {
+        st.quarantine_opened += 1;
+    }
+}
+
+/// Supervisor for one worker slot: run the worker loop, and when it
+/// panics (chaos crash injection or a real bug escaping the per-request
+/// isolation), rebuild the whole fleet from the immutable images and
+/// respawn the loop. In-flight requests of the crashed loop resolve via
+/// the [`Pending`] drop glue. Returns the accumulated stats at shutdown.
+fn supervise(
+    shared: &Shared,
+    images: &[Arc<ModelImage>],
+    mut fleet: Vec<LoadedModel>,
+    wid: usize,
+) -> WorkerStats {
+    let mut stats =
+        WorkerStats { per_model_served: vec![0; images.len()], ..Default::default() };
+    loop {
+        let exited =
+            catch_unwind(AssertUnwindSafe(|| worker_loop(shared, &mut fleet, wid, &mut stats)));
+        if exited.is_ok() {
+            return stats; // clean shutdown
+        }
+        stats.panics += 1;
+        stats.worker_respawns += 1;
+        let rebuilt: Result<Vec<LoadedModel>> = images
+            .iter()
+            .map(|img| LoadedModel::from_image(Arc::clone(img)))
+            .collect();
+        match rebuilt {
+            Ok(f) => fleet = f,
+            // Cannot rebuild a servable fleet: give up this slot. Other
+            // workers keep serving; the shutdown drain resolves leftovers.
+            Err(_) => return stats,
+        }
+    }
+}
+
+fn worker_loop(
+    shared: &Shared,
+    fleet: &mut [LoadedModel],
+    wid: usize,
+    stats: &mut WorkerStats,
+) {
     let n_models = fleet.len();
-    let mut stats = WorkerStats { per_model_served: vec![0; n_models], ..Default::default() };
+    // Deterministic per-worker chaos stream (respawns restart it).
+    let mut chaos: Option<(ChaosOptions, Rng)> = shared.opts.chaos.clone().map(|c| {
+        let rng = Rng::new(c.seed ^ (wid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (c, rng)
+    });
     // Stagger starting queues across workers so a mixed fleet doesn't
     // funnel every worker onto model 0.
     let mut cursor = wid % n_models;
     loop {
         let mut batch: Vec<Pending> = Vec::new();
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             loop {
                 let found = (0..n_models)
                     .map(|k| (cursor + k) % n_models)
@@ -336,15 +601,22 @@ fn worker_loop(shared: &Shared, mut fleet: Vec<LoadedModel>, wid: usize) -> Work
                     break;
                 }
                 if !st.open {
-                    return stats;
+                    return;
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         }
         shared.space.notify_all();
         stats.batches += 1;
         stats.batched_requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+        // Chaos: whole-worker crash with the batch in flight — the batch's
+        // Pending drop glue resolves its tickets, the supervisor respawns.
+        if let Some((c, rng)) = chaos.as_mut() {
+            if c.crash_rate > 0.0 && rng.chance(c.crash_rate) {
+                panic!("chaos: injected worker crash");
+            }
+        }
         for p in batch {
             if let Some(deadline) = shared.opts.deadline {
                 let waited = p.enqueued.elapsed();
@@ -361,27 +633,105 @@ fn worker_loop(shared: &Shared, mut fleet: Vec<LoadedModel>, wid: usize) -> Work
                     continue;
                 }
             }
-            match fleet[p.model].infer(&p.req) {
-                Ok(resp) => {
-                    stats.served += 1;
-                    stats.per_model_served[p.model] += 1;
-                    stats.cycles += resp.stats.cycles;
-                    stats.instret += resp.stats.instret;
-                    let latency = p.enqueued.elapsed();
-                    stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
-                    fill(
-                        &p.slot,
-                        Ok(ServedOutput {
-                            model: p.model,
-                            outputs: resp.outputs,
-                            stats: resp.stats,
-                            latency,
-                        }),
-                    );
-                }
-                Err(e) => fill(&p.slot, Err(e)),
-            }
+            serve_one(shared, fleet, &p, &mut chaos, stats);
         }
+    }
+}
+
+/// Serve one request with per-request panic isolation, machine rebuild on
+/// machine-scoped failure, bounded exponential-backoff retry under the
+/// deadline, and circuit-breaker accounting.
+fn serve_one(
+    shared: &Shared,
+    fleet: &mut [LoadedModel],
+    p: &Pending,
+    chaos: &mut Option<(ChaosOptions, Rng)>,
+    stats: &mut WorkerStats,
+) {
+    let mut backoff = shared.opts.retry_backoff;
+    let mut attempt = 0u32;
+    loop {
+        // Chaos: arm an injected machine fault and/or a kernel panic for
+        // this attempt. Injected faults are *detected* — they trap, they
+        // never silently corrupt a served answer.
+        let mut chaos_panic = false;
+        if let Some((c, rng)) = chaos.as_mut() {
+            if c.fault_rate > 0.0 && rng.chance(c.fault_rate) {
+                fleet[p.model].arm_faults(FaultPlan::chaos(rng.next_u64()));
+            }
+            chaos_panic = c.panic_rate > 0.0 && rng.chance(c.panic_rate);
+        }
+        let lm = &mut fleet[p.model];
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if chaos_panic {
+                panic!("chaos: injected kernel panic");
+            }
+            lm.infer(&p.req)
+        }));
+        let err = match outcome {
+            Ok(Ok(resp)) => {
+                breaker_success(shared, p.model);
+                stats.served += 1;
+                stats.per_model_served[p.model] += 1;
+                stats.cycles += resp.stats.cycles;
+                stats.instret += resp.stats.instret;
+                let latency = p.enqueued.elapsed();
+                stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                fill(
+                    &p.slot,
+                    Ok(ServedOutput {
+                        model: p.model,
+                        outputs: resp.outputs,
+                        stats: resp.stats,
+                        latency,
+                    }),
+                );
+                return;
+            }
+            // Request-scoped: the request itself is bad (shape validation);
+            // the machine is fine and retrying cannot help.
+            Ok(Err(e)) if !e.is_machine_scoped() => {
+                fill(&p.slot, Err(e));
+                return;
+            }
+            Ok(Err(e)) => e,
+            Err(panic) => {
+                stats.panics += 1;
+                Error::Panic(panic_message(&panic))
+            }
+        };
+        // Machine-scoped failure: the machine is suspect (partial writes,
+        // flipped bits, caught panic mid-run) — rebuild it from the image.
+        stats.machine_failures += 1;
+        if fleet[p.model].rebuild().is_ok() {
+            stats.rebuilds += 1;
+        }
+        attempt += 1;
+        let deadline_allows = match shared.opts.deadline {
+            None => true,
+            Some(d) => p.enqueued.elapsed() + backoff <= d,
+        };
+        if attempt > shared.opts.retries || !deadline_allows {
+            breaker_failure(shared, p.model);
+            fill(&p.slot, Err(err));
+            return;
+        }
+        stats.retries += 1;
+        if !backoff.is_zero() {
+            std::thread::sleep(backoff);
+        }
+        backoff = backoff.saturating_mul(2);
+    }
+}
+
+/// Best-effort extraction of a panic payload message.
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
     }
 }
 
@@ -394,6 +744,10 @@ pub struct ServerReport {
     pub served: u64,
     pub shed_queue_full: u64,
     pub shed_deadline: u64,
+    /// Submits shed because the model's circuit breaker was open.
+    pub shed_quarantine: u64,
+    /// Accepted requests failed with a typed error by the shutdown drain.
+    pub failed_at_shutdown: u64,
     /// Dequeue operations and the requests they carried — efficiency is
     /// `batched_requests / batches`.
     pub batches: u64,
@@ -408,6 +762,20 @@ pub struct ServerReport {
     /// Queue depth sampled at every accepted submit.
     pub mean_queue_depth: f64,
     pub max_queue_depth: usize,
+    /// Retry attempts after machine-scoped failures.
+    pub retries: u64,
+    /// Machine rebuilds from the immutable image.
+    pub rebuilds: u64,
+    /// Request attempts that ended in a machine-scoped failure.
+    pub machine_failures: u64,
+    /// Panics caught (per-request isolation + worker crashes).
+    pub panics: u64,
+    /// Worker loops respawned by their supervisor after a crash.
+    pub worker_respawns: u64,
+    /// Circuit-breaker transitions into quarantine.
+    pub quarantine_opened: u64,
+    /// Half-open probes admitted after a quarantine cooldown.
+    pub quarantine_probes: u64,
 }
 
 impl ServerReport {
@@ -443,7 +811,9 @@ impl ServerReport {
         format!(
             "{} workers: {} served in {:.2}s ({:.0} req/s, {:.1} simulated MIPS) | \
              p50 {:.3} ms p99 {:.3} ms p99.9 {:.3} ms | batch {:.2} avg / {} max | \
-             queue {:.1} avg / {} max | shed {} full + {} deadline",
+             queue {:.1} avg / {} max | shed {} full + {} deadline + {} quarantine | \
+             faults: {} machine failures, {} retries, {} rebuilds, {} panics, \
+             {} respawns, {} quarantines opened",
             self.workers,
             self.served,
             self.wall_seconds,
@@ -458,6 +828,13 @@ impl ServerReport {
             self.max_queue_depth,
             self.shed_queue_full,
             self.shed_deadline,
+            self.shed_quarantine,
+            self.machine_failures,
+            self.retries,
+            self.rebuilds,
+            self.panics,
+            self.worker_respawns,
+            self.quarantine_opened,
         )
     }
 
@@ -470,6 +847,8 @@ impl ServerReport {
             ("served", Json::Num(self.served as f64)),
             ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
             ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("shed_quarantine", Json::Num(self.shed_quarantine as f64)),
+            ("failed_at_shutdown", Json::Num(self.failed_at_shutdown as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps())),
             ("simulated_mips", Json::Num(self.simulated_mips())),
             ("p50_ms", Json::Num(self.latency_ms(50.0))),
@@ -482,6 +861,13 @@ impl ServerReport {
             ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
             ("total_cycles", Json::Num(self.total_cycles as f64)),
             ("total_instret", Json::Num(self.total_instret as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("rebuilds", Json::Num(self.rebuilds as f64)),
+            ("machine_failures", Json::Num(self.machine_failures as f64)),
+            ("panics", Json::Num(self.panics as f64)),
+            ("worker_respawns", Json::Num(self.worker_respawns as f64)),
+            ("quarantine_opened", Json::Num(self.quarantine_opened as f64)),
+            ("quarantine_probes", Json::Num(self.quarantine_probes as f64)),
             ("per_model_served", Json::num_arr(&per_model)),
         ])
     }
@@ -527,6 +913,11 @@ mod tests {
         assert_eq!(report.batched_requests, 6);
         assert!(report.throughput_rps() > 0.0);
         assert!(report.batching_efficiency() >= 1.0);
+        // Fault-free serving touches none of the fault-tolerance machinery.
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.rebuilds, 0);
+        assert_eq!(report.panics, 0);
+        assert_eq!(report.quarantine_opened, 0);
     }
 
     #[test]

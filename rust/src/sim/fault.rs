@@ -1,0 +1,296 @@
+//! Typed machine traps and a deterministic fault-injection harness.
+//!
+//! # Trap taxonomy
+//!
+//! Every way a [`crate::sim::machine::Machine`] can stop abnormally is a
+//! [`Trap`]: a structured [`TrapKind`] plus the faulting pc and the
+//! *per-run* cycle/instret deltas at the moment of the trap. Traps are
+//! surfaced as [`crate::util::Error::Trap`], which callers classify as
+//! **machine-scoped**: the machine that raised one is suspect (partial
+//! writes, corrupted state) and must be rebuilt from its immutable image
+//! before serving again, while the *request* itself may be retried.
+//!
+//! The fast pre-decoded loop and the naive reference loop must produce
+//! bit-identical `Trap` values for the same program — `sim_equiv.rs`
+//! asserts this alongside the existing output/stats equivalence.
+//!
+//! # Fault injection
+//!
+//! A [`FaultPlan`] is a seeded, sorted schedule of [`Fault`]s that the
+//! fast run loop polls once per retired instruction. Supported faults:
+//!
+//! - **Bit flips** in DMEM/WMEM — `detected: true` models an ECC-style
+//!   detected corruption (the run traps immediately with
+//!   [`TrapKind::InjectedFault`]); `detected: false` models silent
+//!   corruption (the run continues and may produce different bits, which
+//!   the harness uses to prove rebuild restores bit-identity).
+//! - **Forced illegal-instruction traps** at a chosen retire count.
+//! - **Stuck-at register faults** — a register is rewritten with a fixed
+//!   value after every retired instruction (silent).
+//! - **Instruction-budget overruns** — the remaining budget collapses so
+//!   the machine's real `BudgetExceeded` path fires.
+//!
+//! # Never-wrong-answer invariant
+//!
+//! Fault injection exists to prove the serving stack's core promise:
+//! **a fault may cost a retry or lose a request, but a completed response
+//! is always bit-identical to a fault-free serial run.** Detected faults
+//! trap (the response is an error, never wrong bits); the only silent
+//! faults are the ones the harness injects on purpose to verify that
+//! machine rebuild restores bit-identity.
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+/// Sentinel pc for traps raised below the run loop (memory helpers) before
+/// the loop has a chance to fill in real context.
+pub const NO_PC: u32 = u32::MAX;
+
+/// What went wrong.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrapKind {
+    /// The fetched word does not decode to any supported instruction.
+    IllegalInstruction { word: u32 },
+    /// A jump/branch target is not 4-byte aligned.
+    MisalignedTarget { target: u32 },
+    /// A load/store touched bytes outside the addressed memory region.
+    OobAccess {
+        region: &'static str,
+        addr: u32,
+        len: u32,
+        store: bool,
+    },
+    /// The per-run instruction budget was exhausted (runaway kernel).
+    BudgetExceeded { budget: u64 },
+    /// A vector instruction executed on a scalar-only platform.
+    VectorUnsupported,
+    /// A detected injected fault (fault-injection harness only).
+    InjectedFault { desc: String },
+}
+
+impl fmt::Display for TrapKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrapKind::IllegalInstruction { word } => {
+                write!(f, "illegal instruction {word:#010x}")
+            }
+            TrapKind::MisalignedTarget { target } => {
+                write!(f, "misaligned branch target {target:#010x}")
+            }
+            TrapKind::OobAccess {
+                region,
+                addr,
+                len,
+                store,
+            } => {
+                let dir = if *store { "store" } else { "load" };
+                write!(f, "{region} OOB {dir} of {len} bytes at {addr:#010x}")
+            }
+            TrapKind::BudgetExceeded { budget } => {
+                write!(f, "instruction budget exceeded ({budget})")
+            }
+            TrapKind::VectorUnsupported => {
+                write!(f, "vector instruction on scalar-only platform")
+            }
+            TrapKind::InjectedFault { desc } => write!(f, "injected fault: {desc}"),
+        }
+    }
+}
+
+/// A machine trap: what happened, where, and when (per-run deltas).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trap {
+    pub kind: TrapKind,
+    /// Faulting pc, or [`NO_PC`] if raised below the run loop.
+    pub pc: u32,
+    /// Cycles elapsed *in this run* when the trap fired.
+    pub cycle: u64,
+    /// Instructions retired *in this run* when the trap fired.
+    pub instret: u64,
+}
+
+impl Trap {
+    /// A context-free trap; the run loop fills pc/cycle/instret via
+    /// `Machine::ctx` before the error escapes.
+    pub fn bare(kind: TrapKind) -> Self {
+        Trap {
+            kind,
+            pc: NO_PC,
+            cycle: 0,
+            instret: 0,
+        }
+    }
+}
+
+impl fmt::Display for Trap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.kind)?;
+        if self.pc != NO_PC {
+            write!(
+                f,
+                " at pc {:#010x} (cycle {}, instret {})",
+                self.pc, self.cycle, self.instret
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// A single injectable hardware fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one bit of a byte in machine memory (DMEM or WMEM by address).
+    /// `detected: true` traps immediately (ECC detection); `false` is
+    /// silent corruption.
+    BitFlip { addr: u32, bit: u8, detected: bool },
+    /// Force an illegal-instruction-style trap.
+    IllegalTrap,
+    /// From this point on, register `reg` reads back `value` after every
+    /// retired instruction (silent; x0 is exempt).
+    StuckReg { reg: u8, value: i32 },
+    /// Collapse the remaining instruction budget so the machine's real
+    /// budget-exceeded path fires on the next fetch.
+    BudgetOverrun,
+}
+
+/// A fault scheduled at a retire count within one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    /// Fires when this many instructions have retired in the current run.
+    pub at_instret: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, sorted schedule of faults for a single run.
+///
+/// The fast run loop polls the plan once per retired instruction; the plan
+/// is consumed by the run (one-shot) and its injection count is folded
+/// into `RunStats::faults_injected`. The reference loop never injects
+/// faults — it is the oracle the harness compares against.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    next: usize,
+    injected: u64,
+}
+
+impl FaultPlan {
+    /// Build a plan from an arbitrary set of faults (sorted internally).
+    pub fn new(mut faults: Vec<Fault>) -> Self {
+        faults.sort_by_key(|f| f.at_instret);
+        FaultPlan {
+            faults,
+            next: 0,
+            injected: 0,
+        }
+    }
+
+    /// A seeded single-fault chaos plan: one *detected* fault (bit flip,
+    /// forced illegal trap, or budget overrun) at a pseudorandom retire
+    /// count. Detected-only so chaos serving can never silently corrupt
+    /// an answer — that is the harness's never-wrong-answer invariant.
+    /// The retire count is kept small so the fault lands inside even a
+    /// short inference run (a plan scheduled past the end of the program
+    /// simply never fires, which reads as a fault-free request).
+    pub fn chaos(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17_AB1E);
+        let at_instret = 1 + rng.index(200) as u64;
+        let kind = match rng.index(3) {
+            0 => FaultKind::BitFlip {
+                // Low DMEM addresses exist on every platform config.
+                addr: rng.index(4096) as u32,
+                bit: (rng.index(8)) as u8,
+                detected: true,
+            },
+            1 => FaultKind::IllegalTrap,
+            _ => FaultKind::BudgetOverrun,
+        };
+        FaultPlan::new(vec![Fault { at_instret, kind }])
+    }
+
+    /// The next fault due at or before `retired` instructions, if any.
+    /// Advances the schedule and counts the injection.
+    pub fn next_due(&mut self, retired: u64) -> Option<FaultKind> {
+        let f = self.faults.get(self.next)?;
+        if f.at_instret <= retired {
+            self.next += 1;
+            self.injected += 1;
+            Some(f.kind)
+        } else {
+            None
+        }
+    }
+
+    /// Faults injected so far by this plan.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Total faults scheduled.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// True when no faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_fires_in_retire_order() {
+        let mut plan = FaultPlan::new(vec![
+            Fault {
+                at_instret: 30,
+                kind: FaultKind::IllegalTrap,
+            },
+            Fault {
+                at_instret: 10,
+                kind: FaultKind::BudgetOverrun,
+            },
+        ]);
+        assert_eq!(plan.next_due(5), None);
+        assert_eq!(plan.next_due(10), Some(FaultKind::BudgetOverrun));
+        assert_eq!(plan.next_due(10), None);
+        assert_eq!(plan.next_due(31), Some(FaultKind::IllegalTrap));
+        assert_eq!(plan.next_due(1000), None);
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn chaos_plan_is_deterministic_and_detected() {
+        let a = FaultPlan::chaos(7);
+        let b = FaultPlan::chaos(7);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.len(), 1);
+        // Chaos plans must never schedule silent corruption.
+        match a.faults[0].kind {
+            FaultKind::BitFlip { detected, .. } => assert!(detected),
+            FaultKind::IllegalTrap | FaultKind::BudgetOverrun => {}
+            FaultKind::StuckReg { .. } => panic!("chaos scheduled a silent fault"),
+        }
+    }
+
+    #[test]
+    fn trap_display_keeps_legacy_substrings() {
+        let t = Trap {
+            kind: TrapKind::BudgetExceeded { budget: 1000 },
+            pc: 0x40,
+            cycle: 12,
+            instret: 1001,
+        };
+        let s = t.to_string();
+        assert!(s.contains("budget"), "{s}");
+        assert!(s.contains("pc 0x00000040"), "{s}");
+
+        let m = Trap::bare(TrapKind::MisalignedTarget { target: 0x1232 });
+        assert!(m.to_string().contains("misaligned"), "{m}");
+        // Bare traps print no pc context.
+        assert!(!m.to_string().contains("pc"), "{m}");
+    }
+}

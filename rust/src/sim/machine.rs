@@ -27,6 +27,7 @@ use std::collections::BTreeMap;
 
 use crate::isa::{decode, regs, Op, OpClass};
 use crate::sim::cache::Hierarchy;
+use crate::sim::fault::{FaultKind, FaultPlan, Trap, TrapKind, NO_PC};
 use crate::sim::predecode::{self, MicroOp, Predecoded, Slot};
 use crate::sim::{layout, MachineConfig};
 use crate::util::error::{Error, Result};
@@ -37,6 +38,9 @@ pub struct RunStats {
     pub cycles: u64,
     pub instret: u64,
     pub class_counts: BTreeMap<&'static str, u64>,
+    /// Faults delivered by an armed [`FaultPlan`] during this run (always 0
+    /// on the reference path and on fault-free runs).
+    pub faults_injected: u64,
 }
 
 /// Where execution goes after one step.
@@ -68,18 +72,24 @@ pub struct Machine {
     /// Issue-width-scaled cycle cost for 1- and 2-cycle Alu/Branch/Jump ops
     /// (precomputed so the hot loop never touches floating point).
     issue_scaled: [u64; 3],
+    /// One-shot fault schedule consumed by the next [`Self::run_predecoded`]
+    /// (the reference loop never injects — it is the fault-free oracle).
+    fault: Option<FaultPlan>,
 }
 
 #[cold]
-fn oob(region: &'static str, addr: u32, len: usize) -> Error {
-    Error::Sim(format!(
-        "{region} OOB access of {len} bytes at {addr:#010x}"
-    ))
+fn oob(region: &'static str, addr: u32, len: usize, store: bool) -> Error {
+    Error::Trap(Trap::bare(TrapKind::OobAccess {
+        region,
+        addr,
+        len: len as u32,
+        store,
+    }))
 }
 
 #[cold]
 fn scalar_only() -> Error {
-    Error::Sim("vector instruction on scalar-only platform".into())
+    Error::Trap(Trap::bare(TrapKind::VectorUnsupported))
 }
 
 /// Unified DMEM/WMEM read view: one region branch, one bounds check.
@@ -89,10 +99,12 @@ fn scalar_only() -> Error {
 fn view<'a>(dmem: &'a [u8], wmem: &'a [u8], addr: u32, len: usize) -> Result<&'a [u8]> {
     if addr >= layout::WMEM_BASE {
         let off = (addr - layout::WMEM_BASE) as usize;
-        wmem.get(off..off + len).ok_or_else(|| oob("WMEM", addr, len))
+        wmem.get(off..off + len)
+            .ok_or_else(|| oob("WMEM", addr, len, false))
     } else {
         let off = addr as usize;
-        dmem.get(off..off + len).ok_or_else(|| oob("DMEM", addr, len))
+        dmem.get(off..off + len)
+            .ok_or_else(|| oob("DMEM", addr, len, false))
     }
 }
 
@@ -107,11 +119,11 @@ fn view_mut<'a>(
     if addr >= layout::WMEM_BASE {
         let off = (addr - layout::WMEM_BASE) as usize;
         wmem.get_mut(off..off + len)
-            .ok_or_else(|| oob("WMEM", addr, len))
+            .ok_or_else(|| oob("WMEM", addr, len, true))
     } else {
         let off = addr as usize;
         dmem.get_mut(off..off + len)
-            .ok_or_else(|| oob("DMEM", addr, len))
+            .ok_or_else(|| oob("DMEM", addr, len, true))
     }
 }
 
@@ -148,7 +160,16 @@ impl Machine {
             class_counts: [0; OpClass::COUNT],
             max_instret: 500_000_000,
             issue_scaled,
+            fault: None,
         }
+    }
+
+    /// Arm a one-shot fault schedule: the next [`Self::run_predecoded`]
+    /// consumes it (injections are counted in `RunStats::faults_injected`
+    /// when the run completes). A full reset does not disarm it, so a plan
+    /// armed before `LoadedModel::infer` survives the pre-run reset.
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.fault = Some(plan);
     }
 
     /// Reset architectural state for a fresh run while keeping WMEM — the
@@ -289,15 +310,52 @@ impl Machine {
                 .map(|c| (c.name(), self.class_counts[c.index()] - start_counts[c.index()]))
                 .filter(|(_, n)| *n > 0)
                 .collect(),
+            faults_injected: 0,
+        }
+    }
+
+    /// A trap with full context: faulting pc plus the per-run cycle/instret
+    /// deltas *at this moment* (the run-loop counters have already been
+    /// bumped exactly as far as the reference loop would have).
+    #[cold]
+    fn trap_here(
+        &self,
+        kind: TrapKind,
+        pc: u32,
+        start_cycles: u64,
+        start_instret: u64,
+    ) -> Error {
+        Error::Trap(Trap {
+            kind,
+            pc,
+            cycle: self.cycles - start_cycles,
+            instret: self.instret - start_instret,
+        })
+    }
+
+    /// Fill pc/cycle/instret into a context-free trap raised below the run
+    /// loop (memory helpers, `step`); errors that already carry context —
+    /// or are not traps at all — pass through untouched.
+    #[cold]
+    fn ctx(&self, e: Error, pc: u32, start_cycles: u64, start_instret: u64) -> Error {
+        match e {
+            Error::Trap(t) if t.pc == NO_PC => {
+                self.trap_here(t.kind, pc, start_cycles, start_instret)
+            }
+            other => other,
         }
     }
 
     #[cold]
-    fn budget_exceeded(&self) -> Error {
-        Error::Sim(format!(
-            "instruction budget exceeded ({})",
-            self.max_instret
-        ))
+    fn budget_exceeded(&self, pc: u32, start_cycles: u64, start_instret: u64) -> Error {
+        self.trap_here(
+            TrapKind::BudgetExceeded {
+                budget: self.max_instret,
+            },
+            pc,
+            start_cycles,
+            start_instret,
+        )
     }
 
     // -- execution: fast path ----------------------------------------------
@@ -321,39 +379,105 @@ impl Machine {
         let start_instret = self.instret;
         let start_cycles = self.cycles;
         let start_counts = self.class_counts;
+        // Fault harness state: the armed plan is consumed by this run; a
+        // BudgetOverrun fault collapses the *local* budget so the machine's
+        // real budget-exceeded path fires; a StuckReg fault pins a register
+        // after every retired instruction from then on.
+        let mut plan = self.fault.take();
+        let mut budget = self.max_instret;
+        let mut stuck: Option<(usize, i32)> = None;
         let n = p.len();
         let mut idx = 0usize;
         while idx < n {
-            if self.instret - start_instret > self.max_instret {
-                return Err(self.budget_exceeded());
+            let pc = (idx * 4) as u32;
+            let retired = self.instret - start_instret;
+            if retired > budget {
+                return Err(self.budget_exceeded(pc, start_cycles, start_instret));
+            }
+            if let Some(pl) = plan.as_mut() {
+                while let Some(k) = pl.next_due(retired) {
+                    match k {
+                        FaultKind::BitFlip {
+                            addr,
+                            bit,
+                            detected,
+                        } => {
+                            if let Ok(b) = self.mem_mut(addr, 1) {
+                                b[0] ^= 1 << (bit & 7);
+                            }
+                            if detected {
+                                return Err(self.trap_here(
+                                    TrapKind::InjectedFault {
+                                        desc: format!(
+                                            "detected bit flip (bit {} at {addr:#010x})",
+                                            bit & 7
+                                        ),
+                                    },
+                                    pc,
+                                    start_cycles,
+                                    start_instret,
+                                ));
+                            }
+                        }
+                        FaultKind::IllegalTrap => {
+                            return Err(self.trap_here(
+                                TrapKind::InjectedFault {
+                                    desc: "forced illegal-instruction trap".into(),
+                                },
+                                pc,
+                                start_cycles,
+                                start_instret,
+                            ));
+                        }
+                        FaultKind::StuckReg { reg, value } => {
+                            stuck = Some(((reg as usize & 31).max(1), value));
+                        }
+                        FaultKind::BudgetOverrun => budget = retired,
+                    }
+                }
             }
             match &p.slots[idx] {
                 Slot::Op(u) => {
                     self.instret += 1;
-                    idx = match self.step(u)? {
+                    let ctl = match self.step(u) {
+                        Ok(c) => c,
+                        Err(e) => return Err(self.ctx(e, pc, start_cycles, start_instret)),
+                    };
+                    if let Some((r, v)) = stuck {
+                        self.x[r] = v;
+                    }
+                    idx = match ctl {
                         Ctl::Next => idx + 1,
                         Ctl::Jump(t) => t,
                     };
                 }
                 Slot::Illegal(w) => {
-                    // Re-derive the exact decode error lazily, preserving
-                    // the decode-per-step failure semantics.
-                    decode::decode(*w)?;
-                    return Err(Error::Sim(format!(
-                        "word {w:#010x} decoded on retry"
-                    )));
+                    // Executing an undecodable word faults before retiring —
+                    // same machine state as the reference loop's decode
+                    // failure (no instret bump).
+                    return Err(self.trap_here(
+                        TrapKind::IllegalInstruction { word: *w },
+                        pc,
+                        start_cycles,
+                        start_instret,
+                    ));
                 }
                 Slot::Misaligned(t) => {
                     // The word decoded fine — the reference loop retires its
                     // instret bump before faulting, so match that state.
                     self.instret += 1;
-                    return Err(Error::Sim(format!(
-                        "misaligned branch target {t:#010x}"
-                    )));
+                    return Err(self.trap_here(
+                        TrapKind::MisalignedTarget { target: *t },
+                        pc,
+                        start_cycles,
+                        start_instret,
+                    ));
                 }
             }
         }
-        Ok(self.stats_since(start_cycles, start_instret, &start_counts))
+        let mut stats = self.stats_since(start_cycles, start_instret, &start_counts);
+        stats.faults_injected = plan.map(|pl| pl.injected()).unwrap_or(0);
+        Ok(stats)
     }
 
     /// Execute one resolved micro-op.
@@ -380,9 +504,9 @@ impl Machine {
                 self.wx(u.rd, u.aux);
                 self.bump_issue(OpClass::Jump, 1);
                 if t % 4 != 0 {
-                    return Err(Error::Sim(format!(
-                        "misaligned jalr target {t:#010x}"
-                    )));
+                    return Err(Error::Trap(Trap::bare(TrapKind::MisalignedTarget {
+                        target: t,
+                    })));
                 }
                 return Ok(Ctl::Jump((t / 4) as usize));
             }
@@ -397,10 +521,9 @@ impl Machine {
                 };
                 if taken {
                     if u.target == predecode::MISALIGNED_TARGET {
-                        return Err(Error::Sim(format!(
-                            "misaligned branch target {:#010x}",
-                            u.aux
-                        )));
+                        return Err(Error::Trap(Trap::bare(TrapKind::MisalignedTarget {
+                            target: u.aux,
+                        })));
                     }
                     self.bump_issue(OpClass::Branch, 2); // taken-branch penalty
                     return Ok(Ctl::Jump(u.target));
@@ -663,10 +786,20 @@ impl Machine {
         let mut pc: u32 = 0;
         while pc < end {
             if self.instret - start_instret > self.max_instret {
-                return Err(self.budget_exceeded());
+                return Err(self.budget_exceeded(pc, start_cycles, start_instret));
             }
             let word = prog[(pc / 4) as usize];
-            let i = decode::decode(word)?;
+            let i = match decode::decode(word) {
+                Ok(i) => i,
+                Err(_) => {
+                    return Err(self.trap_here(
+                        TrapKind::IllegalInstruction { word },
+                        pc,
+                        start_cycles,
+                        start_instret,
+                    ))
+                }
+            };
             self.instret += 1;
             let mut next = pc.wrapping_add(4);
             let (rd, rs1, rs2, rs3) =
@@ -684,9 +817,12 @@ impl Machine {
                 Jal => {
                     let t = pc.wrapping_add(i.imm as u32);
                     if t % 4 != 0 {
-                        return Err(Error::Sim(format!(
-                            "misaligned branch target {t:#010x}"
-                        )));
+                        return Err(self.trap_here(
+                            TrapKind::MisalignedTarget { target: t },
+                            pc,
+                            start_cycles,
+                            start_instret,
+                        ));
                     }
                     self.wx(rd, next);
                     next = t;
@@ -697,9 +833,12 @@ impl Machine {
                     self.wx(rd, next);
                     self.bump_ref(&mut counts, OpClass::Jump, 1);
                     if t % 4 != 0 {
-                        return Err(Error::Sim(format!(
-                            "misaligned jalr target {t:#010x}"
-                        )));
+                        return Err(self.trap_here(
+                            TrapKind::MisalignedTarget { target: t },
+                            pc,
+                            start_cycles,
+                            start_instret,
+                        ));
                     }
                     next = t;
                 }
@@ -715,9 +854,12 @@ impl Machine {
                     if taken {
                         let t = pc.wrapping_add(i.imm as u32);
                         if t % 4 != 0 {
-                            return Err(Error::Sim(format!(
-                                "misaligned branch target {t:#010x}"
-                            )));
+                            return Err(self.trap_here(
+                                TrapKind::MisalignedTarget { target: t },
+                                pc,
+                                start_cycles,
+                                start_instret,
+                            ));
                         }
                         next = t;
                         self.bump_ref(&mut counts, OpClass::Branch, 2);
@@ -728,14 +870,17 @@ impl Machine {
                 Lw => {
                     let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    let val = self.load_u32(addr)?;
+                    let val = self
+                        .load_u32(addr)
+                        .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                     self.wx(rd, val);
                     self.bump_ref(&mut counts, OpClass::Load, lat);
                 }
                 Sw => {
                     let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.store_u32(addr, self.x[rs2] as u32)?;
+                    self.store_u32(addr, self.x[rs2] as u32)
+                        .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                     self.bump_ref(&mut counts, OpClass::Store, lat.min(2));
                 }
                 Addi => { self.wxi(rd, self.x[rs1].wrapping_add(i.imm)); self.bump_ref(&mut counts, OpClass::Alu, 1); }
@@ -774,13 +919,16 @@ impl Machine {
                 Flw => {
                     let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.f[rd] = self.load_f32(addr)?;
+                    self.f[rd] = self
+                        .load_f32(addr)
+                        .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                     self.bump_ref(&mut counts, OpClass::Load, lat);
                 }
                 Fsw => {
                     let addr = (self.x[rs1] as u32).wrapping_add(i.imm as u32);
                     let lat = self.hier.access(addr as u64);
-                    self.store_f32(addr, self.f[rs2])?;
+                    self.store_f32(addr, self.f[rs2])
+                        .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                     self.bump_ref(&mut counts, OpClass::Store, lat.min(2));
                 }
                 FaddS => { self.f[rd] = self.f[rs1] + self.f[rs2]; self.bump_ref(&mut counts, OpClass::FAlu, 2); }
@@ -799,7 +947,7 @@ impl Machine {
                 FrsqrtS => { self.f[rd] = 1.0 / self.f[rs1].sqrt(); self.bump_ref(&mut counts, OpClass::FCustom, 8); }
                 Vsetvli => {
                     if !self.cfg.has_vector {
-                        return Err(scalar_only());
+                        return Err(self.ctx(scalar_only(), pc, start_cycles, start_instret));
                     }
                     self.lmul = 1 << rs3;
                     let vlmax = self.lanes * self.lmul;
@@ -810,7 +958,7 @@ impl Machine {
                 }
                 Vle32 | Vle8 | Vse32 | Vse8 => {
                     if !self.cfg.has_vector {
-                        return Err(scalar_only());
+                        return Err(self.ctx(scalar_only(), pc, start_cycles, start_instret));
                     }
                     let base = self.x[rs1] as u32;
                     let esz = if matches!(i.op, Vle32 | Vse32) { 4 } else { 1 };
@@ -826,21 +974,36 @@ impl Machine {
                         let addr = base + (e * esz) as u32;
                         match i.op {
                             Vle32 => {
-                                let v = self.load_f32(addr)?;
+                                let v = self
+                                    .load_f32(addr)
+                                    .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                                 self.vreg_set_ref(rd, e, v);
                             }
                             Vse32 => {
                                 let v = self.vreg_ref(rd, e);
-                                self.store_f32(addr, v)?;
+                                self.store_f32(addr, v)
+                                    .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?;
                             }
                             Vle8 => {
-                                let b = self.mem_ref(addr, 1)?[0];
+                                let b = self
+                                    .mem_ref(addr, 1)
+                                    .map_err(|e| self.ctx(e, pc, start_cycles, start_instret))?
+                                    [0];
                                 self.vreg_set_ref(rd, e, b as i8 as f32);
                             }
                             _ => {
                                 let v = self.vreg_ref(rd, e);
-                                self.mem_mut(addr, 1)?[0] =
-                                    (v as i32).clamp(-128, 127) as u8;
+                                match self.mem_mut(addr, 1) {
+                                    Ok(b) => b[0] = (v as i32).clamp(-128, 127) as u8,
+                                    Err(err) => {
+                                        return Err(self.ctx(
+                                            err,
+                                            pc,
+                                            start_cycles,
+                                            start_instret,
+                                        ))
+                                    }
+                                }
                             }
                         }
                     }

@@ -9,6 +9,9 @@
 //!   driven by an index-based dispatch loop; the naive decode-per-step
 //!   loop survives as `Machine::run_reference` for differential testing.
 //! * [`predecode`] — one-shot binary → micro-op lowering for the fast path.
+//! * [`fault`] — typed machine traps ([`fault::Trap`]) and the seeded
+//!   fault-injection harness ([`fault::FaultPlan`]) the fault-tolerant
+//!   serving stack is proven against.
 //! * [`cache`] — set-associative L1/L2/L3 cache simulator (LRU).
 //! * [`timing`] — analytic kernel timing: estimates cycles from a loop-nest
 //!   profile without instruction-by-instruction replay. This is what the
@@ -18,6 +21,7 @@
 //!   feeding the PPA model in [`crate::asic`].
 
 pub mod cache;
+pub mod fault;
 pub mod machine;
 pub mod power;
 pub mod predecode;

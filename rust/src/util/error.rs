@@ -2,6 +2,8 @@
 
 use std::fmt;
 
+use crate::sim::fault::Trap;
+
 /// Unified error for all compiler stages.
 #[derive(Debug)]
 pub enum Error {
@@ -20,8 +22,15 @@ pub enum Error {
     /// Validation-stage rejections (ISA or memory). Contribution 3: these are
     /// compile-time errors, never runtime surprises.
     Validation(String),
-    /// Simulator faults (illegal instruction, OOB access, ...).
+    /// Simulator faults that carry no machine context (verification
+    /// mismatches, reference-executor failures, ...).
     Sim(String),
+    /// A machine trap with pc/cycle/instret context — the machine that
+    /// raised it is suspect until rebuilt (machine-scoped).
+    Trap(Trap),
+    /// A panic caught at an isolation boundary (serving worker); the
+    /// machine that was running is suspect until rebuilt (machine-scoped).
+    Panic(String),
     /// Auto-tuning failures.
     Tune(String),
     /// PJRT runtime / artifact problems.
@@ -31,6 +40,26 @@ pub enum Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Machine-scoped failures leave the executing [`crate::sim::machine::Machine`]
+    /// in an undefined state (partial writes, corrupted memory, a caught
+    /// panic mid-run): the machine must be rebuilt from its immutable image
+    /// before serving again, and the *request* may be retried. Everything
+    /// else is request-scoped — the request itself was bad (shape
+    /// validation, shed) and retrying cannot help.
+    pub fn is_machine_scoped(&self) -> bool {
+        matches!(self, Error::Trap(_) | Error::Panic(_))
+    }
+
+    /// The structured trap, when this error carries one.
+    pub fn as_trap(&self) -> Option<&Trap> {
+        match self {
+            Error::Trap(t) => Some(t),
+            _ => None,
+        }
+    }
+}
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -43,6 +72,8 @@ impl fmt::Display for Error {
             Error::Backend(m) => write!(f, "backend: {m}"),
             Error::Validation(m) => write!(f, "validation: {m}"),
             Error::Sim(m) => write!(f, "sim: {m}"),
+            Error::Trap(t) => write!(f, "sim: {t}"),
+            Error::Panic(m) => write!(f, "panic: {m}"),
             Error::Tune(m) => write!(f, "tune: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),

@@ -21,3 +21,12 @@ pub fn resolve_workers(requested: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 }
+
+/// Poison-recovering lock: a mutex poisoned by a panicking thread still
+/// yields its guard instead of cascading the panic into every other thread.
+/// Safe here because all server shared state is counters/queues whose
+/// invariants hold between individual field writes — and the panicking
+/// request itself is failed with a typed error, never silently dropped.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -1,0 +1,323 @@
+//! Fault-tolerance conformance: injected hardware faults, panicking
+//! kernels, and crashing workers must cost retries, rebuilds, or typed
+//! errors — never a wrong answer and never a hung ticket.
+//!
+//! The layering under test:
+//! - `sim/fault.rs` + `Machine::arm_faults`: seeded faults fire at exact
+//!   retire counts; detected faults trap with typed context.
+//! - `LoadedModel::rebuild`: a machine that trapped (or was silently
+//!   corrupted) is discarded and rebuilt from the immutable `ModelImage`,
+//!   restoring bit-identical behavior.
+//! - `runtime/server.rs`: per-request panic isolation, retry with backoff,
+//!   worker supervision/respawn, and per-model circuit breaking.
+
+use std::sync::Arc;
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::isa::encode::encode_all;
+use xgenc::isa::{Instr, Op};
+use xgenc::pipeline::{CompileOptions, CompileSession};
+use xgenc::runtime::engine::{LoadedModel, ModelImage};
+use xgenc::runtime::loadgen::{self, DemoFleet, LoadGenOptions};
+use xgenc::runtime::server::{ChaosOptions, Server, ServerOptions};
+use xgenc::sim::fault::{Fault, FaultKind, FaultPlan, TrapKind};
+use xgenc::sim::machine::Machine;
+use xgenc::sim::MachineConfig;
+
+/// A model big enough (256x128 matmul up front) that every chaos-plan
+/// retire count lands well inside the run.
+fn big_mlp_image() -> Arc<ModelImage> {
+    let g = prepare(model_zoo::mlp(&[256, 128, 64, 10], 1)).unwrap();
+    let c = CompileSession::new(CompileOptions::default()).compile(&g).unwrap();
+    Arc::new(ModelImage::from_compiled(&c).unwrap())
+}
+
+fn bits(outputs: &[xgenc::ir::tensor::Tensor]) -> Vec<Vec<u32>> {
+    outputs
+        .iter()
+        .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Property: for every detected fault kind and several request seeds, the
+/// armed run fails machine-scoped with a typed trap, and a rebuilt
+/// `LoadedModel` serves the same request bit-identically (outputs *and*
+/// `RunStats`) to the fault-free baseline.
+#[test]
+fn detected_faults_trap_and_rebuild_restores_bit_identity() {
+    let img = big_mlp_image();
+    let mut lm = LoadedModel::from_image(Arc::clone(&img)).unwrap();
+    let kinds = [
+        FaultKind::BitFlip { addr: 16, bit: 3, detected: true },
+        FaultKind::IllegalTrap,
+        FaultKind::BudgetOverrun,
+    ];
+    for seed in [1u64, 7, 23] {
+        let req = img.synth_request(0, seed);
+        let baseline = lm.infer(&req).unwrap();
+        assert_eq!(baseline.stats.faults_injected, 0);
+        for kind in kinds {
+            lm.arm_faults(FaultPlan::new(vec![Fault { at_instret: 50, kind }]));
+            let err = lm.infer(&req).expect_err("detected fault must trap");
+            assert!(err.is_machine_scoped(), "not machine-scoped: {err}");
+            let trap = err.as_trap().expect("machine-scoped sim failure carries a Trap");
+            match kind {
+                FaultKind::BudgetOverrun => assert!(
+                    matches!(trap.kind, TrapKind::BudgetExceeded { .. }),
+                    "{trap:?}"
+                ),
+                _ => assert!(
+                    matches!(trap.kind, TrapKind::InjectedFault { .. }),
+                    "{trap:?}"
+                ),
+            }
+            let rebuilds_before = lm.rebuilds();
+            lm.rebuild().unwrap();
+            assert_eq!(lm.rebuilds(), rebuilds_before + 1);
+            let recovered = lm.infer(&req).unwrap();
+            assert_eq!(
+                bits(&recovered.outputs),
+                bits(&baseline.outputs),
+                "outputs diverged after rebuild (seed {seed}, {kind:?})"
+            );
+            assert_eq!(
+                recovered.stats, baseline.stats,
+                "stats diverged after rebuild (seed {seed}, {kind:?})"
+            );
+        }
+    }
+}
+
+/// A silent (undetected) bit flip completes the run — counted in
+/// `RunStats::faults_injected` — and a rebuild restores bit-identity.
+#[test]
+fn silent_bit_flip_is_counted_and_rebuild_restores() {
+    let img = big_mlp_image();
+    let mut lm = LoadedModel::from_image(Arc::clone(&img)).unwrap();
+    let req = img.synth_request(0, 5);
+    let baseline = lm.infer(&req).unwrap();
+
+    lm.arm_faults(FaultPlan::new(vec![Fault {
+        at_instret: 50,
+        kind: FaultKind::BitFlip { addr: 512, bit: 7, detected: false },
+    }]));
+    // Silent corruption does not trap; the run completes (its outputs are
+    // untrusted — that is exactly why chaos serving injects detected-only).
+    let corrupted = lm.infer(&req).expect("silent faults must not trap");
+    assert_eq!(corrupted.stats.faults_injected, 1);
+
+    lm.rebuild().unwrap();
+    let recovered = lm.infer(&req).unwrap();
+    assert_eq!(bits(&recovered.outputs), bits(&baseline.outputs));
+    assert_eq!(recovered.stats, baseline.stats);
+    assert_eq!(recovered.stats.faults_injected, 0);
+}
+
+/// Stuck-at register faults at the machine level: a stuck data register
+/// reads back the stuck value after every retire; a stuck loop counter
+/// turns the loop infinite and trips the (typed) instruction budget.
+#[test]
+fn stuck_register_semantics_at_machine_level() {
+    // Data register: x6 forced to 42 from retire 2 onward.
+    let prog = encode_all(&[
+        Instr::i(Op::Addi, 6, 0, 5),
+        Instr::i(Op::Addi, 7, 0, 1),
+        Instr::i(Op::Addi, 7, 7, 1),
+        Instr::i(Op::Addi, 7, 7, 1),
+    ])
+    .unwrap();
+    let mut m = Machine::new(MachineConfig::xgen_asic());
+    m.arm_faults(FaultPlan::new(vec![Fault {
+        at_instret: 2,
+        kind: FaultKind::StuckReg { reg: 6, value: 42 },
+    }]));
+    let stats = m.run(&prog).unwrap();
+    assert_eq!(stats.faults_injected, 1);
+    assert_eq!(m.x[6], 42, "stuck register must read back the stuck value");
+    assert_eq!(m.x[7], 3, "other registers must be unaffected");
+
+    // Loop counter: for (i = 10; i != 0; i--) with i stuck at 3 never
+    // terminates — the budget trips with a typed trap.
+    let prog = encode_all(&[
+        Instr::i(Op::Addi, 5, 0, 10),
+        Instr::i(Op::Addi, 6, 0, 0),
+        Instr::r(Op::Add, 6, 6, 5),
+        Instr::i(Op::Addi, 5, 5, -1),
+        Instr::b(Op::Bne, 5, 0, -8),
+    ])
+    .unwrap();
+    let mut m = Machine::new(MachineConfig::xgen_asic());
+    m.max_instret = 10_000;
+    m.arm_faults(FaultPlan::new(vec![Fault {
+        at_instret: 4,
+        kind: FaultKind::StuckReg { reg: 5, value: 3 },
+    }]));
+    let err = m.run(&prog).unwrap_err();
+    let trap = err.as_trap().expect("budget trip carries a Trap");
+    assert!(
+        matches!(trap.kind, TrapKind::BudgetExceeded { budget: 10_000 }),
+        "{trap:?}"
+    );
+}
+
+/// Satellite regression: a worker killed mid-load must not hang a single
+/// ticket — in-flight requests resolve with a typed machine-scoped error,
+/// the supervisor respawns the worker, and shutdown completes cleanly.
+#[test]
+fn worker_crash_resolves_every_ticket_and_respawns() {
+    let img = big_mlp_image();
+    let server = Server::start(
+        &[Arc::clone(&img)],
+        ServerOptions {
+            workers: 1,
+            retries: 0,
+            chaos: Some(ChaosOptions { crash_rate: 1.0, ..Default::default() }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..6u64)
+        .map(|seed| server.submit(0, img.synth_request(0, seed)).unwrap())
+        .collect();
+    for t in tickets {
+        // Every ticket must resolve (the point of the regression test);
+        // with a 100% crash rate each resolves with a machine-scoped error.
+        let err = t.wait().expect_err("crash-rate 1.0 serves nothing");
+        assert!(err.is_machine_scoped(), "unexpected error class: {err}");
+    }
+    let report = server.shutdown();
+    assert_eq!(report.served, 0);
+    assert!(report.worker_respawns >= 1, "supervisor never respawned the worker");
+    assert!(report.panics >= 1);
+}
+
+/// Panicking kernels are isolated per request and retried: serving
+/// continues, sampled answers stay bit-identical to the serial reference.
+#[test]
+fn panic_isolation_keeps_serving_correctly() {
+    let fleet = DemoFleet::build().unwrap();
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions {
+            workers: 2,
+            retries: 3,
+            chaos: Some(ChaosOptions { panic_rate: 0.3, seed: 9, ..Default::default() }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests: 30, rate: 0.0, seed: 13, sample_every: 5, duration: None },
+    );
+    let sreport = server.shutdown();
+    assert!(sreport.panics >= 1, "a 30% panic rate over 30 requests must panic");
+    assert!(
+        report.availability() >= 0.9,
+        "retried panics should keep availability high: {}",
+        report.summary()
+    );
+    assert_eq!(report.failed, 0, "panics must never become request-scoped failures");
+    for s in &report.samples {
+        assert!(
+            fleet.sample_matches(s).unwrap(),
+            "sample (model {}, spec {}, seed {}) diverged under panic chaos",
+            s.model,
+            s.spec,
+            s.seed
+        );
+    }
+}
+
+/// The tentpole invariant end to end: under a high injected-fault rate the
+/// server retries and rebuilds, availability stays high, and *every*
+/// completed response is bit-identical to the serial fresh-machine
+/// reference — faults cost retries, never answers.
+#[test]
+fn chaos_serving_never_serves_a_wrong_answer() {
+    let fleet = DemoFleet::build().unwrap();
+    let server = Server::start(
+        &fleet.images,
+        ServerOptions {
+            workers: 2,
+            // At a 50% fault rate a request needs several attempts to get
+            // through; 6 attempts leave ~1.6% full-failure odds per request.
+            retries: 5,
+            chaos: Some(ChaosOptions { fault_rate: 0.5, seed: 3, ..Default::default() }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::drive(
+        &server,
+        &fleet.images,
+        &fleet.mix,
+        &LoadGenOptions { requests: 60, rate: 0.0, seed: 17, sample_every: 1, duration: None },
+    );
+    let sreport = server.shutdown();
+    assert!(
+        sreport.machine_failures >= 1,
+        "a 50% fault rate over 60 requests must trap at least once: {}",
+        sreport.summary()
+    );
+    assert!(sreport.retries >= 1, "machine failures must be retried");
+    assert!(sreport.rebuilds >= 1, "machine failures must rebuild the machine");
+    assert!(
+        report.availability() >= 0.9,
+        "retries should absorb most injected faults: {}",
+        report.summary()
+    );
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.samples.len() as u64, report.ok);
+    for s in &report.samples {
+        assert!(
+            fleet.sample_matches(s).unwrap(),
+            "CHAOS SERVED A WRONG ANSWER (model {}, spec {}, seed {})",
+            s.model,
+            s.spec,
+            s.seed
+        );
+    }
+}
+
+/// Circuit breaker: consecutive machine failures quarantine the model —
+/// later submits shed synchronously with a "quarantined" error instead of
+/// burning worker time on a model that cannot serve.
+#[test]
+fn repeated_machine_failures_quarantine_the_model() {
+    let img = big_mlp_image();
+    let server = Server::start(
+        &[Arc::clone(&img)],
+        ServerOptions {
+            workers: 1,
+            retries: 0,
+            breaker_threshold: 3,
+            // Long cooldown so this test observes the open state, not a
+            // half-open probe.
+            breaker_cooldown: std::time::Duration::from_secs(600),
+            chaos: Some(ChaosOptions { fault_rate: 1.0, seed: 11, ..Default::default() }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for seed in 0..3u64 {
+        let err = server
+            .submit(0, img.synth_request(0, seed))
+            .unwrap()
+            .wait()
+            .expect_err("every attempt is armed with a detected fault");
+        assert!(err.is_machine_scoped(), "{err}");
+    }
+    let err = server
+        .submit(0, img.synth_request(0, 99))
+        .expect_err("the breaker must be open after 3 consecutive machine failures");
+    assert!(err.to_string().contains("quarantine"), "unexpected shed error: {err}");
+    let report = server.shutdown();
+    assert_eq!(report.served, 0);
+    assert_eq!(report.machine_failures, 3);
+    assert_eq!(report.rebuilds, 3);
+    assert!(report.quarantine_opened >= 1, "{}", report.summary());
+    assert!(report.shed_quarantine >= 1);
+}

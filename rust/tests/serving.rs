@@ -22,7 +22,7 @@ fn concurrent_serving_is_bit_identical_to_serial() {
     let fleet = DemoFleet::build().unwrap();
     let server = Server::start(
         &fleet.images,
-        ServerOptions { workers: 4, max_batch: 4, queue_depth: 64, deadline: None },
+        ServerOptions { workers: 4, max_batch: 4, queue_depth: 64, ..Default::default() },
     )
     .unwrap();
     let requests = 40u64;
@@ -83,7 +83,7 @@ fn bounded_queue_sheds_but_never_corrupts() {
     let img = Arc::new(ModelImage::from_compiled(&c).unwrap());
     let server = Server::start(
         &[Arc::clone(&img)],
-        ServerOptions { workers: 1, max_batch: 1, queue_depth: 2, deadline: None },
+        ServerOptions { workers: 1, max_batch: 1, queue_depth: 2, ..Default::default() },
     )
     .unwrap();
 
@@ -139,6 +139,7 @@ fn deadline_sheds_with_error_not_wrong_answer() {
             max_batch: 4,
             queue_depth: 64,
             deadline: Some(Duration::ZERO),
+            ..Default::default()
         },
     )
     .unwrap();

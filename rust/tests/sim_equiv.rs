@@ -18,10 +18,13 @@
 use xgenc::frontend::{model_zoo, prepare};
 use xgenc::ir::{DType, Graph};
 use xgenc::isa::encode::encode_all;
+use xgenc::isa::{Instr, Op};
 use xgenc::pipeline::{CompileOptions, CompileSession, CompiledModel};
 use xgenc::runtime::simrun;
 use xgenc::sim::cache::CacheStats;
+use xgenc::sim::fault::{Trap, TrapKind};
 use xgenc::sim::machine::{Machine, RunStats};
+use xgenc::sim::MachineConfig;
 
 /// Everything one simulation exposes to compare on.
 struct Observed {
@@ -136,4 +139,77 @@ fn equiv_fp32_vit_tiny() {
 #[ignore = "naive reference loop; run in release (CI conformance job)"]
 fn equiv_int8_resnet_cifar() {
     equiv(model_zoo::resnet_cifar(1), DType::I8);
+}
+
+// -- trap identity ----------------------------------------------------------
+//
+// Traps are architectural state too: both execution paths must produce the
+// *same typed Trap* — kind, faulting pc, and per-run cycle/instret deltas —
+// not merely "both errored". (Vector OOB is deliberately excluded: the fast
+// path checks the whole span at the base address while the reference loop
+// faults per element, so their trap payloads legitimately differ.)
+
+/// Run `words` on both paths with the same budget and return both traps.
+fn both_traps(words: &[u32], budget: u64) -> (Trap, Trap) {
+    let extract = |e: xgenc::util::error::Error| -> Trap {
+        e.as_trap().cloned().unwrap_or_else(|| panic!("expected a machine trap, got: {e}"))
+    };
+    let mut f = Machine::new(MachineConfig::xgen_asic());
+    let mut r = Machine::new(MachineConfig::xgen_asic());
+    f.max_instret = budget;
+    r.max_instret = budget;
+    (
+        extract(f.run(words).unwrap_err()),
+        extract(r.run_reference(words).unwrap_err()),
+    )
+}
+
+#[test]
+fn trap_identity_budget_exceeded() {
+    // beq x0, x0, 0: an infinite self-loop trips the instruction budget.
+    let words = encode_all(&[Instr::b(Op::Beq, 0, 0, 0)]).unwrap();
+    let (fast, reference) = both_traps(&words, 1000);
+    assert!(
+        matches!(fast.kind, TrapKind::BudgetExceeded { budget: 1000 }),
+        "{fast:?}"
+    );
+    assert_eq!(fast, reference);
+}
+
+#[test]
+fn trap_identity_illegal_instruction() {
+    let words = vec![0xFFFF_FFFFu32];
+    let (fast, reference) = both_traps(&words, simrun::MAX_INSTRET);
+    assert!(
+        matches!(fast.kind, TrapKind::IllegalInstruction { word: 0xFFFF_FFFF }),
+        "{fast:?}"
+    );
+    assert_eq!(fast.pc, 0);
+    assert_eq!(fast, reference);
+}
+
+#[test]
+fn trap_identity_misaligned_jal() {
+    let words = encode_all(&[Instr::u(Op::Jal, 1, 6)]).unwrap();
+    let (fast, reference) = both_traps(&words, simrun::MAX_INSTRET);
+    assert!(matches!(fast.kind, TrapKind::MisalignedTarget { target: 6 }), "{fast:?}");
+    assert_eq!(fast, reference);
+}
+
+#[test]
+fn trap_identity_scalar_oob_load() {
+    // Lui x5, 0x3FFFF puts the address near the DMEM top, past the live
+    // allocation; the Lw then faults out of bounds on both paths.
+    let words = encode_all(&[
+        Instr::u(Op::Lui, 5, 0x3FFFF),
+        Instr::i(Op::Lw, 6, 5, 0),
+    ])
+    .unwrap();
+    let (fast, reference) = both_traps(&words, simrun::MAX_INSTRET);
+    assert!(
+        matches!(fast.kind, TrapKind::OobAccess { store: false, .. }),
+        "{fast:?}"
+    );
+    assert_eq!(fast.pc, 4, "the Lw at pc 4 is the faulting instruction");
+    assert_eq!(fast, reference);
 }
