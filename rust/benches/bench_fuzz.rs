@@ -1,0 +1,97 @@
+//! Fuzz-campaign benchmark — the compiler-hardening CI gate, emitted to
+//! `BENCH_fuzz.json`.
+//!
+//! Two phases:
+//! 1. **Campaign** — 500 seeded random graphs (dense + conv topologies,
+//!    degenerate shapes, shared weights, symbolic batches), each compiled
+//!    with per-pass IR validation forced on and differentially verified
+//!    against the reference executor at FP32, INT8, and INT4. Zero
+//!    findings required.
+//! 2. **Reduction drill** — a known failing case must delta-reduce to the
+//!    guilty node; the shrink effort lands in the artifact.
+//!
+//! Exits nonzero (assert) on any finding, incomplete coverage, or a
+//! reducer regression; prints the "fuzz OK" line only when clean.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::fuzz::{self, FuzzOptions};
+use xgenc::ir::dtype::DType;
+use xgenc::ir::ops::OpKind;
+use xgenc::runtime::store;
+use xgenc::util::json::Json;
+use xgenc::util::table::Table;
+
+fn main() {
+    let debug = cfg!(debug_assertions);
+    let seeds: u64 = if debug { 24 } else { 500 };
+    let opts = FuzzOptions {
+        seeds,
+        precisions: vec![DType::F32, DType::I8, DType::I4],
+        ..FuzzOptions::default()
+    };
+    let report = fuzz::run_campaign(&opts);
+    println!("{}", report.summary());
+
+    let mut t = Table::new("Fuzz op coverage", &["Op", "Nodes generated"]);
+    for (op, n) in &report.op_coverage {
+        t.row(&[op.clone(), format!("{n}")]);
+    }
+    t.print();
+
+    for f in &report.findings {
+        eprintln!("FINDING: {}", f.headline());
+    }
+    assert!(report.findings.is_empty(), "{} fuzz findings", report.findings.len());
+    assert_eq!(report.graphs as u64, seeds, "some seeds failed to generate");
+    assert_eq!(report.runs as u64, seeds * 3);
+    let min_ops = if debug { 5 } else { 10 };
+    assert!(
+        report.op_coverage.len() >= min_ops,
+        "op coverage collapsed: {:?}",
+        report.op_coverage
+    );
+    if !debug {
+        assert!(report.dynamic_graphs > 0, "no symbolic-batch graphs covered");
+    }
+
+    // Reduction drill: an MLP with a Softmax appended must shrink to the
+    // guilty node (plus at most its feeder) while the failure predicate
+    // keeps reproducing.
+    let mut g = model_zoo::mlp(&[8, 16, 16, 4], 4);
+    let last = *g.outputs.last().unwrap();
+    let sm = g.node(OpKind::Softmax, "sm", &[last], Default::default());
+    g.outputs = vec![sm];
+    let g = prepare(g).unwrap();
+    let nodes_before = g.nodes.len();
+    let r = fuzz::reduce::reduce(&g, |c| c.nodes.iter().any(|n| n.op == OpKind::Softmax));
+    assert!(
+        r.graph.nodes.len() <= 2,
+        "reducer regressed: {} nodes left of {nodes_before}",
+        r.graph.nodes.len()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str_("fuzz")),
+        ("campaign", report.to_json()),
+        ("reduce_nodes_before", Json::Num(nodes_before as f64)),
+        ("reduce_nodes_after", Json::Num(r.graph.nodes.len() as f64)),
+        ("reduce_rounds", Json::Num(r.rounds as f64)),
+        ("reduce_candidates", Json::Num(r.candidates as f64)),
+    ]);
+    let out = std::path::Path::new("BENCH_fuzz.json");
+    store::save_json(out, &doc).unwrap();
+    println!("wrote {}", out.display());
+
+    println!(
+        "fuzz OK: {} graphs ({} dynamic) x {} precisions, {} runs, {} ops covered, 0 findings; \
+         reducer {} -> {} nodes in {} candidates",
+        report.graphs,
+        report.dynamic_graphs,
+        opts.precisions.len(),
+        report.runs,
+        report.op_coverage.len(),
+        nodes_before,
+        r.graph.nodes.len(),
+        r.candidates
+    );
+}

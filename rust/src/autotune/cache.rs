@@ -36,6 +36,10 @@ pub struct CacheStats {
     /// Wall-clock seconds of search the hits avoided (sum of the original
     /// tuning times of every hit entry).
     pub tune_seconds_saved: f64,
+    /// Entries skipped at load because they failed to parse. The rest of
+    /// the file still loads — one corrupt entry must not cost the whole
+    /// warm cache.
+    pub quarantined: u64,
 }
 
 impl CacheStats {
@@ -45,6 +49,7 @@ impl CacheStats {
             hits: self.hits.saturating_sub(earlier.hits),
             misses: self.misses.saturating_sub(earlier.misses),
             tune_seconds_saved: (self.tune_seconds_saved - earlier.tune_seconds_saved).max(0.0),
+            quarantined: self.quarantined.saturating_sub(earlier.quarantined),
         }
     }
 
@@ -53,6 +58,7 @@ impl CacheStats {
         self.hits += other.hits;
         self.misses += other.misses;
         self.tune_seconds_saved += other.tune_seconds_saved;
+        self.quarantined += other.quarantined;
     }
 
     pub fn lookups(&self) -> u64 {
@@ -60,8 +66,13 @@ impl CacheStats {
     }
 
     pub fn summary(&self) -> String {
+        let q = if self.quarantined > 0 {
+            format!(", {} entries quarantined", self.quarantined)
+        } else {
+            String::new()
+        };
         format!(
-            "{} hits / {} misses, {:.1}s search saved",
+            "{} hits / {} misses, {:.1}s search saved{q}",
             self.hits, self.misses, self.tune_seconds_saved
         )
     }
@@ -181,6 +192,45 @@ impl TuneCache {
         ])
     }
 
+    /// Parse one persisted entry; any missing/mistyped field is an error.
+    fn parse_entry(e: &Json) -> Result<(String, CacheEntry)> {
+        let field = |name: &str| -> Result<f64> {
+            e.get(name)
+                .as_f64()
+                .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
+        };
+        let usize_field = |name: &str| -> Result<usize> {
+            e.get(name)
+                .as_usize()
+                .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
+        };
+        let key = e
+            .get("key")
+            .as_str()
+            .ok_or_else(|| Error::Tune("tune cache entry missing 'key'".into()))?;
+        let entry = CacheEntry {
+            config: KernelConfig {
+                tile_m: usize_field("tile_m")?,
+                tile_n: usize_field("tile_n")?,
+                tile_k: usize_field("tile_k")?,
+                unroll: usize_field("unroll")?,
+                lmul: usize_field("lmul")?,
+                // Caches written before the fuse dimension existed carry
+                // no "fuse" field; treat them as fused (the old behavior).
+                fuse_epilogue: e.get("fuse").as_i64().map(|v| v != 0).unwrap_or(true),
+            },
+            log_cycles: field("log_cycles")?,
+            trials_used: usize_field("trials_used")?,
+            memo_hits: usize_field("memo_hits")?,
+            tune_seconds: field("tune_seconds")?,
+        };
+        Ok((key.to_string(), entry))
+    }
+
+    /// A version mismatch or a non-object document fails the whole file;
+    /// an individual corrupt entry is quarantined (skipped and counted in
+    /// [`CacheStats::quarantined`]) so the intact entries still warm the
+    /// compile.
     fn from_json(doc: &Json) -> Result<TuneCache> {
         if doc.get("version").as_i64() != Some(CACHE_FORMAT_VERSION as i64) {
             return Err(Error::Tune(format!(
@@ -188,41 +238,20 @@ impl TuneCache {
             )));
         }
         let mut map = BTreeMap::new();
+        let mut quarantined = 0u64;
         for e in doc.req_arr("entries")? {
-            let field = |name: &str| -> Result<f64> {
-                e.get(name)
-                    .as_f64()
-                    .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
-            };
-            let usize_field = |name: &str| -> Result<usize> {
-                e.get(name)
-                    .as_usize()
-                    .ok_or_else(|| Error::Tune(format!("tune cache entry missing '{name}'")))
-            };
-            let key = e
-                .get("key")
-                .as_str()
-                .ok_or_else(|| Error::Tune("tune cache entry missing 'key'".into()))?;
-            let entry = CacheEntry {
-                config: KernelConfig {
-                    tile_m: usize_field("tile_m")?,
-                    tile_n: usize_field("tile_n")?,
-                    tile_k: usize_field("tile_k")?,
-                    unroll: usize_field("unroll")?,
-                    lmul: usize_field("lmul")?,
-                    // Caches written before the fuse dimension existed carry
-                    // no "fuse" field; treat them as fused (the old behavior).
-                    fuse_epilogue: e.get("fuse").as_i64().map(|v| v != 0).unwrap_or(true),
-                },
-                log_cycles: field("log_cycles")?,
-                trials_used: usize_field("trials_used")?,
-                memo_hits: usize_field("memo_hits")?,
-                tune_seconds: field("tune_seconds")?,
-            };
-            map.insert(key.to_string(), entry);
+            match Self::parse_entry(e) {
+                Ok((key, entry)) => {
+                    map.insert(key, entry);
+                }
+                Err(_) => quarantined += 1,
+            }
         }
         Ok(TuneCache {
-            inner: Mutex::new(Inner { map, stats: CacheStats::default() }),
+            inner: Mutex::new(Inner {
+                map,
+                stats: CacheStats { quarantined, ..CacheStats::default() },
+            }),
         })
     }
 
@@ -241,7 +270,18 @@ impl TuneCache {
     /// failed compile.
     pub fn load_or_empty(path: &Path) -> TuneCache {
         match Self::load(path) {
-            Ok(c) => c,
+            Ok(c) => {
+                let q = c.stats().quarantined;
+                if q > 0 {
+                    eprintln!(
+                        "warning: quarantined {q} corrupt entries in tune cache {} \
+                         ({} intact entries kept)",
+                        path.display(),
+                        c.len()
+                    );
+                }
+                c
+            }
             Err(e) => {
                 if path.exists() {
                     eprintln!("warning: ignoring unusable tune cache {}: {e}", path.display());
@@ -322,7 +362,6 @@ mod tests {
             ("garbage", "{not json at all"),
             ("wrong_version", r#"{"version": 999, "entries": []}"#),
             ("stale_version", r#"{"version": 1, "entries": []}"#),
-            ("bad_entry", r#"{"version": 2, "entries": [{"key": "x"}]}"#),
         ] {
             let path = dir.join(format!("xgenc_cache_bad_{pid}_{name}.json"));
             std::fs::write(&path, text).unwrap();
@@ -334,5 +373,48 @@ mod tests {
         // Missing file: also empty, no warning path.
         let c = TuneCache::load_or_empty(&dir.join(format!("xgenc_cache_missing_{pid}.json")));
         assert!(c.is_empty());
+    }
+
+    /// Regression: one corrupt entry used to discard the entire cache file.
+    /// Now the bad entry is quarantined (skipped + counted) and every
+    /// intact entry still loads.
+    #[test]
+    fn corrupt_entry_is_quarantined_not_fatal() {
+        let c = TuneCache::new();
+        let sig_a = KernelSig::matmul(128, 256, 512);
+        let sig_b = KernelSig::elementwise(4096);
+        c.insert(&fp(), DType::F32, &sig_a, entry(8));
+        c.insert(&fp(), DType::I8, &sig_b, entry(16));
+        let path = std::env::temp_dir()
+            .join(format!("xgenc_cache_quarantine_{}.json", std::process::id()));
+        c.save(&path).unwrap();
+
+        // Hand-corrupt the file: drop required fields from one entry and
+        // append a second entry that is not even an object.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let mut entries: Vec<Json> = doc.req_arr("entries").unwrap().to_vec();
+        entries[0] = Json::obj(vec![("key", Json::str_("half-written"))]);
+        entries.push(Json::Num(7.0));
+        let corrupted = Json::obj(vec![
+            ("version", Json::Num(CACHE_FORMAT_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        std::fs::write(&path, corrupted.to_string()).unwrap();
+
+        let loaded = TuneCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1, "the intact entry must survive");
+        assert_eq!(loaded.stats().quarantined, 2);
+        // The surviving entry is one of the two originals, unchanged.
+        let kept = loaded
+            .peek(&fp(), DType::F32, &sig_a)
+            .or_else(|| loaded.peek(&fp(), DType::I8, &sig_b));
+        assert!(kept.is_some());
+        // The forgiving path agrees and keeps the stats.
+        let c2 = TuneCache::load_or_empty(&path);
+        assert_eq!(c2.len(), 1);
+        assert_eq!(c2.stats().quarantined, 2);
+        assert!(c2.stats().summary().contains("quarantined"));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -19,6 +19,14 @@
 //!
 //! Symbolic dims are written as objects: `{"sym": "batch", "min": 1, "max": 32}`
 //! or as `-1` (anonymous symbol, range 1..=64).
+//!
+//! The loader is hardened against malformed documents (fuzz satellite):
+//! every tensor name may be defined exactly once (duplicate inputs,
+//! initializers, or node outputs are typed `frontend:` errors), node inputs
+//! must name an already-defined tensor — which makes loaded graphs DAGs by
+//! construction, so a cyclic document cannot parse — and initializer shapes
+//! are validated with overflow-checked element counts (zero or overflowing
+//! extents are rejected instead of panicking downstream).
 
 use std::collections::BTreeMap;
 
@@ -51,6 +59,9 @@ pub fn load_str(text: &str) -> Result<Graph> {
             .as_str()
             .and_then(DType::parse)
             .unwrap_or(DType::F32);
+        if by_name.contains_key(name) {
+            return Err(Error::Frontend(format!("duplicate tensor name '{name}'")));
+        }
         let id = g.input(name, shape, dtype);
         by_name.insert(name.to_string(), id);
     }
@@ -58,14 +69,28 @@ pub fn load_str(text: &str) -> Result<Graph> {
     if let Some(inits) = doc.get("initializers").as_arr() {
         for init in inits {
             let name = init.req_str("name")?;
+            if by_name.contains_key(name) {
+                return Err(Error::Frontend(format!("duplicate tensor name '{name}'")));
+            }
             let dims: Vec<usize> = init
                 .req_arr("shape")?
                 .iter()
                 .map(|d| d.as_usize().ok_or_else(|| Error::Frontend("bad init dim".into())))
                 .collect::<Result<_>>()?;
+            // Overflow-checked element count: a hostile shape like
+            // [2^32, 2^32] must become a typed error, not a downstream
+            // panic or a zero-length allocation.
+            let count = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| if d == 0 { None } else { acc.checked_mul(d) })
+                .ok_or_else(|| {
+                    Error::Frontend(format!(
+                        "initializer '{name}': invalid shape {dims:?} (zero or overflowing extent)"
+                    ))
+                })?;
             let mut i = if let Some(data) = init.get("data").as_arr() {
                 let vals: Vec<f32> = data.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
-                if vals.len() != dims.iter().product::<usize>() {
+                if vals.len() != count {
                     return Err(Error::Frontend(format!(
                         "initializer '{name}': {} values for shape {dims:?}",
                         vals.len()
@@ -119,14 +144,22 @@ pub fn load_str(text: &str) -> Result<Graph> {
                     .ok_or_else(|| Error::Frontend("node output must be a name".into()))
             })
             .collect::<Result<_>>()?;
+        // Outputs register only after this node's inputs resolved, so a
+        // node can neither consume its own output nor a later node's:
+        // loaded graphs are DAGs by construction.
         let outputs: Vec<TensorId> = out_names
             .iter()
             .map(|n| {
+                if by_name.contains_key(n) {
+                    return Err(Error::Frontend(format!(
+                        "node '{name}' redefines tensor '{n}' (duplicate tensor name)"
+                    )));
+                }
                 let id = g.tensor(n, None, DType::F32);
                 by_name.insert(n.clone(), id);
-                id
+                Ok(id)
             })
-            .collect();
+            .collect::<Result<_>>()?;
         g.nodes.push(Node {
             name,
             op,
@@ -405,5 +438,74 @@ mod tests {
             "nodes": [{"op": "Relu", "inputs": ["ghost"], "outputs": ["y"]}]
         }"#;
         assert!(load_str(text).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_input_name() {
+        let text = r#"{
+            "name": "bad",
+            "inputs": [{"name": "x", "shape": [1]}, {"name": "x", "shape": [2]}],
+            "outputs": ["x"], "nodes": []
+        }"#;
+        let e = load_str(text).unwrap_err();
+        assert!(format!("{e}").contains("duplicate tensor name 'x'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_initializer_shadowing_input() {
+        let text = r#"{
+            "name": "bad",
+            "inputs": [{"name": "x", "shape": [1, 4]}],
+            "outputs": ["x"],
+            "initializers": [{"name": "x", "shape": [4], "seed": 1, "std": 0.1}],
+            "nodes": []
+        }"#;
+        let e = load_str(text).unwrap_err();
+        assert!(format!("{e}").contains("duplicate tensor name 'x'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_node_output_shadowing() {
+        // A node output reusing an existing name would silently alias two
+        // tensors — the shape this cycle/shadow takes in a JSON document.
+        let text = r#"{
+            "name": "bad", "inputs": [{"name": "x", "shape": [1, 4]}], "outputs": ["x"],
+            "nodes": [{"op": "Relu", "inputs": ["x"], "outputs": ["x"]}]
+        }"#;
+        let e = load_str(text).unwrap_err();
+        assert!(format!("{e}").contains("redefines tensor 'x'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_self_cycle() {
+        // y is only defined by the node that also consumes it; at
+        // input-resolution time it does not exist yet, so the cycle
+        // surfaces as an undefined-tensor error.
+        let text = r#"{
+            "name": "bad", "inputs": [{"name": "x", "shape": [1, 4]}], "outputs": ["y"],
+            "nodes": [{"op": "Add", "inputs": ["y", "x"], "outputs": ["y"]}]
+        }"#;
+        let e = load_str(text).unwrap_err();
+        assert!(format!("{e}").contains("undefined tensor 'y'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_degenerate_initializer_shapes() {
+        // 2^32 x 2^32 overflows the 64-bit element count; a zero extent is
+        // an empty weight. Both must be typed errors, not panics.
+        for shape in ["[4294967296, 4294967296]", "[0, 4]"] {
+            let text = format!(
+                r#"{{
+                    "name": "bad", "inputs": [{{"name": "x", "shape": [1]}}], "outputs": ["x"],
+                    "initializers": [{{"name": "w", "shape": {shape}, "seed": 1, "std": 0.1}}],
+                    "nodes": []
+                }}"#
+            );
+            let e = load_str(&text).unwrap_err();
+            assert!(
+                format!("{e}").contains("zero or overflowing extent"),
+                "shape {shape}: {e}"
+            );
+        }
     }
 }

@@ -1,0 +1,422 @@
+//! Seeded random-graph generator for the compiler fuzzer.
+//!
+//! Given a `u64` seed, [`generate`] deterministically builds a small random
+//! graph out of the op/shape space the backend supports end-to-end: dense
+//! Gemm/MatMul chains with fan-out, residual adds, elementwise pairs and
+//! shared initializers, or NCHW conv stacks with BatchNorm, depthwise convs,
+//! pooling and a classifier tail. Shape menus deliberately include
+//! degenerate extents (dim = 1, single-node chains, channel count 1) so
+//! boundary paths in memory planning and codegen get exercised, and a
+//! fraction of dense graphs are born with a symbolic batch dimension and
+//! pushed through [`crate::dynshape::specialize`].
+//!
+//! Every generated graph is returned *prepared* (checked + shape-inferred)
+//! and fully static, ready for [`crate::pipeline::session::CompileSession`].
+
+use std::collections::BTreeSet;
+
+use crate::ir::ops::{AttrValue, Attrs, OpKind};
+use crate::ir::tensor::Initializer;
+use crate::ir::{DType, Dim, Graph, Shape, TensorId};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Knobs for one generated graph.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Upper bound on the random step budget; the conv classifier tail can
+    /// push the node count slightly past this.
+    pub max_nodes: usize,
+    /// Allow symbolic batch dimensions (exercises `dynshape::specialize`).
+    pub allow_dynamic: bool,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_nodes: 12, allow_dynamic: true }
+    }
+}
+
+/// One generated test case.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// Prepared (checked + shape-inferred), fully static graph.
+    pub graph: Graph,
+    /// Op name of every generated node, for coverage accounting.
+    pub ops: Vec<&'static str>,
+    /// Whether the graph was born with a symbolic batch and specialized.
+    pub dynamic: bool,
+}
+
+const DENSE_BATCHES: [usize; 5] = [1, 1, 2, 3, 5];
+const DENSE_FEATS: [usize; 6] = [1, 2, 4, 8, 12, 16];
+const DENSE_ACTS: [OpKind; 7] = [
+    OpKind::Relu,
+    OpKind::Relu6,
+    OpKind::Sigmoid,
+    OpKind::Tanh,
+    OpKind::Gelu,
+    OpKind::Abs,
+    OpKind::Neg,
+];
+const BIN_OPS: [OpKind; 4] = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Max];
+const CONV_BATCHES: [usize; 3] = [1, 1, 2];
+const CONV_CINS: [usize; 3] = [1, 3, 4];
+const CONV_HWS: [usize; 3] = [4, 6, 8];
+const CONV_COUTS: [usize; 4] = [1, 2, 4, 8];
+const CONV_CLASSES: [usize; 4] = [1, 2, 4, 10];
+
+fn attrs(kv: &[(&str, AttrValue)]) -> Attrs {
+    kv.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+fn ints(v: &[i64]) -> AttrValue {
+    AttrValue::Ints(v.to_vec())
+}
+
+/// Graph-under-construction plus the deterministic state that drives it.
+struct Builder {
+    g: Graph,
+    rng: Rng,
+    wseed: u64,
+    uid: usize,
+    ops: Vec<&'static str>,
+    exposed: BTreeSet<TensorId>,
+}
+
+impl Builder {
+    fn name(&mut self, stem: &str) -> String {
+        self.uid += 1;
+        format!("{stem}{}", self.uid)
+    }
+
+    fn weight(&mut self, stem: &str, shape: &[usize], std: f32) -> TensorId {
+        let nm = self.name(stem);
+        self.wseed += 1;
+        self.g.init(Initializer::lazy(&nm, shape, self.wseed, std))
+    }
+
+    fn push(&mut self, op: OpKind, stem: &str, inputs: &[TensorId], at: Attrs) -> TensorId {
+        let nm = self.name(stem);
+        self.ops.push(op.name());
+        self.g.node(op, &nm, inputs, at)
+    }
+
+    /// Occasionally expose an intermediate as an extra graph output —
+    /// multi-output graphs are where DCE/fusion passes historically clobber
+    /// model outputs.
+    fn maybe_expose(&mut self, t: TensorId) {
+        if self.rng.chance(0.15) {
+            self.exposed.insert(t);
+        }
+    }
+}
+
+/// Dense world: Gemm/MatMul chains over `[batch, feat]` activations.
+/// Symbolic-batch graphs restrict the menu to the batch-agnostic ops
+/// (Gemm / activation / residual / self-add).
+fn build_dense(b: &mut Builder, cfg: &GenConfig, dynamic: bool) -> usize {
+    let batch = DENSE_BATCHES[b.rng.index(DENSE_BATCHES.len())];
+    let batch_dim = if dynamic {
+        Dim::sym("batch", 1, 8)
+    } else {
+        Dim::Fixed(batch)
+    };
+    let mut feat = DENSE_FEATS[b.rng.index(DENSE_FEATS.len())];
+    let x = b.g.input("x", Shape(vec![batch_dim, Dim::Fixed(feat)]), DType::F32);
+    let mut cur = x;
+    // Pooled (din, dout, weight, bias) for shared-initializer fan-out.
+    let mut pool: Vec<(usize, usize, TensorId, TensorId)> = Vec::new();
+    let budget = 1 + b.rng.index(cfg.max_nodes.max(1));
+    let mut made = 0usize;
+    while made < budget {
+        // The first step is always a Gemm so every graph has real compute.
+        let r = if made == 0 { 0.0 } else { b.rng.f64() };
+        if r < 0.30 {
+            let reuse =
+                b.rng.chance(0.25) && pool.iter().any(|(din, ..)| *din == feat);
+            let (dout, w, bias) = if reuse {
+                let hits: Vec<(usize, TensorId, TensorId)> = pool
+                    .iter()
+                    .filter(|(din, ..)| *din == feat)
+                    .map(|e| (e.1, e.2, e.3))
+                    .collect();
+                hits[b.rng.index(hits.len())]
+            } else {
+                let dout = DENSE_FEATS[b.rng.index(DENSE_FEATS.len())];
+                let std = (2.0 / feat as f32).sqrt();
+                let w = b.weight("w", &[feat, dout], std);
+                let bias = b.weight("b", &[dout], 0.01);
+                pool.push((feat, dout, w, bias));
+                (dout, w, bias)
+            };
+            cur = b.push(OpKind::Gemm, "fc", &[cur, w, bias], Attrs::new());
+            feat = dout;
+            made += 1;
+        } else if r < 0.40 && !dynamic {
+            // MatMul + explicit rank-1 bias Add: the exact pattern
+            // `FuseBiasAdd` rewrites into a Gemm.
+            let dout = DENSE_FEATS[b.rng.index(DENSE_FEATS.len())];
+            let std = (2.0 / feat as f32).sqrt();
+            let w = b.weight("mw", &[feat, dout], std);
+            let mm = b.push(OpKind::MatMul, "mm", &[cur, w], Attrs::new());
+            let bias = b.weight("mb", &[dout], 0.01);
+            cur = b.push(OpKind::Add, "biasadd", &[mm, bias], Attrs::new());
+            feat = dout;
+            made += 2;
+        } else if r < 0.65 {
+            let act = DENSE_ACTS[b.rng.index(DENSE_ACTS.len())];
+            cur = b.push(act, "act", &[cur], Attrs::new());
+            made += 1;
+        } else if r < 0.80 {
+            // Residual block: branch Gemm (feat -> feat) + Relu + Add back.
+            let std = (2.0 / feat as f32).sqrt();
+            let w = b.weight("rw", &[feat, feat], std);
+            let bias = b.weight("rb", &[feat], 0.01);
+            let y = b.push(OpKind::Gemm, "rfc", &[cur, w, bias], Attrs::new());
+            let a = b.push(OpKind::Relu, "ract", &[y], Attrs::new());
+            cur = b.push(OpKind::Add, "res", &[a, cur], Attrs::new());
+            made += 3;
+        } else if r < 0.85 {
+            // Same tensor on both sides of a binary op.
+            cur = b.push(OpKind::Add, "dbl", &[cur, cur], Attrs::new());
+            made += 1;
+        } else if r < 0.95 && !dynamic {
+            // Fan a pair of activations out of `cur`, join with a binary op.
+            let p = b.push(OpKind::Sigmoid, "pa", &[cur], Attrs::new());
+            let q = b.push(OpKind::Tanh, "pb", &[cur], Attrs::new());
+            let bin = BIN_OPS[b.rng.index(BIN_OPS.len())];
+            cur = b.push(bin, "join", &[p, q], Attrs::new());
+            made += 3;
+        } else if !dynamic {
+            cur = b.push(OpKind::Softmax, "sm", &[cur], Attrs::new());
+            made += 1;
+        } else {
+            cur = b.push(OpKind::Relu, "act", &[cur], Attrs::new());
+            made += 1;
+        }
+        b.maybe_expose(cur);
+    }
+    b.exposed.insert(cur);
+    batch
+}
+
+/// Conv world: NCHW stacks of Conv/BN/depthwise/pool with an optional
+/// GlobalAveragePool -> Flatten -> Gemm classifier tail.
+fn build_conv(b: &mut Builder, cfg: &GenConfig) {
+    let batch = CONV_BATCHES[b.rng.index(CONV_BATCHES.len())];
+    let mut c = CONV_CINS[b.rng.index(CONV_CINS.len())];
+    let mut hw = CONV_HWS[b.rng.index(CONV_HWS.len())];
+    let x = b.g.input("x", Shape::fixed(&[batch, c, hw, hw]), DType::F32);
+    let mut cur = x;
+    // Pooled (cin, cout, k, weight, bias) for shared conv filters.
+    let mut pool: Vec<(usize, usize, usize, TensorId, Option<TensorId>)> = Vec::new();
+    let budget = 1 + b.rng.index(cfg.max_nodes.max(1));
+    let mut made = 0usize;
+    while made < budget {
+        let r = if made == 0 { 0.0 } else { b.rng.f64() };
+        if r < 0.40 {
+            let k = if hw >= 3 && b.rng.chance(0.7) { 3 } else { 1 };
+            let s = if hw >= 4 && b.rng.chance(0.3) { 2 } else { 1 };
+            let p = k / 2;
+            let reuse =
+                b.rng.chance(0.2) && pool.iter().any(|e| e.0 == c && e.2 == k);
+            let (cout, w, bias) = if reuse {
+                let hits: Vec<(usize, TensorId, Option<TensorId>)> = pool
+                    .iter()
+                    .filter(|e| e.0 == c && e.2 == k)
+                    .map(|e| (e.1, e.3, e.4))
+                    .collect();
+                hits[b.rng.index(hits.len())]
+            } else {
+                let cout = CONV_COUTS[b.rng.index(CONV_COUTS.len())];
+                let std = (2.0 / (c * k * k) as f32).sqrt();
+                let w = b.weight("cw", &[cout, c, k, k], std);
+                let bias = if b.rng.chance(0.7) {
+                    Some(b.weight("cb", &[cout], 0.01))
+                } else {
+                    None
+                };
+                pool.push((c, cout, k, w, bias));
+                (cout, w, bias)
+            };
+            let at = attrs(&[
+                ("strides", ints(&[s as i64, s as i64])),
+                ("pads", ints(&[p as i64, p as i64])),
+            ]);
+            let inputs: Vec<TensorId> = match bias {
+                Some(bi) => vec![cur, w, bi],
+                None => vec![cur, w],
+            };
+            cur = b.push(OpKind::Conv, "conv", &inputs, at);
+            c = cout;
+            hw = (hw + 2 * p - k) / s + 1;
+            made += 1;
+        } else if r < 0.60 {
+            let gamma = b.weight("gamma", &[c], 0.1);
+            let beta = b.weight("beta", &[c], 0.01);
+            let mean = b.weight("mean", &[c], 0.01);
+            let vname = b.name("var");
+            let var = b.g.init(Initializer::eager(&vname, &[c], vec![1.0; c]));
+            cur = b.push(
+                OpKind::BatchNormalization,
+                "bn",
+                &[cur, gamma, beta, mean, var],
+                Attrs::new(),
+            );
+            made += 1;
+        } else if r < 0.70 && hw >= 3 {
+            // Depthwise 3x3 stride-1 + Relu6 (MobileNet idiom).
+            let std = (2.0f32 / 9.0).sqrt();
+            let w = b.weight("dw", &[c, 1, 3, 3], std);
+            let at = attrs(&[("strides", ints(&[1, 1])), ("pads", ints(&[1, 1]))]);
+            let y = b.push(OpKind::DepthwiseConv, "dwc", &[cur, w], at);
+            cur = b.push(OpKind::Relu6, "dwa", &[y], Attrs::new());
+            made += 2;
+        } else if r < 0.85 {
+            let act = if b.rng.chance(0.5) { OpKind::Relu } else { OpKind::Relu6 };
+            cur = b.push(act, "act", &[cur], Attrs::new());
+            made += 1;
+        } else if r < 0.95 && hw >= 3 {
+            let at = attrs(&[
+                ("kernel_shape", ints(&[3, 3])),
+                ("strides", ints(&[2, 2])),
+                ("pads", ints(&[1, 1])),
+            ]);
+            cur = b.push(OpKind::MaxPool, "pool", &[cur], at);
+            hw = (hw - 1) / 2 + 1;
+            made += 1;
+        } else if hw >= 3 {
+            // Residual: Conv (c -> c, 3x3 s1 p1) + Relu + Add back.
+            let std = (2.0 / (c * 9) as f32).sqrt();
+            let w = b.weight("rcw", &[c, c, 3, 3], std);
+            let bias = b.weight("rcb", &[c], 0.01);
+            let at = attrs(&[("strides", ints(&[1, 1])), ("pads", ints(&[1, 1]))]);
+            let y = b.push(OpKind::Conv, "rconv", &[cur, w, bias], at);
+            let a = b.push(OpKind::Relu, "rrelu", &[y], Attrs::new());
+            cur = b.push(OpKind::Add, "radd", &[a, cur], Attrs::new());
+            made += 3;
+        } else {
+            cur = b.push(OpKind::Relu, "act", &[cur], Attrs::new());
+            made += 1;
+        }
+        b.maybe_expose(cur);
+    }
+    if b.rng.chance(0.8) {
+        let gap = b.push(OpKind::GlobalAveragePool, "gap", &[cur], Attrs::new());
+        let flat = b.push(
+            OpKind::Flatten,
+            "flat",
+            &[gap],
+            attrs(&[("axis", AttrValue::Int(1))]),
+        );
+        let classes = CONV_CLASSES[b.rng.index(CONV_CLASSES.len())];
+        let std = (2.0 / c as f32).sqrt();
+        let w = b.weight("hw", &[c, classes], std);
+        let bias = b.weight("hb", &[classes], 0.01);
+        cur = b.push(OpKind::Gemm, "head", &[flat, w, bias], Attrs::new());
+    }
+    b.exposed.insert(cur);
+}
+
+/// Deterministically generate, check and shape-infer one random graph.
+/// Same `(seed, cfg)` always yields an identical graph.
+pub fn generate(seed: u64, cfg: &GenConfig) -> Result<Generated> {
+    let rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+    let mut b = Builder {
+        g: Graph::new(&format!("fuzz_{seed}")),
+        rng,
+        wseed: seed.wrapping_mul(1009),
+        uid: 0,
+        ops: Vec::new(),
+        exposed: BTreeSet::new(),
+    };
+    let dense = b.rng.chance(0.6);
+    let mut dynamic = false;
+    let mut batch = 1usize;
+    if dense {
+        dynamic = cfg.allow_dynamic && b.rng.chance(0.2);
+        batch = build_dense(&mut b, cfg, dynamic);
+    } else {
+        build_conv(&mut b, cfg);
+    }
+    b.g.outputs = b.exposed.iter().copied().collect();
+    let prepared = crate::frontend::prepare(b.g)?;
+    let graph = if dynamic {
+        let sp = crate::dynshape::specialize(&prepared, &[("batch".to_string(), batch)])?;
+        crate::frontend::prepare(sp)?
+    } else {
+        prepared
+    };
+    Ok(Generated { graph, ops: b.ops, dynamic })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = GenConfig::default();
+        for seed in 0..20 {
+            let a = generate(seed, &cfg).unwrap();
+            let b = generate(seed, &cfg).unwrap();
+            assert_eq!(a.ops, b.ops, "seed {seed} op sequence diverged");
+            assert_eq!(a.graph.nodes.len(), b.graph.nodes.len());
+            assert_eq!(a.graph.outputs, b.graph.outputs);
+            assert_eq!(a.dynamic, b.dynamic);
+        }
+    }
+
+    #[test]
+    fn generated_graphs_are_prepared_and_static() {
+        let cfg = GenConfig::default();
+        for seed in 0..50 {
+            let t = generate(seed, &cfg).unwrap();
+            assert!(t.graph.check().is_ok(), "seed {seed} failed check");
+            assert!(!t.graph.has_symbolic_dims(), "seed {seed} left symbolic dims");
+            assert!(!t.graph.outputs.is_empty());
+            for out in &t.graph.outputs {
+                assert!(t.graph.tensors[out.0].shape.is_some(), "seed {seed} output unannotated");
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_cover_both_worlds_and_dynamic_batches() {
+        let cfg = GenConfig::default();
+        let mut conv = 0;
+        let mut dense = 0;
+        let mut dynamic = 0;
+        for seed in 0..60 {
+            let t = generate(seed, &cfg).unwrap();
+            if t.ops.iter().any(|o| *o == "Conv" || *o == "MaxPool") {
+                conv += 1;
+            } else {
+                dense += 1;
+            }
+            if t.dynamic {
+                dynamic += 1;
+            }
+        }
+        assert!(conv > 5, "conv world under-sampled: {conv}");
+        assert!(dense > 5, "dense world under-sampled: {dense}");
+        assert!(dynamic > 0, "no dynamic graphs in 60 seeds");
+    }
+
+    #[test]
+    fn oracle_executes_generated_graphs() {
+        use crate::ir::exec::Executor;
+        use crate::runtime::simrun::synth_inputs;
+        let cfg = GenConfig::default();
+        for seed in 0..30 {
+            let t = generate(seed, &cfg).unwrap();
+            let inputs = synth_inputs(&t.graph, seed);
+            let outs = Executor::new().run(&t.graph, &inputs).unwrap();
+            assert_eq!(outs.len(), t.graph.outputs.len(), "seed {seed}");
+            for o in &outs {
+                assert!(o.data.iter().all(|v| v.is_finite()), "seed {seed} non-finite output");
+            }
+        }
+    }
+}

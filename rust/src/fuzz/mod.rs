@@ -1,0 +1,423 @@
+//! Compiler fuzzing: seeded random graphs driven end-to-end through the
+//! pipeline with differential verification against the reference executor.
+//!
+//! Each seed deterministically yields one graph ([`gen::generate`]); the
+//! harness compiles it at every requested precision with pass-boundary IR
+//! validation forced on, runs the binary on the fast simulator, and compares
+//! machine outputs against the [`crate::ir::exec`] oracle under the
+//! precision's tolerance ([`crate::runtime::simrun::tolerance`]). Any panic,
+//! compile/validator error, simulator trap, or numerical divergence is a
+//! [`Finding`]; findings are shrunk to minimal reproducers by
+//! [`reduce::reduce`] and serialized as ONNX-JSON for regression capture.
+//!
+//! The campaign is deterministic regardless of worker count: seeds are
+//! index-striped across threads and results merged in seed order.
+
+pub mod gen;
+pub mod reduce;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::ir::{DType, Graph};
+use crate::pipeline::session::{CompileOptions, CompileSession};
+use crate::runtime::simrun;
+use crate::util::error::Error;
+use crate::util::json::Json;
+
+pub use gen::{GenConfig, Generated};
+
+/// How a fuzz case failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    /// A stage panicked (caught at the case boundary).
+    Panic,
+    /// Compilation failed: frontend, optimizer (including the per-pass IR
+    /// validator), quantizer, codegen, or backend returned an error on a
+    /// graph the generator considers well-formed.
+    CompileError,
+    /// The simulator trapped or errored while executing the binary.
+    SimError,
+    /// Machine outputs diverged from the reference executor beyond the
+    /// precision's tolerance.
+    Divergence,
+}
+
+impl FindingKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FindingKind::Panic => "panic",
+            FindingKind::CompileError => "compile_error",
+            FindingKind::SimError => "sim_error",
+            FindingKind::Divergence => "divergence",
+        }
+    }
+}
+
+/// One failing fuzz case: the seed and precision that reproduce it, what
+/// went wrong, and the offending graph (plus its reduction, when run).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub seed: u64,
+    pub precision: DType,
+    pub kind: FindingKind,
+    pub detail: String,
+    /// The full generated graph that failed.
+    pub graph: Graph,
+    /// Delta-debugged minimal graph reproducing the same failure signature.
+    pub reduced: Option<Graph>,
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("precision", Json::str_(self.precision.name())),
+            ("kind", Json::str_(self.kind.name())),
+            ("detail", Json::str_(&self.detail)),
+            ("nodes", Json::Num(self.graph.nodes.len() as f64)),
+            ("graph", Json::str_(&crate::frontend::onnx_json::save_str(&self.graph))),
+        ];
+        if let Some(r) = &self.reduced {
+            fields.push(("reduced_nodes", Json::Num(r.nodes.len() as f64)));
+            fields.push(("reduced", Json::str_(&crate::frontend::onnx_json::save_str(r))));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn headline(&self) -> String {
+        format!(
+            "seed {} @ {}: {} ({})",
+            self.seed,
+            self.precision.name(),
+            self.kind.name(),
+            self.detail
+        )
+    }
+}
+
+/// Campaign configuration.
+#[derive(Debug, Clone)]
+pub struct FuzzOptions {
+    /// Number of seeds (graphs) to generate.
+    pub seeds: u64,
+    /// First seed; the campaign covers `start_seed .. start_seed + seeds`.
+    pub start_seed: u64,
+    /// Precisions each graph is compiled and verified at.
+    pub precisions: Vec<DType>,
+    pub gen: GenConfig,
+    /// Worker threads (0 = available parallelism). Worker count never
+    /// changes the result, only the wall clock.
+    pub workers: usize,
+    /// Shrink each finding to a minimal reproducer before reporting.
+    pub reduce: bool,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> Self {
+        FuzzOptions {
+            seeds: 100,
+            start_seed: 0,
+            precisions: vec![DType::F32, DType::I8, DType::I4],
+            gen: GenConfig::default(),
+            workers: 0,
+            reduce: true,
+        }
+    }
+}
+
+/// Campaign results: coverage accounting plus every finding.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzReport {
+    /// Graphs successfully generated.
+    pub graphs: usize,
+    /// Compile+verify runs (graphs x precisions).
+    pub runs: usize,
+    /// Graphs that went through symbolic-batch specialization.
+    pub dynamic_graphs: usize,
+    /// Generated node count per op name.
+    pub op_coverage: BTreeMap<String, usize>,
+    /// Runs per precision name.
+    pub precision_runs: BTreeMap<String, usize>,
+    pub findings: Vec<Finding>,
+    pub wall_seconds: f64,
+}
+
+impl FuzzReport {
+    pub fn graphs_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.graphs as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cov: Vec<(&str, Json)> = self
+            .op_coverage
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::Num(*v as f64)))
+            .collect();
+        let prec: Vec<(&str, Json)> = self
+            .precision_runs
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::Num(*v as f64)))
+            .collect();
+        Json::obj(vec![
+            ("graphs", Json::Num(self.graphs as f64)),
+            ("runs", Json::Num(self.runs as f64)),
+            ("dynamic_graphs", Json::Num(self.dynamic_graphs as f64)),
+            ("graphs_per_sec", Json::Num(self.graphs_per_sec())),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("op_coverage", Json::obj(cov)),
+            ("precision_runs", Json::obj(prec)),
+            ("findings_count", Json::Num(self.findings.len() as f64)),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} graphs ({} dynamic), {} runs across {} precisions, {} ops covered, {} findings in {:.1}s ({:.1} graphs/s)",
+            self.graphs,
+            self.dynamic_graphs,
+            self.runs,
+            self.precision_runs.len(),
+            self.op_coverage.len(),
+            self.findings.len(),
+            self.wall_seconds,
+            self.graphs_per_sec()
+        )
+    }
+}
+
+/// Compile a prepared graph at `precision` (per-pass IR validation forced
+/// on) and differentially verify the machine against the oracle.
+pub fn compile_and_verify(
+    g: &Graph,
+    precision: DType,
+    seed: u64,
+) -> crate::util::error::Result<simrun::VerifyReport> {
+    let mut opts = CompileOptions {
+        precision,
+        verify_passes: true,
+        seed,
+        ..CompileOptions::default()
+    };
+    if precision != DType::F32 {
+        opts.calib_inputs = vec![simrun::synth_inputs(g, seed ^ 0x5eed)];
+    }
+    let mut sess = CompileSession::new(opts);
+    let c = sess.compile(g)?;
+    sess.verify_auto(&c)
+}
+
+/// Run one (graph, precision) case, catching panics at the boundary.
+/// `None` = passed; `Some((kind, detail))` = finding.
+pub fn run_case(g: &Graph, precision: DType, seed: u64) -> Option<(FindingKind, String)> {
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        compile_and_verify(g, precision, seed)
+    }));
+    match res {
+        Ok(Ok(rep)) => {
+            if rep.passed() {
+                None
+            } else {
+                Some((FindingKind::Divergence, rep.summary()))
+            }
+        }
+        Ok(Err(e)) => {
+            let kind = match &e {
+                Error::Trap(_) | Error::Sim(_) => FindingKind::SimError,
+                _ => FindingKind::CompileError,
+            };
+            Some((kind, format!("{e}")))
+        }
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "opaque panic payload".to_string()
+            };
+            Some((FindingKind::Panic, msg))
+        }
+    }
+}
+
+/// Failure signature used by the reducer: kind plus the error-class prefix
+/// of the detail (the text before the first ':'), so shrinking is allowed
+/// to change messages but not the failure class.
+pub fn signature(kind: FindingKind, detail: &str) -> String {
+    format!("{}|{}", kind.name(), detail.split(':').next().unwrap_or(""))
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    graphs: usize,
+    runs: usize,
+    dynamic_graphs: usize,
+    op_cov: BTreeMap<String, usize>,
+    prec_runs: BTreeMap<String, usize>,
+    findings: Vec<Finding>,
+}
+
+fn fuzz_one_seed(opts: &FuzzOptions, seed: u64, out: &mut WorkerOut) {
+    let t = match gen::generate(seed, &opts.gen) {
+        Ok(t) => t,
+        Err(e) => {
+            // The generator only emits graphs it believes are well-formed,
+            // so a prepare failure here is itself a bug to report.
+            out.findings.push(Finding {
+                seed,
+                precision: DType::F32,
+                kind: FindingKind::CompileError,
+                detail: format!("generate: {e}"),
+                graph: Graph::new("generate_failed"),
+                reduced: None,
+            });
+            return;
+        }
+    };
+    out.graphs += 1;
+    if t.dynamic {
+        out.dynamic_graphs += 1;
+    }
+    for op in &t.ops {
+        *out.op_cov.entry((*op).to_string()).or_insert(0) += 1;
+    }
+    for &p in &opts.precisions {
+        out.runs += 1;
+        *out.prec_runs.entry(p.name().to_string()).or_insert(0) += 1;
+        if let Some((kind, detail)) = run_case(&t.graph, p, seed) {
+            let reduced = if opts.reduce {
+                let sig = signature(kind, &detail);
+                let pred = |g: &Graph| match run_case(g, p, seed) {
+                    Some((k, d)) => signature(k, &d) == sig,
+                    None => false,
+                };
+                Some(reduce::reduce(&t.graph, pred).graph)
+            } else {
+                None
+            };
+            out.findings.push(Finding {
+                seed,
+                precision: p,
+                kind,
+                detail,
+                graph: t.graph.clone(),
+                reduced,
+            });
+        }
+    }
+}
+
+/// Run a fuzz campaign. Deterministic for a given `FuzzOptions` (modulo
+/// `wall_seconds`): seeds are index-striped across workers and merged in
+/// seed order, so thread count and scheduling never change the report.
+pub fn run_campaign(opts: &FuzzOptions) -> FuzzReport {
+    let t0 = Instant::now();
+    let nw = if opts.workers > 0 {
+        opts.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    let nw = nw.clamp(1, (opts.seeds.max(1) as usize).min(64));
+    let mut parts: Vec<WorkerOut> = Vec::with_capacity(nw);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nw)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut out = WorkerOut::default();
+                    let mut i = w as u64;
+                    while i < opts.seeds {
+                        fuzz_one_seed(opts, opts.start_seed + i, &mut out);
+                        i += nw as u64;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("fuzz worker panicked"));
+        }
+    });
+    let mut report = FuzzReport::default();
+    for p in parts {
+        report.graphs += p.graphs;
+        report.runs += p.runs;
+        report.dynamic_graphs += p.dynamic_graphs;
+        for (k, v) in p.op_cov {
+            *report.op_coverage.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in p.prec_runs {
+            *report.precision_runs.entry(k).or_insert(0) += v;
+        }
+        report.findings.extend(p.findings);
+    }
+    report
+        .findings
+        .sort_by(|a, b| (a.seed, a.precision.name()).cmp(&(b.seed, b.precision.name())));
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_campaign_is_clean_and_worker_invariant() {
+        let base = FuzzOptions {
+            seeds: 8,
+            precisions: vec![DType::F32],
+            workers: 1,
+            ..FuzzOptions::default()
+        };
+        let a = run_campaign(&base);
+        assert_eq!(a.graphs, 8);
+        assert_eq!(a.runs, 8);
+        for f in &a.findings {
+            panic!("unexpected finding: {}", f.headline());
+        }
+        let b = run_campaign(&FuzzOptions { workers: 3, ..base });
+        assert_eq!(a.graphs, b.graphs);
+        assert_eq!(a.op_coverage, b.op_coverage);
+        assert_eq!(a.findings.len(), b.findings.len());
+    }
+
+    #[test]
+    fn quantized_campaign_is_clean() {
+        let opts = FuzzOptions {
+            seeds: 4,
+            start_seed: 100,
+            precisions: vec![DType::I8, DType::I4],
+            ..FuzzOptions::default()
+        };
+        let r = run_campaign(&opts);
+        assert_eq!(r.runs, 8);
+        for f in &r.findings {
+            panic!("unexpected finding: {}", f.headline());
+        }
+        assert_eq!(r.precision_runs.get("INT8"), Some(&4));
+        assert_eq!(r.precision_runs.get("INT4"), Some(&4));
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let opts = FuzzOptions {
+            seeds: 3,
+            precisions: vec![DType::F32],
+            ..FuzzOptions::default()
+        };
+        let r = run_campaign(&opts);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("graphs").as_usize(), Some(3));
+        assert_eq!(j.get("findings_count").as_usize(), Some(0));
+        assert!(j.get("op_coverage").as_obj().is_some());
+    }
+}

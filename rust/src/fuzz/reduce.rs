@@ -1,0 +1,204 @@
+//! Delta-debugging reducer: greedily shrink a failing graph while the
+//! failure keeps reproducing.
+//!
+//! Two shrink moves run to a fixed point:
+//!
+//! 1. **Node dropping** (last to first): remove a node; its outputs that are
+//!    still consumed downstream become graph inputs (their inferred static
+//!    shapes are kept, so the synthesized-input machinery still works), its
+//!    exposed outputs leave the output list, and orphaned inputs/
+//!    initializers are pruned.
+//! 2. **Dimension halving**: halve one fixed extent of one graph input at a
+//!    time. Candidates that no longer shape-check (e.g. a feature dim now
+//!    disagreeing with a weight) are discarded before the predicate runs.
+//!
+//! Every candidate is re-`prepare`d — shape inference re-annotates all node
+//! outputs, so stale annotations can never leak into a reduced graph — and
+//! accepted only when `still_fails` says the *same* failure signature
+//! reproduces. The caller's predicate therefore only ever sees structurally
+//! valid graphs.
+
+use std::collections::BTreeSet;
+
+use crate::ir::{Dim, Graph, TensorId};
+
+/// Outcome of one reduction: the smallest accepted graph plus effort stats.
+#[derive(Debug, Clone)]
+pub struct ReduceResult {
+    pub graph: Graph,
+    /// Fixed-point rounds executed.
+    pub rounds: usize,
+    /// Candidates handed to the predicate.
+    pub candidates: usize,
+}
+
+const MAX_ROUNDS: usize = 8;
+
+/// Remove node `i`, rewiring the graph so it stays well-formed. Returns the
+/// prepared candidate, or `None` when the removal cannot produce a valid
+/// graph (all outputs gone, a needed tensor has no static shape, ...).
+fn drop_node(g: &Graph, i: usize) -> Option<Graph> {
+    let mut c = g.clone();
+    let node = c.nodes.remove(i);
+    // Exposed outputs of the dropped node disappear from the interface.
+    c.outputs.retain(|t| !node.outputs.contains(t));
+    if c.outputs.is_empty() {
+        return None;
+    }
+    // Outputs still consumed downstream get promoted to graph inputs; that
+    // needs a static shape to synthesize data for.
+    for out in &node.outputs {
+        let consumed = c.nodes.iter().any(|n| n.inputs.contains(out));
+        if consumed {
+            let static_shape = c.tensors[out.0]
+                .shape
+                .as_ref()
+                .map(|s| s.is_static())
+                .unwrap_or(false);
+            if !static_shape {
+                return None;
+            }
+            c.inputs.push(*out);
+        }
+    }
+    // Prune inputs and initializers nothing references any more.
+    let used: BTreeSet<TensorId> = c
+        .nodes
+        .iter()
+        .flat_map(|n| n.inputs.iter().copied())
+        .collect();
+    let out_set: BTreeSet<TensorId> = c.outputs.iter().copied().collect();
+    c.inputs.retain(|t| used.contains(t) || out_set.contains(t));
+    c.initializers.retain(|t, _| used.contains(t));
+    crate::frontend::prepare(c).ok()
+}
+
+/// Halve dimension `di` of graph input `t`. Returns the prepared candidate
+/// or `None` when the shrunken shape no longer infers.
+fn halve_dim(g: &Graph, t: TensorId, di: usize) -> Option<Graph> {
+    let mut c = g.clone();
+    let mut shape = c.tensors[t.0].shape.clone()?;
+    let n = match shape.0.get(di) {
+        Some(Dim::Fixed(n)) if *n > 1 => *n,
+        _ => return None,
+    };
+    shape.0[di] = Dim::Fixed(n / 2);
+    c.tensors[t.0].shape = Some(shape);
+    crate::frontend::prepare(c).ok()
+}
+
+/// Greedily shrink `graph` while `still_fails` keeps returning true. The
+/// input graph must already fail; the result is the smallest graph found
+/// that still reproduces the failure.
+pub fn reduce<F: Fn(&Graph) -> bool>(graph: &Graph, still_fails: F) -> ReduceResult {
+    let mut best = graph.clone();
+    let mut candidates = 0usize;
+    let mut rounds = 0usize;
+    loop {
+        rounds += 1;
+        let mut improved = false;
+        // Move 1: drop nodes, newest first (later nodes usually depend on
+        // earlier ones, so this order unravels chains from the back).
+        let mut i = best.nodes.len();
+        while i > 0 {
+            i -= 1;
+            if best.nodes.len() <= 1 {
+                break;
+            }
+            if let Some(cand) = drop_node(&best, i) {
+                candidates += 1;
+                if still_fails(&cand) {
+                    best = cand;
+                    improved = true;
+                    i = best.nodes.len();
+                }
+            }
+        }
+        // Move 2: halve input extents one (input, dim) at a time.
+        let mut shrunk = true;
+        while shrunk {
+            shrunk = false;
+            for idx in 0..best.inputs.len() {
+                let t = best.inputs[idx];
+                let rank = match &best.tensors[t.0].shape {
+                    Some(s) => s.rank(),
+                    None => 0,
+                };
+                for di in 0..rank {
+                    if let Some(cand) = halve_dim(&best, t, di) {
+                        candidates += 1;
+                        if still_fails(&cand) {
+                            best = cand;
+                            improved = true;
+                            shrunk = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !improved || rounds >= MAX_ROUNDS {
+            break;
+        }
+    }
+    ReduceResult { graph: best, rounds, candidates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::OpKind;
+
+    /// Predicate: "graph still contains a Softmax" — a stand-in for "the
+    /// failure reproduces" that lets the reducer strip everything else.
+    fn has_softmax(g: &Graph) -> bool {
+        g.nodes.iter().any(|n| n.op == OpKind::Softmax)
+    }
+
+    #[test]
+    fn reduces_chain_to_single_guilty_node() {
+        let mut g = model_zoo::mlp(&[8, 16, 16, 4], 4);
+        let last = *g.outputs.last().unwrap();
+        let sm = g.node(OpKind::Softmax, "sm", &[last], Default::default());
+        g.outputs = vec![sm];
+        let g = prepare(g).unwrap();
+        assert!(g.nodes.len() >= 6);
+
+        let r = reduce(&g, has_softmax);
+        assert!(has_softmax(&r.graph), "reduction lost the failure");
+        assert!(
+            r.graph.nodes.len() <= 2,
+            "expected <=2 nodes, got {}",
+            r.graph.nodes.len()
+        );
+        assert!(r.graph.check().is_ok());
+        // The Softmax input was promoted to a graph input with a static
+        // shape, and batch was halved 4 -> 1.
+        let x = r.graph.inputs[0];
+        let dims = r.graph.tensors[x.0].shape.as_ref().unwrap().dims();
+        assert_eq!(dims[0], 1, "batch not minimized: {dims:?}");
+    }
+
+    #[test]
+    fn reduction_prunes_unused_initializers() {
+        let g = prepare(model_zoo::mlp(&[8, 16, 16, 4], 2)).unwrap();
+        let n_inits = g.initializers.len();
+        let r = reduce(&g, |c| c.nodes.iter().any(|n| n.op == OpKind::Gemm));
+        assert!(r.graph.initializers.len() < n_inits);
+        assert_eq!(
+            r.graph.nodes.iter().filter(|n| n.op == OpKind::Gemm).count(),
+            1,
+            "should keep exactly one Gemm"
+        );
+    }
+
+    #[test]
+    fn non_reducible_graph_survives_unchanged() {
+        let g = prepare(model_zoo::mlp(&[4, 2], 1)).unwrap();
+        // Predicate holds only for the exact original node count, so every
+        // candidate is rejected.
+        let n = g.nodes.len();
+        let r = reduce(&g, |c| c.nodes.len() == n);
+        assert_eq!(r.graph.nodes.len(), n);
+    }
+}

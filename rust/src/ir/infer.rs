@@ -89,7 +89,10 @@ fn conv_out(in_: usize, k: usize, pad: usize, stride: usize) -> usize {
     (in_ + 2 * pad - k) / stride + 1
 }
 
-fn infer_node(g: &Graph, node: &Node) -> Result<Vec<OutInfo>> {
+/// Re-infer one node's output shapes/dtypes from its (annotated) inputs.
+/// `pub(crate)` so `ir::verify` can check producer/consumer shape agreement
+/// without re-running whole-graph inference.
+pub(crate) fn infer_node(g: &Graph, node: &Node) -> Result<Vec<OutInfo>> {
     let dt = in_dtype(g, node, 0);
     match node.op {
         // -- Linear ---------------------------------------------------------

@@ -15,6 +15,7 @@ pub mod infer;
 pub mod ops;
 pub mod shape;
 pub mod tensor;
+pub mod verify;
 
 pub use dtype::DType;
 pub use graph::{Graph, Node, NodeId, TensorId};

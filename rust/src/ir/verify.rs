@@ -1,0 +1,465 @@
+//! Structural IR validator — the pass-boundary soundness gate.
+//!
+//! [`verify`] checks the invariants every optimization pass must preserve;
+//! they are exactly the invariants the PR 7 soundness bugs (shared-weight
+//! corruption, graph-output clobbering) violated. [`verify_pass`] runs it
+//! between *every* pass in `opt::default_passes` — in debug builds and CI
+//! always, in release builds when `CompileOptions::verify_passes` is set or
+//! the `XGENC_VERIFY_PASSES` env var is present — so a bad rewrite is caught
+//! at the pass boundary, not three stages later in codegen.
+//!
+//! Invariants, in check order:
+//!
+//! 1. **Ids in range.** Every tensor id referenced by a node, a graph
+//!    input/output, or an initializer key indexes `g.tensors`.
+//! 2. **Single assignment.** Each tensor is produced by at most one node
+//!    output slot, and no node writes to a graph input or an initializer.
+//! 3. **Use-def consistency.** Every node input is defined — a graph input,
+//!    an initializer, or some node's output. No dangling tensor ids.
+//! 4. **Acyclicity.** The graph has a topological order.
+//! 5. **Outputs live.** Every graph output is defined, and a pass never
+//!    changes the number of graph outputs ([`verify_pass`] additionally
+//!    pins the output count across the pass).
+//! 6. **Initializer consistency.** Eager initializer payloads match their
+//!    declared shape, and the declared shape matches the tensor slot's
+//!    annotation.
+//! 7. **Epilogue well-formedness.** Epilogue attributes decode, sit only on
+//!    Gemm/Conv-family producers, `epilogue_base_inputs` never exceeds the
+//!    input count, and every `AddTensor` step indexes a real input.
+//! 8. **Shape agreement.** Where every input shape is annotated, the node's
+//!    re-inferred output shapes agree with its annotated output shapes.
+//!    Tensors passes created mid-fixpoint carry `None` shapes (shapes are
+//!    re-annotated only after the whole fixed point) and are skipped.
+
+use std::collections::BTreeSet;
+
+use crate::ir::epilogue;
+use crate::ir::graph::{Graph, Node};
+use crate::ir::ops::OpKind;
+use crate::util::error::{Error, Result};
+
+/// Check all structural invariants of `g`. Cheap enough to run between
+/// passes: one linear walk plus a topological sort.
+pub fn verify(g: &Graph) -> Result<()> {
+    ids_and_single_assignment(g)?;
+    use_def(g)?;
+    g.topo_order()?;
+    outputs_live(g)?;
+    initializers_consistent(g)?;
+    epilogues_well_formed(g)?;
+    shapes_agree(g)?;
+    Ok(())
+}
+
+/// Pass-boundary check: all of [`verify`], plus the output count must not
+/// have changed across the pass. Failures name the offending pass.
+pub fn verify_pass(g: &Graph, pass: &str, outputs_before: usize) -> Result<()> {
+    if g.outputs.len() != outputs_before {
+        return Err(Error::Opt(format!(
+            "pass '{pass}' changed graph output count from {outputs_before} to {}",
+            g.outputs.len()
+        )));
+    }
+    verify(g).map_err(|e| {
+        Error::Opt(format!("pass '{pass}' violated IR invariants: {e}"))
+    })
+}
+
+fn ids_and_single_assignment(g: &Graph) -> Result<()> {
+    let n = g.tensors.len();
+    let in_range = |t: crate::ir::graph::TensorId| t.0 < n;
+    for t in g.inputs.iter().chain(&g.outputs) {
+        if !in_range(*t) {
+            return Err(Error::Shape(format!(
+                "graph input/output references out-of-range tensor {}",
+                t.0
+            )));
+        }
+    }
+    for t in g.initializers.keys() {
+        if !in_range(*t) {
+            return Err(Error::Shape(format!(
+                "initializer '{}' has out-of-range tensor id {}",
+                g.initializers[t].name, t.0
+            )));
+        }
+    }
+    let mut produced = BTreeSet::new();
+    for node in &g.nodes {
+        for t in node.inputs.iter().chain(&node.outputs) {
+            if !in_range(*t) {
+                return Err(Error::Shape(format!(
+                    "node '{}' references out-of-range tensor {}",
+                    node.name, t.0
+                )));
+            }
+        }
+        for t in &node.outputs {
+            if !produced.insert(*t) {
+                return Err(Error::Shape(format!(
+                    "tensor '{}' ({}) produced twice — second producer '{}'",
+                    g.info(*t).name,
+                    t.0,
+                    node.name
+                )));
+            }
+            if g.is_initializer(*t) || g.inputs.contains(t) {
+                return Err(Error::Shape(format!(
+                    "node '{}' writes to graph input/initializer '{}'",
+                    node.name,
+                    g.info(*t).name
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn use_def(g: &Graph) -> Result<()> {
+    let mut defined: BTreeSet<_> = g.inputs.iter().copied().collect();
+    defined.extend(g.initializers.keys().copied());
+    for node in &g.nodes {
+        defined.extend(node.outputs.iter().copied());
+    }
+    for node in &g.nodes {
+        for t in &node.inputs {
+            if !defined.contains(t) {
+                return Err(Error::Shape(format!(
+                    "node '{}' uses dangling tensor '{}' ({}) — not an input, \
+                     initializer, or any node's output",
+                    node.name,
+                    g.info(*t).name,
+                    t.0
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn outputs_live(g: &Graph) -> Result<()> {
+    if g.outputs.is_empty() {
+        return Err(Error::Shape("graph has no outputs".into()));
+    }
+    let produced: BTreeSet<_> = g
+        .nodes
+        .iter()
+        .flat_map(|n| n.outputs.iter().copied())
+        .collect();
+    for out in &g.outputs {
+        let ok = produced.contains(out)
+            || g.inputs.contains(out)
+            || g.is_initializer(*out);
+        if !ok {
+            return Err(Error::Shape(format!(
+                "graph output '{}' ({}) dropped — no node produces it",
+                g.info(*out).name,
+                out.0
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn initializers_consistent(g: &Graph) -> Result<()> {
+    for (t, init) in &g.initializers {
+        if let Some(tensor) = &init.data {
+            let declared = init.shape.numel().unwrap_or(tensor.numel());
+            if tensor.numel() != declared {
+                return Err(Error::Shape(format!(
+                    "initializer '{}' payload has {} elements, shape {} declares {}",
+                    init.name,
+                    tensor.numel(),
+                    init.shape,
+                    declared
+                )));
+            }
+        }
+        if let Some(annot) = &g.info(*t).shape {
+            if annot != &init.shape {
+                return Err(Error::Shape(format!(
+                    "initializer '{}' shape {} disagrees with its tensor annotation {}",
+                    init.name, init.shape, annot
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Producers allowed to carry a fused epilogue — must match the candidate
+/// set `opt::fusion::FuseEpilogue` walks chains from.
+fn may_carry_epilogue(op: OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::MatMul | OpKind::Gemm | OpKind::Linear | OpKind::Conv | OpKind::DepthwiseConv
+    )
+}
+
+fn epilogues_well_formed(g: &Graph) -> Result<()> {
+    for node in &g.nodes {
+        let raw = match node.attrs.get("epilogue_ops") {
+            Some(a) => a,
+            None => continue,
+        };
+        let codes = raw.as_ints().ok_or_else(|| {
+            Error::Shape(format!(
+                "node '{}': epilogue_ops attr is not an int list",
+                node.name
+            ))
+        })?;
+        if codes.is_empty() {
+            continue;
+        }
+        let ops = epilogue::decode(&node.attrs);
+        if ops.len() != codes.len() {
+            return Err(Error::Shape(format!(
+                "node '{}': epilogue has {} opcodes but only {} decode",
+                node.name,
+                codes.len(),
+                ops.len()
+            )));
+        }
+        if !may_carry_epilogue(node.op) {
+            return Err(Error::Shape(format!(
+                "node '{}' ({}) carries an epilogue but is not a Gemm/Conv-family producer",
+                node.name,
+                node.op.name()
+            )));
+        }
+        let base = epilogue::base_inputs(&node.attrs, node.inputs.len());
+        if base > node.inputs.len() {
+            return Err(Error::Shape(format!(
+                "node '{}': epilogue_base_inputs {} exceeds input count {}",
+                node.name,
+                base,
+                node.inputs.len()
+            )));
+        }
+        for op in &ops {
+            if let epilogue::EpiOp::AddTensor { input } = op {
+                if *input >= node.inputs.len() {
+                    return Err(Error::Shape(format!(
+                        "node '{}': epilogue AddTensor indexes input {} of {}",
+                        node.name,
+                        input,
+                        node.inputs.len()
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// True when every input tensor of `node` has an annotated shape.
+fn inputs_annotated(g: &Graph, node: &Node) -> bool {
+    node.inputs.iter().all(|t| g.info(*t).shape.is_some())
+}
+
+fn shapes_agree(g: &Graph) -> Result<()> {
+    for node in &g.nodes {
+        if !inputs_annotated(g, node) {
+            continue;
+        }
+        let inferred = match crate::ir::infer::infer_node(g, node) {
+            Ok(s) => s,
+            Err(e) => {
+                return Err(Error::Shape(format!(
+                    "node '{}' ({}) no longer shape-checks: {e}",
+                    node.name,
+                    node.op.name()
+                )))
+            }
+        };
+        if inferred.len() != node.outputs.len() {
+            return Err(Error::Shape(format!(
+                "node '{}' has {} outputs but shape inference yields {}",
+                node.name,
+                node.outputs.len(),
+                inferred.len()
+            )));
+        }
+        for (tid, (shape, _dtype)) in node.outputs.iter().zip(&inferred) {
+            if let Some(annot) = &g.info(*tid).shape {
+                if annot != shape {
+                    return Err(Error::Shape(format!(
+                        "producer/consumer shape disagreement at '{}': output '{}' \
+                         annotated {} but node '{}' produces {}",
+                        node.name,
+                        g.info(*tid).name,
+                        annot,
+                        node.name,
+                        shape
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{model_zoo, prepare};
+    use crate::ir::dtype::DType;
+    use crate::ir::graph::TensorId;
+    use crate::ir::ops::{AttrValue, Attrs};
+    use crate::ir::shape::Shape;
+    use crate::ir::tensor::Initializer;
+
+    fn small() -> Graph {
+        prepare(model_zoo::mlp(&[8, 16, 4], 2)).unwrap()
+    }
+
+    #[test]
+    fn zoo_models_verify_clean() {
+        for g in [
+            prepare(model_zoo::mlp(&[8, 16, 4], 2)).unwrap(),
+            prepare(model_zoo::resnet_cifar(1)).unwrap(),
+            prepare(model_zoo::bert_tiny(1, 8)).unwrap(),
+        ] {
+            verify(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn optimized_zoo_models_verify_clean() {
+        let mut g = prepare(model_zoo::resnet_cifar(1)).unwrap();
+        crate::opt::optimize(&mut g).unwrap();
+        verify(&g).unwrap();
+    }
+
+    #[test]
+    fn dangling_input_is_caught() {
+        let mut g = small();
+        let ghost = g.tensor("ghost", None, DType::F32);
+        g.nodes[0].inputs[0] = ghost;
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("dangling"), "{e}");
+    }
+
+    #[test]
+    fn double_production_is_caught() {
+        let mut g = small();
+        let shared = g.nodes[0].outputs[0];
+        g.nodes[1].outputs = vec![shared];
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("produced twice"), "{e}");
+    }
+
+    #[test]
+    fn write_to_initializer_is_caught() {
+        let mut g = small();
+        let w = *g.initializers.keys().next().unwrap();
+        g.nodes[0].outputs = vec![w];
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("writes to graph input/initializer"), "{e}");
+    }
+
+    #[test]
+    fn dropped_output_is_caught() {
+        let mut g = small();
+        let out = *g.outputs.last().unwrap();
+        let producer = g.producer(out).unwrap();
+        let fresh = g.tensor("elsewhere", None, DType::F32);
+        g.nodes[producer.0].outputs = vec![fresh];
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("dropped"), "{e}");
+    }
+
+    #[test]
+    fn out_of_range_id_is_caught() {
+        let mut g = small();
+        g.nodes[0].inputs[0] = TensorId(usize::MAX);
+        assert!(verify(&g).is_err());
+    }
+
+    #[test]
+    fn initializer_payload_mismatch_is_caught() {
+        let mut g = small();
+        let w = *g.initializers.keys().next().unwrap();
+        let name = g.initializers[&w].name.clone();
+        g.initializers
+            .insert(w, Initializer::eager(&name, &[3], vec![1.0, 2.0, 3.0]));
+        // Replacement disagrees with the tensor slot's annotated shape.
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("disagrees"), "{e}");
+    }
+
+    #[test]
+    fn epilogue_on_wrong_op_is_caught() {
+        let mut g = small();
+        // Attach an epilogue to a Relu node — not a Gemm/Conv producer.
+        let relu = g
+            .nodes
+            .iter()
+            .position(|n| n.op == crate::ir::OpKind::Relu)
+            .expect("mlp has a relu");
+        crate::ir::epilogue::encode(
+            &mut g.nodes[relu].attrs,
+            &[crate::ir::epilogue::EpiOp::Relu],
+        );
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("not a Gemm/Conv-family"), "{e}");
+    }
+
+    #[test]
+    fn epilogue_bad_add_tensor_index_is_caught() {
+        let mut g = small();
+        let mm = g
+            .nodes
+            .iter()
+            .position(|n| n.op == crate::ir::OpKind::Gemm)
+            .expect("mlp has a gemm");
+        crate::ir::epilogue::encode(
+            &mut g.nodes[mm].attrs,
+            &[crate::ir::epilogue::EpiOp::AddTensor { input: 99 }],
+        );
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("AddTensor indexes input"), "{e}");
+    }
+
+    #[test]
+    fn epilogue_wrong_attr_type_is_caught() {
+        let mut g = small();
+        g.nodes[0]
+            .attrs
+            .insert("epilogue_ops".into(), AttrValue::Int(3));
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("not an int list"), "{e}");
+    }
+
+    #[test]
+    fn shape_disagreement_is_caught() {
+        let mut g = small();
+        let out = g.nodes[0].outputs[0];
+        g.info_mut(out).shape = Some(Shape::fixed(&[7, 7, 7]));
+        let e = verify(&g).unwrap_err().to_string();
+        assert!(e.contains("shape disagreement"), "{e}");
+    }
+
+    #[test]
+    fn unshaped_tensors_are_tolerated() {
+        // Mid-fixpoint state: a fresh tensor with no annotation must not
+        // trip the validator (shapes re-infer only after the fixed point).
+        let mut g = Graph::new("mid");
+        let x = g.input("x", Shape::fixed(&[1, 4]), DType::F32);
+        let w = g.init(Initializer::eager("w", &[4, 4], vec![0.1; 16]));
+        let y = g.node(crate::ir::OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let z = g.node(crate::ir::OpKind::Relu, "act", &[y], Attrs::new());
+        g.outputs.push(z);
+        verify(&g).unwrap();
+    }
+
+    #[test]
+    fn verify_pass_pins_output_count() {
+        let mut g = small();
+        let n = g.outputs.len();
+        verify_pass(&g, "noop", n).unwrap();
+        g.outputs.pop();
+        let e = verify_pass(&g, "dropper", n).unwrap_err().to_string();
+        assert!(e.contains("dropper") && e.contains("output count"), "{e}");
+    }
+}

@@ -40,6 +40,8 @@
 //!   specialization (paper §3.5).
 //! * [`pipeline`] — the compile session driver and multi-model WMEM
 //!   consolidation (paper §5.1).
+//! * [`fuzz`] — compiler hardening: seeded random-graph fuzzing with
+//!   differential verification and delta-debugging test-case reduction.
 //! * [`runtime`] — PJRT client (via the `xla` crate) that loads and runs the
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
 //! * [`util`] — substrates: JSON, PRNG, CLI parsing, stats, tables, and a
@@ -61,6 +63,7 @@ pub mod codegen;
 pub mod cost;
 pub mod dynshape;
 pub mod frontend;
+pub mod fuzz;
 pub mod ir;
 pub mod isa;
 pub mod opt;

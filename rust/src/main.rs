@@ -60,24 +60,46 @@ const OPTION_KEYS: &[&str] = &[
     "chaos-panic-rate",
     "chaos-crash-rate",
     "chaos-seed",
+    "seeds",
+    "start-seed",
+    "precisions",
+    "max-nodes",
+    "reduce-dir",
 ];
+
+/// Unwrap parsed args or exit 2 with a one-line typed error — bad flags
+/// must never fall back to defaults silently.
+fn run_cmd<A>(parsed: Result<A, String>, cmd: impl FnOnce(&A) -> i32) -> i32 {
+    match parsed {
+        Ok(a) => cmd(&a),
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, OPTION_KEYS);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
-        "compile" => cmd_compile(&CompileArgs::from_args(&args)),
-        "tune" => cmd_tune(&TuneArgs::from_args(&args)),
-        "ppa" => cmd_ppa(&PpaArgs::from_args(&args)),
-        "sweep" => cmd_sweep(&SweepArgs::from_args(&args)),
-        "pipeline" => cmd_pipeline(&PipelineArgs::from_args(&args)),
+        "compile" => run_cmd(CompileArgs::from_args(&args), cmd_compile),
+        "tune" => run_cmd(TuneArgs::from_args(&args), cmd_tune),
+        "ppa" => run_cmd(PpaArgs::from_args(&args), cmd_ppa),
+        "sweep" => run_cmd(SweepArgs::from_args(&args), cmd_sweep),
+        "pipeline" => run_cmd(PipelineArgs::from_args(&args), cmd_pipeline),
         "export" => cmd_export(&ExportArgs::from_args(&args)),
-        "serve" => cmd_serve(&ServeArgs::from_args(&args)),
-        "loadgen" => cmd_loadgen(&ServeArgs::from_args(&args)),
-        _ => {
+        "serve" => run_cmd(ServeArgs::from_args(&args), cmd_serve),
+        "loadgen" => run_cmd(ServeArgs::from_args(&args), cmd_loadgen),
+        "fuzz" => run_cmd(FuzzArgs::from_args(&args), cmd_fuzz),
+        "help" => {
             print!("{}", HELP);
             0
+        }
+        other => {
+            eprintln!("error: unknown command '{other}' (see 'xgenc help')");
+            2
         }
     };
     std::process::exit(code);
@@ -99,16 +121,27 @@ struct SessionArgs {
 }
 
 impl SessionArgs {
-    fn from_args(args: &Args) -> SessionArgs {
+    /// Parse the shared knobs. Unknown values are hard errors, not silent
+    /// fallbacks — `--precision INT9` must fail the command, not compile
+    /// at FP32.
+    fn from_args(args: &Args) -> Result<SessionArgs, String> {
         let mach = match args.opt_or("platform", "xgen") {
+            "xgen" => MachineConfig::xgen_asic(),
             "cpu" => MachineConfig::cpu_a78(),
             "hand" => MachineConfig::hand_asic(),
-            _ => MachineConfig::xgen_asic(),
+            other => return Err(format!("unknown --platform '{other}' (xgen|hand|cpu)")),
         };
-        SessionArgs {
+        let prec_str = args.opt_or("precision", "FP32");
+        let precision = DType::parse(prec_str).ok_or_else(|| {
+            format!("unknown --precision '{prec_str}' (FP32|FP16|BF16|FP8|INT8|FP4|INT4|Binary)")
+        })?;
+        let calib_str = args.opt_or("calib", "kl");
+        let calib = Method::parse(calib_str)
+            .ok_or_else(|| format!("unknown --calib '{calib_str}' (kl|percentile|entropy|minmax)"))?;
+        Ok(SessionArgs {
             mach,
-            precision: DType::parse(args.opt_or("precision", "FP32")).unwrap_or(DType::F32),
-            calib: Method::parse(args.opt_or("calib", "kl")).unwrap_or(Method::Kl),
+            precision,
+            calib,
             tune_trials: args.opt_usize("tune", 0),
             workers: args.opt_usize("workers", 0),
             seed: args.opt_u64("seed", 42),
@@ -118,7 +151,7 @@ impl SessionArgs {
                     path.to_string(),
                 )
             }),
-        }
+        })
     }
 
     fn compile_options(&self) -> CompileOptions {
@@ -158,14 +191,22 @@ struct CompileArgs {
 }
 
 impl CompileArgs {
-    fn from_args(args: &Args) -> CompileArgs {
-        CompileArgs {
-            session: SessionArgs::from_args(args),
+    fn from_args(args: &Args) -> Result<CompileArgs, String> {
+        let verify = args.has_flag("verify");
+        let run = args.has_flag("run");
+        if verify && run {
+            return Err(
+                "--verify and --run conflict (--verify already executes the binary); pass one"
+                    .to_string(),
+            );
+        }
+        Ok(CompileArgs {
+            session: SessionArgs::from_args(args)?,
             model: args.opt_or("model", "zoo:mlp").to_string(),
             out: args.opt("out").map(|s| s.to_string()),
-            verify: args.has_flag("verify"),
-            run: args.has_flag("run"),
-        }
+            verify,
+            run,
+        })
     }
 }
 
@@ -248,15 +289,22 @@ struct TuneArgs {
 }
 
 impl TuneArgs {
-    fn from_args(args: &Args) -> TuneArgs {
-        TuneArgs {
-            mach: SessionArgs::from_args(args).mach,
+    fn from_args(args: &Args) -> Result<TuneArgs, String> {
+        let algorithm = match args.opt("algorithm") {
+            None => None,
+            Some(s) => Some(
+                Algorithm::parse(s)
+                    .ok_or_else(|| format!("unknown --algorithm '{s}' (bayes|ga|sa|random|grid)"))?,
+            ),
+        };
+        Ok(TuneArgs {
+            mach: SessionArgs::from_args(args)?.mach,
             sig: args.opt_or("sig", "matmul:128x256x512").to_string(),
-            algorithm: args.opt("algorithm").and_then(Algorithm::parse),
+            algorithm,
             trials: args.opt_usize("trials", 200),
             workers: args.opt_usize("workers", 0),
             seed: args.opt_u64("seed", 42),
-        }
+        })
     }
 }
 
@@ -295,11 +343,11 @@ struct PpaArgs {
 }
 
 impl PpaArgs {
-    fn from_args(args: &Args) -> PpaArgs {
-        PpaArgs {
-            session: SessionArgs::from_args(args),
+    fn from_args(args: &Args) -> Result<PpaArgs, String> {
+        Ok(PpaArgs {
+            session: SessionArgs::from_args(args)?,
             model: args.opt_or("model", "zoo:mlp").to_string(),
-        }
+        })
     }
 }
 
@@ -350,12 +398,12 @@ struct SweepArgs {
 }
 
 impl SweepArgs {
-    fn from_args(args: &Args) -> SweepArgs {
-        SweepArgs {
-            session: SessionArgs::from_args(args),
+    fn from_args(args: &Args) -> Result<SweepArgs, String> {
+        Ok(SweepArgs {
+            session: SessionArgs::from_args(args)?,
             model: args.opt_or("model", "zoo:mlp").to_string(),
             out: args.opt("out").map(|s| s.to_string()),
-        }
+        })
     }
 }
 
@@ -419,13 +467,13 @@ struct PipelineArgs {
 }
 
 impl PipelineArgs {
-    fn from_args(args: &Args) -> PipelineArgs {
-        PipelineArgs {
-            session: SessionArgs::from_args(args),
+    fn from_args(args: &Args) -> Result<PipelineArgs, String> {
+        Ok(PipelineArgs {
+            session: SessionArgs::from_args(args)?,
             models: args
                 .opt_or("models", "zoo:vision_encoder,zoo:text_encoder,zoo:decoder")
                 .to_string(),
-        }
+        })
     }
 }
 
@@ -506,7 +554,7 @@ struct ServeArgs {
 }
 
 impl ServeArgs {
-    fn from_args(args: &Args) -> ServeArgs {
+    fn from_args(args: &Args) -> Result<ServeArgs, String> {
         let deadline_ms = args.opt_f64("deadline-ms", 0.0);
         let duration_s = args.opt_f64("duration", 0.0);
         let chaos = ChaosOptions {
@@ -516,8 +564,8 @@ impl ServeArgs {
             seed: args.opt_u64("chaos-seed", 42),
         };
         let chaos_on = chaos.fault_rate > 0.0 || chaos.panic_rate > 0.0 || chaos.crash_rate > 0.0;
-        ServeArgs {
-            session: SessionArgs::from_args(args),
+        Ok(ServeArgs {
+            session: SessionArgs::from_args(args)?,
             models: args.opt("models").map(|s| s.to_string()),
             server: ServerOptions {
                 workers: args.opt_usize("workers", 0),
@@ -536,7 +584,7 @@ impl ServeArgs {
                 duration: (duration_s > 0.0).then(|| Duration::from_secs_f64(duration_s)),
             },
             out: args.opt("out").map(|s| s.to_string()),
-        }
+        })
     }
 }
 
@@ -692,6 +740,103 @@ fn cmd_loadgen(a: &ServeArgs) -> i32 {
     0
 }
 
+/// `xgenc fuzz` options.
+struct FuzzArgs {
+    opts: xgenc::fuzz::FuzzOptions,
+    out: Option<String>,
+    reduce_dir: Option<String>,
+}
+
+impl FuzzArgs {
+    fn from_args(args: &Args) -> Result<FuzzArgs, String> {
+        let mut precisions = Vec::new();
+        for p in args.opt_or("precisions", "FP32,INT8,INT4").split(',') {
+            let p = p.trim();
+            match DType::parse(p) {
+                Some(d) => precisions.push(d),
+                None => {
+                    return Err(format!(
+                        "unknown precision '{p}' in --precisions \
+                         (FP32|FP16|BF16|FP8|INT8|FP4|INT4|Binary)"
+                    ))
+                }
+            }
+        }
+        Ok(FuzzArgs {
+            opts: xgenc::fuzz::FuzzOptions {
+                seeds: args.opt_u64("seeds", 200),
+                start_seed: args.opt_u64("start-seed", 0),
+                precisions,
+                gen: xgenc::fuzz::GenConfig {
+                    max_nodes: args.opt_usize("max-nodes", 12),
+                    ..Default::default()
+                },
+                workers: args.opt_usize("workers", 0),
+                reduce: true,
+            },
+            out: args.opt("out").map(|s| s.to_string()),
+            reduce_dir: args.opt("reduce-dir").map(|s| s.to_string()),
+        })
+    }
+}
+
+/// `xgenc fuzz`: the hardening campaign — seeded random graphs through the
+/// full pipeline at every requested precision, per-pass IR validation
+/// forced on, machine outputs differentially verified against the
+/// reference executor. Exit 0 with "fuzz OK" only on zero findings;
+/// findings are delta-reduced and written as reproducer JSONs.
+fn cmd_fuzz(a: &FuzzArgs) -> i32 {
+    println!(
+        "fuzzing {} seeded graphs x {} precisions (per-pass IR validation on)...",
+        a.opts.seeds,
+        a.opts.precisions.len()
+    );
+    let report = xgenc::fuzz::run_campaign(&a.opts);
+    println!("{}", report.summary());
+    let mut t = Table::new("Fuzz op coverage", &["Op", "Nodes generated"]);
+    for (op, n) in &report.op_coverage {
+        t.row(&[op.clone(), format!("{n}")]);
+    }
+    t.print();
+    if let Some(path) = &a.out {
+        if let Err(e) =
+            xgenc::runtime::store::save_json(std::path::Path::new(path), &report.to_json())
+        {
+            eprintln!("error: could not write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    if report.findings.is_empty() {
+        println!("fuzz OK: {} graphs, {} runs, 0 findings", report.graphs, report.runs);
+        return 0;
+    }
+    for f in &report.findings {
+        eprintln!("FINDING: {}", f.headline());
+    }
+    if let Some(dir) = &a.reduce_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("error: could not create {dir}: {e}");
+            return 1;
+        }
+        for f in &report.findings {
+            let stem = format!("{dir}/seed{}_{}", f.seed, f.precision.name());
+            let full = xgenc::frontend::onnx_json::save_str(&f.graph);
+            if let Err(e) = std::fs::write(format!("{stem}.json"), full) {
+                eprintln!("warning: could not write {stem}.json: {e}");
+            }
+            if let Some(r) = &f.reduced {
+                let red = xgenc::frontend::onnx_json::save_str(r);
+                if let Err(e) = std::fs::write(format!("{stem}.reduced.json"), red) {
+                    eprintln!("warning: could not write {stem}.reduced.json: {e}");
+                }
+            }
+        }
+        println!("wrote reproducers to {dir}/");
+    }
+    1
+}
+
 const HELP: &str = "\
 xgenc — XgenSilicon ML Compiler (reproduction)
 
@@ -711,6 +856,9 @@ USAGE:
                  [--out file.json]
   xgenc loadgen  [--models spec1,...] [--requests N] [--duration S] [--seed N]
   xgenc export   --model zoo:<name> [--out file.json]
+  xgenc fuzz     [--seeds N] [--start-seed N] [--precisions FP32,INT8,INT4]
+                 [--max-nodes N] [--workers N] [--out report.json]
+                 [--reduce-dir DIR]
 
   ppa compiles one model and prints the full power/performance/area report
   (latency, power, area, energy, cycles, GFLOP/s) for the chosen platform.
@@ -749,6 +897,15 @@ USAGE:
   synthesized inputs and reports measured vs predicted cycles.
   --verify additionally checks the outputs against the reference executor
   under the per-precision tolerance (exit 1 on divergence).
+
+  fuzz generates --seeds deterministic random graphs (dense and conv
+  topologies, degenerate shapes, shared weights, symbolic batches) and
+  drives each through optimize -> quantize -> codegen -> simulate at every
+  --precisions entry, with the per-pass IR validator on and machine
+  outputs differentially verified against the reference executor. Any
+  panic, compile/validator error, trap, or divergence is a finding; each
+  is delta-reduced to a minimal reproducer (written under --reduce-dir).
+  Exit 0 and the line 'fuzz OK' only when there are zero findings.
 
 Zoo models: resnet50 mobilenet_v2 bert_base vit_base resnet_cifar
             mobilenet_cifar bert_tiny vit_tiny mlp vision_encoder

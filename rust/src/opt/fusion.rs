@@ -144,6 +144,13 @@ impl Pass for FuseBiasAdd {
                 if !g.single_internal_use(mm_in) {
                     continue;
                 }
+                // The Gemm rewrite is only valid for rank-2 MatMuls: Gemm
+                // shape inference requires 2-D operands, so a batched
+                // (rank-3+) MatMul + bias must stay a broadcast Add.
+                match g.tensors[mm_in.0].shape.as_ref() {
+                    Some(s) if s.rank() == 2 => {}
+                    _ => continue,
+                }
                 let Some(init) = g.initializers.get(&bias_in) else { continue };
                 if init.shape.rank() != 1 {
                     continue;
@@ -392,6 +399,28 @@ mod tests {
         for (a, b) in before[0].data.iter().zip(&after[0].data) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    /// Regression (found by the fuzzer's validator): a batched rank-3
+    /// MatMul + rank-1 bias Add used to be rewritten into a Gemm, whose
+    /// shape inference then rejected the rank-3 operand — a valid graph
+    /// failed to compile after "optimization". The pass must leave batched
+    /// MatMuls alone.
+    #[test]
+    fn batched_matmul_bias_stays_broadcast_add() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::fixed(&[2, 3, 4]), DType::F32);
+        let w = g.init(Initializer::lazy("w", &[4, 5], 7, 0.3));
+        let b = g.init(Initializer::eager("b", &[5], vec![0.1, 0.2, 0.3, 0.4, 0.5]));
+        let mm = g.node(OpKind::MatMul, "mm", &[x, w], Attrs::new());
+        let y = g.node(OpKind::Add, "badd", &[mm, b], Attrs::new());
+        g.outputs.push(y);
+        crate::ir::infer::infer_shapes(&mut g).unwrap();
+        assert!(!FuseBiasAdd.run(&mut g).unwrap(), "batched MatMul must not fuse");
+        assert_eq!(g.nodes.len(), 2);
+        // The whole default pipeline must also keep the graph inferable.
+        crate::opt::optimize(&mut g).unwrap();
+        assert!(g.nodes.iter().any(|n| n.op == OpKind::MatMul));
     }
 
     /// Regression: two convs sharing one weight id. Folding BN into the

@@ -43,6 +43,15 @@ pub fn default_passes_no_epilogue() -> Vec<Box<dyn Pass>> {
     ]
 }
 
+/// Whether pass-boundary IR verification ([`crate::ir::verify`]) is on by
+/// default: always in debug builds (and therefore CI's `cargo test`), and in
+/// release builds when the `XGENC_VERIFY_PASSES` env var is set (the CI fuzz
+/// smoke job sets it). Release binaries can also opt in per compile via
+/// `CompileOptions::verify_passes`.
+pub fn verify_each_pass_default() -> bool {
+    cfg!(debug_assertions) || std::env::var_os("XGENC_VERIFY_PASSES").is_some()
+}
+
 /// Run passes to a fixed point (bounded iterations).
 pub fn optimize(g: &mut Graph) -> Result<Vec<&'static str>> {
     optimize_with(g, default_passes())
@@ -50,13 +59,29 @@ pub fn optimize(g: &mut Graph) -> Result<Vec<&'static str>> {
 
 /// Run a caller-chosen pass list to a fixed point (bounded iterations).
 pub fn optimize_with(g: &mut Graph, passes: Vec<Box<dyn Pass>>) -> Result<Vec<&'static str>> {
+    optimize_opts(g, passes, verify_each_pass_default())
+}
+
+/// Run a caller-chosen pass list to a fixed point. With `verify` set, the
+/// structural validator runs after *every* pass application and a violation
+/// aborts the compile naming the offending pass — a bad rewrite is caught at
+/// the pass boundary, not three stages later in codegen.
+pub fn optimize_opts(
+    g: &mut Graph,
+    passes: Vec<Box<dyn Pass>>,
+    verify: bool,
+) -> Result<Vec<&'static str>> {
     let mut applied = Vec::new();
     for _ in 0..8 {
         let mut changed = false;
         for p in &passes {
+            let outputs_before = g.outputs.len();
             if p.run(g)? {
                 applied.push(p.name());
                 changed = true;
+            }
+            if verify {
+                crate::ir::verify::verify_pass(g, p.name(), outputs_before)?;
             }
         }
         if !changed {

@@ -56,6 +56,10 @@ pub struct CompileOptions {
     /// fused-vs-unfused benchmarks measure against; the per-site tuner knob
     /// is `KernelConfig::fuse_epilogue`.
     pub fuse_epilogue: bool,
+    /// Run the structural IR validator ([`crate::ir::verify`]) after every
+    /// optimization pass. Defaults on in debug builds/CI; release builds opt
+    /// in here or via the `XGENC_VERIFY_PASSES` env var.
+    pub verify_passes: bool,
     pub seed: u64,
 }
 
@@ -71,6 +75,7 @@ impl Default for CompileOptions {
             cache: None,
             schedule: true,
             fuse_epilogue: true,
+            verify_passes: crate::opt::verify_each_pass_default(),
             seed: 42,
         }
     }
@@ -435,12 +440,13 @@ impl CompileSession {
         let opts = &self.opts;
         let mut g = graph.clone();
 
-        // Stage 2: optimization.
-        let passes_applied = if opts.fuse_epilogue {
-            crate::opt::optimize(&mut g)?
+        // Stage 2: optimization (pass-boundary validation when configured).
+        let passes = if opts.fuse_epilogue {
+            crate::opt::default_passes()
         } else {
-            crate::opt::optimize_with(&mut g, crate::opt::default_passes_no_epilogue())?
+            crate::opt::default_passes_no_epilogue()
         };
+        let passes_applied = crate::opt::optimize_opts(&mut g, passes, opts.verify_passes)?;
 
         // Stage 2.5: quantization (PTQ).
         let quant = if opts.precision != DType::F32 {

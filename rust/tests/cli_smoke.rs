@@ -1,0 +1,96 @@
+//! CLI robustness smoke tests (fuzz satellite): bad flags and unknown
+//! commands must exit nonzero with a one-line typed error on stderr —
+//! never fall back to defaults silently — and the tiny fuzz campaign must
+//! report "fuzz OK" with exit 0.
+
+use std::process::{Command, Output};
+
+fn xgenc(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_xgenc"))
+        .args(args)
+        .output()
+        .expect("spawn xgenc")
+}
+
+fn stderr_line(out: &Output) -> String {
+    let text = String::from_utf8_lossy(&out.stderr);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1, "expected exactly one stderr line, got: {text:?}");
+    lines[0].to_string()
+}
+
+#[test]
+fn unknown_precision_exits_2_with_typed_error() {
+    let out = xgenc(&["compile", "--model", "zoo:mlp", "--precision", "INT9"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: unknown --precision 'INT9'"), "{line}");
+}
+
+#[test]
+fn unknown_platform_exits_2_with_typed_error() {
+    let out = xgenc(&["ppa", "--model", "zoo:mlp", "--platform", "tpu"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: unknown --platform 'tpu'"), "{line}");
+}
+
+#[test]
+fn unknown_calib_exits_2_with_typed_error() {
+    let out = xgenc(&["compile", "--model", "zoo:mlp", "--calib", "vibes"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: unknown --calib 'vibes'"), "{line}");
+}
+
+#[test]
+fn conflicting_verify_and_run_exit_2() {
+    let out = xgenc(&["compile", "--model", "zoo:mlp", "--verify", "--run"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.contains("--verify and --run conflict"), "{line}");
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    let out = xgenc(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.contains("unknown command 'frobnicate'"), "{line}");
+}
+
+#[test]
+fn missing_model_file_exits_1_with_typed_error() {
+    let out = xgenc(&["compile", "--model", "no_such_model_file.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: "), "{line}");
+}
+
+#[test]
+fn bad_fuzz_precision_exits_2() {
+    let out = xgenc(&["fuzz", "--seeds", "1", "--precisions", "FP32,INT9"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.contains("unknown precision 'INT9'"), "{line}");
+}
+
+#[test]
+fn help_exits_0_and_documents_every_command() {
+    let out = xgenc(&["help"]);
+    assert_eq!(out.status.code(), Some(0));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["compile", "tune", "ppa", "sweep", "pipeline", "serve", "export", "fuzz"] {
+        assert!(text.contains(&format!("xgenc {cmd}")), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn tiny_fuzz_campaign_reports_ok() {
+    let out = xgenc(&["fuzz", "--seeds", "2", "--precisions", "FP32"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("fuzz OK"), "{stdout}");
+    assert!(stderr.is_empty(), "{stderr}");
+}
