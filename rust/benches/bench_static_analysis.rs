@@ -1,0 +1,123 @@
+//! Static-binary-verifier conformance gate, emitted to
+//! `BENCH_static_analysis.json`.
+//!
+//! Compiles the whole model zoo at every Table 2 precision (FP32 → Binary)
+//! and runs the static verifier over each emitted binary. Hard gates: zero
+//! Error-level findings anywhere, and ≥95% of memory-access sites *proven*
+//! (bounds + alignment) per binary — "could not prove" warnings above that
+//! budget fail the bench. Wall-clock, instructions/second, and the
+//! proven-vs-unprovable site counts land in the artifact.
+
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::dtype::DType;
+use xgenc::pipeline::{CompileOptions, CompileSession, SWEEP_LADDER};
+use xgenc::runtime::{simrun, store};
+use xgenc::util::json::Json;
+use xgenc::util::table::{f, Table};
+use xgenc::validate;
+
+fn main() {
+    let debug = cfg!(debug_assertions);
+    let models: Vec<&str> = if debug {
+        vec!["mlp", "resnet_cifar", "bert_tiny"]
+    } else {
+        vec![
+            "resnet50", "mobilenet_v2", "bert_base", "vit_base", "resnet_cifar",
+            "mobilenet_cifar", "bert_tiny", "vit_tiny", "mlp", "vision_encoder",
+            "text_encoder", "decoder",
+        ]
+    };
+    let ladder: Vec<DType> =
+        if debug { vec![DType::F32, DType::I8, DType::Binary] } else { SWEEP_LADDER.to_vec() };
+
+    let mut t = Table::new(
+        "Static binary verification (zoo x precision ladder)",
+        &["Model", "Precision", "Instr", "Sites", "Proven", "Unproven", "Coverage", "ms"],
+    );
+    let mut rows = Vec::new();
+    let (mut total_instr, mut total_secs) = (0u64, 0f64);
+    let mut min_cov = 1.0f64;
+    for &name in &models {
+        let g = prepare(model_zoo::by_name(name).unwrap()).unwrap();
+        for &dt in &ladder {
+            let mut opts = CompileOptions { precision: dt, ..Default::default() };
+            if dt.is_int_quant() {
+                opts.calib_inputs = vec![simrun::synth_inputs(&g, 42)];
+            }
+            let mut s = CompileSession::new(opts);
+            let c = s.compile(&g).unwrap_or_else(|e| panic!("{name} @ {dt}: {e}"));
+            let r = validate::validate_static(&c.asm, &c.plan, &c.mach)
+                .unwrap_or_else(|e| panic!("{name} @ {dt}: {e}"));
+            for fnd in r.error_findings() {
+                eprintln!("{name} @ {dt}: {}", fnd.line());
+            }
+            assert!(r.clean(), "{name} @ {dt}: error findings: {}", r.summary());
+            assert!(
+                r.coverage() >= 0.95,
+                "{name} @ {dt}: only {:.1}% of accesses proven: {}",
+                100.0 * r.coverage(),
+                r.summary()
+            );
+            t.row(&[
+                name.to_string(),
+                dt.name().to_string(),
+                format!("{}", r.instructions),
+                format!("{}", r.mem_sites),
+                format!("{}", r.proven_sites),
+                format!("{}", r.mem_sites - r.proven_sites),
+                format!("{}%", f(100.0 * r.coverage(), 1)),
+                f(r.analysis_seconds * 1e3, 2),
+            ]);
+            total_instr += r.instructions as u64;
+            total_secs += r.analysis_seconds;
+            min_cov = min_cov.min(r.coverage());
+            rows.push(Json::obj(vec![
+                ("model", Json::str_(name)),
+                ("precision", Json::str_(dt.name())),
+                ("instructions", Json::Num(r.instructions as f64)),
+                ("reachable_instructions", Json::Num(r.reachable_instructions as f64)),
+                ("blocks", Json::Num(r.blocks as f64)),
+                ("loop_heads", Json::Num(r.loop_heads as f64)),
+                ("mem_sites", Json::Num(r.mem_sites as f64)),
+                ("proven_sites", Json::Num(r.proven_sites as f64)),
+                ("unproven_sites", Json::Num((r.mem_sites - r.proven_sites) as f64)),
+                ("coverage", Json::Num(r.coverage())),
+                ("errors", Json::Num(r.errors as f64)),
+                ("warnings", Json::Num(r.warns as f64)),
+                ("analysis_seconds", Json::Num(r.analysis_seconds)),
+                ("instructions_per_second", Json::Num(r.instructions_per_second())),
+            ]));
+        }
+    }
+    t.print();
+
+    assert_eq!(rows.len(), models.len() * ladder.len());
+    assert!(total_instr > 0);
+
+    let ips = total_instr as f64 / total_secs.max(1e-9);
+    let doc = Json::obj(vec![
+        ("bench", Json::str_("static_analysis")),
+        ("models", Json::Num(models.len() as f64)),
+        ("precisions", Json::Num(ladder.len() as f64)),
+        ("total_instructions", Json::Num(total_instr as f64)),
+        ("total_analysis_seconds", Json::Num(total_secs)),
+        ("instructions_per_second", Json::Num(ips)),
+        ("min_coverage", Json::Num(min_cov)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = std::path::Path::new("BENCH_static_analysis.json");
+    store::save_json(out, &doc).unwrap();
+    println!("wrote {}", out.display());
+
+    println!(
+        "static analysis OK: {} binaries ({} models x {} precisions), {} instructions \
+         verified, 0 errors, min coverage {}%, {}s analysis ({} MInstr/s)",
+        models.len() * ladder.len(),
+        models.len(),
+        ladder.len(),
+        total_instr,
+        f(100.0 * min_cov, 1),
+        f(total_secs, 2),
+        f(ips / 1e6, 2),
+    );
+}

@@ -1,0 +1,328 @@
+//! Control-flow-graph recovery over a predecoded binary.
+//!
+//! Basic blocks are maximal straight-line runs; leaders are instruction 0,
+//! every resolved branch/`jal` target, and every instruction following a
+//! block terminator (branch, jump, or a faulting slot). Edges use the
+//! predecoder's resolved instruction-index targets:
+//!
+//! * a taken-target index `== len` is the architectural halt (fall off the
+//!   end) and produces no edge;
+//! * a taken-target index `> len` is a **wild jump** — the program was
+//!   corrupted or mis-assembled (finding, no edge);
+//! * [`MISALIGNED_TARGET`] on a conditional branch is a taken-path fault
+//!   (finding, fall-through edge only);
+//! * `Slot::Illegal` / `Slot::Misaligned` and `jalr` (runtime target)
+//!   terminate their block with no successors.
+//!
+//! Reachability, reverse postorder, and DFS back edges (loop heads) are
+//! computed from block 0; everything unreachable is reported as dead code.
+
+use std::collections::HashSet;
+
+use crate::sim::predecode::{Predecoded, Slot, MISALIGNED_TARGET};
+
+use super::{FindingCode, StaticFinding};
+
+/// One basic block: instructions `[start, end)` plus its outgoing edges.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub start: usize,
+    pub end: usize,
+    /// Fall-through successor block (straight-line or branch-not-taken).
+    pub fall: Option<u32>,
+    /// Taken-target successor block (conditional branch or `jal`).
+    pub taken: Option<u32>,
+    pub preds: Vec<u32>,
+}
+
+/// The recovered control-flow graph.
+#[derive(Debug, Default)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    /// Instruction index → owning block.
+    pub block_of: Vec<u32>,
+    pub reachable: Vec<bool>,
+    /// Reverse postorder over reachable blocks (fixpoint iteration order).
+    pub rpo: Vec<u32>,
+    /// Block → position in `rpo` (unreachable blocks: `u32::MAX`).
+    pub rpo_pos: Vec<u32>,
+    /// DFS back edges `(src, dst)`; `dst` is a loop head.
+    pub back_edges: HashSet<(u32, u32)>,
+    pub loop_heads: Vec<bool>,
+}
+
+impl Cfg {
+    pub fn is_back_edge(&self, src: u32, dst: u32) -> bool {
+        self.back_edges.contains(&(src, dst))
+    }
+}
+
+/// Build the CFG of `p`. Infallible — structural problems surface later
+/// via [`findings`].
+pub fn build(p: &Predecoded) -> Cfg {
+    let len = p.len();
+    if len == 0 {
+        return Cfg::default();
+    }
+
+    // 1. Leaders.
+    let mut leader = vec![false; len];
+    leader[0] = true;
+    for i in 0..len {
+        match &p.slots[i] {
+            Slot::Op(u) if u.is_control() => {
+                if let Some(t) = u.taken_target() {
+                    if t < len {
+                        leader[t] = true;
+                    }
+                }
+                if i + 1 < len {
+                    leader[i + 1] = true;
+                }
+            }
+            Slot::Op(_) => {}
+            Slot::Illegal(_) | Slot::Misaligned(_) => {
+                if i + 1 < len {
+                    leader[i + 1] = true;
+                }
+            }
+        }
+    }
+
+    // 2. Blocks + instruction→block map.
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut block_of = vec![0u32; len];
+    let mut start = 0usize;
+    for i in 0..len {
+        let terminates = match &p.slots[i] {
+            Slot::Op(u) => u.is_control(),
+            Slot::Illegal(_) | Slot::Misaligned(_) => true,
+        };
+        let closes = terminates || i + 1 == len || leader[i + 1];
+        if closes {
+            let id = blocks.len() as u32;
+            for b in block_of.iter_mut().take(i + 1).skip(start) {
+                *b = id;
+            }
+            blocks.push(Block { start, end: i + 1, fall: None, taken: None, preds: Vec::new() });
+            start = i + 1;
+        }
+    }
+
+    // 3. Edges.
+    let nb = blocks.len();
+    for bi in 0..nb {
+        let last = blocks[bi].end - 1;
+        let (fall, taken) = p.successors(last);
+        blocks[bi].fall = fall.map(|t| block_of[t]);
+        blocks[bi].taken = taken.map(|t| block_of[t]);
+    }
+    for bi in 0..nb {
+        let (f, t) = (blocks[bi].fall, blocks[bi].taken);
+        if let Some(s) = f {
+            blocks[s as usize].preds.push(bi as u32);
+        }
+        if let Some(s) = t {
+            if Some(s) != f {
+                blocks[s as usize].preds.push(bi as u32);
+            }
+        }
+    }
+
+    // 4. Reachability + DFS (postorder + back edges) from block 0.
+    let mut reachable = vec![false; nb];
+    let mut on_stack = vec![false; nb];
+    let mut post: Vec<u32> = Vec::with_capacity(nb);
+    let mut back_edges = HashSet::new();
+    // Iterative DFS: (block, next-successor-slot).
+    let mut stack: Vec<(u32, u8)> = vec![(0, 0)];
+    reachable[0] = true;
+    on_stack[0] = true;
+    while let Some(&mut (b, ref mut slot)) = stack.last_mut() {
+        let succ = loop {
+            let cand = match *slot {
+                0 => blocks[b as usize].fall,
+                1 => blocks[b as usize].taken,
+                _ => break None,
+            };
+            *slot += 1;
+            // A branch-to-next-instruction has fall == taken; visit once.
+            if *slot == 2 && cand == blocks[b as usize].fall && cand.is_some() {
+                continue;
+            }
+            if let Some(s) = cand {
+                break Some(s);
+            }
+        };
+        match succ {
+            Some(s) => {
+                if on_stack[s as usize] {
+                    back_edges.insert((b, s));
+                } else if !reachable[s as usize] {
+                    reachable[s as usize] = true;
+                    on_stack[s as usize] = true;
+                    stack.push((s, 0));
+                }
+            }
+            None => {
+                post.push(b);
+                on_stack[b as usize] = false;
+                stack.pop();
+            }
+        }
+    }
+    let rpo: Vec<u32> = post.into_iter().rev().collect();
+    let mut rpo_pos = vec![u32::MAX; nb];
+    for (i, &b) in rpo.iter().enumerate() {
+        rpo_pos[b as usize] = i as u32;
+    }
+    let mut loop_heads = vec![false; nb];
+    for &(_, dst) in &back_edges {
+        loop_heads[dst as usize] = true;
+    }
+
+    Cfg { blocks, block_of, reachable, rpo, rpo_pos, back_edges, loop_heads }
+}
+
+/// CFG-integrity findings: reachable faulting slots, wild or misaligned
+/// jump targets, runtime-target jumps, and unreachable code.
+pub fn findings(p: &Predecoded, cfg: &Cfg, out: &mut Vec<StaticFinding>) {
+    let len = p.len();
+    for (bi, blk) in cfg.blocks.iter().enumerate() {
+        if !cfg.reachable[bi] {
+            out.push(StaticFinding::warn(
+                FindingCode::UnreachableCode,
+                blk.start,
+                format!(
+                    "instructions {}..{} are unreachable from entry (dead code)",
+                    blk.start,
+                    blk.end - 1
+                ),
+            ));
+            continue;
+        }
+        let last = blk.end - 1;
+        match &p.slots[last] {
+            Slot::Illegal(w) => out.push(StaticFinding::error(
+                FindingCode::IllegalInstruction,
+                last,
+                format!("reachable word {w:#010x} does not decode to any of the 61 ops"),
+            )),
+            Slot::Misaligned(addr) => out.push(StaticFinding::error(
+                FindingCode::MisalignedJump,
+                last,
+                format!("jal target {addr:#x} is not word-aligned (mid-instruction jump)"),
+            )),
+            Slot::Op(u) if u.is_cond_branch() && u.target == MISALIGNED_TARGET => {
+                out.push(StaticFinding::error(
+                    FindingCode::MisalignedJump,
+                    last,
+                    format!(
+                        "branch taken-target {:#x} is not word-aligned (mid-instruction jump)",
+                        u.aux
+                    ),
+                ));
+            }
+            Slot::Op(u) if u.is_control() => {
+                if let Some(t) = u.taken_target() {
+                    if t != MISALIGNED_TARGET && t > len {
+                        out.push(StaticFinding::error(
+                            FindingCode::WildJump,
+                            last,
+                            format!(
+                                "taken target is instruction index {t} but the program has \
+                                 only {len} (jump out of the program)"
+                            ),
+                        ));
+                    }
+                } else if u.op == crate::isa::Op::Jalr {
+                    out.push(StaticFinding::warn(
+                        FindingCode::UnboundedJump,
+                        last,
+                        "jalr target is runtime-computed; treated as halt".to_string(),
+                    ));
+                }
+            }
+            Slot::Op(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::isa::{Instr, Op};
+    use crate::sim::predecode::predecode;
+
+    fn cfg_of(prog: &[Instr]) -> (Predecoded, Cfg) {
+        let p = predecode(&encode_all(prog).unwrap());
+        let c = build(&p);
+        (p, c)
+    }
+
+    #[test]
+    fn straight_line_is_one_block() {
+        let (_, c) = cfg_of(&[
+            Instr::i(Op::Addi, 5, 0, 1),
+            Instr::i(Op::Addi, 6, 0, 2),
+            Instr::r(Op::Add, 7, 5, 6),
+        ]);
+        assert_eq!(c.blocks.len(), 1);
+        assert_eq!((c.blocks[0].start, c.blocks[0].end), (0, 3));
+        assert!(c.blocks[0].fall.is_none(), "fall off the end is the halt edge");
+        assert!(c.back_edges.is_empty());
+    }
+
+    #[test]
+    fn backward_branch_makes_a_loop_head() {
+        // 0: addi; 1: addi; 2: blt -> 1  (bottom-tested loop)
+        let (_, c) = cfg_of(&[
+            Instr::i(Op::Addi, 5, 0, 8),
+            Instr::i(Op::Addi, 5, 5, -1),
+            Instr::b(Op::Blt, 0, 5, -4),
+        ]);
+        assert_eq!(c.blocks.len(), 2);
+        let head = c.block_of[1];
+        assert!(c.loop_heads[head as usize]);
+        assert!(c.is_back_edge(c.block_of[2], head));
+        assert_eq!(c.rpo.len(), 2, "both blocks reachable");
+    }
+
+    #[test]
+    fn unreachable_block_is_flagged() {
+        // 0: jal +8 (skip idx 1); 1: addi (dead); 2: addi
+        let prog =
+            [Instr::u(Op::Jal, 0, 8), Instr::i(Op::Addi, 5, 0, 1), Instr::i(Op::Addi, 6, 0, 2)];
+        let (p, c) = cfg_of(&prog);
+        let dead = c.block_of[1] as usize;
+        assert!(!c.reachable[dead]);
+        let mut f = Vec::new();
+        findings(&p, &c, &mut f);
+        assert!(f.iter().any(|x| x.code == FindingCode::UnreachableCode && x.index == 1));
+    }
+
+    #[test]
+    fn wild_jump_is_an_error() {
+        let (p, c) = cfg_of(&[Instr::u(Op::Jal, 0, 4000)]);
+        let mut f = Vec::new();
+        findings(&p, &c, &mut f);
+        assert!(f.iter().any(|x| x.code == FindingCode::WildJump));
+    }
+
+    #[test]
+    fn misaligned_branch_target_is_an_error() {
+        let (p, c) = cfg_of(&[Instr::b(Op::Beq, 1, 2, 6)]);
+        let mut f = Vec::new();
+        findings(&p, &c, &mut f);
+        assert!(f.iter().any(|x| x.code == FindingCode::MisalignedJump));
+    }
+
+    #[test]
+    fn branch_to_end_is_a_clean_halt() {
+        let (p, c) = cfg_of(&[Instr::b(Op::Bne, 5, 0, 8), Instr::i(Op::Addi, 5, 0, 1)]);
+        let mut f = Vec::new();
+        findings(&p, &c, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,1036 @@
+//! Abstract numeric domain for the static binary verifier: **affine forms
+//! over an interned symbol table**, with interval ranges, congruence mod 4,
+//! and vector-length upper-bound substitution.
+//!
+//! # The domain
+//!
+//! Every tracked scalar register holds an [`Expr`]: an affine form
+//! `c0 + Σ ci·si` over immutable symbols `si`. Constants are forms with no
+//! terms. Symbols are created at three kinds of program points and never
+//! mutated afterwards — only their *range* metadata grows:
+//!
+//! * [`SymKey::Phi`] — a join point (CFG merge or loop head) where two
+//!   incoming expressions disagree. One abstract value per *visit* of the
+//!   block.
+//! * [`SymKey::Inst`] — the result of a non-affine instruction (`div`,
+//!   `rem`, `lw`, `vsetvli`, shifts of unknown values, …) at a given
+//!   instruction index. When the instruction re-executes, stale references
+//!   are first rebound to [`SymKey::Aged`] snapshots (see
+//!   [`Interp::transfer`]).
+//! * [`SymKey::Cut`] — a branch-refinement rebinding: a multi-symbol
+//!   expression constrained by a conditional branch on one edge.
+//!
+//! # Soundness contract
+//!
+//! A [`State`] at program point `p` abstracts a concrete register file `R`
+//! iff **there exists** one valuation `V` of all symbols such that
+//! `V(s) ∈ range(s)` for every symbol, `V(s) ∈ refine[s]` for every
+//! per-state clamp, `V(s) ≤ eval_V(ub(s))` for every upper-bound relation,
+//! and `R[r] = eval_V(state.x[r])` for every tracked register
+//! simultaneously. Every operation in this module preserves that
+//! existential witness:
+//!
+//! * transfer functions mirror `sim::machine` semantics exactly and
+//!   degrade to a fresh full-range `Inst` symbol whenever the i64 model
+//!   could diverge from wrapping i32 arithmetic;
+//! * joins phi-out *any* expression disagreement (never keep one side);
+//! * symbol ranges only ever grow (with widening to ±∞ after a bounded
+//!   number of growths, which guarantees termination);
+//! * re-execution of a symbol-producing instruction ages out every live
+//!   reference before rebinding, so no state can correlate two different
+//!   executions of the same instruction.
+//!
+//! Anything the domain cannot express is a fresh symbol with range
+//! `[-2^31, 2^31-1]` — the analysis loses precision but never soundness.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::isa::{regs, Op};
+use crate::sim::predecode::MicroOp;
+
+/// Saturation sentinels (≈ ±2^61). Wide enough that clamped values never
+/// overflow when a handful of them are summed in i128 evaluation.
+pub const INF: i64 = i64::MAX / 4;
+pub const NEG_INF: i64 = -(i64::MAX / 4);
+
+/// Above this coefficient count an expression is degraded to a symbol.
+const MAX_TERMS: usize = 8;
+
+/// Endpoint growths tolerated at a widening point before jumping to ±∞.
+const WIDEN_LIMIT: u8 = 3;
+
+fn clamp128(v: i128) -> i64 {
+    if v >= INF as i128 {
+        INF
+    } else if v <= NEG_INF as i128 {
+        NEG_INF
+    } else {
+        v as i64
+    }
+}
+
+/// A closed integer interval. `lo > hi` encodes the empty interval
+/// (an infeasible branch edge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub const FULL: Interval = Interval { lo: NEG_INF, hi: INF };
+    /// Everything an i32 register can hold — the default for unknowns.
+    pub const I32: Interval = Interval { lo: i32::MIN as i64, hi: i32::MAX as i64 };
+
+    pub fn new(lo: i64, hi: i64) -> Interval {
+        Interval { lo, hi }
+    }
+
+    pub fn exact(v: i64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo > self.hi
+    }
+
+    pub fn as_exact(&self) -> Option<i64> {
+        (self.lo == self.hi).then_some(self.lo)
+    }
+
+    pub fn hull(a: Interval, b: Interval) -> Interval {
+        if a.is_empty() {
+            return b;
+        }
+        if b.is_empty() {
+            return a;
+        }
+        Interval { lo: a.lo.min(b.lo), hi: a.hi.max(b.hi) }
+    }
+
+    pub fn intersect(a: Interval, b: Interval) -> Interval {
+        Interval { lo: a.lo.max(b.lo), hi: a.hi.min(b.hi) }
+    }
+
+    fn fits_i32(&self) -> bool {
+        self.lo >= i32::MIN as i64 && self.hi <= i32::MAX as i64
+    }
+}
+
+/// Deterministic identity of a symbol (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SymKey {
+    /// Join disagreement for register `reg` at block `block`.
+    Phi { block: u32, reg: u8 },
+    /// Non-affine result of the instruction at `index`.
+    Inst { index: u32 },
+    /// Branch-refinement rebinding of register `reg` on the `taken` edge
+    /// of the branch at `index`.
+    Cut { index: u32, taken: bool, reg: u8 },
+    /// Aged snapshot of register `reg` when instruction `index` re-executed.
+    Aged { index: u32, reg: u8 },
+}
+
+#[derive(Debug, Clone)]
+struct SymInfo {
+    key: SymKey,
+    range: Interval,
+    mod4: Option<u8>,
+    /// `value ≤ eval(ub)` under the same valuation (vsetvli results only).
+    ub: Option<Expr>,
+    grow_lo: u8,
+    grow_hi: u8,
+}
+
+/// The interned symbol table shared by every state of one analysis run.
+#[derive(Debug, Default)]
+pub struct SymTab {
+    infos: Vec<SymInfo>,
+    by_key: HashMap<SymKey, u32>,
+    /// Set whenever any symbol's metadata changed — the fixpoint driver
+    /// uses it to know derived ranges must be re-propagated.
+    dirty: bool,
+}
+
+fn join_mod4(a: Option<u8>, b: Option<u8>) -> Option<u8> {
+    match (a, b) {
+        (Some(x), Some(y)) if x == y => Some(x),
+        _ => None,
+    }
+}
+
+impl SymTab {
+    pub fn new() -> SymTab {
+        SymTab::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.infos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.infos.is_empty()
+    }
+
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    pub fn lookup(&self, key: SymKey) -> Option<u32> {
+        self.by_key.get(&key).copied()
+    }
+
+    pub fn key(&self, s: u32) -> SymKey {
+        self.infos[s as usize].key
+    }
+
+    pub fn range(&self, s: u32) -> Interval {
+        self.infos[s as usize].range
+    }
+
+    pub fn mod4(&self, s: u32) -> Option<u8> {
+        self.infos[s as usize].mod4
+    }
+
+    pub fn ub(&self, s: u32) -> Option<&Expr> {
+        self.infos[s as usize].ub.as_ref()
+    }
+
+    fn set_ub(&mut self, s: u32, ub: Option<Expr>) {
+        let info = &mut self.infos[s as usize];
+        if info.ub != ub {
+            info.ub = ub;
+            self.dirty = true;
+        }
+    }
+
+    /// Intern `key`, hulling `range` / joining `mod4` into any existing
+    /// entry, with widening on repeated endpoint growth.
+    pub fn intern(&mut self, key: SymKey, range: Interval, mod4: Option<u8>) -> u32 {
+        if let Some(&id) = self.by_key.get(&key) {
+            self.widen_to(id, range);
+            let info = &mut self.infos[id as usize];
+            let m = join_mod4(info.mod4, mod4);
+            if m != info.mod4 {
+                info.mod4 = m;
+                self.dirty = true;
+            }
+            return id;
+        }
+        let id = self.infos.len() as u32;
+        let range = Interval::new(range.lo.max(NEG_INF), range.hi.min(INF));
+        self.infos.push(SymInfo { key, range, mod4, ub: None, grow_lo: 0, grow_hi: 0 });
+        self.by_key.insert(key, id);
+        self.dirty = true;
+        id
+    }
+
+    fn widen_to(&mut self, id: u32, r: Interval) {
+        if r.is_empty() {
+            return;
+        }
+        let info = &mut self.infos[id as usize];
+        if r.lo < info.range.lo {
+            info.grow_lo += 1;
+            info.range.lo = if info.grow_lo > WIDEN_LIMIT { NEG_INF } else { r.lo.max(NEG_INF) };
+            self.dirty = true;
+        }
+        if r.hi > info.range.hi {
+            info.grow_hi += 1;
+            info.range.hi = if info.grow_hi > WIDEN_LIMIT { INF } else { r.hi.min(INF) };
+            self.dirty = true;
+        }
+    }
+
+    /// Human-readable symbol name for diagnostics.
+    pub fn sym_str(&self, s: u32) -> String {
+        fn reg_str(reg: u8) -> String {
+            if (reg as usize) == VL {
+                "vl".to_string()
+            } else {
+                regs::xname(reg)
+            }
+        }
+        match self.infos[s as usize].key {
+            SymKey::Phi { block, reg } => format!("phi{}.{}", block, reg_str(reg)),
+            SymKey::Inst { index } => format!("top@{index}"),
+            SymKey::Cut { index, reg, .. } => format!("cut{}@{}", reg_str(reg), index),
+            SymKey::Aged { index, reg } => format!("old{}@{}", reg_str(reg), index),
+        }
+    }
+}
+
+/// An affine form `c0 + Σ ci·si`. Terms are sorted by symbol id and never
+/// carry a zero coefficient, so structural equality is semantic equality.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Expr {
+    pub c0: i64,
+    pub terms: Vec<(u32, i64)>,
+}
+
+impl Expr {
+    pub fn con(c: i64) -> Expr {
+        Expr { c0: c, terms: Vec::new() }
+    }
+
+    pub fn sym(s: u32) -> Expr {
+        Expr { c0: 0, terms: vec![(s, 1)] }
+    }
+
+    pub fn is_const(&self) -> Option<i64> {
+        self.terms.is_empty().then_some(self.c0)
+    }
+
+    /// `(sym, coeff, c0)` if this is `coeff·sym + c0` with one term.
+    pub fn single_sym(&self) -> Option<(u32, i64, i64)> {
+        match self.terms.as_slice() {
+            [(s, c)] => Some((*s, *c, self.c0)),
+            _ => None,
+        }
+    }
+
+    pub fn mentions(&self, s: u32) -> bool {
+        self.terms.iter().any(|(t, _)| *t == s)
+    }
+
+    pub fn add(&self, o: &Expr) -> Option<Expr> {
+        let c0 = self.c0.checked_add(o.c0)?;
+        let mut terms = Vec::with_capacity(self.terms.len() + o.terms.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.terms.len() || j < o.terms.len() {
+            let pick_a =
+                j >= o.terms.len() || (i < self.terms.len() && self.terms[i].0 < o.terms[j].0);
+            if pick_a {
+                terms.push(self.terms[i]);
+                i += 1;
+            } else if i >= self.terms.len() || o.terms[j].0 < self.terms[i].0 {
+                terms.push(o.terms[j]);
+                j += 1;
+            } else {
+                let c = self.terms[i].1.checked_add(o.terms[j].1)?;
+                if c != 0 {
+                    terms.push((self.terms[i].0, c));
+                }
+                i += 1;
+                j += 1;
+            }
+        }
+        if terms.len() > MAX_TERMS {
+            return None;
+        }
+        Some(Expr { c0, terms })
+    }
+
+    pub fn sub(&self, o: &Expr) -> Option<Expr> {
+        self.add(&o.scale(-1)?)
+    }
+
+    pub fn scale(&self, k: i64) -> Option<Expr> {
+        if k == 0 {
+            return Some(Expr::con(0));
+        }
+        let c0 = self.c0.checked_mul(k)?;
+        let mut terms = Vec::with_capacity(self.terms.len());
+        for &(s, c) in &self.terms {
+            terms.push((s, c.checked_mul(k)?));
+        }
+        Some(Expr { c0, terms })
+    }
+
+    pub fn add_const(&self, k: i64) -> Option<Expr> {
+        Some(Expr { c0: self.c0.checked_add(k)?, terms: self.terms.clone() })
+    }
+
+    /// The integer `λ` with `self == λ·o`, if one exists (`o` nonzero).
+    pub fn ratio_of(&self, o: &Expr) -> Option<i64> {
+        let (num, den) = if o.c0 != 0 {
+            (self.c0, o.c0)
+        } else {
+            let &(s, den) = o.terms.first()?;
+            let (_, num) = *self.terms.iter().find(|(t, _)| *t == s)?;
+            (num, den)
+        };
+        if den == 0 || num % den != 0 {
+            return None;
+        }
+        let lam = num / den;
+        (o.scale(lam)? == *self).then_some(lam)
+    }
+}
+
+/// Pseudo-register index for the machine's vector-length register.
+pub const VL: usize = 32;
+/// Tracked slots: x0..x31 plus VL.
+pub const NREGS: usize = 33;
+
+/// One abstract machine state: an expression per tracked register, the
+/// LMUL interval, and per-state symbol clamps from branch refinement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct State {
+    pub x: Vec<Expr>,
+    pub lmul: Interval,
+    /// Path-sensitive clamps: symbol value ∈ clamp (∩ its global range).
+    pub refine: BTreeMap<u32, Interval>,
+}
+
+impl State {
+    /// The reset state: every register zeroed (exactly as
+    /// `Machine::reset`), `sp` at the top of DMEM, `vl` = lanes.
+    pub fn init(dmem_len: i64, lanes: i64) -> State {
+        let mut x = vec![Expr::con(0); NREGS];
+        x[regs::SP as usize] = Expr::con(dmem_len);
+        x[VL] = Expr::con(lanes);
+        State { x, lmul: Interval::exact(1), refine: BTreeMap::new() }
+    }
+}
+
+/// The transfer/join/refine engine. Holds the shared symbol table plus the
+/// target's lane count.
+pub struct Interp {
+    pub tab: SymTab,
+    pub lanes: i64,
+}
+
+impl Interp {
+    pub fn new(lanes: i64) -> Interp {
+        Interp { tab: SymTab::new(), lanes }
+    }
+
+    /// Effective range of a symbol in a state: global range ∩ clamp.
+    pub fn range_of(&self, st: &State, s: u32) -> Interval {
+        let g = self.tab.range(s);
+        match st.refine.get(&s) {
+            Some(c) => Interval::intersect(g, *c),
+            None => g,
+        }
+    }
+
+    /// Direct interval evaluation (i128 internally, clamped).
+    pub fn eval(&self, st: &State, e: &Expr) -> Interval {
+        let mut lo = e.c0 as i128;
+        let mut hi = e.c0 as i128;
+        for &(s, c) in &e.terms {
+            let r = self.range_of(st, s);
+            if r.is_empty() {
+                return Interval::new(1, 0);
+            }
+            let a = c as i128 * r.lo as i128;
+            let b = c as i128 * r.hi as i128;
+            lo += a.min(b);
+            hi += a.max(b);
+        }
+        Interval { lo: clamp128(lo), hi: clamp128(hi) }
+    }
+
+    /// Upper bound of `e`, additionally trying upper-bound substitution:
+    /// a positive-coefficient term whose symbol carries `ub` (vsetvli:
+    /// `vl ≤ avl`) may be replaced by `coeff·ub` — this is what proves
+    /// strip-mined vector spans stay inside their buffer.
+    pub fn eval_hi(&self, st: &State, e: &Expr, depth: u32) -> i64 {
+        let mut best = self.eval(st, e).hi;
+        if depth == 0 {
+            return best;
+        }
+        for (i, &(s, c)) in e.terms.iter().enumerate() {
+            if c <= 0 {
+                continue;
+            }
+            let Some(ub) = self.tab.ub(s).cloned() else { continue };
+            let mut rest = e.clone();
+            rest.terms.remove(i);
+            if let Some(e2) = ub.scale(c).and_then(|u| rest.add(&u)) {
+                best = best.min(self.eval_hi(st, &e2, depth - 1));
+            }
+        }
+        best
+    }
+
+    /// Lower bound of `e`, trying substitution on negative-coefficient
+    /// terms (`-c·s ≥ -c·ub` for `c > 0`).
+    pub fn eval_lo(&self, st: &State, e: &Expr, depth: u32) -> i64 {
+        let mut best = self.eval(st, e).lo;
+        if depth == 0 {
+            return best;
+        }
+        for (i, &(s, c)) in e.terms.iter().enumerate() {
+            if c >= 0 {
+                continue;
+            }
+            let Some(ub) = self.tab.ub(s).cloned() else { continue };
+            let mut rest = e.clone();
+            rest.terms.remove(i);
+            if let Some(e2) = ub.scale(c).and_then(|u| rest.add(&u)) {
+                best = best.max(self.eval_lo(st, &e2, depth - 1));
+            }
+        }
+        best
+    }
+
+    /// Congruence of `e` modulo 4, when derivable.
+    pub fn expr_mod4(&self, e: &Expr) -> Option<u8> {
+        let mut acc = (e.c0.rem_euclid(4)) as u8;
+        for &(s, c) in &e.terms {
+            let cm = c.rem_euclid(4) as u8;
+            if cm == 0 {
+                continue;
+            }
+            let sm = self.tab.mod4(s)?;
+            acc = (acc + cm * sm) % 4;
+        }
+        Some(acc % 4)
+    }
+
+    /// Render an expression for diagnostics.
+    pub fn expr_str(&self, e: &Expr) -> String {
+        let mut out = String::new();
+        if e.c0 != 0 || e.terms.is_empty() {
+            out.push_str(&format!("{:#x}", e.c0));
+        }
+        for &(s, c) in &e.terms {
+            let name = self.tab.sym_str(s);
+            if c == 1 {
+                if out.is_empty() {
+                    out.push_str(&name);
+                } else {
+                    out.push_str(&format!("+{name}"));
+                }
+            } else if c == -1 {
+                out.push_str(&format!("-{name}"));
+            } else if c < 0 {
+                out.push_str(&format!("{c}*{name}"));
+            } else if out.is_empty() {
+                out.push_str(&format!("{c}*{name}"));
+            } else {
+                out.push_str(&format!("+{c}*{name}"));
+            }
+        }
+        out
+    }
+
+    fn set(&mut self, st: &mut State, rd: usize, e: Expr) {
+        if rd != 0 {
+            st.x[rd] = e;
+        }
+    }
+
+    /// Bind the result of the (non-affine) instruction at `idx` to its
+    /// `Inst` symbol, aging out any stale references first.
+    fn fresh(
+        &mut self,
+        st: &mut State,
+        idx: usize,
+        range: Interval,
+        mod4: Option<u8>,
+        ub: Option<Expr>,
+    ) -> Expr {
+        if let Some(v) = range.as_exact() {
+            return Expr::con(v);
+        }
+        self.age(st, idx);
+        let s = self.tab.intern(SymKey::Inst { index: idx as u32 }, range, mod4);
+        self.tab.set_ub(s, ub);
+        Expr::sym(s)
+    }
+
+    /// Re-execution of instruction `idx`: any register whose expression
+    /// mentions the old `Inst{idx}` symbol is rebound to an `Aged`
+    /// snapshot covering its evaluated range, and the per-state clamp on
+    /// the old symbol is dropped (it constrained the *previous* value).
+    fn age(&mut self, st: &mut State, idx: usize) {
+        let Some(old) = self.tab.lookup(SymKey::Inst { index: idx as u32 }) else {
+            return;
+        };
+        for r in 1..NREGS {
+            if !st.x[r].mentions(old) {
+                continue;
+            }
+            let range = self.eval(st, &st.x[r]);
+            let m = self.expr_mod4(&st.x[r]);
+            let s = self.tab.intern(SymKey::Aged { index: idx as u32, reg: r as u8 }, range, m);
+            st.x[r] = Expr::sym(s);
+        }
+        st.refine.remove(&old);
+    }
+
+    /// Degrade: the result is some unknown i32.
+    fn unknown(&mut self, st: &mut State, idx: usize) -> Expr {
+        self.fresh(st, idx, Interval::I32, None, None)
+    }
+
+    /// Affine candidate `e`: keep it if its value provably fits in i32
+    /// (so the exact i64 model agrees with wrapping i32 arithmetic),
+    /// otherwise degrade.
+    fn affine(&mut self, st: &mut State, idx: usize, e: Option<Expr>) -> Expr {
+        match e {
+            Some(e) if self.eval(st, &e).fits_i32() => e,
+            _ => self.unknown(st, idx),
+        }
+    }
+
+    /// Abstract one micro-op, mirroring `Machine::step` semantics.
+    /// Branches refine at the edge level ([`Interp::refine_edge`]), not here.
+    pub fn transfer(&mut self, st: &mut State, u: &MicroOp, idx: usize) {
+        use Op::*;
+        match u.op {
+            Lui | Auipc => {
+                let v = Expr::con(u.aux as i32 as i64);
+                self.set(st, u.rd, v);
+            }
+            Jal | Jalr => {
+                let v = Expr::con(u.aux as i32 as i64);
+                self.set(st, u.rd, v);
+            }
+            Beq | Bne | Blt | Bge => {}
+            Addi => {
+                let e = st.x[u.rs1].add_const(u.imm as i64);
+                let e = self.affine(st, idx, e);
+                self.set(st, u.rd, e);
+            }
+            Add => {
+                let e = st.x[u.rs1].add(&st.x[u.rs2]);
+                let e = self.affine(st, idx, e);
+                self.set(st, u.rd, e);
+            }
+            Sub => {
+                let e = if u.rs1 == u.rs2 {
+                    Expr::con(0) // canonical zeroing idiom
+                } else {
+                    let e = st.x[u.rs1].sub(&st.x[u.rs2]);
+                    self.affine(st, idx, e)
+                };
+                self.set(st, u.rd, e);
+            }
+            Slli => {
+                let sh = (u.imm as u32) & 31;
+                let e = st.x[u.rs1].scale(1i64 << sh);
+                let e = self.affine(st, idx, e);
+                self.set(st, u.rd, e);
+            }
+            Mul => {
+                let e = if let Some(k) = st.x[u.rs1].is_const() {
+                    st.x[u.rs2].scale(k)
+                } else if let Some(k) = st.x[u.rs2].is_const() {
+                    st.x[u.rs1].scale(k)
+                } else {
+                    let (a, b) = (self.eval(st, &st.x[u.rs1]), self.eval(st, &st.x[u.rs2]));
+                    let corners = [
+                        a.lo as i128 * b.lo as i128,
+                        a.lo as i128 * b.hi as i128,
+                        a.hi as i128 * b.lo as i128,
+                        a.hi as i128 * b.hi as i128,
+                    ];
+                    let lo = clamp128(*corners.iter().min().unwrap());
+                    let hi = clamp128(*corners.iter().max().unwrap());
+                    let r = Interval::intersect(Interval::new(lo, hi), Interval::I32);
+                    let r = if Interval::new(lo, hi).fits_i32() { r } else { Interval::I32 };
+                    let e = self.fresh(st, idx, r, None, None);
+                    self.set(st, u.rd, e);
+                    return;
+                };
+                let e = self.affine(st, idx, e);
+                self.set(st, u.rd, e);
+            }
+            Div => {
+                let dividend = self.eval(st, &st.x[u.rs1]);
+                let e = match st.x[u.rs2].is_const() {
+                    Some(0) => Expr::con(-1), // machine: div by zero = -1
+                    Some(1) => st.x[u.rs1].clone(),
+                    Some(c) if c > 1 && dividend.fits_i32() => {
+                        // trunc division by a positive constant is monotone
+                        let r = Interval::new(dividend.lo / c, dividend.hi / c);
+                        self.fresh(st, idx, r, None, None)
+                    }
+                    _ => self.unknown(st, idx),
+                };
+                self.set(st, u.rd, e);
+            }
+            Rem => {
+                let dividend = self.eval(st, &st.x[u.rs1]);
+                let e = match st.x[u.rs2].is_const() {
+                    Some(0) => st.x[u.rs1].clone(), // machine: rem by zero = dividend
+                    Some(c) if c > 0 && dividend.fits_i32() => {
+                        let r = if dividend.lo >= 0 {
+                            Interval::new(0, (c - 1).min(dividend.hi))
+                        } else {
+                            Interval::new(-(c - 1), c - 1)
+                        };
+                        self.fresh(st, idx, r, None, None)
+                    }
+                    _ => self.unknown(st, idx),
+                };
+                self.set(st, u.rd, e);
+            }
+            Xor => {
+                let e = if u.rs1 == u.rs2 {
+                    Expr::con(0) // canonical zeroing idiom
+                } else {
+                    self.unknown(st, idx)
+                };
+                self.set(st, u.rd, e);
+            }
+            Slti | Slt => {
+                let e = self.fresh(st, idx, Interval::new(0, 1), None, None);
+                self.set(st, u.rd, e);
+            }
+            Andi => {
+                let e = if u.imm >= 0 {
+                    self.fresh(st, idx, Interval::new(0, u.imm as i64), None, None)
+                } else {
+                    self.unknown(st, idx)
+                };
+                self.set(st, u.rd, e);
+            }
+            Srai => {
+                let sh = (u.imm as u32) & 31;
+                let r = self.eval(st, &st.x[u.rs1]);
+                let e = if r.fits_i32() {
+                    // arithmetic right shift is monotone
+                    self.fresh(st, idx, Interval::new(r.lo >> sh, r.hi >> sh), None, None)
+                } else {
+                    self.unknown(st, idx)
+                };
+                self.set(st, u.rd, e);
+            }
+            Srli => {
+                let sh = (u.imm as u32) & 31;
+                let r = self.eval(st, &st.x[u.rs1]);
+                let e = if r.fits_i32() && r.lo >= 0 {
+                    self.fresh(st, idx, Interval::new(r.lo >> sh, r.hi >> sh), None, None)
+                } else {
+                    self.unknown(st, idx)
+                };
+                self.set(st, u.rd, e);
+            }
+            Ori | Xori | And | Or | Sll | Srl | Sra | Mulh | FcvtWS => {
+                let e = self.unknown(st, idx);
+                self.set(st, u.rd, e);
+            }
+            Lw => {
+                let e = self.unknown(st, idx);
+                self.set(st, u.rd, e);
+            }
+            Sw | Flw | Fsw => {}
+            Vsetvli => {
+                self.age(st, idx);
+                let lmul = 1i64 << (u.rs3 as u32 & 7);
+                let vlmax = self.lanes * lmul;
+                let avl = st.x[u.rs1].clone();
+                let ar = self.eval(st, &avl);
+                // vl = min(max(avl, 0), vlmax)
+                let range = Interval::new(ar.lo.clamp(0, vlmax), ar.hi.clamp(0, vlmax));
+                let ub = (ar.lo >= 0).then_some(avl);
+                let e = self.fresh(st, idx, range, None, ub);
+                self.set(st, u.rd, e.clone());
+                st.x[VL] = e;
+                st.lmul = Interval::exact(lmul);
+            }
+            // Vector and float-only ops touch no tracked scalar state.
+            Vle32 | Vse32 | Vle8 | Vse8 => {}
+            FaddS | FsubS | FmulS | FdivS | FmaddS | FminS | FmaxS | FcvtSW | FexpS
+            | FrsqrtS => {}
+            VaddVV | VsubVV | VmulVV | VmaccVV | VfaddVV | VfsubVV | VfmulVV | VfmaccVV
+            | VfmaccVF | VfredsumVS | VfmaxVV | VfmvVF => {}
+        }
+    }
+
+    /// Refine a state across a conditional-branch edge. Returns `None` if
+    /// the edge is provably infeasible.
+    pub fn refine_edge(
+        &mut self,
+        st: &State,
+        u: &MicroOp,
+        idx: usize,
+        taken: bool,
+    ) -> Option<State> {
+        let mut out = st.clone();
+        let r1 = self.eval(st, &st.x[u.rs1]);
+        let r2 = self.eval(st, &st.x[u.rs2]);
+        let shave = |r: Interval, o: Interval| -> Interval {
+            let mut r = r;
+            if let Some(v) = o.as_exact() {
+                if r.lo == v {
+                    r.lo += 1;
+                }
+                if r.hi == v {
+                    r.hi -= 1;
+                }
+            }
+            r
+        };
+        let lt = |a: Interval, b: Interval| {
+            // a < b: a ≤ hi(b)-1, b ≥ lo(a)+1
+            (Interval::new(NEG_INF, b.hi - 1), Interval::new(a.lo + 1, INF))
+        };
+        let ge = |a: Interval, b: Interval| {
+            // a ≥ b: a ≥ lo(b), b ≤ hi(a)
+            (Interval::new(b.lo, INF), Interval::new(NEG_INF, a.hi))
+        };
+        let (a1, a2) = match (u.op, taken) {
+            (Op::Beq, true) | (Op::Bne, false) => (r2, r1),
+            (Op::Beq, false) | (Op::Bne, true) => (shave(r1, r2), shave(r2, r1)),
+            (Op::Blt, true) | (Op::Bge, false) => lt(r1, r2),
+            (Op::Blt, false) | (Op::Bge, true) => ge(r1, r2),
+            _ => return Some(out),
+        };
+        if !self.constrain(&mut out, u.rs1, a1, idx, taken) {
+            return None;
+        }
+        if !self.constrain(&mut out, u.rs2, a2, idx, taken) {
+            return None;
+        }
+        Some(out)
+    }
+
+    /// Constrain register `reg` to `allowed` in `st`. Single-symbol
+    /// expressions refine the symbol's per-state clamp (preserving every
+    /// pointer correlated with it); multi-symbol expressions are rebound
+    /// to a `Cut` symbol. Returns false if the edge is infeasible.
+    fn constrain(
+        &mut self,
+        st: &mut State,
+        reg: usize,
+        allowed: Interval,
+        idx: usize,
+        taken: bool,
+    ) -> bool {
+        let e = st.x[reg].clone();
+        let cur = self.eval(st, &e);
+        let new = Interval::intersect(cur, allowed);
+        if new.is_empty() {
+            return false;
+        }
+        if new == cur || reg == 0 {
+            return true;
+        }
+        if let Some((s, c, c0)) = e.single_sym() {
+            // c·s + c0 ∈ [new.lo, new.hi]  →  bounds on s (exact rounding)
+            let lo_n = (new.lo as i128) - c0 as i128;
+            let hi_n = (new.hi as i128) - c0 as i128;
+            let c = c as i128;
+            let (slo, shi) = if c > 0 {
+                (div_ceil(lo_n, c), div_floor(hi_n, c))
+            } else {
+                (div_ceil(hi_n, c), div_floor(lo_n, c))
+            };
+            let bound = Interval::new(clamp128(slo), clamp128(shi));
+            let cur_s = self.range_of(st, s);
+            let ns = Interval::intersect(cur_s, bound);
+            if ns.is_empty() {
+                return false;
+            }
+            if ns != cur_s {
+                st.refine.insert(s, ns);
+            }
+        } else {
+            let m = self.expr_mod4(&e);
+            let key = SymKey::Cut { index: idx as u32, taken, reg: reg as u8 };
+            let s = self.tab.intern(key, new, m);
+            st.x[reg] = Expr::sym(s);
+        }
+        true
+    }
+
+    /// Plain join of two states at `block`: any register whose expressions
+    /// disagree becomes a `Phi{block, reg}` symbol covering both sides.
+    pub fn join(&mut self, a: &State, b: &State, block: u32) -> State {
+        let mut out = a.clone();
+        out.lmul = Interval::hull(a.lmul, b.lmul);
+        out.refine = Self::join_refines(a, b);
+        for r in 1..NREGS {
+            if a.x[r] != b.x[r] {
+                out.x[r] = self.phi(block, r, a, b, &mut out);
+            }
+        }
+        out
+    }
+
+    fn join_refines(a: &State, b: &State) -> BTreeMap<u32, Interval> {
+        let mut refine = BTreeMap::new();
+        for (s, ia) in &a.refine {
+            if let Some(ib) = b.refine.get(s) {
+                refine.insert(*s, Interval::hull(*ia, *ib));
+            }
+        }
+        refine
+    }
+
+    /// Phi `reg` into `out`: intern the symbol (growing its global range
+    /// monotonically) and additionally record the *current* two-sided hull
+    /// as a per-state clamp when it is tighter than the global range. The
+    /// clamp is what keeps loop exit bounds finite after the global range
+    /// has widened to ±∞ — and it is sound, because every concrete value
+    /// reaching this join is inside one side's evaluated range. Any clamp
+    /// the incoming states carried on this symbol refers to its *previous*
+    /// binding and is dropped.
+    fn phi(&mut self, block: u32, reg: usize, a: &State, b: &State, out: &mut State) -> Expr {
+        let ra = self.eval(a, &a.x[reg]);
+        let rb = self.eval(b, &b.x[reg]);
+        let m = join_mod4(self.expr_mod4(&a.x[reg]), self.expr_mod4(&b.x[reg]));
+        let hull = Interval::hull(ra, rb);
+        let s = self.tab.intern(SymKey::Phi { block, reg: reg as u8 }, hull, m);
+        let g = self.tab.range(s);
+        out.refine.remove(&s);
+        if !hull.is_empty() && (hull.lo > g.lo || hull.hi < g.hi) {
+            out.refine.insert(s, Interval::intersect(hull, g));
+        }
+        Expr::sym(s)
+    }
+
+    /// Loop-head entry state from the joined preheader state `init` and
+    /// joined back-edge state `back`.
+    ///
+    /// Per unstable register, in order:
+    /// 1. registers tested by a back-edge branch (and previously demoted
+    ///    ones) become plain phis — their ranges converge through the
+    ///    taken-edge refinement;
+    /// 2. remaining registers try the **derived-induction invariant**: if
+    ///    `back[r] − init[r] == λ·(back[t] − init[t])` exactly for an
+    ///    already-phi'd `t`, then `r − λ·t` is loop-invariant and `r` is
+    ///    bound to `init[r] + λ·(φt − init[t])` — this is what keeps
+    ///    pointer-bump strides exact instead of widening to ±∞;
+    /// 3. otherwise the register is demoted (stickily) to a plain phi.
+    pub fn head_entry(
+        &mut self,
+        block: u32,
+        init: &State,
+        back: Option<&State>,
+        tested: u64,
+        demoted: &mut std::collections::HashSet<(u32, u8)>,
+    ) -> State {
+        let Some(back) = back else { return init.clone() };
+        let mut out = init.clone();
+        out.lmul = Interval::hull(init.lmul, back.lmul);
+        out.refine = Self::join_refines(init, back);
+
+        let mut phied: Vec<(usize, u32)> = Vec::new();
+        let mut rest: Vec<usize> = Vec::new();
+        for r in 1..NREGS {
+            if init.x[r] == back.x[r] {
+                continue;
+            }
+            if tested & (1u64 << r) != 0 || demoted.contains(&(block, r as u8)) {
+                let e = self.phi(block, r, init, back, &mut out);
+                if let Some((s, _, _)) = e.single_sym() {
+                    phied.push((r, s));
+                }
+                out.x[r] = e;
+            } else {
+                rest.push(r);
+            }
+        }
+        for r in rest {
+            let dr = back.x[r].sub(&init.x[r]);
+            let mut bound = None;
+            if let Some(dr) = dr {
+                for &(t, phi_t) in &phied {
+                    let Some(dt) = back.x[t].sub(&init.x[t]) else { continue };
+                    let Some(lam) = dr.ratio_of(&dt) else { continue };
+                    // r = init[r] + λ·(φt − init[t])
+                    bound = Expr::sym(phi_t)
+                        .sub(&init.x[t])
+                        .and_then(|d| d.scale(lam))
+                        .and_then(|d| init.x[r].add(&d));
+                    if bound.is_some() {
+                        break;
+                    }
+                }
+            }
+            match bound {
+                Some(e) => out.x[r] = e,
+                None => {
+                    demoted.insert((block, r as u8));
+                    let e = self.phi(block, r, init, back, &mut out);
+                    if let Some((s, _, _)) = e.single_sym() {
+                        phied.push((r, s));
+                    }
+                    out.x[r] = e;
+                }
+            }
+        }
+        out
+    }
+}
+
+fn div_floor(a: i128, b: i128) -> i128 {
+    let q = a / b;
+    if (a % b != 0) && ((a < 0) != (b < 0)) {
+        q - 1
+    } else {
+        q
+    }
+}
+
+fn div_ceil(a: i128, b: i128) -> i128 {
+    let q = a / b;
+    if (a % b != 0) && ((a < 0) == (b < 0)) {
+        q + 1
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_algebra_normalizes() {
+        let a = Expr { c0: 4, terms: vec![(1, 2), (3, -1)] };
+        let b = Expr { c0: -4, terms: vec![(1, -2), (3, 1)] };
+        assert_eq!(a.add(&b).unwrap(), Expr::con(0));
+        assert_eq!(a.sub(&a).unwrap(), Expr::con(0));
+        assert_eq!(a.scale(3).unwrap().c0, 12);
+    }
+
+    #[test]
+    fn ratio_detects_exact_proportionality() {
+        // dr = 4·s  vs  dt = -s  →  λ = -4
+        let dr = Expr { c0: 0, terms: vec![(7, 4)] };
+        let dt = Expr { c0: 0, terms: vec![(7, -1)] };
+        assert_eq!(dr.ratio_of(&dt), Some(-4));
+        // constant delta: dr = -8, dt = -2 → λ = 4
+        assert_eq!(Expr::con(-8).ratio_of(&Expr::con(-2)), Some(4));
+        // not proportional
+        let dt2 = Expr { c0: 1, terms: vec![(7, -1)] };
+        assert_eq!(dr.ratio_of(&dt2), None);
+    }
+
+    #[test]
+    fn widening_hits_infinity_after_limit() {
+        let mut tab = SymTab::new();
+        let s = tab.intern(SymKey::Inst { index: 1 }, Interval::new(0, 4), None);
+        for k in 1..8 {
+            tab.widen_to(s, Interval::new(0, 4 + k));
+        }
+        assert_eq!(tab.range(s).hi, INF, "endpoint must widen to +inf");
+        assert_eq!(tab.range(s).lo, 0, "untouched endpoint stays");
+    }
+
+    #[test]
+    fn mod4_tracks_congruence() {
+        let mut it = Interp::new(8);
+        let s = it.tab.intern(SymKey::Inst { index: 0 }, Interval::new(0, 100), Some(0));
+        let e = Expr { c0: 8, terms: vec![(s, 4)] }; // 8 + 4s ≡ 0 (mod 4)
+        assert_eq!(it.expr_mod4(&e), Some(0));
+        let e2 = Expr { c0: 2, terms: vec![(s, 4)] };
+        assert_eq!(it.expr_mod4(&e2), Some(2));
+        let t = it.tab.intern(SymKey::Inst { index: 1 }, Interval::new(0, 3), None);
+        let e3 = Expr { c0: 0, terms: vec![(t, 1)] };
+        assert_eq!(it.expr_mod4(&e3), None, "unknown congruence stays unknown");
+    }
+
+    #[test]
+    fn ub_substitution_tightens_vector_span() {
+        // base = end − 4·phi, vl ≤ phi ⇒ hi(base + 4·vl) ≤ end.
+        let mut it = Interp::new(8);
+        let phi = it.tab.intern(SymKey::Phi { block: 1, reg: 18 }, Interval::new(1, 1024), None);
+        let vl = it.tab.intern(SymKey::Inst { index: 9 }, Interval::new(0, 8), None);
+        it.tab.set_ub(vl, Some(Expr::sym(phi)));
+        let st = State::init(1 << 20, 8);
+        let end = 0x4000i64;
+        let span_end = Expr { c0: end, terms: vec![(phi, -4), (vl, 4)] };
+        assert_eq!(it.eval_hi(&st, &span_end, 2), end);
+        // direct evaluation alone cannot prove it
+        assert!(it.eval(&st, &span_end).hi > end);
+    }
+}

@@ -1,0 +1,285 @@
+//! Static binary verifier: abstract interpretation over emitted RISC-V
+//! programs, proving memory safety, CFG integrity, and def-before-use —
+//! before anything runs (paper §3.6, contribution 3, made fully static).
+//!
+//! Given a predecoded binary plus the memory plan's allocated regions, the
+//! analyzer proves — without executing an instruction — that:
+//!
+//! * **CFG integrity** ([`cfg`]): every reachable branch/`jal` lands on a
+//!   word-aligned instruction inside the program; wild jumps, jumps into
+//!   the middle of no instruction, reachable undecodable words, and dead
+//!   code are findings.
+//! * **Memory safety** ([`verify`]): every reachable load/store — scalar
+//!   and strip-mined vector — has its effective-address range bounded by
+//!   the abstract domain ([`domain`]) and contained in a single region the
+//!   memplan actually allocated, with proven 4-byte alignment for word
+//!   accesses. An access that spans two tensors' extents is *not* proven
+//!   (that is the no-overlap guarantee).
+//! * **Def-before-use** ([`verify`]): along every CFG path, scalar, float,
+//!   and vector registers are written before they are read (the machine
+//!   zero-fills registers, so this is a latent-bug lint, not a crash — but
+//!   compiler output must be clean).
+//!
+//! # Soundness contract
+//!
+//! The abstract domain is affine forms over interned symbols with interval
+//! ranges (see [`domain`] for the existential-valuation semantics). The
+//! analyzer is **sound for proofs and honest about the rest**: "proven"
+//! means every concrete execution of that instruction stays in bounds;
+//! anything the domain cannot bound becomes a named Warn-level
+//! [`StaticFinding`] ([`FindingCode::UnprovenAccess`] /
+//! [`FindingCode::UnprovenAlignment`]), never a silent pass. Error-level
+//! findings are reserved for *provable* violations (an access range
+//! disjoint from every allocated region, a wild jump, a read of a
+//! never-written register). Two honest gaps, by design:
+//!
+//! * runtime-indexed addresses (`gather` rows) evaluate to unbounded
+//!   symbols and stay Warn-unprovable;
+//! * DMEM regions reuse addresses across node lifetimes, so temporal
+//!   liveness is not modeled — containment is per-extent, not per-epoch.
+
+pub mod cfg;
+pub mod domain;
+pub mod verify;
+
+use crate::backend::memplan::MemPlan;
+use crate::sim::predecode::Predecoded;
+use crate::sim::{layout, MachineConfig};
+use crate::util::json::Json;
+
+/// Severity of a finding. `Error` = provable violation; `Warn` = the
+/// analyzer could not prove safety (or structural lint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+}
+
+/// Named finding categories (stable identifiers for tests/CI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingCode {
+    /// A reachable word that does not decode.
+    IllegalInstruction,
+    /// Branch/`jal` taken-target not word-aligned (mid-instruction jump).
+    MisalignedJump,
+    /// Taken target beyond the program (jump out of the program).
+    WildJump,
+    /// `jalr`: runtime-computed target the analyzer treats as halt.
+    UnboundedJump,
+    /// Dead code: unreachable from the entry point.
+    UnreachableCode,
+    /// Access provably outside every allocated region.
+    OobAccess,
+    /// Access the domain cannot bound / cannot place in one region.
+    UnprovenAccess,
+    /// Word access provably not 4-byte aligned.
+    MisalignedAccess,
+    /// Word access whose alignment the domain cannot prove.
+    UnprovenAlignment,
+    /// A register read on some path before any write reaches it.
+    UseBeforeDef,
+    /// A planned region overlaps the stack red zone at the top of DMEM.
+    StackOverlap,
+    /// The analyzer hit an internal budget and gave up (never silent).
+    AnalysisLimit,
+}
+
+impl FindingCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FindingCode::IllegalInstruction => "static.illegal_instruction",
+            FindingCode::MisalignedJump => "static.misaligned_jump",
+            FindingCode::WildJump => "static.wild_jump",
+            FindingCode::UnboundedJump => "static.unbounded_jump",
+            FindingCode::UnreachableCode => "static.unreachable_code",
+            FindingCode::OobAccess => "static.oob_access",
+            FindingCode::UnprovenAccess => "static.unproven_access",
+            FindingCode::MisalignedAccess => "static.misaligned_access",
+            FindingCode::UnprovenAlignment => "static.unproven_alignment",
+            FindingCode::UseBeforeDef => "static.use_before_def",
+            FindingCode::StackOverlap => "static.stack_overlap",
+            FindingCode::AnalysisLimit => "static.analysis_limit",
+        }
+    }
+}
+
+/// One static-analysis finding, anchored to an instruction index.
+#[derive(Debug, Clone)]
+pub struct StaticFinding {
+    pub code: FindingCode,
+    pub severity: Severity,
+    /// Instruction (word) index the finding is anchored to.
+    pub index: usize,
+    pub detail: String,
+}
+
+impl StaticFinding {
+    pub fn error(code: FindingCode, index: usize, detail: String) -> StaticFinding {
+        StaticFinding { code, severity: Severity::Error, index, detail }
+    }
+
+    pub fn warn(code: FindingCode, index: usize, detail: String) -> StaticFinding {
+        StaticFinding { code, severity: Severity::Warn, index, detail }
+    }
+
+    /// One-line diagnostic: severity, code, instruction index, detail.
+    pub fn line(&self) -> String {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        };
+        format!("{sev}[{}] @{}: {}", self.code.name(), self.index, self.detail)
+    }
+}
+
+/// A byte range the memory plan actually allocated (absolute addresses).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub start: u64,
+    /// End-exclusive.
+    pub end: u64,
+    pub label: String,
+}
+
+/// Bytes below `sp` the emitted kernels may use as spill slots
+/// (`sw/flw sp, -4/-8` float-constant staging).
+pub const STACK_RED_ZONE: u64 = 64;
+
+/// Build the absolute-address region model from a memory plan: DMEM
+/// placements, per-node scratch, WMEM placements, and the stack red zone
+/// at the top of machine DMEM.
+pub fn regions_of_plan(plan: &MemPlan, mach: &MachineConfig) -> Vec<Region> {
+    let mut v: Vec<Region> = Vec::new();
+    for (t, p) in &plan.dmem {
+        if p.bytes > 0 {
+            let s = (layout::DMEM_BASE + p.addr) as u64;
+            v.push(Region { start: s, end: s + p.bytes as u64, label: format!("dmem:t{}", t.0) });
+        }
+    }
+    for (n, p) in &plan.scratch {
+        if p.bytes > 0 {
+            let s = (layout::DMEM_BASE + p.addr) as u64;
+            v.push(Region {
+                start: s,
+                end: s + p.bytes as u64,
+                label: format!("scratch:n{}", n.0),
+            });
+        }
+    }
+    for (t, p) in &plan.wmem {
+        if p.bytes > 0 {
+            let s = (layout::WMEM_BASE + p.addr) as u64;
+            v.push(Region { start: s, end: s + p.bytes as u64, label: format!("wmem:t{}", t.0) });
+        }
+    }
+    let sp = machine_dmem_len(mach);
+    v.push(Region { start: sp - STACK_RED_ZONE, end: sp, label: "stack".to_string() });
+    v.sort_by_key(|r| (r.start, r.end));
+    v.dedup_by(|a, b| a.start == b.start && a.end == b.end);
+    v
+}
+
+/// The machine's actual DMEM extent (= reset `sp`): `MachineConfig`
+/// capacity capped at the simulator's 64 MiB backing allocation.
+pub fn machine_dmem_len(mach: &MachineConfig) -> u64 {
+    mach.dmem_bytes.min(64 << 20) as u64
+}
+
+/// The full static-analysis result.
+#[derive(Debug, Clone, Default)]
+pub struct StaticReport {
+    pub findings: Vec<StaticFinding>,
+    /// Error/Warn totals (kept even when `findings` is capped).
+    pub errors: usize,
+    pub warns: usize,
+    pub instructions: usize,
+    pub reachable_instructions: usize,
+    pub blocks: usize,
+    pub loop_heads: usize,
+    /// Static load/store sites in reachable code.
+    pub mem_sites: usize,
+    /// Sites with proven bounds *and* proven alignment.
+    pub proven_sites: usize,
+    pub fixpoint_visits: usize,
+    pub symbols: usize,
+    pub analysis_seconds: f64,
+}
+
+impl StaticReport {
+    pub fn error_findings(&self) -> impl Iterator<Item = &StaticFinding> {
+        self.findings.iter().filter(|f| f.severity == Severity::Error)
+    }
+
+    /// Zero Error-level findings (Warns allowed).
+    pub fn clean(&self) -> bool {
+        self.errors == 0
+    }
+
+    /// Fraction of memory-access sites fully proven (1.0 when there are
+    /// no sites).
+    pub fn coverage(&self) -> f64 {
+        if self.mem_sites == 0 {
+            1.0
+        } else {
+            self.proven_sites as f64 / self.mem_sites as f64
+        }
+    }
+
+    pub fn instructions_per_second(&self) -> f64 {
+        if self.analysis_seconds > 0.0 {
+            self.instructions as f64 / self.analysis_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} instructions in {} blocks ({} loops): {}/{} accesses proven \
+             ({:.1}%), {} errors, {} warnings [{:.1} ms]",
+            self.instructions,
+            self.blocks,
+            self.loop_heads,
+            self.proven_sites,
+            self.mem_sites,
+            100.0 * self.coverage(),
+            self.errors,
+            self.warns,
+            self.analysis_seconds * 1e3,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("instructions", Json::Num(self.instructions as f64)),
+            ("reachable_instructions", Json::Num(self.reachable_instructions as f64)),
+            ("blocks", Json::Num(self.blocks as f64)),
+            ("loop_heads", Json::Num(self.loop_heads as f64)),
+            ("mem_sites", Json::Num(self.mem_sites as f64)),
+            ("proven_sites", Json::Num(self.proven_sites as f64)),
+            ("coverage", Json::Num(self.coverage())),
+            ("errors", Json::Num(self.errors as f64)),
+            ("warnings", Json::Num(self.warns as f64)),
+            ("fixpoint_visits", Json::Num(self.fixpoint_visits as f64)),
+            ("symbols", Json::Num(self.symbols as f64)),
+            ("analysis_seconds", Json::Num(self.analysis_seconds)),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| Json::str_(&f.line())).collect()),
+            ),
+        ])
+    }
+}
+
+/// Analyze a predecoded binary against a region model. This is the core
+/// entry point; [`crate::validate::validate_static`] wraps it for the
+/// compile gate.
+pub fn analyze(p: &Predecoded, regions: &[Region], mach: &MachineConfig) -> StaticReport {
+    verify::run(p, regions, mach)
+}
+
+/// Convenience: encode-free analysis of raw instruction words.
+pub fn analyze_words(words: &[u32], regions: &[Region], mach: &MachineConfig) -> StaticReport {
+    let p = crate::sim::predecode::predecode(words);
+    analyze(&p, regions, mach)
+}

@@ -1,0 +1,849 @@
+//! The verification driver: worklist fixpoint over the CFG with the
+//! affine domain, then a checking pass that proves every reachable memory
+//! access in-bounds and aligned, plus a must-defined bitmask pass for
+//! def-before-use.
+//!
+//! The fixpoint keeps one entry state per block and one out state per
+//! edge (conditional branches refine differently on taken vs
+//! fall-through). Loop heads go through [`domain::Interp::head_entry`],
+//! which is where back-edge-tested induction variables get converging phi
+//! ranges and pointer-bump registers get derived-induction invariants.
+//! Termination is guaranteed by symbol-range widening plus a visit budget;
+//! if the budget ever trips, the analyzer reports
+//! [`FindingCode::AnalysisLimit`] and claims nothing (zero proven sites).
+
+use std::collections::{BTreeSet, HashSet};
+use std::time::Instant;
+
+use crate::isa::encode::{format_of, Format};
+use crate::isa::{regs, Op};
+use crate::sim::predecode::{MicroOp, Predecoded, Slot};
+use crate::sim::MachineConfig;
+
+use super::cfg::{self, Cfg};
+use super::domain::{Interp, State, VL};
+use super::{
+    machine_dmem_len, FindingCode, Region, Severity, StaticFinding, StaticReport,
+    STACK_RED_ZONE,
+};
+
+/// Cap on stored findings (counts keep accumulating past it).
+const MAX_FINDINGS: usize = 512;
+
+/// An address bound beyond this is treated as "unbounded" in diagnostics.
+const ADDR_SANE: i64 = 1 << 33;
+
+struct Sink {
+    findings: Vec<StaticFinding>,
+    errors: usize,
+    warns: usize,
+    capped: bool,
+}
+
+impl Sink {
+    fn new() -> Sink {
+        Sink { findings: Vec::new(), errors: 0, warns: 0, capped: false }
+    }
+
+    fn push(&mut self, f: StaticFinding) {
+        match f.severity {
+            Severity::Error => self.errors += 1,
+            Severity::Warn => self.warns += 1,
+        }
+        if self.findings.len() < MAX_FINDINGS {
+            self.findings.push(f);
+        } else if !self.capped {
+            self.capped = true;
+            self.findings.push(StaticFinding::warn(
+                FindingCode::AnalysisLimit,
+                0,
+                format!("finding list capped at {MAX_FINDINGS}; counts remain exact"),
+            ));
+        }
+    }
+}
+
+/// Run the whole analysis (see module docs).
+pub fn run(p: &Predecoded, regions: &[Region], mach: &MachineConfig) -> StaticReport {
+    let t0 = Instant::now();
+    let mut sink = Sink::new();
+    let graph = cfg::build(p);
+    let mut structural = Vec::new();
+    cfg::findings(p, &graph, &mut structural);
+    for f in structural {
+        sink.push(f);
+    }
+
+    let mut report = StaticReport {
+        instructions: p.len(),
+        blocks: graph.blocks.len(),
+        loop_heads: graph.loop_heads.iter().filter(|&&h| h).count(),
+        ..Default::default()
+    };
+    report.reachable_instructions = graph
+        .blocks
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| graph.reachable[*i])
+        .map(|(_, b)| b.end - b.start)
+        .sum();
+
+    stack_overlap_check(regions, mach, &mut sink);
+
+    if !p.is_empty() {
+        let (entries, visits, diverged) = fixpoint(p, &graph, mach, &mut sink);
+        report.fixpoint_visits = visits;
+        if diverged {
+            sink.push(StaticFinding::warn(
+                FindingCode::AnalysisLimit,
+                0,
+                "abstract interpretation did not converge within budget; \
+                 no access is claimed proven"
+                    .to_string(),
+            ));
+            count_sites_unproven(p, &graph, &mut report);
+        } else {
+            let mut interp = entries.interp;
+            check_accesses(p, &graph, &entries.entry, &mut interp, regions, &mut report, &mut sink);
+            report.symbols = interp.tab.len();
+        }
+        def_use(p, &graph, &mut sink);
+    }
+
+    report.errors = sink.errors;
+    report.warns = sink.warns;
+    report.findings = sink.findings;
+    report.analysis_seconds = t0.elapsed().as_secs_f64();
+    report
+}
+
+fn stack_overlap_check(regions: &[Region], mach: &MachineConfig, sink: &mut Sink) {
+    let sp = machine_dmem_len(mach);
+    let red = sp - STACK_RED_ZONE;
+    for r in regions {
+        if r.label != "stack" && r.start < sp && r.end > red {
+            sink.push(StaticFinding::warn(
+                FindingCode::StackOverlap,
+                0,
+                format!(
+                    "region {} [{:#x},{:#x}) overlaps the stack red zone [{:#x},{:#x})",
+                    r.label, r.start, r.end, red, sp
+                ),
+            ));
+        }
+    }
+}
+
+struct FixpointResult {
+    interp: Interp,
+    entry: Vec<Option<State>>,
+}
+
+/// Worklist fixpoint in reverse postorder. Returns per-block entry states.
+fn fixpoint(
+    p: &Predecoded,
+    graph: &Cfg,
+    mach: &MachineConfig,
+    _sink: &mut Sink,
+) -> (FixpointResult, usize, bool) {
+    let nb = graph.blocks.len();
+    let lanes = mach.lanes().max(1) as i64;
+    let dmem_len = machine_dmem_len(mach) as i64;
+    let mut interp = Interp::new(lanes);
+    let init = State::init(dmem_len, lanes);
+
+    let mut entry: Vec<Option<State>> = vec![None; nb];
+    let mut out_fall: Vec<Option<State>> = vec![None; nb];
+    let mut out_taken: Vec<Option<State>> = vec![None; nb];
+    let mut demoted: HashSet<(u32, u8)> = HashSet::new();
+
+    // Registers tested by each loop head's back-edge branches.
+    let tested: Vec<u64> = (0..nb)
+        .map(|b| {
+            let mut mask = 0u64;
+            for &(src, dst) in &graph.back_edges {
+                if dst as usize != b {
+                    continue;
+                }
+                let last = graph.blocks[src as usize].end - 1;
+                if let Slot::Op(u) = &p.slots[last] {
+                    if u.is_cond_branch() {
+                        mask |= 1u64 << u.rs1;
+                        mask |= 1u64 << u.rs2;
+                    }
+                }
+            }
+            mask & !1 // x0 is constant, never a phi
+        })
+        .collect();
+
+    let mut wl: BTreeSet<(u32, u32)> = BTreeSet::new();
+    wl.insert((graph.rpo_pos[0], 0));
+    let budget = 64 * nb + 256;
+    let mut visits = 0usize;
+    let mut diverged = false;
+
+    while let Some(&(pos, b)) = wl.iter().next() {
+        wl.remove(&(pos, b));
+        visits += 1;
+        if visits > budget {
+            diverged = true;
+            break;
+        }
+        let bu = b as usize;
+        let blk = &graph.blocks[bu];
+
+        // Incoming states, split into loop-init vs back-edge contributions.
+        let mut init_in: Option<State> = (b == 0).then(|| init.clone());
+        let mut back_in: Option<State> = None;
+        for &pb in &blk.preds {
+            let pbu = pb as usize;
+            let mut contribs: Vec<&State> = Vec::new();
+            if graph.blocks[pbu].fall == Some(b) {
+                if let Some(s) = out_fall[pbu].as_ref() {
+                    contribs.push(s);
+                }
+            }
+            if graph.blocks[pbu].taken == Some(b) {
+                if let Some(s) = out_taken[pbu].as_ref() {
+                    contribs.push(s);
+                }
+            }
+            for s in contribs {
+                let slot = if graph.is_back_edge(pb, b) { &mut back_in } else { &mut init_in };
+                *slot = Some(match slot.take() {
+                    Some(acc) => interp.join(&acc, s, b),
+                    None => s.clone(),
+                });
+            }
+        }
+
+        let new_entry = if graph.loop_heads[bu] {
+            match (init_in, back_in) {
+                (Some(i), back) => {
+                    interp.head_entry(b, &i, back.as_ref(), tested[bu], &mut demoted)
+                }
+                (None, Some(back)) => back, // degenerate: no live preheader
+                (None, None) => continue,
+            }
+        } else {
+            match init_in {
+                Some(s) => s,
+                None => continue,
+            }
+        };
+
+        let changed_entry = entry[bu].as_ref() != Some(&new_entry);
+        entry[bu] = Some(new_entry.clone());
+
+        // Transfer through the block; split at a conditional terminator.
+        let mut st = new_entry;
+        let mut new_fall: Option<State> = None;
+        let mut new_taken: Option<State> = None;
+        for i in blk.start..blk.end {
+            let u = match &p.slots[i] {
+                Slot::Op(u) => u,
+                Slot::Illegal(_) | Slot::Misaligned(_) => break,
+            };
+            let terminator = i + 1 == blk.end;
+            if terminator && u.is_cond_branch() {
+                if blk.taken.is_some() {
+                    new_taken = interp.refine_edge(&st, u, i, true);
+                }
+                if blk.fall.is_some() {
+                    new_fall = interp.refine_edge(&st, u, i, false);
+                }
+                break;
+            }
+            interp.transfer(&mut st, u, i);
+            if terminator {
+                if u.op == Op::Jal && blk.taken.is_some() {
+                    new_taken = Some(st.clone());
+                } else if blk.fall.is_some() {
+                    new_fall = Some(st.clone());
+                }
+            }
+        }
+
+        let changed_out = out_fall[bu] != new_fall || out_taken[bu] != new_taken;
+        out_fall[bu] = new_fall;
+        out_taken[bu] = new_taken;
+
+        if changed_entry || changed_out {
+            for succ in [blk.fall, blk.taken].into_iter().flatten() {
+                wl.insert((graph.rpo_pos[succ as usize], succ));
+            }
+        }
+        // Symbol metadata (ranges, mod4, ub) is global: growth here can
+        // change evaluation-derived state *anywhere*, so a dirty table
+        // re-enqueues every reachable block, not just successors.
+        if interp.tab.take_dirty() {
+            for &rb in &graph.rpo {
+                wl.insert((graph.rpo_pos[rb as usize], rb));
+            }
+        }
+    }
+
+    (FixpointResult { interp, entry }, visits, diverged)
+}
+
+fn count_sites_unproven(p: &Predecoded, graph: &Cfg, report: &mut StaticReport) {
+    for (bi, blk) in graph.blocks.iter().enumerate() {
+        if !graph.reachable[bi] {
+            continue;
+        }
+        for i in blk.start..blk.end {
+            if let Slot::Op(u) = &p.slots[i] {
+                if is_access(u.op) {
+                    report.mem_sites += 1;
+                }
+            }
+        }
+    }
+}
+
+fn is_access(op: Op) -> bool {
+    matches!(
+        op,
+        Op::Lw | Op::Sw | Op::Flw | Op::Fsw | Op::Vle32 | Op::Vse32 | Op::Vle8 | Op::Vse8
+    )
+}
+
+/// Checking pass: replay each reachable block from its stabilized entry
+/// state, proving every access site's bounds and alignment.
+fn check_accesses(
+    p: &Predecoded,
+    graph: &Cfg,
+    entries: &[Option<State>],
+    interp: &mut Interp,
+    regions: &[Region],
+    report: &mut StaticReport,
+    sink: &mut Sink,
+) {
+    for (bi, blk) in graph.blocks.iter().enumerate() {
+        if !graph.reachable[bi] {
+            continue;
+        }
+        let Some(entry) = &entries[bi] else { continue };
+        let mut st = entry.clone();
+        for i in blk.start..blk.end {
+            let u = match &p.slots[i] {
+                Slot::Op(u) => u,
+                _ => break,
+            };
+            if is_access(u.op) {
+                check_one(interp, &st, u, i, regions, report, sink);
+            }
+            interp.transfer(&mut st, u, i);
+        }
+    }
+}
+
+fn check_one(
+    interp: &Interp,
+    st: &State,
+    u: &MicroOp,
+    idx: usize,
+    regions: &[Region],
+    report: &mut StaticReport,
+    sink: &mut Sink,
+) {
+    report.mem_sites += 1;
+    let what = match u.op {
+        Op::Lw | Op::Flw | Op::Vle32 | Op::Vle8 => "load",
+        _ => "store",
+    };
+
+    // Span [lo, end) of the access, as expressions.
+    let base = &st.x[u.rs1];
+    let (start_e, end_e, word_aligned) = match u.op {
+        Op::Lw | Op::Sw | Op::Flw | Op::Fsw => {
+            let Some(s) = base.add_const(u.imm as i64) else {
+                unproven(sink, idx, what, "address arithmetic overflow".into());
+                return;
+            };
+            let Some(e) = s.add_const(4) else {
+                unproven(sink, idx, what, "address arithmetic overflow".into());
+                return;
+            };
+            (s, e, true)
+        }
+        _ => {
+            let esz: i64 = if matches!(u.op, Op::Vle32 | Op::Vse32) { 4 } else { 1 };
+            let bytes = st.x[VL].scale(esz).and_then(|b| base.add(&b));
+            let Some(e) = bytes else {
+                unproven(sink, idx, what, "vector span arithmetic overflow".into());
+                return;
+            };
+            (base.clone(), e, esz == 4)
+        }
+    };
+
+    let lo = interp.eval_lo(st, &start_e, 2);
+    let end = interp.eval_hi(st, &end_e, 2);
+
+    // Empty vector span (vl can only be 0): nothing is accessed.
+    if end <= lo {
+        report.proven_sites += 1;
+        return;
+    }
+
+    let mut proven = true;
+
+    // Bounds.
+    if lo <= -ADDR_SANE || end >= ADDR_SANE {
+        proven = false;
+        unproven(
+            sink,
+            idx,
+            what,
+            format!("effective address unbounded: base {}", interp.expr_str(&start_e)),
+        );
+    } else {
+        let containing = regions.iter().find(|r| r.start <= lo as u64 && end as u64 <= r.end);
+        match containing {
+            Some(_) => {}
+            None => {
+                proven = false;
+                let overlaps_any =
+                    regions.iter().any(|r| (lo as u64) < r.end && r.start < end as u64);
+                if !overlaps_any && lo >= 0 {
+                    sink.push(StaticFinding::error(
+                        FindingCode::OobAccess,
+                        idx,
+                        format!(
+                            "{what} of [{lo:#x},{end:#x}) lands outside every \
+                             allocated region (base {})",
+                            interp.expr_str(&start_e)
+                        ),
+                    ));
+                } else {
+                    unproven(
+                        sink,
+                        idx,
+                        what,
+                        format!(
+                            "[{lo:#x},{end:#x}) not contained in any single region \
+                             (base {})",
+                            interp.expr_str(&start_e)
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // Alignment (word accesses only).
+    if word_aligned {
+        match interp.expr_mod4(&start_e) {
+            Some(0) => {}
+            Some(k) => {
+                proven = false;
+                sink.push(StaticFinding::error(
+                    FindingCode::MisalignedAccess,
+                    idx,
+                    format!(
+                        "{what} address {} ≡ {k} (mod 4): provably misaligned",
+                        interp.expr_str(&start_e)
+                    ),
+                ));
+            }
+            None => {
+                proven = false;
+                sink.push(StaticFinding::warn(
+                    FindingCode::UnprovenAlignment,
+                    idx,
+                    format!(
+                        "cannot prove 4-byte alignment of {what} address {}",
+                        interp.expr_str(&start_e)
+                    ),
+                ));
+            }
+        }
+    }
+
+    if proven {
+        report.proven_sites += 1;
+    }
+}
+
+fn unproven(sink: &mut Sink, idx: usize, what: &str, detail: String) {
+    sink.push(StaticFinding::warn(
+        FindingCode::UnprovenAccess,
+        idx,
+        format!("{what}: {detail}"),
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// Def-before-use: must-defined bitmask dataflow (x / f / v register files).
+// ---------------------------------------------------------------------------
+
+/// Per-op register uses/defs as `(file, reg)` with file 0=x, 1=f, 2=v —
+/// mirroring `sim::machine` semantics exactly (a `vfmv.v.f` only reads its
+/// float scalar, unlike the scheduler's conservative model). Vector groups
+/// are tracked at base-register granularity: codegen defines and uses a
+/// group through the same base register, so this stays consistent.
+fn uses_defs(u: &MicroOp) -> (Vec<(u8, u8)>, Vec<(u8, u8)>) {
+    let mut r: Vec<(u8, u8)> = Vec::new();
+    let mut w: Vec<(u8, u8)> = Vec::new();
+    let (rd, rs1, rs2, rs3) = (u.rd as u8, u.rs1 as u8, u.rs2 as u8, u.rs3 as u8);
+    match format_of(u.op) {
+        Format::R => match u.op {
+            Op::FcvtWS => {
+                r.push((1, rs1));
+                w.push((0, rd));
+            }
+            Op::FcvtSW => {
+                r.push((0, rs1));
+                w.push((1, rd));
+            }
+            Op::FexpS | Op::FrsqrtS => {
+                r.push((1, rs1));
+                w.push((1, rd));
+            }
+            _ if matches!(
+                u.class,
+                crate::isa::OpClass::FAlu | crate::isa::OpClass::FMul | crate::isa::OpClass::FDiv
+            ) =>
+            {
+                r.push((1, rs1));
+                r.push((1, rs2));
+                w.push((1, rd));
+            }
+            // Integer R-format; xor/sub rd, a, a is a def-without-use.
+            _ => {
+                if !(matches!(u.op, Op::Xor | Op::Sub) && rs1 == rs2) {
+                    r.push((0, rs1));
+                    r.push((0, rs2));
+                }
+                w.push((0, rd));
+            }
+        },
+        Format::R4 => {
+            r.push((1, rs1));
+            r.push((1, rs2));
+            r.push((1, rs3));
+            w.push((1, rd));
+        }
+        Format::I => {
+            r.push((0, rs1));
+            w.push((if u.op == Op::Flw { 1 } else { 0 }, rd));
+        }
+        Format::S => {
+            r.push((0, rs1));
+            r.push((if u.op == Op::Fsw { 1 } else { 0 }, rs2));
+        }
+        Format::B => {
+            r.push((0, rs1));
+            r.push((0, rs2));
+        }
+        Format::U | Format::J => w.push((0, rd)),
+        Format::VSetF => {
+            r.push((0, rs1));
+            w.push((0, rd));
+        }
+        Format::VMem => {
+            r.push((0, rs1));
+            if matches!(u.op, Op::Vle32 | Op::Vle8) {
+                w.push((2, rd));
+            } else {
+                r.push((2, rd));
+            }
+        }
+        Format::VArith => {
+            match u.op {
+                // vfmv.v.f broadcasts a float scalar; rs2 is unused.
+                Op::VfmvVF => {
+                    r.push((1, rs1));
+                    w.push((2, rd));
+                    return (r, w);
+                }
+                Op::VfmaccVF => r.push((1, rs1)),
+                _ => r.push((2, rs1)),
+            }
+            r.push((2, rs2));
+            if matches!(u.op, Op::VmaccVV | Op::VfmaccVV | Op::VfmaccVF) {
+                r.push((2, rd)); // accumulator is read
+            }
+            w.push((2, rd));
+        }
+    }
+    w.retain(|&(f, id)| !(f == 0 && id == 0)); // x0 writes are no-ops
+    (r, w)
+}
+
+/// Must-defined masks per file; meet = AND over predecessors.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct Defined {
+    x: u32,
+    f: u32,
+    v: u32,
+}
+
+impl Defined {
+    fn entry() -> Defined {
+        Defined { x: (1 << regs::ZERO) | (1 << regs::SP), f: 0, v: 0 }
+    }
+
+    fn all() -> Defined {
+        Defined { x: u32::MAX, f: u32::MAX, v: u32::MAX }
+    }
+
+    fn meet(a: Defined, b: Defined) -> Defined {
+        Defined { x: a.x & b.x, f: a.f & b.f, v: a.v & b.v }
+    }
+
+    fn has(&self, file: u8, reg: u8) -> bool {
+        let m = 1u32 << reg;
+        match file {
+            0 => self.x & m != 0,
+            1 => self.f & m != 0,
+            _ => self.v & m != 0,
+        }
+    }
+
+    fn set(&mut self, file: u8, reg: u8) {
+        let m = 1u32 << reg;
+        match file {
+            0 => self.x |= m,
+            1 => self.f |= m,
+            _ => self.v |= m,
+        }
+    }
+}
+
+fn def_use(p: &Predecoded, graph: &Cfg, sink: &mut Sink) {
+    let nb = graph.blocks.len();
+    if nb == 0 {
+        return;
+    }
+    let mut in_mask: Vec<Defined> = vec![Defined::all(); nb];
+    in_mask[0] = Defined::entry();
+
+    let transfer = |blk: &cfg::Block, mut d: Defined| -> Defined {
+        for i in blk.start..blk.end {
+            if let Slot::Op(u) = &p.slots[i] {
+                let (_, defs) = uses_defs(u);
+                for (f, reg) in defs {
+                    d.set(f, reg);
+                }
+            }
+        }
+        d
+    };
+
+    // Fixpoint (monotone decreasing, converges fast).
+    let mut changed = true;
+    let mut rounds = 0;
+    while changed && rounds < 4 * nb + 8 {
+        changed = false;
+        rounds += 1;
+        for &b in &graph.rpo {
+            let bu = b as usize;
+            let mut m = if bu == 0 { Defined::entry() } else { Defined::all() };
+            let mut any_pred = bu == 0;
+            for &pb in &graph.blocks[bu].preds {
+                if !graph.reachable[pb as usize] {
+                    continue;
+                }
+                any_pred = true;
+                m = Defined::meet(m, transfer(&graph.blocks[pb as usize], in_mask[pb as usize]));
+            }
+            if !any_pred {
+                m = Defined::entry();
+            }
+            if m != in_mask[bu] {
+                in_mask[bu] = m;
+                changed = true;
+            }
+        }
+    }
+
+    // Report pass.
+    for (bi, blk) in graph.blocks.iter().enumerate() {
+        if !graph.reachable[bi] {
+            continue;
+        }
+        let mut d = in_mask[bi];
+        for i in blk.start..blk.end {
+            if let Slot::Op(u) = &p.slots[i] {
+                let (uses, defs) = uses_defs(u);
+                for (f, reg) in uses {
+                    if !d.has(f, reg) {
+                        let file = ["x", "f", "v"][f as usize];
+                        let name = if f == 0 { regs::xname(reg) } else { format!("{file}{reg}") };
+                        sink.push(StaticFinding::error(
+                            FindingCode::UseBeforeDef,
+                            i,
+                            format!(
+                                "{} reads {name} which is never written on some path \
+                                 reaching this instruction",
+                                u.op.mnemonic()
+                            ),
+                        ));
+                    }
+                }
+                for (f, reg) in defs {
+                    d.set(f, reg);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode_all;
+    use crate::isa::Instr;
+    use crate::sim::predecode::predecode;
+
+    fn mach() -> MachineConfig {
+        MachineConfig::xgen_asic()
+    }
+
+    fn run_on(prog: &[Instr], regions: &[Region]) -> StaticReport {
+        let p = predecode(&encode_all(prog).unwrap());
+        run(&p, regions, &mach())
+    }
+
+    fn region(start: u64, end: u64) -> Region {
+        Region { start, end, label: format!("dmem:t0[{start:#x})") }
+    }
+
+    #[test]
+    fn constant_store_inside_region_is_proven() {
+        // li t0, 0x100; sw 0(t0)
+        let prog = [
+            Instr::u(Op::Lui, regs::T0, 0),
+            Instr::i(Op::Addi, regs::T0, regs::T0, 0x100),
+            Instr::s(Op::Sw, regs::T0, regs::ZERO, 0),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x200)]);
+        assert_eq!(r.errors, 0, "{:?}", r.findings);
+        assert_eq!((r.mem_sites, r.proven_sites), (1, 1));
+    }
+
+    #[test]
+    fn constant_store_outside_every_region_is_an_error() {
+        let prog = [
+            Instr::i(Op::Addi, regs::T0, regs::ZERO, 0x400),
+            Instr::s(Op::Sw, regs::T0, regs::ZERO, 0),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x200)]);
+        assert!(
+            r.findings.iter().any(|f| f.code == FindingCode::OobAccess),
+            "{:?}",
+            r.findings
+        );
+        assert_eq!(r.proven_sites, 0);
+    }
+
+    #[test]
+    fn provably_misaligned_word_store_is_an_error() {
+        let prog = [
+            Instr::i(Op::Addi, regs::T0, regs::ZERO, 0x102),
+            Instr::s(Op::Sw, regs::T0, regs::ZERO, 0),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x200)]);
+        assert!(r.findings.iter().any(|f| f.code == FindingCode::MisalignedAccess));
+    }
+
+    #[test]
+    fn counted_loop_with_pointer_bump_is_proven() {
+        // Scalar copy idiom: ptr chases a countdown IV.
+        //   li  t0, 0x100        ; base
+        //   li  t1, 64           ; count
+        // top:
+        //   lw  t2, 0(t0)
+        //   sw  t2, 0x100(t0)    ; disjoint destination window
+        //   addi t0, t0, 4
+        //   addi t1, t1, -1
+        //   blt x0, t1, top
+        let prog = [
+            Instr::i(Op::Addi, regs::T0, regs::ZERO, 0x100),
+            Instr::i(Op::Addi, regs::T1, regs::ZERO, 64),
+            Instr::i(Op::Lw, regs::T2, regs::T0, 0),
+            Instr::s(Op::Sw, regs::T0, regs::T2, 0x100),
+            Instr::i(Op::Addi, regs::T0, regs::T0, 4),
+            Instr::i(Op::Addi, regs::T1, regs::T1, -1),
+            Instr::b(Op::Blt, regs::ZERO, regs::T1, -12),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x200), region(0x200, 0x300)]);
+        assert_eq!(r.errors, 0, "{:?}", r.findings);
+        assert_eq!((r.mem_sites, r.proven_sites), (2, 2), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn loop_overrunning_its_region_is_not_proven() {
+        // Same loop, but the region is one word too small.
+        let prog = [
+            Instr::i(Op::Addi, regs::T0, regs::ZERO, 0x100),
+            Instr::i(Op::Addi, regs::T1, regs::ZERO, 64),
+            Instr::s(Op::Sw, regs::T0, regs::ZERO, 0),
+            Instr::i(Op::Addi, regs::T0, regs::T0, 4),
+            Instr::i(Op::Addi, regs::T1, regs::T1, -1),
+            Instr::b(Op::Blt, regs::ZERO, regs::T1, -12),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x100 + 63 * 4)]);
+        assert_eq!(r.proven_sites, 0, "{:?}", r.findings);
+        assert!(r.findings.iter().any(|f| f.code == FindingCode::UnprovenAccess));
+    }
+
+    #[test]
+    fn use_before_def_is_caught_per_file() {
+        // fadd.s f5, f6, f6 with f6 never written.
+        let prog = [Instr::r(Op::FaddS, 5, 6, 6)];
+        let r = run_on(&prog, &[]);
+        assert!(
+            r.findings
+                .iter()
+                .any(|f| f.code == FindingCode::UseBeforeDef && f.index == 0),
+            "{:?}",
+            r.findings
+        );
+    }
+
+    #[test]
+    fn zeroing_idiom_counts_as_def_not_use() {
+        // xor t0, t0, t0; addi t1, t0, 1 — clean.
+        let prog = [
+            Instr::r(Op::Xor, regs::T0, regs::T0, regs::T0),
+            Instr::i(Op::Addi, regs::T1, regs::T0, 1),
+        ];
+        let r = run_on(&prog, &[]);
+        assert!(r.findings.iter().all(|f| f.code != FindingCode::UseBeforeDef), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn vector_strip_mine_is_proven() {
+        // Canonical strip-mined copy over [0x100, 0x100+256):
+        //   li   a0, 0x100
+        //   li   s2, 64          ; elements
+        // top:
+        //   vsetvli t1, s2, m1
+        //   vle32 v8, (a0)
+        //   vse32 v8, (a0)       ; in-place, same window
+        //   slli  t2, t1, 2
+        //   add   a0, a0, t2
+        //   sub   s2, s2, t1
+        //   blt   x0, s2, top
+        let lanes_ok = mach().has_vector;
+        assert!(lanes_ok);
+        let prog = [
+            Instr::i(Op::Addi, regs::ARG0, regs::ZERO, 0x100),
+            Instr::i(Op::Addi, regs::S2, regs::ZERO, 64),
+            Instr { op: Op::Vsetvli, rd: regs::T1, rs1: regs::S2, rs2: 0, rs3: 0, imm: 0 },
+            Instr::i(Op::Vle32, 8, regs::ARG0, 0),
+            Instr::i(Op::Vse32, 8, regs::ARG0, 0),
+            Instr::i(Op::Slli, regs::T2, regs::T1, 2),
+            Instr::r(Op::Add, regs::ARG0, regs::ARG0, regs::T2),
+            Instr::r(Op::Sub, regs::S2, regs::S2, regs::T1),
+            Instr::b(Op::Blt, regs::ZERO, regs::S2, -24),
+        ];
+        let r = run_on(&prog, &[region(0x100, 0x100 + 256)]);
+        assert_eq!(r.errors, 0, "{:?}", r.findings);
+        assert_eq!((r.mem_sites, r.proven_sites), (2, 2), "{:?}", r.findings);
+    }
+}

@@ -3,11 +3,13 @@
 //!
 //! Each seed deterministically yields one graph ([`gen::generate`]); the
 //! harness compiles it at every requested precision with pass-boundary IR
-//! validation forced on, runs the binary on the fast simulator, and compares
-//! machine outputs against the [`crate::ir::exec`] oracle under the
-//! precision's tolerance ([`crate::runtime::simrun::tolerance`]). Any panic,
-//! compile/validator error, simulator trap, or numerical divergence is a
-//! [`Finding`]; findings are shrunk to minimal reproducers by
+//! validation forced on, runs the static binary verifier ([`crate::analysis`])
+//! over the emitted program as a zero-execution stage, then runs the binary on
+//! the fast simulator and compares machine outputs against the
+//! [`crate::ir::exec`] oracle under the precision's tolerance
+//! ([`crate::runtime::simrun::tolerance`]). Any panic, compile/validator
+//! error, static-verifier error finding, simulator trap, or numerical
+//! divergence is a [`Finding`]; findings are shrunk to minimal reproducers by
 //! [`reduce::reduce`] and serialized as ONNX-JSON for regression capture.
 //!
 //! The campaign is deterministic regardless of worker count: seeds are
@@ -20,7 +22,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::ir::{DType, Graph};
-use crate::pipeline::session::{CompileOptions, CompileSession};
+use crate::pipeline::session::{CompileOptions, CompileSession, CompiledModel};
 use crate::runtime::simrun;
 use crate::util::error::Error;
 use crate::util::json::Json;
@@ -36,6 +38,9 @@ pub enum FindingKind {
     /// validator), quantizer, codegen, or backend returned an error on a
     /// graph the generator considers well-formed.
     CompileError,
+    /// The static binary verifier reported an Error-level finding on the
+    /// emitted program — caught without executing a single instruction.
+    Static,
     /// The simulator trapped or errored while executing the binary.
     SimError,
     /// Machine outputs diverged from the reference executor beyond the
@@ -48,6 +53,7 @@ impl FindingKind {
         match self {
             FindingKind::Panic => "panic",
             FindingKind::CompileError => "compile_error",
+            FindingKind::Static => "static",
             FindingKind::SimError => "sim_error",
             FindingKind::Divergence => "divergence",
         }
@@ -194,16 +200,20 @@ impl FuzzReport {
     }
 }
 
-/// Compile a prepared graph at `precision` (per-pass IR validation forced
-/// on) and differentially verify the machine against the oracle.
-pub fn compile_and_verify(
+/// Compile a prepared graph at `precision` with per-pass IR validation
+/// forced on. The compile gate's own static verifier is disabled here: it
+/// would fold static findings into a generic compile error, while the
+/// campaign runs the verifier as its own zero-execution stage
+/// ([`static_stage`]) so they surface as [`FindingKind::Static`].
+fn compile_case(
     g: &Graph,
     precision: DType,
     seed: u64,
-) -> crate::util::error::Result<simrun::VerifyReport> {
+) -> crate::util::error::Result<(CompileSession, CompiledModel)> {
     let mut opts = CompileOptions {
         precision,
         verify_passes: true,
+        static_verify: false,
         seed,
         ..CompileOptions::default()
     };
@@ -212,23 +222,49 @@ pub fn compile_and_verify(
     }
     let mut sess = CompileSession::new(opts);
     let c = sess.compile(g)?;
+    Ok((sess, c))
+}
+
+/// Zero-execution finding stage: run the static binary verifier over the
+/// emitted program. `Some(detail)` when it reports an Error-level finding —
+/// such a binary is rejected without simulating a single instruction.
+pub fn static_stage(c: &CompiledModel) -> crate::util::error::Result<Option<String>> {
+    let sr = crate::validate::validate_static(&c.asm, &c.plan, &c.mach)?;
+    let errs: Vec<_> = sr.error_findings().collect();
+    Ok(errs
+        .first()
+        .map(|first| format!("{} error findings, first: {}", errs.len(), first.line())))
+}
+
+/// Compile a prepared graph at `precision` (per-pass IR validation forced
+/// on) and differentially verify the machine against the oracle.
+pub fn compile_and_verify(
+    g: &Graph,
+    precision: DType,
+    seed: u64,
+) -> crate::util::error::Result<simrun::VerifyReport> {
+    let (mut sess, c) = compile_case(g, precision, seed)?;
     sess.verify_auto(&c)
 }
 
 /// Run one (graph, precision) case, catching panics at the boundary.
 /// `None` = passed; `Some((kind, detail))` = finding.
 pub fn run_case(g: &Graph, precision: DType, seed: u64) -> Option<(FindingKind, String)> {
-    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        compile_and_verify(g, precision, seed)
+    type CaseResult = crate::util::error::Result<Option<(FindingKind, String)>>;
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> CaseResult {
+        let (mut sess, c) = compile_case(g, precision, seed)?;
+        if let Some(detail) = static_stage(&c)? {
+            return Ok(Some((FindingKind::Static, detail)));
+        }
+        let rep = sess.verify_auto(&c)?;
+        Ok(if rep.passed() {
+            None
+        } else {
+            Some((FindingKind::Divergence, rep.summary()))
+        })
     }));
     match res {
-        Ok(Ok(rep)) => {
-            if rep.passed() {
-                None
-            } else {
-                Some((FindingKind::Divergence, rep.summary()))
-            }
-        }
+        Ok(Ok(outcome)) => outcome,
         Ok(Err(e)) => {
             let kind = match &e {
                 Error::Trap(_) | Error::Sim(_) => FindingKind::SimError,
@@ -405,6 +441,15 @@ mod tests {
         }
         assert_eq!(r.precision_runs.get("INT8"), Some(&4));
         assert_eq!(r.precision_runs.get("INT4"), Some(&4));
+    }
+
+    #[test]
+    fn static_stage_is_clean_on_generated_graphs() {
+        for seed in 0..3u64 {
+            let t = gen::generate(seed, &GenConfig::default()).unwrap();
+            let (_sess, c) = compile_case(&t.graph, DType::F32, seed).unwrap();
+            assert_eq!(static_stage(&c).unwrap(), None, "seed {seed}");
+        }
     }
 
     #[test]

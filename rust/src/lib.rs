@@ -25,6 +25,9 @@
 //!   scheduler, HEX emission.
 //! * [`validate`] — validation-driven compilation: ISA and memory checks
 //!   in-pipeline (paper §3.6, contribution 3).
+//! * [`analysis`] — static binary verifier: CFG recovery plus abstract
+//!   interpretation over emitted programs, proving memory safety,
+//!   alignment, and def-before-use without executing an instruction.
 //! * [`sim`] — the simulated hardware: functional RV32I+RVV executor,
 //!   L1/L2/L3 cache simulator, cycle/energy accounting.
 //! * [`cost`] — analytical, cache-aware (paper §3.7), learned (paper §3.2),
@@ -57,6 +60,7 @@
     clippy::new_without_default
 )]
 
+pub mod analysis;
 pub mod autotune;
 pub mod backend;
 pub mod codegen;

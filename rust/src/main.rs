@@ -9,6 +9,7 @@
 //! xgenc serve   --requests 100000 --rate 2000 --deadline-ms 50
 //! xgenc loadgen --requests 10000
 //! xgenc export  --model zoo:mlp --out model.json
+//! xgenc lint    --model zoo:resnet50 --precision INT8
 //! ```
 //!
 //! Every subcommand parses its flags into its own options struct
@@ -93,6 +94,7 @@ fn main() {
         "serve" => run_cmd(ServeArgs::from_args(&args), cmd_serve),
         "loadgen" => run_cmd(ServeArgs::from_args(&args), cmd_loadgen),
         "fuzz" => run_cmd(FuzzArgs::from_args(&args), cmd_fuzz),
+        "lint" => run_cmd(LintArgs::from_args(&args), cmd_lint),
         "help" => {
             print!("{}", HELP);
             0
@@ -837,6 +839,77 @@ fn cmd_fuzz(a: &FuzzArgs) -> i32 {
     1
 }
 
+/// `xgenc lint` options.
+struct LintArgs {
+    session: SessionArgs,
+    model: String,
+    json: bool,
+}
+
+impl LintArgs {
+    fn from_args(args: &Args) -> Result<LintArgs, String> {
+        Ok(LintArgs {
+            session: SessionArgs::from_args(args)?,
+            model: args.opt_or("model", "zoo:mlp").to_string(),
+            json: args.has_flag("json"),
+        })
+    }
+}
+
+/// `xgenc lint`: compile the model, then run the static binary verifier
+/// (CFG recovery + abstract interpretation) over the emitted program:
+/// memory safety, alignment, and def-before-use checked without executing
+/// an instruction. Prints one line per finding (severity, finding code,
+/// instruction index, detail) and the coverage summary. Exit 0 when there
+/// are no Error-level findings, 1 on errors (or a model that fails to
+/// load/compile), 2 on usage errors.
+fn cmd_lint(a: &LintArgs) -> i32 {
+    let graph = match frontend::load_model(&a.model) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    // Compile with the in-gate verifier off: lint wants the full report
+    // (including Warn-level findings) even for a binary the gate rejects.
+    let mut opts = a.session.compile_options();
+    opts.static_verify = false;
+    let mut session = CompileSession::new(opts);
+    let result = session.compile(&graph);
+    a.session.save_cache();
+    let c = match result {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let report = match xgenc::validate::validate_static(&c.asm, &c.plan, &c.mach) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if a.json {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        for f in &report.findings {
+            println!("{}", f.line());
+        }
+        println!("{}: {}", a.model, report.summary());
+        if report.clean() {
+            println!("lint OK: 0 errors across {} instructions", report.instructions);
+        }
+    }
+    if report.clean() {
+        0
+    } else {
+        1
+    }
+}
+
 const HELP: &str = "\
 xgenc — XgenSilicon ML Compiler (reproduction)
 
@@ -859,6 +932,8 @@ USAGE:
   xgenc fuzz     [--seeds N] [--start-seed N] [--precisions FP32,INT8,INT4]
                  [--max-nodes N] [--workers N] [--out report.json]
                  [--reduce-dir DIR]
+  xgenc lint     --model zoo:<name>|file.json [--precision ...]
+                 [--platform xgen|hand|cpu] [--json]
 
   ppa compiles one model and prints the full power/performance/area report
   (latency, power, area, energy, cycles, GFLOP/s) for the chosen platform.
@@ -903,9 +978,20 @@ USAGE:
   drives each through optimize -> quantize -> codegen -> simulate at every
   --precisions entry, with the per-pass IR validator on and machine
   outputs differentially verified against the reference executor. Any
-  panic, compile/validator error, trap, or divergence is a finding; each
-  is delta-reduced to a minimal reproducer (written under --reduce-dir).
-  Exit 0 and the line 'fuzz OK' only when there are zero findings.
+  panic, compile/validator error, static-verifier error, trap, or
+  divergence is a finding; each is delta-reduced to a minimal reproducer
+  (written under --reduce-dir). Exit 0 and the line 'fuzz OK' only when
+  there are zero findings.
+
+  lint compiles the model and runs the static binary verifier over the
+  emitted program: CFG recovery plus abstract interpretation proving
+  memory safety (every load/store inside a planned region, aligned),
+  and def-before-use — without executing an instruction. Each finding is
+  one line naming the severity, finding code, and instruction index;
+  --json emits the full machine-readable report instead. Exit 0 when
+  there are no Error-level findings ('could not prove' warnings are
+  allowed and counted), 1 on error findings or a model that fails to
+  compile, 2 on usage errors.
 
 Zoo models: resnet50 mobilenet_v2 bert_base vit_base resnet_cifar
             mobilenet_cifar bert_tiny vit_tiny mlp vision_encoder

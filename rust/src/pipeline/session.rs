@@ -60,6 +60,11 @@ pub struct CompileOptions {
     /// optimization pass. Defaults on in debug builds/CI; release builds opt
     /// in here or via the `XGENC_VERIFY_PASSES` env var.
     pub verify_passes: bool,
+    /// Run the static binary verifier ([`crate::analysis`]) on the emitted
+    /// program as part of the hard validation gate (default on). Error-level
+    /// findings fail the compile; Warn-level ("could not prove") findings
+    /// pass but ride along in the validation report.
+    pub static_verify: bool,
     pub seed: u64,
 }
 
@@ -76,6 +81,7 @@ impl Default for CompileOptions {
             schedule: true,
             fuse_epilogue: true,
             verify_passes: crate::opt::verify_each_pass_default(),
+            static_verify: true,
             seed: 42,
         }
     }
@@ -534,6 +540,10 @@ impl CompileSession {
         validation
             .checks
             .extend(validate::validate_precision(&program.abi, &g, opts.precision).checks);
+        if opts.static_verify {
+            let sr = validate::validate_static(&asm, &plan, &opts.mach)?;
+            validation.checks.extend(validate::static_checks(&sr));
+        }
         let validation = validation.into_result()?;
 
         // ASIC-ready output.

@@ -66,6 +66,35 @@ pub struct Predecoded {
     pub slots: Vec<Slot>,
 }
 
+impl MicroOp {
+    /// True for ops that end a basic block: conditional branches and jumps.
+    pub fn is_control(&self) -> bool {
+        matches!(self.class, OpClass::Branch | OpClass::Jump)
+    }
+
+    /// True for conditional branches (fall-through + taken successor).
+    pub fn is_cond_branch(&self) -> bool {
+        self.class == OpClass::Branch
+    }
+
+    /// The statically-resolved taken-target instruction index, if this op
+    /// has one (conditional branches and `jal`). `jalr` has a runtime
+    /// target and returns `None`; [`MISALIGNED_TARGET`] is passed through
+    /// for the caller to treat as a taken-path fault.
+    pub fn taken_target(&self) -> Option<usize> {
+        match self.op {
+            Op::Beq | Op::Bne | Op::Blt | Op::Bge | Op::Jal => Some(self.target),
+            _ => None,
+        }
+    }
+
+    /// Whether control can continue to the next instruction after this op
+    /// executes (everything except unconditional jumps).
+    pub fn falls_through(&self) -> bool {
+        !matches!(self.op, Op::Jal | Op::Jalr)
+    }
+}
+
 impl Predecoded {
     pub fn len(&self) -> usize {
         self.slots.len()
@@ -73,6 +102,27 @@ impl Predecoded {
 
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
+    }
+
+    /// Static successor instruction indices of the slot at `idx`, as
+    /// `(fall_through, taken)`. Either entry is `None` when that edge does
+    /// not exist or leaves the program (an index `>= len` halts, so the
+    /// halt edge is represented as `None`). Faulting slots
+    /// ([`Slot::Illegal`], [`Slot::Misaligned`]) and `jalr` (runtime
+    /// target) have no static successors; a conditional branch whose taken
+    /// target is [`MISALIGNED_TARGET`] keeps only its fall-through edge.
+    pub fn successors(&self, idx: usize) -> (Option<usize>, Option<usize>) {
+        let len = self.slots.len();
+        let u = match &self.slots[idx] {
+            Slot::Op(u) => u,
+            Slot::Illegal(_) | Slot::Misaligned(_) => return (None, None),
+        };
+        let fall = match u.falls_through() && idx + 1 < len {
+            true => Some(idx + 1),
+            false => None,
+        };
+        let taken = u.taken_target().filter(|&t| t < len);
+        (fall, taken)
     }
 }
 

@@ -152,14 +152,33 @@ pub fn validate_memory(g: &Graph, plan: &MemPlan, mach: &MachineConfig) -> Repor
         format!("used {} / {} bytes", plan.wmem_used, mach.wmem_bytes),
     );
 
-    // 3. Alignment of every placement.
+    // 3. Cache-line alignment of every placement base — scratch included
+    //    (scratch regions come from the same allocator and kernels issue
+    //    vector stores against them).
     let misaligned = plan
         .dmem
         .values()
         .chain(plan.wmem.values())
+        .chain(plan.scratch.values())
         .filter(|p| p.addr % ALIGN != 0)
         .count();
     r.check("mem.alignment", misaligned == 0, format!("{misaligned} misaligned buffers"));
+
+    // 3b. Element-width alignment: every base *and* extent is a multiple of
+    //     the 4-byte staged element, so no word access can straddle a
+    //     region boundary.
+    let unaligned_elem = plan
+        .dmem
+        .values()
+        .chain(plan.wmem.values())
+        .chain(plan.scratch.values())
+        .filter(|p| p.addr % 4 != 0 || p.bytes % 4 != 0)
+        .count();
+    r.check(
+        "mem.element_alignment",
+        unaligned_elem == 0,
+        format!("{unaligned_elem} placements not 4-byte element aligned"),
+    );
 
     // 4. Every graph tensor is placed (no dangling addresses -> no OOB from
     //    unplaced access).
@@ -185,10 +204,38 @@ pub fn validate_memory(g: &Graph, plan: &MemPlan, mach: &MachineConfig) -> Repor
         .values()
         .filter(|p| (p.addr + p.bytes) as usize > mach.wmem_bytes)
         .count();
+    let scratch_oob = plan
+        .scratch
+        .values()
+        .filter(|p| (p.addr + p.bytes) as usize > mach.dmem_bytes)
+        .count();
     r.check(
         "mem.bounds",
-        dmem_oob == 0 && wmem_oob == 0,
-        format!("{dmem_oob} DMEM / {wmem_oob} WMEM out-of-bounds buffers"),
+        dmem_oob == 0 && wmem_oob == 0 && scratch_oob == 0,
+        format!(
+            "{dmem_oob} DMEM / {wmem_oob} WMEM / {scratch_oob} scratch out-of-bounds buffers"
+        ),
+    );
+
+    // 6. WMEM overlap discipline: content-hash dedup legitimately maps
+    //    identical weights to the *exact same* placement; any other overlap
+    //    is two live tensors clobbering each other. Distinct (addr, bytes)
+    //    pairs must therefore be pairwise disjoint.
+    let mut uniq: Vec<(u32, u32)> = plan.wmem.values().map(|p| (p.addr, p.bytes)).collect();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let mut accidental = 0usize;
+    let mut prev_end = 0u64;
+    for &(a, b) in &uniq {
+        if (a as u64) < prev_end {
+            accidental += 1;
+        }
+        prev_end = prev_end.max(a as u64 + b as u64);
+    }
+    r.check(
+        "mem.wmem_overlap",
+        accidental == 0,
+        format!("{accidental} accidental (non-dedup) WMEM overlaps"),
     );
     r
 }
@@ -284,6 +331,57 @@ pub fn validate_precision(abi: &ModelAbi, g: &Graph, precision: crate::ir::DType
         format!("{mismatched} weights not stored at {}", precision.name()),
     );
     r
+}
+
+/// Static binary verification (see [`crate::analysis`]): encode the
+/// program, recover its CFG, and run the abstract interpreter against the
+/// memory plan's allocated regions — no instruction is executed.
+pub fn validate_static(
+    prog: &[Instr],
+    plan: &MemPlan,
+    mach: &MachineConfig,
+) -> Result<crate::analysis::StaticReport> {
+    let words = encode::encode_all(prog)?;
+    let p = crate::sim::predecode::predecode(&words);
+    let regions = crate::analysis::regions_of_plan(plan, mach);
+    Ok(crate::analysis::analyze(&p, &regions, mach))
+}
+
+/// Fold a [`crate::analysis::StaticReport`] into validation check rows.
+/// Error-level findings fail their category; Warn-level findings (the
+/// honest "could not prove" degradations) never fail the compile gate but
+/// surface in the coverage row's detail.
+pub fn static_checks(sr: &crate::analysis::StaticReport) -> Vec<(String, bool, String)> {
+    use crate::analysis::FindingCode as C;
+    let cat = |codes: &[C]| -> (usize, String) {
+        let mut n = 0usize;
+        let mut first = String::new();
+        for f in sr.error_findings() {
+            if codes.contains(&f.code) {
+                if n == 0 {
+                    first = f.line();
+                }
+                n += 1;
+            }
+        }
+        let detail = if n == 0 {
+            "ok".to_string()
+        } else if n == 1 {
+            first
+        } else {
+            format!("{first} (+{} more)", n - 1)
+        };
+        (n, detail)
+    };
+    let (cfg_n, cfg_d) = cat(&[C::IllegalInstruction, C::MisalignedJump, C::WildJump]);
+    let (mem_n, mem_d) = cat(&[C::OobAccess, C::MisalignedAccess]);
+    let (du_n, du_d) = cat(&[C::UseBeforeDef]);
+    vec![
+        ("static.cfg".to_string(), cfg_n == 0, cfg_d),
+        ("static.memory".to_string(), mem_n == 0, mem_d),
+        ("static.defuse".to_string(), du_n == 0, du_d),
+        ("static.coverage".to_string(), true, sr.summary()),
+    ]
 }
 
 /// Full validation stage: ISA + memory, merged report.
@@ -392,6 +490,70 @@ mod tests {
         let r = validate_precision(&abi, &g, DType::I4);
         assert!(!r.passed());
         assert!(r.checks.iter().any(|(n, ok, _)| n == "abi.weight_dtype" && !ok));
+    }
+
+    #[test]
+    fn dedup_wmem_overlap_is_legal_but_accidental_overlap_is_not() {
+        let g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let mut plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        // Exact-duplicate placement (content-hash dedup): legal.
+        let (&first, &pl) = plan.wmem.iter().next().unwrap();
+        let spare = crate::ir::TensorId(usize::MAX - 1);
+        assert_ne!(first, spare);
+        plan.wmem.insert(spare, pl);
+        let r = validate_memory(&g, &plan, &mach);
+        assert!(
+            r.checks.iter().any(|(n, ok, _)| n == "mem.wmem_overlap" && *ok),
+            "exact dedup aliasing must pass: {}",
+            r.summary()
+        );
+        // Shifted partial overlap into the same extent: accidental, fails.
+        plan.wmem.insert(spare, memplan::Placement { addr: pl.addr + 4, bytes: pl.bytes });
+        let r = validate_memory(&g, &plan, &mach);
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "mem.wmem_overlap" && !ok));
+    }
+
+    #[test]
+    fn element_misaligned_placement_is_rejected() {
+        let g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let mut plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let t = *plan.dmem.keys().next().unwrap();
+        let pl = plan.dmem[&t];
+        plan.dmem.insert(t, memplan::Placement { addr: pl.addr + 2, bytes: pl.bytes });
+        let r = validate_memory(&g, &plan, &mach);
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "mem.element_alignment" && !ok));
+        // A ragged extent (not a multiple of the element width) also fails.
+        plan.dmem.insert(t, memplan::Placement { addr: pl.addr, bytes: pl.bytes + 1 });
+        let r = validate_memory(&g, &plan, &mach);
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "mem.element_alignment" && !ok));
+    }
+
+    #[test]
+    fn scratch_out_of_capacity_is_rejected() {
+        let g = prepare(model_zoo::mlp(&[16, 8, 4], 1)).unwrap();
+        let mut plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        plan.scratch.insert(
+            crate::ir::NodeId(usize::MAX - 1),
+            memplan::Placement { addr: u32::MAX - 256, bytes: 256 },
+        );
+        let mach = MachineConfig::xgen_asic();
+        let r = validate_memory(&g, &plan, &mach);
+        assert!(r.checks.iter().any(|(n, ok, _)| n == "mem.bounds" && !ok));
+    }
+
+    #[test]
+    fn static_verifier_passes_a_clean_compile_and_bridges_checks() {
+        let g = prepare(model_zoo::mlp(&[32, 16, 8], 2)).unwrap();
+        let mach = MachineConfig::xgen_asic();
+        let plan = memplan::plan(&g, 1 << 30, 2 << 30).unwrap();
+        let prog = graphgen::lower_graph(&g, &mach, &plan, &Schedules::new(), DType::F32).unwrap();
+        let sr = validate_static(&prog.asm, &plan, &mach).unwrap();
+        assert!(sr.clean(), "{:?}", sr.findings);
+        let rows = static_checks(&sr);
+        assert!(rows.iter().all(|(_, ok, _)| *ok));
+        assert!(rows.iter().any(|(n, _, _)| n == "static.coverage"));
     }
 
     #[test]

@@ -80,9 +80,48 @@ fn help_exits_0_and_documents_every_command() {
     let out = xgenc(&["help"]);
     assert_eq!(out.status.code(), Some(0));
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["compile", "tune", "ppa", "sweep", "pipeline", "serve", "export", "fuzz"] {
+    for cmd in ["compile", "tune", "ppa", "sweep", "pipeline", "serve", "export", "fuzz", "lint"] {
         assert!(text.contains(&format!("xgenc {cmd}")), "help missing '{cmd}'");
     }
+}
+
+// -- xgenc lint exit-code contract: 0 clean, 1 findings/load failure, 2 usage
+
+#[test]
+fn lint_clean_model_exits_0_with_lint_ok() {
+    let out = xgenc(&["lint", "--model", "zoo:mlp"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("lint OK"), "{stdout}");
+    assert!(stdout.contains("accesses proven"), "{stdout}");
+    assert!(stderr.is_empty(), "{stderr}");
+}
+
+#[test]
+fn lint_json_emits_machine_readable_report() {
+    let out = xgenc(&["lint", "--model", "zoo:mlp", "--json"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "{stdout}");
+    for key in ["\"mem_sites\"", "\"proven_sites\"", "\"coverage\"", "\"errors\""] {
+        assert!(stdout.contains(key), "missing {key} in {stdout}");
+    }
+}
+
+#[test]
+fn lint_missing_model_exits_1_with_typed_error() {
+    let out = xgenc(&["lint", "--model", "no_such_model_file.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: "), "{line}");
+}
+
+#[test]
+fn lint_bad_precision_exits_2_with_typed_error() {
+    let out = xgenc(&["lint", "--model", "zoo:mlp", "--precision", "INT9"]);
+    assert_eq!(out.status.code(), Some(2));
+    let line = stderr_line(&out);
+    assert!(line.starts_with("error: unknown --precision 'INT9'"), "{line}");
 }
 
 #[test]

@@ -1,0 +1,168 @@
+//! Static binary verifier integration suite.
+//!
+//! The negative corpus hand-corrupts a known-good compiled binary — an OOB
+//! store, a branch to a misaligned target, a branch out of the program, a
+//! read of a never-written register, an unreachable block, an undecodable
+//! word — and asserts each corruption is caught *statically*, with the
+//! expected named finding, without the simulator executing one instruction.
+//! The cross-check tests then pin the other direction: on clean zoo models
+//! the static verdict is consistent with execution (the fast simulator runs
+//! the same binary to completion with zero traps).
+
+use xgenc::analysis::{self, FindingCode, Severity, StaticReport};
+use xgenc::frontend::{model_zoo, prepare};
+use xgenc::ir::DType;
+use xgenc::isa::regs::{S2, T0, ZERO};
+use xgenc::isa::{encode, Instr, Op};
+use xgenc::pipeline::{CompileOptions, CompileSession, CompiledModel};
+use xgenc::runtime::simrun;
+use xgenc::validate;
+
+/// Compile the known-good baseline binary the corpus corrupts.
+fn compile_mlp() -> CompiledModel {
+    let g = prepare(model_zoo::mlp(&[64, 32, 10], 1)).unwrap();
+    let mut s = CompileSession::new(CompileOptions::default());
+    s.compile(&g).unwrap()
+}
+
+/// Re-verify a (possibly corrupted) program against the model's real
+/// memory plan and machine.
+fn reverify(asm: &[Instr], c: &CompiledModel) -> StaticReport {
+    validate::validate_static(asm, &c.plan, &c.mach).unwrap()
+}
+
+fn has(r: &StaticReport, code: FindingCode, sev: Severity) -> bool {
+    r.findings.iter().any(|f| f.code == code && f.severity == sev)
+}
+
+#[test]
+fn untouched_compiled_binary_is_clean() {
+    let c = compile_mlp();
+    let r = reverify(&c.asm, &c);
+    assert!(r.clean(), "clean binary reported errors: {}", r.summary());
+    assert!(r.mem_sites > 0, "{}", r.summary());
+    assert!(r.coverage() >= 0.95, "{}", r.summary());
+    // Emitted code has no dead blocks either.
+    assert!(!has(&r, FindingCode::UnreachableCode, Severity::Warn), "{}", r.summary());
+}
+
+#[test]
+fn oob_store_is_caught_statically() {
+    let c = compile_mlp();
+    let mut asm = c.asm.clone();
+    // Store to 0x3ff0_0000 — provably above every DMEM/scratch/stack region
+    // (machine DMEM tops out at 32 MiB) and below WMEM_BASE.
+    asm[0] = Instr::u(Op::Lui, T0, 0x3ff00);
+    asm[1] = Instr::s(Op::Sw, T0, ZERO, 0);
+    let r = reverify(&asm, &c);
+    assert!(!r.clean());
+    assert!(has(&r, FindingCode::OobAccess, Severity::Error), "{:#?}", r.findings);
+    let f = r.findings.iter().find(|f| f.code == FindingCode::OobAccess).unwrap();
+    assert_eq!(f.index, 1, "finding anchored to the store: {}", f.line());
+    assert!(f.line().contains("static.oob_access"), "{}", f.line());
+}
+
+#[test]
+fn branch_to_misaligned_target_is_caught_statically() {
+    let c = compile_mlp();
+    let mut asm = c.asm.clone();
+    // Taken target pc+6: mid-instruction.
+    asm[0] = Instr::b(Op::Beq, ZERO, ZERO, 6);
+    let r = reverify(&asm, &c);
+    assert!(!r.clean());
+    assert!(has(&r, FindingCode::MisalignedJump, Severity::Error), "{:#?}", r.findings);
+}
+
+#[test]
+fn branch_out_of_the_program_is_caught_statically() {
+    let c = compile_mlp();
+    let mut asm = c.asm.clone();
+    // Taken target pc-8 from pc=0 wraps to an index far beyond the program.
+    asm[0] = Instr::b(Op::Beq, ZERO, ZERO, -8);
+    let r = reverify(&asm, &c);
+    assert!(!r.clean());
+    assert!(has(&r, FindingCode::WildJump, Severity::Error), "{:#?}", r.findings);
+}
+
+#[test]
+fn read_of_never_written_register_is_caught_statically() {
+    let c = compile_mlp();
+    let mut asm = c.asm.clone();
+    // At instruction 0 only x0 and sp are defined; s2 is not.
+    asm[0] = Instr::r(Op::Add, T0, S2, S2);
+    let r = reverify(&asm, &c);
+    assert!(!r.clean());
+    assert!(has(&r, FindingCode::UseBeforeDef, Severity::Error), "{:#?}", r.findings);
+    let f = r.findings.iter().find(|f| f.code == FindingCode::UseBeforeDef).unwrap();
+    assert!(f.detail.contains("s2"), "detail names the register: {}", f.line());
+}
+
+#[test]
+fn unreachable_block_is_caught_statically() {
+    let c = compile_mlp();
+    let mut asm = c.asm.clone();
+    // jal over instruction 1 makes it dead code.
+    asm[0] = Instr::u(Op::Jal, ZERO, 8);
+    let r = reverify(&asm, &c);
+    assert!(has(&r, FindingCode::UnreachableCode, Severity::Warn), "{:#?}", r.findings);
+    let f = r.findings.iter().find(|f| f.code == FindingCode::UnreachableCode).unwrap();
+    assert_eq!(f.index, 1, "{}", f.line());
+}
+
+#[test]
+fn undecodable_word_is_caught_statically() {
+    let c = compile_mlp();
+    let mut words = encode::encode_all(&c.asm).unwrap();
+    words[0] = 0; // opcode 0 decodes to nothing
+    let regions = analysis::regions_of_plan(&c.plan, &c.mach);
+    let r = analysis::analyze_words(&words, &regions, &c.mach);
+    assert!(!r.clean());
+    assert!(has(&r, FindingCode::IllegalInstruction, Severity::Error), "{:#?}", r.findings);
+}
+
+// -- Cross-check: static verdict vs the simulator ----------------------------
+//
+// A binary the verifier passes clean must execute with zero traps, and a
+// quantized compile (different codegen: requantize kernels, packed weight
+// loads) must verify just as clean as FP32.
+
+#[test]
+fn zoo_static_verdict_is_consistent_with_the_simulator() {
+    for name in ["mlp", "resnet_cifar", "bert_tiny"] {
+        let g = prepare(model_zoo::by_name(name).unwrap()).unwrap();
+        let mut s = CompileSession::new(CompileOptions::default());
+        let c = s.compile(&g).unwrap();
+        let r = reverify(&c.asm, &c);
+        assert!(r.clean(), "{name}: {}", r.summary());
+        assert!(r.coverage() >= 0.95, "{name}: {}", r.summary());
+        // Execution must not contradict the static verdict: zero traps.
+        let inputs = simrun::synth_inputs(&c.graph, 42);
+        let run = simrun::run_model(&c.mach, &c.graph, c.abi(), &c.asm, &inputs)
+            .unwrap_or_else(|e| panic!("{name}: statically clean binary trapped: {e}"));
+        assert!(run.stats.instret > 0, "{name}");
+    }
+}
+
+#[test]
+fn quantized_binaries_verify_statically() {
+    for precision in [DType::I8, DType::I4] {
+        let g = prepare(model_zoo::mlp(&[64, 32, 10], 1)).unwrap();
+        let mut s = CompileSession::new(CompileOptions { precision, ..Default::default() });
+        let c = s.compile(&g).unwrap();
+        let r = reverify(&c.asm, &c);
+        assert!(r.clean(), "{precision}: {}", r.summary());
+        assert!(r.coverage() >= 0.95, "{precision}: {}", r.summary());
+    }
+}
+
+#[test]
+fn compile_gate_rejects_nothing_it_should_pass_and_reports_static_checks() {
+    // The gate (static_verify on by default) must pass a clean model and
+    // surface the static.* rows in the validation report.
+    let c = compile_mlp();
+    let names: Vec<&str> = c.validation.checks.iter().map(|(n, _, _)| n.as_str()).collect();
+    for want in ["static.cfg", "static.memory", "static.defuse", "static.coverage"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+    assert!(c.validation.checks.iter().all(|(_, ok, _)| *ok), "{:?}", c.validation.checks);
+}
